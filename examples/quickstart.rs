@@ -1,0 +1,63 @@
+//! Quickstart: the five-line workflow — synthesize a structured image
+//! dataset, build the lattice, run fast clustering (Alg. 1), compress,
+//! and inspect what came out.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use fastclust::prelude::*;
+
+fn main() -> Result<()> {
+    // 1. a synthetic "brain": smooth spatial signal + white noise,
+    //    100 samples on a 20^3 grid (the paper's §4 simulation, scaled)
+    let ds = SyntheticCube::new([20, 20, 20], 6.0, 1.0).generate(100, 42);
+    println!("dataset: p = {} voxels, n = {} samples", ds.p(), ds.n());
+
+    // 2. the 6-connected lattice over the mask
+    let graph = LatticeGraph::from_mask(ds.mask());
+    println!("lattice: {} edges", graph.n_edges());
+
+    // 3. fast clustering down to k = p/10 (the paper's working regime)
+    let k = ds.p() / 10;
+    let fc = FastCluster::default();
+    let (labels, trace) = fc.fit_trace(ds.data(), &graph, k, 0)?;
+    println!(
+        "fast clustering: k = {} in {} rounds (cluster counts: {:?})",
+        labels.k,
+        trace.cluster_counts.len() - 1,
+        trace.cluster_counts
+    );
+
+    // 4. compress: cluster means (U^T U)^{-1} U^T X  -> (k, n)
+    let red = ClusterReduce::from_labels(&labels);
+    let xk = red.reduce(ds.data());
+    println!("compressed: ({}, {})", xk.rows, xk.cols);
+
+    // 5. the part random projections cannot do: embed back into the
+    //    image space and measure the compression error
+    let back = red.expand(&xk);
+    let num: f64 = ds
+        .data()
+        .data
+        .iter()
+        .zip(&back.data)
+        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        .sum();
+    let den: f64 =
+        ds.data().data.iter().map(|&a| (a as f64).powi(2)).sum();
+    println!(
+        "relative reconstruction error ||X - UU^+X|| / ||X|| = {:.3}",
+        (num / den).sqrt()
+    );
+
+    // size statistics: no percolation
+    let sizes = labels.sizes();
+    println!(
+        "cluster sizes: min {} / mean {:.1} / max {}",
+        sizes.iter().min().unwrap(),
+        ds.p() as f64 / labels.k as f64,
+        sizes.iter().max().unwrap()
+    );
+    Ok(())
+}

@@ -1,0 +1,102 @@
+# AOT lowering: jax (L2) -> HLO text artifacts for the rust runtime.
+#
+# Interchange format is HLO *text*, not serialized HloModuleProto:
+# jax >= 0.5 emits protos with 64-bit instruction ids which the xla
+# crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the
+# text parser reassigns ids and round-trips cleanly. Lowered with
+# return_tuple=True; the rust side unwraps the tuple.
+#
+# Also writes artifacts/manifest.json — the shape/dtype registry the
+# rust runtime (rust/src/runtime/artifacts.rs) keys on — and golden
+# probe values for the smoke artifact so rust integration tests can
+# assert exact numerics.
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import artifact_table
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(d):
+    return np.dtype(d).name
+
+
+def _flat_specs(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return [
+        {"shape": list(leaf.shape), "dtype": _dtype_name(leaf.dtype)}
+        for leaf in leaves
+    ]
+
+
+def build(outdir: str, only: str | None = None, force: bool = False):
+    os.makedirs(outdir, exist_ok=True)
+    manifest_path = os.path.join(outdir, "manifest.json")
+    manifest = {"format": "hlo-text", "artifacts": {}}
+
+    table = artifact_table()
+    for name, (fn, example_args) in table.items():
+        if only and only != name:
+            continue
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        lowered = jax.jit(fn).lower(*example_args)
+        out_specs = _flat_specs(
+            jax.eval_shape(fn, *example_args)
+        )
+        if force or not os.path.exists(path):
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"[aot] wrote {path} ({len(text)} chars)")
+        else:
+            print(f"[aot] kept  {path}")
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": _flat_specs(example_args),
+            "outputs": out_specs,
+        }
+
+    # Golden probe for the smoke artifact: rust asserts these numbers.
+    x = np.arange(1, 5, dtype=np.float32).reshape(2, 2)
+    y = np.ones((2, 2), dtype=np.float32)
+    fn = table["smoke_matmul_2x2"][0]
+    golden = np.asarray(jax.jit(fn)(x, y)).reshape(-1).tolist()
+    manifest["golden"] = {
+        "smoke_matmul_2x2": {
+            "x": x.reshape(-1).tolist(),
+            "y": y.reshape(-1).tolist(),
+            "out": golden,
+        }
+    }
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {manifest_path} ({len(manifest['artifacts'])} artifacts)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output dir (default: ../artifacts, for `cd python`)")
+    ap.add_argument("--only", default=None, help="build a single artifact")
+    ap.add_argument("--force", action="store_true",
+                    help="rewrite even if the .hlo.txt exists")
+    args = ap.parse_args()
+    build(args.out, only=args.only, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

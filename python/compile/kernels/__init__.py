@@ -1,0 +1,7 @@
+# L1: Pallas kernels for the paper's compute hot-spots.
+#
+#   matmul.py  — tiled MXU matmul; cluster reduction U^T X rides on it
+#   rowdist.py — blocked edge-distance kernel for Alg. 1's graph weights
+#   logreg.py  — matvec / tmatvec pair for the logistic gradient step
+#   ref.py     — pure-jnp oracles (the correctness contract)
+from . import logreg, matmul, ref, rowdist  # noqa: F401

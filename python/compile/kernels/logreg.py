@@ -1,0 +1,85 @@
+# L1 Pallas kernels for the logistic-regression hot loop.
+#
+# The downstream estimator the paper accelerates is an L2-logistic
+# regression on compressed features X_k (n, k). One gradient step is
+# two matrix-vector products around a cheap nonlinearity:
+#
+#     z = X_k w          (matvec,   MXU tile-parallel over n)
+#     r = sw * (sigmoid(z) - y)     (VPU, done in L2 jnp)
+#     g = X_k^T r / m + lam * w     (tmatvec, MXU tile-parallel over k)
+#
+# Both products are blocked Pallas kernels; zero padding is exact for
+# both. Vectors are carried as (len, 1) 2-D blocks — TPU Pallas wants
+# >=2-D tiles and the lane dimension last.
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BN = 256  # sample-tile
+DEFAULT_BK = 256  # feature-tile
+
+
+def _matvec_kernel(x_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bk", "interpret"))
+def matvec(x, w, *, bn=DEFAULT_BN, bk=DEFAULT_BK, interpret=True):
+    """z = X @ w. x: (n, k), w: (k,) -> (n,) f32."""
+    n, k = x.shape
+    pn, pk = (-n) % bn, (-k) % bk
+    x = jnp.pad(x.astype(jnp.float32), ((0, pn), (0, pk)))
+    wc = jnp.pad(w.astype(jnp.float32), (0, pk))[:, None]  # (kp, 1)
+    npad, kpad = x.shape
+    out = pl.pallas_call(
+        _matvec_kernel,
+        grid=(npad // bn, kpad // bk),
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bk, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((npad, 1), jnp.float32),
+        interpret=interpret,
+    )(x, wc)
+    return out[:n, 0]
+
+
+def _tmatvec_kernel(x_ref, r_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].T, r_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bk", "interpret"))
+def tmatvec(x, r, *, bn=DEFAULT_BN, bk=DEFAULT_BK, interpret=True):
+    """g = X^T r. x: (n, k), r: (n,) -> (k,) f32."""
+    n, k = x.shape
+    pn, pk = (-n) % bn, (-k) % bk
+    x = jnp.pad(x.astype(jnp.float32), ((0, pn), (0, pk)))
+    rc = jnp.pad(r.astype(jnp.float32), (0, pn))[:, None]  # (np, 1)
+    npad, kpad = x.shape
+    out = pl.pallas_call(
+        _tmatvec_kernel,
+        grid=(kpad // bk, npad // bn),
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j: (j, i)),
+            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bk, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((kpad, 1), jnp.float32),
+        interpret=interpret,
+    )(x, rc)
+    return out[:k, 0]

@@ -1,0 +1,85 @@
+# L1 Pallas kernel: blocked matmul — the compression hot-spot.
+#
+# The paper's compression operator is the cluster reduction U^T X
+# ((U^T U)^{-1} U^T X once divided by counts). On TPU the idiomatic
+# mapping is a tiled one-hot matmul on the MXU: the one-hot U is fed
+# in (bm, bp) VMEM tiles, X in (bp, bn) tiles, and a grid dimension
+# iterates over p accumulating into the (bm, bn) output tile. BlockSpec
+# expresses the HBM->VMEM schedule; the accumulator lives in the output
+# block across the innermost grid dimension (revisiting semantics).
+#
+# interpret=True on this testbed (CPU PJRT cannot run Mosaic); the
+# tiling structure — not interpret-mode wallclock — is what carries to
+# real TPUs. See DESIGN.md §Hardware-Adaptation.
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: MXU-native 128 lanes; (128 x 128) f32 tiles are
+# 64 KiB each, so a (acc + a + b) working set is ~192 KiB — far inside
+# a 16 MiB VMEM budget, leaving room for double buffering.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BP = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (bm, bn) output tile; grid dim 2 walks the p tiles."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x, mults):
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, mults)]
+    if all(p[1] == 0 for p in pads):
+        return x
+    return jnp.pad(x, pads)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bp", "interpret"))
+def matmul(a, b, *, bm=DEFAULT_BM, bn=DEFAULT_BN, bp=DEFAULT_BP,
+           interpret=True):
+    """C = A @ B with Pallas tiling. A: (m, p), B: (p, n) -> (m, n) f32.
+
+    Arbitrary shapes are zero-padded up to tile multiples and the
+    result is sliced back — zero padding is exact for matmul.
+    """
+    m, p = a.shape
+    p2, n = b.shape
+    assert p == p2, f"inner dims differ: {p} vs {p2}"
+    a = _pad_to(a.astype(jnp.float32), (bm, bp))
+    b = _pad_to(b.astype(jnp.float32), (bp, bn))
+    mp, pp = a.shape
+    _, np_ = b.shape
+    grid = (mp // bm, np_ // bn, pp // bp)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bp), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bp, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(a, b)
+    return out[:m, :n]
+
+
+def segment_reduce(onehot_u, x, **kw):
+    """Cluster-sum S = U^T X via the tiled matmul. U: (p, k), X: (p, n)."""
+    return matmul(onehot_u.T, x, **kw)
+
+
+def cluster_means(onehot_u, x, **kw):
+    """(U^T U)^{-1} U^T X — the paper's compressed representation."""
+    sums = segment_reduce(onehot_u, x, **kw)
+    counts = jnp.sum(onehot_u, axis=0)
+    return sums / jnp.maximum(counts, 1.0)[:, None]

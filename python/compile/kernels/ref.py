@@ -1,0 +1,77 @@
+# Pure-jnp correctness oracles for the Pallas kernels (L1).
+#
+# Every kernel in this package has an oracle here with the *same*
+# signature; pytest sweeps shapes/dtypes with hypothesis and asserts
+# allclose between kernel and oracle. These oracles are also the L2
+# fallback path used when a shape has no AOT artifact.
+import jax.numpy as jnp
+
+
+def matmul(a, b):
+    """C = A @ B. A: (m, p), B: (p, n) -> (m, n), f32 accumulation."""
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def segment_reduce(onehot_u, x):
+    """Cluster-sum reduction S = U^T X.
+
+    onehot_u: (p, k) one-hot assignment matrix (float), x: (p, n).
+    Returns (k, n) per-cluster feature sums (NOT means; the caller
+    divides by counts so that zero-padded rows stay exact).
+    """
+    return jnp.dot(onehot_u.T.astype(jnp.float32), x.astype(jnp.float32))
+
+
+def cluster_means(onehot_u, x):
+    """Cluster means (U^T U)^{-1} U^T X with empty-cluster guard."""
+    sums = segment_reduce(onehot_u, x)
+    counts = jnp.sum(onehot_u, axis=0)
+    return sums / jnp.maximum(counts, 1.0)[:, None]
+
+
+def rowwise_sqdist(a, b):
+    """d_e = ||a_e - b_e||^2 row by row. a, b: (e, n) -> (e,)."""
+    d = a.astype(jnp.float32) - b.astype(jnp.float32)
+    return jnp.sum(d * d, axis=1)
+
+
+def matvec(x, w):
+    """z = X @ w. x: (n, k), w: (k,) -> (n,)."""
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def tmatvec(x, r):
+    """g = X^T r. x: (n, k), r: (n,) -> (k,)."""
+    return jnp.dot(x.T.astype(jnp.float32), r.astype(jnp.float32))
+
+
+def pairwise_sqdist(s):
+    """Full pairwise squared distances of row-samples. s: (n, d) -> (n, n)."""
+    s = s.astype(jnp.float32)
+    sq = jnp.sum(s * s, axis=1)
+    d = sq[:, None] + sq[None, :] - 2.0 * jnp.dot(s, s.T)
+    return jnp.maximum(d, 0.0)
+
+
+def sigmoid(z):
+    return 0.5 * (jnp.tanh(0.5 * z) + 1.0)
+
+
+def logreg_loss_grad(x, y, sw, w, b, lam):
+    """Weighted L2-regularized logistic loss + gradient.
+
+    x: (n, k) compressed features, y: (n,) in {0,1}, sw: (n,) sample
+    weights (0 for padding rows), w: (k,), b: scalar, lam: scalar.
+    Returns (loss, gw, gb). Intercept b is NOT regularized (sklearn
+    convention, which the paper relies on).
+    """
+    x = x.astype(jnp.float32)
+    z = jnp.dot(x, w) + b
+    # logaddexp(0, z) - y*z is the numerically stable Bernoulli NLL.
+    nll = jnp.logaddexp(0.0, z) - y * z
+    m = jnp.maximum(jnp.sum(sw), 1.0)
+    loss = jnp.sum(sw * nll) / m + 0.5 * lam * jnp.dot(w, w)
+    r = sw * (sigmoid(z) - y)
+    gw = jnp.dot(x.T, r) / m + lam * w
+    gb = jnp.sum(r) / m
+    return loss, gw, gb

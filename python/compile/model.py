@@ -1,0 +1,184 @@
+# L2: the JAX compute graphs that get AOT-lowered to HLO text.
+#
+# Each public function here is a fixed-shape jax program calling the L1
+# Pallas kernels; python/compile/aot.py lowers them once per shape entry
+# in artifact_table() and the rust runtime (rust/src/runtime/) loads +
+# executes the artifacts. Python is never on the request path.
+import jax
+import jax.numpy as jnp
+
+from .kernels import logreg as klogreg
+from .kernels import matmul as kmatmul
+from .kernels import ref
+from .kernels import rowdist as krowdist
+
+
+# --------------------------------------------------------------------
+# reduce_apply: the paper's compression operator.
+# Inputs: onehot U (p, k) and data X (p, n). Output: cluster means
+# (k, n) == (U^T U)^{-1} U^T X.  Zero-padded rows of U are exact.
+# --------------------------------------------------------------------
+def reduce_apply(onehot_u, x):
+    return kmatmul.cluster_means(onehot_u, x)
+
+
+def reduce_apply_ref(onehot_u, x):
+    return ref.cluster_means(onehot_u, x)
+
+
+# --------------------------------------------------------------------
+# edge_sqdist: Alg. 1 graph weights. Inputs: X (p, n) row-major voxel
+# features, src/dst (e,) int32 edge endpoints. Gather in XLA, reduce in
+# the Pallas kernel.
+# --------------------------------------------------------------------
+def edge_sqdist(x, src, dst):
+    a = jnp.take(x, src, axis=0)
+    b = jnp.take(x, dst, axis=0)
+    return krowdist.rowwise_sqdist(a, b)
+
+
+def edge_sqdist_ref(x, src, dst):
+    a = jnp.take(x, src, axis=0)
+    b = jnp.take(x, dst, axis=0)
+    return ref.rowwise_sqdist(a, b)
+
+
+# --------------------------------------------------------------------
+# logreg_step: one full-batch loss+gradient evaluation of the weighted
+# L2-logistic objective on compressed features. The rust optimizer
+# (GD + Armijo line search) drives this step.
+# --------------------------------------------------------------------
+def logreg_step(x, y, sw, w, b, lam):
+    z = klogreg.matvec(x, w) + b
+    nll = jnp.logaddexp(0.0, z) - y * z
+    m = jnp.maximum(jnp.sum(sw), 1.0)
+    loss = jnp.sum(sw * nll) / m + 0.5 * lam * jnp.dot(w, w)
+    r = sw * (ref.sigmoid(z) - y)
+    gw = klogreg.tmatvec(x, r) / m + lam * w
+    gb = jnp.sum(r) / m
+    return loss, gw, gb
+
+
+def logreg_step_ref(x, y, sw, w, b, lam):
+    return ref.logreg_loss_grad(x, y, sw, w, b, lam)
+
+
+# --------------------------------------------------------------------
+# logreg_gd: a FUSED multi-step gradient-descent artifact. The
+# per-call PJRT dispatch overhead dominates single loss/grad artifacts
+# (§Perf), so this program runs STEPS plain-GD iterations inside one
+# XLA executable via lax.fori_loop and returns the final state plus the
+# loss/gradient evaluated at it. The rust optimizer calls it in chunks,
+# adapting the learning rate between chunks (backtracking at chunk
+# granularity).
+# --------------------------------------------------------------------
+GD_STEPS = 64
+
+
+def logreg_gd(x, y, sw, w0, b0, lam, lr):
+    m = jnp.maximum(jnp.sum(sw), 1.0)
+
+    def grad(w, b):
+        z = jnp.dot(x, w) + b
+        r = sw * (ref.sigmoid(z) - y)
+        gw = jnp.dot(x.T, r) / m + lam * w
+        gb = jnp.sum(r) / m
+        return gw, gb
+
+    def body(_, carry):
+        w, b = carry
+        gw, gb = grad(w, b)
+        return (w - lr * gw, b - lr * gb)
+
+    w, b = jax.lax.fori_loop(0, GD_STEPS, body, (w0, b0))
+    z = jnp.dot(x, w) + b
+    nll = jnp.logaddexp(0.0, z) - y * z
+    loss = jnp.sum(sw * nll) / m + 0.5 * lam * jnp.dot(w, w)
+    gw, gb = grad(w, b)
+    return loss, w, b, gw, gb
+
+
+# --------------------------------------------------------------------
+# pairwise_sqdist: the eta-statistic workload of Fig 4 — all pairwise
+# squared distances between row-samples, via the Gram matmul kernel.
+# --------------------------------------------------------------------
+def pairwise_sqdist(s):
+    sq = jnp.sum(s * s, axis=1)
+    gram = kmatmul.matmul(s, s.T)
+    d = sq[:, None] + sq[None, :] - 2.0 * gram
+    return jnp.maximum(d, 0.0)
+
+
+def pairwise_sqdist_ref(s):
+    return ref.pairwise_sqdist(s)
+
+
+# --------------------------------------------------------------------
+# AOT shape table: every (program, shape) pair that becomes an
+# artifacts/*.hlo.txt. Names are stable API for the rust registry.
+# Shapes are testbed-scale (see DESIGN.md §Scaling note). Artifacts
+# lower the *_ref oracle graphs: interpret=True pallas inserts python
+# callbacks into the HLO that only the python runtime can execute, so
+# the AOT path ships the oracle while kernel≡oracle is enforced by
+# pytest (python/tests/test_kernels.py).
+# --------------------------------------------------------------------
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def artifact_table():
+    """name -> (fn, example_args). Single source of truth for aot.py."""
+    table = {}
+
+    for p, k, n in [(4096, 512, 64), (8192, 1024, 128)]:
+        table[f"reduce_apply_p{p}_k{k}_n{n}"] = (
+            reduce_apply_ref,
+            (_spec((p, k)), _spec((p, n))),
+        )
+
+    for n, k in [(512, 512), (512, 2048)]:
+        table[f"logreg_step_n{n}_k{k}"] = (
+            logreg_step_ref,
+            (
+                _spec((n, k)),
+                _spec((n,)),
+                _spec((n,)),
+                _spec((k,)),
+                _spec((), jnp.float32),
+                _spec((), jnp.float32),
+            ),
+        )
+
+    for n, k in [(512, 512), (512, 2048)]:
+        table[f"logreg_gd64_n{n}_k{k}"] = (
+            logreg_gd,
+            (
+                _spec((n, k)),
+                _spec((n,)),
+                _spec((n,)),
+                _spec((k,)),
+                _spec((), jnp.float32),
+                _spec((), jnp.float32),
+                _spec((), jnp.float32),
+            ),
+        )
+
+    for n, d in [(256, 2048)]:
+        table[f"pairwise_sqdist_n{n}_d{d}"] = (
+            pairwise_sqdist_ref,
+            (_spec((n, d)),),
+        )
+
+    for e, n in [(16384, 64)]:
+        table[f"edge_sqdist_e{e}_n{n}"] = (
+            edge_sqdist_ref,
+            (_spec((e, n)), _spec((e,), jnp.int32), _spec((e,), jnp.int32)),
+        )
+
+    # tiny smoke artifact for runtime integration tests (golden values
+    # asserted on the rust side)
+    def smoke(x, y):
+        return jnp.dot(x, y) + 2.0
+
+    table["smoke_matmul_2x2"] = (smoke, (_spec((2, 2)), _spec((2, 2))))
+    return table

@@ -1,0 +1,11 @@
+import os
+import sys
+
+# Run everything on the CPU PJRT client, like the rust runtime does.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# `cd python && pytest tests/` — make the `compile` package importable
+# whether pytest is invoked from python/ or the repo root.
+_here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _here not in sys.path:
+    sys.path.insert(0, _here)

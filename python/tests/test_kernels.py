@@ -1,0 +1,264 @@
+# L1 correctness contract: every Pallas kernel == its pure-jnp oracle.
+# hypothesis sweeps shapes (deliberately non-tile-multiples to exercise
+# the padding paths) and dtypes; assert_allclose against ref.py.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import logreg as klogreg
+from compile.kernels import matmul as kmatmul
+from compile.kernels import ref
+from compile.kernels import rowdist as krowdist
+
+HSET = settings(max_examples=12, deadline=None)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ----------------------------------------------------------------- matmul
+@HSET
+@given(
+    m=st.integers(1, 200),
+    p=st.integers(1, 200),
+    n=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, p, n, seed):
+    r = _rng(seed)
+    a = r.standard_normal((m, p), dtype=np.float32)
+    b = r.standard_normal((p, n), dtype=np.float32)
+    got = kmatmul.matmul(a, b, bm=32, bn=32, bp=32)
+    want = ref.matmul(a, b)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64, np.int32])
+def test_matmul_dtypes(dtype):
+    r = _rng(0)
+    a = (r.standard_normal((17, 9)) * 3).astype(dtype)
+    b = (r.standard_normal((9, 21)) * 3).astype(dtype)
+    got = kmatmul.matmul(a, b, bm=16, bn=16, bp=16)
+    want = ref.matmul(jnp.asarray(a), jnp.asarray(b))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_exact_tile_multiple():
+    r = _rng(1)
+    a = r.standard_normal((128, 128), dtype=np.float32)
+    b = r.standard_normal((128, 128), dtype=np.float32)
+    got = kmatmul.matmul(a, b)  # default 128-tiles: no padding branch
+    assert_allclose(np.asarray(got), np.asarray(ref.matmul(a, b)),
+                    rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_identity():
+    a = np.eye(37, dtype=np.float32)
+    b = _rng(2).standard_normal((37, 11), dtype=np.float32)
+    got = kmatmul.matmul(a, b, bm=16, bn=16, bp=16)
+    assert_allclose(np.asarray(got), b, rtol=1e-6, atol=1e-6)
+
+
+# --------------------------------------------------------- segment_reduce
+@HSET
+@given(
+    p=st.integers(2, 300),
+    k=st.integers(1, 40),
+    n=st.integers(1, 50),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_segment_reduce_matches_ref(p, k, n, seed):
+    r = _rng(seed)
+    labels = r.integers(0, k, size=p)
+    u = np.eye(k, dtype=np.float32)[labels]
+    x = r.standard_normal((p, n), dtype=np.float32)
+    got = kmatmul.segment_reduce(u, x, bm=16, bn=16, bp=16)
+    want = ref.segment_reduce(u, x)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@HSET
+@given(
+    p=st.integers(2, 200),
+    k=st.integers(1, 20),
+    n=st.integers(1, 30),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cluster_means_matches_ref_and_numpy(p, k, n, seed):
+    r = _rng(seed)
+    labels = r.integers(0, k, size=p)
+    u = np.eye(k, dtype=np.float32)[labels]
+    x = r.standard_normal((p, n), dtype=np.float32)
+    got = np.asarray(kmatmul.cluster_means(u, x, bm=16, bn=16, bp=16))
+    want = np.asarray(ref.cluster_means(u, x))
+    assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    # independent numpy ground truth (empty clusters -> 0 rows)
+    for c in range(k):
+        m = labels == c
+        exp = x[m].mean(axis=0) if m.any() else np.zeros(n, np.float32)
+        assert_allclose(got[c], exp, rtol=1e-4, atol=1e-5)
+
+
+def test_cluster_means_constant_preserved():
+    # reduction of a constant image is constant — the paper's projector
+    # property <x, u_i/||u_i||^2> for x = c*1.
+    p, k, n = 101, 7, 5
+    labels = _rng(3).integers(0, k, size=p)
+    # ensure every cluster non-empty
+    labels[:k] = np.arange(k)
+    u = np.eye(k, dtype=np.float32)[labels]
+    x = np.full((p, n), 3.25, dtype=np.float32)
+    got = np.asarray(kmatmul.cluster_means(u, x, bm=16, bn=16, bp=16))
+    assert_allclose(got, np.full((k, n), 3.25), rtol=1e-6)
+
+
+# ---------------------------------------------------------------- rowdist
+@HSET
+@given(
+    e=st.integers(1, 400),
+    n=st.integers(1, 80),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rowwise_sqdist_matches_ref(e, n, seed):
+    r = _rng(seed)
+    a = r.standard_normal((e, n), dtype=np.float32)
+    b = r.standard_normal((e, n), dtype=np.float32)
+    got = krowdist.rowwise_sqdist(a, b, be=32, bn=32)
+    want = ref.rowwise_sqdist(a, b)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_rowwise_sqdist_zero_and_symmetry():
+    r = _rng(4)
+    a = r.standard_normal((33, 17), dtype=np.float32)
+    assert_allclose(np.asarray(krowdist.rowwise_sqdist(a, a, be=16, bn=16)),
+                    np.zeros(33), atol=1e-6)
+    b = r.standard_normal((33, 17), dtype=np.float32)
+    dab = np.asarray(krowdist.rowwise_sqdist(a, b, be=16, bn=16))
+    dba = np.asarray(krowdist.rowwise_sqdist(b, a, be=16, bn=16))
+    assert_allclose(dab, dba, rtol=1e-6)
+    assert (dab >= 0).all()
+
+
+# ----------------------------------------------------------------- logreg
+@HSET
+@given(
+    n=st.integers(1, 300),
+    k=st.integers(1, 120),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matvec_matches_ref(n, k, seed):
+    r = _rng(seed)
+    x = r.standard_normal((n, k), dtype=np.float32)
+    w = r.standard_normal(k, dtype=np.float32)
+    got = klogreg.matvec(x, w, bn=32, bk=32)
+    assert_allclose(np.asarray(got), np.asarray(ref.matvec(x, w)),
+                    rtol=1e-4, atol=1e-4)
+
+
+@HSET
+@given(
+    n=st.integers(1, 300),
+    k=st.integers(1, 120),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_tmatvec_matches_ref(n, k, seed):
+    r = _rng(seed)
+    x = r.standard_normal((n, k), dtype=np.float32)
+    v = r.standard_normal(n, dtype=np.float32)
+    got = klogreg.tmatvec(x, v, bn=32, bk=32)
+    assert_allclose(np.asarray(got), np.asarray(ref.tmatvec(x, v)),
+                    rtol=1e-4, atol=1e-4)
+
+
+def test_matvec_tmatvec_adjoint():
+    # <Xw, r> == <w, X^T r> — adjointness of the two kernels.
+    r = _rng(5)
+    x = r.standard_normal((57, 23), dtype=np.float32)
+    w = r.standard_normal(23, dtype=np.float32)
+    v = r.standard_normal(57, dtype=np.float32)
+    lhs = float(np.dot(np.asarray(klogreg.matvec(x, w, bn=16, bk=16)), v))
+    rhs = float(np.dot(w, np.asarray(klogreg.tmatvec(x, v, bn=16, bk=16))))
+    assert abs(lhs - rhs) < 1e-2 * max(1.0, abs(lhs))
+
+
+# ------------------------------------------------------- pairwise_sqdist
+def test_pairwise_sqdist_ref_properties():
+    r = _rng(6)
+    s = r.standard_normal((19, 33), dtype=np.float32)
+    d = np.asarray(ref.pairwise_sqdist(s))
+    assert d.shape == (19, 19)
+    assert_allclose(np.diag(d), np.zeros(19), atol=1e-4)
+    assert_allclose(d, d.T, rtol=1e-5, atol=1e-4)
+    brute = ((s[:, None, :] - s[None, :, :]) ** 2).sum(-1)
+    assert_allclose(d, brute, rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------------ logreg_loss_grad
+def test_logreg_grad_matches_finite_differences():
+    r = _rng(7)
+    n, k = 40, 9
+    x = r.standard_normal((n, k)).astype(np.float32)
+    y = (r.random(n) > 0.5).astype(np.float32)
+    sw = np.ones(n, dtype=np.float32)
+    w = 0.1 * r.standard_normal(k).astype(np.float32)
+    b, lam = np.float32(0.05), np.float32(0.3)
+    loss, gw, gb = ref.logreg_loss_grad(x, y, sw, w, b, lam)
+    eps = 1e-3
+    for i in range(k):
+        wp, wm = w.copy(), w.copy()
+        wp[i] += eps
+        wm[i] -= eps
+        lp = ref.logreg_loss_grad(x, y, sw, wp, b, lam)[0]
+        lm = ref.logreg_loss_grad(x, y, sw, wm, b, lam)[0]
+        fd = (float(lp) - float(lm)) / (2 * eps)
+        assert abs(fd - float(gw[i])) < 5e-3, (i, fd, float(gw[i]))
+    lp = ref.logreg_loss_grad(x, y, sw, w, b + eps, lam)[0]
+    lm = ref.logreg_loss_grad(x, y, sw, w, b - eps, lam)[0]
+    assert abs((float(lp) - float(lm)) / (2 * eps) - float(gb)) < 5e-3
+
+
+def test_logreg_padding_rows_are_exact():
+    # sw=0 rows must not change loss or grad — the padding contract the
+    # rust runtime relies on for fixed-shape artifacts.
+    r = _rng(8)
+    n, k, pad = 30, 7, 12
+    x = r.standard_normal((n, k)).astype(np.float32)
+    y = (r.random(n) > 0.5).astype(np.float32)
+    w = 0.1 * r.standard_normal(k).astype(np.float32)
+    sw = np.ones(n, dtype=np.float32)
+    base = ref.logreg_loss_grad(x, y, sw, w, 0.0, 0.1)
+
+    xp = np.vstack([x, r.standard_normal((pad, k)).astype(np.float32)])
+    yp = np.concatenate([y, np.ones(pad, np.float32)])
+    swp = np.concatenate([sw, np.zeros(pad, np.float32)])
+    padded = ref.logreg_loss_grad(xp, yp, swp, w, 0.0, 0.1)
+
+    assert_allclose(float(base[0]), float(padded[0]), rtol=1e-6)
+    assert_allclose(np.asarray(base[1]), np.asarray(padded[1]), rtol=1e-5,
+                    atol=1e-6)
+    assert_allclose(float(base[2]), float(padded[2]), rtol=1e-5, atol=1e-7)
+
+
+def test_logreg_grad_is_jax_grad():
+    # oracle gradient == autodiff gradient of the oracle loss
+    r = _rng(9)
+    n, k = 25, 6
+    x = jnp.asarray(r.standard_normal((n, k)), dtype=jnp.float32)
+    y = jnp.asarray((r.random(n) > 0.5), dtype=jnp.float32)
+    sw = jnp.ones(n, dtype=jnp.float32)
+    w = jnp.asarray(0.2 * r.standard_normal(k), dtype=jnp.float32)
+
+    def loss_fn(wb):
+        return ref.logreg_loss_grad(x, y, sw, wb[:k], wb[k], 0.2)[0]
+
+    wb = jnp.concatenate([w, jnp.zeros(1)])
+    g = jax.grad(loss_fn)(wb)
+    _, gw, gb = ref.logreg_loss_grad(x, y, sw, w, 0.0, 0.2)
+    assert_allclose(np.asarray(g[:k]), np.asarray(gw), rtol=1e-4, atol=1e-5)
+    assert_allclose(float(g[k]), float(gb), rtol=1e-4, atol=1e-5)

@@ -1,0 +1,102 @@
+# L2 model graphs: pallas-backed programs == oracle programs, and the
+# artifact table is well-formed (shapes eval, names stable).
+import jax
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile import model
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def test_reduce_apply_kernel_vs_ref():
+    r = _rng(10)
+    p, k, n = 257, 19, 23
+    labels = r.integers(0, k, size=p)
+    labels[:k] = np.arange(k)
+    u = np.eye(k, dtype=np.float32)[labels]
+    x = r.standard_normal((p, n), dtype=np.float32)
+    got = model.reduce_apply(u, x)
+    want = model.reduce_apply_ref(u, x)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_edge_sqdist_kernel_vs_ref():
+    r = _rng(11)
+    p, n, e = 150, 31, 400
+    x = r.standard_normal((p, n), dtype=np.float32)
+    src = r.integers(0, p, size=e).astype(np.int32)
+    dst = r.integers(0, p, size=e).astype(np.int32)
+    got = model.edge_sqdist(x, src, dst)
+    want = model.edge_sqdist_ref(x, src, dst)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_logreg_step_kernel_vs_ref():
+    r = _rng(12)
+    n, k = 65, 33
+    x = r.standard_normal((n, k), dtype=np.float32)
+    y = (r.random(n) > 0.4).astype(np.float32)
+    sw = np.ones(n, dtype=np.float32)
+    w = 0.1 * r.standard_normal(k).astype(np.float32)
+    got = model.logreg_step(x, y, sw, w, jnp.float32(0.1), jnp.float32(0.5))
+    want = model.logreg_step_ref(x, y, sw, w, jnp.float32(0.1),
+                                 jnp.float32(0.5))
+    for g, wv in zip(got, want):
+        assert_allclose(np.asarray(g), np.asarray(wv), rtol=1e-4, atol=1e-5)
+
+
+def test_pairwise_sqdist_kernel_vs_ref():
+    r = _rng(13)
+    s = r.standard_normal((21, 65), dtype=np.float32)
+    got = model.pairwise_sqdist(s)
+    want = model.pairwise_sqdist_ref(s)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-3)
+
+
+def test_artifact_table_shapes_eval():
+    # every artifact function abstract-evals on its declared shapes
+    table = model.artifact_table()
+    assert len(table) >= 6
+    for name, (fn, args) in table.items():
+        out = jax.eval_shape(fn, *args)
+        leaves = jax.tree_util.tree_leaves(out)
+        assert leaves, name
+        for leaf in leaves:
+            assert all(d >= 0 for d in leaf.shape), name
+
+
+def test_artifact_table_names_stable():
+    # the rust runtime keys on these exact names — breaking them is an
+    # API break, caught here.
+    names = set(model.artifact_table())
+    expected = {
+        "reduce_apply_p4096_k512_n64",
+        "reduce_apply_p8192_k1024_n128",
+        "logreg_step_n512_k512",
+        "logreg_step_n512_k2048",
+        "pairwise_sqdist_n256_d2048",
+        "edge_sqdist_e16384_n64",
+        "smoke_matmul_2x2",
+    }
+    assert expected <= names
+
+
+def test_reduce_apply_handles_padded_rows():
+    # zero rows of U (padding the masked-voxel count up to the artifact
+    # shape) must not perturb cluster means.
+    r = _rng(14)
+    p, k, n, pad = 120, 9, 8, 40
+    labels = r.integers(0, k, size=p)
+    labels[:k] = np.arange(k)
+    u = np.eye(k, dtype=np.float32)[labels]
+    x = r.standard_normal((p, n), dtype=np.float32)
+    base = np.asarray(model.reduce_apply_ref(u, x))
+
+    up = np.vstack([u, np.zeros((pad, k), np.float32)])
+    xp = np.vstack([x, r.standard_normal((pad, n), dtype=np.float32)])
+    padded = np.asarray(model.reduce_apply_ref(up, xp))
+    assert_allclose(base, padded, rtol=1e-5, atol=1e-6)

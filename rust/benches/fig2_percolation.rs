@@ -1,0 +1,37 @@
+//! Bench: regenerate Fig 2 (percolation histograms across methods)
+//! at the default testbed scale and print the paper-style table.
+//!
+//! ```bash
+//! cargo bench --bench fig2_percolation
+//! ```
+
+use fastclust::bench_harness::{fig2, timeit, write_csv};
+
+fn main() {
+    let cfg = fig2::Fig2Config::default();
+    println!(
+        "Fig 2 driver: dims={:?} subjects={} ratio={}",
+        cfg.dims, cfg.n_subjects, cfg.ratio
+    );
+    let (bench, rows) = timeit("fig2_full", 0, 1, || fig2::run(&cfg));
+    println!("{}", bench.summary());
+    let table = fig2::table(&rows);
+    table.print();
+    write_csv(&table, std::path::Path::new("results/fig2_percolation.csv"))
+        .expect("csv");
+    // the paper's qualitative check, enforced in CI fashion
+    let fast = rows
+        .iter()
+        .find(|r| r.method == fastclust::config::Method::Fast)
+        .unwrap();
+    let single = rows
+        .iter()
+        .find(|r| r.method == fastclust::config::Method::Single)
+        .unwrap();
+    assert!(
+        fast.giant_fraction < single.giant_fraction,
+        "REGRESSION: fast clustering percolates more than single linkage"
+    );
+    println!("fig2 OK: fast giant fraction {:.4} < single {:.4}",
+        fast.giant_fraction, single.giant_fraction);
+}

@@ -1,0 +1,42 @@
+//! Bench: regenerate Fig 3 (clustering computation time, k = p/10,
+//! n = 100 OASIS-like images) including the BLAS-3 yardstick and the
+//! 10-image subsample variant.
+//!
+//! ```bash
+//! cargo bench --bench fig3_cluster_time
+//! ```
+
+use fastclust::bench_harness::{fig3, write_csv};
+
+fn main() {
+    let cfg = fig3::Fig3Config::default();
+    println!(
+        "Fig 3 driver: dims={:?} n_images={} ratio={} reps={}",
+        cfg.dims, cfg.n_images, cfg.ratio, cfg.reps
+    );
+    let rows = fig3::run(&cfg);
+    let table = fig3::table(&rows);
+    table.print();
+    write_csv(&table, std::path::Path::new("results/fig3_cluster_time.csv"))
+        .expect("csv");
+    let secs =
+        |label: &str| rows.iter().find(|r| r.label == label).unwrap().secs;
+    // the paper's ordering must hold
+    assert!(secs("rp") < secs("fast"), "REGRESSION: rp !< fast");
+    assert!(secs("fast") < secs("ward"), "REGRESSION: fast !< ward");
+    assert!(
+        secs("fast") < secs("average"),
+        "REGRESSION: fast !< average"
+    );
+    assert!(
+        secs("fast") < secs("complete"),
+        "REGRESSION: fast !< complete"
+    );
+    println!(
+        "fig3 OK: fast {:.3}s < ward {:.3}s < (avg {:.3}s | compl {:.3}s)",
+        secs("fast"),
+        secs("ward"),
+        secs("average"),
+        secs("complete")
+    );
+}

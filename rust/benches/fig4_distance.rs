@@ -1,0 +1,48 @@
+//! Bench: regenerate Fig 4 (η distance preservation vs compression
+//! ratio, simulated cube + OASIS-like, train/test discipline).
+//!
+//! ```bash
+//! cargo bench --bench fig4_distance
+//! ```
+
+use fastclust::bench_harness::{fig4, timeit, write_csv};
+use fastclust::config::Method;
+
+fn main() {
+    let cfg = fig4::Fig4Config::default();
+    println!(
+        "Fig 4 driver: cube={:?} oasis={:?} n={} ratios={:?}",
+        cfg.cube_dims, cfg.oasis_dims, cfg.n_samples, cfg.ratios
+    );
+    let (bench, rows) = timeit("fig4_full", 0, 1, || fig4::run(&cfg));
+    println!("{}", bench.summary());
+    let table = fig4::table(&rows);
+    table.print();
+    write_csv(&table, std::path::Path::new("results/fig4_distance.csv"))
+        .expect("csv");
+
+    // paper shape: ward best among clusterings on distance preservation,
+    // RP unbiased, fast close to ward and better than the percolating
+    // linkages at the working ratio
+    let get = |m: Method, r: f64| {
+        rows.iter()
+            .find(|x| {
+                x.dataset == "oasis-like"
+                    && x.method == m
+                    && (x.ratio - r).abs() < 1e-9
+            })
+            .unwrap()
+    };
+    let rp = get(Method::RandomProjection, 0.1);
+    assert!(
+        (rp.eta.mean - 1.0).abs() < 0.4,
+        "REGRESSION: rp mean eta {} far from 1",
+        rp.eta.mean
+    );
+    let fast = get(Method::Fast, 0.1);
+    let avg = get(Method::Average, 0.1);
+    println!(
+        "fig4 OK: rp mean η {:.3}; fast cv {:.4} (avg-linkage cv {:.4})",
+        rp.eta.mean, fast.eta.cv, avg.eta.cv
+    );
+}

@@ -1,0 +1,48 @@
+//! Bench: regenerate Fig 6 (decoding accuracy vs computation time on
+//! the OASIS-like cohort; raw / fast / ward / rp across tolerances).
+//!
+//! ```bash
+//! cargo bench --bench fig6_logreg
+//! ```
+
+use fastclust::bench_harness::{fig6, write_csv};
+use fastclust::config::Method;
+
+fn main() {
+    let cfg = fig6::Fig6Config::default();
+    println!(
+        "Fig 6 driver: dims={:?} subjects={} ratios={:?} tols={:?}",
+        cfg.dims, cfg.n_subjects, cfg.ratios, cfg.tols
+    );
+    let rows = fig6::run(&cfg);
+    let table = fig6::table(&rows);
+    table.print();
+    write_csv(&table, std::path::Path::new("results/fig6_logreg.csv"))
+        .expect("csv");
+
+    // headline: at matched tolerance the compressed fit is faster than
+    // raw, with comparable-or-better accuracy
+    let best = |m: Method| {
+        rows.iter()
+            .filter(|r| r.method == m)
+            .min_by(|a, b| a.tol.partial_cmp(&b.tol).unwrap())
+            .unwrap()
+    };
+    let raw = best(Method::None);
+    let fast = best(Method::Fast);
+    assert!(
+        fast.fit_secs < raw.fit_secs,
+        "REGRESSION: compressed fit {}s !< raw {}s",
+        fast.fit_secs,
+        raw.fit_secs
+    );
+    println!(
+        "fig6 OK: fast fit {:.2}s (acc {:.3}) vs raw {:.2}s (acc {:.3}) \
+         -> speedup {:.1}x",
+        fast.fit_secs,
+        fast.accuracy,
+        raw.fit_secs,
+        raw.accuracy,
+        raw.fit_secs / fast.fit_secs.max(1e-9)
+    );
+}

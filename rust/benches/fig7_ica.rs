@@ -1,0 +1,45 @@
+//! Bench: regenerate Fig 7 (ICA component recovery, cross-session
+//! consistency with Wilcoxon test, computation time gain).
+//!
+//! ```bash
+//! cargo bench --bench fig7_ica
+//! ```
+
+use fastclust::bench_harness::{fig7, write_csv};
+
+fn main() {
+    let cfg = fig7::Fig7Config::default();
+    println!(
+        "Fig 7 driver: dims={:?} subjects={} t={} ratio={} q={}",
+        cfg.dims, cfg.n_subjects, cfg.t, cfg.ratio, cfg.q
+    );
+    let res = fig7::run(&cfg);
+    let table = fig7::table(&res);
+    table.print();
+    write_csv(&table, std::path::Path::new("results/fig7_ica.csv"))
+        .expect("csv");
+
+    let n = res.subjects.len() as f64;
+    let fast_rec: f64 =
+        res.subjects.iter().map(|s| s.fast_vs_raw).sum::<f64>() / n;
+    let rp_rec: f64 =
+        res.subjects.iter().map(|s| s.rp_vs_raw).sum::<f64>() / n;
+    assert!(
+        fast_rec > rp_rec,
+        "REGRESSION: fast recovery {fast_rec} !> rp {rp_rec}"
+    );
+    assert!(
+        res.gain_factor > 1.5,
+        "REGRESSION: ICA speedup {}x too small",
+        res.gain_factor
+    );
+    println!(
+        "fig7 OK: recovery fast {:.2} vs rp {:.2}; gain {:.1}x; wilcoxon {}",
+        fast_rec,
+        rp_rec,
+        res.gain_factor,
+        res.wilcoxon_p
+            .map(|p| format!("p={p:.2e}"))
+            .unwrap_or_else(|| "n/a".into())
+    );
+}

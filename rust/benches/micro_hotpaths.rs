@@ -1,0 +1,138 @@
+//! Micro-benchmarks of the library hot paths — the §Perf working set:
+//!
+//! * fast clustering end-to-end (the paper's algorithmic contribution);
+//! * 1-NN graph extraction + capped CC (Alg. 1 inner loop);
+//! * `ClusterReduce::reduce` (U^T X — the per-sample compression op);
+//! * sparse-RP apply;
+//! * native logreg gradient step;
+//! * PJRT logreg step (AOT artifact), when artifacts are present.
+//!
+//! Prints voxels/s and GB/s so EXPERIMENTS.md §Perf can compare against
+//! memory-bandwidth roofline.
+//!
+//! ```bash
+//! cargo bench --bench micro_hotpaths
+//! ```
+
+use fastclust::bench_harness::timeit;
+use fastclust::cluster::{Clusterer, FastCluster};
+use fastclust::estimators::{LogisticRegression, LogregBackend};
+use fastclust::graph::{nearest_neighbor_edges, LatticeGraph};
+use fastclust::reduce::{ClusterReduce, Reducer, SparseRandomProjection};
+use fastclust::runtime::Runtime;
+use fastclust::volume::SyntheticCube;
+
+fn main() {
+    // a paper-regime volume: p = 27k voxels, n = 50 samples
+    let dims = [30, 30, 30];
+    let n = 50;
+    let ds = SyntheticCube::new(dims, 6.0, 1.0).generate(n, 1);
+    let p = ds.p();
+    let k = p / 10;
+    let graph = LatticeGraph::from_mask(ds.mask());
+    println!("workload: p={p} n={n} k={k} edges={}", graph.n_edges());
+
+    // --- fast clustering end-to-end
+    let (b, labels) = timeit("fast_cluster_p27k", 1, 3, || {
+        FastCluster::default().fit(ds.data(), &graph, k, 0).unwrap()
+    });
+    println!("{}  [{:.2} Mvoxel/s]", b.summary(), p as f64 / b.min_s / 1e6);
+
+    // --- 1-NN extraction on the full lattice
+    let weighted = {
+        let mut g = graph.clone();
+        for e in &mut g.edges {
+            e.w = ds.data().row_sqdist(e.u as usize, e.v as usize);
+        }
+        g
+    };
+    let (b, _) = timeit("nn_edges_p27k", 1, 5, || {
+        nearest_neighbor_edges(&weighted).len()
+    });
+    println!(
+        "{}  [{:.2} Medge/s]",
+        b.summary(),
+        graph.n_edges() as f64 / b.min_s / 1e6
+    );
+
+    // --- cluster reduction U^T X
+    let red = ClusterReduce::from_labels(&labels);
+    let bytes = (p * n * 4) as f64;
+    let (b, _) = timeit("cluster_reduce_p27k_n50", 1, 10, || {
+        red.reduce(ds.data()).rows
+    });
+    println!(
+        "{}  [{:.2} GB/s read]",
+        b.summary(),
+        bytes / b.min_s / 1e9
+    );
+
+    // --- sparse random projection apply
+    let rp = SparseRandomProjection::new(p, k, 3);
+    let (b, _) = timeit("sparse_rp_p27k_n50", 1, 5, || {
+        rp.reduce(ds.data()).rows
+    });
+    println!(
+        "{}  [{:.2} Mnnz/s]",
+        b.summary(),
+        (rp.nnz() * n) as f64 / b.min_s / 1e6
+    );
+
+    // --- logreg gradient step on compressed features (native)
+    let xk = red.reduce(ds.data()).transpose(); // (n, k)
+    let y: Vec<f32> = (0..n).map(|i| (i % 2) as f32).collect();
+    let lr = LogisticRegression {
+        max_iter: 1,
+        tol: 0.0,
+        ..Default::default()
+    };
+    let (b, _) = timeit("logreg_step_native", 1, 10, || {
+        lr.fit(&xk, &y).unwrap().evals
+    });
+    println!(
+        "{}  [{:.2} Melem/s]",
+        b.summary(),
+        (n * k) as f64 * 3.0 / b.min_s / 1e6
+    );
+
+    // --- PJRT artifact paths (when built): per-eval step vs fused GD.
+    // The fused artifact amortizes the PJRT dispatch overhead over 64
+    // GD steps per call — compare seconds *per gradient step*.
+    match Runtime::from_env() {
+        Ok(rt) => {
+            let rt = std::sync::Arc::new(rt);
+            let kk = 2048.min(k);
+            let xs = xk.select_cols(&(0..kk).collect::<Vec<_>>());
+            let lr_rt = LogisticRegression {
+                max_iter: 1,
+                tol: 0.0,
+                backend: LogregBackend::Runtime(rt.clone()),
+                ..Default::default()
+            };
+            let (b, _) = timeit("logreg_step_pjrt(1 step)", 1, 5, || {
+                lr_rt.fit(&xs, &y).unwrap().evals
+            });
+            println!("{}", b.summary());
+            let per_step_single = b.min_s / 2.0; // ~2 evals in 1 iter
+
+            let lr_fused = LogisticRegression {
+                max_iter: 64,
+                tol: 0.0,
+                ..Default::default()
+            };
+            let (b, fit) = timeit("logreg_gd64_pjrt(64 steps)", 1, 5, || {
+                lr_fused.fit_fused(&rt, &xs, &y).unwrap()
+            });
+            println!("{}", b.summary());
+            let per_step_fused = b.min_s / fit.iters.max(1) as f64;
+            println!(
+                "  per-step: single-dispatch {:.3} ms vs fused {:.3} ms \
+                 -> {:.0}x dispatch amortization",
+                per_step_single * 1e3,
+                per_step_fused * 1e3,
+                per_step_single / per_step_fused.max(1e-12)
+            );
+        }
+        Err(_) => println!("(artifacts not built; skipping PJRT bench)"),
+    }
+}

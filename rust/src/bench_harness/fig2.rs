@@ -1,0 +1,235 @@
+//! Fig 2 — percolation behavior: cluster-size histograms at fixed k
+//! across clustering methods, averaged over subjects. The paper's
+//! claim: k-means and fast clustering show neither singletons nor very
+//! large clusters; traditional agglomerative methods show both.
+
+use crate::bench_harness::Table;
+use crate::cluster::metrics::{percolation_stats, size_histogram_log2};
+use crate::config::Method;
+use crate::coordinator::pipeline::fit_clustering;
+use crate::graph::LatticeGraph;
+use crate::volume::{RestingStateGenerator, SyntheticCube};
+
+/// Per-method percolation summary (averaged over subjects).
+#[derive(Clone, Debug)]
+pub struct Fig2Row {
+    /// Method.
+    pub method: Method,
+    /// Mean largest-cluster fraction of p.
+    pub giant_fraction: f64,
+    /// Mean singleton count.
+    pub singletons: f64,
+    /// Mean max/mean size ratio.
+    pub max_over_mean: f64,
+    /// Average log2 size histogram.
+    pub histogram: Vec<f64>,
+}
+
+/// Parameters for the Fig 2 experiment.
+#[derive(Clone, Debug)]
+pub struct Fig2Config {
+    /// Grid dims (paper: HCP at 2mm, p≈220k; scaled here).
+    pub dims: [usize; 3],
+    /// Number of subjects to average over (paper: 10).
+    pub n_subjects: usize,
+    /// Timepoints per subject used as clustering features.
+    pub t: usize,
+    /// Cluster count (paper: 20,000 ≈ p/10; scaled via ratio).
+    pub ratio: usize,
+    /// Methods to compare.
+    pub methods: Vec<Method>,
+    /// Root seed.
+    pub seed: u64,
+}
+
+impl Default for Fig2Config {
+    fn default() -> Self {
+        Fig2Config {
+            dims: [18, 20, 16],
+            n_subjects: 4,
+            t: 20,
+            ratio: 10,
+            methods: vec![
+                Method::Fast,
+                Method::Kmeans,
+                Method::Ward,
+                Method::RandSingle,
+                Method::Single,
+                Method::Average,
+                Method::Complete,
+            ],
+            seed: 42,
+        }
+    }
+}
+
+/// Run the experiment; returns one row per method.
+pub fn run(cfg: &Fig2Config) -> Vec<Fig2Row> {
+    let gen = RestingStateGenerator::new(cfg.dims);
+    let mut rows = Vec::new();
+    for &method in &cfg.methods {
+        let mut giant = 0.0;
+        let mut singles = 0.0;
+        let mut mom = 0.0;
+        let mut hist_acc: Vec<f64> = Vec::new();
+        for s in 0..cfg.n_subjects {
+            let mask = gen.make_mask(cfg.seed + s as u64);
+            let ds = gen.generate_session(
+                &mask,
+                cfg.t,
+                cfg.seed + 100 + s as u64,
+                1,
+            );
+            let graph = LatticeGraph::from_mask(ds.mask());
+            let k = (ds.p() / cfg.ratio).max(2);
+            // k-means on a 50³-scale p is the expensive gold standard;
+            // everything here is testbed-scale so we run it directly.
+            let labels = fit_clustering(
+                method,
+                ds.data(),
+                &graph,
+                k,
+                cfg.seed + s as u64,
+            )
+            .expect("clustering failed")
+            .expect("fig2 uses clustering methods only");
+            let st = percolation_stats(&labels);
+            giant += st.giant_fraction;
+            singles += st.singletons as f64;
+            mom += st.max_over_mean;
+            let h = size_histogram_log2(&labels);
+            if h.len() > hist_acc.len() {
+                hist_acc.resize(h.len(), 0.0);
+            }
+            for (b, &c) in h.iter().enumerate() {
+                hist_acc[b] += c as f64;
+            }
+        }
+        let nf = cfg.n_subjects as f64;
+        rows.push(Fig2Row {
+            method,
+            giant_fraction: giant / nf,
+            singletons: singles / nf,
+            max_over_mean: mom / nf,
+            histogram: hist_acc.iter().map(|&c| c / nf).collect(),
+        });
+    }
+    rows
+}
+
+/// Same experiment on the paper's own §4 simulation cube.
+pub fn run_on_cube(
+    dims: [usize; 3],
+    n: usize,
+    ratio: usize,
+    methods: &[Method],
+    seed: u64,
+) -> Vec<Fig2Row> {
+    let ds = SyntheticCube::new(dims, 6.0, 1.0).generate(n, seed);
+    let graph = LatticeGraph::from_mask(ds.mask());
+    let k = (ds.p() / ratio).max(2);
+    methods
+        .iter()
+        .map(|&method| {
+            let labels =
+                fit_clustering(method, ds.data(), &graph, k, seed)
+                    .expect("clustering failed")
+                    .expect("clustering methods only");
+            let st = percolation_stats(&labels);
+            Fig2Row {
+                method,
+                giant_fraction: st.giant_fraction,
+                singletons: st.singletons as f64,
+                max_over_mean: st.max_over_mean,
+                histogram: size_histogram_log2(&labels)
+                    .iter()
+                    .map(|&c| c as f64)
+                    .collect(),
+            }
+        })
+        .collect()
+}
+
+/// Render the paper-style summary table.
+pub fn table(rows: &[Fig2Row]) -> Table {
+    let mut t = Table::new(
+        "Fig 2 — percolation behavior (cluster size statistics)",
+        &[
+            "method",
+            "giant_frac",
+            "singletons",
+            "max/mean",
+            "log2-size histogram",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            r.method.name().to_string(),
+            format!("{:.4}", r.giant_fraction),
+            format!("{:.1}", r.singletons),
+            format!("{:.1}", r.max_over_mean),
+            r.histogram
+                .iter()
+                .map(|&c| format!("{c:.0}"))
+                .collect::<Vec<_>>()
+                .join(" "),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_and_kmeans_avoid_percolation_single_does_not() {
+        let cfg = Fig2Config {
+            dims: [12, 12, 10],
+            n_subjects: 2,
+            t: 10,
+            ratio: 10,
+            methods: vec![Method::Fast, Method::Kmeans, Method::Single],
+            seed: 3,
+        };
+        let rows = run(&cfg);
+        let by = |m: Method| {
+            rows.iter().find(|r| r.method == m).unwrap().clone()
+        };
+        let fast = by(Method::Fast);
+        let km = by(Method::Kmeans);
+        let single = by(Method::Single);
+        // the paper's qualitative ordering
+        assert!(
+            fast.max_over_mean < single.max_over_mean,
+            "fast {} !< single {}",
+            fast.max_over_mean,
+            single.max_over_mean
+        );
+        assert!(fast.giant_fraction < 0.15, "{}", fast.giant_fraction);
+        assert!(km.giant_fraction < 0.15, "{}", km.giant_fraction);
+        assert!(
+            single.giant_fraction > 2.0 * fast.giant_fraction,
+            "single {} vs fast {}",
+            single.giant_fraction,
+            fast.giant_fraction
+        );
+        // fast has (almost) no singletons
+        assert!(fast.singletons <= 1.0);
+    }
+
+    #[test]
+    fn table_renders_all_methods() {
+        let rows = run_on_cube(
+            [8, 8, 8],
+            4,
+            8,
+            &[Method::Fast, Method::Ward],
+            1,
+        );
+        let t = table(&rows);
+        let s = t.render();
+        assert!(s.contains("fast"));
+        assert!(s.contains("ward"));
+    }
+}

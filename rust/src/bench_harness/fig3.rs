@@ -1,0 +1,213 @@
+//! Fig 3 — computation time of the clustering algorithms (k = p/10 on
+//! an OASIS-like cohort of n images), plus the two §5 side claims:
+//! clustering is cheaper than a BLAS-3 operation on the same data, and
+//! learning clusters on a 10-image subset cuts the cost further.
+
+use crate::bench_harness::{timeit, BenchResult, Table};
+use crate::cluster::FastCluster;
+use crate::cluster::Clusterer;
+use crate::config::Method;
+use crate::coordinator::pipeline::fit_clustering;
+use crate::graph::LatticeGraph;
+use crate::reduce::SparseRandomProjection;
+use crate::volume::{FeatureMatrix, MorphometryGenerator};
+
+/// One method's timing.
+#[derive(Clone, Debug)]
+pub struct Fig3Row {
+    /// Method label (includes variants like "fast (10 imgs)").
+    pub label: String,
+    /// Seconds to produce k clusters (mean over reps).
+    pub secs: f64,
+    /// k used.
+    pub k: usize,
+}
+
+/// Parameters.
+#[derive(Clone, Debug)]
+pub struct Fig3Config {
+    /// Grid dims (paper: OASIS p=140,398 at 2mm; scaled).
+    pub dims: [usize; 3],
+    /// Images in the cohort (paper: 100).
+    pub n_images: usize,
+    /// Compression ratio (paper: k=10,000 ≈ p/14; we use p/10).
+    pub ratio: usize,
+    /// Methods to time.
+    pub methods: Vec<Method>,
+    /// Timing repetitions.
+    pub reps: usize,
+    /// Root seed.
+    pub seed: u64,
+}
+
+impl Default for Fig3Config {
+    fn default() -> Self {
+        Fig3Config {
+            dims: [20, 24, 20],
+            n_images: 100,
+            ratio: 10,
+            methods: vec![
+                Method::RandomProjection,
+                Method::Fast,
+                Method::RandSingle,
+                Method::Single,
+                Method::Ward,
+                Method::Average,
+                Method::Complete,
+            ],
+            reps: 3,
+            seed: 11,
+        }
+    }
+}
+
+/// Run the timing sweep. Also emits the "fast (10 imgs)" subsample
+/// variant and the "dense matmul (BLAS-3)" reference row.
+pub fn run(cfg: &Fig3Config) -> Vec<Fig3Row> {
+    let (ds, _) = MorphometryGenerator::new(cfg.dims)
+        .generate(cfg.n_images, cfg.seed);
+    let graph = LatticeGraph::from_mask(ds.mask());
+    let p = ds.p();
+    let k = (p / cfg.ratio).max(2);
+    let mut rows = Vec::new();
+
+    for &method in &cfg.methods {
+        let label = method.name().to_string();
+        let (bench, _): (BenchResult, _) =
+            timeit(&label, 0, cfg.reps, || match method {
+                Method::RandomProjection => {
+                    let rp = SparseRandomProjection::new(p, k, cfg.seed);
+                    rp.nnz()
+                }
+                m => {
+                    let l = fit_clustering(m, ds.data(), &graph, k, cfg.seed)
+                        .expect("clustering failed")
+                        .expect("clustering method");
+                    l.k
+                }
+            });
+        rows.push(Fig3Row { label, secs: bench.mean_s, k });
+    }
+
+    // §5: fast clustering learned on a 10-image subset
+    let fc = FastCluster {
+        feature_subsample: Some(10.min(cfg.n_images)),
+        ..Default::default()
+    };
+    let (bench, _) = timeit("fast (10 imgs)", 0, cfg.reps, || {
+        fc.fit(ds.data(), &graph, k, cfg.seed).expect("fit").k
+    });
+    rows.push(Fig3Row { label: "fast (10 imgs)".into(), secs: bench.mean_s, k });
+
+    // §5: BLAS-3 reference — a dense (p, n) x (n, n) product on the
+    // same data, the "standard linear algebra computation" yardstick
+    let xt = ds.data().clone();
+    let (bench, _) = timeit("dense matmul (BLAS-3)", 0, cfg.reps, || {
+        blas3_reference(&xt)
+    });
+    rows.push(Fig3Row {
+        label: "dense matmul (BLAS-3)".into(),
+        secs: bench.mean_s,
+        k,
+    });
+    rows
+}
+
+/// `X^T X` over the `(p, n)` data — the yardstick operation.
+fn blas3_reference(x: &FeatureMatrix) -> f64 {
+    let n = x.cols;
+    let mut out = vec![0.0f32; n * n];
+    for i in 0..x.rows {
+        let row = x.row(i);
+        for a in 0..n {
+            let ra = row[a];
+            if ra == 0.0 {
+                continue;
+            }
+            let orow = &mut out[a * n..(a + 1) * n];
+            for b in 0..n {
+                orow[b] += ra * row[b];
+            }
+        }
+    }
+    out.iter().map(|&v| v as f64).sum()
+}
+
+/// Render the timing table.
+pub fn table(rows: &[Fig3Row]) -> Table {
+    let mut t = Table::new(
+        "Fig 3 — clustering computation time (k = p/ratio)",
+        &["method", "seconds", "k"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.label.clone(),
+            format!("{:.4}", r.secs),
+            r.k.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Fig3Config {
+        Fig3Config {
+            dims: [10, 10, 8],
+            n_images: 20,
+            ratio: 10,
+            methods: vec![
+                Method::RandomProjection,
+                Method::Fast,
+                Method::Ward,
+                Method::Average,
+            ],
+            reps: 1,
+            seed: 5,
+        }
+    }
+
+    #[test]
+    fn fast_beats_ward_and_average_rp_beats_all() {
+        let rows = run(&tiny());
+        let secs = |label: &str| {
+            rows.iter().find(|r| r.label == label).unwrap().secs
+        };
+        // the paper's ordering: rp < fast < ward < average/complete
+        assert!(secs("rp") < secs("fast"), "rp should be fastest");
+        assert!(
+            secs("fast") < secs("ward"),
+            "fast {} !< ward {}",
+            secs("fast"),
+            secs("ward")
+        );
+        assert!(
+            secs("fast") < secs("average"),
+            "fast {} !< average {}",
+            secs("fast"),
+            secs("average")
+        );
+    }
+
+    #[test]
+    fn subsample_variant_is_cheaper() {
+        let rows = run(&tiny());
+        let secs = |label: &str| {
+            rows.iter().find(|r| r.label == label).unwrap().secs
+        };
+        assert!(
+            secs("fast (10 imgs)") <= secs("fast") * 1.1,
+            "subsampled fit should not be slower"
+        );
+    }
+
+    #[test]
+    fn table_has_blas_reference() {
+        let rows = run(&tiny());
+        assert!(rows.iter().any(|r| r.label.contains("BLAS-3")));
+        let t = table(&rows);
+        assert!(t.render().contains("BLAS-3"));
+    }
+}

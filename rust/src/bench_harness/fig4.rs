@@ -1,0 +1,252 @@
+//! Fig 4 — metric accuracy of the compressed representations: the η
+//! distance-ratio statistic across compression ratios k/p, with
+//! clusters learned on a training split and η measured on held-out
+//! samples (the paper's cross-validation discipline). Random
+//! projections are unbiased (mean η ≈ 1) with variance shrinking in k;
+//! clusterings are systematically compressive, so the figure of merit
+//! is η's *relative spread* (cv = std/mean).
+
+use crate::bench_harness::Table;
+use crate::config::Method;
+use crate::coordinator::pipeline::{fit_clustering, make_reducer};
+use crate::graph::LatticeGraph;
+use crate::stats::{eta_ratios, EtaSummary};
+use crate::volume::{MaskedDataset, MorphometryGenerator, SyntheticCube};
+
+/// One (method, ratio) cell of the figure.
+#[derive(Clone, Debug)]
+pub struct Fig4Row {
+    /// Dataset label ("cube" or "oasis-like").
+    pub dataset: String,
+    /// Method.
+    pub method: Method,
+    /// Compression ratio k/p.
+    pub ratio: f64,
+    /// k used.
+    pub k: usize,
+    /// η summary on held-out pairs.
+    pub eta: EtaSummary,
+}
+
+/// Parameters.
+#[derive(Clone, Debug)]
+pub struct Fig4Config {
+    /// Cube dims (paper: 50³).
+    pub cube_dims: [usize; 3],
+    /// OASIS-like dims.
+    pub oasis_dims: [usize; 3],
+    /// Samples per dataset (paper: 100 cube, 10 OASIS subjects).
+    pub n_samples: usize,
+    /// Compression ratios k/p to sweep.
+    pub ratios: Vec<f64>,
+    /// Methods.
+    pub methods: Vec<Method>,
+    /// Seed.
+    pub seed: u64,
+}
+
+impl Default for Fig4Config {
+    fn default() -> Self {
+        Fig4Config {
+            cube_dims: [16, 16, 16],
+            oasis_dims: [16, 18, 16],
+            n_samples: 40,
+            ratios: vec![0.02, 0.05, 0.1, 0.2],
+            methods: vec![
+                Method::RandomProjection,
+                Method::Fast,
+                Method::Ward,
+                Method::Single,
+                Method::Average,
+                Method::Complete,
+            ],
+            seed: 21,
+        }
+    }
+}
+
+fn eval_dataset(
+    name: &str,
+    ds: &MaskedDataset,
+    cfg: &Fig4Config,
+    out: &mut Vec<Fig4Row>,
+) {
+    let p = ds.p();
+    let n = ds.n();
+    // train/test split of samples: clusters learned on train only
+    let n_train = n / 2;
+    let train: Vec<usize> = (0..n_train).collect();
+    let test: Vec<usize> = (n_train..n).collect();
+    let (ds_train, ds_test) = ds.split_cols(&train, &test);
+    let graph = LatticeGraph::from_mask(ds.mask());
+
+    for &ratio in &cfg.ratios {
+        let k = ((p as f64 * ratio) as usize).max(2).min(p);
+        for &method in &cfg.methods {
+            let labels = fit_clustering(
+                method,
+                ds_train.data(),
+                &graph,
+                k,
+                cfg.seed,
+            )
+            .expect("clustering failed");
+            let reducer =
+                make_reducer(method, labels.as_ref(), p, k, cfg.seed)
+                    .expect("reducer")
+                    .expect("fig4 never uses raw");
+            // scaled cluster reduction preserves the l2 geometry of
+            // piecewise-constant signals; RP is already scaled
+            let compressed = match method {
+                Method::RandomProjection => reducer.reduce(ds_test.data()),
+                _ => {
+                    // reduce then rescale rows by sqrt(count): use the
+                    // ClusterReduce scaled path via labels
+                    let cr = crate::reduce::ClusterReduce::from_labels(
+                        labels.as_ref().unwrap(),
+                    );
+                    cr.reduce_scaled(ds_test.data())
+                }
+            };
+            let etas = eta_ratios(ds_test.data(), &compressed);
+            out.push(Fig4Row {
+                dataset: name.to_string(),
+                method,
+                ratio,
+                k,
+                eta: EtaSummary::from_ratios(&etas),
+            });
+        }
+    }
+}
+
+/// Run on both datasets (simulated cube + OASIS-like), as the paper
+/// does side by side.
+pub fn run(cfg: &Fig4Config) -> Vec<Fig4Row> {
+    let mut out = Vec::new();
+    let cube = SyntheticCube::new(cfg.cube_dims, 8.0, 1.0)
+        .generate(cfg.n_samples, cfg.seed);
+    eval_dataset("cube", &cube, cfg, &mut out);
+    let (oasis, _) = MorphometryGenerator::new(cfg.oasis_dims)
+        .generate(cfg.n_samples, cfg.seed + 1);
+    eval_dataset("oasis-like", &oasis, cfg, &mut out);
+    out
+}
+
+/// Render the paper-style table (one row per dataset × ratio × method).
+pub fn table(rows: &[Fig4Row]) -> Table {
+    let mut t = Table::new(
+        "Fig 4 — distance preservation η on held-out samples",
+        &["dataset", "method", "k/p", "k", "mean(η)", "cv(η)", "pairs"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.dataset.clone(),
+            r.method.name().to_string(),
+            format!("{:.3}", r.ratio),
+            r.k.to_string(),
+            format!("{:.3}", r.eta.mean),
+            format!("{:.4}", r.eta.cv),
+            r.eta.n_pairs.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Fig4Config {
+        Fig4Config {
+            cube_dims: [10, 10, 10],
+            oasis_dims: [10, 10, 10],
+            n_samples: 16,
+            ratios: vec![0.05, 0.2],
+            methods: vec![
+                Method::RandomProjection,
+                Method::Fast,
+                Method::Ward,
+                Method::Single,
+            ],
+            seed: 9,
+        }
+    }
+
+    fn find(
+        rows: &[Fig4Row],
+        ds: &str,
+        m: Method,
+        ratio: f64,
+    ) -> Fig4Row {
+        rows.iter()
+            .find(|r| {
+                r.dataset == ds
+                    && r.method == m
+                    && (r.ratio - ratio).abs() < 1e-9
+            })
+            .unwrap()
+            .clone()
+    }
+
+    #[test]
+    fn rp_is_unbiased_clusterings_are_compressive() {
+        let rows = run(&tiny());
+        for ds in ["cube", "oasis-like"] {
+            let rp = find(&rows, ds, Method::RandomProjection, 0.2);
+            assert!(
+                (rp.eta.mean - 1.0).abs() < 0.35,
+                "{ds}: rp mean η {}",
+                rp.eta.mean
+            );
+            let fast = find(&rows, ds, Method::Fast, 0.2);
+            assert!(
+                fast.eta.mean < 1.0,
+                "{ds}: clustering must be compressive, η={}",
+                fast.eta.mean
+            );
+        }
+    }
+
+    #[test]
+    fn rp_variance_shrinks_with_k() {
+        let rows = run(&tiny());
+        let lo = find(&rows, "cube", Method::RandomProjection, 0.05);
+        let hi = find(&rows, "cube", Method::RandomProjection, 0.2);
+        assert!(
+            hi.eta.cv < lo.eta.cv,
+            "JL: cv at k/p=0.2 ({}) !< cv at 0.05 ({})",
+            hi.eta.cv,
+            lo.eta.cv
+        );
+    }
+
+    #[test]
+    fn fast_clustering_preservation_improves_with_k() {
+        // finer partitions preserve distances better: cv(η) at
+        // k/p = 0.2 must beat cv(η) at k/p = 0.05
+        let rows = run(&tiny());
+        for ds in ["cube", "oasis-like"] {
+            let lo = find(&rows, ds, Method::Fast, 0.05);
+            let hi = find(&rows, ds, Method::Fast, 0.2);
+            assert!(
+                hi.eta.cv < lo.eta.cv,
+                "{ds}: cv at 0.2 ({}) !< cv at 0.05 ({})",
+                hi.eta.cv,
+                lo.eta.cv
+            );
+            // and the compression bias shrinks toward 1 as k grows
+            assert!(
+                (hi.eta.mean - 1.0).abs() <= (lo.eta.mean - 1.0).abs() + 0.05,
+                "{ds}: mean η did not move toward 1 with k"
+            );
+        }
+    }
+
+    #[test]
+    fn table_renders() {
+        let rows = run(&tiny());
+        let t = table(&rows);
+        assert!(t.render().contains("oasis-like"));
+    }
+}

@@ -1,0 +1,179 @@
+//! Fig 5 — the denoising effect: per-voxel ratio of between-condition
+//! (signal) to between-subject (noise) variance, before vs after fast
+//! cluster compression, as a function of k. The paper's claim: the
+//! log-ratio quotient grows as k decreases (coarser clusters filter
+//! more high-frequency noise).
+
+use crate::bench_harness::Table;
+use crate::cluster::{Clusterer, FastCluster};
+use crate::graph::LatticeGraph;
+use crate::reduce::{ClusterReduce, Reducer};
+use crate::stats::{median, quantile, variance_ratio_per_voxel};
+use crate::volume::ContrastMapGenerator;
+
+/// One k's denoising summary.
+#[derive(Clone, Debug)]
+pub struct Fig5Row {
+    /// Number of clusters.
+    pub k: usize,
+    /// Compression ratio p/k.
+    pub p_over_k: f64,
+    /// Median log2 quotient (cluster ratio / voxel ratio).
+    pub median_log2_quotient: f64,
+    /// 25th percentile.
+    pub q25: f64,
+    /// 75th percentile.
+    pub q75: f64,
+}
+
+/// Parameters.
+#[derive(Clone, Debug)]
+pub struct Fig5Config {
+    /// Grid dims.
+    pub dims: [usize; 3],
+    /// Subjects (paper: 67).
+    pub n_subjects: usize,
+    /// Contrasts (paper: 5 motor contrasts).
+    pub n_contrasts: usize,
+    /// Cluster counts to sweep (as p/k ratios).
+    pub ratios: Vec<usize>,
+    /// Seed.
+    pub seed: u64,
+}
+
+impl Default for Fig5Config {
+    fn default() -> Self {
+        Fig5Config {
+            dims: [16, 18, 14],
+            n_subjects: 20,
+            n_contrasts: 5,
+            ratios: vec![4, 10, 25, 60],
+            seed: 31,
+        }
+    }
+}
+
+/// Run the sweep. Per k: compress with fast clustering, compute the
+/// per-cluster variance ratio, expand back to voxels, and take the
+/// log2 quotient against the voxel-level ratio.
+pub fn run(cfg: &Fig5Config) -> Vec<Fig5Row> {
+    let gen = ContrastMapGenerator::new(cfg.dims);
+    let ds = gen.generate(cfg.n_subjects, cfg.n_contrasts, cfg.seed);
+    let graph = LatticeGraph::from_mask(ds.mask());
+    let p = ds.p();
+
+    let voxel_ratio =
+        variance_ratio_per_voxel(ds.data(), cfg.n_subjects, cfg.n_contrasts);
+
+    let mut rows = Vec::new();
+    for &ratio in &cfg.ratios {
+        let k = (p / ratio).max(2);
+        let labels = FastCluster::default()
+            .fit(ds.data(), &graph, k, cfg.seed)
+            .expect("fast clustering failed");
+        let red = ClusterReduce::from_labels(&labels);
+        let xk = red.reduce(ds.data());
+        let cluster_ratio =
+            variance_ratio_per_voxel(&xk, cfg.n_subjects, cfg.n_contrasts);
+        // expand per-cluster ratios back to voxels for a paired,
+        // per-voxel quotient
+        let mut quotients = Vec::with_capacity(p);
+        for i in 0..p {
+            let c = labels.labels[i] as usize;
+            let (num, den) = (cluster_ratio[c], voxel_ratio[i]);
+            if num.is_finite() && den.is_finite() && den > 1e-9 && num > 0.0 {
+                quotients.push((num / den).log2());
+            }
+        }
+        rows.push(Fig5Row {
+            k,
+            p_over_k: p as f64 / k as f64,
+            median_log2_quotient: median(&quotients),
+            q25: quantile(&quotients, 0.25),
+            q75: quantile(&quotients, 0.75),
+        });
+    }
+    rows
+}
+
+/// Render the boxplot-summary table.
+pub fn table(rows: &[Fig5Row]) -> Table {
+    let mut t = Table::new(
+        "Fig 5 — denoising: log2[(between-cond/between-subj) cluster / voxel]",
+        &["k", "p/k", "median", "q25", "q75"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.k.to_string(),
+            format!("{:.1}", r.p_over_k),
+            format!("{:+.3}", r.median_log2_quotient),
+            format!("{:+.3}", r.q25),
+            format!("{:+.3}", r.q75),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compression_increases_signal_to_noise() {
+        let cfg = Fig5Config {
+            dims: [12, 12, 10],
+            n_subjects: 12,
+            n_contrasts: 4,
+            ratios: vec![5, 20],
+            seed: 4,
+        };
+        let rows = run(&cfg);
+        // denoising: median quotient positive at both ks
+        for r in &rows {
+            assert!(
+                r.median_log2_quotient > 0.0,
+                "k={}: quotient {} not > 0",
+                r.k,
+                r.median_log2_quotient
+            );
+        }
+        // and the trend: coarser compression (larger p/k) denoises more
+        let fine = rows.iter().find(|r| r.p_over_k < 10.0).unwrap();
+        let coarse = rows.iter().find(|r| r.p_over_k > 10.0).unwrap();
+        assert!(
+            coarse.median_log2_quotient > fine.median_log2_quotient,
+            "coarse {} !> fine {}",
+            coarse.median_log2_quotient,
+            fine.median_log2_quotient
+        );
+    }
+
+    #[test]
+    fn quartiles_ordered() {
+        let cfg = Fig5Config {
+            dims: [10, 10, 8],
+            n_subjects: 8,
+            n_contrasts: 3,
+            ratios: vec![8],
+            seed: 6,
+        };
+        let rows = run(&cfg);
+        for r in &rows {
+            assert!(r.q25 <= r.median_log2_quotient);
+            assert!(r.median_log2_quotient <= r.q75);
+        }
+    }
+
+    #[test]
+    fn table_renders() {
+        let cfg = Fig5Config {
+            dims: [8, 8, 8],
+            n_subjects: 6,
+            n_contrasts: 3,
+            ratios: vec![6],
+            seed: 2,
+        };
+        let t = table(&run(&cfg));
+        assert!(t.render().contains("p/k"));
+    }
+}

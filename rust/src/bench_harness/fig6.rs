@@ -1,0 +1,206 @@
+//! Fig 6 — quality of the logistic-regression fit as a function of
+//! computation time, on the OASIS-like decoding problem: raw voxels vs
+//! fast clustering vs Ward vs random projections, sweeping the
+//! convergence tolerance to trace the (time, accuracy) curve. The
+//! paper's claims: (i) compressed fits reach at-least-raw accuracy
+//! ~1.5 orders of magnitude faster; (ii) cluster compressions score
+//! *higher* than raw or RP (the denoising effect).
+
+use crate::bench_harness::Table;
+use crate::config::{EstimatorConfig, Method, ReduceConfig};
+use crate::coordinator::{run_decoding_pipeline, DecodingReport};
+use crate::volume::MorphometryGenerator;
+
+/// One (method, tol) point on the time/accuracy curve.
+#[derive(Clone, Debug)]
+pub struct Fig6Row {
+    /// Method.
+    pub method: Method,
+    /// Components.
+    pub k: usize,
+    /// Convergence tolerance used.
+    pub tol: f64,
+    /// Mean CV accuracy.
+    pub accuracy: f64,
+    /// Std across folds.
+    pub accuracy_std: f64,
+    /// Estimator seconds (excludes cluster learning, as in the paper).
+    pub fit_secs: f64,
+    /// Cluster-learning seconds (reported separately, as in the paper).
+    pub cluster_secs: f64,
+}
+
+/// Parameters.
+#[derive(Clone, Debug)]
+pub struct Fig6Config {
+    /// Grid dims (paper: p=140,398; scaled).
+    pub dims: [usize; 3],
+    /// Subjects (paper: n=403).
+    pub n_subjects: usize,
+    /// Methods (paper: raw, fast, ward, rp).
+    pub methods: Vec<Method>,
+    /// Compression ratios to test (paper: k=4,000 and 20,000).
+    pub ratios: Vec<usize>,
+    /// Tolerance sweep tracing the convergence curve.
+    pub tols: Vec<f64>,
+    /// CV folds (paper: 10).
+    pub cv_folds: usize,
+    /// Seed.
+    pub seed: u64,
+}
+
+impl Default for Fig6Config {
+    fn default() -> Self {
+        Fig6Config {
+            dims: [16, 18, 16],
+            n_subjects: 120,
+            methods: vec![
+                Method::None,
+                Method::Fast,
+                Method::Ward,
+                Method::RandomProjection,
+            ],
+            ratios: vec![10, 35],
+            tols: vec![1e-2, 1e-3, 1e-4],
+            cv_folds: 10,
+            seed: 13,
+        }
+    }
+}
+
+/// Run the sweep.
+pub fn run(cfg: &Fig6Config) -> Vec<Fig6Row> {
+    let (ds, labels) =
+        MorphometryGenerator::new(cfg.dims).generate(cfg.n_subjects, cfg.seed);
+    let mut rows = Vec::new();
+    for &method in &cfg.methods {
+        // raw ignores the ratio sweep (k = p)
+        let ratios: &[usize] = if method == Method::None {
+            &[1]
+        } else {
+            &cfg.ratios
+        };
+        for &ratio in ratios {
+            for &tol in &cfg.tols {
+                let reduce = ReduceConfig {
+                    method,
+                    k: 0,
+                    ratio,
+                    seed: cfg.seed + ratio as u64,
+                };
+                let est = EstimatorConfig {
+                    tol,
+                    cv_folds: cfg.cv_folds,
+                    max_iter: 2000,
+                    ..Default::default()
+                };
+                let rep: DecodingReport =
+                    run_decoding_pipeline(&ds, &labels, &reduce, &est)
+                        .expect("pipeline failed");
+                rows.push(Fig6Row {
+                    method,
+                    k: rep.k,
+                    tol,
+                    accuracy: rep.accuracy,
+                    accuracy_std: rep.accuracy_std,
+                    fit_secs: rep.estimator_secs,
+                    cluster_secs: rep.cluster_secs,
+                });
+                if method == Method::None {
+                    // raw: single ratio entry per tol
+                    continue;
+                }
+            }
+        }
+    }
+    rows
+}
+
+/// Render the time/accuracy table.
+pub fn table(rows: &[Fig6Row]) -> Table {
+    let mut t = Table::new(
+        "Fig 6 — decoding accuracy vs computation time (OASIS-like)",
+        &[
+            "method",
+            "k",
+            "tol",
+            "accuracy",
+            "std",
+            "fit_secs",
+            "cluster_secs",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            r.method.name().to_string(),
+            r.k.to_string(),
+            format!("{:.0e}", r.tol),
+            format!("{:.3}", r.accuracy),
+            format!("{:.3}", r.accuracy_std),
+            format!("{:.3}", r.fit_secs),
+            format!("{:.3}", r.cluster_secs),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Fig6Config {
+        Fig6Config {
+            dims: [10, 12, 9],
+            n_subjects: 40,
+            methods: vec![Method::None, Method::Fast, Method::RandomProjection],
+            ratios: vec![10],
+            tols: vec![1e-3],
+            cv_folds: 4,
+            seed: 17,
+        }
+    }
+
+    #[test]
+    fn compressed_is_faster_and_at_least_as_accurate() {
+        let rows = run(&tiny());
+        let raw = rows.iter().find(|r| r.method == Method::None).unwrap();
+        let fast = rows.iter().find(|r| r.method == Method::Fast).unwrap();
+        assert!(
+            fast.fit_secs < raw.fit_secs,
+            "compressed fit {}s !< raw {}s",
+            fast.fit_secs,
+            raw.fit_secs
+        );
+        // at this miniature scale the raw problem is near-saturated,
+        // so we only require compression to stay in the same band (the
+        // *denoising advantage* is asserted at driver scale in
+        // EXPERIMENTS.md, where raw is not at ceiling)
+        assert!(
+            fast.accuracy >= raw.accuracy - 0.12,
+            "fast {} much worse than raw {}",
+            fast.accuracy,
+            raw.accuracy
+        );
+    }
+
+    #[test]
+    fn all_methods_beat_chance() {
+        let rows = run(&tiny());
+        for r in &rows {
+            assert!(
+                r.accuracy > 0.55,
+                "{} accuracy {} ~ chance",
+                r.method.name(),
+                r.accuracy
+            );
+        }
+    }
+
+    #[test]
+    fn table_renders() {
+        let t = table(&run(&tiny()));
+        let s = t.render();
+        assert!(s.contains("raw"));
+        assert!(s.contains("fast"));
+    }
+}

@@ -1,0 +1,113 @@
+//! The paper-reproduction harness: one driver per evaluation figure
+//! (Fig 2 – Fig 7), plus a criterion-style timing core ([`timeit`]) and
+//! table/CSV reporting — all dependency-free (the offline build has no
+//! criterion).
+//!
+//! Every driver takes a scale knob and a seed, returns a typed result
+//! table, and can print the same rows the paper reports. The binaries
+//! under `rust/benches/` and the `repro fig*` CLI subcommands are thin
+//! wrappers over these functions; EXPERIMENTS.md records their output.
+
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+mod report;
+
+pub use report::{write_csv, Table};
+
+use std::time::Instant;
+
+/// Timing summary of a benchmarked closure.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    /// Label.
+    pub name: String,
+    /// Measured iterations.
+    pub iters: usize,
+    /// Mean seconds per iteration.
+    pub mean_s: f64,
+    /// Standard deviation across iterations.
+    pub std_s: f64,
+    /// Fastest iteration.
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<28} {:>10.4}s ± {:>8.4}s (min {:.4}s, n={})",
+            self.name, self.mean_s, self.std_s, self.min_s, self.iters
+        )
+    }
+}
+
+/// Time a closure: `warmup` unmeasured runs then `iters` measured runs.
+/// The closure's result is returned from the last run so the compiler
+/// cannot elide the work.
+pub fn timeit<R>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: impl FnMut() -> R,
+) -> (BenchResult, R) {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    let mut last = None;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let r = std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+        last = Some(r);
+    }
+    let mean = times.iter().sum::<f64>() / iters as f64;
+    let var = if iters > 1 {
+        times.iter().map(|&t| (t - mean).powi(2)).sum::<f64>()
+            / (iters - 1) as f64
+    } else {
+        0.0
+    };
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    (
+        BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_s: mean,
+            std_s: var.sqrt(),
+            min_s: min,
+        },
+        last.unwrap(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timeit_measures_and_returns() {
+        let (res, val) = timeit("spin", 1, 3, || {
+            let mut s = 0u64;
+            for i in 0..10_000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert_eq!(val, (0..10_000u64).sum::<u64>());
+        assert_eq!(res.iters, 3);
+        assert!(res.mean_s > 0.0);
+        assert!(res.min_s <= res.mean_s + 1e-12);
+    }
+
+    #[test]
+    fn summary_contains_name() {
+        let (res, _) = timeit("xyz", 0, 1, || 1);
+        assert!(res.summary().contains("xyz"));
+    }
+}

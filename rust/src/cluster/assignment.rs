@@ -1,0 +1,49 @@
+//! Label bookkeeping helpers shared by the clusterers and reducers.
+
+use super::Labels;
+
+/// Per-cluster member counts.
+pub fn cluster_counts(labels: &Labels) -> Vec<u32> {
+    let mut counts = vec![0u32; labels.k];
+    for &l in &labels.labels {
+        counts[l as usize] += 1;
+    }
+    counts
+}
+
+/// Compact an arbitrary (possibly gappy) label vector into contiguous
+/// `0..k` ids, first-seen order. Returns the compacted labels and `k`.
+pub fn relabel_compact(raw: &[u32]) -> (Vec<u32>, usize) {
+    let mut map = std::collections::HashMap::new();
+    let mut out = Vec::with_capacity(raw.len());
+    for &l in raw {
+        let next = map.len() as u32;
+        out.push(*map.entry(l).or_insert(next));
+    }
+    (out, map.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_match_sizes() {
+        let l = Labels::new(vec![0, 1, 1, 2, 2, 2], 3).unwrap();
+        assert_eq!(cluster_counts(&l), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn relabel_compacts_gaps() {
+        let (l, k) = relabel_compact(&[7, 7, 3, 9, 3]);
+        assert_eq!(k, 3);
+        assert_eq!(l, vec![0, 0, 1, 2, 1]);
+    }
+
+    #[test]
+    fn relabel_empty() {
+        let (l, k) = relabel_compact(&[]);
+        assert!(l.is_empty());
+        assert_eq!(k, 0);
+    }
+}

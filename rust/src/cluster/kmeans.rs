@@ -1,0 +1,215 @@
+//! Lloyd's k-means with k-means++ seeding — the paper's Fig 2 uses it
+//! as the percolation-free (but `O(npk)`, hence impractical) gold
+//! standard. Note k-means ignores the lattice: clusters need not be
+//! spatially connected, which is also true of the paper's usage.
+
+use super::{check_fit_args, Clusterer, Labels};
+use crate::error::Result;
+use crate::graph::LatticeGraph;
+use crate::rng::Rng;
+use crate::volume::FeatureMatrix;
+
+/// Lloyd iterations with k-means++ init.
+#[derive(Clone, Debug)]
+pub struct KMeans {
+    /// Maximum Lloyd iterations.
+    pub max_iter: usize,
+    /// Relative inertia-improvement stopping threshold.
+    pub tol: f64,
+}
+
+impl Default for KMeans {
+    fn default() -> Self {
+        KMeans { max_iter: 25, tol: 1e-4 }
+    }
+}
+
+impl KMeans {
+    fn plus_plus_init(
+        x: &FeatureMatrix,
+        k: usize,
+        rng: &mut Rng,
+    ) -> Vec<Vec<f32>> {
+        let p = x.rows;
+        let mut centers: Vec<Vec<f32>> = Vec::with_capacity(k);
+        let first = rng.below(p);
+        centers.push(x.row(first).to_vec());
+        let mut d2: Vec<f64> = (0..p)
+            .map(|i| sqdist(x.row(i), &centers[0]) as f64)
+            .collect();
+        while centers.len() < k {
+            let total: f64 = d2.iter().sum();
+            let pick = if total <= 0.0 {
+                rng.below(p)
+            } else {
+                let mut t = rng.f64() * total;
+                let mut idx = p - 1;
+                for (i, &d) in d2.iter().enumerate() {
+                    if t < d {
+                        idx = i;
+                        break;
+                    }
+                    t -= d;
+                }
+                idx
+            };
+            centers.push(x.row(pick).to_vec());
+            let c = centers.last().unwrap();
+            for i in 0..p {
+                let d = sqdist(x.row(i), c) as f64;
+                if d < d2[i] {
+                    d2[i] = d;
+                }
+            }
+        }
+        centers
+    }
+}
+
+#[inline]
+fn sqdist(a: &[f32], b: &[f32]) -> f32 {
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+impl Clusterer for KMeans {
+    fn name(&self) -> &'static str {
+        "kmeans"
+    }
+
+    fn fit(
+        &self,
+        x: &FeatureMatrix,
+        graph: &LatticeGraph,
+        k: usize,
+        seed: u64,
+    ) -> Result<Labels> {
+        check_fit_args(x, graph, k)?;
+        let p = x.rows;
+        let n = x.cols;
+        let mut rng = Rng::new(seed).derive(0x4D);
+        let mut centers = KMeans::plus_plus_init(x, k, &mut rng);
+        let mut labels = vec![0u32; p];
+        let mut prev_inertia = f64::INFINITY;
+        for _it in 0..self.max_iter {
+            // assignment step
+            let mut inertia = 0.0f64;
+            for i in 0..p {
+                let row = x.row(i);
+                let mut best = 0usize;
+                let mut bestd = f32::INFINITY;
+                for (c, ctr) in centers.iter().enumerate() {
+                    let d = sqdist(row, ctr);
+                    if d < bestd {
+                        bestd = d;
+                        best = c;
+                    }
+                }
+                labels[i] = best as u32;
+                inertia += bestd as f64;
+            }
+            // update step
+            let mut sums = vec![vec![0.0f64; n]; k];
+            let mut counts = vec![0usize; k];
+            for i in 0..p {
+                let c = labels[i] as usize;
+                counts[c] += 1;
+                for (j, &v) in x.row(i).iter().enumerate() {
+                    sums[c][j] += v as f64;
+                }
+            }
+            for c in 0..k {
+                if counts[c] == 0 {
+                    // re-seed empty cluster at the farthest point
+                    let far = (0..p)
+                        .max_by(|&a, &b| {
+                            let da = sqdist(x.row(a), &centers[labels[a] as usize]);
+                            let db = sqdist(x.row(b), &centers[labels[b] as usize]);
+                            da.partial_cmp(&db).unwrap()
+                        })
+                        .unwrap();
+                    centers[c] = x.row(far).to_vec();
+                    labels[far] = c as u32;
+                } else {
+                    for j in 0..n {
+                        centers[c][j] = (sums[c][j] / counts[c] as f64) as f32;
+                    }
+                }
+            }
+            if prev_inertia.is_finite()
+                && (prev_inertia - inertia).abs()
+                    <= self.tol * prev_inertia.max(1e-12)
+            {
+                break;
+            }
+            prev_inertia = inertia;
+        }
+        // compact labels (empty clusters may remain if k ~ p)
+        let mut remap = vec![u32::MAX; k];
+        let mut next = 0u32;
+        for l in &mut labels {
+            let c = *l as usize;
+            if remap[c] == u32::MAX {
+                remap[c] = next;
+                next += 1;
+            }
+            *l = remap[c];
+        }
+        Labels::new(labels, next as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::volume::{Mask, SyntheticCube};
+
+    #[test]
+    fn separates_two_obvious_blobs() {
+        // 1-D data: 10 points near 0, 10 near 100
+        let mask = Mask::full([20, 1, 1]);
+        let g = LatticeGraph::from_mask(&mask);
+        let mut vals = vec![0.0f32; 20];
+        for (i, v) in vals.iter_mut().enumerate().skip(10) {
+            *v = 100.0 + (i % 3) as f32;
+        }
+        for (i, v) in vals.iter_mut().enumerate().take(10) {
+            *v = (i % 3) as f32;
+        }
+        let x = FeatureMatrix::from_vec(20, 1, vals).unwrap();
+        let l = KMeans::default().fit(&x, &g, 2, 1).unwrap();
+        assert_eq!(l.k, 2);
+        for i in 0..10 {
+            assert_eq!(l.labels[i], l.labels[0]);
+        }
+        for i in 10..20 {
+            assert_eq!(l.labels[i], l.labels[10]);
+        }
+        assert_ne!(l.labels[0], l.labels[10]);
+    }
+
+    #[test]
+    fn reaches_k_and_sizes_are_even_on_smooth_data() {
+        let ds = SyntheticCube::new([8, 8, 8], 4.0, 0.3).generate(3, 5);
+        let g = LatticeGraph::from_mask(ds.mask());
+        let k = 50;
+        let l = KMeans::default().fit(ds.data(), &g, k, 2).unwrap();
+        assert_eq!(l.k, k);
+        let sizes = l.sizes();
+        let max = *sizes.iter().max().unwrap();
+        assert!(max < 10 * (512 / k).max(1), "kmeans percolated? max={max}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = SyntheticCube::new([6, 6, 6], 3.0, 0.4).generate(2, 6);
+        let g = LatticeGraph::from_mask(ds.mask());
+        let a = KMeans::default().fit(ds.data(), &g, 10, 3).unwrap();
+        let b = KMeans::default().fit(ds.data(), &g, 10, 3).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,376 @@
+//! Agglomerative linkage baselines on the lattice graph.
+//!
+//! * [`SingleLinkage`] — exact, via the MST: cutting the `k-1` heaviest
+//!   tree edges is equivalent to single-linkage at `k` clusters (and is
+//!   how the percolation pathology manifests fastest).
+//! * [`AverageLinkage`] / [`CompleteLinkage`] — heap-driven
+//!   connectivity-constrained agglomeration with Lance–Williams
+//!   updates, the same construction scipy/sklearn use for structured
+//!   ("sparse connectivity") inputs.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use super::{check_fit_args, Clusterer, Labels};
+use crate::error::{invalid, Result};
+use crate::graph::{connected_components, kruskal_mst, Edge, LatticeGraph};
+use crate::volume::FeatureMatrix;
+
+// ------------------------------------------------------------------
+// Single linkage (MST formulation)
+// ------------------------------------------------------------------
+
+/// Exact single-linkage clustering via MST edge cutting.
+#[derive(Clone, Debug, Default)]
+pub struct SingleLinkage;
+
+impl Clusterer for SingleLinkage {
+    fn name(&self) -> &'static str {
+        "single"
+    }
+
+    fn fit(
+        &self,
+        x: &FeatureMatrix,
+        graph: &LatticeGraph,
+        k: usize,
+        _seed: u64,
+    ) -> Result<Labels> {
+        check_fit_args(x, graph, k)?;
+        let p = x.rows;
+        let weighted: Vec<Edge> = graph
+            .edges
+            .iter()
+            .map(|e| Edge::new(e.u, e.v, x.row_sqdist(e.u as usize, e.v as usize)))
+            .collect();
+        let mut tree = kruskal_mst(p, &weighted);
+        let base_components = p - tree.len();
+        if k < base_components {
+            return Err(invalid(format!(
+                "k={k} below the {base_components} mask components"
+            )));
+        }
+        // cut the k - base_components heaviest edges
+        tree.sort_unstable_by(|a, b| {
+            a.w.partial_cmp(&b.w)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.u.cmp(&b.u))
+                .then(a.v.cmp(&b.v))
+        });
+        let keep = tree.len() - (k - base_components);
+        let (labels, kk) = connected_components(p, &tree[..keep]);
+        Labels::new(labels, kk)
+    }
+}
+
+// ------------------------------------------------------------------
+// Heap-driven Lance–Williams agglomeration
+// ------------------------------------------------------------------
+
+/// Linkage update rule.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Rule {
+    Average,
+    Complete,
+}
+
+/// f32 wrapper ordered for the min-heap (we never produce NaNs).
+#[derive(Clone, Copy, PartialEq)]
+struct Ord32(f32);
+impl Eq for Ord32 {}
+impl PartialOrd for Ord32 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ord32 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+fn agglomerate(
+    x: &FeatureMatrix,
+    graph: &LatticeGraph,
+    k: usize,
+    rule: Rule,
+) -> Result<Labels> {
+    check_fit_args(x, graph, k)?;
+    let p = x.rows;
+    // neighbor dissimilarity maps (graph-constrained)
+    let mut nbrs: Vec<HashMap<u32, f32>> =
+        vec![HashMap::new(); p];
+    for e in &graph.edges {
+        let d = x.row_sqdist(e.u as usize, e.v as usize);
+        nbrs[e.u as usize].insert(e.v, d);
+        nbrs[e.v as usize].insert(e.u, d);
+    }
+    let mut size = vec![1u32; p];
+    let mut version = vec![0u32; p];
+    let mut active = vec![true; p];
+    // parent pointers for final labeling
+    let mut parent: Vec<u32> = (0..p as u32).collect();
+
+    // heap of candidate merges, lazily invalidated by version stamps
+    let mut heap: BinaryHeap<Reverse<(Ord32, u32, u32, u32, u32)>> =
+        BinaryHeap::new();
+    for (u, m) in nbrs.iter().enumerate() {
+        for (&v, &d) in m {
+            if (u as u32) < v {
+                heap.push(Reverse((Ord32(d), u as u32, v, 0, 0)));
+            }
+        }
+    }
+    let mut n_active = p;
+    let (base_labels, base_components) = {
+        let (l, c) = connected_components(p, &graph.edges);
+        (l, c)
+    };
+    let _ = base_labels;
+    if k < base_components {
+        return Err(invalid(format!(
+            "k={k} below the {base_components} mask components"
+        )));
+    }
+
+    while n_active > k {
+        let Some(Reverse((_, u, v, vu, vv))) = heap.pop() else {
+            break; // disconnected remainder
+        };
+        let (u, v) = (u as usize, v as usize);
+        if !active[u] || !active[v] || version[u] != vu || version[v] != vv {
+            continue;
+        }
+        // merge v into u (u keeps the slot)
+        let (su, sv) = (size[u] as f32, size[v] as f32);
+        active[v] = false;
+        parent[v] = u as u32;
+        size[u] += size[v];
+        version[u] += 1;
+        n_active -= 1;
+
+        // Lance–Williams over the union of neighborhoods
+        let vmap = std::mem::take(&mut nbrs[v]);
+        let umap = std::mem::take(&mut nbrs[u]);
+        let mut merged: HashMap<u32, f32> =
+            HashMap::with_capacity(umap.len() + vmap.len());
+        for (&w, &duw) in &umap {
+            if w as usize == v {
+                continue;
+            }
+            merged.insert(w, duw);
+        }
+        for (&w, &dvw) in &vmap {
+            if w as usize == u {
+                continue;
+            }
+            let entry = merged.entry(w);
+            match entry {
+                std::collections::hash_map::Entry::Occupied(mut o) => {
+                    let duw = *o.get();
+                    let d = match rule {
+                        Rule::Average => (su * duw + sv * dvw) / (su + sv),
+                        Rule::Complete => duw.max(dvw),
+                    };
+                    o.insert(d);
+                }
+                std::collections::hash_map::Entry::Vacant(va) => {
+                    // w only bordered v: inherited distance
+                    va.insert(dvw);
+                }
+            }
+        }
+        // write back + update the neighbors' own maps and push fresh
+        // heap entries
+        for (&w, &d) in &merged {
+            let wm = &mut nbrs[w as usize];
+            wm.remove(&(v as u32));
+            wm.insert(u as u32, d);
+            let (a, b) = if (u as u32) < w { (u as u32, w) } else { (w, u as u32) };
+            heap.push(Reverse((
+                Ord32(d),
+                a,
+                b,
+                version[a as usize],
+                version[b as usize],
+            )));
+        }
+        nbrs[u] = merged;
+    }
+
+    // resolve parent chains to compact labels
+    let mut root = vec![0u32; p];
+    for i in 0..p {
+        let mut r = i as u32;
+        while parent[r as usize] != r {
+            r = parent[r as usize];
+        }
+        root[i] = r;
+    }
+    let mut map: HashMap<u32, u32> = HashMap::new();
+    let mut labels = vec![0u32; p];
+    for i in 0..p {
+        let next = map.len() as u32;
+        let l = *map.entry(root[i]).or_insert(next);
+        labels[i] = l;
+    }
+    Labels::new(labels, map.len())
+}
+
+/// Connectivity-constrained average linkage (UPGMA update).
+#[derive(Clone, Debug, Default)]
+pub struct AverageLinkage;
+
+impl Clusterer for AverageLinkage {
+    fn name(&self) -> &'static str {
+        "average"
+    }
+
+    fn fit(
+        &self,
+        x: &FeatureMatrix,
+        graph: &LatticeGraph,
+        k: usize,
+        _seed: u64,
+    ) -> Result<Labels> {
+        agglomerate(x, graph, k, Rule::Average)
+    }
+}
+
+/// Connectivity-constrained complete linkage (max update).
+#[derive(Clone, Debug, Default)]
+pub struct CompleteLinkage;
+
+impl Clusterer for CompleteLinkage {
+    fn name(&self) -> &'static str {
+        "complete"
+    }
+
+    fn fit(
+        &self,
+        x: &FeatureMatrix,
+        graph: &LatticeGraph,
+        k: usize,
+        _seed: u64,
+    ) -> Result<Labels> {
+        agglomerate(x, graph, k, Rule::Complete)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::volume::SyntheticCube;
+
+    fn fixture(seed: u64) -> (FeatureMatrix, LatticeGraph) {
+        let ds = SyntheticCube::new([7, 7, 7], 3.0, 0.5).generate(3, seed);
+        let g = LatticeGraph::from_mask(ds.mask());
+        (ds.data().clone(), g)
+    }
+
+    #[test]
+    fn all_linkages_reach_k() {
+        let (x, g) = fixture(1);
+        for &k in &[5usize, 20, 60] {
+            for c in [
+                &SingleLinkage as &dyn Clusterer,
+                &AverageLinkage,
+                &CompleteLinkage,
+            ] {
+                let l = c.fit(&x, &g, k, 0).unwrap();
+                assert_eq!(l.k, k, "{} k={k}", c.name());
+            }
+        }
+    }
+
+    #[test]
+    fn clusters_connected_for_all_linkages() {
+        let (x, g) = fixture(2);
+        for c in [
+            &SingleLinkage as &dyn Clusterer,
+            &AverageLinkage,
+            &CompleteLinkage,
+        ] {
+            let l = c.fit(&x, &g, 15, 0).unwrap();
+            for cl in 0..l.k as u32 {
+                let members: Vec<usize> =
+                    (0..l.p()).filter(|&i| l.labels[i] == cl).collect();
+                let mut seen = vec![false; l.p()];
+                let mut stack = vec![members[0]];
+                seen[members[0]] = true;
+                let mut cnt = 0;
+                while let Some(v) = stack.pop() {
+                    cnt += 1;
+                    for &nb in g.neighbors(v) {
+                        let nb = nb as usize;
+                        if !seen[nb] && l.labels[nb] == cl {
+                            seen[nb] = true;
+                            stack.push(nb);
+                        }
+                    }
+                }
+                assert_eq!(
+                    cnt,
+                    members.len(),
+                    "{}: cluster {cl} disconnected",
+                    c.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_linkage_merges_cheapest_first() {
+        // 1D chain with one clear gap: values 0,0.1,0.2 | 10,10.1
+        let mask = crate::volume::Mask::full([5, 1, 1]);
+        let g = LatticeGraph::from_mask(&mask);
+        let x = FeatureMatrix::from_vec(
+            5,
+            1,
+            vec![0.0, 0.1, 0.2, 10.0, 10.1],
+        )
+        .unwrap();
+        let l = SingleLinkage.fit(&x, &g, 2, 0).unwrap();
+        assert_eq!(l.labels[0], l.labels[1]);
+        assert_eq!(l.labels[1], l.labels[2]);
+        assert_eq!(l.labels[3], l.labels[4]);
+        assert_ne!(l.labels[2], l.labels[3]);
+    }
+
+    #[test]
+    fn complete_linkage_splits_at_the_jump() {
+        // two flat plateaus with a sharp jump: with k=2 complete
+        // linkage must cut exactly at the discontinuity (its max-merge
+        // criterion makes crossing the jump maximally expensive)
+        let mask = crate::volume::Mask::full([12, 1, 1]);
+        let g = LatticeGraph::from_mask(&mask);
+        let mut vals = vec![0.0f32; 12];
+        for (i, v) in vals.iter_mut().enumerate() {
+            *v = if i < 7 { 0.01 * i as f32 } else { 5.0 + 0.01 * i as f32 };
+        }
+        let x = FeatureMatrix::from_vec(12, 1, vals).unwrap();
+        let l = CompleteLinkage.fit(&x, &g, 2, 0).unwrap();
+        for i in 0..7 {
+            assert_eq!(l.labels[i], l.labels[0], "left plateau split");
+        }
+        for i in 7..12 {
+            assert_eq!(l.labels[i], l.labels[7], "right plateau split");
+        }
+        assert_ne!(l.labels[0], l.labels[7]);
+    }
+
+    #[test]
+    fn average_between_single_and_complete_on_sizes() {
+        let (x, g) = fixture(3);
+        let k = 12;
+        let ls = SingleLinkage.fit(&x, &g, k, 0).unwrap();
+        let la = AverageLinkage.fit(&x, &g, k, 0).unwrap();
+        let max_s = *ls.sizes().iter().max().unwrap();
+        let max_a = *la.sizes().iter().max().unwrap();
+        // single's giant component should not be smaller than average's
+        assert!(
+            max_s >= max_a,
+            "single max {max_s} < average max {max_a}"
+        );
+    }
+}

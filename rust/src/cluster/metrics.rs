@@ -1,0 +1,133 @@
+//! Clustering quality metrics: the cluster-size histogram of Fig 2,
+//! percolation summaries and within-cluster inertia.
+
+use super::Labels;
+use crate::volume::FeatureMatrix;
+
+/// Log₂-binned cluster-size histogram: `hist[b]` = number of clusters
+/// whose size falls in `[2^b, 2^(b+1))`. This is the visualization of
+/// Fig 2: percolating methods show mass in both the lowest bin
+/// (singletons) and the highest bins (giant components).
+pub fn size_histogram_log2(labels: &Labels) -> Vec<usize> {
+    let sizes = labels.sizes();
+    let maxb = sizes
+        .iter()
+        .map(|&s| (usize::BITS - (s.max(1)).leading_zeros()) as usize)
+        .max()
+        .unwrap_or(1);
+    let mut hist = vec![0usize; maxb];
+    for &s in &sizes {
+        let b = (usize::BITS - s.max(1).leading_zeros()) as usize - 1;
+        hist[b] += 1;
+    }
+    hist
+}
+
+/// Percolation summary statistics of a partition.
+#[derive(Clone, Debug)]
+pub struct PercolationStats {
+    /// Largest cluster size.
+    pub max_size: usize,
+    /// Largest cluster as a fraction of `p`.
+    pub giant_fraction: f64,
+    /// Number of singleton clusters.
+    pub singletons: usize,
+    /// Mean cluster size (`p / k`).
+    pub mean_size: f64,
+    /// Ratio max / mean — the paper's "evenness" criterion; ≈1 is
+    /// perfectly even, ≫1 indicates percolation.
+    pub max_over_mean: f64,
+}
+
+/// Compute percolation statistics.
+pub fn percolation_stats(labels: &Labels) -> PercolationStats {
+    let sizes = labels.sizes();
+    let p = labels.p();
+    let max_size = *sizes.iter().max().unwrap_or(&0);
+    let singletons = sizes.iter().filter(|&&s| s == 1).count();
+    let mean_size = p as f64 / labels.k as f64;
+    PercolationStats {
+        max_size,
+        giant_fraction: max_size as f64 / p.max(1) as f64,
+        singletons,
+        mean_size,
+        max_over_mean: max_size as f64 / mean_size,
+    }
+}
+
+/// Total within-cluster inertia: `sum_i ||x_i - c_{l(i)}||²` — what
+/// Ward greedily minimizes and a global quality score for compression.
+pub fn within_cluster_inertia(x: &FeatureMatrix, labels: &Labels) -> f64 {
+    let n = x.cols;
+    let mut sums = vec![0.0f64; labels.k * n];
+    let mut counts = vec![0usize; labels.k];
+    for i in 0..x.rows {
+        let c = labels.labels[i] as usize;
+        counts[c] += 1;
+        for (j, &v) in x.row(i).iter().enumerate() {
+            sums[c * n + j] += v as f64;
+        }
+    }
+    for c in 0..labels.k {
+        let cnt = counts[c].max(1) as f64;
+        for j in 0..n {
+            sums[c * n + j] /= cnt;
+        }
+    }
+    let mut inertia = 0.0f64;
+    for i in 0..x.rows {
+        let c = labels.labels[i] as usize;
+        for (j, &v) in x.row(i).iter().enumerate() {
+            let d = v as f64 - sums[c * n + j];
+            inertia += d * d;
+        }
+    }
+    inertia
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_bins_correct() {
+        // sizes: 1, 1, 2, 3, 8 -> bins: [2 (size 1), 1 (2..3->bin1 has 2,3), ...]
+        let labels = Labels::new(
+            vec![0, 1, 2, 2, 3, 3, 3, 4, 4, 4, 4, 4, 4, 4, 4],
+            5,
+        )
+        .unwrap();
+        let h = size_histogram_log2(&labels);
+        // sizes = [1,1,2,3,8]; log2 bins: 1->0, 2..3->1, 8->3
+        assert_eq!(h[0], 2);
+        assert_eq!(h[1], 2);
+        assert_eq!(h[3], 1);
+    }
+
+    #[test]
+    fn percolation_stats_flag_giants() {
+        // one giant of 9 + 3 singletons out of p=12
+        let mut l = vec![0u32; 9];
+        l.extend_from_slice(&[1, 2, 3]);
+        let labels = Labels::new(l, 4).unwrap();
+        let s = percolation_stats(&labels);
+        assert_eq!(s.max_size, 9);
+        assert_eq!(s.singletons, 3);
+        assert!((s.giant_fraction - 0.75).abs() < 1e-12);
+        assert!(s.max_over_mean > 2.9);
+    }
+
+    #[test]
+    fn inertia_zero_for_exact_partition() {
+        let x = FeatureMatrix::from_vec(
+            4,
+            1,
+            vec![1.0, 1.0, 5.0, 5.0],
+        )
+        .unwrap();
+        let labels = Labels::new(vec![0, 0, 1, 1], 2).unwrap();
+        assert!(within_cluster_inertia(&x, &labels) < 1e-12);
+        let bad = Labels::new(vec![0, 1, 0, 1], 2).unwrap();
+        assert!(within_cluster_inertia(&x, &bad) > 1.0);
+    }
+}

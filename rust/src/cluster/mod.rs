@@ -1,0 +1,128 @@
+//! Clustering algorithms: the paper's **fast clustering** (Alg. 1,
+//! recursive nearest-neighbor agglomeration) plus every baseline its
+//! evaluation compares against — rand-single, single/average/complete
+//! linkage, Ward and k-means — behind one [`Clusterer`] trait.
+//!
+//! All algorithms are *spatially constrained*: merges only happen along
+//! edges of the masked lattice graph, which is both what makes them
+//! linear-ish and what gives the compression its anatomical outline.
+
+mod assignment;
+mod fast;
+mod kmeans;
+mod linkage;
+pub mod metrics;
+mod rand_single;
+mod ward;
+
+pub use assignment::{cluster_counts, relabel_compact};
+pub use fast::{FastCluster, FastClusterTrace};
+pub use kmeans::KMeans;
+pub use linkage::{AverageLinkage, CompleteLinkage, SingleLinkage};
+pub use rand_single::RandSingle;
+pub use ward::Ward;
+
+use crate::error::{invalid, Result};
+use crate::graph::LatticeGraph;
+use crate::volume::FeatureMatrix;
+
+/// A hard partition of `p` items into `k` non-empty clusters with
+/// compact labels `0..k`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Labels {
+    /// `labels[i] in 0..k` for each of the `p` items.
+    pub labels: Vec<u32>,
+    /// Number of clusters.
+    pub k: usize,
+}
+
+impl Labels {
+    /// Construct after validating compactness and non-emptiness.
+    pub fn new(labels: Vec<u32>, k: usize) -> Result<Self> {
+        if k == 0 {
+            return Err(invalid("Labels: k must be >= 1"));
+        }
+        let mut seen = vec![false; k];
+        for &l in &labels {
+            if l as usize >= k {
+                return Err(invalid(format!("label {l} >= k={k}")));
+            }
+            seen[l as usize] = true;
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err(invalid("Labels: some cluster ids are empty"));
+        }
+        Ok(Labels { labels, k })
+    }
+
+    /// Number of items.
+    pub fn p(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// Per-cluster sizes.
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut s = vec![0usize; self.k];
+        for &l in &self.labels {
+            s[l as usize] += 1;
+        }
+        s
+    }
+}
+
+/// Common interface: partition the voxels of `x` (rows) into `k`
+/// spatially-connected clusters along `graph`.
+pub trait Clusterer {
+    /// Human-readable algorithm name (for reports and benches).
+    fn name(&self) -> &'static str;
+
+    /// Fit a `k`-cluster partition. Deterministic given `seed`.
+    fn fit(
+        &self,
+        x: &FeatureMatrix,
+        graph: &LatticeGraph,
+        k: usize,
+        seed: u64,
+    ) -> Result<Labels>;
+}
+
+/// Validate common fit() preconditions shared by all implementations.
+pub(crate) fn check_fit_args(
+    x: &FeatureMatrix,
+    graph: &LatticeGraph,
+    k: usize,
+) -> Result<()> {
+    if x.rows != graph.n_vertices {
+        return Err(invalid(format!(
+            "x has {} rows but graph has {} vertices",
+            x.rows, graph.n_vertices
+        )));
+    }
+    if k == 0 || k > x.rows {
+        return Err(invalid(format!(
+            "k={k} out of range (p={})",
+            x.rows
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_validation() {
+        assert!(Labels::new(vec![0, 1, 0], 2).is_ok());
+        assert!(Labels::new(vec![0, 2], 2).is_err()); // out of range
+        assert!(Labels::new(vec![0, 0], 2).is_err()); // cluster 1 empty
+        assert!(Labels::new(vec![], 0).is_err());
+    }
+
+    #[test]
+    fn sizes_sum_to_p() {
+        let l = Labels::new(vec![0, 1, 1, 2, 2, 2], 3).unwrap();
+        assert_eq!(l.sizes(), vec![1, 2, 3]);
+        assert_eq!(l.sizes().iter().sum::<usize>(), l.p());
+    }
+}

@@ -1,0 +1,156 @@
+//! *Rand single* — the paper's §3 MST baseline: build the minimum
+//! spanning tree of the weighted lattice, then delete `k-1` random
+//! edges "while avoiding to create singletons (by a test on each
+//! incident node's degree)".
+
+use super::{check_fit_args, Clusterer, Labels};
+use crate::error::{invalid, Result};
+use crate::graph::{connected_components, kruskal_mst, Edge, LatticeGraph};
+use crate::rng::Rng;
+use crate::volume::FeatureMatrix;
+
+/// MST + random non-singleton-creating cuts.
+#[derive(Clone, Debug, Default)]
+pub struct RandSingle;
+
+impl Clusterer for RandSingle {
+    fn name(&self) -> &'static str {
+        "rand-single"
+    }
+
+    fn fit(
+        &self,
+        x: &FeatureMatrix,
+        graph: &LatticeGraph,
+        k: usize,
+        seed: u64,
+    ) -> Result<Labels> {
+        check_fit_args(x, graph, k)?;
+        let p = x.rows;
+        // weight edges with feature distances, build the MST
+        let weighted: Vec<Edge> = graph
+            .edges
+            .iter()
+            .map(|e| Edge::new(e.u, e.v, x.row_sqdist(e.u as usize, e.v as usize)))
+            .collect();
+        let tree = kruskal_mst(p, &weighted);
+        let base_components = p - tree.len();
+        if k < base_components {
+            return Err(invalid(format!(
+                "k={k} below the {base_components} mask components"
+            )));
+        }
+
+        // degree bookkeeping over the surviving forest
+        let mut degree = vec![0u32; p];
+        for e in &tree {
+            degree[e.u as usize] += 1;
+            degree[e.v as usize] += 1;
+        }
+        let mut alive = vec![true; tree.len()];
+        let mut rng = Rng::new(seed).derive(0x5EED);
+        let mut order: Vec<usize> = (0..tree.len()).collect();
+        rng.shuffle(&mut order);
+        let mut cuts_needed = k - base_components;
+        for &ei in &order {
+            if cuts_needed == 0 {
+                break;
+            }
+            let e = tree[ei];
+            // deleting an edge makes an incident node a singleton iff
+            // that node has forest-degree 1
+            if degree[e.u as usize] >= 2 && degree[e.v as usize] >= 2 {
+                alive[ei] = false;
+                degree[e.u as usize] -= 1;
+                degree[e.v as usize] -= 1;
+                cuts_needed -= 1;
+            }
+        }
+        if cuts_needed > 0 {
+            // fall back: allow singleton-creating cuts to honor k
+            for &ei in &order {
+                if cuts_needed == 0 {
+                    break;
+                }
+                if alive[ei] {
+                    alive[ei] = false;
+                    cuts_needed -= 1;
+                }
+            }
+        }
+        let surviving: Vec<Edge> = tree
+            .iter()
+            .zip(&alive)
+            .filter(|(_, &a)| a)
+            .map(|(e, _)| *e)
+            .collect();
+        let (labels, kk) = connected_components(p, &surviving);
+        Labels::new(labels, kk)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::LatticeGraph;
+    use crate::volume::SyntheticCube;
+
+    fn fixture(seed: u64) -> (FeatureMatrix, LatticeGraph) {
+        let ds = SyntheticCube::new([8, 8, 8], 4.0, 0.5).generate(3, seed);
+        let g = LatticeGraph::from_mask(ds.mask());
+        (ds.data().clone(), g)
+    }
+
+    #[test]
+    fn reaches_exactly_k() {
+        let (x, g) = fixture(1);
+        for &k in &[4usize, 16, 50] {
+            let l = RandSingle.fit(&x, &g, k, 11).unwrap();
+            assert_eq!(l.k, k);
+        }
+    }
+
+    #[test]
+    fn avoids_singletons_in_moderate_regime() {
+        let (x, g) = fixture(2);
+        let l = RandSingle.fit(&x, &g, 40, 3).unwrap();
+        let singles = l.sizes().iter().filter(|&&s| s == 1).count();
+        assert_eq!(singles, 0, "degree test must prevent singletons");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let (x, g) = fixture(3);
+        let a = RandSingle.fit(&x, &g, 30, 1).unwrap();
+        let b = RandSingle.fit(&x, &g, 30, 2).unwrap();
+        assert_ne!(a.labels, b.labels);
+        // but same seed reproduces
+        let c = RandSingle.fit(&x, &g, 30, 1).unwrap();
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn clusters_are_connected() {
+        let (x, g) = fixture(4);
+        let l = RandSingle.fit(&x, &g, 25, 5).unwrap();
+        for c in 0..l.k as u32 {
+            let members: Vec<usize> =
+                (0..l.p()).filter(|&i| l.labels[i] == c).collect();
+            let mut seen = vec![false; l.p()];
+            let mut stack = vec![members[0]];
+            seen[members[0]] = true;
+            let mut cnt = 0;
+            while let Some(v) = stack.pop() {
+                cnt += 1;
+                for &nb in g.neighbors(v) {
+                    let nb = nb as usize;
+                    if !seen[nb] && l.labels[nb] == c {
+                        seen[nb] = true;
+                        stack.push(nb);
+                    }
+                }
+            }
+            assert_eq!(cnt, members.len(), "cluster {c} disconnected");
+        }
+    }
+}

@@ -1,0 +1,410 @@
+//! Experiment configuration system: JSON-backed configs for every
+//! pipeline stage, with validated defaults matching the paper's
+//! settings scaled to this testbed (DESIGN.md §Scaling note).
+//! (Hand-rolled (de)serialization over [`crate::json`] — the offline
+//! build has no serde.)
+
+use crate::error::{invalid, Result};
+use crate::json::{self, Value};
+
+/// Which clustering / compression method to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// The paper's fast clustering (Alg. 1).
+    Fast,
+    /// MST + random non-singleton cuts.
+    RandSingle,
+    /// Exact single linkage (MST cut).
+    Single,
+    /// Connectivity-constrained average linkage.
+    Average,
+    /// Connectivity-constrained complete linkage.
+    Complete,
+    /// Connectivity-constrained Ward.
+    Ward,
+    /// Lloyd k-means (ignores the lattice).
+    Kmeans,
+    /// Sparse random projection (not a clustering).
+    RandomProjection,
+    /// No compression (raw voxels).
+    None,
+}
+
+impl Method {
+    /// Parse from the CLI names used throughout the paper harness.
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "fast" => Method::Fast,
+            "rand-single" | "rand_single" => Method::RandSingle,
+            "single" => Method::Single,
+            "average" => Method::Average,
+            "complete" => Method::Complete,
+            "ward" => Method::Ward,
+            "kmeans" | "k-means" => Method::Kmeans,
+            "rp" | "random-projection" => Method::RandomProjection,
+            "none" | "raw" => Method::None,
+            other => return Err(invalid(format!("unknown method '{other}'"))),
+        })
+    }
+
+    /// Canonical display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Fast => "fast",
+            Method::RandSingle => "rand-single",
+            Method::Single => "single",
+            Method::Average => "average",
+            Method::Complete => "complete",
+            Method::Ward => "ward",
+            Method::Kmeans => "kmeans",
+            Method::RandomProjection => "rp",
+            Method::None => "raw",
+        }
+    }
+
+    /// All clustering methods (Fig 2 / Fig 3 sweep order).
+    pub fn all_clusterings() -> &'static [Method] {
+        &[
+            Method::Fast,
+            Method::RandSingle,
+            Method::Single,
+            Method::Average,
+            Method::Complete,
+            Method::Ward,
+            Method::Kmeans,
+        ]
+    }
+}
+
+/// Synthetic data scale knobs shared by the experiment drivers.
+#[derive(Clone, Debug)]
+pub struct DataConfig {
+    /// Grid dimensions.
+    pub dims: [usize; 3],
+    /// Number of samples (subjects or timepoints, per driver).
+    pub n_samples: usize,
+    /// Signal smoothness (FWHM in voxels).
+    pub fwhm: f64,
+    /// White-noise std.
+    pub noise_sigma: f64,
+    /// Root seed.
+    pub seed: u64,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        DataConfig {
+            dims: [24, 28, 22],
+            n_samples: 100,
+            fwhm: 6.0,
+            noise_sigma: 1.0,
+            seed: 42,
+        }
+    }
+}
+
+/// Compression stage configuration.
+#[derive(Clone, Debug)]
+pub struct ReduceConfig {
+    /// Method to apply.
+    pub method: Method,
+    /// Number of output components; `0` means `p / ratio`.
+    pub k: usize,
+    /// Fallback compression ratio when `k == 0` (paper: `p/k ≈ 10`).
+    pub ratio: usize,
+    /// Seed for stochastic methods.
+    pub seed: u64,
+}
+
+impl Default for ReduceConfig {
+    fn default() -> Self {
+        ReduceConfig { method: Method::Fast, k: 0, ratio: 10, seed: 1 }
+    }
+}
+
+impl ReduceConfig {
+    /// Resolve `k` given the actual `p`.
+    pub fn resolve_k(&self, p: usize) -> usize {
+        if self.k > 0 {
+            self.k.min(p)
+        } else {
+            (p / self.ratio.max(1)).max(1)
+        }
+    }
+}
+
+/// Estimator stage configuration (logistic regression defaults).
+#[derive(Clone, Debug)]
+pub struct EstimatorConfig {
+    /// L2 regularization strength (lambda = 1/(n C)).
+    pub lambda: f64,
+    /// Gradient-norm convergence tolerance.
+    pub tol: f64,
+    /// Iteration budget.
+    pub max_iter: usize,
+    /// Number of CV folds where applicable.
+    pub cv_folds: usize,
+    /// Use the PJRT runtime artifacts when a matching shape exists.
+    pub use_runtime: bool,
+}
+
+impl Default for EstimatorConfig {
+    fn default() -> Self {
+        EstimatorConfig {
+            lambda: 1e-3,
+            tol: 1e-5,
+            max_iter: 500,
+            cv_folds: 10,
+            use_runtime: false,
+        }
+    }
+}
+
+/// A full experiment = data + compression + estimation.
+#[derive(Clone, Debug, Default)]
+pub struct ExperimentConfig {
+    /// Data generation.
+    pub data: DataConfig,
+    /// Compression stage.
+    pub reduce: ReduceConfig,
+    /// Estimation stage.
+    pub estimator: EstimatorConfig,
+}
+
+fn get_usize(v: &Value, key: &str, default: usize) -> Result<usize> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(x) => x
+            .as_usize()
+            .ok_or_else(|| invalid(format!("'{key}' must be a non-negative integer"))),
+    }
+}
+
+fn get_f64(v: &Value, key: &str, default: f64) -> Result<f64> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(x) => {
+            x.as_f64().ok_or_else(|| invalid(format!("'{key}' must be a number")))
+        }
+    }
+}
+
+fn get_u64(v: &Value, key: &str, default: u64) -> Result<u64> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(x) => {
+            x.as_u64().ok_or_else(|| invalid(format!("'{key}' must be an integer")))
+        }
+    }
+}
+
+impl DataConfig {
+    /// Parse from a JSON object (missing keys take defaults).
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let d = DataConfig::default();
+        let dims = match v.get("dims") {
+            None => d.dims,
+            Some(x) => {
+                let arr = x
+                    .as_arr()
+                    .ok_or_else(|| invalid("'dims' must be an array"))?;
+                if arr.len() != 3 {
+                    return Err(invalid("'dims' must have 3 entries"));
+                }
+                let mut out = [0usize; 3];
+                for (i, e) in arr.iter().enumerate() {
+                    out[i] = e
+                        .as_usize()
+                        .ok_or_else(|| invalid("'dims' entries must be ints"))?;
+                }
+                out
+            }
+        };
+        Ok(DataConfig {
+            dims,
+            n_samples: get_usize(v, "n_samples", d.n_samples)?,
+            fwhm: get_f64(v, "fwhm", d.fwhm)?,
+            noise_sigma: get_f64(v, "noise_sigma", d.noise_sigma)?,
+            seed: get_u64(v, "seed", d.seed)?,
+        })
+    }
+
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("dims", Value::nums(self.dims.iter().map(|&d| d as f64))),
+            ("n_samples", Value::Num(self.n_samples as f64)),
+            ("fwhm", Value::Num(self.fwhm)),
+            ("noise_sigma", Value::Num(self.noise_sigma)),
+            ("seed", Value::Num(self.seed as f64)),
+        ])
+    }
+}
+
+impl ReduceConfig {
+    /// Parse from a JSON object.
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let d = ReduceConfig::default();
+        let method = match v.get("method") {
+            None => d.method,
+            Some(x) => Method::parse(
+                x.as_str().ok_or_else(|| invalid("'method' must be a string"))?,
+            )?,
+        };
+        Ok(ReduceConfig {
+            method,
+            k: get_usize(v, "k", d.k)?,
+            ratio: get_usize(v, "ratio", d.ratio)?,
+            seed: get_u64(v, "seed", d.seed)?,
+        })
+    }
+
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("method", Value::Str(self.method.name().to_string())),
+            ("k", Value::Num(self.k as f64)),
+            ("ratio", Value::Num(self.ratio as f64)),
+            ("seed", Value::Num(self.seed as f64)),
+        ])
+    }
+}
+
+impl EstimatorConfig {
+    /// Parse from a JSON object.
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let d = EstimatorConfig::default();
+        Ok(EstimatorConfig {
+            lambda: get_f64(v, "lambda", d.lambda)?,
+            tol: get_f64(v, "tol", d.tol)?,
+            max_iter: get_usize(v, "max_iter", d.max_iter)?,
+            cv_folds: get_usize(v, "cv_folds", d.cv_folds)?,
+            use_runtime: match v.get("use_runtime") {
+                None => d.use_runtime,
+                Some(x) => x
+                    .as_bool()
+                    .ok_or_else(|| invalid("'use_runtime' must be bool"))?,
+            },
+        })
+    }
+
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("lambda", Value::Num(self.lambda)),
+            ("tol", Value::Num(self.tol)),
+            ("max_iter", Value::Num(self.max_iter as f64)),
+            ("cv_folds", Value::Num(self.cv_folds as f64)),
+            ("use_runtime", Value::Bool(self.use_runtime)),
+        ])
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse the full config (all sections optional).
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let cfg = ExperimentConfig {
+            data: match v.get("data") {
+                Some(d) => DataConfig::from_json(d)?,
+                None => DataConfig::default(),
+            },
+            reduce: match v.get("reduce") {
+                Some(r) => ReduceConfig::from_json(r)?,
+                None => ReduceConfig::default(),
+            },
+            estimator: match v.get("estimator") {
+                Some(e) => EstimatorConfig::from_json(e)?,
+                None => EstimatorConfig::default(),
+            },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("data", self.data.to_json()),
+            ("reduce", self.reduce.to_json()),
+            ("estimator", self.estimator.to_json()),
+        ])
+    }
+
+    /// Load from a JSON file.
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        ExperimentConfig::from_json(&json::parse(&text)?)
+    }
+
+    /// Check invariants the stages rely on.
+    pub fn validate(&self) -> Result<()> {
+        if self.data.dims.iter().any(|&d| d == 0) {
+            return Err(invalid("dims must be positive"));
+        }
+        if self.data.n_samples == 0 {
+            return Err(invalid("n_samples must be >= 1"));
+        }
+        if self.reduce.ratio == 0 && self.reduce.k == 0 {
+            return Err(invalid("either k or ratio must be set"));
+        }
+        if self.estimator.cv_folds < 2 {
+            return Err(invalid("cv_folds must be >= 2"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in Method::all_clusterings() {
+            assert_eq!(Method::parse(m.name()).unwrap(), *m);
+        }
+        assert_eq!(Method::parse("rp").unwrap(), Method::RandomProjection);
+        assert!(Method::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn resolve_k_ratio_and_explicit() {
+        let mut rc = ReduceConfig::default();
+        assert_eq!(rc.resolve_k(1000), 100);
+        rc.k = 64;
+        assert_eq!(rc.resolve_k(1000), 64);
+        assert_eq!(rc.resolve_k(32), 32); // clamped to p
+    }
+
+    #[test]
+    fn default_config_validates_and_roundtrips() {
+        let cfg = ExperimentConfig::default();
+        cfg.validate().unwrap();
+        let text = cfg.to_json().to_string_pretty();
+        let back =
+            ExperimentConfig::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.reduce.method, Method::Fast);
+        assert_eq!(back.data.dims, cfg.data.dims);
+        assert_eq!(back.estimator.cv_folds, cfg.estimator.cv_folds);
+    }
+
+    #[test]
+    fn partial_json_takes_defaults() {
+        let v = json::parse(r#"{"reduce": {"method": "ward", "k": 77}}"#)
+            .unwrap();
+        let cfg = ExperimentConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.reduce.method, Method::Ward);
+        assert_eq!(cfg.reduce.k, 77);
+        assert_eq!(cfg.data.n_samples, DataConfig::default().n_samples);
+    }
+
+    #[test]
+    fn bad_configs_rejected() {
+        let v = json::parse(r#"{"data": {"n_samples": 0}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"estimator": {"cv_folds": 1}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"reduce": {"method": "nope"}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&v).is_err());
+    }
+}

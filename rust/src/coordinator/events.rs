@@ -1,0 +1,174 @@
+//! Event log, metrics registry and stopwatch — the observability spine
+//! of the pipeline. Everything is `Mutex`-guarded and cheap; events are
+//! timestamped relative to log creation so reports are stable.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::json::Value;
+
+/// A timestamped event stream.
+pub struct EventLog {
+    start: Instant,
+    events: Mutex<Vec<(f64, String)>>,
+    verbose: bool,
+}
+
+impl EventLog {
+    /// New log; `verbose` additionally prints events to stderr.
+    pub fn new(verbose: bool) -> Self {
+        EventLog { start: Instant::now(), events: Mutex::new(Vec::new()), verbose }
+    }
+
+    /// Record (and optionally echo) an event.
+    pub fn emit(&self, msg: impl Into<String>) {
+        let t = self.start.elapsed().as_secs_f64();
+        let msg = msg.into();
+        if self.verbose {
+            eprintln!("[{t:9.3}s] {msg}");
+        }
+        self.events.lock().unwrap().push((t, msg));
+    }
+
+    /// Snapshot of all events.
+    pub fn snapshot(&self) -> Vec<(f64, String)> {
+        self.events.lock().unwrap().clone()
+    }
+}
+
+/// Counters + timing accumulators, keyed by name.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+    timers: Mutex<BTreeMap<String, (u64, f64)>>, // (count, total secs)
+}
+
+impl Metrics {
+    /// Fresh registry.
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    /// Increment a counter.
+    pub fn incr(&self, name: &str, by: u64) {
+        *self
+            .counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert(0) += by;
+    }
+
+    /// Record a timed observation.
+    pub fn observe(&self, name: &str, secs: f64) {
+        let mut t = self.timers.lock().unwrap();
+        let e = t.entry(name.to_string()).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += secs;
+    }
+
+    /// Counter value (0 if absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        *self.counters.lock().unwrap().get(name).unwrap_or(&0)
+    }
+
+    /// Total seconds accumulated under a timer.
+    pub fn total_secs(&self, name: &str) -> f64 {
+        self.timers.lock().unwrap().get(name).map(|e| e.1).unwrap_or(0.0)
+    }
+
+    /// Mean seconds per observation.
+    pub fn mean_secs(&self, name: &str) -> f64 {
+        self.timers
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|&(c, t)| if c > 0 { t / c as f64 } else { 0.0 })
+            .unwrap_or(0.0)
+    }
+
+    /// Serialize the whole registry to JSON (for reports).
+    pub fn to_json(&self) -> Value {
+        let counters = self.counters.lock().unwrap();
+        let timers = self.timers.lock().unwrap();
+        let mut obj = Vec::new();
+        for (k, &v) in counters.iter() {
+            obj.push((format!("counter.{k}"), Value::Num(v as f64)));
+        }
+        for (k, &(c, t)) in timers.iter() {
+            obj.push((format!("timer.{k}.count"), Value::Num(c as f64)));
+            obj.push((format!("timer.{k}.total_s"), Value::Num(t)));
+        }
+        Value::Obj(obj.into_iter().collect())
+    }
+}
+
+/// RAII-free stopwatch for explicit timing.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    /// Start.
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    /// Elapsed seconds.
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Stopwatch::start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_are_ordered_and_timestamped() {
+        let log = EventLog::new(false);
+        log.emit("a");
+        log.emit("b");
+        let evs = log.snapshot();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].1, "a");
+        assert!(evs[0].0 <= evs[1].0);
+    }
+
+    #[test]
+    fn counters_and_timers_accumulate() {
+        let m = Metrics::new();
+        m.incr("jobs", 3);
+        m.incr("jobs", 2);
+        assert_eq!(m.counter("jobs"), 5);
+        assert_eq!(m.counter("absent"), 0);
+        m.observe("step", 0.5);
+        m.observe("step", 1.5);
+        assert!((m.total_secs("step") - 2.0).abs() < 1e-12);
+        assert!((m.mean_secs("step") - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_export_contains_all_keys() {
+        let m = Metrics::new();
+        m.incr("x", 1);
+        m.observe("y", 0.25);
+        let v = m.to_json();
+        assert!(v.get("counter.x").is_some());
+        assert!(v.get("timer.y.count").is_some());
+        assert!(v.get("timer.y.total_s").is_some());
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        let a = sw.secs();
+        let b = sw.secs();
+        assert!(b >= a);
+    }
+}

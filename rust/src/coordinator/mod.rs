@@ -1,0 +1,24 @@
+//! The L3 coordinator: experiment orchestration.
+//!
+//! The paper's contribution is a data-reduction substrate, so the
+//! coordinator is a *streaming compression pipeline*: subjects flow
+//! through generate → cluster → reduce → estimate stages over a
+//! bounded-queue worker pool with backpressure, a metrics registry and
+//! an event log. The CLI (`rust/src/main.rs`) and every figure driver
+//! (`bench_harness`) sit on top of this module.
+//!
+//! (The offline build has no tokio; the runtime is a hand-rolled
+//! thread + bounded-channel pool — same semantics, zero dependencies.)
+
+mod events;
+pub mod pipeline;
+mod queue;
+mod worker;
+
+pub use events::{EventLog, Metrics, Stopwatch};
+pub use pipeline::{
+    fit_clustering, make_reducer, run_decoding_pipeline, DecodingReport,
+    PipelineBuilder, StageReport,
+};
+pub use queue::BoundedQueue;
+pub use worker::WorkerPool;

@@ -1,0 +1,171 @@
+//! A bounded MPMC queue (Mutex + Condvar) providing the backpressure
+//! between pipeline stages: producers block when the queue is full,
+//! consumers when it is empty, and closing wakes everyone.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Inner<T> {
+    queue: VecDeque<T>,
+    closed: bool,
+}
+
+/// Shared bounded queue handle (clone to share).
+pub struct BoundedQueue<T> {
+    inner: Arc<(Mutex<Inner<T>>, Condvar, Condvar)>,
+    capacity: usize,
+}
+
+impl<T> Clone for BoundedQueue<T> {
+    fn clone(&self) -> Self {
+        BoundedQueue { inner: self.inner.clone(), capacity: self.capacity }
+    }
+}
+
+impl<T> BoundedQueue<T> {
+    /// Create with the given capacity (>= 1).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "capacity must be >= 1");
+        BoundedQueue {
+            inner: Arc::new((
+                Mutex::new(Inner { queue: VecDeque::new(), closed: false }),
+                Condvar::new(), // not-full
+                Condvar::new(), // not-empty
+            )),
+            capacity,
+        }
+    }
+
+    /// Blocking push; returns `false` if the queue was closed.
+    pub fn push(&self, item: T) -> bool {
+        let (lock, not_full, not_empty) = &*self.inner;
+        let mut g = lock.lock().unwrap();
+        while g.queue.len() >= self.capacity && !g.closed {
+            g = not_full.wait(g).unwrap();
+        }
+        if g.closed {
+            return false;
+        }
+        g.queue.push_back(item);
+        not_empty.notify_one();
+        true
+    }
+
+    /// Blocking pop; `None` when the queue is closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let (lock, not_full, not_empty) = &*self.inner;
+        let mut g = lock.lock().unwrap();
+        loop {
+            if let Some(item) = g.queue.pop_front() {
+                not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Close the queue: producers fail fast, consumers drain then stop.
+    pub fn close(&self) {
+        let (lock, not_full, not_empty) = &*self.inner;
+        let mut g = lock.lock().unwrap();
+        g.closed = true;
+        not_full.notify_all();
+        not_empty.notify_all();
+    }
+
+    /// Current occupancy (racy, for metrics only).
+    pub fn len(&self) -> usize {
+        self.inner.0.lock().unwrap().queue.len()
+    }
+
+    /// True when empty (racy, for metrics only).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let q = BoundedQueue::new(4);
+        q.push(1);
+        q.push(2);
+        q.push(3);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = BoundedQueue::new(4);
+        q.push(7);
+        q.close();
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), None);
+        assert!(!q.push(8), "push after close must fail");
+    }
+
+    #[test]
+    fn backpressure_blocks_producer() {
+        let q = BoundedQueue::new(1);
+        q.push(0);
+        let q2 = q.clone();
+        let handle = thread::spawn(move || {
+            // this blocks until the consumer pops
+            q2.push(1);
+            true
+        });
+        thread::sleep(Duration::from_millis(50));
+        assert!(!handle.is_finished(), "producer should be blocked");
+        assert_eq!(q.pop(), Some(0));
+        assert!(handle.join().unwrap());
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_once() {
+        let q: BoundedQueue<usize> = BoundedQueue::new(8);
+        let total = 1000usize;
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = q.clone();
+                thread::spawn(move || {
+                    for i in 0..(total / 4) {
+                        q.push(p * (total / 4) + i);
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = q.clone();
+                thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(v) = q.pop() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<usize> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..total).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,119 @@
+//! A fixed-size worker pool executing boxed jobs from a bounded queue —
+//! the execution substrate of the pipeline. Results come back over a
+//! second queue tagged with the job id so callers can reassemble order.
+
+use std::thread::JoinHandle;
+
+use super::queue::BoundedQueue;
+
+type Job = Box<dyn FnOnce() -> Box<dyn std::any::Any + Send> + Send>;
+
+/// Fixed pool of worker threads.
+pub struct WorkerPool {
+    jobs: BoundedQueue<(usize, Job)>,
+    results: BoundedQueue<(usize, Box<dyn std::any::Any + Send>)>,
+    handles: Vec<JoinHandle<()>>,
+    submitted: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `n_workers` threads with a job queue of depth
+    /// `queue_depth` (the backpressure bound).
+    pub fn new(n_workers: usize, queue_depth: usize) -> Self {
+        let jobs: BoundedQueue<(usize, Job)> =
+            BoundedQueue::new(queue_depth.max(1));
+        let results = BoundedQueue::new(usize::MAX / 2); // unbounded-ish
+        let handles = (0..n_workers.max(1))
+            .map(|_| {
+                let jobs = jobs.clone();
+                let results = results.clone();
+                std::thread::spawn(move || {
+                    while let Some((id, job)) = jobs.pop() {
+                        let out = job();
+                        results.push((id, out));
+                    }
+                })
+            })
+            .collect();
+        WorkerPool { jobs, results, handles, submitted: 0 }
+    }
+
+    /// Submit a job returning any `Send` value; blocks when the queue
+    /// is at depth (backpressure). Returns the job id.
+    pub fn submit<R: Send + 'static>(
+        &mut self,
+        job: impl FnOnce() -> R + Send + 'static,
+    ) -> usize {
+        let id = self.submitted;
+        self.submitted += 1;
+        self.jobs.push((id, Box::new(move || Box::new(job()) as _)));
+        id
+    }
+
+    /// Drain all results, returning them ordered by job id. Consumes
+    /// the pool (joins the workers).
+    pub fn finish<R: 'static>(self) -> Vec<R> {
+        self.jobs.close();
+        for h in self.handles {
+            h.join().expect("worker panicked");
+        }
+        self.results.close();
+        let mut tagged: Vec<(usize, R)> = Vec::with_capacity(self.submitted);
+        while let Some((id, any)) = self.results.pop() {
+            let boxed = any
+                .downcast::<R>()
+                .expect("finish::<R> called with wrong result type");
+            tagged.push((id, *boxed));
+        }
+        tagged.sort_by_key(|(id, _)| *id);
+        assert_eq!(
+            tagged.len(),
+            self.submitted,
+            "lost results: got {} of {}",
+            tagged.len(),
+            self.submitted
+        );
+        tagged.into_iter().map(|(_, r)| r).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_jobs_and_orders_results() {
+        let mut pool = WorkerPool::new(4, 2);
+        for i in 0..50usize {
+            pool.submit(move || i * i);
+        }
+        let results: Vec<usize> = pool.finish();
+        assert_eq!(results.len(), 50);
+        for (i, &r) in results.iter().enumerate() {
+            assert_eq!(r, i * i);
+        }
+    }
+
+    #[test]
+    fn single_worker_sequential() {
+        let mut pool = WorkerPool::new(1, 1);
+        for i in 0..10usize {
+            pool.submit(move || i + 100);
+        }
+        let results: Vec<usize> = pool.finish();
+        assert_eq!(results, (100..110).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn heavy_results_survive() {
+        let mut pool = WorkerPool::new(2, 4);
+        for i in 0..8usize {
+            pool.submit(move || vec![i as f32; 1000]);
+        }
+        let results: Vec<Vec<f32>> = pool.finish();
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.len(), 1000);
+            assert_eq!(r[0], i as f32);
+        }
+    }
+}

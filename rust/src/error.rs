@@ -1,0 +1,88 @@
+//! Crate-wide error type.
+//!
+//! A small hand-rolled enum (instead of `thiserror`) keeps the
+//! dependency surface minimal; everything converts into
+//! [`enum@Error`] via `From` so `?` works across module boundaries and
+//! the `xla`/`serde_json`/`std::io` seams.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All failure modes surfaced by the library.
+#[derive(Debug)]
+pub enum Error {
+    /// Invalid argument or configuration (message explains which).
+    Invalid(String),
+    /// Shape mismatch in a linear-algebra or reduction operation.
+    Shape(String),
+    /// A requested artifact is missing from the manifest / disk.
+    ArtifactMissing(String),
+    /// Underlying XLA/PJRT failure.
+    Xla(String),
+    /// Filesystem / serialization failures.
+    Io(std::io::Error),
+    /// An estimator failed to converge within its iteration budget.
+    NoConvergence { what: &'static str, iters: usize },
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Invalid(m) => write!(f, "invalid argument: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::ArtifactMissing(m) => write!(f, "artifact missing: {m}"),
+            Error::Xla(m) => write!(f, "xla/pjrt error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::NoConvergence { what, iters } => {
+                write!(f, "{what} did not converge after {iters} iterations")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Shorthand constructor used throughout the crate.
+pub fn invalid(msg: impl Into<String>) -> Error {
+    Error::Invalid(msg.into())
+}
+
+/// Shorthand shape-error constructor.
+pub fn shape(msg: impl Into<String>) -> Error {
+    Error::Shape(msg.into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = invalid("k must be >= 1");
+        assert!(e.to_string().contains("k must be >= 1"));
+        let e = Error::NoConvergence { what: "fastica", iters: 200 };
+        assert!(e.to_string().contains("fastica"));
+        assert!(e.to_string().contains("200"));
+    }
+
+    #[test]
+    fn io_converts() {
+        let ioe: Error =
+            std::io::Error::new(std::io::ErrorKind::NotFound, "x").into();
+        assert!(matches!(ioe, Error::Io(_)));
+    }
+}

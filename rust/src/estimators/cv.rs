@@ -1,0 +1,126 @@
+//! K-fold cross-validation machinery (shuffled, seeded) — Fig 6's
+//! 10-fold protocol, and the train/test split discipline Fig 4 uses to
+//! avoid the learn-and-evaluate-on-the-same-data bias the paper calls
+//! out explicitly.
+
+use crate::rng::Rng;
+
+/// One CV split: disjoint train/test index sets.
+#[derive(Clone, Debug)]
+pub struct Fold {
+    /// Training sample indices.
+    pub train: Vec<usize>,
+    /// Held-out sample indices.
+    pub test: Vec<usize>,
+}
+
+/// Shuffled K-fold split of `n` samples.
+pub fn kfold(n: usize, folds: usize, seed: u64) -> Vec<Fold> {
+    assert!(folds >= 2, "need at least 2 folds");
+    assert!(n >= folds, "more folds than samples");
+    let mut rng = Rng::new(seed).derive(0xCF);
+    let perm = rng.permutation(n);
+    let mut out = Vec::with_capacity(folds);
+    for f in 0..folds {
+        // fold f takes every folds-th element — balanced sizes
+        let test: Vec<usize> =
+            perm.iter().skip(f).step_by(folds).copied().collect();
+        let in_test: std::collections::HashSet<usize> =
+            test.iter().copied().collect();
+        let train: Vec<usize> =
+            (0..n).filter(|i| !in_test.contains(i)).collect();
+        out.push(Fold { train, test });
+    }
+    out
+}
+
+/// Stratified K-fold: class proportions preserved per fold (labels in
+/// {0,1}); matches sklearn's default for classification CV.
+pub fn stratified_kfold(
+    labels: &[u8],
+    folds: usize,
+    seed: u64,
+) -> Vec<Fold> {
+    assert!(folds >= 2, "need at least 2 folds");
+    let n = labels.len();
+    let mut rng = Rng::new(seed).derive(0x5CF);
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(), Vec::new()];
+    for (i, &l) in labels.iter().enumerate() {
+        by_class[(l != 0) as usize].push(i);
+    }
+    for c in &mut by_class {
+        rng.shuffle(c);
+    }
+    let mut test_sets: Vec<Vec<usize>> = vec![Vec::new(); folds];
+    for c in &by_class {
+        for (j, &idx) in c.iter().enumerate() {
+            test_sets[j % folds].push(idx);
+        }
+    }
+    (0..folds)
+        .map(|f| {
+            let in_test: std::collections::HashSet<usize> =
+                test_sets[f].iter().copied().collect();
+            Fold {
+                train: (0..n).filter(|i| !in_test.contains(i)).collect(),
+                test: test_sets[f].clone(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn folds_partition_the_samples() {
+        let folds = kfold(53, 10, 1);
+        assert_eq!(folds.len(), 10);
+        let mut seen = vec![0usize; 53];
+        for f in &folds {
+            for &i in &f.test {
+                seen[i] += 1;
+            }
+            // train/test disjoint, cover everything
+            let mut all: Vec<usize> =
+                f.train.iter().chain(&f.test).copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..53).collect::<Vec<_>>());
+        }
+        assert!(seen.iter().all(|&c| c == 1), "each sample in exactly one test fold");
+    }
+
+    #[test]
+    fn fold_sizes_balanced() {
+        let folds = kfold(100, 10, 2);
+        for f in &folds {
+            assert_eq!(f.test.len(), 10);
+            assert_eq!(f.train.len(), 90);
+        }
+    }
+
+    #[test]
+    fn seed_changes_split() {
+        let a = kfold(40, 5, 1);
+        let b = kfold(40, 5, 2);
+        assert_ne!(a[0].test, b[0].test);
+        let c = kfold(40, 5, 1);
+        assert_eq!(a[0].test, c[0].test);
+    }
+
+    #[test]
+    fn stratified_preserves_proportions() {
+        // 30 zeros, 60 ones
+        let mut labels = vec![0u8; 30];
+        labels.extend(vec![1u8; 60]);
+        let folds = stratified_kfold(&labels, 5, 3);
+        for f in &folds {
+            let ones =
+                f.test.iter().filter(|&&i| labels[i] == 1).count();
+            let zeros = f.test.len() - ones;
+            assert_eq!(zeros, 6, "fold zeros {zeros}");
+            assert_eq!(ones, 12, "fold ones {ones}");
+        }
+    }
+}

@@ -1,0 +1,244 @@
+//! FastICA (Hyvärinen) with the logcosh contrast and symmetric
+//! decorrelation — the paper's Fig 7 workload, used to show that
+//! cluster compression preserves the higher-order statistical structure
+//! ICA depends on while random projections destroy it.
+
+use crate::error::{invalid, Error, Result};
+use crate::linalg::{sym_eigen, Mat};
+use crate::rng::Rng;
+use crate::volume::FeatureMatrix;
+
+use super::whiten::whiten_samples;
+
+/// FastICA hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct FastIca {
+    /// Number of components to extract.
+    pub n_components: usize,
+    /// Convergence tolerance on the unmixing-matrix update.
+    pub tol: f64,
+    /// Iteration budget.
+    pub max_iter: usize,
+    /// Seed for the random orthogonal init.
+    pub seed: u64,
+}
+
+impl Default for FastIca {
+    fn default() -> Self {
+        FastIca { n_components: 10, tol: 1e-4, max_iter: 200, seed: 0 }
+    }
+}
+
+/// Fitted ICA decomposition.
+#[derive(Clone, Debug)]
+pub struct IcaResult {
+    /// `(q, m)` independent component maps (rows, unit variance).
+    pub components: FeatureMatrix,
+    /// Iterations used.
+    pub iters: usize,
+    /// Final update delta (convergence witness).
+    pub delta: f64,
+}
+
+/// Symmetric decorrelation: `W <- (W W^T)^{-1/2} W`.
+fn sym_decorrelate(w: &Mat) -> Mat {
+    let wwt = {
+        // W W^T via gram of W^T
+        w.t().gram()
+    };
+    let (vals, vecs) = sym_eigen(&wwt);
+    let q = w.rows;
+    // (W W^T)^(-1/2) = V diag(1/sqrt(vals)) V^T
+    let mut inv_sqrt = Mat::zeros(q, q);
+    for a in 0..q {
+        for b in 0..q {
+            let mut s = 0.0;
+            for c in 0..q {
+                s += vecs.get(a, c) * vecs.get(b, c)
+                    / vals[c].max(1e-12).sqrt();
+            }
+            inv_sqrt.set(a, b, s);
+        }
+    }
+    inv_sqrt.matmul(w)
+}
+
+impl FastIca {
+    /// Fit on `(t, m)` sample-major data (t observations over m
+    /// features). Returns `q = n_components` spatial maps `(q, m)`.
+    pub fn fit(&self, x: &FeatureMatrix) -> Result<IcaResult> {
+        let q = self.n_components;
+        if q == 0 || q > x.rows {
+            return Err(invalid(format!(
+                "ica: n_components={q} out of range (t={})",
+                x.rows
+            )));
+        }
+        let wh = whiten_samples(x, q)?;
+        let z = wh.z; // (q, m) whitened rows
+        let m = z.cols;
+
+        // random orthogonal init
+        let mut rng = Rng::new(self.seed).derive(0x1CA);
+        let mut w = Mat::randn(q, q, &mut rng);
+        w = sym_decorrelate(&w);
+
+        let mut delta = f64::INFINITY;
+        let mut iters = 0usize;
+        while iters < self.max_iter && delta > self.tol {
+            iters += 1;
+            // s = W z  (q x m current source estimates)
+            // logcosh: g(u) = tanh(u), g'(u) = 1 - tanh(u)^2
+            let mut w_new = Mat::zeros(q, q);
+            for a in 0..q {
+                // compute s_a = sum_b W[a,b] z_b  row by row
+                let mut gmean = 0.0f64; // E[g'(s_a)]
+                let mut acc = vec![0.0f64; q]; // E[z * g(s_a)]
+                for c in 0..m {
+                    let mut s = 0.0f64;
+                    for b in 0..q {
+                        s += w.get(a, b) * z.get(b, c) as f64;
+                    }
+                    let t = s.tanh();
+                    gmean += 1.0 - t * t;
+                    for b in 0..q {
+                        acc[b] += z.get(b, c) as f64 * t;
+                    }
+                }
+                gmean /= m as f64;
+                for b in 0..q {
+                    w_new.set(a, b, acc[b] / m as f64 - gmean * w.get(a, b));
+                }
+            }
+            let w_next = sym_decorrelate(&w_new);
+            // convergence: max |1 - |diag(W_next W^T)||
+            delta = 0.0;
+            for a in 0..q {
+                let mut d = 0.0;
+                for b in 0..q {
+                    d += w_next.get(a, b) * w.get(a, b);
+                }
+                delta = delta.max((d.abs() - 1.0).abs());
+            }
+            w = w_next;
+        }
+        if delta > self.tol && iters >= self.max_iter {
+            // FastICA failing to fully converge is routine on real
+            // data; the paper reports components anyway. We only error
+            // when the update exploded.
+            if !delta.is_finite() {
+                return Err(Error::NoConvergence {
+                    what: "fastica",
+                    iters,
+                });
+            }
+        }
+        // components = W z
+        let mut comps = FeatureMatrix::zeros(q, m);
+        for a in 0..q {
+            for c in 0..m {
+                let mut s = 0.0f64;
+                for b in 0..q {
+                    s += w.get(a, b) * z.get(b, c) as f64;
+                }
+                comps.set(a, c, s as f32);
+            }
+        }
+        Ok(IcaResult { components: comps, iters, delta })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::{abs_corr_matrix, hungarian_max};
+
+    /// Mix super-Gaussian sources and check recovery.
+    fn make_mixture(
+        q: usize,
+        t: usize,
+        m: usize,
+        seed: u64,
+    ) -> (FeatureMatrix, FeatureMatrix) {
+        let mut rng = Rng::new(seed);
+        // sparse/super-Gaussian source maps
+        let mut sources = FeatureMatrix::zeros(q, m);
+        for a in 0..q {
+            for c in 0..m {
+                let g = rng.normal32();
+                sources.set(a, c, if g.abs() > 1.5 { g * 3.0 } else { 0.1 * g });
+            }
+        }
+        // random mixing (t x q)
+        let mut x = FeatureMatrix::zeros(t, m);
+        for i in 0..t {
+            let coef: Vec<f32> = (0..q).map(|_| rng.normal32()).collect();
+            for c in 0..m {
+                let mut s = 0.0f32;
+                for a in 0..q {
+                    s += coef[a] * sources.get(a, c);
+                }
+                x.set(i, c, s + 0.01 * rng.normal32());
+            }
+        }
+        (sources, x)
+    }
+
+    fn mean_matched_corr(a: &FeatureMatrix, b: &FeatureMatrix) -> f64 {
+        let q = a.rows;
+        let score = abs_corr_matrix(a, b);
+        let asn = hungarian_max(&score, q);
+        (0..q).map(|i| score[i * q + asn[i]]).sum::<f64>() / q as f64
+    }
+
+    #[test]
+    fn recovers_super_gaussian_sources() {
+        let q = 4;
+        let (sources, x) = make_mixture(q, 12, 4000, 7);
+        let ica = FastIca { n_components: q, seed: 1, ..Default::default() };
+        let r = ica.fit(&x).unwrap();
+        let corr = mean_matched_corr(&r.components, &sources);
+        assert!(corr > 0.9, "mean matched |corr| {corr}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (_, x) = make_mixture(3, 10, 1500, 8);
+        let ica = FastIca { n_components: 3, seed: 5, ..Default::default() };
+        let a = ica.fit(&x).unwrap();
+        let b = ica.fit(&x).unwrap();
+        assert_eq!(a.components.data, b.components.data);
+    }
+
+    #[test]
+    fn components_are_decorrelated() {
+        let (_, x) = make_mixture(3, 10, 2000, 9);
+        let ica = FastIca { n_components: 3, seed: 2, ..Default::default() };
+        let r = ica.fit(&x).unwrap();
+        let m = r.components.cols as f64;
+        for i in 0..3 {
+            for j in (i + 1)..3 {
+                let dot: f64 = r
+                    .components
+                    .row(i)
+                    .iter()
+                    .zip(r.components.row(j))
+                    .map(|(&a, &b)| a as f64 * b as f64)
+                    .sum::<f64>()
+                    / m;
+                assert!(dot.abs() < 0.1, "components {i},{j} corr {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_component_count() {
+        let (_, x) = make_mixture(2, 6, 500, 10);
+        assert!(FastIca { n_components: 0, ..Default::default() }
+            .fit(&x)
+            .is_err());
+        assert!(FastIca { n_components: 7, ..Default::default() }
+            .fit(&x)
+            .is_err());
+    }
+}

@@ -1,0 +1,483 @@
+//! ℓ2-regularized logistic regression — the paper's Fig 6 workhorse.
+//!
+//! Solver: full-batch gradient descent with Armijo backtracking line
+//! search and Nesterov momentum restarts. Convergence is controlled by
+//! the gradient norm `tol`, the knob Fig 6 sweeps to trade accuracy vs
+//! compute time. Loss/gradient evaluations go through one of two
+//! backends:
+//!
+//! * [`LogregBackend::Native`] — a cache-friendly rust evaluation;
+//! * [`LogregBackend::Runtime`] — the AOT-compiled `logreg_step_*` HLO
+//!   artifact executed via PJRT (padding to the artifact shape is exact
+//!   thanks to the sample-weight contract, see python/compile/model.py).
+//!
+//! The intercept is unregularized (sklearn convention).
+
+use std::sync::Arc;
+
+use crate::error::{invalid, Result};
+use crate::runtime::Runtime;
+use crate::volume::FeatureMatrix;
+
+/// Which loss/gradient evaluation path to use.
+#[derive(Clone)]
+pub enum LogregBackend {
+    /// Pure-rust evaluation.
+    Native,
+    /// PJRT execution of an AOT artifact (shared runtime handle).
+    Runtime(Arc<Runtime>),
+}
+
+impl std::fmt::Debug for LogregBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LogregBackend::Native => write!(f, "Native"),
+            LogregBackend::Runtime(_) => write!(f, "Runtime(PJRT)"),
+        }
+    }
+}
+
+/// Hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct LogisticRegression {
+    /// L2 penalty on the weights (not the intercept).
+    pub lambda: f64,
+    /// Gradient-infinity-norm stopping tolerance.
+    pub tol: f64,
+    /// Iteration budget.
+    pub max_iter: usize,
+    /// Evaluation backend.
+    pub backend: LogregBackend,
+}
+
+impl Default for LogisticRegression {
+    fn default() -> Self {
+        LogisticRegression {
+            lambda: 1e-3,
+            tol: 1e-5,
+            max_iter: 500,
+            backend: LogregBackend::Native,
+        }
+    }
+}
+
+/// A fitted model.
+#[derive(Clone, Debug)]
+pub struct LogregFit {
+    /// Feature weights (length k).
+    pub w: Vec<f32>,
+    /// Intercept.
+    pub b: f32,
+    /// Final objective value.
+    pub loss: f64,
+    /// Iterations used.
+    pub iters: usize,
+    /// Loss/grad evaluations (line search included).
+    pub evals: usize,
+    /// Final gradient infinity norm.
+    pub grad_norm: f64,
+}
+
+#[inline]
+fn sigmoid(z: f32) -> f32 {
+    0.5 * ((0.5 * z).tanh() + 1.0)
+}
+
+/// One native loss+gradient evaluation. `x` is `(n, k)` sample-major.
+fn native_step(
+    x: &FeatureMatrix,
+    y: &[f32],
+    w: &[f32],
+    b: f32,
+    lambda: f64,
+) -> (f64, Vec<f32>, f32) {
+    let n = x.rows;
+    let k = x.cols;
+    let mut loss = 0.0f64;
+    let mut gw = vec![0.0f32; k];
+    let mut gb = 0.0f32;
+    for i in 0..n {
+        let row = x.row(i);
+        let mut z = b;
+        for j in 0..k {
+            z += row[j] * w[j];
+        }
+        // stable NLL: log(1 + e^z) - y z
+        let zl = z as f64;
+        loss += if zl > 0.0 {
+            zl + (1.0 + (-zl).exp()).ln()
+        } else {
+            (1.0 + zl.exp()).ln()
+        } - (y[i] as f64) * zl;
+        let r = sigmoid(z) - y[i];
+        gb += r;
+        for j in 0..k {
+            gw[j] += r * row[j];
+        }
+    }
+    let nf = n as f32;
+    loss /= n as f64;
+    let mut wnorm2 = 0.0f64;
+    for j in 0..k {
+        gw[j] = gw[j] / nf + (lambda as f32) * w[j];
+        wnorm2 += (w[j] as f64).powi(2);
+    }
+    gb /= nf;
+    loss += 0.5 * lambda * wnorm2;
+    (loss, gw, gb)
+}
+
+impl LogisticRegression {
+    /// Evaluate loss + gradient through the configured backend.
+    fn step(
+        &self,
+        x: &FeatureMatrix,
+        y: &[f32],
+        w: &[f32],
+        b: f32,
+    ) -> Result<(f64, Vec<f32>, f32)> {
+        match &self.backend {
+            LogregBackend::Native => {
+                Ok(native_step(x, y, w, b, self.lambda))
+            }
+            LogregBackend::Runtime(rt) => {
+                self.runtime_step(rt, x, y, w, b)
+            }
+        }
+    }
+
+    /// PJRT path: pad `(n, k)` up to the artifact shape `(N, K)`;
+    /// padded rows carry zero sample weight, padded features zero data
+    /// and zero init weight, so results are bit-equal in exact
+    /// arithmetic to the unpadded problem.
+    fn runtime_step(
+        &self,
+        rt: &Runtime,
+        x: &FeatureMatrix,
+        y: &[f32],
+        w: &[f32],
+        b: f32,
+    ) -> Result<(f64, Vec<f32>, f32)> {
+        let (n, k) = (x.rows, x.cols);
+        let (name, na, ka) = rt
+            .manifest()
+            .find_logreg_shape(n, k)
+            .ok_or_else(|| {
+                invalid(format!("no logreg artifact fits n={n}, k={k}"))
+            })?;
+        let exe = rt.executable(&name)?;
+        // pad X
+        let mut xp = vec![0.0f32; na * ka];
+        for i in 0..n {
+            xp[i * ka..i * ka + k].copy_from_slice(x.row(i));
+        }
+        let mut yp = vec![0.0f32; na];
+        yp[..n].copy_from_slice(y);
+        let mut swp = vec![0.0f32; na];
+        for s in swp.iter_mut().take(n) {
+            *s = 1.0;
+        }
+        let mut wp = vec![0.0f32; ka];
+        wp[..k].copy_from_slice(w);
+        let out = exe.run(&[
+            xp.into(),
+            yp.into(),
+            swp.into(),
+            wp.into(),
+            vec![b].into(),
+            vec![self.lambda as f32].into(),
+        ])?;
+        let loss = out[0].as_f32()?[0] as f64;
+        let gw = out[1].as_f32()?[..k].to_vec();
+        let gb = out[2].as_f32()?[0];
+        Ok((loss, gw, gb))
+    }
+
+    /// Fused-GD fit through the `logreg_gd64_*` artifact: 64 plain GD
+    /// steps run inside ONE XLA executable per PJRT call, amortizing
+    /// the dispatch overhead that dominates the per-eval
+    /// [`LogregBackend::Runtime`] path (§Perf). Learning-rate control
+    /// happens at chunk granularity: a chunk that fails to improve the
+    /// loss is discarded and retried with half the rate.
+    pub fn fit_fused(
+        &self,
+        rt: &Runtime,
+        x: &FeatureMatrix,
+        y: &[f32],
+    ) -> Result<LogregFit> {
+        let (n, k) = (x.rows, x.cols);
+        if n != y.len() || n == 0 {
+            return Err(invalid("logreg: bad training set"));
+        }
+        let (name, na, ka) =
+            rt.manifest().find_logreg_gd_shape(n, k).ok_or_else(|| {
+                invalid(format!("no logreg_gd artifact fits n={n}, k={k}"))
+            })?;
+        let exe = rt.executable(&name)?;
+        // pad once and upload to the device once: X/y/sw are
+        // loop-invariant across chunks, so the 4·na·ka-byte copy
+        // happens a single time instead of per chunk (§Perf).
+        let mut xp = vec![0.0f32; na * ka];
+        for i in 0..n {
+            xp[i * ka..i * ka + k].copy_from_slice(x.row(i));
+        }
+        let mut yp = vec![0.0f32; na];
+        yp[..n].copy_from_slice(y);
+        let mut swp = vec![0.0f32; na];
+        for s in swp.iter_mut().take(n) {
+            *s = 1.0;
+        }
+        let xb = rt.upload_f32(&xp, &[na, ka])?;
+        let yb = rt.upload_f32(&yp, &[na])?;
+        let swb = rt.upload_f32(&swp, &[na])?;
+        let lamb = rt.upload_f32(&[self.lambda as f32], &[])?;
+
+        let mut w = vec![0.0f32; ka];
+        let mut b = 0.0f32;
+        let mut lr = 0.5f32;
+        let mut loss = f64::INFINITY;
+        let mut gnorm = f64::INFINITY;
+        let mut evals = 0usize;
+        let mut iters = 0usize;
+        // each chunk = 64 GD steps; budget in chunks
+        let max_chunks = (self.max_iter / 16).max(2);
+        for _ in 0..max_chunks {
+            if gnorm <= self.tol {
+                break;
+            }
+            let wb = rt.upload_f32(&w, &[ka])?;
+            let bb = rt.upload_f32(&[b], &[])?;
+            let lrb = rt.upload_f32(&[lr], &[])?;
+            let out = exe
+                .run_buffers(&[&xb, &yb, &swb, &wb, &bb, &lamb, &lrb])?;
+            evals += 1;
+            let new_loss = out[0].as_f32()?[0] as f64;
+            if new_loss.is_finite() && new_loss <= loss {
+                w = out[1].as_f32()?.to_vec();
+                b = out[2].as_f32()?[0];
+                let gw = out[3].as_f32()?;
+                let gb = out[4].as_f32()?[0];
+                gnorm = gw
+                    .iter()
+                    .map(|g| g.abs() as f64)
+                    .fold(gb.abs() as f64, f64::max);
+                loss = new_loss;
+                iters += 64;
+                lr = (lr * 1.25).min(8.0);
+            } else {
+                lr *= 0.5;
+                if lr < 1e-9 {
+                    break;
+                }
+            }
+        }
+        Ok(LogregFit {
+            w: w[..k].to_vec(),
+            b,
+            loss,
+            iters,
+            evals,
+            grad_norm: gnorm,
+        })
+    }
+
+    /// Fit on `(n, k)` sample-major features and {0,1} labels.
+    pub fn fit(&self, x: &FeatureMatrix, y: &[f32]) -> Result<LogregFit> {
+        if x.rows != y.len() {
+            return Err(invalid(format!(
+                "logreg: {} samples but {} labels",
+                x.rows,
+                y.len()
+            )));
+        }
+        if x.rows == 0 {
+            return Err(invalid("logreg: empty training set"));
+        }
+        let k = x.cols;
+        let mut w = vec![0.0f32; k];
+        let mut b = 0.0f32;
+        let mut evals = 0usize;
+        let (mut loss, mut gw, mut gb) = self.step(x, y, &w, b)?;
+        evals += 1;
+        let mut lr = 1.0f32;
+        let mut iters = 0usize;
+        let mut gnorm = grad_inf_norm(&gw, gb);
+        while iters < self.max_iter && gnorm > self.tol {
+            iters += 1;
+            // Armijo backtracking from the last accepted step size
+            lr = (lr * 2.0).min(1e3);
+            let g2: f64 = gw.iter().map(|&g| (g as f64).powi(2)).sum::<f64>()
+                + (gb as f64).powi(2);
+            loop {
+                let wt: Vec<f32> = w
+                    .iter()
+                    .zip(&gw)
+                    .map(|(&wi, &gi)| wi - lr * gi)
+                    .collect();
+                let bt = b - lr * gb;
+                let (lt, gwt, gbt) = self.step(x, y, &wt, bt)?;
+                evals += 1;
+                if lt <= loss - 0.5 * (lr as f64) * g2 || lr < 1e-12 {
+                    w = wt;
+                    b = bt;
+                    loss = lt;
+                    gw = gwt;
+                    gb = gbt;
+                    break;
+                }
+                lr *= 0.5;
+            }
+            gnorm = grad_inf_norm(&gw, gb);
+        }
+        Ok(LogregFit { w, b, loss, iters, evals, grad_norm: gnorm })
+    }
+
+    /// Predicted probability of class 1 for each row of `x`.
+    pub fn predict_proba(fit: &LogregFit, x: &FeatureMatrix) -> Vec<f32> {
+        (0..x.rows)
+            .map(|i| {
+                let mut z = fit.b;
+                let row = x.row(i);
+                for j in 0..x.cols {
+                    z += row[j] * fit.w[j];
+                }
+                sigmoid(z)
+            })
+            .collect()
+    }
+
+    /// 0/1 accuracy on a labeled set.
+    pub fn accuracy(fit: &LogregFit, x: &FeatureMatrix, y: &[f32]) -> f64 {
+        let proba = Self::predict_proba(fit, x);
+        let correct = proba
+            .iter()
+            .zip(y)
+            .filter(|(&p, &t)| (p >= 0.5) == (t >= 0.5))
+            .count();
+        correct as f64 / y.len().max(1) as f64
+    }
+}
+
+fn grad_inf_norm(gw: &[f32], gb: f32) -> f64 {
+    gw.iter()
+        .map(|g| g.abs() as f64)
+        .fold(gb.abs() as f64, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Linearly separable 2-D data.
+    fn toy(n: usize, seed: u64) -> (FeatureMatrix, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let mut x = FeatureMatrix::zeros(n, 2);
+        let mut y = vec![0.0f32; n];
+        for i in 0..n {
+            let cls = i % 2;
+            let cx = if cls == 1 { 2.0 } else { -2.0 };
+            x.set(i, 0, cx + rng.normal32() * 0.5);
+            x.set(i, 1, rng.normal32());
+            y[i] = cls as f32;
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn separates_linear_data() {
+        let (x, y) = toy(80, 1);
+        let lr = LogisticRegression::default();
+        let fit = lr.fit(&x, &y).unwrap();
+        let acc = LogisticRegression::accuracy(&fit, &x, &y);
+        assert!(acc > 0.95, "train accuracy {acc}");
+        assert!(fit.w[0] > 0.5, "w0 should be strongly positive");
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let (x, y) = toy(30, 2);
+        let w = vec![0.1f32, -0.2];
+        let b = 0.05f32;
+        let lam = 0.3;
+        let (_, gw, gb) = native_step(&x, &y, &w, b, lam);
+        let eps = 1e-3f32;
+        for j in 0..2 {
+            let mut wp = w.clone();
+            let mut wm = w.clone();
+            wp[j] += eps;
+            wm[j] -= eps;
+            let (lp, _, _) = native_step(&x, &y, &wp, b, lam);
+            let (lm, _, _) = native_step(&x, &y, &wm, b, lam);
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            assert!(
+                (fd - gw[j] as f64).abs() < 1e-3,
+                "gw[{j}]: fd {fd} vs {}",
+                gw[j]
+            );
+        }
+        let (lp, _, _) = native_step(&x, &y, &w, b + eps, lam);
+        let (lm, _, _) = native_step(&x, &y, &w, b - eps, lam);
+        let fd = (lp - lm) / (2.0 * eps as f64);
+        assert!((fd - gb as f64).abs() < 1e-3);
+    }
+
+    #[test]
+    fn stronger_regularization_shrinks_weights() {
+        let (x, y) = toy(60, 3);
+        let weak = LogisticRegression {
+            lambda: 1e-4,
+            ..Default::default()
+        }
+        .fit(&x, &y)
+        .unwrap();
+        let strong = LogisticRegression {
+            lambda: 1.0,
+            ..Default::default()
+        }
+        .fit(&x, &y)
+        .unwrap();
+        let n_weak: f64 =
+            weak.w.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt();
+        let n_strong: f64 = strong
+            .w
+            .iter()
+            .map(|&v| (v as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        assert!(n_strong < 0.5 * n_weak, "{n_strong} !< {n_weak}");
+    }
+
+    #[test]
+    fn looser_tol_stops_earlier() {
+        let (x, y) = toy(60, 4);
+        let tight = LogisticRegression { tol: 1e-7, ..Default::default() }
+            .fit(&x, &y)
+            .unwrap();
+        let loose = LogisticRegression { tol: 1e-2, ..Default::default() }
+            .fit(&x, &y)
+            .unwrap();
+        assert!(loose.evals <= tight.evals);
+        assert!(loose.iters <= tight.iters);
+    }
+
+    #[test]
+    fn rejects_mismatched_labels() {
+        let (x, _) = toy(10, 5);
+        let lr = LogisticRegression::default();
+        assert!(lr.fit(&x, &[0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn converged_gradient_is_small() {
+        let (x, y) = toy(50, 6);
+        let fit = LogisticRegression {
+            tol: 1e-6,
+            max_iter: 2000,
+            ..Default::default()
+        }
+        .fit(&x, &y)
+        .unwrap();
+        assert!(fit.grad_norm <= 1e-6, "grad_norm {}", fit.grad_norm);
+    }
+}

@@ -1,0 +1,24 @@
+//! Downstream estimators — the consumers of the compressed
+//! representations, mirroring the paper's evaluation battery:
+//!
+//! * [`LogisticRegression`] — ℓ2-logistic classifier (Fig 6's decoding
+//!   task), gradient steps evaluated either natively or through the
+//!   PJRT runtime artifacts;
+//! * [`FastIca`] — logcosh FastICA with symmetric decorrelation
+//!   (Fig 7), on top of [`whiten_samples`] PCA whitening;
+//! * [`RidgeRegression`] / [`LinearSvm`] — the "other rotationally
+//!   invariant methods" the paper says behave identically;
+//! * [`cv`] — K-fold cross-validation machinery.
+
+pub mod cv;
+mod ica;
+mod logreg;
+mod ridge;
+mod svm;
+mod whiten;
+
+pub use ica::{FastIca, IcaResult};
+pub use logreg::{LogisticRegression, LogregBackend, LogregFit};
+pub use ridge::RidgeRegression;
+pub use svm::LinearSvm;
+pub use whiten::{whiten_samples, Whitening};

@@ -1,0 +1,203 @@
+//! Linear ℓ2-SVM with the squared-hinge loss, solved by the same
+//! gradient-descent/line-search machinery as logistic regression —
+//! smooth, so plain GD converges cleanly. Included because the paper
+//! notes "qualitatively similar results are obtained with other
+//! rotationally invariant methods (e.g., ℓ2-SVMs, ridge regression)".
+
+use crate::error::{invalid, Result};
+use crate::volume::FeatureMatrix;
+
+/// Squared-hinge linear SVM.
+#[derive(Clone, Debug)]
+pub struct LinearSvm {
+    /// L2 penalty.
+    pub lambda: f64,
+    /// Gradient-norm tolerance.
+    pub tol: f64,
+    /// Iteration budget.
+    pub max_iter: usize,
+}
+
+impl Default for LinearSvm {
+    fn default() -> Self {
+        LinearSvm { lambda: 1e-3, tol: 1e-5, max_iter: 500 }
+    }
+}
+
+/// Fitted SVM.
+#[derive(Clone, Debug)]
+pub struct SvmFit {
+    /// Weights.
+    pub w: Vec<f32>,
+    /// Intercept.
+    pub b: f32,
+    /// Final objective.
+    pub loss: f64,
+    /// Iterations used.
+    pub iters: usize,
+}
+
+/// Squared-hinge loss and gradient; labels in {0,1} are mapped to ±1.
+fn step(
+    x: &FeatureMatrix,
+    y: &[f32],
+    w: &[f32],
+    b: f32,
+    lambda: f64,
+) -> (f64, Vec<f32>, f32) {
+    let (n, k) = (x.rows, x.cols);
+    let mut loss = 0.0f64;
+    let mut gw = vec![0.0f32; k];
+    let mut gb = 0.0f32;
+    for i in 0..n {
+        let row = x.row(i);
+        let yi = if y[i] >= 0.5 { 1.0f32 } else { -1.0 };
+        let mut z = b;
+        for j in 0..k {
+            z += row[j] * w[j];
+        }
+        let margin = 1.0 - yi * z;
+        if margin > 0.0 {
+            loss += (margin as f64).powi(2);
+            let coef = -2.0 * yi * margin;
+            gb += coef;
+            for j in 0..k {
+                gw[j] += coef * row[j];
+            }
+        }
+    }
+    let nf = n as f32;
+    loss /= n as f64;
+    let mut w2 = 0.0f64;
+    for j in 0..k {
+        gw[j] = gw[j] / nf + (lambda as f32) * w[j];
+        w2 += (w[j] as f64).powi(2);
+    }
+    gb /= nf;
+    loss += 0.5 * lambda * w2;
+    (loss, gw, gb)
+}
+
+impl LinearSvm {
+    /// Fit on `(n, k)` features, {0,1} labels.
+    pub fn fit(&self, x: &FeatureMatrix, y: &[f32]) -> Result<SvmFit> {
+        if x.rows != y.len() || x.rows == 0 {
+            return Err(invalid("svm: bad training set"));
+        }
+        let k = x.cols;
+        let mut w = vec![0.0f32; k];
+        let mut b = 0.0f32;
+        let (mut loss, mut gw, mut gb) = step(x, y, &w, b, self.lambda);
+        let mut lr = 1.0f32;
+        let mut iters = 0;
+        loop {
+            let gnorm = gw
+                .iter()
+                .map(|g| g.abs() as f64)
+                .fold(gb.abs() as f64, f64::max);
+            if gnorm <= self.tol || iters >= self.max_iter {
+                break;
+            }
+            iters += 1;
+            lr = (lr * 2.0).min(1e3);
+            let g2: f64 = gw.iter().map(|&g| (g as f64).powi(2)).sum::<f64>()
+                + (gb as f64).powi(2);
+            loop {
+                let wt: Vec<f32> = w
+                    .iter()
+                    .zip(&gw)
+                    .map(|(&wi, &gi)| wi - lr * gi)
+                    .collect();
+                let bt = b - lr * gb;
+                let (lt, gwt, gbt) = step(x, y, &wt, bt, self.lambda);
+                if lt <= loss - 0.5 * (lr as f64) * g2 || lr < 1e-12 {
+                    w = wt;
+                    b = bt;
+                    loss = lt;
+                    gw = gwt;
+                    gb = gbt;
+                    break;
+                }
+                lr *= 0.5;
+            }
+        }
+        Ok(SvmFit { w, b, loss, iters })
+    }
+
+    /// 0/1 accuracy.
+    pub fn accuracy(fit: &SvmFit, x: &FeatureMatrix, y: &[f32]) -> f64 {
+        let mut correct = 0usize;
+        for i in 0..x.rows {
+            let row = x.row(i);
+            let mut z = fit.b;
+            for j in 0..x.cols {
+                z += row[j] * fit.w[j];
+            }
+            if (z >= 0.0) == (y[i] >= 0.5) {
+                correct += 1;
+            }
+        }
+        correct as f64 / x.rows.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn toy(n: usize, seed: u64) -> (FeatureMatrix, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let mut x = FeatureMatrix::zeros(n, 2);
+        let mut y = vec![0.0f32; n];
+        for i in 0..n {
+            let cls = i % 2;
+            x.set(i, 0, if cls == 1 { 2.0 } else { -2.0 } + rng.normal32() * 0.4);
+            x.set(i, 1, rng.normal32());
+            y[i] = cls as f32;
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn separates_linear_data() {
+        let (x, y) = toy(80, 1);
+        let fit = LinearSvm::default().fit(&x, &y).unwrap();
+        assert!(LinearSvm::accuracy(&fit, &x, &y) > 0.95);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let (x, y) = toy(25, 2);
+        let w = vec![0.2f32, -0.1];
+        let b = 0.1f32;
+        let (_, gw, gb) = step(&x, &y, &w, b, 0.2);
+        let eps = 1e-3f32;
+        for j in 0..2 {
+            let mut wp = w.clone();
+            let mut wm = w.clone();
+            wp[j] += eps;
+            wm[j] -= eps;
+            let (lp, _, _) = step(&x, &y, &wp, b, 0.2);
+            let (lm, _, _) = step(&x, &y, &wm, b, 0.2);
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            assert!((fd - gw[j] as f64).abs() < 2e-3, "gw[{j}]");
+        }
+        let (lp, _, _) = step(&x, &y, &w, b + eps, 0.2);
+        let (lm, _, _) = step(&x, &y, &w, b - eps, 0.2);
+        assert!(((lp - lm) / (2.0 * eps as f64) - gb as f64).abs() < 2e-3);
+    }
+
+    #[test]
+    fn agrees_with_logreg_on_separable_data() {
+        use crate::estimators::LogisticRegression;
+        let (x, y) = toy(60, 3);
+        let svm = LinearSvm::default().fit(&x, &y).unwrap();
+        let lr = LogisticRegression::default().fit(&x, &y).unwrap();
+        // rotationally-invariant methods should agree on sign structure
+        assert_eq!(svm.w[0] > 0.0, lr.w[0] > 0.0);
+        let acc_s = LinearSvm::accuracy(&svm, &x, &y);
+        let acc_l = LogisticRegression::accuracy(&lr, &x, &y);
+        assert!((acc_s - acc_l).abs() < 0.1);
+    }
+}

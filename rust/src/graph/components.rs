@@ -1,0 +1,108 @@
+//! Connected components over edge sets, with the capped variant Alg. 1
+//! line 9 needs ("cc extracts at most k components").
+
+use super::unionfind::UnionFind;
+use super::Edge;
+
+/// Connected components induced by `edges` over `0..n_vertices`.
+/// Returns `(labels, n_components)` with compact deterministic labels.
+pub fn connected_components(
+    n_vertices: usize,
+    edges: &[Edge],
+) -> (Vec<u32>, usize) {
+    let mut uf = UnionFind::new(n_vertices);
+    for e in edges {
+        uf.union(e.u, e.v);
+    }
+    let labels = uf.labels();
+    let k = uf.n_sets();
+    (labels, k)
+}
+
+/// Capped merge: apply edges in ascending weight order, but stop
+/// merging once only `k_min` components remain. This is Alg. 1's last
+/// iteration — "only the closest neighbors are associated to yield
+/// exactly the desired number k of components".
+pub fn connected_components_capped(
+    n_vertices: usize,
+    edges: &[Edge],
+    k_min: usize,
+) -> (Vec<u32>, usize) {
+    let mut order: Vec<u32> = (0..edges.len() as u32).collect();
+    order.sort_unstable_by(|&a, &b| {
+        let ea = &edges[a as usize];
+        let eb = &edges[b as usize];
+        ea.w.partial_cmp(&eb.w)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(ea.u.cmp(&eb.u))
+            .then(ea.v.cmp(&eb.v))
+    });
+    let mut uf = UnionFind::new(n_vertices);
+    for &i in &order {
+        if uf.n_sets() <= k_min {
+            break;
+        }
+        let e = edges[i as usize];
+        uf.union(e.u, e.v);
+    }
+    let labels = uf.labels();
+    let k = uf.n_sets();
+    (labels, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_components() {
+        let edges = vec![Edge::new(0, 1, 1.0), Edge::new(2, 3, 1.0)];
+        let (labels, k) = connected_components(5, &edges);
+        assert_eq!(k, 3);
+        assert_eq!(labels[0], labels[1]);
+        assert_eq!(labels[2], labels[3]);
+        assert_ne!(labels[0], labels[2]);
+        assert_ne!(labels[4], labels[0]);
+    }
+
+    #[test]
+    fn chain_is_one_component() {
+        let edges: Vec<Edge> =
+            (0..9).map(|i| Edge::new(i, i + 1, 1.0)).collect();
+        let (_, k) = connected_components(10, &edges);
+        assert_eq!(k, 1);
+    }
+
+    #[test]
+    fn capped_stops_at_k_and_prefers_cheap_edges() {
+        // chain with one expensive middle edge: cap at 2 components
+        let edges = vec![
+            Edge::new(0, 1, 0.1),
+            Edge::new(1, 2, 0.2),
+            Edge::new(2, 3, 9.0), // expensive — should remain uncut-in
+            Edge::new(3, 4, 0.1),
+        ];
+        let (labels, k) = connected_components_capped(5, &edges, 2);
+        assert_eq!(k, 2);
+        assert_eq!(labels[0], labels[2]);
+        assert_eq!(labels[3], labels[4]);
+        assert_ne!(labels[2], labels[3]);
+    }
+
+    #[test]
+    fn capped_with_large_k_is_identity() {
+        let edges = vec![Edge::new(0, 1, 1.0)];
+        let (_, k) = connected_components_capped(4, &edges, 10);
+        assert_eq!(k, 4); // no merge happens: already <= k_min
+    }
+
+    #[test]
+    fn capped_equals_uncapped_when_k_small_enough() {
+        let edges: Vec<Edge> =
+            (0..7).map(|i| Edge::new(i, i + 1, i as f32)).collect();
+        let (la, ka) = connected_components(8, &edges);
+        let (lb, kb) = connected_components_capped(8, &edges, 1);
+        assert_eq!(ka, kb);
+        assert_eq!(la, lb);
+    }
+}

@@ -1,0 +1,174 @@
+//! The masked 6-connected lattice graph — the topological model `T`
+//! of Alg. 1, in CSR form.
+
+use super::Edge;
+use crate::volume::Mask;
+
+/// Undirected graph over masked voxels (or, after reduction, clusters),
+/// stored both as an edge list and CSR adjacency.
+#[derive(Clone, Debug)]
+pub struct LatticeGraph {
+    /// Number of vertices.
+    pub n_vertices: usize,
+    /// Unique undirected edges (`u < v`), weights optional (0 until
+    /// [`LatticeGraph::with_weights`] assigns them).
+    pub edges: Vec<Edge>,
+    /// CSR offsets, length `n_vertices + 1`.
+    pub indptr: Vec<usize>,
+    /// CSR neighbor ids.
+    pub indices: Vec<u32>,
+    /// CSR position -> edge-list position (weights live on edges).
+    pub edge_of: Vec<u32>,
+}
+
+impl LatticeGraph {
+    /// 6-connectivity graph over the masked voxels.
+    pub fn from_mask(mask: &Mask) -> Self {
+        let p = mask.p();
+        let mut edges = Vec::with_capacity(3 * p);
+        for i in 0..p {
+            let [x, y, z] = mask.coords(i);
+            // only +x/+y/+z neighbors => each edge counted once
+            if let Some(j) = mask.masked_index(x + 1, y, z) {
+                edges.push(Edge::new(i as u32, j as u32, 0.0));
+            }
+            if let Some(j) = mask.masked_index(x, y + 1, z) {
+                edges.push(Edge::new(i as u32, j as u32, 0.0));
+            }
+            if let Some(j) = mask.masked_index(x, y, z + 1) {
+                edges.push(Edge::new(i as u32, j as u32, 0.0));
+            }
+        }
+        LatticeGraph::from_edges(p, edges)
+    }
+
+    /// Build CSR from a deduplicated edge list.
+    pub fn from_edges(n_vertices: usize, edges: Vec<Edge>) -> Self {
+        let mut degree = vec![0usize; n_vertices];
+        for e in &edges {
+            degree[e.u as usize] += 1;
+            degree[e.v as usize] += 1;
+        }
+        let mut indptr = vec![0usize; n_vertices + 1];
+        for i in 0..n_vertices {
+            indptr[i + 1] = indptr[i] + degree[i];
+        }
+        let mut indices = vec![0u32; indptr[n_vertices]];
+        let mut edge_of = vec![0u32; indptr[n_vertices]];
+        let mut cursor = indptr.clone();
+        for (ei, e) in edges.iter().enumerate() {
+            indices[cursor[e.u as usize]] = e.v;
+            edge_of[cursor[e.u as usize]] = ei as u32;
+            cursor[e.u as usize] += 1;
+            indices[cursor[e.v as usize]] = e.u;
+            edge_of[cursor[e.v as usize]] = ei as u32;
+            cursor[e.v as usize] += 1;
+        }
+        LatticeGraph { n_vertices, edges, indptr, indices, edge_of }
+    }
+
+    /// Number of undirected edges.
+    #[inline]
+    pub fn n_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Neighbor ids of vertex `v`.
+    #[inline]
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.indices[self.indptr[v]..self.indptr[v + 1]]
+    }
+
+    /// Iterate `(neighbor, edge_index)` pairs of vertex `v`.
+    #[inline]
+    pub fn neighbors_with_edges(
+        &self,
+        v: usize,
+    ) -> impl Iterator<Item = (u32, u32)> + '_ {
+        let lo = self.indptr[v];
+        let hi = self.indptr[v + 1];
+        self.indices[lo..hi]
+            .iter()
+            .copied()
+            .zip(self.edge_of[lo..hi].iter().copied())
+    }
+
+    /// Degree of vertex `v`.
+    #[inline]
+    pub fn degree(&self, v: usize) -> usize {
+        self.indptr[v + 1] - self.indptr[v]
+    }
+
+    /// Replace every edge weight using the provided function of its
+    /// endpoints (e.g. squared feature distance).
+    pub fn with_weights(mut self, mut f: impl FnMut(u32, u32) -> f32) -> Self {
+        for e in &mut self.edges {
+            e.w = f(e.u, e.v);
+        }
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::volume::{synthetic_brain_mask, Mask};
+
+    #[test]
+    fn full_grid_edge_count() {
+        // an (a,b,c) grid has (a-1)bc + a(b-1)c + ab(c-1) lattice edges
+        let m = Mask::full([3, 4, 5]);
+        let g = LatticeGraph::from_mask(&m);
+        assert_eq!(g.n_vertices, 60);
+        assert_eq!(g.n_edges(), 2 * 4 * 5 + 3 * 3 * 5 + 3 * 4 * 4);
+    }
+
+    #[test]
+    fn csr_is_consistent_with_edge_list() {
+        let m = synthetic_brain_mask([8, 9, 7], 1);
+        let g = LatticeGraph::from_mask(&m);
+        // every edge appears exactly once from each endpoint
+        let mut count = 0usize;
+        for v in 0..g.n_vertices {
+            for (nb, ei) in g.neighbors_with_edges(v) {
+                let e = g.edges[ei as usize];
+                assert!(
+                    (e.u == v as u32 && e.v == nb)
+                        || (e.v == v as u32 && e.u == nb)
+                );
+                count += 1;
+            }
+        }
+        assert_eq!(count, 2 * g.n_edges());
+    }
+
+    #[test]
+    fn degrees_at_most_six() {
+        let m = synthetic_brain_mask([10, 10, 10], 2);
+        let g = LatticeGraph::from_mask(&m);
+        for v in 0..g.n_vertices {
+            assert!(g.degree(v) <= 6);
+        }
+    }
+
+    #[test]
+    fn with_weights_applies() {
+        let m = Mask::full([2, 2, 1]);
+        let g = LatticeGraph::from_mask(&m)
+            .with_weights(|u, v| (u + v) as f32);
+        for e in &g.edges {
+            assert_eq!(e.w, (e.u + e.v) as f32);
+        }
+    }
+
+    #[test]
+    fn neighbors_symmetric() {
+        let m = synthetic_brain_mask([6, 6, 6], 3);
+        let g = LatticeGraph::from_mask(&m);
+        for v in 0..g.n_vertices {
+            for &nb in g.neighbors(v) {
+                assert!(g.neighbors(nb as usize).contains(&(v as u32)));
+            }
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! Graph substrate: the masked 3-D lattice, union-find, minimum
+//! spanning trees, connected components and nearest-neighbor graph
+//! extraction — everything Alg. 1 and the linkage baselines stand on.
+
+mod components;
+mod lattice;
+mod mst;
+mod nn;
+mod unionfind;
+
+pub use components::{connected_components, connected_components_capped};
+pub use lattice::LatticeGraph;
+pub use mst::kruskal_mst;
+pub use nn::nearest_neighbor_edges;
+pub use unionfind::UnionFind;
+
+/// An undirected weighted edge between masked-voxel (or cluster) ids.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Edge {
+    /// Smaller endpoint.
+    pub u: u32,
+    /// Larger endpoint.
+    pub v: u32,
+    /// Non-negative weight (squared feature distance in Alg. 1).
+    pub w: f32,
+}
+
+impl Edge {
+    /// Normalized constructor: stores endpoints with `u < v`.
+    pub fn new(a: u32, b: u32, w: f32) -> Self {
+        if a <= b {
+            Edge { u: a, v: b, w }
+        } else {
+            Edge { u: b, v: a, w }
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! Kruskal minimum spanning tree (well, forest — masks can be
+//! disconnected) used by single-linkage and rand-single clustering.
+
+use super::unionfind::UnionFind;
+use super::Edge;
+
+/// Minimum spanning forest of the weighted edge list. Returns the tree
+/// edges (at most `n_vertices - 1` of them). Deterministic: ties are
+/// broken by (weight, u, v) ordering.
+pub fn kruskal_mst(n_vertices: usize, edges: &[Edge]) -> Vec<Edge> {
+    let mut order: Vec<u32> = (0..edges.len() as u32).collect();
+    order.sort_unstable_by(|&a, &b| {
+        let ea = &edges[a as usize];
+        let eb = &edges[b as usize];
+        ea.w.partial_cmp(&eb.w)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(ea.u.cmp(&eb.u))
+            .then(ea.v.cmp(&eb.v))
+    });
+    let mut uf = UnionFind::new(n_vertices);
+    let mut tree = Vec::with_capacity(n_vertices.saturating_sub(1));
+    for &i in &order {
+        let e = edges[i as usize];
+        if uf.union(e.u, e.v) {
+            tree.push(e);
+            if tree.len() + 1 == n_vertices {
+                break;
+            }
+        }
+    }
+    tree
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn total(edges: &[Edge]) -> f64 {
+        edges.iter().map(|e| e.w as f64).sum()
+    }
+
+    /// Brute-force Prim on a dense copy, for cross-checking.
+    fn prim_weight(n: usize, edges: &[Edge]) -> f64 {
+        let inf = f32::INFINITY;
+        let mut w = vec![vec![inf; n]; n];
+        for e in edges {
+            let (u, v) = (e.u as usize, e.v as usize);
+            if e.w < w[u][v] {
+                w[u][v] = e.w;
+                w[v][u] = e.w;
+            }
+        }
+        let mut in_tree = vec![false; n];
+        let mut dist = vec![inf; n];
+        let mut totalw = 0.0f64;
+        dist[0] = 0.0;
+        for _ in 0..n {
+            let mut best = usize::MAX;
+            for i in 0..n {
+                if !in_tree[i]
+                    && dist[i] < inf
+                    && (best == usize::MAX || dist[i] < dist[best])
+                {
+                    best = i;
+                }
+            }
+            if best == usize::MAX {
+                break; // disconnected remainder
+            }
+            in_tree[best] = true;
+            totalw += dist[best] as f64;
+            for j in 0..n {
+                if !in_tree[j] && w[best][j] < dist[j] {
+                    dist[j] = w[best][j];
+                }
+            }
+        }
+        totalw
+    }
+
+    #[test]
+    fn mst_matches_prim_on_random_graphs() {
+        let mut rng = Rng::new(42);
+        for trial in 0..10 {
+            let n = 12 + trial;
+            let mut edges = Vec::new();
+            for u in 0..n as u32 {
+                for v in (u + 1)..n as u32 {
+                    if rng.f64() < 0.4 {
+                        edges.push(Edge::new(u, v, rng.f32()));
+                    }
+                }
+            }
+            // force connectivity with a cheap chain
+            for u in 0..(n as u32 - 1) {
+                edges.push(Edge::new(u, u + 1, 1.0 + rng.f32()));
+            }
+            let tree = kruskal_mst(n, &edges);
+            assert_eq!(tree.len(), n - 1);
+            let kw = total(&tree);
+            let pw = prim_weight(n, &edges);
+            assert!((kw - pw).abs() < 1e-4, "kruskal {kw} vs prim {pw}");
+        }
+    }
+
+    #[test]
+    fn mst_on_disconnected_graph_is_forest() {
+        // two components of 3 vertices each
+        let edges = vec![
+            Edge::new(0, 1, 1.0),
+            Edge::new(1, 2, 2.0),
+            Edge::new(0, 2, 3.0),
+            Edge::new(3, 4, 1.0),
+            Edge::new(4, 5, 1.0),
+        ];
+        let tree = kruskal_mst(6, &edges);
+        assert_eq!(tree.len(), 4); // (3-1) + (3-1)
+    }
+
+    #[test]
+    fn mst_is_deterministic_under_ties() {
+        let edges: Vec<Edge> = (0..10u32)
+            .flat_map(|u| ((u + 1)..10).map(move |v| Edge::new(u, v, 1.0)))
+            .collect();
+        let a = kruskal_mst(10, &edges);
+        let b = kruskal_mst(10, &edges);
+        assert_eq!(a, b);
+    }
+}

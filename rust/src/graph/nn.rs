@@ -1,0 +1,131 @@
+//! 1-nearest-neighbor graph extraction — the `nn` primitive of Alg. 1.
+//!
+//! For every vertex keep its minimum-weight incident edge; the union of
+//! these directed choices is the undirected 1-NN graph. Teng & Yao
+//! (2007) prove such graphs do not percolate, which is the theoretical
+//! backbone of the paper's fast clustering.
+
+use super::lattice::LatticeGraph;
+use super::Edge;
+
+/// Extract the 1-NN edge set of a weighted graph. Each vertex with at
+/// least one neighbor contributes its cheapest incident edge
+/// (deterministic tie-break on the smaller neighbor id); duplicates are
+/// removed.
+pub fn nearest_neighbor_edges(graph: &LatticeGraph) -> Vec<Edge> {
+    let mut chosen: Vec<u32> = Vec::with_capacity(graph.n_vertices);
+    for v in 0..graph.n_vertices {
+        let mut best: Option<(f32, u32, u32)> = None; // (w, nb, edge)
+        for (nb, ei) in graph.neighbors_with_edges(v) {
+            let w = graph.edges[ei as usize].w;
+            let cand = (w, nb, ei);
+            best = Some(match best {
+                None => cand,
+                Some(b) => {
+                    if (w, nb) < (b.0, b.1) {
+                        cand
+                    } else {
+                        b
+                    }
+                }
+            });
+        }
+        if let Some((_, _, ei)) = best {
+            chosen.push(ei);
+        }
+    }
+    chosen.sort_unstable();
+    chosen.dedup();
+    chosen.into_iter().map(|ei| graph.edges[ei as usize]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::connected_components;
+    use crate::rng::Rng;
+    use crate::volume::Mask;
+
+    fn grid_graph_with_random_weights(
+        dims: [usize; 3],
+        seed: u64,
+    ) -> LatticeGraph {
+        let m = Mask::full(dims);
+        let mut rng = Rng::new(seed);
+        let g = LatticeGraph::from_mask(&m);
+        let weights: Vec<f32> =
+            (0..g.n_edges()).map(|_| rng.f32() + 1e-4).collect();
+        let mut g = g;
+        for (i, e) in g.edges.iter_mut().enumerate() {
+            e.w = weights[i];
+        }
+        g
+    }
+
+    #[test]
+    fn every_vertex_is_covered() {
+        let g = grid_graph_with_random_weights([5, 5, 5], 1);
+        let nn = nearest_neighbor_edges(&g);
+        let mut covered = vec![false; g.n_vertices];
+        for e in &nn {
+            covered[e.u as usize] = true;
+            covered[e.v as usize] = true;
+        }
+        assert!(covered.iter().all(|&c| c), "some vertex has no NN edge");
+    }
+
+    #[test]
+    fn nn_halves_component_count_at_least() {
+        // components of the 1-NN graph have >= 2 vertices each, so
+        // q <= p/2 — the geometric-progress invariant of Alg. 1.
+        for seed in 0..5 {
+            let g = grid_graph_with_random_weights([6, 6, 4], seed);
+            let nn = nearest_neighbor_edges(&g);
+            let (_, q) = connected_components(g.n_vertices, &nn);
+            assert!(
+                q <= g.n_vertices / 2,
+                "q={q} > p/2={}",
+                g.n_vertices / 2
+            );
+        }
+    }
+
+    #[test]
+    fn nn_components_do_not_percolate() {
+        // no giant component: on a random-weight lattice the largest
+        // 1-NN cluster stays far below the graph size (Teng & Yao).
+        let g = grid_graph_with_random_weights([12, 12, 12], 3);
+        let nn = nearest_neighbor_edges(&g);
+        let (labels, q) = connected_components(g.n_vertices, &nn);
+        let mut sizes = vec![0usize; q];
+        for &l in &labels {
+            sizes[l as usize] += 1;
+        }
+        let max = *sizes.iter().max().unwrap();
+        assert!(
+            max < g.n_vertices / 10,
+            "giant component of size {max} out of {}",
+            g.n_vertices
+        );
+        // and all components have at least 2 vertices
+        assert!(sizes.iter().all(|&s| s >= 2), "singleton survived");
+    }
+
+    #[test]
+    fn picks_minimum_weight_edge() {
+        // path graph 0-1-2 with w(0,1)=5, w(1,2)=1:
+        // NN(0)=(0,1), NN(1)=(1,2), NN(2)=(1,2) => both edges present
+        let edges =
+            vec![Edge::new(0, 1, 5.0), Edge::new(1, 2, 1.0)];
+        let g = LatticeGraph::from_edges(3, edges);
+        let nn = nearest_neighbor_edges(&g);
+        assert_eq!(nn.len(), 2);
+        // now make (0,1) cheap for everyone: only it is chosen by 0,1;
+        // 2 still must pick (1,2)
+        let edges =
+            vec![Edge::new(0, 1, 0.5), Edge::new(1, 2, 1.0)];
+        let g = LatticeGraph::from_edges(3, edges);
+        let nn = nearest_neighbor_edges(&g);
+        assert_eq!(nn.len(), 2);
+    }
+}

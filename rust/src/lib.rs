@@ -1,0 +1,74 @@
+//! # fastclust — Fast clustering for scalable statistical analysis on structured images
+//!
+//! A production-grade reproduction of Thirion, Hoyos-Idrobo, Kahn &
+//! Varoquaux, *"Fast clustering for scalable statistical analysis on
+//! structured images"* (ICML 2015): a **linear-time, percolation-free
+//! clustering algorithm on 3-D image lattices** used as a feature
+//! compression operator for large-scale statistical analysis, together
+//! with every baseline, estimator and experiment harness the paper's
+//! evaluation relies on.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the coordinator: clustering algorithms,
+//!   compression operators, estimators, the experiment pipeline and CLI.
+//! * **L2 (python/compile/model.py)** — JAX compute graphs lowered once
+//!   (AOT) to HLO text artifacts.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the compute
+//!   hot-spots, verified against pure-jnp oracles by pytest.
+//!
+//! At run time this crate is self-contained: [`runtime`] loads the
+//! pre-built `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate)
+//! and python never executes on the request path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use fastclust::prelude::*;
+//!
+//! // 1. a synthetic brain-like dataset: smooth signal + white noise
+//! let vol = SyntheticCube::new([30, 30, 30], 8.0, 0.5).generate(20, 7);
+//! // 2. build the masked lattice graph
+//! let graph = LatticeGraph::from_mask(vol.mask());
+//! // 3. fast clustering (Alg. 1) down to k = p/10 clusters
+//! let k = vol.p() / 10;
+//! let labels = FastCluster::default().fit(vol.data(), &graph, k, 42).unwrap();
+//! // 4. compress: cluster means (U^T U)^-1 U^T X
+//! let red = ClusterReduce::from_labels(&labels);
+//! let xk = red.reduce(vol.data());
+//! assert_eq!(xk.rows, k);
+//! ```
+//!
+//! See `examples/` for full pipelines (decoding, ICA, percolation) and
+//! `rust/src/bench_harness/` for the figure-by-figure reproduction of
+//! the paper's evaluation.
+
+pub mod bench_harness;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod estimators;
+pub mod graph;
+pub mod json;
+pub mod linalg;
+pub mod reduce;
+pub mod rng;
+pub mod runtime;
+pub mod stats;
+pub mod volume;
+
+/// Convenience re-exports covering the common workflow.
+pub mod prelude {
+    pub use crate::cluster::{
+        AverageLinkage, Clusterer, CompleteLinkage, FastCluster, KMeans,
+        Labels, RandSingle, SingleLinkage, Ward,
+    };
+    pub use crate::error::{Error, Result};
+    pub use crate::graph::LatticeGraph;
+    pub use crate::linalg::Mat;
+    pub use crate::reduce::{ClusterReduce, Reducer, SparseRandomProjection};
+    pub use crate::volume::{
+        FeatureMatrix, Mask, MaskedDataset, SyntheticCube,
+    };
+}

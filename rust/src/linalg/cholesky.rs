@@ -1,0 +1,111 @@
+//! Cholesky factorization and SPD solves (ridge regression's normal
+//! equations, covariance inverses).
+
+use super::matrix::Mat;
+use crate::error::{invalid, Result};
+
+/// Lower-triangular Cholesky factor `L` with `A = L L^T`.
+/// Fails on non-SPD input.
+pub fn cholesky(a: &Mat) -> Result<Mat> {
+    assert_eq!(a.rows, a.cols, "cholesky expects square input");
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.get(i, j);
+            for k in 0..j {
+                s -= l.get(i, k) * l.get(j, k);
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return Err(invalid(format!(
+                        "cholesky: pivot {s} <= 0 at {i} (matrix not SPD)"
+                    )));
+                }
+                l.set(i, i, s.sqrt());
+            } else {
+                l.set(i, j, s / l.get(j, j));
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `A x = b` for SPD `A` via its Cholesky factor.
+pub fn solve_cholesky(a: &Mat, b: &[f64]) -> Result<Vec<f64>> {
+    let l = cholesky(a)?;
+    let n = a.rows;
+    // forward: L y = b
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l.get(i, k) * y[k];
+        }
+        y[i] = s / l.get(i, i);
+    }
+    // backward: L^T x = y
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in (i + 1)..n {
+            s -= l.get(k, i) * x[k];
+        }
+        x[i] = s / l.get(i, i);
+    }
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let b = Mat::randn(n + 3, n, &mut rng);
+        let mut g = b.gram();
+        for i in 0..n {
+            let v = g.get(i, i);
+            g.set(i, i, v + 0.5);
+        }
+        g
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = spd(7, 21);
+        let l = cholesky(&a).unwrap();
+        let rec = l.matmul(&l.t());
+        assert!(rec.max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn solve_matches_matvec() {
+        let a = spd(6, 22);
+        let x_true = vec![1.0, -2.0, 0.5, 3.0, -0.25, 2.0];
+        let b = a.matvec(&x_true);
+        let x = solve_cholesky(&a, &b).unwrap();
+        for i in 0..6 {
+            assert!((x[i] - x_true[i]).abs() < 1e-9, "{x:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_non_spd() {
+        let mut a = Mat::eye(3);
+        a.set(2, 2, -1.0);
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn lower_triangular_output() {
+        let a = spd(5, 23);
+        let l = cholesky(&a).unwrap();
+        for i in 0..5 {
+            for j in (i + 1)..5 {
+                assert_eq!(l.get(i, j), 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Symmetric eigendecomposition via the cyclic Jacobi method —
+//! unconditionally stable, simple, and fast enough for the `q x q`
+//! (ICA) and `n x n` (whitening Gram) problems in this crate.
+
+use super::matrix::Mat;
+
+/// Eigendecomposition of a symmetric matrix: returns `(values, vectors)`
+/// with eigenvalues descending and `vectors.column(i)` the i-th
+/// eigenvector (i.e. `A = V diag(w) V^T`, `V` orthogonal, returned
+/// row-major as a `Mat` whose column `i` matches `values[i]`).
+pub fn sym_eigen(a: &Mat) -> (Vec<f64>, Mat) {
+    assert_eq!(a.rows, a.cols, "sym_eigen expects square input");
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut v = Mat::eye(n);
+    let max_sweeps = 64;
+    for _sweep in 0..max_sweeps {
+        // off-diagonal Frobenius mass
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m.get(i, j).powi(2);
+            }
+        }
+        if off.sqrt() < 1e-12 * (1.0 + m.frob()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m.get(p, q);
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m.get(p, p);
+                let aqq = m.get(q, q);
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum()
+                    / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p, q of m
+                for i in 0..n {
+                    let mip = m.get(i, p);
+                    let miq = m.get(i, q);
+                    m.set(i, p, c * mip - s * miq);
+                    m.set(i, q, s * mip + c * miq);
+                }
+                for i in 0..n {
+                    let mpi = m.get(p, i);
+                    let mqi = m.get(q, i);
+                    m.set(p, i, c * mpi - s * mqi);
+                    m.set(q, i, s * mpi + c * mqi);
+                }
+                // accumulate rotations in v
+                for i in 0..n {
+                    let vip = v.get(i, p);
+                    let viq = v.get(i, q);
+                    v.set(i, p, c * vip - s * viq);
+                    v.set(i, q, s * vip + c * viq);
+                }
+            }
+        }
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    let diag: Vec<f64> = (0..n).map(|i| m.get(i, i)).collect();
+    order.sort_by(|&a, &b| {
+        diag[b].partial_cmp(&diag[a]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let values: Vec<f64> = order.iter().map(|&i| diag[i]).collect();
+    let mut vectors = Mat::zeros(n, n);
+    for (newc, &oldc) in order.iter().enumerate() {
+        for r in 0..n {
+            vectors.set(r, newc, v.get(r, oldc));
+        }
+    }
+    (values, vectors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_symmetric(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let b = Mat::randn(n, n, &mut rng);
+        let mut s = b.t().matmul(&b);
+        s.scale(1.0 / n as f64);
+        s
+    }
+
+    #[test]
+    fn reconstructs_matrix() {
+        let a = random_symmetric(8, 11);
+        let (w, v) = sym_eigen(&a);
+        // A ?= V diag(w) V^T
+        let mut vd = v.clone();
+        for r in 0..8 {
+            for c in 0..8 {
+                vd.set(r, c, v.get(r, c) * w[c]);
+            }
+        }
+        let rec = vd.matmul(&v.t());
+        assert!(rec.max_abs_diff(&a) < 1e-9, "{}", rec.max_abs_diff(&a));
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let a = random_symmetric(10, 12);
+        let (_, v) = sym_eigen(&a);
+        assert!(v.gram().max_abs_diff(&Mat::eye(10)) < 1e-10);
+    }
+
+    #[test]
+    fn values_sorted_descending_and_psd_nonnegative() {
+        let a = random_symmetric(9, 13);
+        let (w, _) = sym_eigen(&a);
+        for i in 1..w.len() {
+            assert!(w[i - 1] >= w[i] - 1e-12);
+        }
+        for &x in &w {
+            assert!(x > -1e-9, "PSD matrix got eigenvalue {x}");
+        }
+    }
+
+    #[test]
+    fn diagonal_matrix_is_fixed_point() {
+        let mut a = Mat::zeros(4, 4);
+        for (i, &d) in [4.0, 3.0, 2.0, 1.0].iter().enumerate() {
+            a.set(i, i, d);
+        }
+        let (w, v) = sym_eigen(&a);
+        assert_eq!(w, vec![4.0, 3.0, 2.0, 1.0]);
+        assert!(v.max_abs_diff(&Mat::eye(4)) < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] -> eigenvalues 3, 1
+        let a = Mat::from_vec(2, 2, vec![2., 1., 1., 2.]).unwrap();
+        let (w, _) = sym_eigen(&a);
+        assert!((w[0] - 3.0).abs() < 1e-12);
+        assert!((w[1] - 1.0).abs() < 1e-12);
+    }
+}

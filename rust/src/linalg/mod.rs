@@ -1,0 +1,18 @@
+//! Small dense linear algebra in `f64` — just enough, implemented from
+//! scratch, for the estimators: matmul, Householder QR, cyclic-Jacobi
+//! symmetric eigendecomposition, randomized range finding / SVD and
+//! Cholesky. Shapes here are post-compression (k ≲ a few thousand) or
+//! sample-Gram (n ≲ a couple thousand), so cubic algorithms with good
+//! constants are the right tool.
+
+mod cholesky;
+mod eigen;
+mod matrix;
+mod qr;
+mod svd;
+
+pub use cholesky::{cholesky, solve_cholesky};
+pub use eigen::sym_eigen;
+pub use matrix::Mat;
+pub use qr::qr_thin;
+pub use svd::{randomized_range, randomized_svd};

@@ -1,0 +1,103 @@
+//! Thin QR via modified Gram–Schmidt with one re-orthogonalization
+//! pass ("twice is enough" — Giraud et al.), which keeps Q orthonormal
+//! to machine precision for the mildly-conditioned matrices the range
+//! finder produces.
+
+use super::matrix::Mat;
+
+/// Thin QR of an `m x n` matrix with `m >= n`: returns `(Q, R)` with
+/// `Q` `m x n` orthonormal columns and `R` `n x n` upper triangular.
+/// Rank-deficient columns are replaced by zeros in Q (R gets a zero
+/// diagonal entry) rather than garbage.
+pub fn qr_thin(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "qr_thin expects tall matrices ({m}x{n})");
+    // column-major working copy of Q for cache-friendly column ops
+    let mut q: Vec<Vec<f64>> =
+        (0..n).map(|j| (0..m).map(|i| a.get(i, j)).collect()).collect();
+    let mut r = Mat::zeros(n, n);
+    for j in 0..n {
+        // two passes of MGS projection against previous columns
+        for _pass in 0..2 {
+            for i in 0..j {
+                let dot: f64 =
+                    q[i].iter().zip(&q[j]).map(|(&a, &b)| a * b).sum();
+                r.data[i * n + j] += dot;
+                let qi = q[i].clone();
+                for (x, &qi_v) in q[j].iter_mut().zip(&qi) {
+                    *x -= dot * qi_v;
+                }
+            }
+        }
+        let norm: f64 =
+            q[j].iter().map(|&v| v * v).sum::<f64>().sqrt();
+        r.data[j * n + j] = norm;
+        if norm > 1e-300 {
+            for x in &mut q[j] {
+                *x /= norm;
+            }
+        } else {
+            for x in &mut q[j] {
+                *x = 0.0;
+            }
+        }
+    }
+    let mut qm = Mat::zeros(m, n);
+    for j in 0..n {
+        for i in 0..m {
+            qm.data[i * n + j] = q[j][i];
+        }
+    }
+    (qm, r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Rng::new(5);
+        let a = Mat::randn(12, 5, &mut rng);
+        let (q, r) = qr_thin(&a);
+        let qr = q.matmul(&r);
+        assert!(qr.max_abs_diff(&a) < 1e-10, "{}", qr.max_abs_diff(&a));
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        let mut rng = Rng::new(6);
+        let a = Mat::randn(20, 8, &mut rng);
+        let (q, _) = qr_thin(&a);
+        let qtq = q.gram();
+        assert!(qtq.max_abs_diff(&Mat::eye(8)) < 1e-12);
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Rng::new(7);
+        let a = Mat::randn(10, 6, &mut rng);
+        let (_, r) = qr_thin(&a);
+        for i in 0..6 {
+            for j in 0..i {
+                assert_eq!(r.get(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn handles_rank_deficiency() {
+        // second column = 2 * first
+        let mut a = Mat::zeros(6, 2);
+        for i in 0..6 {
+            a.set(i, 0, (i + 1) as f64);
+            a.set(i, 1, 2.0 * (i + 1) as f64);
+        }
+        let (q, r) = qr_thin(&a);
+        assert!(r.get(1, 1).abs() < 1e-8);
+        // Q's first column still unit
+        let c0: f64 = (0..6).map(|i| q.get(i, 0).powi(2)).sum();
+        assert!((c0 - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,149 @@
+//! Randomized range finding and truncated SVD (Halko, Martinsson &
+//! Tropp 2009) — the paper explicitly cites this as the state of the
+//! art it is competing with for dimension reduction, and the ICA
+//! whitening step uses it to avoid a full `p x p` decomposition.
+
+use super::eigen::sym_eigen;
+use super::matrix::Mat;
+use super::qr::qr_thin;
+use crate::rng::Rng;
+
+/// Randomized range finder: an orthonormal `m x (rank+overs)` basis `Q`
+/// approximating the column space of `A` (`m x n`), with `n_iter` power
+/// iterations for spectral-decay sharpening.
+pub fn randomized_range(
+    a: &Mat,
+    rank: usize,
+    oversample: usize,
+    n_iter: usize,
+    seed: u64,
+) -> Mat {
+    let l = (rank + oversample).min(a.cols).min(a.rows);
+    let mut rng = Rng::new(seed).derive(0x5D);
+    let omega = Mat::randn(a.cols, l, &mut rng);
+    let mut y = a.matmul(&omega);
+    let (mut q, _) = qr_thin(&y);
+    let at = a.t();
+    for _ in 0..n_iter {
+        let z = at.matmul(&q);
+        let (qz, _) = qr_thin(&z);
+        y = a.matmul(&qz);
+        let (qy, _) = qr_thin(&y);
+        q = qy;
+    }
+    q
+}
+
+/// Truncated randomized SVD: `A ~= U diag(s) V^T` with `rank` columns.
+/// Returns `(u, s, vt)`; `u` is `m x rank`, `vt` is `rank x n`.
+pub fn randomized_svd(
+    a: &Mat,
+    rank: usize,
+    seed: u64,
+) -> (Mat, Vec<f64>, Mat) {
+    let rank = rank.min(a.rows).min(a.cols);
+    let q = randomized_range(a, rank, 8, 2, seed);
+    // B = Q^T A  (l x n), small; eigendecompose B B^T (l x l)
+    let b = q.t().matmul(a);
+    let bbt = {
+        let bt = b.t();
+        // B B^T == (B^T)^T (B^T) == gram of B^T
+        bt.gram()
+    };
+    let (w, v) = sym_eigen(&bbt);
+    let l = b.rows;
+    let mut s = Vec::with_capacity(rank);
+    let mut ub = Mat::zeros(l, rank);
+    for j in 0..rank {
+        let sv = w[j].max(0.0).sqrt();
+        s.push(sv);
+        for i in 0..l {
+            ub.set(i, j, v.get(i, j));
+        }
+    }
+    // U = Q * Ub
+    let u = q.matmul(&ub);
+    // V^T = diag(1/s) Ub^T B
+    let mut vt = ub.t().matmul(&b);
+    for (j, &sv) in s.iter().enumerate() {
+        let inv = if sv > 1e-12 { 1.0 / sv } else { 0.0 };
+        for c in 0..vt.cols {
+            let val = vt.get(j, c) * inv;
+            vt.set(j, c, val);
+        }
+    }
+    (u, s, vt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build an m x n matrix with prescribed singular values.
+    fn with_spectrum(m: usize, n: usize, sv: &[f64], seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let (qu, _) = qr_thin(&Mat::randn(m, sv.len(), &mut rng));
+        let (qv, _) = qr_thin(&Mat::randn(n, sv.len(), &mut rng));
+        let mut us = qu.clone();
+        for c in 0..sv.len() {
+            for r in 0..m {
+                us.set(r, c, qu.get(r, c) * sv[c]);
+            }
+        }
+        us.matmul(&qv.t())
+    }
+
+    #[test]
+    fn recovers_low_rank_exactly() {
+        let sv = [10.0, 5.0, 1.0];
+        let a = with_spectrum(30, 20, &sv, 31);
+        let (u, s, vt) = randomized_svd(&a, 3, 7);
+        for (i, &want) in sv.iter().enumerate() {
+            assert!((s[i] - want).abs() < 1e-6, "s={s:?}");
+        }
+        // reconstruction
+        let mut usd = u.clone();
+        for c in 0..3 {
+            for r in 0..30 {
+                usd.set(r, c, u.get(r, c) * s[c]);
+            }
+        }
+        let rec = usd.matmul(&vt);
+        assert!(rec.max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn range_captures_column_space() {
+        let sv = [8.0, 4.0, 2.0, 1.0];
+        let a = with_spectrum(25, 15, &sv, 32);
+        let q = randomized_range(&a, 4, 4, 2, 5);
+        // ||A - Q Q^T A|| should be tiny for an exactly rank-4 matrix
+        let qqta = q.matmul(&q.t().matmul(&a));
+        assert!(qqta.max_abs_diff(&a) < 1e-8);
+    }
+
+    #[test]
+    fn truncation_error_bounded_by_tail() {
+        let sv = [10.0, 8.0, 0.1, 0.05];
+        let a = with_spectrum(40, 30, &sv, 33);
+        let (u, s, vt) = randomized_svd(&a, 2, 9);
+        let mut usd = u.clone();
+        for c in 0..2 {
+            for r in 0..40 {
+                usd.set(r, c, u.get(r, c) * s[c]);
+            }
+        }
+        let rec = usd.matmul(&vt);
+        let err = rec.sub(&a).frob();
+        let tail = (0.1f64.powi(2) + 0.05f64.powi(2)).sqrt();
+        assert!(err < 3.0 * tail, "err {err} vs tail {tail}");
+    }
+
+    #[test]
+    fn u_orthonormal() {
+        let sv = [5.0, 3.0, 2.0];
+        let a = with_spectrum(20, 12, &sv, 34);
+        let (u, _, _) = randomized_svd(&a, 3, 11);
+        assert!(u.gram().max_abs_diff(&Mat::eye(3)) < 1e-8);
+    }
+}

@@ -1,0 +1,264 @@
+//! `repro` — the fastclust experiment launcher.
+//!
+//! Subcommands (one per paper figure plus utilities):
+//!
+//! ```text
+//! repro fig1 [--scale S]            # recursive-NN illustration trace
+//! repro fig2 [--scale S]            # percolation histograms
+//! repro fig3 [--scale S]            # clustering compute time
+//! repro fig4 [--scale S]            # distance preservation (eta)
+//! repro fig5 [--scale S]            # denoising variance ratios
+//! repro fig6 [--scale S]            # logreg accuracy vs time
+//! repro fig7 [--scale S]            # ICA recovery/consistency/time
+//! repro all  [--scale S]            # every figure in sequence
+//! repro decode --config cfg.json    # run the decoding pipeline
+//! repro runtime-check               # PJRT artifact smoke test
+//! ```
+//!
+//! `--scale` (default 1) multiplies grid dimensions toward paper scale;
+//! `--out DIR` (default `results/`) receives CSVs; `--seed N` overrides
+//! the root seed. Arg parsing is hand-rolled (offline build, no clap).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use fastclust::bench_harness::{
+    fig2, fig3, fig4, fig5, fig6, fig7, write_csv, Table,
+};
+use fastclust::cluster::FastCluster;
+use fastclust::config::ExperimentConfig;
+use fastclust::coordinator::run_decoding_pipeline;
+use fastclust::error::Result;
+use fastclust::graph::LatticeGraph;
+use fastclust::runtime::Runtime;
+use fastclust::volume::{MorphometryGenerator, SyntheticCube};
+
+/// Parsed command line: subcommand + flag map.
+struct Cli {
+    cmd: String,
+    flags: HashMap<String, String>,
+}
+
+fn parse_args() -> Option<Cli> {
+    let mut args = std::env::args().skip(1);
+    let cmd = args.next()?;
+    let mut flags = HashMap::new();
+    let mut key: Option<String> = None;
+    for a in args {
+        if let Some(stripped) = a.strip_prefix("--") {
+            if let Some(k) = key.take() {
+                flags.insert(k, "true".to_string()); // boolean flag
+            }
+            key = Some(stripped.to_string());
+        } else if let Some(k) = key.take() {
+            flags.insert(k, a);
+        } else {
+            eprintln!("unexpected positional argument '{a}'");
+            return None;
+        }
+    }
+    if let Some(k) = key.take() {
+        flags.insert(k, "true".to_string());
+    }
+    Some(Cli { cmd, flags })
+}
+
+impl Cli {
+    fn scale(&self) -> usize {
+        self.flags
+            .get("scale")
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(1)
+            .max(1)
+    }
+
+    fn seed(&self) -> u64 {
+        self.flags.get("seed").and_then(|s| s.parse().ok()).unwrap_or(42)
+    }
+
+    fn out_dir(&self) -> PathBuf {
+        PathBuf::from(
+            self.flags.get("out").cloned().unwrap_or_else(|| "results".into()),
+        )
+    }
+}
+
+fn scaled(dims: [usize; 3], s: usize) -> [usize; 3] {
+    // volume grows ~linearly with scale so runs stay tractable
+    let f = (s as f64).cbrt();
+    [
+        (dims[0] as f64 * f) as usize,
+        (dims[1] as f64 * f) as usize,
+        (dims[2] as f64 * f) as usize,
+    ]
+}
+
+fn emit(table: &Table, out: &PathBuf, name: &str) -> Result<()> {
+    table.print();
+    let path = out.join(format!("{name}.csv"));
+    write_csv(table, &path)?;
+    println!("[csv] {}\n", path.display());
+    Ok(())
+}
+
+fn fig1(cli: &Cli) -> Result<()> {
+    // the Fig-1 illustration: per-round trace of Alg. 1 on a 2-D slice
+    let dims = scaled([24, 24, 1], cli.scale());
+    let ds = SyntheticCube::new(dims, 5.0, 0.5).generate(3, cli.seed());
+    let graph = LatticeGraph::from_mask(ds.mask());
+    let k = (ds.p() / 10).max(2);
+    let (labels, trace) =
+        FastCluster::default().fit_trace(ds.data(), &graph, k, cli.seed())?;
+    let mut t = Table::new(
+        "Fig 1 — recursive NN agglomeration trace (2-D slice)",
+        &["round", "clusters", "edges"],
+    );
+    for (i, (&c, &e)) in
+        trace.cluster_counts.iter().zip(&trace.edge_counts).enumerate()
+    {
+        t.row(vec![i.to_string(), c.to_string(), e.to_string()]);
+    }
+    println!(
+        "final k = {} (requested {k}), p = {}, rounds = {}",
+        labels.k,
+        ds.p(),
+        trace.cluster_counts.len() - 1
+    );
+    emit(&t, &cli.out_dir(), "fig1_trace")
+}
+
+fn run_fig2(cli: &Cli) -> Result<()> {
+    let mut cfg = fig2::Fig2Config::default();
+    cfg.dims = scaled(cfg.dims, cli.scale());
+    cfg.seed = cli.seed();
+    let rows = fig2::run(&cfg);
+    emit(&fig2::table(&rows), &cli.out_dir(), "fig2_percolation")
+}
+
+fn run_fig3(cli: &Cli) -> Result<()> {
+    let mut cfg = fig3::Fig3Config::default();
+    cfg.dims = scaled(cfg.dims, cli.scale());
+    cfg.seed = cli.seed();
+    let rows = fig3::run(&cfg);
+    emit(&fig3::table(&rows), &cli.out_dir(), "fig3_cluster_time")
+}
+
+fn run_fig4(cli: &Cli) -> Result<()> {
+    let mut cfg = fig4::Fig4Config::default();
+    cfg.cube_dims = scaled(cfg.cube_dims, cli.scale());
+    cfg.oasis_dims = scaled(cfg.oasis_dims, cli.scale());
+    cfg.seed = cli.seed();
+    let rows = fig4::run(&cfg);
+    emit(&fig4::table(&rows), &cli.out_dir(), "fig4_distance")
+}
+
+fn run_fig5(cli: &Cli) -> Result<()> {
+    let mut cfg = fig5::Fig5Config::default();
+    cfg.dims = scaled(cfg.dims, cli.scale());
+    cfg.seed = cli.seed();
+    let rows = fig5::run(&cfg);
+    emit(&fig5::table(&rows), &cli.out_dir(), "fig5_denoising")
+}
+
+fn run_fig6(cli: &Cli) -> Result<()> {
+    let mut cfg = fig6::Fig6Config::default();
+    cfg.dims = scaled(cfg.dims, cli.scale());
+    cfg.seed = cli.seed();
+    let rows = fig6::run(&cfg);
+    emit(&fig6::table(&rows), &cli.out_dir(), "fig6_logreg")
+}
+
+fn run_fig7(cli: &Cli) -> Result<()> {
+    let mut cfg = fig7::Fig7Config::default();
+    cfg.dims = scaled(cfg.dims, cli.scale());
+    cfg.seed = cli.seed();
+    let res = fig7::run(&cfg);
+    emit(&fig7::table(&res), &cli.out_dir(), "fig7_ica")
+}
+
+fn decode(cli: &Cli) -> Result<()> {
+    let cfg = match cli.flags.get("config") {
+        Some(path) => ExperimentConfig::from_file(&PathBuf::from(path))?,
+        None => ExperimentConfig::default(),
+    };
+    let (ds, labels) = MorphometryGenerator::new(cfg.data.dims)
+        .generate(cfg.data.n_samples, cfg.data.seed);
+    println!(
+        "cohort: p={} n={} method={} k={}",
+        ds.p(),
+        ds.n(),
+        cfg.reduce.method.name(),
+        cfg.reduce.resolve_k(ds.p())
+    );
+    let rep =
+        run_decoding_pipeline(&ds, &labels, &cfg.reduce, &cfg.estimator)?;
+    println!(
+        "accuracy = {:.3} ± {:.3}  (cluster {:.2}s, fit {:.2}s)",
+        rep.accuracy, rep.accuracy_std, rep.cluster_secs, rep.estimator_secs
+    );
+    Ok(())
+}
+
+fn runtime_check() -> Result<()> {
+    let rt = Runtime::from_env()?;
+    println!("platform: {}", rt.platform());
+    println!("artifacts: {:?}", rt.manifest().names());
+    let exe = rt.executable("smoke_matmul_2x2")?;
+    let out = exe.run(&[
+        vec![1.0f32, 2.0, 3.0, 4.0].into(),
+        vec![1.0f32; 4].into(),
+    ])?;
+    let got = out[0].as_f32()?;
+    assert_eq!(got, &[5.0, 5.0, 9.0, 9.0], "golden value mismatch");
+    println!("smoke_matmul_2x2 OK: {got:?}");
+    Ok(())
+}
+
+fn dispatch(cli: &Cli) -> Result<()> {
+    match cli.cmd.as_str() {
+        "fig1" => fig1(cli),
+        "fig2" => run_fig2(cli),
+        "fig3" => run_fig3(cli),
+        "fig4" => run_fig4(cli),
+        "fig5" => run_fig5(cli),
+        "fig6" => run_fig6(cli),
+        "fig7" => run_fig7(cli),
+        "all" => {
+            fig1(cli)?;
+            run_fig2(cli)?;
+            run_fig3(cli)?;
+            run_fig4(cli)?;
+            run_fig5(cli)?;
+            run_fig6(cli)?;
+            run_fig7(cli)
+        }
+        "decode" => decode(cli),
+        "runtime-check" => runtime_check(),
+        other => {
+            eprintln!("unknown subcommand '{other}'");
+            eprintln!(
+                "usage: repro <fig1..fig7|all|decode|runtime-check> \
+                 [--scale S] [--seed N] [--out DIR] [--config FILE]"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    let Some(cli) = parse_args() else {
+        eprintln!(
+            "usage: repro <fig1..fig7|all|decode|runtime-check> \
+             [--scale S] [--seed N] [--out DIR] [--config FILE]"
+        );
+        return ExitCode::from(2);
+    };
+    match dispatch(&cli) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

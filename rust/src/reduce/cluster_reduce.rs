@@ -1,0 +1,203 @@
+//! Cluster-mean reduction — the paper's compressed representation
+//! `(⟨x, u_i/||u_i||²⟩)_{i∈[k]}` — plus its right inverse (expansion
+//! back to voxel space) and the induced projector.
+//!
+//! This is the production hot path of the whole library (every sample
+//! of every experiment flows through [`ClusterReduce::reduce`]), so the
+//! inner loops are written for streaming memory access: one pass over
+//! `X` row-major, scattering each voxel row into its cluster
+//! accumulator.
+
+use super::Reducer;
+use crate::cluster::{cluster_counts, Labels};
+use crate::volume::FeatureMatrix;
+
+/// Cluster-mean compression operator built from a partition.
+#[derive(Clone, Debug)]
+pub struct ClusterReduce {
+    labels: Vec<u32>,
+    counts: Vec<u32>,
+    inv_counts: Vec<f32>,
+    k: usize,
+}
+
+impl ClusterReduce {
+    /// Build from fitted labels.
+    pub fn from_labels(labels: &Labels) -> Self {
+        let counts = cluster_counts(labels);
+        let inv_counts =
+            counts.iter().map(|&c| 1.0 / c.max(1) as f32).collect();
+        ClusterReduce {
+            labels: labels.labels.clone(),
+            counts,
+            inv_counts,
+            k: labels.k,
+        }
+    }
+
+    /// The underlying label vector.
+    pub fn labels(&self) -> &[u32] {
+        &self.labels
+    }
+
+    /// Per-cluster sizes.
+    pub fn counts(&self) -> &[u32] {
+        &self.counts
+    }
+
+    /// Expand `(k, n)` cluster values back to `(p, n)` voxel space
+    /// (piecewise-constant). `expand(reduce(x))` is the projection onto
+    /// the span of the cluster indicators.
+    pub fn expand(&self, xk: &FeatureMatrix) -> FeatureMatrix {
+        assert_eq!(xk.rows, self.k, "expand: rows != k");
+        let p = self.labels.len();
+        let n = xk.cols;
+        let mut out = FeatureMatrix::zeros(p, n);
+        for i in 0..p {
+            let c = self.labels[i] as usize;
+            out.row_mut(i).copy_from_slice(xk.row(c));
+        }
+        out
+    }
+
+    /// `expand(reduce(x))`: the anisotropic-smoothing projection the
+    /// paper interprets cluster compression as.
+    pub fn project(&self, x: &FeatureMatrix) -> FeatureMatrix {
+        self.expand(&self.reduce(x))
+    }
+
+    /// Scaled reduction `U^T X / sqrt(counts)` — the isometry-friendly
+    /// variant: for piecewise-constant signals it preserves the l2 norm
+    /// exactly (used by the Fig 4 η analysis).
+    pub fn reduce_scaled(&self, x: &FeatureMatrix) -> FeatureMatrix {
+        let mut out = self.reduce_sums(x);
+        for c in 0..self.k {
+            let s = (self.counts[c].max(1) as f32).sqrt().recip();
+            for v in out.row_mut(c) {
+                *v *= s;
+            }
+        }
+        out
+    }
+
+    /// Per-cluster sums `U^T X` (no normalization).
+    fn reduce_sums(&self, x: &FeatureMatrix) -> FeatureMatrix {
+        assert_eq!(x.rows, self.labels.len(), "reduce: rows != p");
+        let n = x.cols;
+        let mut out = FeatureMatrix::zeros(self.k, n);
+        for i in 0..x.rows {
+            let c = self.labels[i] as usize;
+            let src = x.row(i);
+            let dst = out.row_mut(c);
+            for j in 0..n {
+                dst[j] += src[j];
+            }
+        }
+        out
+    }
+}
+
+impl Reducer for ClusterReduce {
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn p(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// Cluster means `(U^T U)^{-1} U^T X`.
+    fn reduce(&self, x: &FeatureMatrix) -> FeatureMatrix {
+        let mut out = self.reduce_sums(x);
+        for c in 0..self.k {
+            let s = self.inv_counts[c];
+            for v in out.row_mut(c) {
+                *v *= s;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Labels;
+
+    fn fixture() -> (FeatureMatrix, ClusterReduce) {
+        // p=5, n=2; clusters {0,1}, {2}, {3,4}
+        let x = FeatureMatrix::from_vec(
+            5,
+            2,
+            vec![
+                1.0, 10.0, //
+                3.0, 20.0, //
+                5.0, 30.0, //
+                7.0, 40.0, //
+                9.0, 50.0,
+            ],
+        )
+        .unwrap();
+        let labels = Labels::new(vec![0, 0, 1, 2, 2], 3).unwrap();
+        (x, ClusterReduce::from_labels(&labels))
+    }
+
+    #[test]
+    fn reduce_computes_means() {
+        let (x, r) = fixture();
+        let xk = r.reduce(&x);
+        assert_eq!(xk.rows, 3);
+        assert_eq!(xk.row(0), &[2.0, 15.0]);
+        assert_eq!(xk.row(1), &[5.0, 30.0]);
+        assert_eq!(xk.row(2), &[8.0, 45.0]);
+    }
+
+    #[test]
+    fn expand_is_piecewise_constant() {
+        let (x, r) = fixture();
+        let back = r.expand(&r.reduce(&x));
+        assert_eq!(back.row(0), back.row(1));
+        assert_eq!(back.row(3), back.row(4));
+        assert_eq!(back.row(0), &[2.0, 15.0]);
+    }
+
+    #[test]
+    fn project_is_idempotent() {
+        let (x, r) = fixture();
+        let p1 = r.project(&x);
+        let p2 = r.project(&p1);
+        assert_eq!(p1.data, p2.data);
+    }
+
+    #[test]
+    fn constant_vectors_preserved() {
+        let (_, r) = fixture();
+        let x = FeatureMatrix::from_vec(5, 1, vec![4.0; 5]).unwrap();
+        let back = r.project(&x);
+        assert_eq!(back.data, vec![4.0; 5]);
+    }
+
+    #[test]
+    fn scaled_reduce_preserves_norm_of_piecewise_constant() {
+        let (_, r) = fixture();
+        // piecewise constant on the partition
+        let x =
+            FeatureMatrix::from_vec(5, 1, vec![2.0, 2.0, -1.0, 3.0, 3.0])
+                .unwrap();
+        let xs = r.reduce_scaled(&x);
+        let n_orig: f32 = x.data.iter().map(|v| v * v).sum();
+        let n_red: f32 = xs.data.iter().map(|v| v * v).sum();
+        assert!((n_orig - n_red).abs() < 1e-5);
+    }
+
+    #[test]
+    fn reduce_vec_matches_matrix_path() {
+        let (x, r) = fixture();
+        let col0 = x.col(0);
+        let rv = r.reduce_vec(&col0);
+        let rm = r.reduce(&x);
+        for c in 0..3 {
+            assert!((rv[c] - rm.get(c, 0)).abs() < 1e-6);
+        }
+    }
+}

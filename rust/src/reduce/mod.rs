@@ -1,0 +1,36 @@
+//! Compression operators: the feature-space reductions `f: R^p -> R^k`
+//! the paper compares.
+//!
+//! * [`ClusterReduce`] — the paper's contribution path: cluster means
+//!   `(U^T U)^{-1} U^T X`, invertible back to voxel space via
+//!   [`ClusterReduce::expand`] (piecewise-constant), which random
+//!   projections cannot do;
+//! * [`SparseRandomProjection`] — the Li, Hastie & Church (2006) very
+//!   sparse JL transform, the state-of-the-art baseline.
+
+mod cluster_reduce;
+mod random_projection;
+
+pub use cluster_reduce::ClusterReduce;
+pub use random_projection::SparseRandomProjection;
+
+use crate::volume::FeatureMatrix;
+
+/// A linear compression of voxel-space data `(p, n) -> (k, n)`.
+pub trait Reducer {
+    /// Output dimensionality `k`.
+    fn k(&self) -> usize;
+
+    /// Input dimensionality `p`.
+    fn p(&self) -> usize;
+
+    /// Apply to a `(p, n)` matrix, producing `(k, n)`.
+    fn reduce(&self, x: &FeatureMatrix) -> FeatureMatrix;
+
+    /// Apply to a single voxel-space vector.
+    fn reduce_vec(&self, x: &[f32]) -> Vec<f32> {
+        let m = FeatureMatrix::from_vec(x.len(), 1, x.to_vec())
+            .expect("consistent");
+        self.reduce(&m).data
+    }
+}

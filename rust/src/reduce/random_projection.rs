@@ -1,0 +1,183 @@
+//! Very sparse random projections (Li, Hastie & Church 2006): entries
+//! `±sqrt(s/k)` with probability `1/(2s)` each and `0` with probability
+//! `1 - 1/s`, with the paper-standard density `s = sqrt(p)`. Stored in
+//! CSR (one row per output component) so both memory and apply cost are
+//! `O(p k / s) = O(k sqrt(p))`.
+
+use super::Reducer;
+use crate::rng::Rng;
+use crate::volume::FeatureMatrix;
+
+/// Sparse JL projection `R: (k, p)` in CSR form.
+#[derive(Clone, Debug)]
+pub struct SparseRandomProjection {
+    p: usize,
+    k: usize,
+    /// CSR row offsets, length `k + 1`.
+    indptr: Vec<usize>,
+    /// Column (voxel) indices.
+    indices: Vec<u32>,
+    /// Signed scaled values (`±sqrt(s/k)`).
+    values: Vec<f32>,
+}
+
+impl SparseRandomProjection {
+    /// Draw a projection with the default density `1/sqrt(p)`.
+    pub fn new(p: usize, k: usize, seed: u64) -> Self {
+        let s = (p as f64).sqrt();
+        SparseRandomProjection::with_density(p, k, 1.0 / s, seed)
+    }
+
+    /// Draw with explicit nonzero-probability `density = 1/s`.
+    pub fn with_density(p: usize, k: usize, density: f64, seed: u64) -> Self {
+        assert!(k >= 1 && p >= 1, "empty projection");
+        assert!((0.0..=1.0).contains(&density), "density in (0,1]");
+        let s = 1.0 / density.max(1e-12);
+        let scale = (s / k as f64).sqrt() as f32;
+        let mut rng = Rng::new(seed).derive(0x5B);
+        let mut indptr = Vec::with_capacity(k + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        // per row: geometric skipping over the p columns gives exact
+        // Bernoulli(density) per entry in O(nnz) time
+        for _ in 0..k {
+            let mut col = 0usize;
+            loop {
+                // skip ~ Geometric(density)
+                let u = rng.f64().max(1e-300);
+                let skip = (u.ln() / (1.0 - density).max(1e-300).ln())
+                    .floor() as usize;
+                col += skip;
+                if col >= p {
+                    break;
+                }
+                let sign = if rng.f64() < 0.5 { scale } else { -scale };
+                indices.push(col as u32);
+                values.push(sign);
+                col += 1;
+            }
+            indptr.push(indices.len());
+        }
+        SparseRandomProjection { p, k, indptr, indices, values }
+    }
+
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+}
+
+impl Reducer for SparseRandomProjection {
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn p(&self) -> usize {
+        self.p
+    }
+
+    fn reduce(&self, x: &FeatureMatrix) -> FeatureMatrix {
+        assert_eq!(x.rows, self.p, "reduce: rows != p");
+        let n = x.cols;
+        let mut out = FeatureMatrix::zeros(self.k, n);
+        for r in 0..self.k {
+            let lo = self.indptr[r];
+            let hi = self.indptr[r + 1];
+            let dst = out.row_mut(r);
+            for t in lo..hi {
+                let c = self.indices[t] as usize;
+                let v = self.values[t];
+                let src = x.row(c);
+                for j in 0..n {
+                    dst[j] += v * src[j];
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let rp = SparseRandomProjection::new(500, 50, 7);
+        assert_eq!(rp.k(), 50);
+        assert_eq!(rp.p(), 500);
+        let rp2 = SparseRandomProjection::new(500, 50, 7);
+        assert_eq!(rp.indices, rp2.indices);
+        let rp3 = SparseRandomProjection::new(500, 50, 8);
+        assert_ne!(rp.indices, rp3.indices);
+    }
+
+    #[test]
+    fn density_is_approximately_honored() {
+        let p = 2000;
+        let k = 100;
+        let rp = SparseRandomProjection::with_density(p, k, 0.05, 3);
+        let expected = (p * k) as f64 * 0.05;
+        let got = rp.nnz() as f64;
+        assert!(
+            (got - expected).abs() < 0.15 * expected,
+            "nnz {got} vs expected {expected}"
+        );
+    }
+
+    #[test]
+    fn norms_preserved_in_expectation() {
+        // JL property: E||Rx||² = ||x||²; with k=256 the average over
+        // many vectors should be within a few percent.
+        let p = 1000;
+        let k = 256;
+        let rp = SparseRandomProjection::new(p, k, 11);
+        let mut rng = Rng::new(5);
+        let trials = 20;
+        let mut ratio_sum = 0.0f64;
+        for _ in 0..trials {
+            let x: Vec<f32> = (0..p).map(|_| rng.normal32()).collect();
+            let xr = rp.reduce_vec(&x);
+            let n0: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum();
+            let n1: f64 = xr.iter().map(|&v| (v as f64).powi(2)).sum();
+            ratio_sum += n1 / n0;
+        }
+        let mean_ratio = ratio_sum / trials as f64;
+        assert!(
+            (mean_ratio - 1.0).abs() < 0.15,
+            "mean norm ratio {mean_ratio}"
+        );
+    }
+
+    #[test]
+    fn distances_preserved_on_average() {
+        let p = 800;
+        let k = 200;
+        let rp = SparseRandomProjection::new(p, k, 13);
+        let mut rng = Rng::new(17);
+        let a: Vec<f32> = (0..p).map(|_| rng.normal32()).collect();
+        let b: Vec<f32> = (0..p).map(|_| rng.normal32()).collect();
+        let ra = rp.reduce_vec(&a);
+        let rb = rp.reduce_vec(&b);
+        let d0: f64 = a
+            .iter()
+            .zip(&b)
+            .map(|(&x, &y)| ((x - y) as f64).powi(2))
+            .sum();
+        let d1: f64 = ra
+            .iter()
+            .zip(&rb)
+            .map(|(&x, &y)| ((x - y) as f64).powi(2))
+            .sum();
+        let eta = d1 / d0;
+        assert!((eta - 1.0).abs() < 0.4, "eta {eta} too far from 1");
+    }
+
+    #[test]
+    fn zero_vector_maps_to_zero() {
+        let rp = SparseRandomProjection::new(100, 10, 1);
+        let z = rp.reduce_vec(&vec![0.0; 100]);
+        assert!(z.iter().all(|&v| v == 0.0));
+    }
+}

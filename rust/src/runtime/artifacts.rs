@@ -1,0 +1,228 @@
+//! The artifact manifest: shape/dtype registry written by
+//! `python/compile/aot.py` (`artifacts/manifest.json`). The runtime
+//! keys executables on the stable artifact names listed here.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{invalid, Error, Result};
+use crate::json::{self, Value};
+
+/// Shape + dtype of one input or output tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    /// Dimensions (row-major).
+    pub shape: Vec<usize>,
+    /// Numpy dtype name (`float32`, `int32`, ...).
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        let shape = v
+            .expect("shape")?
+            .as_arr()
+            .ok_or_else(|| invalid("tensor shape must be an array"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| invalid("bad shape dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = v
+            .expect("dtype")?
+            .as_str()
+            .ok_or_else(|| invalid("dtype must be a string"))?
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One artifact entry: HLO file + IO signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    /// File name relative to the artifact dir.
+    pub file: String,
+    /// Input tensor signature (flattened pytree order).
+    pub inputs: Vec<TensorSpec>,
+    /// Output tensor signature.
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed manifest bound to its directory.
+#[derive(Debug)]
+pub struct ArtifactManifest {
+    dir: PathBuf,
+    artifacts: HashMap<String, ArtifactSpec>,
+    /// Raw golden-probe values for integration tests.
+    pub golden: Value,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let root = json::parse(&text)?;
+        let format = root
+            .expect("format")?
+            .as_str()
+            .ok_or_else(|| invalid("manifest format must be string"))?;
+        if format != "hlo-text" {
+            return Err(invalid(format!(
+                "manifest format '{format}' unsupported"
+            )));
+        }
+        let mut artifacts = HashMap::new();
+        let arts = root
+            .expect("artifacts")?
+            .as_obj()
+            .ok_or_else(|| invalid("'artifacts' must be an object"))?;
+        for (name, spec) in arts {
+            let file = spec
+                .expect("file")?
+                .as_str()
+                .ok_or_else(|| invalid("artifact file must be string"))?
+                .to_string();
+            let parse_tensors = |key: &str| -> Result<Vec<TensorSpec>> {
+                spec.expect(key)?
+                    .as_arr()
+                    .ok_or_else(|| invalid(format!("'{key}' must be array")))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file,
+                    inputs: parse_tensors("inputs")?,
+                    outputs: parse_tensors("outputs")?,
+                },
+            );
+        }
+        let golden = root.get("golden").cloned().unwrap_or(Value::Null);
+        Ok(ArtifactManifest { dir: dir.to_path_buf(), artifacts, golden })
+    }
+
+    /// Default location: `$FASTCLUST_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("FASTCLUST_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Look up an artifact by stable name.
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::ArtifactMissing(name.to_string()))
+    }
+
+    /// Absolute path of the artifact's HLO text.
+    pub fn path_of(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.get(name)?.file))
+    }
+
+    /// All artifact names (sorted, for reports).
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> =
+            self.artifacts.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    fn find_shape_with_prefix(
+        &self,
+        prefix: &str,
+        n: usize,
+        k: usize,
+    ) -> Option<(String, usize, usize)> {
+        let mut best: Option<(String, usize, usize)> = None;
+        for name in self.artifacts.keys() {
+            if let Some(rest) = name.strip_prefix(prefix) {
+                if let Some((ns, ks)) = rest.split_once("_k") {
+                    if let (Ok(na), Ok(ka)) =
+                        (ns.parse::<usize>(), ks.parse::<usize>())
+                    {
+                        if na >= n && ka >= k {
+                            let better = match &best {
+                                None => true,
+                                Some((_, bn, bk)) => na * ka < bn * bk,
+                            };
+                            if better {
+                                best = Some((name.clone(), na, ka));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    /// Find a `logreg_step` artifact whose (n, k) bounds fit the given
+    /// problem size, smallest first — the padding contract lets any
+    /// problem with `n <= N, k <= K` run on an `(N, K)` artifact.
+    pub fn find_logreg_shape(
+        &self,
+        n: usize,
+        k: usize,
+    ) -> Option<(String, usize, usize)> {
+        self.find_shape_with_prefix("logreg_step_n", n, k)
+    }
+
+    /// Find a fused `logreg_gd64` artifact (64 GD steps per PJRT call —
+    /// the §Perf dispatch-amortization path).
+    pub fn find_logreg_gd_shape(
+        &self,
+        n: usize,
+        k: usize,
+    ) -> Option<(String, usize, usize)> {
+        self.find_shape_with_prefix("logreg_gd64_n", n, k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> PathBuf {
+        // tests run from the crate root; artifacts/ is built by `make`
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = ArtifactManifest::load(&manifest_dir()).unwrap();
+        assert!(m.names().contains(&"smoke_matmul_2x2"));
+        let spec = m.get("smoke_matmul_2x2").unwrap();
+        assert_eq!(spec.inputs.len(), 2);
+        assert_eq!(spec.inputs[0].shape, vec![2, 2]);
+        assert_eq!(spec.inputs[0].dtype, "float32");
+        assert_eq!(spec.outputs[0].numel(), 4);
+        assert!(m.path_of("smoke_matmul_2x2").unwrap().exists());
+    }
+
+    #[test]
+    fn missing_artifact_is_reported() {
+        let m = ArtifactManifest::load(&manifest_dir()).unwrap();
+        match m.get("nope") {
+            Err(Error::ArtifactMissing(n)) => assert_eq!(n, "nope"),
+            other => panic!("expected ArtifactMissing, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn logreg_shape_lookup_prefers_smallest_fitting() {
+        let m = ArtifactManifest::load(&manifest_dir()).unwrap();
+        let (name, n, k) = m.find_logreg_shape(100, 400).unwrap();
+        assert_eq!(name, "logreg_step_n512_k512");
+        assert_eq!((n, k), (512, 512));
+        let (name2, _, k2) = m.find_logreg_shape(100, 600).unwrap();
+        assert_eq!(name2, "logreg_step_n512_k2048");
+        assert_eq!(k2, 2048);
+        assert!(m.find_logreg_shape(100, 5000).is_none());
+    }
+}

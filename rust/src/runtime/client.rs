@@ -1,0 +1,301 @@
+//! PJRT CPU client wrapper: compile HLO-text artifacts once, execute
+//! many times with plain `Vec<f32>` / `Vec<i32>` payloads.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: text (not serialized
+//! proto) is the interchange format because jax >= 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids. Artifacts are lowered with `return_tuple=True`, so
+//! every execution returns a tuple literal which we decompose.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use super::artifacts::{ArtifactManifest, ArtifactSpec};
+use crate::error::{Error, Result};
+
+/// Tensor payload for runtime IO.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    /// 32-bit float payload.
+    F32(Vec<f32>),
+    /// 32-bit int payload.
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v) => v.len(),
+            Tensor::I32(v) => v.len(),
+        }
+    }
+
+    /// Unwrap as f32 (errors otherwise).
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            Tensor::I32(_) => {
+                Err(Error::Invalid("tensor is i32, not f32".into()))
+            }
+        }
+    }
+}
+
+impl From<Vec<f32>> for Tensor {
+    fn from(v: Vec<f32>) -> Self {
+        Tensor::F32(v)
+    }
+}
+
+impl From<Vec<i32>> for Tensor {
+    fn from(v: Vec<i32>) -> Self {
+        Tensor::I32(v)
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    name: String,
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with positional inputs matching the manifest signature.
+    /// Returns one [`Tensor`] per manifest output.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(Error::Invalid(format!(
+                "{}: got {} inputs, signature has {}",
+                self.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (t, s)) in
+            inputs.iter().zip(&self.spec.inputs).enumerate()
+        {
+            if t.len() != s.numel() {
+                return Err(Error::Invalid(format!(
+                    "{}: input {i} has {} elems, expected {} {:?}",
+                    self.name,
+                    t.len(),
+                    s.numel(),
+                    s.shape
+                )));
+            }
+            let dims: Vec<i64> =
+                s.shape.iter().map(|&d| d as i64).collect();
+            let lit = match t {
+                Tensor::F32(v) => xla::Literal::vec1(v),
+                Tensor::I32(v) => xla::Literal::vec1(v),
+            };
+            let lit = if s.shape.len() == 1 && !s.shape.is_empty() {
+                lit
+            } else {
+                lit.reshape(&dims)?
+            };
+            literals.push(lit);
+        }
+        let result =
+            self.exe.execute::<xla::Literal>(&literals)?[0][0]
+                .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            return Err(Error::Xla(format!(
+                "{}: runtime returned {} outputs, manifest says {}",
+                self.name,
+                parts.len(),
+                self.spec.outputs.len()
+            )));
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, s) in parts.iter().zip(&self.spec.outputs) {
+            let t = match s.dtype.as_str() {
+                "float32" => Tensor::F32(lit.to_vec::<f32>()?),
+                "int32" => Tensor::I32(lit.to_vec::<i32>()?),
+                other => {
+                    return Err(Error::Invalid(format!(
+                        "unsupported output dtype {other}"
+                    )))
+                }
+            };
+            out.push(t);
+        }
+        Ok(out)
+    }
+
+    /// The manifest signature.
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Execute over pre-uploaded device buffers (see
+    /// [`Runtime::upload_f32`]) — skips the per-call host->device
+    /// literal copy for loop-invariant operands, the dominant cost of
+    /// repeated executions with large inputs (§Perf).
+    pub fn run_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(Error::Invalid(format!(
+                "{}: got {} buffers, signature has {}",
+                self.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            )));
+        }
+        let result = self.exe.execute_b(inputs)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, s) in parts.iter().zip(&self.spec.outputs) {
+            let t = match s.dtype.as_str() {
+                "float32" => Tensor::F32(lit.to_vec::<f32>()?),
+                "int32" => Tensor::I32(lit.to_vec::<i32>()?),
+                other => {
+                    return Err(Error::Invalid(format!(
+                        "unsupported output dtype {other}"
+                    )))
+                }
+            };
+            out.push(t);
+        }
+        Ok(out)
+    }
+}
+
+/// The runtime: one PJRT CPU client + a compile cache keyed by artifact
+/// name. Compilation happens lazily on first use and is amortized over
+/// the experiment; `Runtime` is `Sync` via an internal mutex on the
+/// cache (PJRT execution itself is thread-compatible on CPU).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime over an artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let manifest = ArtifactManifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Create with the default artifact dir
+    /// (`$FASTCLUST_ARTIFACTS` or `./artifacts`).
+    pub fn from_env() -> Result<Self> {
+        Runtime::new(&ArtifactManifest::default_dir())
+    }
+
+    /// Platform name (for logs).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// The manifest.
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    /// Upload an f32 tensor to the device once; the returned buffer can
+    /// be passed to [`Executable::run_buffers`] any number of times.
+    pub fn upload_f32(
+        &self,
+        data: &[f32],
+        dims: &[usize],
+    ) -> Result<xla::PjRtBuffer> {
+        let numel: usize = dims.iter().product();
+        if numel != data.len() {
+            return Err(Error::Invalid(format!(
+                "upload_f32: {} elems vs shape {dims:?}",
+                data.len()
+            )));
+        }
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Get (compiling on first use) an executable by artifact name.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let path = self.manifest.path_of(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| {
+                Error::Invalid("non-utf8 artifact path".into())
+            })?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let e = std::sync::Arc::new(Executable {
+            name: name.to_string(),
+            spec,
+            exe,
+        });
+        self.cache.lock().unwrap().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn runtime() -> Runtime {
+        let dir =
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Runtime::new(&dir).expect("artifacts built? run `make artifacts`")
+    }
+
+    #[test]
+    fn smoke_artifact_golden_values() {
+        let rt = runtime();
+        let exe = rt.executable("smoke_matmul_2x2").unwrap();
+        let x = Tensor::F32(vec![1.0, 2.0, 3.0, 4.0]);
+        let y = Tensor::F32(vec![1.0; 4]);
+        let out = exe.run(&[x, y]).unwrap();
+        assert_eq!(out.len(), 1);
+        // matmul + 2 = [[5,5],[9,9]] — golden from the manifest too
+        assert_eq!(out[0].as_f32().unwrap(), &[5.0, 5.0, 9.0, 9.0]);
+        let g = rt
+            .manifest()
+            .golden
+            .get("smoke_matmul_2x2")
+            .and_then(|v| v.get("out"))
+            .unwrap();
+        let want: Vec<f32> = g
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        assert_eq!(out[0].as_f32().unwrap(), &want[..]);
+    }
+
+    #[test]
+    fn executables_are_cached() {
+        let rt = runtime();
+        let a = rt.executable("smoke_matmul_2x2").unwrap();
+        let b = rt.executable("smoke_matmul_2x2").unwrap();
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn input_arity_and_shape_validated() {
+        let rt = runtime();
+        let exe = rt.executable("smoke_matmul_2x2").unwrap();
+        assert!(exe.run(&[Tensor::F32(vec![0.0; 4])]).is_err());
+        assert!(exe
+            .run(&[Tensor::F32(vec![0.0; 3]), Tensor::F32(vec![0.0; 4])])
+            .is_err());
+    }
+
+    #[test]
+    fn missing_artifact_name_errors() {
+        let rt = runtime();
+        assert!(rt.executable("does_not_exist").is_err());
+    }
+}

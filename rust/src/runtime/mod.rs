@@ -1,0 +1,10 @@
+//! PJRT runtime: load the AOT-compiled HLO text artifacts produced by
+//! `python/compile/aot.py` and execute them from the rust hot path.
+//! Python never runs at request time — the binary is self-contained
+//! once `artifacts/` exists.
+
+mod artifacts;
+mod client;
+
+pub use artifacts::{ArtifactManifest, ArtifactSpec, TensorSpec};
+pub use client::{Executable, Runtime, Tensor};

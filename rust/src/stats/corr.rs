@@ -1,0 +1,82 @@
+//! Pearson correlation and the |corr| component-similarity matrix used
+//! by the ICA experiments.
+
+use crate::volume::FeatureMatrix;
+
+/// Pearson correlation of two equal-length slices (0 if either is
+/// constant).
+pub fn pearson(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "pearson: length mismatch");
+    let n = a.len() as f64;
+    if a.is_empty() {
+        return 0.0;
+    }
+    let ma = a.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let mb = b.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for i in 0..a.len() {
+        let da = a[i] as f64 - ma;
+        let db = b[i] as f64 - mb;
+        cov += da * db;
+        va += da * da;
+        vb += db * db;
+    }
+    if va < 1e-30 || vb < 1e-30 {
+        return 0.0;
+    }
+    cov / (va.sqrt() * vb.sqrt())
+}
+
+/// |corr| matrix between the rows of two `(q, p)` component matrices.
+/// Entry `(i, j)` = |pearson(a.row(i), b.row(j))|, row-major `qa x qb`.
+pub fn abs_corr_matrix(a: &FeatureMatrix, b: &FeatureMatrix) -> Vec<f64> {
+    assert_eq!(a.cols, b.cols, "abs_corr_matrix: feature dims differ");
+    let mut out = vec![0.0f64; a.rows * b.rows];
+    for i in 0..a.rows {
+        for j in 0..b.rows {
+            out[i * b.rows + j] = pearson(a.row(i), b.row(j)).abs();
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_correlation() {
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [2.0f32, 4.0, 6.0, 8.0];
+        assert!((pearson(&a, &b) - 1.0).abs() < 1e-12);
+        let c = [-1.0f32, -2.0, -3.0, -4.0];
+        assert!((pearson(&a, &c) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_input_gives_zero() {
+        let a = [1.0f32, 1.0, 1.0];
+        let b = [1.0f32, 2.0, 3.0];
+        assert_eq!(pearson(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn orthogonal_signals_uncorrelated() {
+        let a = [1.0f32, -1.0, 1.0, -1.0];
+        let b = [1.0f32, 1.0, -1.0, -1.0];
+        assert!(pearson(&a, &b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matrix_shape_and_values() {
+        let a = FeatureMatrix::from_vec(2, 3, vec![1., 2., 3., 3., 2., 1.])
+            .unwrap();
+        let m = abs_corr_matrix(&a, &a);
+        assert_eq!(m.len(), 4);
+        assert!((m[0] - 1.0).abs() < 1e-12);
+        assert!((m[3] - 1.0).abs() < 1e-12);
+        assert!((m[1] - 1.0).abs() < 1e-12); // anti-correlated -> |corr| = 1
+    }
+}

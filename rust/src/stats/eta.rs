@@ -1,0 +1,115 @@
+//! The η statistic of Fig 4: the ratio of compressed to original
+//! pairwise squared distances,
+//! `η = ||f(x1) - f(x2)||² / ||x1 - x2||²`.
+//!
+//! Random projections guarantee `E[η] = 1` with variance shrinking in
+//! `k` (Johnson–Lindenstrauss); clustering is *systematically
+//! compressive* (η < 1), so the paper judges representations by the
+//! **variance** (stability) of η across pairs, not its mean.
+
+use crate::volume::FeatureMatrix;
+
+/// Summary of the η distribution across sample pairs.
+#[derive(Clone, Debug)]
+pub struct EtaSummary {
+    /// Mean of η across pairs.
+    pub mean: f64,
+    /// Variance of η across pairs (the paper's figure-of-merit).
+    pub var: f64,
+    /// Standard deviation of η relative to its mean — scale-free
+    /// distortion measure that ignores the systematic compression.
+    pub cv: f64,
+    /// Number of pairs measured.
+    pub n_pairs: usize,
+}
+
+/// Compute η for all pairs of columns (samples): `orig` is `(p, n)`,
+/// `compressed` is `(k, n)` — distances taken between columns.
+/// Pairs with near-zero original distance are skipped.
+pub fn eta_ratios(orig: &FeatureMatrix, compressed: &FeatureMatrix) -> Vec<f64> {
+    assert_eq!(orig.cols, compressed.cols, "eta: sample counts differ");
+    let n = orig.cols;
+    let mut etas = Vec::with_capacity(n * (n - 1) / 2);
+    for a in 0..n {
+        for b in (a + 1)..n {
+            let mut d0 = 0.0f64;
+            for i in 0..orig.rows {
+                let d = (orig.get(i, a) - orig.get(i, b)) as f64;
+                d0 += d * d;
+            }
+            if d0 < 1e-12 {
+                continue;
+            }
+            let mut d1 = 0.0f64;
+            for i in 0..compressed.rows {
+                let d = (compressed.get(i, a) - compressed.get(i, b)) as f64;
+                d1 += d * d;
+            }
+            etas.push(d1 / d0);
+        }
+    }
+    etas
+}
+
+impl EtaSummary {
+    /// Summarize a vector of η ratios.
+    pub fn from_ratios(etas: &[f64]) -> EtaSummary {
+        let n = etas.len();
+        let mean = super::mean(etas);
+        let var = super::variance(etas);
+        EtaSummary {
+            mean,
+            var,
+            cv: if mean.abs() > 1e-12 { var.sqrt() / mean } else { f64::NAN },
+            n_pairs: n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_compression_gives_eta_one() {
+        let x = FeatureMatrix::from_vec(3, 3, vec![
+            1., 2., 3., //
+            4., 5., 6., //
+            7., 8., 10.,
+        ])
+        .unwrap();
+        let etas = eta_ratios(&x, &x);
+        assert_eq!(etas.len(), 3);
+        for &e in &etas {
+            assert!((e - 1.0).abs() < 1e-9);
+        }
+        let s = EtaSummary::from_ratios(&etas);
+        assert!((s.mean - 1.0).abs() < 1e-9);
+        assert!(s.var < 1e-12);
+    }
+
+    #[test]
+    fn scaling_compression_scales_eta() {
+        let x = FeatureMatrix::from_vec(2, 2, vec![0., 1., 0., 3.]).unwrap();
+        let mut half = x.clone();
+        for v in &mut half.data {
+            *v *= 0.5;
+        }
+        let etas = eta_ratios(&x, &half);
+        for &e in &etas {
+            assert!((e - 0.25).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn zero_distance_pairs_skipped() {
+        // two identical samples + one distinct
+        let x = FeatureMatrix::from_vec(2, 3, vec![
+            1., 1., 2., //
+            0., 0., 5.,
+        ])
+        .unwrap();
+        let etas = eta_ratios(&x, &x);
+        assert_eq!(etas.len(), 2); // pair (0,1) skipped
+    }
+}

@@ -1,0 +1,167 @@
+//! Hungarian (Kuhn–Munkres) assignment, maximization variant — the
+//! paper matches ICA components across sessions "with the Hungarian
+//! algorithm, using the absolute value of the pairwise correlation as a
+//! between-components similarity".
+//!
+//! O(n³) shortest-augmenting-path implementation (Jonker–Volgenant
+//! style potentials) on a square score matrix.
+
+/// Maximize total score over a perfect matching of rows to columns.
+/// `score` is row-major `n x n`. Returns `assignment[row] = col`.
+pub fn hungarian_max(score: &[f64], n: usize) -> Vec<usize> {
+    assert_eq!(score.len(), n * n, "hungarian: matrix must be n*n");
+    if n == 0 {
+        return Vec::new();
+    }
+    // convert to costs for minimization; shift so costs >= 0
+    let maxv = score.iter().cloned().fold(f64::MIN, f64::max);
+    let cost = |i: usize, j: usize| maxv - score[i * n + j];
+
+    // potentials + matching arrays, 1-indexed sentinel style
+    let mut u = vec![0.0f64; n + 1];
+    let mut v = vec![0.0f64; n + 1];
+    let mut p = vec![0usize; n + 1]; // p[col] = row matched to col (0 = none)
+    let mut way = vec![0usize; n + 1];
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![f64::INFINITY; n + 1];
+        let mut used = vec![false; n + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = f64::INFINITY;
+            let mut j1 = 0usize;
+            for j in 1..=n {
+                if used[j] {
+                    continue;
+                }
+                let cur = cost(i0 - 1, j - 1) - u[i0] - v[j];
+                if cur < minv[j] {
+                    minv[j] = cur;
+                    way[j] = j0;
+                }
+                if minv[j] < delta {
+                    delta = minv[j];
+                    j1 = j;
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+    let mut assignment = vec![0usize; n];
+    for j in 1..=n {
+        if p[j] != 0 {
+            assignment[p[j] - 1] = j - 1;
+        }
+    }
+    assignment
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn total(score: &[f64], n: usize, a: &[usize]) -> f64 {
+        a.iter().enumerate().map(|(i, &j)| score[i * n + j]).sum()
+    }
+
+    fn brute_force_best(score: &[f64], n: usize) -> f64 {
+        fn perm(
+            score: &[f64],
+            n: usize,
+            used: &mut Vec<bool>,
+            row: usize,
+            acc: f64,
+            best: &mut f64,
+        ) {
+            if row == n {
+                *best = best.max(acc);
+                return;
+            }
+            for j in 0..n {
+                if !used[j] {
+                    used[j] = true;
+                    perm(score, n, used, row + 1, acc + score[row * n + j], best);
+                    used[j] = false;
+                }
+            }
+        }
+        let mut best = f64::MIN;
+        perm(score, n, &mut vec![false; n], 0, 0.0, &mut best);
+        best
+    }
+
+    #[test]
+    fn identity_preferred() {
+        let n = 4;
+        let mut s = vec![0.1; n * n];
+        for i in 0..n {
+            s[i * n + i] = 1.0;
+        }
+        let a = hungarian_max(&s, n);
+        assert_eq!(a, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn permuted_diagonal_recovered() {
+        // score favors the permutation (2, 0, 3, 1)
+        let n = 4;
+        let want = [2usize, 0, 3, 1];
+        let mut s = vec![0.0; n * n];
+        for (i, &j) in want.iter().enumerate() {
+            s[i * n + j] = 5.0 + i as f64;
+        }
+        let a = hungarian_max(&s, n);
+        assert_eq!(a, want.to_vec());
+    }
+
+    #[test]
+    fn matches_brute_force_on_random_matrices() {
+        let mut rng = Rng::new(61);
+        for n in 2..=6 {
+            for _ in 0..5 {
+                let s: Vec<f64> =
+                    (0..n * n).map(|_| rng.f64() * 10.0).collect();
+                let a = hungarian_max(&s, n);
+                // valid permutation?
+                let mut seen = a.clone();
+                seen.sort_unstable();
+                assert_eq!(seen, (0..n).collect::<Vec<_>>());
+                let got = total(&s, n, &a);
+                let best = brute_force_best(&s, n);
+                assert!(
+                    (got - best).abs() < 1e-9,
+                    "n={n}: got {got}, best {best}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn handles_negative_scores() {
+        let s = vec![-5.0, -1.0, -1.0, -5.0];
+        let a = hungarian_max(&s, 2);
+        assert_eq!(a, vec![1, 0]);
+    }
+}

@@ -1,0 +1,105 @@
+//! Fig 5's denoising statistic: per-voxel (or per-cluster) ratio of
+//! between-condition variance (signal of interest, averaged across
+//! subjects) to between-subject variance (noise + inter-individual
+//! variability, averaged across conditions).
+
+use crate::volume::FeatureMatrix;
+
+/// Compute the per-feature variance ratio. `x` is `(p, S*C)` with
+/// column `s*C + c` = subject `s`, contrast `c` (the layout
+/// [`crate::volume::ContrastMapGenerator`] produces).
+///
+/// Per feature:
+/// * between-condition variance = Var_c( x[s, c] ) averaged over `s`;
+/// * between-subject variance  = Var_s( x[s, c] ) averaged over `c`;
+/// * ratio = the former / the latter (features with ~zero denominator
+///   are emitted as NaN and should be filtered by the caller).
+pub fn variance_ratio_per_voxel(
+    x: &FeatureMatrix,
+    n_subjects: usize,
+    n_contrasts: usize,
+) -> Vec<f64> {
+    assert_eq!(
+        x.cols,
+        n_subjects * n_contrasts,
+        "variance_ratio: column layout mismatch"
+    );
+    let mut out = Vec::with_capacity(x.rows);
+    let mut cond_vals = vec![0.0f64; n_contrasts];
+    let mut subj_vals = vec![0.0f64; n_subjects];
+    for i in 0..x.rows {
+        let row = x.row(i);
+        // between-condition variance averaged across subjects
+        let mut bc = 0.0f64;
+        for s in 0..n_subjects {
+            for c in 0..n_contrasts {
+                cond_vals[c] = row[s * n_contrasts + c] as f64;
+            }
+            bc += super::variance(&cond_vals);
+        }
+        bc /= n_subjects as f64;
+        // between-subject variance averaged across conditions
+        let mut bs = 0.0f64;
+        for c in 0..n_contrasts {
+            for s in 0..n_subjects {
+                subj_vals[s] = row[s * n_contrasts + c] as f64;
+            }
+            bs += super::variance(&subj_vals);
+        }
+        bs /= n_contrasts as f64;
+        out.push(if bs > 1e-12 { bc / bs } else { f64::NAN });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pure_condition_signal_gives_large_ratio() {
+        // x[s*C + c] = c  (varies across conditions, none across subj)
+        let (s, c) = (4, 3);
+        let mut x = FeatureMatrix::zeros(2, s * c);
+        for si in 0..s {
+            for ci in 0..c {
+                x.set(0, si * c + ci, ci as f32);
+                x.set(1, si * c + ci, ci as f32);
+            }
+        }
+        let r = variance_ratio_per_voxel(&x, s, c);
+        assert!(r[0].is_nan() || r[0] > 1e6); // denominator ~0
+    }
+
+    #[test]
+    fn pure_subject_noise_gives_small_ratio() {
+        // x[s*C + c] = s (varies across subjects only)
+        let (s, c) = (4, 3);
+        let mut x = FeatureMatrix::zeros(1, s * c);
+        for si in 0..s {
+            for ci in 0..c {
+                x.set(0, si * c + ci, si as f32);
+            }
+        }
+        let r = variance_ratio_per_voxel(&x, s, c);
+        assert!(r[0] < 1e-9);
+    }
+
+    #[test]
+    fn mixed_signal_ratio_near_expected() {
+        // value = contrast effect (var 1 over c) + subject effect
+        // (var 4 over s): ratio ≈ 1/4
+        let (s, c) = (30, 30);
+        let mut x = FeatureMatrix::zeros(1, s * c);
+        // use deterministic "effects": contrast c -> c mod 2 (var .25..),
+        // subject s -> s mod 2 scaled by 2
+        for si in 0..s {
+            for ci in 0..c {
+                let v = (ci % 2) as f32 + 2.0 * (si % 2) as f32;
+                x.set(0, si * c + ci, v);
+            }
+        }
+        let r = variance_ratio_per_voxel(&x, s, c)[0];
+        assert!((r - 0.25).abs() < 0.05, "ratio {r}");
+    }
+}

@@ -1,0 +1,100 @@
+//! Dense 3-D scalar volumes with x-fastest linearization.
+
+use crate::error::{shape, Result};
+
+/// A dense scalar field over an `[nx, ny, nz]` grid.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Volume {
+    /// Grid dimensions `[nx, ny, nz]`.
+    pub dims: [usize; 3],
+    /// `nx*ny*nz` values, x-fastest.
+    pub data: Vec<f32>,
+}
+
+impl Volume {
+    /// All-zero volume.
+    pub fn zeros(dims: [usize; 3]) -> Self {
+        Volume { dims, data: vec![0.0; dims[0] * dims[1] * dims[2]] }
+    }
+
+    /// Wrap an existing buffer (length-checked).
+    pub fn from_vec(dims: [usize; 3], data: Vec<f32>) -> Result<Self> {
+        let want = dims[0] * dims[1] * dims[2];
+        if data.len() != want {
+            return Err(shape(format!(
+                "Volume::from_vec: {} != {want}",
+                data.len()
+            )));
+        }
+        Ok(Volume { dims, data })
+    }
+
+    /// Number of voxels in the full grid.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the grid is empty.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Linear index of `(x, y, z)`.
+    #[inline]
+    pub fn idx(&self, x: usize, y: usize, z: usize) -> usize {
+        debug_assert!(x < self.dims[0] && y < self.dims[1] && z < self.dims[2]);
+        x + self.dims[0] * (y + self.dims[1] * z)
+    }
+
+    /// Inverse of [`Volume::idx`].
+    #[inline]
+    pub fn coords(&self, idx: usize) -> [usize; 3] {
+        let x = idx % self.dims[0];
+        let y = (idx / self.dims[0]) % self.dims[1];
+        let z = idx / (self.dims[0] * self.dims[1]);
+        [x, y, z]
+    }
+
+    /// Value at `(x, y, z)`.
+    #[inline]
+    pub fn get(&self, x: usize, y: usize, z: usize) -> f32 {
+        self.data[self.idx(x, y, z)]
+    }
+
+    /// Set value at `(x, y, z)`.
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, z: usize, v: f32) {
+        let i = self.idx(x, y, z);
+        self.data[i] = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idx_coords_roundtrip() {
+        let v = Volume::zeros([3, 4, 5]);
+        for i in 0..v.len() {
+            let [x, y, z] = v.coords(i);
+            assert_eq!(v.idx(x, y, z), i);
+        }
+    }
+
+    #[test]
+    fn x_is_fastest() {
+        let v = Volume::zeros([3, 4, 5]);
+        assert_eq!(v.idx(1, 0, 0), 1);
+        assert_eq!(v.idx(0, 1, 0), 3);
+        assert_eq!(v.idx(0, 0, 1), 12);
+    }
+
+    #[test]
+    fn from_vec_checks_len() {
+        assert!(Volume::from_vec([2, 2, 2], vec![0.0; 7]).is_err());
+        assert!(Volume::from_vec([2, 2, 2], vec![0.0; 8]).is_ok());
+    }
+}

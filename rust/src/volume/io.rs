@@ -1,0 +1,146 @@
+//! Dataset persistence: raw little-endian `f32` payload + JSON header.
+//!
+//! A deliberately simple interchange format (`.fcd` = fastclust data):
+//! `<name>.json` holds dims/mask/shape metadata, `<name>.f32raw` holds
+//! the `(p, n)` matrix row-major. Enough to hand datasets between the
+//! CLI stages and to cache expensive synthetic cohorts across runs.
+
+use std::fs;
+use std::io::{Read, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+use super::{FeatureMatrix, Mask, MaskedDataset};
+use crate::error::{invalid, Result};
+use crate::json::{self, Value};
+
+/// Write a dataset as `<stem>.json` + `<stem>.f32raw`.
+pub fn save_dataset(stem: &Path, ds: &MaskedDataset) -> Result<()> {
+    let header = Value::obj(vec![
+        ("format", Value::Str("fcd-v1".into())),
+        ("dims", Value::nums(ds.mask().dims.iter().map(|&d| d as f64))),
+        ("p", Value::Num(ds.p() as f64)),
+        ("n", Value::Num(ds.n() as f64)),
+        (
+            "voxels",
+            Value::nums(ds.mask().voxels.iter().map(|&v| v as f64)),
+        ),
+    ]);
+    fs::write(stem.with_extension("json"), header.to_string())?;
+    let mut f = fs::File::create(stem.with_extension("f32raw"))?;
+    let bytes: Vec<u8> =
+        ds.data().data.iter().flat_map(|v| v.to_le_bytes()).collect();
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Load a dataset previously written by [`save_dataset`].
+pub fn load_dataset(stem: &Path) -> Result<MaskedDataset> {
+    let text = fs::read_to_string(stem.with_extension("json"))?;
+    let header = json::parse(&text)?;
+    let format = header
+        .expect("format")?
+        .as_str()
+        .ok_or_else(|| invalid("format must be a string"))?;
+    if format != "fcd-v1" {
+        return Err(invalid(format!("unknown format {format}")));
+    }
+    let dims_arr = header
+        .expect("dims")?
+        .as_arr()
+        .ok_or_else(|| invalid("dims must be an array"))?;
+    if dims_arr.len() != 3 {
+        return Err(invalid("dims must have 3 entries"));
+    }
+    let mut dims = [0usize; 3];
+    for (i, d) in dims_arr.iter().enumerate() {
+        dims[i] = d.as_usize().ok_or_else(|| invalid("bad dim"))?;
+    }
+    let p = header
+        .expect("p")?
+        .as_usize()
+        .ok_or_else(|| invalid("p must be an int"))?;
+    let n = header
+        .expect("n")?
+        .as_usize()
+        .ok_or_else(|| invalid("n must be an int"))?;
+    let voxels: Vec<u32> = header
+        .expect("voxels")?
+        .as_arr()
+        .ok_or_else(|| invalid("voxels must be an array"))?
+        .iter()
+        .map(|v| {
+            v.as_u64()
+                .map(|x| x as u32)
+                .ok_or_else(|| invalid("bad voxel index"))
+        })
+        .collect::<Result<_>>()?;
+    if voxels.len() != p {
+        return Err(invalid("voxels length != p"));
+    }
+
+    let mut raw = Vec::new();
+    fs::File::open(stem.with_extension("f32raw"))?.read_to_end(&mut raw)?;
+    let want = p * n * 4;
+    if raw.len() != want {
+        return Err(invalid(format!(
+            "payload size {} != expected {want}",
+            raw.len()
+        )));
+    }
+    let data: Vec<f32> = raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+
+    // rebuild the mask from stored voxel indices
+    let total = dims[0] * dims[1] * dims[2];
+    let mut inverse = vec![-1i32; total];
+    for (i, &v) in voxels.iter().enumerate() {
+        if v as usize >= total {
+            return Err(invalid("voxel index out of grid"));
+        }
+        inverse[v as usize] = i as i32;
+    }
+    let mask = Mask { dims, voxels, inverse };
+    let x = FeatureMatrix::from_vec(p, n, data)?;
+    MaskedDataset::new(Arc::new(mask), x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::volume::SyntheticCube;
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let ds = SyntheticCube::new([6, 7, 5], 3.0, 0.5).generate(4, 77);
+        let dir = std::env::temp_dir().join("fastclust_io_test");
+        fs::create_dir_all(&dir).unwrap();
+        let stem = dir.join("ds");
+        save_dataset(&stem, &ds).unwrap();
+        let back = load_dataset(&stem).unwrap();
+        assert_eq!(back.p(), ds.p());
+        assert_eq!(back.n(), ds.n());
+        assert_eq!(back.mask().dims, ds.mask().dims);
+        assert_eq!(back.mask().voxels, ds.mask().voxels);
+        assert_eq!(back.data().data, ds.data().data);
+    }
+
+    #[test]
+    fn load_missing_fails_cleanly() {
+        let r = load_dataset(Path::new("/nonexistent/nope"));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn corrupted_header_rejected() {
+        let dir = std::env::temp_dir().join("fastclust_io_test2");
+        fs::create_dir_all(&dir).unwrap();
+        let stem = dir.join("bad");
+        fs::write(stem.with_extension("json"), "{\"format\": \"other\"}")
+            .unwrap();
+        fs::write(stem.with_extension("f32raw"), b"").unwrap();
+        assert!(load_dataset(&stem).is_err());
+    }
+}

@@ -1,0 +1,185 @@
+//! Brain masks: the irregular sub-lattice the paper's algorithms
+//! operate on. A mask maps between full-grid voxel indices and the
+//! compact `0..p` masked indexing used by feature matrices and graphs.
+
+use super::grid::Volume;
+use crate::rng::Rng;
+
+/// A boolean mask over a 3-D grid plus both index maps.
+#[derive(Clone, Debug)]
+pub struct Mask {
+    /// Grid dimensions.
+    pub dims: [usize; 3],
+    /// Full-grid linear indices of the `p` masked voxels, ascending.
+    pub voxels: Vec<u32>,
+    /// Full-grid -> masked index, `-1` when outside the mask.
+    pub inverse: Vec<i32>,
+}
+
+impl Mask {
+    /// Build from a predicate over grid coordinates.
+    pub fn from_predicate(
+        dims: [usize; 3],
+        mut pred: impl FnMut(usize, usize, usize) -> bool,
+    ) -> Self {
+        let total = dims[0] * dims[1] * dims[2];
+        let mut voxels = Vec::new();
+        let mut inverse = vec![-1i32; total];
+        let mut idx = 0usize;
+        for z in 0..dims[2] {
+            for y in 0..dims[1] {
+                for x in 0..dims[0] {
+                    let lin = x + dims[0] * (y + dims[1] * z);
+                    if pred(x, y, z) {
+                        voxels.push(lin as u32);
+                        inverse[lin] = voxels.len() as i32 - 1;
+                        idx += 1;
+                    }
+                }
+            }
+        }
+        let _ = idx;
+        Mask { dims, voxels, inverse }
+    }
+
+    /// The full-grid mask (all voxels in).
+    pub fn full(dims: [usize; 3]) -> Self {
+        Mask::from_predicate(dims, |_, _, _| true)
+    }
+
+    /// Number of masked voxels.
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.voxels.len()
+    }
+
+    /// Grid coordinates of masked voxel `i`.
+    #[inline]
+    pub fn coords(&self, i: usize) -> [usize; 3] {
+        let lin = self.voxels[i] as usize;
+        let x = lin % self.dims[0];
+        let y = (lin / self.dims[0]) % self.dims[1];
+        let z = lin / (self.dims[0] * self.dims[1]);
+        [x, y, z]
+    }
+
+    /// Masked index of grid coordinates, if inside.
+    #[inline]
+    pub fn masked_index(&self, x: usize, y: usize, z: usize) -> Option<usize> {
+        if x >= self.dims[0] || y >= self.dims[1] || z >= self.dims[2] {
+            return None;
+        }
+        let lin = x + self.dims[0] * (y + self.dims[1] * z);
+        let v = self.inverse[lin];
+        (v >= 0).then_some(v as usize)
+    }
+
+    /// Scatter a masked vector back into a dense volume (unmasked = 0).
+    /// This is the "explicit in original data space" property the paper
+    /// contrasts with random projections.
+    pub fn unmask(&self, values: &[f32]) -> Volume {
+        assert_eq!(values.len(), self.p(), "unmask: length mismatch");
+        let mut vol = Volume::zeros(self.dims);
+        for (i, &lin) in self.voxels.iter().enumerate() {
+            vol.data[lin as usize] = values[i];
+        }
+        vol
+    }
+
+    /// Gather a dense volume into masked order.
+    pub fn apply(&self, vol: &Volume) -> Vec<f32> {
+        assert_eq!(vol.dims, self.dims, "apply: dims mismatch");
+        self.voxels.iter().map(|&lin| vol.data[lin as usize]).collect()
+    }
+}
+
+/// A brain-like mask: an ellipsoid filling most of the grid with
+/// smooth random boundary perturbations (sulci-like indentations), so
+/// the lattice domain is irregular the way a real MNI mask is.
+pub fn synthetic_brain_mask(dims: [usize; 3], seed: u64) -> Mask {
+    let mut rng = Rng::new(seed).derive(0xB5A1);
+    // low-order random spherical-harmonic-ish perturbation coefficients
+    let coef: Vec<f64> = (0..8).map(|_| 0.06 * rng.normal()).collect();
+    let c = [
+        (dims[0] as f64 - 1.0) / 2.0,
+        (dims[1] as f64 - 1.0) / 2.0,
+        (dims[2] as f64 - 1.0) / 2.0,
+    ];
+    let r = [
+        0.92 * c[0].max(1.0),
+        0.92 * c[1].max(1.0),
+        0.86 * c[2].max(1.0),
+    ];
+    Mask::from_predicate(dims, |x, y, z| {
+        let u = (x as f64 - c[0]) / r[0];
+        let v = (y as f64 - c[1]) / r[1];
+        let w = (z as f64 - c[2]) / r[2];
+        let rho2 = u * u + v * v + w * w;
+        if rho2 > 1.2 {
+            return false;
+        }
+        // angular perturbation of the radius
+        let theta = w.atan2((u * u + v * v).sqrt());
+        let phi = v.atan2(u);
+        let bump = coef[0] * (2.0 * phi).cos()
+            + coef[1] * (2.0 * phi).sin()
+            + coef[2] * (3.0 * phi).cos()
+            + coef[3] * (3.0 * phi).sin()
+            + coef[4] * (2.0 * theta).cos()
+            + coef[5] * (2.0 * theta).sin()
+            + coef[6] * (4.0 * phi + theta).cos()
+            + coef[7] * (theta - 3.0 * phi).sin();
+        rho2.sqrt() <= 1.0 + bump
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_mask_indexing() {
+        let m = Mask::full([3, 3, 3]);
+        assert_eq!(m.p(), 27);
+        assert_eq!(m.masked_index(1, 1, 1), Some(13));
+        assert_eq!(m.coords(13), [1, 1, 1]);
+        assert_eq!(m.masked_index(3, 0, 0), None);
+    }
+
+    #[test]
+    fn unmask_apply_roundtrip() {
+        let m = synthetic_brain_mask([12, 14, 10], 3);
+        let vals: Vec<f32> = (0..m.p()).map(|i| i as f32).collect();
+        let vol = m.unmask(&vals);
+        assert_eq!(m.apply(&vol), vals);
+    }
+
+    #[test]
+    fn brain_mask_is_reasonable_fraction() {
+        let m = synthetic_brain_mask([20, 24, 18], 1);
+        let total = 20 * 24 * 18;
+        let frac = m.p() as f64 / total as f64;
+        assert!(
+            (0.2..0.8).contains(&frac),
+            "mask fraction {frac} out of range"
+        );
+    }
+
+    #[test]
+    fn brain_mask_deterministic() {
+        let a = synthetic_brain_mask([16, 16, 16], 9);
+        let b = synthetic_brain_mask([16, 16, 16], 9);
+        assert_eq!(a.voxels, b.voxels);
+        let c = synthetic_brain_mask([16, 16, 16], 10);
+        assert_ne!(a.voxels, c.voxels);
+    }
+
+    #[test]
+    fn inverse_consistent() {
+        let m = synthetic_brain_mask([10, 10, 10], 2);
+        for i in 0..m.p() {
+            let [x, y, z] = m.coords(i);
+            assert_eq!(m.masked_index(x, y, z), Some(i));
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! Volumetric data substrate: 3-D grids, brain masks, feature matrices,
+//! Gaussian smoothing and the synthetic dataset generators that stand in
+//! for the paper's HCP / OASIS / NYU cohorts (see DESIGN.md for the
+//! substitution rationale).
+//!
+//! Conventions:
+//! * a **volume** is a dense scalar field over an `[nx, ny, nz]` grid,
+//!   linearized x-fastest (`idx = x + nx*(y + ny*z)`);
+//! * a **mask** selects `p` in-brain voxels out of the grid;
+//! * a **feature matrix** `X` is `(p, n)`: one row per masked voxel,
+//!   one column per sample/timepoint — exactly the paper's orientation.
+
+mod grid;
+mod io;
+mod mask;
+mod smooth;
+mod synth;
+
+pub use grid::Volume;
+pub use io::{load_dataset, save_dataset};
+pub use mask::{synthetic_brain_mask, Mask};
+pub use smooth::{fwhm_to_sigma, smooth_volume};
+pub use synth::{
+    ContrastMapGenerator, MorphometryGenerator, RestingStateGenerator,
+    SyntheticCube,
+};
+
+use crate::error::{shape, Result};
+
+/// Dense `(rows, cols)` matrix of `f32`, row-major. The voxel-major
+/// `(p, n)` feature matrix of the paper, but also reused for any bulk
+/// numeric payload (compressed features `(k, n)`, sample-major views).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FeatureMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl FeatureMatrix {
+    /// Allocate a zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        FeatureMatrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Wrap an existing buffer; `data.len()` must equal `rows*cols`.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(shape(format!(
+                "FeatureMatrix::from_vec: {} != {rows}x{cols}",
+                data.len()
+            )));
+        }
+        Ok(FeatureMatrix { rows, cols, data })
+    }
+
+    /// Immutable row view.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutable row view.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Element accessor (debug-checked).
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    /// Element setter (debug-checked).
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Extract one column as an owned vector.
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self.get(r, c)).collect()
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> FeatureMatrix {
+        let mut out = FeatureMatrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Keep a subset of columns (samples) in the given order.
+    pub fn select_cols(&self, cols: &[usize]) -> FeatureMatrix {
+        let mut out = FeatureMatrix::zeros(self.rows, cols.len());
+        for r in 0..self.rows {
+            let src = self.row(r);
+            let dst = out.row_mut(r);
+            for (j, &c) in cols.iter().enumerate() {
+                dst[j] = src[c];
+            }
+        }
+        out
+    }
+
+    /// Keep a subset of rows (voxels / clusters) in the given order.
+    pub fn select_rows(&self, rows: &[usize]) -> FeatureMatrix {
+        let mut out = FeatureMatrix::zeros(rows.len(), self.cols);
+        for (i, &r) in rows.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// Squared Euclidean distance between two rows.
+    #[inline]
+    pub fn row_sqdist(&self, a: usize, b: usize) -> f32 {
+        let ra = self.row(a);
+        let rb = self.row(b);
+        let mut s = 0.0f32;
+        for i in 0..self.cols {
+            let d = ra[i] - rb[i];
+            s += d * d;
+        }
+        s
+    }
+
+    /// Frobenius norm.
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+}
+
+/// A dataset bound to a mask: feature matrix + geometry. This is the
+/// unit the pipeline passes between stages.
+#[derive(Clone, Debug)]
+pub struct MaskedDataset {
+    mask: std::sync::Arc<Mask>,
+    x: FeatureMatrix,
+}
+
+impl MaskedDataset {
+    /// Bind a `(p, n)` matrix to its mask (`p` must match).
+    pub fn new(mask: std::sync::Arc<Mask>, x: FeatureMatrix) -> Result<Self> {
+        if x.rows != mask.p() {
+            return Err(shape(format!(
+                "MaskedDataset: x.rows={} != mask.p()={}",
+                x.rows,
+                mask.p()
+            )));
+        }
+        Ok(MaskedDataset { mask, x })
+    }
+
+    /// Number of masked voxels.
+    pub fn p(&self) -> usize {
+        self.mask.p()
+    }
+
+    /// Number of samples.
+    pub fn n(&self) -> usize {
+        self.x.cols
+    }
+
+    /// The geometry.
+    pub fn mask(&self) -> &Mask {
+        &self.mask
+    }
+
+    /// Shared handle to the geometry.
+    pub fn mask_arc(&self) -> std::sync::Arc<Mask> {
+        self.mask.clone()
+    }
+
+    /// The `(p, n)` features.
+    pub fn data(&self) -> &FeatureMatrix {
+        &self.x
+    }
+
+    /// Mutable features (same shape contract).
+    pub fn data_mut(&mut self) -> &mut FeatureMatrix {
+        &mut self.x
+    }
+
+    /// Split columns into (train, test) by a permutation of samples.
+    pub fn split_cols(&self, train: &[usize], test: &[usize]) -> (Self, Self) {
+        (
+            MaskedDataset {
+                mask: self.mask.clone(),
+                x: self.x.select_cols(train),
+            },
+            MaskedDataset {
+                mask: self.mask.clone(),
+                x: self.x.select_cols(test),
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feature_matrix_roundtrip() {
+        let m = FeatureMatrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.])
+            .unwrap();
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+        assert_eq!(m.get(0, 2), 3.0);
+        assert_eq!(m.col(1), vec![2., 5.]);
+        let t = m.transpose();
+        assert_eq!(t.rows, 3);
+        assert_eq!(t.get(2, 1), 6.0);
+    }
+
+    #[test]
+    fn from_vec_rejects_bad_len() {
+        assert!(FeatureMatrix::from_vec(2, 2, vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn select_cols_and_rows() {
+        let m = FeatureMatrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.])
+            .unwrap();
+        let s = m.select_cols(&[2, 0]);
+        assert_eq!(s.data, vec![3., 1., 6., 4.]);
+        let r = m.select_rows(&[1]);
+        assert_eq!(r.data, vec![4., 5., 6.]);
+    }
+
+    #[test]
+    fn row_sqdist_matches_manual() {
+        let m = FeatureMatrix::from_vec(2, 2, vec![0., 0., 3., 4.]).unwrap();
+        assert_eq!(m.row_sqdist(0, 1), 25.0);
+    }
+}

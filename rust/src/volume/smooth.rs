@@ -1,0 +1,163 @@
+//! Separable Gaussian smoothing on 3-D grids.
+//!
+//! The paper's synthetic benchmark ("smooth random signal, FWHM=8mm")
+//! and every generator in [`super::synth`] need a controlled spatial
+//! frequency content; clinical convention specifies smoothness as FWHM
+//! in voxel/mm units, hence [`fwhm_to_sigma`].
+
+use super::grid::Volume;
+
+/// Convert a full-width-at-half-maximum to the Gaussian sigma:
+/// `FWHM = sigma * 2*sqrt(2*ln 2)`.
+pub fn fwhm_to_sigma(fwhm: f64) -> f64 {
+    fwhm / (2.0 * (2.0_f64 * std::f64::consts::LN_2).sqrt())
+}
+
+/// Build a normalized 1-D Gaussian kernel truncated at `4*sigma`.
+fn gauss_kernel(sigma: f64) -> Vec<f64> {
+    let radius = (4.0 * sigma).ceil().max(1.0) as usize;
+    let mut k = Vec::with_capacity(2 * radius + 1);
+    let s2 = 2.0 * sigma * sigma;
+    for i in 0..=(2 * radius) {
+        let d = i as f64 - radius as f64;
+        k.push((-d * d / s2).exp());
+    }
+    let sum: f64 = k.iter().sum();
+    for v in &mut k {
+        *v /= sum;
+    }
+    k
+}
+
+/// Convolve along one axis with reflective ("mirror") boundaries —
+/// the same boundary rule scipy.ndimage uses, so signal energy is
+/// preserved at the mask edge.
+fn convolve_axis(vol: &Volume, kernel: &[f64], axis: usize) -> Volume {
+    let [nx, ny, nz] = vol.dims;
+    let radius = kernel.len() / 2;
+    let mut out = Volume::zeros(vol.dims);
+    let len = [nx, ny, nz][axis];
+    // reflect index into [0, len)
+    let reflect = |i: isize| -> usize {
+        let mut i = i;
+        let n = len as isize;
+        if n == 1 {
+            return 0;
+        }
+        loop {
+            if i < 0 {
+                i = -i - 1;
+            } else if i >= n {
+                i = 2 * n - 1 - i;
+            } else {
+                return i as usize;
+            }
+        }
+    };
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                let mut acc = 0.0f64;
+                for (j, &w) in kernel.iter().enumerate() {
+                    let off = j as isize - radius as isize;
+                    let (sx, sy, sz) = match axis {
+                        0 => (reflect(x as isize + off), y, z),
+                        1 => (x, reflect(y as isize + off), z),
+                        _ => (x, y, reflect(z as isize + off)),
+                    };
+                    acc += w * vol.get(sx, sy, sz) as f64;
+                }
+                out.set(x, y, z, acc as f32);
+            }
+        }
+    }
+    out
+}
+
+/// Separable 3-D Gaussian smoothing with the given sigma (voxels).
+pub fn smooth_volume(vol: &Volume, sigma: f64) -> Volume {
+    if sigma <= 0.0 {
+        return vol.clone();
+    }
+    let k = gauss_kernel(sigma);
+    let a = convolve_axis(vol, &k, 0);
+    let b = convolve_axis(&a, &k, 1);
+    convolve_axis(&b, &k, 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn fwhm_conversion() {
+        // FWHM = 2.3548 * sigma
+        assert!((fwhm_to_sigma(2.354_82) - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn kernel_normalized_and_symmetric() {
+        let k = gauss_kernel(1.5);
+        let sum: f64 = k.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        for i in 0..k.len() / 2 {
+            assert!((k[i] - k[k.len() - 1 - i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn smoothing_preserves_constants() {
+        let mut v = Volume::zeros([8, 8, 8]);
+        v.data.fill(3.5);
+        let s = smooth_volume(&v, 2.0);
+        for &x in &s.data {
+            assert!((x - 3.5).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn smoothing_preserves_mean_and_reduces_variance() {
+        let mut v = Volume::zeros([12, 12, 12]);
+        let mut rng = Rng::new(11);
+        rng.fill_normal(&mut v.data);
+        let mean0: f64 =
+            v.data.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64;
+        let var0: f64 = v
+            .data
+            .iter()
+            .map(|&x| (x as f64 - mean0).powi(2))
+            .sum::<f64>()
+            / v.len() as f64;
+        let s = smooth_volume(&v, 1.5);
+        let mean1: f64 =
+            s.data.iter().map(|&x| x as f64).sum::<f64>() / s.len() as f64;
+        let var1: f64 = s
+            .data
+            .iter()
+            .map(|&x| (x as f64 - mean1).powi(2))
+            .sum::<f64>()
+            / s.len() as f64;
+        assert!((mean0 - mean1).abs() < 0.02, "{mean0} vs {mean1}");
+        assert!(var1 < 0.3 * var0, "var {var0} -> {var1}");
+    }
+
+    #[test]
+    fn zero_sigma_is_identity() {
+        let mut v = Volume::zeros([5, 5, 5]);
+        Rng::new(3).fill_normal(&mut v.data);
+        assert_eq!(smooth_volume(&v, 0.0), v);
+    }
+
+    #[test]
+    fn impulse_spreads_symmetrically() {
+        let mut v = Volume::zeros([9, 9, 9]);
+        v.set(4, 4, 4, 1.0);
+        let s = smooth_volume(&v, 1.0);
+        assert!(s.get(4, 4, 4) > s.get(3, 4, 4));
+        assert!((s.get(3, 4, 4) - s.get(5, 4, 4)).abs() < 1e-6);
+        assert!((s.get(4, 3, 4) - s.get(4, 5, 4)).abs() < 1e-6);
+        let total: f64 = s.data.iter().map(|&x| x as f64).sum();
+        assert!((total - 1.0).abs() < 1e-5);
+    }
+}

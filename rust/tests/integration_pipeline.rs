@@ -1,0 +1,93 @@
+//! Integration: the full decoding pipeline across modules — synthetic
+//! cohort → lattice → clustering → reduction → CV logistic regression —
+//! plus cross-method consistency checks.
+
+use fastclust::config::{EstimatorConfig, Method, ReduceConfig};
+use fastclust::coordinator::{run_decoding_pipeline, PipelineBuilder};
+use fastclust::volume::MorphometryGenerator;
+
+fn cohort() -> (fastclust::volume::MaskedDataset, Vec<u8>) {
+    MorphometryGenerator::new([12, 14, 10]).generate(60, 99)
+}
+
+#[test]
+fn every_method_runs_end_to_end() {
+    let (ds, y) = cohort();
+    let est = EstimatorConfig {
+        cv_folds: 3,
+        max_iter: 60,
+        tol: 1e-3,
+        ..Default::default()
+    };
+    for method in [
+        Method::Fast,
+        Method::RandSingle,
+        Method::Single,
+        Method::Ward,
+        Method::RandomProjection,
+        Method::None,
+    ] {
+        let reduce = ReduceConfig { method, k: 0, ratio: 12, seed: 2 };
+        let rep = run_decoding_pipeline(&ds, &y, &reduce, &est)
+            .unwrap_or_else(|e| panic!("{} failed: {e}", method.name()));
+        assert!(
+            rep.accuracy > 0.45,
+            "{}: accuracy {} below chance band",
+            method.name(),
+            rep.accuracy
+        );
+        assert_eq!(rep.fold_accuracies.len(), 3);
+    }
+}
+
+#[test]
+fn pipeline_is_deterministic() {
+    let (ds, y) = cohort();
+    let reduce =
+        ReduceConfig { method: Method::Fast, k: 0, ratio: 10, seed: 5 };
+    let est = EstimatorConfig {
+        cv_folds: 4,
+        max_iter: 80,
+        ..Default::default()
+    };
+    let a = run_decoding_pipeline(&ds, &y, &reduce, &est).unwrap();
+    let b = run_decoding_pipeline(&ds, &y, &reduce, &est).unwrap();
+    assert_eq!(a.fold_accuracies, b.fold_accuracies);
+    assert_eq!(a.k, b.k);
+}
+
+#[test]
+fn worker_parallelism_does_not_change_results() {
+    let (ds, y) = cohort();
+    let reduce =
+        ReduceConfig { method: Method::Ward, k: 40, ratio: 0, seed: 1 };
+    let est = EstimatorConfig {
+        cv_folds: 4,
+        max_iter: 60,
+        ..Default::default()
+    };
+    let seq = PipelineBuilder::new(reduce.clone(), est.clone())
+        .workers(1)
+        .run(&ds, &y)
+        .unwrap();
+    let par = PipelineBuilder::new(reduce, est)
+        .workers(3)
+        .run(&ds, &y)
+        .unwrap();
+    assert_eq!(seq.fold_accuracies, par.fold_accuracies);
+}
+
+#[test]
+fn explicit_k_is_honored_across_methods() {
+    let (ds, y) = cohort();
+    let est = EstimatorConfig {
+        cv_folds: 3,
+        max_iter: 40,
+        ..Default::default()
+    };
+    for method in [Method::Fast, Method::Ward, Method::RandomProjection] {
+        let reduce = ReduceConfig { method, k: 33, ratio: 0, seed: 7 };
+        let rep = run_decoding_pipeline(&ds, &y, &reduce, &est).unwrap();
+        assert_eq!(rep.k, 33, "{}", method.name());
+    }
+}

@@ -1,0 +1,227 @@
+//! Integration: the three-layer AOT path. Requires `make artifacts`
+//! (the Makefile test target guarantees this ordering).
+//!
+//! Verifies that the PJRT-executed HLO artifacts agree numerically with
+//! the native rust implementations — the cross-layer correctness
+//! contract (python pytest establishes kernel == oracle; these tests
+//! establish rust-native == rust-loaded-oracle; transitively all three
+//! agree).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use fastclust::estimators::{LogisticRegression, LogregBackend};
+use fastclust::rng::Rng;
+use fastclust::runtime::Runtime;
+use fastclust::volume::FeatureMatrix;
+
+fn runtime() -> Arc<Runtime> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Arc::new(Runtime::new(&dir).expect("run `make artifacts` first"))
+}
+
+#[test]
+fn smoke_artifact_matches_manifest_golden() {
+    let rt = runtime();
+    let exe = rt.executable("smoke_matmul_2x2").unwrap();
+    let out = exe
+        .run(&[
+            vec![1.0f32, 2.0, 3.0, 4.0].into(),
+            vec![1.0f32; 4].into(),
+        ])
+        .unwrap();
+    assert_eq!(out[0].as_f32().unwrap(), &[5.0, 5.0, 9.0, 9.0]);
+}
+
+#[test]
+fn pjrt_logreg_step_matches_native_gradient() {
+    let rt = runtime();
+    let mut rng = Rng::new(31);
+    let (n, k) = (100, 64);
+    let mut x = FeatureMatrix::zeros(n, k);
+    rng.fill_normal(&mut x.data);
+    let y: Vec<f32> = (0..n).map(|_| (rng.f64() < 0.5) as u8 as f32).collect();
+
+    let native = LogisticRegression {
+        max_iter: 0, // evaluate at w=0 only
+        ..Default::default()
+    };
+    let pjrt = LogisticRegression {
+        max_iter: 0,
+        backend: LogregBackend::Runtime(rt),
+        ..Default::default()
+    };
+    // max_iter=0 -> fit returns after the first loss/grad eval at 0
+    let fn_ = native.fit(&x, &y).unwrap();
+    let fp = pjrt.fit(&x, &y).unwrap();
+    assert!(
+        (fn_.loss - fp.loss).abs() < 1e-4,
+        "loss native {} vs pjrt {}",
+        fn_.loss,
+        fp.loss
+    );
+    assert!(
+        (fn_.grad_norm - fp.grad_norm).abs() < 1e-4,
+        "grad norm native {} vs pjrt {}",
+        fn_.grad_norm,
+        fp.grad_norm
+    );
+}
+
+#[test]
+fn pjrt_logreg_full_fit_agrees_with_native() {
+    let rt = runtime();
+    let mut rng = Rng::new(32);
+    let (n, k) = (80, 32);
+    let mut x = FeatureMatrix::zeros(n, k);
+    rng.fill_normal(&mut x.data);
+    // separable-ish labels from a random hyperplane
+    let w_true: Vec<f32> = (0..k).map(|_| rng.normal32()).collect();
+    let y: Vec<f32> = (0..n)
+        .map(|i| {
+            let z: f32 = x.row(i).iter().zip(&w_true).map(|(a, b)| a * b).sum();
+            (z > 0.0) as u8 as f32
+        })
+        .collect();
+
+    let native = LogisticRegression {
+        tol: 1e-5,
+        max_iter: 300,
+        ..Default::default()
+    };
+    let pjrt = LogisticRegression {
+        tol: 1e-5,
+        max_iter: 300,
+        backend: LogregBackend::Runtime(rt),
+        ..Default::default()
+    };
+    let fit_n = native.fit(&x, &y).unwrap();
+    let fit_p = pjrt.fit(&x, &y).unwrap();
+    // both converged to the same optimum of the same strictly convex
+    // objective
+    assert!((fit_n.loss - fit_p.loss).abs() < 1e-3);
+    for j in 0..k {
+        assert!(
+            (fit_n.w[j] - fit_p.w[j]).abs() < 5e-2,
+            "w[{j}] native {} vs pjrt {}",
+            fit_n.w[j],
+            fit_p.w[j]
+        );
+    }
+    let acc_n = LogisticRegression::accuracy(&fit_n, &x, &y);
+    let acc_p = LogisticRegression::accuracy(&fit_p, &x, &y);
+    assert_eq!(acc_n, acc_p);
+}
+
+#[test]
+fn fused_gd_artifact_converges_to_native_optimum() {
+    let rt = runtime();
+    let mut rng = Rng::new(35);
+    let (n, k) = (120, 48);
+    let mut x = FeatureMatrix::zeros(n, k);
+    rng.fill_normal(&mut x.data);
+    let w_true: Vec<f32> = (0..k).map(|_| rng.normal32()).collect();
+    let y: Vec<f32> = (0..n)
+        .map(|i| {
+            let z: f32 =
+                x.row(i).iter().zip(&w_true).map(|(a, b)| a * b).sum();
+            (z > 0.0) as u8 as f32
+        })
+        .collect();
+    let lr = LogisticRegression {
+        lambda: 1e-2,
+        tol: 1e-4,
+        max_iter: 3000,
+        ..Default::default()
+    };
+    let native = lr.fit(&x, &y).unwrap();
+    let fused = lr.fit_fused(&rt, &x, &y).unwrap();
+    assert!(
+        (native.loss - fused.loss).abs() < 5e-3,
+        "loss native {} vs fused {}",
+        native.loss,
+        fused.loss
+    );
+    let acc_n = LogisticRegression::accuracy(&native, &x, &y);
+    let acc_f = LogisticRegression::accuracy(&fused, &x, &y);
+    assert!(
+        (acc_n - acc_f).abs() < 0.03,
+        "accuracy native {acc_n} vs fused {acc_f}"
+    );
+    // the whole point: far fewer PJRT dispatches than gradient steps
+    assert!(
+        fused.evals * 16 <= fused.iters.max(64),
+        "fused path did not amortize dispatches: {} evals for {} iters",
+        fused.evals,
+        fused.iters
+    );
+}
+
+#[test]
+fn reduce_apply_artifact_matches_native_cluster_means() {
+    let rt = runtime();
+    let exe = rt.executable("reduce_apply_p4096_k512_n64").unwrap();
+    let (p, k, n) = (4096usize, 512usize, 64usize);
+    let mut rng = Rng::new(33);
+    // random labels covering all clusters
+    let mut labels: Vec<u32> =
+        (0..p).map(|_| rng.below(k) as u32).collect();
+    for c in 0..k {
+        labels[c] = c as u32;
+    }
+    let mut onehot = vec![0.0f32; p * k];
+    for (i, &l) in labels.iter().enumerate() {
+        onehot[i * k + l as usize] = 1.0;
+    }
+    let mut x = vec![0.0f32; p * n];
+    for v in &mut x {
+        *v = rng.normal32();
+    }
+    let out = exe
+        .run(&[onehot.into(), x.clone().into()])
+        .unwrap();
+    let got = out[0].as_f32().unwrap();
+
+    // native cluster means
+    let fm = FeatureMatrix::from_vec(p, n, x).unwrap();
+    let lab = fastclust::cluster::Labels::new(labels, k).unwrap();
+    let red = fastclust::reduce::ClusterReduce::from_labels(&lab);
+    use fastclust::reduce::Reducer;
+    let want = red.reduce(&fm);
+    assert_eq!(got.len(), want.data.len());
+    for i in 0..got.len() {
+        assert!(
+            (got[i] - want.data[i]).abs() < 1e-3,
+            "mismatch at {i}: pjrt {} vs native {}",
+            got[i],
+            want.data[i]
+        );
+    }
+}
+
+#[test]
+fn pairwise_sqdist_artifact_matches_native() {
+    let rt = runtime();
+    let exe = rt.executable("pairwise_sqdist_n256_d2048").unwrap();
+    let (n, d) = (256usize, 2048usize);
+    let mut rng = Rng::new(34);
+    let mut s = vec![0.0f32; n * d];
+    for v in &mut s {
+        *v = rng.normal32();
+    }
+    let out = exe.run(&[s.clone().into()]).unwrap();
+    let got = out[0].as_f32().unwrap();
+    // spot-check a handful of entries against the direct computation
+    for &(a, b) in &[(0usize, 1usize), (5, 200), (255, 0), (100, 100)] {
+        let mut want = 0.0f64;
+        for c in 0..d {
+            let diff = (s[a * d + c] - s[b * d + c]) as f64;
+            want += diff * diff;
+        }
+        let gotv = got[a * n + b] as f64;
+        assert!(
+            (gotv - want).abs() < 1e-1 * want.max(1.0),
+            "d({a},{b}): pjrt {gotv} vs native {want}"
+        );
+    }
+}

@@ -1,0 +1,277 @@
+//! Property-based tests (hand-rolled sweep harness; the offline build
+//! carries no proptest). Each property is checked over many seeded
+//! random instances; failures print the offending seed so the case can
+//! be replayed exactly.
+
+use fastclust::cluster::{
+    cluster_counts, AverageLinkage, Clusterer, CompleteLinkage, FastCluster,
+    KMeans, RandSingle, SingleLinkage, Ward,
+};
+use fastclust::graph::{
+    connected_components, kruskal_mst, nearest_neighbor_edges, Edge,
+    LatticeGraph, UnionFind,
+};
+use fastclust::reduce::{ClusterReduce, Reducer, SparseRandomProjection};
+use fastclust::rng::Rng;
+use fastclust::volume::{synthetic_brain_mask, FeatureMatrix, SyntheticCube};
+
+/// Sweep driver: run `prop(seed)` for `n` seeds.
+fn for_seeds(n: u64, mut prop: impl FnMut(u64)) {
+    for seed in 0..n {
+        prop(seed);
+    }
+}
+
+fn random_instance(
+    seed: u64,
+) -> (FeatureMatrix, LatticeGraph, usize) {
+    let mut rng = Rng::new(seed);
+    let dims = [
+        4 + rng.below(6),
+        4 + rng.below(6),
+        3 + rng.below(5),
+    ];
+    let n = 1 + rng.below(6);
+    let ds = SyntheticCube::new(dims, 2.0 + 3.0 * rng.f64(), rng.f64())
+        .generate(n, seed ^ 0xDA7A);
+    let g = LatticeGraph::from_mask(ds.mask());
+    let p = ds.p();
+    let k = 2 + rng.below(p / 2);
+    (ds.data().clone(), g, k)
+}
+
+/// Every clusterer: output is a partition into exactly k non-empty,
+/// spatially-connected clusters (k-means exempt from connectivity).
+#[test]
+fn prop_all_clusterers_produce_valid_k_partitions() {
+    for_seeds(8, |seed| {
+        let (x, g, k) = random_instance(seed);
+        let fast = FastCluster::default();
+        let kmeans = KMeans::default();
+        let clusterers: Vec<(&dyn Clusterer, bool)> = vec![
+            (&fast, true),
+            (&RandSingle, true),
+            (&SingleLinkage, true),
+            (&AverageLinkage, true),
+            (&CompleteLinkage, true),
+            (&Ward, true),
+            (&kmeans, false),
+        ];
+        for (c, needs_connectivity) in clusterers {
+            let labels = c
+                .fit(&x, &g, k, seed)
+                .unwrap_or_else(|e| panic!("seed {seed} {}: {e}", c.name()));
+            assert_eq!(labels.k, k, "seed {seed} {}", c.name());
+            assert_eq!(labels.p(), x.rows);
+            let counts = cluster_counts(&labels);
+            assert!(
+                counts.iter().all(|&c| c > 0),
+                "seed {seed} {}: empty cluster",
+                c.name()
+            );
+            if needs_connectivity {
+                assert_connected(&labels.labels, labels.k, &g, c.name(), seed);
+            }
+        }
+    });
+}
+
+fn assert_connected(
+    labels: &[u32],
+    k: usize,
+    g: &LatticeGraph,
+    name: &str,
+    seed: u64,
+) {
+    for cl in 0..k as u32 {
+        let members: Vec<usize> =
+            (0..labels.len()).filter(|&i| labels[i] == cl).collect();
+        let mut seen = vec![false; labels.len()];
+        let mut stack = vec![members[0]];
+        seen[members[0]] = true;
+        let mut cnt = 0;
+        while let Some(v) = stack.pop() {
+            cnt += 1;
+            for &nb in g.neighbors(v) {
+                let nb = nb as usize;
+                if !seen[nb] && labels[nb] == cl {
+                    seen[nb] = true;
+                    stack.push(nb);
+                }
+            }
+        }
+        assert_eq!(
+            cnt,
+            members.len(),
+            "seed {seed} {name}: cluster {cl} disconnected"
+        );
+    }
+}
+
+/// Fast clustering halves the cluster count every round: round count
+/// is bounded by ceil(log2(p/k)) + 1.
+#[test]
+fn prop_fast_clustering_round_bound() {
+    for_seeds(10, |seed| {
+        let (x, g, k) = random_instance(seed);
+        let (_, trace) = FastCluster::default()
+            .fit_trace(&x, &g, k, seed)
+            .unwrap();
+        let p = x.rows;
+        let bound =
+            ((p as f64 / k as f64).log2().ceil() as usize).max(1) + 1;
+        assert!(
+            trace.cluster_counts.len() - 1 <= bound,
+            "seed {seed}: {} rounds > bound {bound} (p={p}, k={k})",
+            trace.cluster_counts.len() - 1
+        );
+    });
+}
+
+/// The 1-NN graph never percolates: every component has >= 2 vertices
+/// and component count <= p/2 (Teng & Yao).
+#[test]
+fn prop_nn_graph_no_singletons() {
+    for_seeds(10, |seed| {
+        let mut rng = Rng::new(seed ^ 0x99);
+        let dims = [5 + rng.below(6), 5 + rng.below(6), 4 + rng.below(4)];
+        let mask = synthetic_brain_mask(dims, seed);
+        let g = LatticeGraph::from_mask(&mask);
+        if g.n_vertices == 0 {
+            return;
+        }
+        let mut wg = g.clone();
+        for e in &mut wg.edges {
+            e.w = rng.f32() + 1e-5;
+        }
+        let nn = nearest_neighbor_edges(&wg);
+        let (labels, q) = connected_components(wg.n_vertices, &nn);
+        let mut sizes = vec![0usize; q];
+        for &l in &labels {
+            sizes[l as usize] += 1;
+        }
+        // isolated mask voxels (no lattice neighbors) are legitimate
+        // singletons; all others must pair up
+        for (c, &s) in sizes.iter().enumerate() {
+            if s == 1 {
+                let v = labels.iter().position(|&l| l as usize == c).unwrap();
+                assert_eq!(
+                    wg.degree(v),
+                    0,
+                    "seed {seed}: non-isolated singleton"
+                );
+            }
+        }
+    });
+}
+
+/// MST via Kruskal is minimal: no non-tree edge can replace a heavier
+/// tree edge on the cycle it closes (verified via the cut property on
+/// random small graphs).
+#[test]
+fn prop_mst_weight_no_better_than_alternative_spanning_trees() {
+    for_seeds(12, |seed| {
+        let mut rng = Rng::new(seed ^ 0x7777);
+        let n = 6 + rng.below(8);
+        let mut edges = Vec::new();
+        for u in 0..n as u32 {
+            for v in (u + 1)..n as u32 {
+                if rng.f64() < 0.5 {
+                    edges.push(Edge::new(u, v, rng.f32()));
+                }
+            }
+        }
+        for u in 0..(n as u32 - 1) {
+            edges.push(Edge::new(u, u + 1, 1.0 + rng.f32()));
+        }
+        let tree = kruskal_mst(n, &edges);
+        let total: f64 = tree.iter().map(|e| e.w as f64).sum();
+        // random alternative spanning trees are never lighter
+        for _ in 0..5 {
+            let mut alt_edges = edges.clone();
+            rng.shuffle(&mut alt_edges);
+            let mut uf = UnionFind::new(n);
+            let mut alt_total = 0.0f64;
+            let mut cnt = 0;
+            for e in &alt_edges {
+                if uf.union(e.u, e.v) {
+                    alt_total += e.w as f64;
+                    cnt += 1;
+                }
+            }
+            if cnt == tree.len() {
+                assert!(
+                    total <= alt_total + 1e-6,
+                    "seed {seed}: MST {total} heavier than random tree {alt_total}"
+                );
+            }
+        }
+    });
+}
+
+/// reduce->expand is an idempotent projection that preserves constants
+/// and never increases the Frobenius norm.
+#[test]
+fn prop_cluster_projection_contracts() {
+    for_seeds(10, |seed| {
+        let (x, g, k) = random_instance(seed);
+        let labels = FastCluster::default().fit(&x, &g, k, seed).unwrap();
+        let red = ClusterReduce::from_labels(&labels);
+        let proj = red.project(&x);
+        let proj2 = red.project(&proj);
+        for (a, b) in proj.data.iter().zip(&proj2.data) {
+            assert!((a - b).abs() < 1e-4, "seed {seed}: not idempotent");
+        }
+        assert!(
+            proj.frob_norm() <= x.frob_norm() * (1.0 + 1e-6),
+            "seed {seed}: projection expanded the norm"
+        );
+    });
+}
+
+/// JL property of the sparse RP: E[||Rx||^2] = ||x||^2 within
+/// concentration bounds across seeds.
+#[test]
+fn prop_sparse_rp_norm_concentration() {
+    let p = 600;
+    let k = 128;
+    let mut ratios = Vec::new();
+    for_seeds(12, |seed| {
+        let rp = SparseRandomProjection::new(p, k, seed);
+        let mut rng = Rng::new(seed ^ 0xF0);
+        let x: Vec<f32> = (0..p).map(|_| rng.normal32()).collect();
+        let xr = rp.reduce_vec(&x);
+        let n0: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum();
+        let n1: f64 = xr.iter().map(|&v| (v as f64).powi(2)).sum();
+        ratios.push(n1 / n0);
+    });
+    let mean = ratios.iter().sum::<f64>() / ratios.len() as f64;
+    assert!(
+        (mean - 1.0).abs() < 0.12,
+        "norm-ratio mean {mean} drifted from 1 (ratios {ratios:?})"
+    );
+}
+
+/// Union-find: after any union sequence, n_sets + executed unions = n.
+#[test]
+fn prop_union_find_counting() {
+    for_seeds(20, |seed| {
+        let mut rng = Rng::new(seed ^ 0xABCD);
+        let n = 10 + rng.below(100);
+        let mut uf = UnionFind::new(n);
+        let mut effective = 0;
+        for _ in 0..n * 2 {
+            let a = rng.below(n) as u32;
+            let b = rng.below(n) as u32;
+            if uf.union(a, b) {
+                effective += 1;
+            }
+        }
+        assert_eq!(uf.n_sets() + effective, n, "seed {seed}");
+        let labels = uf.labels();
+        let mut uniq = labels.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), uf.n_sets(), "seed {seed}");
+    });
+}
