@@ -1,0 +1,52 @@
+//! Bench: the sharded parallel engine vs single-thread Alg. 1 —
+//! wall-clock scaling across shard counts plus the variance-ratio and
+//! η quality metrics (docs/adr/002 acceptance numbers).
+//!
+//! ```bash
+//! cargo bench --bench sharded_scaling
+//! ```
+
+use fastclust::bench_harness::{sharded, write_csv};
+
+fn main() {
+    let cfg = sharded::ShardedConfig::default();
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!(
+        "sharded scaling driver: dims={:?} subjects={} contrasts={} \
+         ratio={} shard_counts={:?} ({cores} cores)",
+        cfg.dims, cfg.n_subjects, cfg.n_contrasts, cfg.ratio,
+        cfg.shard_counts
+    );
+    let rows = sharded::run(&cfg);
+    let table = sharded::table(&rows);
+    table.print();
+    write_csv(&table, std::path::Path::new("results/sharded_scaling.csv"))
+        .expect("csv");
+
+    // hard acceptance gates (ADR-002)
+    for r in &rows {
+        assert_eq!(r.k, rows[0].k, "REGRESSION: shard count changed k");
+        assert!(
+            (r.vr_vs_single - 1.0).abs() <= 0.05,
+            "REGRESSION: shards={} variance-ratio quality {} outside ±5%",
+            r.shards,
+            r.vr_vs_single
+        );
+    }
+    let best = rows
+        .iter()
+        .filter(|r| r.shards > 1)
+        .map(|r| r.speedup)
+        .fold(f64::NAN, f64::max);
+    if cores >= 2 && rows.iter().any(|r| r.shards > 1) {
+        assert!(
+            best > 1.0,
+            "REGRESSION: no multi-core speedup (best {best:.2}x)"
+        );
+        println!("sharded scaling OK: best speedup {best:.2}x on {cores} cores");
+    } else {
+        println!("single core available — speedup gate skipped");
+    }
+}

@@ -49,6 +49,7 @@ impl Default for Fig3Config {
             methods: vec![
                 Method::RandomProjection,
                 Method::Fast,
+                Method::FastSharded,
                 Method::RandSingle,
                 Method::Single,
                 Method::Ward,

@@ -87,6 +87,7 @@ pub fn run(cfg: &Fig6Config) -> Vec<Fig6Row> {
                     k: 0,
                     ratio,
                     seed: cfg.seed + ratio as u64,
+                    shards: 0,
                 };
                 let est = EstimatorConfig {
                     tol,

@@ -1,5 +1,6 @@
 //! The paper-reproduction harness: one driver per evaluation figure
-//! (Fig 2 – Fig 7), plus a criterion-style timing core ([`timeit`]) and
+//! (Fig 2 – Fig 7), the [`sharded`] scaling sweep for the parallel
+//! engine, plus a criterion-style timing core ([`timeit`]) and
 //! table/CSV reporting — all dependency-free (the offline build has no
 //! criterion).
 //!
@@ -15,6 +16,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 mod report;
+pub mod sharded;
 
 pub use report::{write_csv, Table};
 

@@ -1,0 +1,224 @@
+//! Sharded-vs-single-thread evaluation of the parallel engine
+//! (docs/adr/002): wall-clock scaling across shard counts plus the two
+//! quality metrics the paper judges compressions by — the Fig-5
+//! variance ratio (signal/noise after compression) and the Fig-4 η
+//! distance-preservation statistic.
+//!
+//! The `shards = 1` row *is* the single-thread
+//! [`crate::cluster::FastCluster`] baseline (the sharded engine
+//! degenerates to it exactly), so `speedup` and `vr_vs_single` are
+//! paired comparisons on identical data.
+
+use crate::bench_harness::{timeit, Table};
+use crate::cluster::{Clusterer, Labels, ShardedFastCluster};
+use crate::graph::LatticeGraph;
+use crate::reduce::{ClusterReduce, Reducer};
+use crate::stats::{median, variance_ratio_per_voxel, EtaSummary};
+use crate::volume::{ContrastMapGenerator, MaskedDataset};
+
+/// One shard count's timing + quality summary.
+#[derive(Clone, Debug)]
+pub struct ShardedRow {
+    /// Shards (and worker threads) used; `1` = single-thread baseline.
+    pub shards: usize,
+    /// Mean seconds to produce `k` clusters.
+    pub secs: f64,
+    /// Baseline seconds / this row's seconds (`1.0` for the baseline).
+    pub speedup: f64,
+    /// Clusters produced (must equal the requested `k`).
+    pub k: usize,
+    /// Median per-voxel variance ratio after cluster compression
+    /// (higher = better denoising; the Fig-5 statistic).
+    pub median_vr: f64,
+    /// This row's `median_vr` relative to the baseline row's
+    /// (`1.0` = identical quality; the acceptance band is ±5%).
+    pub vr_vs_single: f64,
+    /// Mean of the η distance-preservation ratios (Fig 4).
+    pub eta_mean: f64,
+    /// Variance of η across sample pairs (the paper's figure of
+    /// merit: lower = more faithful compression).
+    pub eta_var: f64,
+}
+
+/// Parameters of the sharded scaling sweep.
+#[derive(Clone, Debug)]
+pub struct ShardedConfig {
+    /// Grid dims.
+    pub dims: [usize; 3],
+    /// Subjects in the contrast-map cohort.
+    pub n_subjects: usize,
+    /// Contrasts per subject.
+    pub n_contrasts: usize,
+    /// Compression ratio (`k = p / ratio`).
+    pub ratio: usize,
+    /// Shard counts to sweep; `1` must come first (the baseline).
+    pub shard_counts: Vec<usize>,
+    /// Timing repetitions per row.
+    pub reps: usize,
+    /// Root seed.
+    pub seed: u64,
+}
+
+impl Default for ShardedConfig {
+    fn default() -> Self {
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let mut shard_counts = vec![1usize, 2, 4, 8];
+        shard_counts.retain(|&s| s == 1 || s <= cores);
+        ShardedConfig {
+            dims: [22, 26, 22],
+            n_subjects: 16,
+            n_contrasts: 5,
+            ratio: 10,
+            shard_counts,
+            reps: 3,
+            seed: 23,
+        }
+    }
+}
+
+/// Quality metrics of one fitted partition on the cohort.
+fn quality(
+    ds: &MaskedDataset,
+    labels: &Labels,
+    n_subjects: usize,
+    n_contrasts: usize,
+) -> (f64, f64, f64) {
+    let red = ClusterReduce::from_labels(labels);
+    let xk = red.reduce(ds.data());
+    let cluster_vr =
+        variance_ratio_per_voxel(&xk, n_subjects, n_contrasts);
+    // expand per-cluster ratios back to voxels so the median is
+    // weighted by cluster size, as in Fig 5
+    let per_voxel: Vec<f64> = labels
+        .labels
+        .iter()
+        .map(|&c| cluster_vr[c as usize])
+        .filter(|v| v.is_finite())
+        .collect();
+    let med = median(&per_voxel);
+    // η on the norm-preserving scaled reduction (Fig 4's convention)
+    let eta = EtaSummary::from_ratios(&crate::stats::eta_ratios(
+        ds.data(),
+        &red.reduce_scaled(ds.data()),
+    ));
+    (med, eta.mean, eta.var)
+}
+
+/// Run the sweep: for each shard count, time the fit and score the
+/// resulting partition.
+pub fn run(cfg: &ShardedConfig) -> Vec<ShardedRow> {
+    let ds = ContrastMapGenerator::new(cfg.dims).generate(
+        cfg.n_subjects,
+        cfg.n_contrasts,
+        cfg.seed,
+    );
+    let graph = LatticeGraph::from_mask(ds.mask());
+    let p = ds.p();
+    let k = (p / cfg.ratio).max(2);
+
+    let mut rows: Vec<ShardedRow> = Vec::new();
+    let mut base_secs = f64::NAN;
+    let mut base_vr = f64::NAN;
+    for &shards in &cfg.shard_counts {
+        let engine =
+            ShardedFastCluster { n_shards: shards, ..Default::default() };
+        let label = format!("fast-sharded({shards})");
+        let (bench, labels) = timeit(&label, 0, cfg.reps.max(1), || {
+            engine.fit(ds.data(), &graph, k, cfg.seed).expect("fit")
+        });
+        let (median_vr, eta_mean, eta_var) =
+            quality(&ds, &labels, cfg.n_subjects, cfg.n_contrasts);
+        if rows.is_empty() {
+            base_secs = bench.mean_s;
+            base_vr = median_vr;
+        }
+        rows.push(ShardedRow {
+            shards,
+            secs: bench.mean_s,
+            speedup: base_secs / bench.mean_s,
+            k: labels.k,
+            median_vr,
+            vr_vs_single: median_vr / base_vr,
+            eta_mean,
+            eta_var,
+        });
+    }
+    rows
+}
+
+/// Render the scaling table.
+pub fn table(rows: &[ShardedRow]) -> Table {
+    let mut t = Table::new(
+        "Sharded fast clustering — scaling and quality vs single-thread",
+        &[
+            "shards", "seconds", "speedup", "k", "median_vr",
+            "vr_vs_single", "eta_mean", "eta_var",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            r.shards.to_string(),
+            format!("{:.4}", r.secs),
+            format!("{:.2}x", r.speedup),
+            r.k.to_string(),
+            format!("{:.4}", r.median_vr),
+            format!("{:.4}", r.vr_vs_single),
+            format!("{:.4}", r.eta_mean),
+            format!("{:.5}", r.eta_var),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ShardedConfig {
+        ShardedConfig {
+            dims: [12, 12, 10],
+            n_subjects: 8,
+            n_contrasts: 4,
+            ratio: 10,
+            shard_counts: vec![1, 2, 4],
+            reps: 1,
+            seed: 3,
+        }
+    }
+
+    #[test]
+    fn all_rows_reach_exactly_k_and_quality_holds() {
+        let rows = run(&tiny());
+        assert_eq!(rows.len(), 3);
+        let k0 = rows[0].k;
+        for r in &rows {
+            assert_eq!(r.k, k0, "shards={} returned different k", r.shards);
+            // the acceptance band: sharded quality within 5% of the
+            // single-thread variance-ratio metric
+            assert!(
+                (r.vr_vs_single - 1.0).abs() <= 0.05,
+                "shards={}: vr ratio {} outside ±5%",
+                r.shards,
+                r.vr_vs_single
+            );
+            // compression must denoise (vr > raw-data levels ~1) and η
+            // must be a sane contraction ratio
+            assert!(r.median_vr.is_finite() && r.median_vr > 0.0);
+            assert!(r.eta_mean > 0.0 && r.eta_mean <= 1.5);
+            assert!(r.eta_var >= 0.0);
+        }
+        assert!((rows[0].speedup - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_renders_all_columns() {
+        let mut cfg = tiny();
+        cfg.shard_counts = vec![1, 2];
+        let t = table(&run(&cfg));
+        let s = t.render();
+        assert!(s.contains("speedup"));
+        assert!(s.contains("vr_vs_single"));
+    }
+}

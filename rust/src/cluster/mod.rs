@@ -1,7 +1,8 @@
 //! Clustering algorithms: the paper's **fast clustering** (Alg. 1,
-//! recursive nearest-neighbor agglomeration) plus every baseline its
-//! evaluation compares against — rand-single, single/average/complete
-//! linkage, Ward and k-means — behind one [`Clusterer`] trait.
+//! recursive nearest-neighbor agglomeration), its **sharded parallel
+//! engine** ([`ShardedFastCluster`], docs/adr/002), plus every baseline
+//! the evaluation compares against — rand-single, single/average/
+//! complete linkage, Ward and k-means — behind one [`Clusterer`] trait.
 //!
 //! All algorithms are *spatially constrained*: merges only happen along
 //! edges of the masked lattice graph, which is both what makes them
@@ -13,6 +14,7 @@ mod kmeans;
 mod linkage;
 pub mod metrics;
 mod rand_single;
+mod sharded;
 mod ward;
 
 pub use assignment::{cluster_counts, relabel_compact};
@@ -20,6 +22,7 @@ pub use fast::{FastCluster, FastClusterTrace};
 pub use kmeans::KMeans;
 pub use linkage::{AverageLinkage, CompleteLinkage, SingleLinkage};
 pub use rand_single::RandSingle;
+pub use sharded::{ShardedFastCluster, ShardedTrace};
 pub use ward::Ward;
 
 use crate::error::{invalid, Result};

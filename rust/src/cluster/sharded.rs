@@ -1,0 +1,471 @@
+//! **Sharded parallel fast clustering** — Alg. 1 scaled across cores
+//! (docs/adr/002).
+//!
+//! The recursion of [`FastCluster`] is local: every round only reads a
+//! vertex's incident edges, so the lattice can be carved into spatially
+//! contiguous shards ([`crate::graph::Partition`]) that agglomerate
+//! **independently and in parallel**, followed by one global *stitch*
+//! pass:
+//!
+//! 1. **partition** the masked lattice into `n_shards` contiguous
+//!    shards (index slabs or BFS bisection);
+//! 2. **per-shard Alg. 1** on a scoped thread pool: each shard runs the
+//!    full nearest-neighbor agglomeration on its induced subgraph down
+//!    to a proportional, slightly over-segmented target
+//!    `k_s ≈ (1 + oversegment) · k · p_s / p`;
+//! 3. **stitch**: rebuild the quotient graph over all shard clusters
+//!    (cut edges included), weight edges with squared distances between
+//!    cluster means, and run one capped cheapest-merge pass
+//!    ([`crate::graph::connected_components_capped`]) down to exactly
+//!    `k` — the same "last iteration" rule Alg. 1 itself uses.
+//!
+//! The over-segmentation is what heals shard-boundary artifacts: the
+//! stitch pass may merge *across* boundaries (cut edges) wherever two
+//! boundary clusters are genuinely similar, so the final partition is
+//! not simply a union of per-shard partitions. Because the stitch is a
+//! single capped merge of the `K - k` cheapest quotient edges (with
+//! `K ≤ (1 + oversegment) · k + n_shards`), cluster sizes stay even and
+//! the no-percolation guarantee of the 1-NN rounds carries over — see
+//! ADR-002 for the argument.
+
+use super::fast::{FastCluster, FastClusterTrace};
+use super::{check_fit_args, Clusterer, Labels};
+use crate::error::{invalid, Result};
+use crate::graph::{
+    connected_components_capped, Edge, LatticeGraph, Partition,
+    PartitionStrategy,
+};
+use crate::volume::FeatureMatrix;
+
+/// Configuration for the sharded parallel engine.
+#[derive(Clone, Debug)]
+pub struct ShardedFastCluster {
+    /// Per-shard Alg. 1 configuration.
+    pub base: FastCluster,
+    /// Number of shards (and worker threads). `0` = one per available
+    /// core. Clamped to `[1, min(k, p)]` at fit time.
+    pub n_shards: usize,
+    /// Partitioning strategy.
+    pub strategy: PartitionStrategy,
+    /// Fractional over-segmentation of the per-shard targets; the
+    /// surplus is merged back by the stitch pass. `0.25` means shards
+    /// produce ~25% more clusters than their proportional share.
+    pub oversegment: f64,
+}
+
+impl Default for ShardedFastCluster {
+    fn default() -> Self {
+        ShardedFastCluster {
+            base: FastCluster::default(),
+            n_shards: 0,
+            strategy: PartitionStrategy::BfsBisection,
+            oversegment: 0.25,
+        }
+    }
+}
+
+/// Telemetry of a sharded run: the per-shard [`FastClusterTrace`]s plus
+/// the stitch-phase counters — the sharded analogue (and superset) of
+/// the single-thread trace.
+#[derive(Clone, Debug)]
+pub struct ShardedTrace {
+    /// Number of shards actually used.
+    pub n_shards: usize,
+    /// Vertices per shard.
+    pub shard_sizes: Vec<usize>,
+    /// Per-shard agglomeration traces (same shape as the single-thread
+    /// [`FastClusterTrace`]; `cluster_counts.len() - 1` is that shard's
+    /// round count).
+    pub shard_traces: Vec<FastClusterTrace>,
+    /// Cut edges crossing shard boundaries in the input lattice.
+    pub cut_edges: usize,
+    /// Total clusters across shards before stitching (`K`).
+    pub k_before_stitch: usize,
+    /// Merges performed by the stitch pass (`K - k`).
+    pub stitch_merges: usize,
+}
+
+impl ShardedTrace {
+    /// Rounds each shard needed (`O(log(p_s / k_s))` apiece).
+    pub fn rounds_per_shard(&self) -> Vec<usize> {
+        self.shard_traces
+            .iter()
+            .map(|t| t.cluster_counts.len().saturating_sub(1))
+            .collect()
+    }
+
+    /// The critical-path round count (slowest shard).
+    pub fn max_rounds(&self) -> usize {
+        self.rounds_per_shard().into_iter().max().unwrap_or(0)
+    }
+}
+
+impl ShardedFastCluster {
+    /// Resolve the shard count for a problem of size `p` with target
+    /// `k`: the configured count (or available parallelism when 0),
+    /// never more than `k` (each shard must keep at least one cluster)
+    /// nor `p`.
+    fn resolve_shards(&self, p: usize, k: usize) -> usize {
+        let configured = if self.n_shards == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.n_shards
+        };
+        configured.clamp(1, k.min(p).max(1))
+    }
+
+    /// Run the sharded engine and return the per-shard + stitch trace.
+    pub fn fit_trace(
+        &self,
+        x: &FeatureMatrix,
+        graph: &LatticeGraph,
+        k: usize,
+        seed: u64,
+    ) -> Result<(Labels, ShardedTrace)> {
+        check_fit_args(x, graph, k)?;
+        if !(0.0..=4.0).contains(&self.oversegment) {
+            return Err(invalid(format!(
+                "oversegment {} out of range [0, 4]",
+                self.oversegment
+            )));
+        }
+        let p = x.rows;
+        let n_shards = self.resolve_shards(p, k);
+        if n_shards == 1 {
+            // degenerate case: exactly the single-thread algorithm
+            let (labels, trace) = self.base.fit_trace(x, graph, k, seed)?;
+            let trace = ShardedTrace {
+                n_shards: 1,
+                shard_sizes: vec![p],
+                shard_traces: vec![trace],
+                cut_edges: 0,
+                k_before_stitch: labels.k,
+                stitch_merges: 0,
+            };
+            return Ok((labels, trace));
+        }
+
+        // ---- 1. partition the lattice
+        let part = Partition::new(graph, n_shards, self.strategy);
+        let n_shards = part.n_shards;
+        let members = part.members();
+        let shard_sizes = part.sizes();
+        let (intra, cut) = part.split_edges(&graph.edges);
+
+        // global -> shard-local vertex ids
+        let mut local_of = vec![0u32; p];
+        for m in &members {
+            for (li, &v) in m.iter().enumerate() {
+                local_of[v as usize] = li as u32;
+            }
+        }
+
+        // per-shard sub-problems: local feature rows + local edges.
+        // ceil-proportional targets over-segment slightly even at
+        // oversegment = 0, guaranteeing sum(k_s) >= k.
+        let mut shard_inputs = Vec::with_capacity(n_shards);
+        for s in 0..n_shards {
+            let rows: Vec<usize> =
+                members[s].iter().map(|&v| v as usize).collect();
+            let xs = x.select_rows(&rows);
+            let p_s = rows.len();
+            let share = k as f64 * p_s as f64 / p as f64;
+            let k_s = ((share * (1.0 + self.oversegment)).ceil() as usize)
+                .clamp(1, p_s);
+            let edges: Vec<Edge> = intra[s]
+                .iter()
+                .map(|e| {
+                    Edge::new(
+                        local_of[e.u as usize],
+                        local_of[e.v as usize],
+                        e.w,
+                    )
+                })
+                .collect();
+            let g_s = LatticeGraph::from_edges(p_s, edges);
+            shard_inputs.push((xs, g_s, k_s));
+        }
+
+        // ---- 2. per-shard Alg. 1 on a scoped thread pool. Results are
+        // collected by shard index, so the outcome is deterministic
+        // regardless of thread scheduling.
+        let base = &self.base;
+        let results: Vec<Result<(Labels, FastClusterTrace)>> =
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = shard_inputs
+                    .iter()
+                    .enumerate()
+                    .map(|(s, (xs, g_s, k_s))| {
+                        let shard_seed =
+                            seed.wrapping_add(0x5A4D * (s as u64 + 1));
+                        scope.spawn(move || {
+                            base.fit_trace(xs, g_s, *k_s, shard_seed)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("shard worker panicked"))
+                    .collect()
+            });
+
+        let mut shard_traces = Vec::with_capacity(n_shards);
+        let mut shard_labels = Vec::with_capacity(n_shards);
+        for r in results {
+            let (l, t) = r?;
+            shard_traces.push(t);
+            shard_labels.push(l);
+        }
+
+        // ---- 3. stitch. Assemble the global labeling with per-shard
+        // cluster-id offsets ...
+        let mut offsets = vec![0u32; n_shards];
+        let mut k_total = 0usize;
+        for s in 0..n_shards {
+            offsets[s] = k_total as u32;
+            k_total += shard_labels[s].k;
+        }
+        let mut labels = vec![0u32; p];
+        for s in 0..n_shards {
+            let l = &shard_labels[s];
+            for (li, &v) in members[s].iter().enumerate() {
+                labels[v as usize] = offsets[s] + l.labels[li];
+            }
+        }
+
+        // ... compute cluster means over the full feature columns ...
+        let n_cols = x.cols;
+        let mut sums = vec![0.0f64; k_total * n_cols];
+        let mut counts = vec![0usize; k_total];
+        for i in 0..p {
+            let c = labels[i] as usize;
+            counts[c] += 1;
+            let row = x.row(i);
+            let acc = &mut sums[c * n_cols..(c + 1) * n_cols];
+            for (a, &v) in acc.iter_mut().zip(row) {
+                *a += v as f64;
+            }
+        }
+        let means: Vec<f32> = (0..k_total * n_cols)
+            .map(|i| (sums[i] / counts[i / n_cols].max(1) as f64) as f32)
+            .collect();
+
+        // ... build the weighted quotient graph (intra-shard cluster
+        // adjacency AND cut edges — so the capped merge can heal
+        // boundaries but also fall back to in-shard merges when a
+        // shard over-segmented a region the cut cannot reach) ...
+        let mut qedges: Vec<(u32, u32)> = graph
+            .edges
+            .iter()
+            .filter_map(|e| {
+                let (a, b) = (labels[e.u as usize], labels[e.v as usize]);
+                match a.cmp(&b) {
+                    std::cmp::Ordering::Less => Some((a, b)),
+                    std::cmp::Ordering::Greater => Some((b, a)),
+                    std::cmp::Ordering::Equal => None,
+                }
+            })
+            .collect();
+        qedges.sort_unstable();
+        qedges.dedup();
+        let weighted: Vec<Edge> = qedges
+            .into_iter()
+            .map(|(a, b)| {
+                let (ra, rb) = (
+                    &means[a as usize * n_cols..(a as usize + 1) * n_cols],
+                    &means[b as usize * n_cols..(b as usize + 1) * n_cols],
+                );
+                let mut d = 0.0f32;
+                for i in 0..n_cols {
+                    let t = ra[i] - rb[i];
+                    d += t * t;
+                }
+                Edge::new(a, b, d)
+            })
+            .collect();
+
+        // ... and merge the cheapest quotient edges until exactly k
+        // clusters remain (Alg. 1's final-iteration rule).
+        let (lambda, k_final) =
+            connected_components_capped(k_total, &weighted, k);
+        for l in &mut labels {
+            *l = lambda[*l as usize];
+        }
+
+        let trace = ShardedTrace {
+            n_shards,
+            shard_sizes,
+            shard_traces,
+            cut_edges: cut.len(),
+            k_before_stitch: k_total,
+            stitch_merges: k_total - k_final,
+        };
+        Ok((Labels::new(labels, k_final)?, trace))
+    }
+}
+
+impl Clusterer for ShardedFastCluster {
+    fn name(&self) -> &'static str {
+        "fast-sharded"
+    }
+
+    fn fit(
+        &self,
+        x: &FeatureMatrix,
+        graph: &LatticeGraph,
+        k: usize,
+        seed: u64,
+    ) -> Result<Labels> {
+        self.fit_trace(x, graph, k, seed).map(|(l, _)| l)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::volume::SyntheticCube;
+
+    fn cube_fixture(
+        dims: [usize; 3],
+        n: usize,
+        seed: u64,
+    ) -> (FeatureMatrix, LatticeGraph) {
+        let ds = SyntheticCube::new(dims, 4.0, 0.5).generate(n, seed);
+        let g = LatticeGraph::from_mask(ds.mask());
+        (ds.data().clone(), g)
+    }
+
+    fn sharded(n_shards: usize) -> ShardedFastCluster {
+        ShardedFastCluster { n_shards, ..Default::default() }
+    }
+
+    #[test]
+    fn reaches_exactly_k() {
+        let (x, g) = cube_fixture([10, 10, 10], 3, 1);
+        for &shards in &[2usize, 3, 4] {
+            for &k in &[10usize, 50, 100] {
+                let labels = sharded(shards).fit(&x, &g, k, 0).unwrap();
+                assert_eq!(labels.k, k, "shards={shards} k={k}");
+                assert!(labels.sizes().iter().all(|&s| s > 0));
+            }
+        }
+    }
+
+    #[test]
+    fn clusters_are_spatially_connected() {
+        let (x, g) = cube_fixture([8, 8, 8], 3, 4);
+        let labels = sharded(4).fit(&x, &g, 40, 0).unwrap();
+        for c in 0..labels.k as u32 {
+            let members: Vec<usize> = (0..labels.p())
+                .filter(|&i| labels.labels[i] == c)
+                .collect();
+            let mut seen = vec![false; labels.p()];
+            let mut stack = vec![members[0]];
+            seen[members[0]] = true;
+            let mut count = 0;
+            while let Some(v) = stack.pop() {
+                count += 1;
+                for &nb in g.neighbors(v) {
+                    let nb = nb as usize;
+                    if !seen[nb] && labels.labels[nb] == c {
+                        seen[nb] = true;
+                        stack.push(nb);
+                    }
+                }
+            }
+            assert_eq!(count, members.len(), "cluster {c} disconnected");
+        }
+    }
+
+    #[test]
+    fn one_shard_matches_single_thread_exactly() {
+        let (x, g) = cube_fixture([6, 6, 6], 4, 5);
+        let single = FastCluster::default().fit(&x, &g, 20, 7).unwrap();
+        let via_sharded = sharded(1).fit(&x, &g, 20, 7).unwrap();
+        assert_eq!(single, via_sharded);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (x, g) = cube_fixture([8, 8, 6], 3, 6);
+        let a = sharded(3).fit(&x, &g, 30, 9).unwrap();
+        let b = sharded(3).fit(&x, &g, 30, 9).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn trace_reports_shards_and_stitch() {
+        let (x, g) = cube_fixture([10, 10, 8], 3, 7);
+        let (labels, trace) =
+            sharded(4).fit_trace(&x, &g, 50, 0).unwrap();
+        assert_eq!(labels.k, 50);
+        assert_eq!(trace.n_shards, 4);
+        assert_eq!(trace.shard_traces.len(), 4);
+        assert_eq!(trace.shard_sizes.iter().sum::<usize>(), 800);
+        assert!(trace.cut_edges > 0, "slabs of a cube share a face");
+        assert!(trace.k_before_stitch >= 50);
+        assert_eq!(
+            trace.stitch_merges,
+            trace.k_before_stitch - labels.k
+        );
+        // every shard ran at least one agglomeration round
+        assert!(trace.rounds_per_shard().iter().all(|&r| r >= 1));
+        assert!(trace.max_rounds() >= 1);
+    }
+
+    #[test]
+    fn no_percolation_sizes_stay_even() {
+        let (x, g) = cube_fixture([12, 12, 12], 3, 6);
+        let k = 170;
+        let labels = sharded(4).fit(&x, &g, k, 0).unwrap();
+        let sizes = labels.sizes();
+        let max = *sizes.iter().max().unwrap();
+        let p = labels.p();
+        assert!(
+            max <= 12 * (p / k).max(1),
+            "giant cluster: max={max} vs p/k={}",
+            p / k
+        );
+        let singles = sizes.iter().filter(|&&s| s == 1).count();
+        assert!(
+            singles * 10 <= k,
+            "{singles} singletons out of {k} clusters"
+        );
+    }
+
+    #[test]
+    fn auto_shards_and_both_strategies_work() {
+        let (x, g) = cube_fixture([8, 8, 8], 2, 8);
+        for strategy in
+            [PartitionStrategy::IndexSlabs, PartitionStrategy::BfsBisection]
+        {
+            let sc = ShardedFastCluster {
+                n_shards: 0,
+                strategy,
+                ..Default::default()
+            };
+            let labels = sc.fit(&x, &g, 32, 1).unwrap();
+            assert_eq!(labels.k, 32);
+        }
+    }
+
+    #[test]
+    fn shard_count_clamped_to_k() {
+        // more shards than clusters must still produce exactly k
+        let (x, g) = cube_fixture([6, 6, 6], 2, 9);
+        let labels = sharded(64).fit(&x, &g, 3, 0).unwrap();
+        assert_eq!(labels.k, 3);
+    }
+
+    #[test]
+    fn rejects_bad_args() {
+        let (x, g) = cube_fixture([4, 4, 4], 2, 10);
+        assert!(sharded(2).fit(&x, &g, 0, 0).is_err());
+        assert!(sharded(2).fit(&x, &g, 65, 0).is_err());
+        let bad = ShardedFastCluster {
+            oversegment: -1.0,
+            ..Default::default()
+        };
+        assert!(bad.fit(&x, &g, 8, 0).is_err());
+    }
+}

@@ -12,6 +12,8 @@ use crate::json::{self, Value};
 pub enum Method {
     /// The paper's fast clustering (Alg. 1).
     Fast,
+    /// Alg. 1 sharded across cores (partition + stitch, ADR-002).
+    FastSharded,
     /// MST + random non-singleton cuts.
     RandSingle,
     /// Exact single linkage (MST cut).
@@ -35,6 +37,9 @@ impl Method {
     pub fn parse(s: &str) -> Result<Method> {
         Ok(match s {
             "fast" => Method::Fast,
+            "fast-sharded" | "fast_sharded" | "sharded" => {
+                Method::FastSharded
+            }
             "rand-single" | "rand_single" => Method::RandSingle,
             "single" => Method::Single,
             "average" => Method::Average,
@@ -51,6 +56,7 @@ impl Method {
     pub fn name(&self) -> &'static str {
         match self {
             Method::Fast => "fast",
+            Method::FastSharded => "fast-sharded",
             Method::RandSingle => "rand-single",
             Method::Single => "single",
             Method::Average => "average",
@@ -66,6 +72,7 @@ impl Method {
     pub fn all_clusterings() -> &'static [Method] {
         &[
             Method::Fast,
+            Method::FastSharded,
             Method::RandSingle,
             Method::Single,
             Method::Average,
@@ -114,11 +121,20 @@ pub struct ReduceConfig {
     pub ratio: usize,
     /// Seed for stochastic methods.
     pub seed: u64,
+    /// Shard/thread count for [`Method::FastSharded`]; `0` = one per
+    /// available core. Ignored by the other methods.
+    pub shards: usize,
 }
 
 impl Default for ReduceConfig {
     fn default() -> Self {
-        ReduceConfig { method: Method::Fast, k: 0, ratio: 10, seed: 1 }
+        ReduceConfig {
+            method: Method::Fast,
+            k: 0,
+            ratio: 10,
+            seed: 1,
+            shards: 0,
+        }
     }
 }
 
@@ -256,6 +272,7 @@ impl ReduceConfig {
             k: get_usize(v, "k", d.k)?,
             ratio: get_usize(v, "ratio", d.ratio)?,
             seed: get_u64(v, "seed", d.seed)?,
+            shards: get_usize(v, "shards", d.shards)?,
         })
     }
 
@@ -266,6 +283,7 @@ impl ReduceConfig {
             ("k", Value::Num(self.k as f64)),
             ("ratio", Value::Num(self.ratio as f64)),
             ("seed", Value::Num(self.seed as f64)),
+            ("shards", Value::Num(self.shards as f64)),
         ])
     }
 }

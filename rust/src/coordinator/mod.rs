@@ -7,6 +7,33 @@
 //! an event log. The CLI (`rust/src/main.rs`) and every figure driver
 //! (`bench_harness`) sit on top of this module.
 //!
+//! # Pieces
+//!
+//! * [`pipeline`] — the end-to-end CV decoding workflow:
+//!   [`make_clusterer`] maps a [`crate::config::Method`] (including the
+//!   sharded engine of ADR-002) to a boxed [`crate::cluster::Clusterer`],
+//!   [`make_reducer`] builds the compression operator, and
+//!   [`run_decoding_pipeline`] / [`PipelineBuilder`] drive the folds.
+//! * [`WorkerPool`] — fixed thread pool over a [`BoundedQueue`]; job
+//!   results are reassembled by submission id, so parallelism never
+//!   changes results (see `worker_parallelism_does_not_change_results`
+//!   in the integration tests).
+//! * [`EventLog`] / [`Metrics`] / [`Stopwatch`] — the observability
+//!   spine; every stage records wall time into the metrics registry,
+//!   which is where Fig 6's timing rows come from.
+//!
+//! # Invariants
+//!
+//! * Determinism: given a config and root seed, every stage output is
+//!   bit-identical regardless of *worker* count. (One caveat: the
+//!   sharded clustering method with `shards = 0` resolves its shard
+//!   count from the machine's core count, and different shard counts
+//!   give different — individually deterministic — partitions; pin
+//!   `shards` explicitly for cross-machine reproducibility.)
+//! * Fold purity: the parcellation is learned label-free on the whole
+//!   cohort (as in the paper's Fig 6 protocol); sample labels enter
+//!   only in the estimator stage, which is CV-folded.
+//!
 //! (The offline build has no tokio; the runtime is a hand-rolled
 //! thread + bounded-channel pool — same semantics, zero dependencies.)
 
@@ -17,8 +44,8 @@ mod worker;
 
 pub use events::{EventLog, Metrics, Stopwatch};
 pub use pipeline::{
-    fit_clustering, make_reducer, run_decoding_pipeline, DecodingReport,
-    PipelineBuilder, StageReport,
+    fit_clustering, make_clusterer, make_reducer, run_decoding_pipeline,
+    DecodingReport, PipelineBuilder, StageReport,
 };
 pub use queue::BoundedQueue;
 pub use worker::WorkerPool;

@@ -11,7 +11,7 @@ use super::events::{EventLog, Metrics, Stopwatch};
 use super::worker::WorkerPool;
 use crate::cluster::{
     AverageLinkage, Clusterer, CompleteLinkage, FastCluster, KMeans, Labels,
-    RandSingle, SingleLinkage, Ward,
+    RandSingle, ShardedFastCluster, SingleLinkage, Ward,
 };
 use crate::config::{EstimatorConfig, Method, ReduceConfig};
 use crate::error::{invalid, Result};
@@ -22,7 +22,34 @@ use crate::reduce::{ClusterReduce, Reducer, SparseRandomProjection};
 use crate::runtime::Runtime;
 use crate::volume::{FeatureMatrix, MaskedDataset};
 
+/// Build the clusterer for a method with the pipeline's default
+/// hyper-parameters; `None` for raw / RP methods. `shards` applies to
+/// [`Method::FastSharded`] only (`0` = one shard per available core).
+pub fn make_clusterer(
+    method: Method,
+    shards: usize,
+) -> Option<Box<dyn Clusterer + Send + Sync>> {
+    Some(match method {
+        Method::Fast => {
+            Box::new(FastCluster { max_rounds: 64, feature_subsample: None })
+        }
+        Method::FastSharded => Box::new(ShardedFastCluster {
+            n_shards: shards,
+            ..Default::default()
+        }),
+        Method::RandSingle => Box::new(RandSingle),
+        Method::Single => Box::new(SingleLinkage),
+        Method::Average => Box::new(AverageLinkage),
+        Method::Complete => Box::new(CompleteLinkage),
+        Method::Ward => Box::new(Ward),
+        Method::Kmeans => Box::new(KMeans { max_iter: 25, tol: 1e-4 }),
+        Method::RandomProjection | Method::None => return None,
+    })
+}
+
 /// Fit the configured clustering method; `None` for raw / RP methods.
+/// ([`Method::FastSharded`] gets auto shard count here — use
+/// [`make_clusterer`] directly to control it.)
 pub fn fit_clustering(
     method: Method,
     x: &FeatureMatrix,
@@ -30,17 +57,10 @@ pub fn fit_clustering(
     k: usize,
     seed: u64,
 ) -> Result<Option<Labels>> {
-    let clusterer: &dyn Clusterer = match method {
-        Method::Fast => &FastCluster { max_rounds: 64, feature_subsample: None },
-        Method::RandSingle => &RandSingle,
-        Method::Single => &SingleLinkage,
-        Method::Average => &AverageLinkage,
-        Method::Complete => &CompleteLinkage,
-        Method::Ward => &Ward,
-        Method::Kmeans => &KMeans { max_iter: 25, tol: 1e-4 },
-        Method::RandomProjection | Method::None => return Ok(None),
-    };
-    clusterer.fit(x, graph, k, seed).map(Some)
+    match make_clusterer(method, 0) {
+        None => Ok(None),
+        Some(c) => c.fit(x, graph, k, seed).map(Some),
+    }
 }
 
 /// Build the reducer for a method (clustering methods need `labels`).
@@ -190,8 +210,10 @@ fn run_decoding_inner(
     // the *estimator*, the stage where labels enter.)
     let sw = Stopwatch::start();
     let graph = LatticeGraph::from_mask(ds.mask());
-    let labels =
-        fit_clustering(method, ds.data(), &graph, k, reduce_cfg.seed)?;
+    let labels = match make_clusterer(method, reduce_cfg.shards) {
+        None => None,
+        Some(c) => Some(c.fit(ds.data(), &graph, k, reduce_cfg.seed)?),
+    };
     let reducer =
         make_reducer(method, labels.as_ref(), p, k, reduce_cfg.seed)?;
     let cluster_secs = sw.secs();
@@ -315,6 +337,7 @@ mod tests {
             k: 0,
             ratio: 10,
             seed: 1,
+            shards: 0,
         };
         let est = EstimatorConfig {
             cv_folds: 5,
@@ -352,6 +375,26 @@ mod tests {
     }
 
     #[test]
+    fn sharded_clustering_pipeline_beats_chance() {
+        let (ds, y) = small_cohort();
+        let reduce = ReduceConfig {
+            method: Method::FastSharded,
+            k: 0,
+            ratio: 10,
+            seed: 1,
+            shards: 2,
+        };
+        let est = EstimatorConfig {
+            cv_folds: 3,
+            max_iter: 100,
+            ..Default::default()
+        };
+        let rep = run_decoding_pipeline(&ds, &y, &reduce, &est).unwrap();
+        assert_eq!(rep.k, ds.p() / 10);
+        assert!(rep.accuracy > 0.55, "accuracy {}", rep.accuracy);
+    }
+
+    #[test]
     fn rp_pipeline_runs() {
         let (ds, y) = small_cohort();
         let reduce = ReduceConfig {
@@ -359,6 +402,7 @@ mod tests {
             k: 64,
             ratio: 0,
             seed: 3,
+            shards: 0,
         };
         let est = EstimatorConfig {
             cv_folds: 3,

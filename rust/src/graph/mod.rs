@@ -1,17 +1,20 @@
 //! Graph substrate: the masked 3-D lattice, union-find, minimum
-//! spanning trees, connected components and nearest-neighbor graph
-//! extraction — everything Alg. 1 and the linkage baselines stand on.
+//! spanning trees, connected components, nearest-neighbor graph
+//! extraction and spatial shard partitioning — everything Alg. 1, the
+//! linkage baselines and the sharded parallel engine stand on.
 
 mod components;
 mod lattice;
 mod mst;
 mod nn;
+mod partition;
 mod unionfind;
 
 pub use components::{connected_components, connected_components_capped};
 pub use lattice::LatticeGraph;
 pub use mst::kruskal_mst;
 pub use nn::nearest_neighbor_edges;
+pub use partition::{Partition, PartitionStrategy};
 pub use unionfind::UnionFind;
 
 /// An undirected weighted edge between masked-voxel (or cluster) ids.

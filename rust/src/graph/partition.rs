@@ -1,0 +1,333 @@
+//! Spatial partitioning of the masked lattice into contiguous shards —
+//! the decomposition step of the sharded parallel clustering engine
+//! (docs/adr/002).
+//!
+//! Two strategies, both deterministic and graph-only (no mask needed):
+//!
+//! * [`PartitionStrategy::IndexSlabs`] — split the vertex range
+//!   `0..p` into `n` contiguous, equally-sized index intervals. Because
+//!   [`super::LatticeGraph::from_mask`] enumerates masked voxels
+//!   x-fastest (z outermost), contiguous index ranges are axis-aligned
+//!   z-slabs of the volume. `O(p)`, zero graph traversal.
+//! * [`PartitionStrategy::BfsBisection`] — recursive bisection along a
+//!   BFS ordering from a pseudo-peripheral vertex. Follows the actual
+//!   connectivity, so it stays balanced on masks whose index order does
+//!   not track geometry (ragged brain masks, multi-component masks).
+//!
+//! Either way every shard is a set of vertices whose induced subgraph
+//! is (near-)connected and whose boundary ("cut") edge count is small
+//! relative to `O(p)` — the property the stitch pass of
+//! [`crate::cluster::ShardedFastCluster`] relies on.
+
+use super::lattice::LatticeGraph;
+use super::Edge;
+
+/// How to carve the lattice into shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionStrategy {
+    /// Contiguous vertex-index intervals (axis slabs on a lattice).
+    IndexSlabs,
+    /// Recursive bisection along a BFS order (geometry-aware).
+    BfsBisection,
+}
+
+/// A partition of a graph's vertices into `n_shards` non-empty shards.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// `shard_of[v]` = shard id of vertex `v`, in `0..n_shards`.
+    pub shard_of: Vec<u32>,
+    /// Number of shards (every id in `0..n_shards` is non-empty).
+    pub n_shards: usize,
+}
+
+impl Partition {
+    /// Partition `graph` into (at most) `n_shards` shards with the
+    /// given strategy. `n_shards` is clamped to `[1, n_vertices]`;
+    /// the returned partition never contains an empty shard.
+    pub fn new(
+        graph: &LatticeGraph,
+        n_shards: usize,
+        strategy: PartitionStrategy,
+    ) -> Self {
+        let p = graph.n_vertices;
+        let n = n_shards.clamp(1, p.max(1));
+        if p == 0 || n == 1 {
+            return Partition { shard_of: vec![0; p], n_shards: 1 };
+        }
+        match strategy {
+            PartitionStrategy::IndexSlabs => index_slabs(p, n),
+            PartitionStrategy::BfsBisection => bfs_bisection(graph, n),
+        }
+    }
+
+    /// Per-shard vertex lists (global ids, ascending within a shard).
+    pub fn members(&self) -> Vec<Vec<u32>> {
+        let mut out = vec![Vec::new(); self.n_shards];
+        for (v, &s) in self.shard_of.iter().enumerate() {
+            out[s as usize].push(v as u32);
+        }
+        out
+    }
+
+    /// Per-shard sizes.
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut out = vec![0usize; self.n_shards];
+        for &s in &self.shard_of {
+            out[s as usize] += 1;
+        }
+        out
+    }
+
+    /// Split a weighted edge list into per-shard internal edges and the
+    /// cut set. Internal edges keep their global endpoints; the caller
+    /// remaps them to shard-local ids.
+    pub fn split_edges(&self, edges: &[Edge]) -> (Vec<Vec<Edge>>, Vec<Edge>) {
+        let mut intra = vec![Vec::new(); self.n_shards];
+        let mut cut = Vec::new();
+        for e in edges {
+            let (su, sv) =
+                (self.shard_of[e.u as usize], self.shard_of[e.v as usize]);
+            if su == sv {
+                intra[su as usize].push(*e);
+            } else {
+                cut.push(*e);
+            }
+        }
+        (intra, cut)
+    }
+}
+
+/// Contiguous index intervals with balanced sizes: the first
+/// `p % n` shards get one extra vertex.
+fn index_slabs(p: usize, n: usize) -> Partition {
+    let base = p / n;
+    let extra = p % n;
+    let mut shard_of = vec![0u32; p];
+    let mut v = 0usize;
+    for s in 0..n {
+        let len = base + usize::from(s < extra);
+        for _ in 0..len {
+            shard_of[v] = s as u32;
+            v += 1;
+        }
+    }
+    debug_assert_eq!(v, p);
+    Partition { shard_of, n_shards: n }
+}
+
+/// BFS order over a vertex subset, restarting at the smallest
+/// unvisited vertex for disconnected subsets. `start` seeds the first
+/// traversal. Returns the visit order (covers all of `subset`).
+fn bfs_order(graph: &LatticeGraph, subset: &[u32], start: u32) -> Vec<u32> {
+    let mut in_subset = vec![false; graph.n_vertices];
+    for &v in subset {
+        in_subset[v as usize] = true;
+    }
+    let mut seen = vec![false; graph.n_vertices];
+    let mut order = Vec::with_capacity(subset.len());
+    let mut queue = std::collections::VecDeque::new();
+    let mut seed_iter = subset.iter();
+    let mut next_seed = Some(start);
+    while order.len() < subset.len() {
+        // find the next unvisited seed (start first, then ascending)
+        let seed = loop {
+            match next_seed.take() {
+                Some(s) if !seen[s as usize] => break s,
+                Some(_) => continue,
+                None => match seed_iter.next() {
+                    Some(&s) => {
+                        if !seen[s as usize] {
+                            break s;
+                        }
+                    }
+                    None => unreachable!("subset exhausted early"),
+                },
+            }
+        };
+        seen[seed as usize] = true;
+        queue.push_back(seed);
+        while let Some(v) = queue.pop_front() {
+            order.push(v);
+            for &nb in graph.neighbors(v as usize) {
+                if in_subset[nb as usize] && !seen[nb as usize] {
+                    seen[nb as usize] = true;
+                    queue.push_back(nb);
+                }
+            }
+        }
+    }
+    order
+}
+
+/// A cheap pseudo-peripheral vertex of the subset: BFS from the
+/// smallest id, take the last vertex reached (one round of the classic
+/// double-BFS heuristic — enough to align the ordering with the long
+/// axis of the shard).
+fn peripheral(graph: &LatticeGraph, subset: &[u32]) -> u32 {
+    let start = subset[0];
+    *bfs_order(graph, subset, start).last().unwrap_or(&start)
+}
+
+/// Recursive bisection: BFS-order the subset from a pseudo-peripheral
+/// vertex, split the order proportionally to the shard counts assigned
+/// to each half, recurse.
+fn bfs_bisection(graph: &LatticeGraph, n: usize) -> Partition {
+    let p = graph.n_vertices;
+    let mut shard_of = vec![0u32; p];
+    let all: Vec<u32> = (0..p as u32).collect();
+    let mut next_id = 0u32;
+    bisect(graph, &all, n, &mut shard_of, &mut next_id);
+    Partition { shard_of, n_shards: next_id as usize }
+}
+
+fn bisect(
+    graph: &LatticeGraph,
+    subset: &[u32],
+    n: usize,
+    shard_of: &mut [u32],
+    next_id: &mut u32,
+) {
+    if n <= 1 || subset.len() <= 1 {
+        let id = *next_id;
+        *next_id += 1;
+        for &v in subset {
+            shard_of[v as usize] = id;
+        }
+        return;
+    }
+    let na = n / 2;
+    let nb = n - na;
+    let start = peripheral(graph, subset);
+    let order = bfs_order(graph, subset, start);
+    // proportional split; both sides stay non-empty because
+    // 1 <= cut < len when len >= 2 and 1 <= na < n
+    let cut = (order.len() * na / n).clamp(1, order.len() - 1);
+    let (a, b) = order.split_at(cut);
+    bisect(graph, a, na, shard_of, next_id);
+    bisect(graph, b, nb, shard_of, next_id);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::volume::{synthetic_brain_mask, Mask};
+
+    fn full_graph(dims: [usize; 3]) -> LatticeGraph {
+        LatticeGraph::from_mask(&Mask::full(dims))
+    }
+
+    fn assert_valid(p: &Partition, n_vertices: usize, want_shards: usize) {
+        assert_eq!(p.shard_of.len(), n_vertices);
+        assert_eq!(p.n_shards, want_shards);
+        let sizes = p.sizes();
+        assert_eq!(sizes.len(), want_shards);
+        assert!(sizes.iter().all(|&s| s > 0), "empty shard: {sizes:?}");
+        assert_eq!(sizes.iter().sum::<usize>(), n_vertices);
+    }
+
+    #[test]
+    fn index_slabs_are_balanced_intervals() {
+        let g = full_graph([6, 6, 6]);
+        let part = Partition::new(&g, 4, PartitionStrategy::IndexSlabs);
+        assert_valid(&part, 216, 4);
+        let sizes = part.sizes();
+        assert!(sizes.iter().all(|&s| s == 54), "{sizes:?}");
+        // contiguous: shard id is non-decreasing over the index order
+        for w in part.shard_of.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn bfs_bisection_balanced_and_connected_on_cube() {
+        let g = full_graph([8, 8, 8]);
+        for n in [2usize, 3, 4, 7] {
+            let part = Partition::new(&g, n, PartitionStrategy::BfsBisection);
+            assert_valid(&part, 512, n);
+            let sizes = part.sizes();
+            let (min, max) = (
+                *sizes.iter().min().unwrap(),
+                *sizes.iter().max().unwrap(),
+            );
+            assert!(
+                max <= 2 * min + 1,
+                "imbalanced n={n}: {sizes:?}"
+            );
+            // shards are spatially coherent: the induced subgraphs
+            // fragment into very few connected pieces (1 in the ideal
+            // case; BFS-suffix shards may occasionally split)
+            let (intra, _) = part.split_edges(&g.edges);
+            let mut total_components = 0usize;
+            for (s, es) in intra.iter().enumerate() {
+                let mut uf = crate::graph::UnionFind::new(g.n_vertices);
+                for e in es {
+                    uf.union(e.u, e.v);
+                }
+                let members = &part.members()[s];
+                let mut reps: Vec<u32> =
+                    members.iter().map(|&v| uf.find(v)).collect();
+                reps.sort_unstable();
+                reps.dedup();
+                total_components += reps.len();
+            }
+            assert!(
+                total_components <= 2 * n,
+                "n={n}: shards fragmented into {total_components} pieces"
+            );
+        }
+    }
+
+    #[test]
+    fn clamps_to_vertex_count_and_one() {
+        let g = full_graph([2, 2, 1]);
+        let part = Partition::new(&g, 100, PartitionStrategy::IndexSlabs);
+        assert_valid(&part, 4, 4);
+        let part = Partition::new(&g, 0, PartitionStrategy::BfsBisection);
+        assert_valid(&part, 4, 1);
+    }
+
+    #[test]
+    fn split_edges_partitions_the_edge_set() {
+        let g = full_graph([4, 4, 4]);
+        let part = Partition::new(&g, 2, PartitionStrategy::IndexSlabs);
+        let (intra, cut) = part.split_edges(&g.edges);
+        let n_intra: usize = intra.iter().map(|v| v.len()).sum();
+        assert_eq!(n_intra + cut.len(), g.n_edges());
+        assert!(!cut.is_empty(), "two slabs of a cube must share edges");
+        // cut edges genuinely cross shards; intra edges do not
+        for e in &cut {
+            assert_ne!(
+                part.shard_of[e.u as usize],
+                part.shard_of[e.v as usize]
+            );
+        }
+        for (s, es) in intra.iter().enumerate() {
+            for e in es {
+                assert_eq!(part.shard_of[e.u as usize] as usize, s);
+                assert_eq!(part.shard_of[e.v as usize] as usize, s);
+            }
+        }
+        // slab cut of an axis-aligned cube is one face: 16 edges
+        assert_eq!(cut.len(), 16);
+    }
+
+    #[test]
+    fn works_on_ragged_brain_mask() {
+        let m = synthetic_brain_mask([10, 11, 9], 3);
+        let g = LatticeGraph::from_mask(&m);
+        for strat in
+            [PartitionStrategy::IndexSlabs, PartitionStrategy::BfsBisection]
+        {
+            let part = Partition::new(&g, 4, strat);
+            assert_valid(&part, g.n_vertices, 4);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = full_graph([6, 5, 7]);
+        let a = Partition::new(&g, 3, PartitionStrategy::BfsBisection);
+        let b = Partition::new(&g, 3, PartitionStrategy::BfsBisection);
+        assert_eq!(a.shard_of, b.shard_of);
+    }
+}

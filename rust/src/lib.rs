@@ -8,9 +8,10 @@
 //! with every baseline, estimator and experiment harness the paper's
 //! evaluation relies on.
 //!
-//! ## Architecture (three layers)
+//! ## Architecture (three layers, docs/adr/001)
 //!
-//! * **L3 (this crate)** — the coordinator: clustering algorithms,
+//! * **L3 (this crate)** — the coordinator: clustering algorithms
+//!   (including the sharded parallel engine, docs/adr/002),
 //!   compression operators, estimators, the experiment pipeline and CLI.
 //! * **L2 (python/compile/model.py)** — JAX compute graphs lowered once
 //!   (AOT) to HLO text artifacts.
@@ -18,30 +19,40 @@
 //!   hot-spots, verified against pure-jnp oracles by pytest.
 //!
 //! At run time this crate is self-contained: [`runtime`] loads the
-//! pre-built `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate)
-//! and python never executes on the request path.
+//! pre-built `artifacts/*.hlo.txt` through the PJRT C API (the `xla`
+//! crate, behind the `pjrt` cargo feature) and python never executes on
+//! the request path.
 //!
 //! ## Quick start
 //!
-//! ```no_run
+//! ```
 //! use fastclust::prelude::*;
 //!
 //! // 1. a synthetic brain-like dataset: smooth signal + white noise
-//! let vol = SyntheticCube::new([30, 30, 30], 8.0, 0.5).generate(20, 7);
+//! let vol = SyntheticCube::new([12, 12, 12], 6.0, 0.5).generate(8, 7);
 //! // 2. build the masked lattice graph
 //! let graph = LatticeGraph::from_mask(vol.mask());
 //! // 3. fast clustering (Alg. 1) down to k = p/10 clusters
 //! let k = vol.p() / 10;
-//! let labels = FastCluster::default().fit(vol.data(), &graph, k, 42).unwrap();
+//! let labels = FastCluster::default()
+//!     .fit(vol.data(), &graph, k, 42)
+//!     .unwrap();
+//! assert_eq!(labels.k, k);
+//! // 3b. or sharded across cores — same contract, multi-core speed
+//! let sharded = ShardedFastCluster::default()
+//!     .fit(vol.data(), &graph, k, 42)
+//!     .unwrap();
+//! assert_eq!(sharded.k, k);
 //! // 4. compress: cluster means (U^T U)^-1 U^T X
 //! let red = ClusterReduce::from_labels(&labels);
 //! let xk = red.reduce(vol.data());
 //! assert_eq!(xk.rows, k);
+//! assert_eq!(xk.cols, vol.n());
 //! ```
 //!
 //! See `examples/` for full pipelines (decoding, ICA, percolation) and
 //! `rust/src/bench_harness/` for the figure-by-figure reproduction of
-//! the paper's evaluation.
+//! the paper's evaluation (plus the sharded-engine scaling sweep).
 
 pub mod bench_harness;
 pub mod cluster;
@@ -62,7 +73,7 @@ pub mod volume;
 pub mod prelude {
     pub use crate::cluster::{
         AverageLinkage, Clusterer, CompleteLinkage, FastCluster, KMeans,
-        Labels, RandSingle, SingleLinkage, Ward,
+        Labels, RandSingle, ShardedFastCluster, SingleLinkage, Ward,
     };
     pub use crate::error::{Error, Result};
     pub use crate::graph::LatticeGraph;

@@ -11,8 +11,9 @@
 //! repro fig6 [--scale S]            # logreg accuracy vs time
 //! repro fig7 [--scale S]            # ICA recovery/consistency/time
 //! repro all  [--scale S]            # every figure in sequence
+//! repro sharded [--scale S]         # sharded engine scaling + quality
 //! repro decode --config cfg.json    # run the decoding pipeline
-//! repro runtime-check               # PJRT artifact smoke test
+//! repro runtime-check               # PJRT artifact smoke test (pjrt)
 //! ```
 //!
 //! `--scale` (default 1) multiplies grid dimensions toward paper scale;
@@ -24,7 +25,7 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 
 use fastclust::bench_harness::{
-    fig2, fig3, fig4, fig5, fig6, fig7, write_csv, Table,
+    fig2, fig3, fig4, fig5, fig6, fig7, sharded, write_csv, Table,
 };
 use fastclust::cluster::FastCluster;
 use fastclust::config::ExperimentConfig;
@@ -177,6 +178,14 @@ fn run_fig7(cli: &Cli) -> Result<()> {
     emit(&fig7::table(&res), &cli.out_dir(), "fig7_ica")
 }
 
+fn run_sharded(cli: &Cli) -> Result<()> {
+    let mut cfg = sharded::ShardedConfig::default();
+    cfg.dims = scaled(cfg.dims, cli.scale());
+    cfg.seed = cli.seed();
+    let rows = sharded::run(&cfg);
+    emit(&sharded::table(&rows), &cli.out_dir(), "sharded_scaling")
+}
+
 fn decode(cli: &Cli) -> Result<()> {
     let cfg = match cli.flags.get("config") {
         Some(path) => ExperimentConfig::from_file(&PathBuf::from(path))?,
@@ -233,12 +242,13 @@ fn dispatch(cli: &Cli) -> Result<()> {
             run_fig6(cli)?;
             run_fig7(cli)
         }
+        "sharded" => run_sharded(cli),
         "decode" => decode(cli),
         "runtime-check" => runtime_check(),
         other => {
             eprintln!("unknown subcommand '{other}'");
             eprintln!(
-                "usage: repro <fig1..fig7|all|decode|runtime-check> \
+                "usage: repro <fig1..fig7|all|sharded|decode|runtime-check> \
                  [--scale S] [--seed N] [--out DIR] [--config FILE]"
             );
             std::process::exit(2);
@@ -249,7 +259,7 @@ fn dispatch(cli: &Cli) -> Result<()> {
 fn main() -> ExitCode {
     let Some(cli) = parse_args() else {
         eprintln!(
-            "usage: repro <fig1..fig7|all|decode|runtime-check> \
+            "usage: repro <fig1..fig7|all|sharded|decode|runtime-check> \
              [--scale S] [--seed N] [--out DIR] [--config FILE]"
         );
         return ExitCode::from(2);

@@ -12,47 +12,12 @@ use std::path::Path;
 use std::sync::Mutex;
 
 use super::artifacts::{ArtifactManifest, ArtifactSpec};
+use super::tensor::Tensor;
 use crate::error::{Error, Result};
 
-/// Tensor payload for runtime IO.
-#[derive(Clone, Debug, PartialEq)]
-pub enum Tensor {
-    /// 32-bit float payload.
-    F32(Vec<f32>),
-    /// 32-bit int payload.
-    I32(Vec<i32>),
-}
-
-impl Tensor {
-    fn len(&self) -> usize {
-        match self {
-            Tensor::F32(v) => v.len(),
-            Tensor::I32(v) => v.len(),
-        }
-    }
-
-    /// Unwrap as f32 (errors otherwise).
-    pub fn as_f32(&self) -> Result<&[f32]> {
-        match self {
-            Tensor::F32(v) => Ok(v),
-            Tensor::I32(_) => {
-                Err(Error::Invalid("tensor is i32, not f32".into()))
-            }
-        }
-    }
-}
-
-impl From<Vec<f32>> for Tensor {
-    fn from(v: Vec<f32>) -> Self {
-        Tensor::F32(v)
-    }
-}
-
-impl From<Vec<i32>> for Tensor {
-    fn from(v: Vec<i32>) -> Self {
-        Tensor::I32(v)
-    }
-}
+/// Device-resident buffer handle, re-exported so callers (e.g. the
+/// fused logreg path) never name the `xla` crate directly.
+pub type DeviceBuffer = xla::PjRtBuffer;
 
 /// A compiled artifact ready to execute.
 pub struct Executable {
@@ -136,7 +101,7 @@ impl Executable {
     /// [`Runtime::upload_f32`]) — skips the per-call host->device
     /// literal copy for loop-invariant operands, the dominant cost of
     /// repeated executions with large inputs (§Perf).
-    pub fn run_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<Tensor>> {
+    pub fn run_buffers(&self, inputs: &[&DeviceBuffer]) -> Result<Vec<Tensor>> {
         if inputs.len() != self.spec.inputs.len() {
             return Err(Error::Invalid(format!(
                 "{}: got {} buffers, signature has {}",
@@ -204,7 +169,7 @@ impl Runtime {
         &self,
         data: &[f32],
         dims: &[usize],
-    ) -> Result<xla::PjRtBuffer> {
+    ) -> Result<DeviceBuffer> {
         let numel: usize = dims.iter().product();
         if numel != data.len() {
             return Err(Error::Invalid(format!(

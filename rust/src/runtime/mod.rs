@@ -1,10 +1,45 @@
-//! PJRT runtime: load the AOT-compiled HLO text artifacts produced by
+//! PJRT runtime — the L3↔L2 seam of the three-layer architecture
+//! (docs/adr/001): load the AOT-compiled HLO text artifacts produced by
 //! `python/compile/aot.py` and execute them from the rust hot path.
-//! Python never runs at request time — the binary is self-contained
-//! once `artifacts/` exists.
+//!
+//! # Design
+//!
+//! The crate's run-time invariant is that **python never executes on
+//! the request path**: python's only job is ahead-of-time lowering of
+//! JAX/Pallas compute graphs into `artifacts/*.hlo.txt` plus a JSON
+//! manifest describing each artifact's IO signature and golden values.
+//! This module is the consumer of those artifacts:
+//!
+//! * [`ArtifactManifest`] — parses `manifest.json`, validates shapes
+//!   ([`ArtifactSpec`] / [`TensorSpec`]) and locates artifact files;
+//! * [`Runtime`] — one PJRT CPU client plus a lazy compile cache keyed
+//!   by artifact name (compilation is amortized over an experiment);
+//! * [`Executable`] — a compiled artifact, executed with host
+//!   [`Tensor`] payloads ([`Executable::run`]) or pre-uploaded
+//!   [`DeviceBuffer`]s ([`Executable::run_buffers`]) for loop-invariant
+//!   operands.
+//!
+//! # Feature gate
+//!
+//! The PJRT C API binding (`xla` crate) cannot be assumed in offline
+//! build containers, so the real client is compiled only under the
+//! `pjrt` cargo feature. Without it, a stub with the identical surface
+//! is compiled whose constructors return a descriptive error — callers
+//! degrade gracefully (the pipeline falls back to the native backends)
+//! and nothing else in the crate changes shape.
 
 mod artifacts;
+mod tensor;
+
+#[cfg(feature = "pjrt")]
 mod client;
+#[cfg(not(feature = "pjrt"))]
+mod stub;
 
 pub use artifacts::{ArtifactManifest, ArtifactSpec, TensorSpec};
-pub use client::{Executable, Runtime, Tensor};
+pub use tensor::Tensor;
+
+#[cfg(feature = "pjrt")]
+pub use client::{DeviceBuffer, Executable, Runtime};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{DeviceBuffer, Executable, Runtime};

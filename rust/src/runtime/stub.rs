@@ -1,0 +1,114 @@
+//! No-`pjrt` stand-in for the PJRT client, compiled when the `pjrt`
+//! cargo feature is off (the default in offline containers, which
+//! cannot vendor the `xla` crate).
+//!
+//! The stub keeps the exact public surface of the real client so every
+//! caller — the pipeline builder, the logreg runtime backend, the CLI
+//! `runtime-check` subcommand — compiles unchanged. Construction is the
+//! single failure point: [`Runtime::new`] / [`Runtime::from_env`]
+//! return an error explaining how to enable the real runtime, so no
+//! stub `Runtime` (and hence no stub [`Executable`] or [`DeviceBuffer`])
+//! ever exists at run time. The remaining method bodies are
+//! unreachable by construction but still type-check the full contract.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use super::artifacts::{ArtifactManifest, ArtifactSpec};
+use super::tensor::Tensor;
+use crate::error::{Error, Result};
+
+fn unavailable() -> Error {
+    Error::Xla(
+        "fastclust was built without the `pjrt` feature; rebuild with \
+         `--features pjrt` and a vendored `xla` crate (see README.md \
+         §Runtime) to execute AOT artifacts"
+            .into(),
+    )
+}
+
+/// Opaque device buffer handle (never constructed in the stub).
+pub struct DeviceBuffer {
+    _private: (),
+}
+
+/// A compiled artifact ready to execute (never constructed in the
+/// stub; see the module docs).
+pub struct Executable {
+    spec: ArtifactSpec,
+}
+
+impl Executable {
+    /// Execute with positional inputs matching the manifest signature.
+    pub fn run(&self, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        Err(unavailable())
+    }
+
+    /// Execute over pre-uploaded device buffers.
+    pub fn run_buffers(
+        &self,
+        _inputs: &[&DeviceBuffer],
+    ) -> Result<Vec<Tensor>> {
+        Err(unavailable())
+    }
+
+    /// The manifest signature.
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+}
+
+/// Stub runtime: carries the same API as the PJRT-backed one but can
+/// never be constructed — both constructors return an error pointing
+/// at the `pjrt` feature.
+pub struct Runtime {
+    manifest: ArtifactManifest,
+}
+
+impl Runtime {
+    /// Always errors in the stub build.
+    pub fn new(_artifact_dir: &Path) -> Result<Self> {
+        Err(unavailable())
+    }
+
+    /// Always errors in the stub build.
+    pub fn from_env() -> Result<Self> {
+        Err(unavailable())
+    }
+
+    /// Platform name (for logs).
+    pub fn platform(&self) -> String {
+        "unavailable (built without `pjrt`)".to_string()
+    }
+
+    /// The manifest.
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    /// Upload an f32 tensor to the device.
+    pub fn upload_f32(
+        &self,
+        _data: &[f32],
+        _dims: &[usize],
+    ) -> Result<DeviceBuffer> {
+        Err(unavailable())
+    }
+
+    /// Get (compiling on first use) an executable by artifact name.
+    pub fn executable(&self, _name: &str) -> Result<Arc<Executable>> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_explain_the_feature_gate() {
+        let e = Runtime::from_env().err().expect("stub must not build");
+        assert!(e.to_string().contains("pjrt"), "unhelpful error: {e}");
+        assert!(Runtime::new(Path::new("artifacts")).is_err());
+    }
+}

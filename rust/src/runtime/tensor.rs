@@ -1,0 +1,65 @@
+//! Host-side tensor payloads for runtime IO — shared by the real PJRT
+//! client and the no-`pjrt` stub so the rest of the crate is oblivious
+//! to which one was compiled in.
+
+use crate::error::{Error, Result};
+
+/// Tensor payload for runtime IO.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    /// 32-bit float payload.
+    F32(Vec<f32>),
+    /// 32-bit int payload.
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    /// Number of elements.
+    pub(crate) fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v) => v.len(),
+            Tensor::I32(v) => v.len(),
+        }
+    }
+
+    /// Unwrap as f32 (errors otherwise).
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            Tensor::I32(_) => {
+                Err(Error::Invalid("tensor is i32, not f32".into()))
+            }
+        }
+    }
+}
+
+impl From<Vec<f32>> for Tensor {
+    fn from(v: Vec<f32>) -> Self {
+        Tensor::F32(v)
+    }
+}
+
+impl From<Vec<i32>> for Tensor {
+    fn from(v: Vec<i32>) -> Self {
+        Tensor::I32(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn as_f32_checks_dtype() {
+        let t: Tensor = vec![1.0f32, 2.0].into();
+        assert_eq!(t.as_f32().unwrap(), &[1.0, 2.0]);
+        let t: Tensor = vec![1i32, 2].into();
+        assert!(t.as_f32().is_err());
+    }
+
+    #[test]
+    fn len_counts_elements() {
+        assert_eq!(Tensor::F32(vec![0.0; 7]).len(), 7);
+        assert_eq!(Tensor::I32(vec![0; 3]).len(), 3);
+    }
+}

@@ -1,5 +1,7 @@
-//! Integration: the three-layer AOT path. Requires `make artifacts`
-//! (the Makefile test target guarantees this ordering).
+//! Integration: the three-layer AOT path. Requires the `pjrt` cargo
+//! feature (a vendored `xla` crate) and `make artifacts` (the Makefile
+//! test target guarantees this ordering).
+#![cfg(feature = "pjrt")]
 //!
 //! Verifies that the PJRT-executed HLO artifacts agree numerically with
 //! the native rust implementations — the cross-layer correctness

@@ -1,0 +1,210 @@
+//! Property tests for the sharded parallel clustering engine
+//! (docs/adr/002): across random `SyntheticCube` instances, the sharded
+//! and single-thread engines must both return exactly-`k`, spatially
+//! connected, non-percolating partitions — and the sharded partition's
+//! quality (the Fig-5 variance-ratio metric) must stay within 5% of
+//! single-thread.
+
+use fastclust::cluster::{
+    Clusterer, FastCluster, Labels, ShardedFastCluster,
+};
+use fastclust::graph::{LatticeGraph, PartitionStrategy};
+use fastclust::reduce::{ClusterReduce, Reducer};
+use fastclust::rng::Rng;
+use fastclust::stats::{median, variance_ratio_per_voxel};
+use fastclust::volume::{ContrastMapGenerator, SyntheticCube};
+
+fn assert_connected(labels: &Labels, g: &LatticeGraph, ctx: &str) {
+    for cl in 0..labels.k as u32 {
+        let members: Vec<usize> = (0..labels.p())
+            .filter(|&i| labels.labels[i] == cl)
+            .collect();
+        assert!(!members.is_empty(), "{ctx}: cluster {cl} empty");
+        let mut seen = vec![false; labels.p()];
+        let mut stack = vec![members[0]];
+        seen[members[0]] = true;
+        let mut cnt = 0;
+        while let Some(v) = stack.pop() {
+            cnt += 1;
+            for &nb in g.neighbors(v) {
+                let nb = nb as usize;
+                if !seen[nb] && labels.labels[nb] == cl {
+                    seen[nb] = true;
+                    stack.push(nb);
+                }
+            }
+        }
+        assert_eq!(
+            cnt,
+            members.len(),
+            "{ctx}: cluster {cl} spatially disconnected"
+        );
+    }
+}
+
+/// Both engines: exactly k non-empty, spatially connected clusters on
+/// random cube instances, across shard counts and both partition
+/// strategies.
+#[test]
+fn sharded_and_single_produce_valid_k_partitions() {
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(seed);
+        let dims =
+            [6 + rng.below(5), 6 + rng.below(5), 5 + rng.below(4)];
+        let n = 2 + rng.below(4);
+        let ds = SyntheticCube::new(dims, 4.0, 0.6).generate(n, seed ^ 0x5EED);
+        let g = LatticeGraph::from_mask(ds.mask());
+        let p = ds.p();
+        let k = (4 + rng.below(p / 4)).min(p);
+
+        let single = FastCluster::default()
+            .fit(ds.data(), &g, k, seed)
+            .unwrap();
+        assert_eq!(single.k, k, "seed {seed}: single-thread k");
+        assert_connected(&single, &g, &format!("seed {seed} single"));
+
+        for shards in [2usize, 4] {
+            for strategy in [
+                PartitionStrategy::IndexSlabs,
+                PartitionStrategy::BfsBisection,
+            ] {
+                let engine = ShardedFastCluster {
+                    n_shards: shards,
+                    strategy,
+                    ..Default::default()
+                };
+                let ctx = format!(
+                    "seed {seed} shards {shards} {strategy:?}"
+                );
+                let labels =
+                    engine.fit(ds.data(), &g, k, seed).unwrap();
+                assert_eq!(labels.k, k, "{ctx}: wrong k");
+                assert!(
+                    labels.sizes().iter().all(|&s| s > 0),
+                    "{ctx}: empty cluster"
+                );
+                assert_connected(&labels, &g, &ctx);
+            }
+        }
+    }
+}
+
+/// The sharded engine never percolates: max cluster size stays near
+/// p/k, exactly like the single-thread guarantee.
+#[test]
+fn sharded_partition_does_not_percolate() {
+    let ds = SyntheticCube::new([14, 14, 12], 5.0, 0.8).generate(3, 11);
+    let g = LatticeGraph::from_mask(ds.mask());
+    let p = ds.p();
+    let k = p / 10;
+    for shards in [2usize, 4, 8] {
+        let engine =
+            ShardedFastCluster { n_shards: shards, ..Default::default() };
+        let labels = engine.fit(ds.data(), &g, k, 0).unwrap();
+        let sizes = labels.sizes();
+        let max = *sizes.iter().max().unwrap();
+        assert!(
+            max <= 12 * (p / k).max(1),
+            "shards={shards}: giant cluster of {max} (p/k = {})",
+            p / k
+        );
+    }
+}
+
+/// Quality acceptance: sharded variance ratio within 5% of
+/// single-thread on the Fig-5 cohort.
+#[test]
+fn sharded_quality_within_five_percent_of_single_thread() {
+    let (s, c) = (10usize, 4usize);
+    let ds = ContrastMapGenerator::new([14, 16, 12]).generate(s, c, 17);
+    let g = LatticeGraph::from_mask(ds.mask());
+    let k = (ds.p() / 10).max(2);
+
+    let score = |labels: &Labels| -> f64 {
+        let red = ClusterReduce::from_labels(labels);
+        let vr = variance_ratio_per_voxel(&red.reduce(ds.data()), s, c);
+        let per_voxel: Vec<f64> = labels
+            .labels
+            .iter()
+            .map(|&cl| vr[cl as usize])
+            .filter(|v| v.is_finite())
+            .collect();
+        median(&per_voxel)
+    };
+
+    let single =
+        FastCluster::default().fit(ds.data(), &g, k, 1).unwrap();
+    let vr_single = score(&single);
+    assert!(vr_single.is_finite() && vr_single > 0.0);
+
+    for shards in [2usize, 4] {
+        let engine =
+            ShardedFastCluster { n_shards: shards, ..Default::default() };
+        let sharded = engine.fit(ds.data(), &g, k, 1).unwrap();
+        assert_eq!(sharded.k, k);
+        let vr_sharded = score(&sharded);
+        let ratio = vr_sharded / vr_single;
+        assert!(
+            (ratio - 1.0).abs() <= 0.05,
+            "shards={shards}: variance-ratio quality {ratio:.4} \
+             outside the ±5% acceptance band \
+             (single {vr_single:.4}, sharded {vr_sharded:.4})"
+        );
+    }
+}
+
+/// Determinism and the single-shard degenerate case.
+#[test]
+fn sharded_is_deterministic_and_one_shard_is_single_thread() {
+    let ds = SyntheticCube::new([9, 9, 8], 4.0, 0.5).generate(3, 21);
+    let g = LatticeGraph::from_mask(ds.mask());
+    let k = 40;
+
+    let engine =
+        ShardedFastCluster { n_shards: 3, ..Default::default() };
+    let a = engine.fit(ds.data(), &g, k, 5).unwrap();
+    let b = engine.fit(ds.data(), &g, k, 5).unwrap();
+    assert_eq!(a, b, "same seed must give identical partitions");
+
+    let one =
+        ShardedFastCluster { n_shards: 1, ..Default::default() };
+    let via_sharded = one.fit(ds.data(), &g, k, 5).unwrap();
+    let single = FastCluster::default().fit(ds.data(), &g, k, 5).unwrap();
+    assert_eq!(via_sharded, single, "1 shard must equal single-thread");
+}
+
+/// The trace exposes per-shard round counts bounded by the Alg. 1
+/// logarithmic guarantee applied shard-locally.
+#[test]
+fn sharded_trace_round_counts_stay_logarithmic() {
+    let ds = SyntheticCube::new([12, 12, 10], 4.0, 0.5).generate(3, 31);
+    let g = LatticeGraph::from_mask(ds.mask());
+    let p = ds.p();
+    let k = p / 10;
+    let engine =
+        ShardedFastCluster { n_shards: 4, ..Default::default() };
+    let (labels, trace) =
+        engine.fit_trace(ds.data(), &g, k, 0).unwrap();
+    assert_eq!(labels.k, k);
+    assert_eq!(trace.n_shards, 4);
+    for (s, (&p_s, rounds)) in trace
+        .shard_sizes
+        .iter()
+        .zip(trace.rounds_per_shard())
+        .enumerate()
+    {
+        // per-shard target is >= its proportional share of k, so the
+        // shard-local round bound is at most the global one
+        let bound =
+            ((p as f64 / k as f64).log2().ceil() as usize).max(1) + 2;
+        assert!(
+            rounds <= bound,
+            "shard {s} (p_s={p_s}): {rounds} rounds > bound {bound}"
+        );
+    }
+    assert!(trace.k_before_stitch >= k);
+    assert_eq!(
+        trace.stitch_merges,
+        trace.k_before_stitch - labels.k
+    );
+}
