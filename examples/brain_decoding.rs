@@ -62,7 +62,8 @@ fn main() -> Result<()> {
         Method::Ward,
         Method::RandomProjection,
     ] {
-        let reduce = ReduceConfig { method, k: 0, ratio: 10, seed: 1, shards: 0 };
+        let reduce =
+            ReduceConfig { method, k: 0, ratio: 10, seed: 1, shards: 0 };
         let rep =
             PipelineBuilder::new(reduce, est.clone()).run(&ds, &labels)?;
         table.row(vec![
@@ -79,8 +80,13 @@ fn main() -> Result<()> {
     // the logistic gradient running on the PJRT-compiled HLO artifact
     // (results must match native bit-for-bit up to f32 accumulation)
     if let Some(rt) = &runtime {
-        let reduce =
-            ReduceConfig { method: Method::Fast, k: 0, ratio: 10, seed: 1, shards: 0 };
+        let reduce = ReduceConfig {
+            method: Method::Fast,
+            k: 0,
+            ratio: 10,
+            seed: 1,
+            shards: 0,
+        };
         let k = reduce.resolve_k(ds.p());
         let n_train = ds.n() - ds.n() / est.cv_folds;
         if rt.manifest().find_logreg_shape(n_train, k).is_some() {

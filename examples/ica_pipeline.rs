@@ -20,7 +20,8 @@ fn main() -> Result<()> {
         seed: 2026,
     };
     println!(
-        "ICA pipeline: {} subjects, 2 sessions x {} timepoints, q = {}, p/k = {}",
+        "ICA pipeline: {} subjects, 2 sessions x {} timepoints, \
+         q = {}, p/k = {}",
         cfg.n_subjects, cfg.t, cfg.q, cfg.ratio
     );
     let res = fig7::run(&cfg);
@@ -33,7 +34,8 @@ fn main() -> Result<()> {
     let rp_rec: f64 =
         res.subjects.iter().map(|s| s.rp_vs_raw).sum::<f64>() / n;
     println!(
-        "\nclaim 1 (recovery): fast {fast_rec:.2} vs rp {rp_rec:.2} — fast must win"
+        "\nclaim 1 (recovery): fast {fast_rec:.2} vs rp {rp_rec:.2} \
+         — fast must win"
     );
     println!(
         "claim 2 (consistency): wilcoxon p = {}",

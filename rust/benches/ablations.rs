@@ -40,8 +40,9 @@ fn main() {
             feature_subsample: (m < 100).then_some(m),
             ..Default::default()
         };
-        let (b, labels) =
-            timeit(&format!("m={m}"), 0, 3, || fc.fit(ds.data(), &graph, k, 0).unwrap());
+        let (b, labels) = timeit(&format!("m={m}"), 0, 3, || {
+            fc.fit(ds.data(), &graph, k, 0).unwrap()
+        });
         let inertia = within_cluster_inertia(ds.data(), &labels);
         let stats = percolation_stats(&labels);
         t1.row(vec![
@@ -60,8 +61,9 @@ fn main() {
         "ablation 2 — exact-k capped merge vs natural (uncapped) count",
         &["mode", "k", "seconds"],
     );
-    let (b_exact, l_exact) =
-        timeit("exact", 0, 3, || FastCluster::default().fit(ds.data(), &graph, k, 0).unwrap());
+    let (b_exact, l_exact) = timeit("exact", 0, 3, || {
+        FastCluster::default().fit(ds.data(), &graph, k, 0).unwrap()
+    });
     // natural: run with k=1 cap removed by requesting the count the
     // trace shows one round above k
     let (_, trace) = FastCluster::default()

@@ -25,16 +25,8 @@ fn main() {
     write_csv(&table, std::path::Path::new("results/sharded_scaling.csv"))
         .expect("csv");
 
-    // hard acceptance gates (ADR-002)
-    for r in &rows {
-        assert_eq!(r.k, rows[0].k, "REGRESSION: shard count changed k");
-        assert!(
-            (r.vr_vs_single - 1.0).abs() <= 0.05,
-            "REGRESSION: shards={} variance-ratio quality {} outside ±5%",
-            r.shards,
-            r.vr_vs_single
-        );
-    }
+    // hard acceptance gates (ADR-002) — shared implementation
+    sharded::check_gates(&rows).expect("acceptance gates");
     let best = rows
         .iter()
         .filter(|r| r.shards > 1)
@@ -45,7 +37,9 @@ fn main() {
             best > 1.0,
             "REGRESSION: no multi-core speedup (best {best:.2}x)"
         );
-        println!("sharded scaling OK: best speedup {best:.2}x on {cores} cores");
+        println!(
+            "sharded scaling OK: best speedup {best:.2}x on {cores} cores"
+        );
     } else {
         println!("single core available — speedup gate skipped");
     }

@@ -1,0 +1,37 @@
+//! Bench: the out-of-core streaming pipeline vs the in-memory
+//! pipeline on the Fig-6 synthetic cohort — wall time, streaming
+//! throughput, analytic peak matrix memory, and the ADR-003
+//! acceptance gates (identical fold accuracies, bounded working set).
+//!
+//! ```bash
+//! cargo bench --bench streaming_oocore
+//! ```
+
+use fastclust::bench_harness::{streaming, write_bench_report};
+
+fn main() {
+    let cfg = streaming::StreamingBenchConfig::default();
+    println!(
+        "streaming driver: dims={:?} subjects={} chunk={} ratio={} \
+         folds={}",
+        cfg.dims, cfg.n_subjects, cfg.chunk_samples, cfg.ratio,
+        cfg.cv_folds
+    );
+    let r = streaming::run(&cfg).expect("streaming bench failed");
+    streaming::table(&r).print();
+
+    // hard acceptance gates (ADR-003) — shared implementation
+    streaming::check_gates(&r).expect("acceptance gates");
+    println!(
+        "streaming OK: acc {:.4} (= in-memory), bounded peak matrix \
+         {:.2} MB vs {:.2} MB dense, {:.1} MB/s",
+        r.stream.accuracy,
+        r.bounded.peak_matrix_bytes as f64 / (1024.0 * 1024.0),
+        r.bounded.inmem_matrix_bytes as f64 / (1024.0 * 1024.0),
+        r.throughput_mb_per_s
+    );
+
+    let path = std::path::Path::new("results/BENCH_streaming.json");
+    write_bench_report(path, &streaming::report_json(&r)).expect("json");
+    println!("[json] {}", path.display());
+}

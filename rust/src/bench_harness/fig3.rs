@@ -98,7 +98,11 @@ pub fn run(cfg: &Fig3Config) -> Vec<Fig3Row> {
     let (bench, _) = timeit("fast (10 imgs)", 0, cfg.reps, || {
         fc.fit(ds.data(), &graph, k, cfg.seed).expect("fit").k
     });
-    rows.push(Fig3Row { label: "fast (10 imgs)".into(), secs: bench.mean_s, k });
+    rows.push(Fig3Row {
+        label: "fast (10 imgs)".into(),
+        secs: bench.mean_s,
+        k,
+    });
 
     // §5: BLAS-3 reference — a dense (p, n) x (n, n) product on the
     // same data, the "standard linear algebra computation" yardstick

@@ -153,7 +153,11 @@ mod tests {
         Fig6Config {
             dims: [10, 12, 9],
             n_subjects: 40,
-            methods: vec![Method::None, Method::Fast, Method::RandomProjection],
+            methods: vec![
+                Method::None,
+                Method::Fast,
+                Method::RandomProjection,
+            ],
             ratios: vec![10],
             tols: vec![1e-3],
             cv_folds: 4,

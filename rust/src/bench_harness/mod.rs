@@ -1,8 +1,9 @@
 //! The paper-reproduction harness: one driver per evaluation figure
 //! (Fig 2 – Fig 7), the [`sharded`] scaling sweep for the parallel
-//! engine, plus a criterion-style timing core ([`timeit`]) and
-//! table/CSV reporting — all dependency-free (the offline build has no
-//! criterion).
+//! engine, the [`streaming`] out-of-core comparison (ADR-003), plus a
+//! criterion-style timing core ([`timeit`]), table/CSV reporting and
+//! the [`trajectory`] bench-JSON format CI gates regressions with —
+//! all dependency-free (the offline build has no criterion).
 //!
 //! Every driver takes a scale knob and a seed, returns a typed result
 //! table, and can print the same rows the paper reports. The binaries
@@ -17,8 +18,14 @@ pub mod fig6;
 pub mod fig7;
 mod report;
 pub mod sharded;
+pub mod streaming;
+pub mod trajectory;
 
 pub use report::{write_csv, Table};
+pub use trajectory::{
+    bench_report, load_bench_report, regression_failures,
+    write_bench_report,
+};
 
 use std::time::Instant;
 

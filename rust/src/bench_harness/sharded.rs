@@ -9,9 +9,11 @@
 //! degenerates to it exactly), so `speedup` and `vr_vs_single` are
 //! paired comparisons on identical data.
 
-use crate::bench_harness::{timeit, Table};
+use crate::bench_harness::{timeit, trajectory, Table};
 use crate::cluster::{Clusterer, Labels, ShardedFastCluster};
+use crate::error::{invalid, Result};
 use crate::graph::LatticeGraph;
+use crate::json::Value;
 use crate::reduce::{ClusterReduce, Reducer};
 use crate::stats::{median, variance_ratio_per_voxel, EtaSummary};
 use crate::volume::{ContrastMapGenerator, MaskedDataset};
@@ -87,8 +89,7 @@ fn quality(
 ) -> (f64, f64, f64) {
     let red = ClusterReduce::from_labels(labels);
     let xk = red.reduce(ds.data());
-    let cluster_vr =
-        variance_ratio_per_voxel(&xk, n_subjects, n_contrasts);
+    let cluster_vr = variance_ratio_per_voxel(&xk, n_subjects, n_contrasts);
     // expand per-cluster ratios back to voxels so the median is
     // weighted by cluster size, as in Fig 5
     let per_voxel: Vec<f64> = labels
@@ -172,6 +173,61 @@ pub fn table(rows: &[ShardedRow]) -> Table {
     t
 }
 
+/// The ADR-002 acceptance gates, shared by the CLI perf-smoke path
+/// (`repro bench-sharded`), the `sharded_scaling` bench binary and
+/// the tests — one implementation so the gates cannot drift: every
+/// shard count returns exactly the baseline `k`, and variance-ratio
+/// quality stays within ±5% of single-thread.
+pub fn check_gates(rows: &[ShardedRow]) -> Result<()> {
+    let Some(first) = rows.first() else {
+        return Err(invalid("sharded bench produced no rows"));
+    };
+    for r in rows {
+        if r.k != first.k {
+            return Err(invalid(format!(
+                "REGRESSION: shards={} returned k={} != {}",
+                r.shards, r.k, first.k
+            )));
+        }
+        if (r.vr_vs_single - 1.0).abs() > 0.05 {
+            return Err(invalid(format!(
+                "REGRESSION: shards={} variance-ratio quality {} \
+                 outside the ±5% band",
+                r.shards, r.vr_vs_single
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Build the `BENCH_sharded.json` report for the CI trajectory:
+/// single-thread seconds, best multi-shard seconds/speedup, and the
+/// quality metrics the ±5% acceptance band watches.
+pub fn report_json(rows: &[ShardedRow]) -> Value {
+    let single = rows.iter().find(|r| r.shards == 1);
+    let best = rows
+        .iter()
+        .filter(|r| r.shards > 1)
+        .min_by(|a, b| a.secs.total_cmp(&b.secs));
+    let mut metrics: Vec<(&str, f64)> = Vec::new();
+    if let Some(s) = single {
+        metrics.push(("single_thread_secs", s.secs));
+        metrics.push(("median_vr_single", s.median_vr));
+        metrics.push(("eta_mean_single", s.eta_mean));
+    }
+    if let Some(b) = best {
+        metrics.push(("best_sharded_secs", b.secs));
+        metrics.push(("best_speedup", b.speedup));
+        metrics.push(("best_shards", b.shards as f64));
+    }
+    let worst_vr_dev = rows
+        .iter()
+        .map(|r| (r.vr_vs_single - 1.0).abs())
+        .fold(0.0, f64::max);
+    metrics.push(("worst_vr_deviation", worst_vr_dev));
+    trajectory::bench_report("sharded", metrics)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -192,17 +248,9 @@ mod tests {
     fn all_rows_reach_exactly_k_and_quality_holds() {
         let rows = run(&tiny());
         assert_eq!(rows.len(), 3);
-        let k0 = rows[0].k;
+        // the shared ADR-002 gates: exactly-k + ±5% quality band
+        check_gates(&rows).unwrap();
         for r in &rows {
-            assert_eq!(r.k, k0, "shards={} returned different k", r.shards);
-            // the acceptance band: sharded quality within 5% of the
-            // single-thread variance-ratio metric
-            assert!(
-                (r.vr_vs_single - 1.0).abs() <= 0.05,
-                "shards={}: vr ratio {} outside ±5%",
-                r.shards,
-                r.vr_vs_single
-            );
             // compression must denoise (vr > raw-data levels ~1) and η
             // must be a sane contraction ratio
             assert!(r.median_vr.is_finite() && r.median_vr > 0.0);
@@ -220,5 +268,21 @@ mod tests {
         let s = t.render();
         assert!(s.contains("speedup"));
         assert!(s.contains("vr_vs_single"));
+    }
+
+    #[test]
+    fn report_json_carries_trajectory_metrics() {
+        let mut cfg = tiny();
+        cfg.shard_counts = vec![1, 2];
+        let rep = report_json(&run(&cfg));
+        assert_eq!(
+            rep.get("bench").unwrap().as_str().unwrap(),
+            "sharded"
+        );
+        let m = rep.get("metrics").unwrap();
+        assert!(m.get("single_thread_secs").unwrap().as_f64().is_some());
+        assert!(m.get("best_sharded_secs").unwrap().as_f64().is_some());
+        let dev = m.get("worst_vr_deviation").unwrap().as_f64().unwrap();
+        assert!(dev <= 0.05, "vr deviation {dev} outside band");
     }
 }

@@ -1,0 +1,386 @@
+//! Bench: the out-of-core streaming pipeline vs the in-memory
+//! pipeline on the Fig-6 synthetic cohort (ADR-003 acceptance
+//! numbers). Three paired runs:
+//!
+//! * **in-memory** — the reference [`run_decoding_pipeline`];
+//! * **streaming-exact** — full clustering reservoir + batch solver,
+//!   pooled workers: must reproduce the in-memory fold accuracies
+//!   *exactly* (the equivalence gate);
+//! * **streaming-bounded** — subsampled reservoir, sequential
+//!   single-chunk streaming: must hold peak resident matrix memory to
+//!   `O(chunk + k·n)`, strictly below the dense `(p, n)` matrix (the
+//!   memory gate), while staying within the accuracy band.
+//!
+//! Results are recorded into the standard bench report JSON
+//! (`BENCH_streaming.json`) the CI perf-smoke job gates on.
+
+use std::fs;
+use std::path::PathBuf;
+
+use crate::bench_harness::{trajectory, Table};
+use crate::config::{EstimatorConfig, Method, ReduceConfig, StreamConfig};
+use crate::coordinator::{
+    run_decoding_pipeline, run_streaming_decoding, DecodingReport,
+    StreamingReport,
+};
+use crate::error::{invalid, Result};
+use crate::json::Value;
+use crate::volume::{save_dataset, MorphometryGenerator};
+
+/// Parameters of the streaming-vs-in-memory comparison.
+#[derive(Clone, Debug)]
+pub struct StreamingBenchConfig {
+    /// Grid dims of the synthetic cohort.
+    pub dims: [usize; 3],
+    /// Subjects.
+    pub n_subjects: usize,
+    /// Compression ratio (`k = p / ratio`).
+    pub ratio: usize,
+    /// Samples per streamed chunk.
+    pub chunk_samples: usize,
+    /// CV folds.
+    pub cv_folds: usize,
+    /// Worker threads for the exact streaming run (`0` = one per
+    /// core; the bounded run is always sequential — the
+    /// memory-optimal configuration).
+    pub workers: usize,
+    /// Root seed.
+    pub seed: u64,
+}
+
+impl Default for StreamingBenchConfig {
+    fn default() -> Self {
+        StreamingBenchConfig {
+            dims: [16, 18, 16],
+            n_subjects: 120,
+            ratio: 10,
+            chunk_samples: 16,
+            cv_folds: 10,
+            workers: 0,
+            seed: 13,
+        }
+    }
+}
+
+impl StreamingBenchConfig {
+    /// CI quick mode: small enough for a perf-smoke job, large enough
+    /// that the equivalence and memory gates are meaningful.
+    pub fn quick() -> Self {
+        StreamingBenchConfig {
+            dims: [10, 12, 9],
+            n_subjects: 48,
+            ratio: 10,
+            chunk_samples: 8,
+            cv_folds: 4,
+            workers: 2,
+            seed: 13,
+        }
+    }
+
+    /// Reservoir size of the bounded run: a quarter of the cohort
+    /// (at least two chunks), the O(p·m) working set of stage 1.
+    pub fn bounded_reservoir(&self) -> usize {
+        (self.n_subjects / 4)
+            .max(2 * self.chunk_samples)
+            .min(self.n_subjects)
+    }
+}
+
+/// Paired results of one comparison run.
+#[derive(Clone, Debug)]
+pub struct StreamingBenchResult {
+    /// Voxels in the cohort.
+    pub p: usize,
+    /// Samples in the cohort.
+    pub n: usize,
+    /// In-memory pipeline report.
+    pub inmem: DecodingReport,
+    /// Streaming-exact report (full reservoir, pooled workers).
+    pub stream: StreamingReport,
+    /// Streaming-bounded report (subsampled reservoir, sequential).
+    pub bounded: StreamingReport,
+    /// Total wall seconds, in-memory pipeline.
+    pub inmem_secs: f64,
+    /// Total wall seconds, streaming-exact.
+    pub stream_secs: f64,
+    /// Total wall seconds, streaming-bounded.
+    pub bounded_secs: f64,
+    /// Payload MB/s through the exact run's reduce stage.
+    pub throughput_mb_per_s: f64,
+    /// Process peak RSS in bytes (`VmHWM`), if the platform exposes
+    /// it. Informational: within one process it also covers cohort
+    /// generation, so the memory *gate* uses the analytic accounting.
+    pub peak_rss_bytes: Option<u64>,
+}
+
+impl StreamingBenchResult {
+    /// Max |in-memory − streaming-exact| over paired fold accuracies
+    /// (the equivalence gate; must be exactly zero).
+    pub fn max_fold_accuracy_delta(&self) -> f64 {
+        self.inmem
+            .fold_accuracies
+            .iter()
+            .zip(&self.stream.fold_accuracies)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// True when the bounded run's analytic working set undercuts the
+    /// dense `(p, n)` matrix (the memory gate).
+    pub fn memory_bound_holds(&self) -> bool {
+        self.bounded.peak_matrix_bytes < self.bounded.inmem_matrix_bytes
+    }
+}
+
+/// The ADR-003 acceptance gates, shared by the CLI perf-smoke path
+/// (`repro bench-streaming`), the `streaming_oocore` bench binary and
+/// the unit tests — one implementation so the gates cannot drift:
+/// exact fold-accuracy equivalence, bounded-run memory win, and the
+/// bounded run staying within ±0.15 accuracy of in-memory.
+pub fn check_gates(r: &StreamingBenchResult) -> Result<()> {
+    if r.inmem.fold_accuracies != r.stream.fold_accuracies {
+        return Err(invalid(format!(
+            "REGRESSION: streaming fold accuracies diverged from the \
+             in-memory pipeline (max delta {:.3e})",
+            r.max_fold_accuracy_delta()
+        )));
+    }
+    if !r.memory_bound_holds() {
+        return Err(invalid(format!(
+            "REGRESSION: bounded streaming working set {} B not below \
+             the dense matrix {} B",
+            r.bounded.peak_matrix_bytes, r.bounded.inmem_matrix_bytes
+        )));
+    }
+    if (r.bounded.accuracy - r.inmem.accuracy).abs() > 0.15 {
+        return Err(invalid(format!(
+            "REGRESSION: bounded-reservoir accuracy {} left the \
+             ±0.15 band around in-memory {}",
+            r.bounded.accuracy, r.inmem.accuracy
+        )));
+    }
+    Ok(())
+}
+
+/// Read the process high-water RSS from `/proc/self/status` (linux).
+pub fn peak_rss_bytes() -> Option<u64> {
+    let text = fs::read_to_string("/proc/self/status").ok()?;
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 =
+                rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+/// Run the comparison: generate the Fig-6 cohort, cache it as `.fcd`,
+/// run the three pipelines with identical stage configs, measure.
+pub fn run(cfg: &StreamingBenchConfig) -> Result<StreamingBenchResult> {
+    let (ds, labels) = MorphometryGenerator::new(cfg.dims)
+        .generate(cfg.n_subjects, cfg.seed);
+    let dir: PathBuf = std::env::temp_dir().join("fastclust_streaming_bench");
+    fs::create_dir_all(&dir)?;
+    let stem = dir.join(format!(
+        "cohort_{}x{}x{}_{}_{}",
+        cfg.dims[0], cfg.dims[1], cfg.dims[2], cfg.n_subjects, cfg.seed
+    ));
+    save_dataset(&stem, &ds)?;
+
+    let reduce = ReduceConfig {
+        method: Method::Fast,
+        k: 0,
+        ratio: cfg.ratio,
+        seed: cfg.seed,
+        shards: 0,
+    };
+    let est = EstimatorConfig {
+        cv_folds: cfg.cv_folds,
+        max_iter: 300,
+        ..Default::default()
+    };
+    let exact = StreamConfig {
+        enabled: true,
+        chunk_samples: cfg.chunk_samples,
+        reservoir: 0, // full: bit-exact equivalence
+        sgd_epochs: 0,
+    };
+    let bounded = StreamConfig {
+        reservoir: cfg.bounded_reservoir(),
+        ..exact.clone()
+    };
+    let workers = if cfg.workers == 0 {
+        std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1)
+    } else {
+        cfg.workers
+    };
+
+    let t0 = std::time::Instant::now();
+    let inmem = run_decoding_pipeline(&ds, &labels, &reduce, &est)?;
+    let inmem_secs = t0.elapsed().as_secs_f64();
+    let (p, n) = (ds.p(), ds.n());
+    drop(ds); // the streaming runs must not lean on the in-core cohort
+
+    let t0 = std::time::Instant::now();
+    let stream_rep = run_streaming_decoding(
+        &stem, &labels, &reduce, &est, &exact, workers,
+    )?;
+    let stream_secs = t0.elapsed().as_secs_f64();
+
+    let t0 = std::time::Instant::now();
+    let bounded_rep = run_streaming_decoding(
+        &stem, &labels, &reduce, &est, &bounded, 1,
+    )?;
+    let bounded_secs = t0.elapsed().as_secs_f64();
+
+    let mb = stream_rep.bytes_streamed as f64 / (1024.0 * 1024.0);
+    let throughput_mb_per_s = mb / stream_rep.reduce_secs.max(1e-9);
+    Ok(StreamingBenchResult {
+        p,
+        n,
+        inmem,
+        stream: stream_rep,
+        bounded: bounded_rep,
+        inmem_secs,
+        stream_secs,
+        bounded_secs,
+        throughput_mb_per_s,
+        peak_rss_bytes: peak_rss_bytes(),
+    })
+}
+
+/// Render the comparison table.
+pub fn table(r: &StreamingBenchResult) -> Table {
+    let mut t = Table::new(
+        "Streaming (out-of-core) vs in-memory decoding pipeline",
+        &["metric", "in-memory", "stream-exact", "stream-bounded"],
+    );
+    let mb = |b: usize| format!("{:.2} MB", b as f64 / (1024.0 * 1024.0));
+    t.row(vec![
+        "accuracy".into(),
+        format!("{:.4}", r.inmem.accuracy),
+        format!("{:.4}", r.stream.accuracy),
+        format!("{:.4}", r.bounded.accuracy),
+    ]);
+    t.row(vec![
+        "total secs".into(),
+        format!("{:.3}", r.inmem_secs),
+        format!("{:.3}", r.stream_secs),
+        format!("{:.3}", r.bounded_secs),
+    ]);
+    t.row(vec![
+        "cluster secs".into(),
+        format!("{:.3}", r.inmem.cluster_secs),
+        format!("{:.3}", r.stream.cluster_secs),
+        format!("{:.3}", r.bounded.cluster_secs),
+    ]);
+    t.row(vec![
+        "peak matrix bytes".into(),
+        mb(r.stream.inmem_matrix_bytes),
+        mb(r.stream.peak_matrix_bytes),
+        mb(r.bounded.peak_matrix_bytes),
+    ]);
+    t.row(vec![
+        "reservoir samples".into(),
+        format!("{}", r.n),
+        format!("{}", r.stream.reservoir_samples),
+        format!("{}", r.bounded.reservoir_samples),
+    ]);
+    t.row(vec![
+        "chunks".into(),
+        "1 (whole matrix)".into(),
+        format!("{} x {}", r.stream.chunks, r.stream.chunk_samples),
+        format!("{} x {}", r.bounded.chunks, r.bounded.chunk_samples),
+    ]);
+    t.row(vec![
+        "reduce throughput".into(),
+        "-".into(),
+        format!("{:.1} MB/s", r.throughput_mb_per_s),
+        "-".into(),
+    ]);
+    t.row(vec![
+        "max fold acc delta".into(),
+        "-".into(),
+        format!("{:.2e}", r.max_fold_accuracy_delta()),
+        format!("{:+.4}", r.bounded.accuracy - r.inmem.accuracy),
+    ]);
+    t
+}
+
+/// Build the `BENCH_streaming.json` report for the CI trajectory.
+pub fn report_json(r: &StreamingBenchResult) -> Value {
+    let mb = 1.0 / (1024.0 * 1024.0);
+    trajectory::bench_report(
+        "streaming",
+        vec![
+            ("inmem_total_secs", r.inmem_secs),
+            ("stream_total_secs", r.stream_secs),
+            ("bounded_total_secs", r.bounded_secs),
+            ("stream_reduce_secs", r.stream.reduce_secs),
+            ("stream_cluster_secs", r.stream.cluster_secs),
+            ("stream_estimator_secs", r.stream.estimator_secs),
+            ("throughput_mb_per_s", r.throughput_mb_per_s),
+            (
+                "peak_matrix_mb_bounded",
+                r.bounded.peak_matrix_bytes as f64 * mb,
+            ),
+            (
+                "peak_matrix_mb_inmem",
+                r.bounded.inmem_matrix_bytes as f64 * mb,
+            ),
+            ("accuracy_inmem", r.inmem.accuracy),
+            ("accuracy_stream", r.stream.accuracy),
+            ("accuracy_bounded", r.bounded.accuracy),
+            ("accuracy_delta_max_fold", r.max_fold_accuracy_delta()),
+            ("chunks", r.stream.chunks as f64),
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> StreamingBenchConfig {
+        StreamingBenchConfig {
+            dims: [9, 10, 8],
+            n_subjects: 32,
+            ratio: 10,
+            chunk_samples: 4,
+            cv_folds: 3,
+            workers: 2,
+            seed: 5,
+        }
+    }
+
+    #[test]
+    fn streaming_matches_inmem_exactly_and_bounds_memory() {
+        let r = run(&tiny()).unwrap();
+        // the shared ADR-003 gates: equivalence, memory, band
+        check_gates(&r).unwrap();
+        assert_eq!(r.max_fold_accuracy_delta(), 0.0);
+        assert_eq!(r.bounded.inmem_matrix_bytes, r.p * r.n * 4);
+        assert!(r.throughput_mb_per_s > 0.0);
+    }
+
+    #[test]
+    fn table_and_report_render() {
+        // distinct seed => distinct cached stem: the two tests run
+        // concurrently and must not rewrite each other's files
+        let cfg = StreamingBenchConfig { seed: 6, ..tiny() };
+        let r = run(&cfg).unwrap();
+        let s = table(&r).render();
+        assert!(s.contains("accuracy"));
+        assert!(s.contains("MB/s"));
+        let rep = report_json(&r);
+        let m = rep.get("metrics").unwrap();
+        assert!(m.get("stream_total_secs").unwrap().as_f64().is_some());
+        assert_eq!(
+            m.get("accuracy_delta_max_fold").unwrap().as_f64().unwrap(),
+            0.0
+        );
+        assert!(m.get("peak_matrix_mb_bounded").unwrap().as_f64()
+            < m.get("peak_matrix_mb_inmem").unwrap().as_f64());
+    }
+}

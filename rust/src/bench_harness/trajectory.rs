@@ -1,0 +1,178 @@
+//! Bench trajectory reports: the machine-readable `BENCH_*.json`
+//! format the CI perf-smoke job records on every push and gates
+//! against committed baselines.
+//!
+//! A report is `{"bench": <name>, "metrics": {<key>: <number>, ...}}`.
+//! Comparison semantics are keyed by metric name:
+//!
+//! * `*_secs` — wall-time: the gate fails when the current value
+//!   exceeds `factor ×` the baseline (default 2×), *unless* the
+//!   baseline is below [`TIME_FLOOR_SECS`] (micro-times are all noise
+//!   on shared CI runners);
+//! * `accuracy*` (except `*delta*`) — quality: fails when the current
+//!   value drops more than [`ACCURACY_FLOOR`] below the baseline;
+//! * anything else — informational, recorded but never gated.
+
+use std::path::Path;
+
+use crate::error::{invalid, Result};
+use crate::json::{self, Value};
+
+/// Baseline times below this many seconds are never gated (CI noise).
+pub const TIME_FLOOR_SECS: f64 = 0.05;
+
+/// Maximum tolerated absolute drop for `accuracy*` metrics.
+pub const ACCURACY_FLOOR: f64 = 0.15;
+
+/// Build a report value from a bench name and metric pairs.
+pub fn bench_report(name: &str, metrics: Vec<(&str, f64)>) -> Value {
+    Value::obj(vec![
+        ("bench", Value::Str(name.to_string())),
+        (
+            "metrics",
+            Value::Obj(
+                metrics
+                    .into_iter()
+                    .map(|(k, v)| (k.to_string(), Value::Num(v)))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Write a report as pretty JSON (creating parent directories).
+pub fn write_bench_report(path: &Path, report: &Value) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, report.to_string_pretty())?;
+    Ok(())
+}
+
+/// Load a report written by [`write_bench_report`].
+pub fn load_bench_report(path: &Path) -> Result<Value> {
+    let text = std::fs::read_to_string(path)?;
+    let v = json::parse(&text)?;
+    if v.get("metrics").and_then(Value::as_obj).is_none() {
+        return Err(invalid(format!(
+            "{}: not a bench report (no 'metrics' object)",
+            path.display()
+        )));
+    }
+    Ok(v)
+}
+
+/// Compare a current report against a committed baseline. Returns one
+/// human-readable message per violated gate; empty = pass.
+pub fn regression_failures(
+    current: &Value,
+    baseline: &Value,
+    factor: f64,
+) -> Vec<String> {
+    let mut fails = Vec::new();
+    let (Some(cm), Some(bm)) = (
+        current.get("metrics").and_then(Value::as_obj),
+        baseline.get("metrics").and_then(Value::as_obj),
+    ) else {
+        return vec!["malformed bench report (no metrics)".into()];
+    };
+    for (key, bval) in bm {
+        let Some(b) = bval.as_f64() else { continue };
+        let Some(c) = cm.get(key).and_then(Value::as_f64) else {
+            fails.push(format!(
+                "metric '{key}' missing from current report"
+            ));
+            continue;
+        };
+        if key.ends_with("_secs")
+            && b >= TIME_FLOOR_SECS
+            && c > b * factor
+        {
+            fails.push(format!(
+                "{key}: {c:.4}s > {factor:.1}x baseline {b:.4}s"
+            ));
+        } else if key.starts_with("accuracy")
+            && !key.contains("delta")
+            && c < b - ACCURACY_FLOOR
+        {
+            fails.push(format!(
+                "{key}: {c:.4} fell more than {ACCURACY_FLOOR} \
+                 below baseline {b:.4}"
+            ));
+        }
+    }
+    fails
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_roundtrips_through_disk() {
+        let dir = std::env::temp_dir().join("fastclust_traj_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_demo.json");
+        let rep = bench_report(
+            "demo",
+            vec![("total_secs", 1.25), ("accuracy_demo", 0.9)],
+        );
+        write_bench_report(&path, &rep).unwrap();
+        let back = load_bench_report(&path).unwrap();
+        assert_eq!(
+            back.get("bench").unwrap().as_str().unwrap(),
+            "demo"
+        );
+        let m = back.get("metrics").unwrap();
+        assert_eq!(m.get("total_secs").unwrap().as_f64().unwrap(), 1.25);
+    }
+
+    #[test]
+    fn time_regression_gated_at_factor() {
+        let base = bench_report("b", vec![("fit_secs", 1.0)]);
+        let ok = bench_report("b", vec![("fit_secs", 1.9)]);
+        let bad = bench_report("b", vec![("fit_secs", 2.1)]);
+        assert!(regression_failures(&ok, &base, 2.0).is_empty());
+        let fails = regression_failures(&bad, &base, 2.0);
+        assert_eq!(fails.len(), 1);
+        assert!(fails[0].contains("fit_secs"));
+    }
+
+    #[test]
+    fn micro_times_are_not_gated() {
+        let base = bench_report("b", vec![("fit_secs", 0.001)]);
+        let cur = bench_report("b", vec![("fit_secs", 0.04)]);
+        assert!(regression_failures(&cur, &base, 2.0).is_empty());
+    }
+
+    #[test]
+    fn accuracy_drop_gated_missing_metric_flagged() {
+        let base = bench_report(
+            "b",
+            vec![("accuracy_stream", 0.9), ("chunks", 10.0)],
+        );
+        let bad = bench_report(
+            "b",
+            vec![("accuracy_stream", 0.6), ("chunks", 50.0)],
+        );
+        let fails = regression_failures(&bad, &base, 2.0);
+        // accuracy gated, informational 'chunks' ignored
+        assert_eq!(fails.len(), 1);
+        assert!(fails[0].contains("accuracy_stream"));
+        let missing = bench_report("b", vec![("chunks", 1.0)]);
+        let fails = regression_failures(&missing, &base, 2.0);
+        assert!(fails
+            .iter()
+            .any(|f| f.contains("accuracy_stream")
+                && f.contains("missing")));
+    }
+
+    #[test]
+    fn delta_metrics_never_gated() {
+        let base = bench_report("b", vec![("accuracy_delta_abs", 0.0)]);
+        let cur = bench_report("b", vec![("accuracy_delta_abs", -1.0)]);
+        assert!(regression_failures(&cur, &base, 2.0).is_empty());
+    }
+}

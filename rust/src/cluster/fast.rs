@@ -98,7 +98,8 @@ impl FastCluster {
             let weighted: Vec<Edge> = edges
                 .iter()
                 .map(|&(u, v)| {
-                    Edge::new(u, v, sqdist(&data[u as usize], &data[v as usize]))
+                    let d = sqdist(&data[u as usize], &data[v as usize]);
+                    Edge::new(u, v, d)
                 })
                 .collect();
             let g = LatticeGraph::from_edges(q, weighted);
@@ -124,7 +125,9 @@ impl FastCluster {
                 .into_iter()
                 .zip(&counts)
                 .map(|(s, &c)| {
-                    s.into_iter().map(|v| (v / c.max(1) as f64) as f32).collect()
+                    s.into_iter()
+                        .map(|v| (v / c.max(1) as f64) as f32)
+                        .collect()
                 })
                 .collect();
             // 4b. reduce topology: relabel edge endpoints, drop loops,
@@ -302,7 +305,10 @@ mod tests {
     #[test]
     fn feature_subsample_still_valid() {
         let (x, g) = cube_fixture([6, 6, 6], 8, 8);
-        let fc = FastCluster { feature_subsample: Some(2), ..Default::default() };
+        let fc = FastCluster {
+            feature_subsample: Some(2),
+            ..Default::default()
+        };
         let labels = fc.fit(&x, &g, 25, 3).unwrap();
         assert_eq!(labels.k, 25);
     }

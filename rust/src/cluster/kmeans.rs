@@ -127,8 +127,10 @@ impl Clusterer for KMeans {
                     // re-seed empty cluster at the farthest point
                     let far = (0..p)
                         .max_by(|&a, &b| {
-                            let da = sqdist(x.row(a), &centers[labels[a] as usize]);
-                            let db = sqdist(x.row(b), &centers[labels[b] as usize]);
+                            let ca = &centers[labels[a] as usize];
+                            let cb = &centers[labels[b] as usize];
+                            let da = sqdist(x.row(a), ca);
+                            let db = sqdist(x.row(b), cb);
                             da.partial_cmp(&db).unwrap()
                         })
                         .unwrap();

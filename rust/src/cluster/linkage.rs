@@ -41,7 +41,10 @@ impl Clusterer for SingleLinkage {
         let weighted: Vec<Edge> = graph
             .edges
             .iter()
-            .map(|e| Edge::new(e.u, e.v, x.row_sqdist(e.u as usize, e.v as usize)))
+            .map(|e| {
+                let d = x.row_sqdist(e.u as usize, e.v as usize);
+                Edge::new(e.u, e.v, d)
+            })
             .collect();
         let mut tree = kruskal_mst(p, &weighted);
         let base_components = p - tree.len();
@@ -98,8 +101,7 @@ fn agglomerate(
     check_fit_args(x, graph, k)?;
     let p = x.rows;
     // neighbor dissimilarity maps (graph-constrained)
-    let mut nbrs: Vec<HashMap<u32, f32>> =
-        vec![HashMap::new(); p];
+    let mut nbrs: Vec<HashMap<u32, f32>> = vec![HashMap::new(); p];
     for e in &graph.edges {
         let d = x.row_sqdist(e.u as usize, e.v as usize);
         nbrs[e.u as usize].insert(e.v, d);
@@ -186,7 +188,11 @@ fn agglomerate(
             let wm = &mut nbrs[w as usize];
             wm.remove(&(v as u32));
             wm.insert(u as u32, d);
-            let (a, b) = if (u as u32) < w { (u as u32, w) } else { (w, u as u32) };
+            let (a, b) = if (u as u32) < w {
+                (u as u32, w)
+            } else {
+                (w, u as u32)
+            };
             heap.push(Reverse((
                 Ord32(d),
                 a,

@@ -31,7 +31,10 @@ impl Clusterer for RandSingle {
         let weighted: Vec<Edge> = graph
             .edges
             .iter()
-            .map(|e| Edge::new(e.u, e.v, x.row_sqdist(e.u as usize, e.v as usize)))
+            .map(|e| {
+                let d = x.row_sqdist(e.u as usize, e.v as usize);
+                Edge::new(e.u, e.v, d)
+            })
             .collect();
         let tree = kruskal_mst(p, &weighted);
         let base_components = p - tree.len();

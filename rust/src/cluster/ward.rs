@@ -102,7 +102,8 @@ impl Clusterer for Ward {
             let (su, sv) = (size[u], size[v]);
             let st = su + sv;
             for i in 0..n {
-                centroid[u][i] = (su * centroid[u][i] + sv * centroid[v][i]) / st;
+                centroid[u][i] =
+                    (su * centroid[u][i] + sv * centroid[v][i]) / st;
             }
             size[u] = st;
             active[v] = false;
@@ -125,7 +126,12 @@ impl Clusterer for Ward {
             for &w in &uadj {
                 let wi = w as usize;
                 debug_assert!(active[wi]);
-                let c = ward_cost(size[u], size[wi], &centroid[u], &centroid[wi]);
+                let c = ward_cost(
+                    size[u],
+                    size[wi],
+                    &centroid[u],
+                    &centroid[wi],
+                );
                 let (a, b) =
                     if (u as u32) < w { (u as u32, w) } else { (w, u as u32) };
                 heap.push(Reverse((

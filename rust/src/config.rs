@@ -176,7 +176,37 @@ impl Default for EstimatorConfig {
     }
 }
 
-/// A full experiment = data + compression + estimation.
+/// Out-of-core streaming execution (ADR-003): pump the dataset
+/// through the pipeline in bounded sample chunks instead of
+/// materializing the `(p, n)` matrix.
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    /// Run the decoding pipeline in streaming mode (`--stream`).
+    pub enabled: bool,
+    /// Samples per column chunk (`--chunk-samples`); the `O(chunk)`
+    /// term of the pipeline's memory bound.
+    pub chunk_samples: usize,
+    /// Training-sample reservoir for learning the clustering;
+    /// `0` = every sample (bit-exact in-memory equivalence).
+    pub reservoir: usize,
+    /// SGD passes over the reduced features for the estimator;
+    /// `0` = the full-batch solver (exact equivalence).
+    pub sgd_epochs: usize,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig {
+            enabled: false,
+            chunk_samples: 32,
+            reservoir: 0,
+            sgd_epochs: 0,
+        }
+    }
+}
+
+/// A full experiment = data + compression + estimation (+ optional
+/// streaming execution).
 #[derive(Clone, Debug, Default)]
 pub struct ExperimentConfig {
     /// Data generation.
@@ -185,32 +215,34 @@ pub struct ExperimentConfig {
     pub reduce: ReduceConfig,
     /// Estimation stage.
     pub estimator: EstimatorConfig,
+    /// Out-of-core execution mode.
+    pub stream: StreamConfig,
 }
 
 fn get_usize(v: &Value, key: &str, default: usize) -> Result<usize> {
     match v.get(key) {
         None => Ok(default),
-        Some(x) => x
-            .as_usize()
-            .ok_or_else(|| invalid(format!("'{key}' must be a non-negative integer"))),
+        Some(x) => x.as_usize().ok_or_else(|| {
+            invalid(format!("'{key}' must be a non-negative integer"))
+        }),
     }
 }
 
 fn get_f64(v: &Value, key: &str, default: f64) -> Result<f64> {
     match v.get(key) {
         None => Ok(default),
-        Some(x) => {
-            x.as_f64().ok_or_else(|| invalid(format!("'{key}' must be a number")))
-        }
+        Some(x) => x.as_f64().ok_or_else(|| {
+            invalid(format!("'{key}' must be a number"))
+        }),
     }
 }
 
 fn get_u64(v: &Value, key: &str, default: u64) -> Result<u64> {
     match v.get(key) {
         None => Ok(default),
-        Some(x) => {
-            x.as_u64().ok_or_else(|| invalid(format!("'{key}' must be an integer")))
-        }
+        Some(x) => x.as_u64().ok_or_else(|| {
+            invalid(format!("'{key}' must be an integer"))
+        }),
     }
 }
 
@@ -229,9 +261,9 @@ impl DataConfig {
                 }
                 let mut out = [0usize; 3];
                 for (i, e) in arr.iter().enumerate() {
-                    out[i] = e
-                        .as_usize()
-                        .ok_or_else(|| invalid("'dims' entries must be ints"))?;
+                    out[i] = e.as_usize().ok_or_else(|| {
+                        invalid("'dims' entries must be ints")
+                    })?;
                 }
                 out
             }
@@ -263,9 +295,9 @@ impl ReduceConfig {
         let d = ReduceConfig::default();
         let method = match v.get("method") {
             None => d.method,
-            Some(x) => Method::parse(
-                x.as_str().ok_or_else(|| invalid("'method' must be a string"))?,
-            )?,
+            Some(x) => Method::parse(x.as_str().ok_or_else(|| {
+                invalid("'method' must be a string")
+            })?)?,
         };
         Ok(ReduceConfig {
             method,
@@ -318,6 +350,34 @@ impl EstimatorConfig {
     }
 }
 
+impl StreamConfig {
+    /// Parse from a JSON object.
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let d = StreamConfig::default();
+        Ok(StreamConfig {
+            enabled: match v.get("enabled") {
+                None => d.enabled,
+                Some(x) => x
+                    .as_bool()
+                    .ok_or_else(|| invalid("'enabled' must be bool"))?,
+            },
+            chunk_samples: get_usize(v, "chunk_samples", d.chunk_samples)?,
+            reservoir: get_usize(v, "reservoir", d.reservoir)?,
+            sgd_epochs: get_usize(v, "sgd_epochs", d.sgd_epochs)?,
+        })
+    }
+
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("enabled", Value::Bool(self.enabled)),
+            ("chunk_samples", Value::Num(self.chunk_samples as f64)),
+            ("reservoir", Value::Num(self.reservoir as f64)),
+            ("sgd_epochs", Value::Num(self.sgd_epochs as f64)),
+        ])
+    }
+}
+
 impl ExperimentConfig {
     /// Parse the full config (all sections optional).
     pub fn from_json(v: &Value) -> Result<Self> {
@@ -334,6 +394,10 @@ impl ExperimentConfig {
                 Some(e) => EstimatorConfig::from_json(e)?,
                 None => EstimatorConfig::default(),
             },
+            stream: match v.get("stream") {
+                Some(s) => StreamConfig::from_json(s)?,
+                None => StreamConfig::default(),
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -345,6 +409,7 @@ impl ExperimentConfig {
             ("data", self.data.to_json()),
             ("reduce", self.reduce.to_json()),
             ("estimator", self.estimator.to_json()),
+            ("stream", self.stream.to_json()),
         ])
     }
 
@@ -367,6 +432,15 @@ impl ExperimentConfig {
         }
         if self.estimator.cv_folds < 2 {
             return Err(invalid("cv_folds must be >= 2"));
+        }
+        if self.stream.chunk_samples == 0 {
+            return Err(invalid("chunk_samples must be >= 1"));
+        }
+        if self.stream.enabled && self.reduce.method == Method::None {
+            return Err(invalid(
+                "streaming mode needs a compression method (raw \
+                 holds the full matrix in core)",
+            ));
         }
         Ok(())
     }
@@ -424,5 +498,34 @@ mod tests {
         assert!(ExperimentConfig::from_json(&v).is_err());
         let v = json::parse(r#"{"reduce": {"method": "nope"}}"#).unwrap();
         assert!(ExperimentConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"stream": {"chunk_samples": 0}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn stream_config_roundtrips_and_validates() {
+        let text = r#"{
+            "reduce": {"method": "fast"},
+            "stream": {"enabled": true, "chunk_samples": 8,
+                       "reservoir": 64, "sgd_epochs": 3}
+        }"#;
+        let cfg =
+            ExperimentConfig::from_json(&json::parse(text).unwrap())
+                .unwrap();
+        assert!(cfg.stream.enabled);
+        assert_eq!(cfg.stream.chunk_samples, 8);
+        assert_eq!(cfg.stream.reservoir, 64);
+        assert_eq!(cfg.stream.sgd_epochs, 3);
+        let back = ExperimentConfig::from_json(
+            &json::parse(&cfg.to_json().to_string()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.stream.chunk_samples, 8);
+        assert!(back.stream.enabled);
+        // raw + streaming is contradictory
+        let bad = r#"{"reduce": {"method": "raw"},
+                      "stream": {"enabled": true}}"#;
+        assert!(ExperimentConfig::from_json(&json::parse(bad).unwrap())
+            .is_err());
     }
 }

@@ -18,7 +18,11 @@ pub struct EventLog {
 impl EventLog {
     /// New log; `verbose` additionally prints events to stderr.
     pub fn new(verbose: bool) -> Self {
-        EventLog { start: Instant::now(), events: Mutex::new(Vec::new()), verbose }
+        EventLog {
+            start: Instant::now(),
+            events: Mutex::new(Vec::new()),
+            verbose,
+        }
     }
 
     /// Record (and optionally echo) an event.

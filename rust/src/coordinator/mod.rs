@@ -14,6 +14,12 @@
 //!   sharded engine of ADR-002) to a boxed [`crate::cluster::Clusterer`],
 //!   [`make_reducer`] builds the compression operator, and
 //!   [`run_decoding_pipeline`] / [`PipelineBuilder`] drive the folds.
+//! * [`stream`] — the out-of-core execution mode (ADR-003):
+//!   [`run_streaming_decoding`] pumps bounded sample chunks from a
+//!   saved `.fcd` dataset through the same stages, holding
+//!   `O(chunk + k·n)` matrix bytes instead of `O(p·n)` and (with a
+//!   full reservoir and the batch solver) reproducing the in-memory
+//!   fold accuracies exactly.
 //! * [`WorkerPool`] — fixed thread pool over a [`BoundedQueue`]; job
 //!   results are reassembled by submission id, so parallelism never
 //!   changes results (see `worker_parallelism_does_not_change_results`
@@ -40,12 +46,14 @@
 mod events;
 pub mod pipeline;
 mod queue;
+pub mod stream;
 mod worker;
 
 pub use events::{EventLog, Metrics, Stopwatch};
 pub use pipeline::{
-    fit_clustering, make_clusterer, make_reducer, run_decoding_pipeline,
-    DecodingReport, PipelineBuilder, StageReport,
+    fit_clustering, make_clusterer, make_reducer, run_cv_folds,
+    run_decoding_pipeline, DecodingReport, PipelineBuilder, StageReport,
 };
 pub use queue::BoundedQueue;
+pub use stream::{run_streaming_decoding, stream_reduce, StreamingReport};
 pub use worker::WorkerPool;

@@ -184,6 +184,89 @@ pub fn run_decoding_pipeline(
     run_decoding_inner(ds, labels01, reduce, estimator, 1, None, false)
 }
 
+/// The CV estimation stage: stratified folds (fixed split seed, so
+/// every execution mode sees identical splits), ℓ2-logreg per fold,
+/// per-fold test accuracy. Shared by the in-memory pipeline and the
+/// streaming pipeline (ADR-003) — both hand it the same `(n, k)`
+/// sample-major reduced features, which is what makes their fold
+/// accuracies directly comparable.
+///
+/// The PJRT client is not Send (the xla crate wraps an Rc), so
+/// runtime-backed folds run sequentially on the calling thread; the
+/// native backend shards folds across a [`WorkerPool`] (results are
+/// reassembled by fold id, so worker count never changes output).
+/// Takes the features behind an `Arc` so fold jobs share one copy.
+pub fn run_cv_folds(
+    xs: Arc<FeatureMatrix>,
+    y: &[f32],
+    labels01: &[u8],
+    est_cfg: &EstimatorConfig,
+    n_workers: usize,
+    runtime: Option<Arc<Runtime>>,
+) -> Result<Vec<f64>> {
+    let folds = stratified_kfold(labels01, est_cfg.cv_folds, 0xF01D);
+    let run_fold = |fold: &crate::estimators::cv::Fold,
+                    backend: LogregBackend|
+     -> Result<f64> {
+        let xtr = xs.select_rows(&fold.train);
+        let ytr: Vec<f32> = fold.train.iter().map(|&i| y[i]).collect();
+        let xte = xs.select_rows(&fold.test);
+        let yte: Vec<f32> = fold.test.iter().map(|&i| y[i]).collect();
+        let lr = LogisticRegression {
+            lambda: est_cfg.lambda,
+            tol: est_cfg.tol,
+            max_iter: est_cfg.max_iter,
+            backend,
+        };
+        let fit = lr.fit(&xtr, &ytr)?;
+        Ok(LogisticRegression::accuracy(&fit, &xte, &yte))
+    };
+    let mut fold_accuracies = Vec::with_capacity(folds.len());
+    match (&runtime, est_cfg.use_runtime) {
+        (Some(rt), true) => {
+            for fold in &folds {
+                fold_accuracies
+                    .push(run_fold(fold, LogregBackend::Runtime(rt.clone()))?);
+            }
+        }
+        _ => {
+            let workers = n_workers.max(1);
+            let mut pool = WorkerPool::new(workers, workers * 2);
+            // the fold jobs only read the features/labels: share one
+            // copy behind Arcs instead of cloning per fold
+            let y_shared: Arc<Vec<f32>> = Arc::new(y.to_vec());
+            for fold in folds {
+                let xs = xs.clone();
+                let y = y_shared.clone();
+                let lambda = est_cfg.lambda;
+                let tol = est_cfg.tol;
+                let max_iter = est_cfg.max_iter;
+                pool.submit(move || -> Result<f64> {
+                    let xtr = xs.select_rows(&fold.train);
+                    let ytr: Vec<f32> =
+                        fold.train.iter().map(|&i| y[i]).collect();
+                    let xte = xs.select_rows(&fold.test);
+                    let yte: Vec<f32> =
+                        fold.test.iter().map(|&i| y[i]).collect();
+                    let lr = LogisticRegression {
+                        lambda,
+                        tol,
+                        max_iter,
+                        backend: LogregBackend::Native,
+                    };
+                    let fit = lr.fit(&xtr, &ytr)?;
+                    Ok(LogisticRegression::accuracy(&fit, &xte, &yte))
+                });
+            }
+            let results: Vec<Result<f64>> = pool.finish();
+            for r in results {
+                fold_accuracies.push(r?);
+            }
+        }
+    }
+    Ok(fold_accuracies)
+}
+
 fn run_decoding_inner(
     ds: &MaskedDataset,
     labels01: &[u8],
@@ -234,69 +317,13 @@ fn run_decoding_inner(
     metrics.observe("reduce", reduce_secs);
     stages.push(StageReport { stage: "reduce".into(), secs: reduce_secs });
     // sample-major views for the estimator
-    let xs = xk.transpose(); // (n, k)
+    let xs = Arc::new(xk.transpose()); // (n, k)
     let y: Vec<f32> = labels01.iter().map(|&l| l as f32).collect();
 
-    // ---- stage 3: CV folds. The PJRT client is not Send (the xla
-    // crate wraps an Rc), so runtime-backed folds run sequentially on
-    // this thread; the native backend shards folds across the pool.
+    // ---- stage 3: CV folds (shared with the streaming pipeline).
     let sw = Stopwatch::start();
-    let folds = stratified_kfold(labels01, est_cfg.cv_folds, 0xF01D);
-    let run_fold = |fold: &crate::estimators::cv::Fold,
-                    backend: LogregBackend|
-     -> Result<f64> {
-        let xtr = xs.select_rows(&fold.train);
-        let ytr: Vec<f32> = fold.train.iter().map(|&i| y[i]).collect();
-        let xte = xs.select_rows(&fold.test);
-        let yte: Vec<f32> = fold.test.iter().map(|&i| y[i]).collect();
-        let lr = LogisticRegression {
-            lambda: est_cfg.lambda,
-            tol: est_cfg.tol,
-            max_iter: est_cfg.max_iter,
-            backend,
-        };
-        let fit = lr.fit(&xtr, &ytr)?;
-        Ok(LogisticRegression::accuracy(&fit, &xte, &yte))
-    };
-    let mut fold_accuracies = Vec::with_capacity(folds.len());
-    match (&runtime, est_cfg.use_runtime) {
-        (Some(rt), true) => {
-            for fold in &folds {
-                fold_accuracies
-                    .push(run_fold(fold, LogregBackend::Runtime(rt.clone()))?);
-            }
-        }
-        _ => {
-            let mut pool = WorkerPool::new(n_workers, n_workers * 2);
-            for fold in folds {
-                let xs = xs.clone();
-                let y = y.clone();
-                let lambda = est_cfg.lambda;
-                let tol = est_cfg.tol;
-                let max_iter = est_cfg.max_iter;
-                pool.submit(move || -> Result<f64> {
-                    let xtr = xs.select_rows(&fold.train);
-                    let ytr: Vec<f32> =
-                        fold.train.iter().map(|&i| y[i]).collect();
-                    let xte = xs.select_rows(&fold.test);
-                    let yte: Vec<f32> =
-                        fold.test.iter().map(|&i| y[i]).collect();
-                    let lr = LogisticRegression {
-                        lambda,
-                        tol,
-                        max_iter,
-                        backend: LogregBackend::Native,
-                    };
-                    let fit = lr.fit(&xtr, &ytr)?;
-                    Ok(LogisticRegression::accuracy(&fit, &xte, &yte))
-                });
-            }
-            let results: Vec<Result<f64>> = pool.finish();
-            for r in results {
-                fold_accuracies.push(r?);
-            }
-        }
-    }
+    let fold_accuracies =
+        run_cv_folds(xs, &y, labels01, est_cfg, n_workers, runtime)?;
     let estimator_secs = sw.secs();
     metrics.observe("estimate", estimator_secs);
     stages
@@ -354,8 +381,11 @@ mod tests {
     fn raw_pipeline_runs_and_is_slower_per_sample() {
         let (ds, y) = small_cohort();
         let raw = ReduceConfig { method: Method::None, ..Default::default() };
-        let fast =
-            ReduceConfig { method: Method::Fast, ratio: 10, ..Default::default() };
+        let fast = ReduceConfig {
+            method: Method::Fast,
+            ratio: 10,
+            ..Default::default()
+        };
         let est = EstimatorConfig {
             cv_folds: 3,
             max_iter: 50,
@@ -427,8 +457,11 @@ mod tests {
     #[test]
     fn builder_with_workers_matches_sequential() {
         let (ds, y) = small_cohort();
-        let reduce =
-            ReduceConfig { method: Method::Fast, ratio: 12, ..Default::default() };
+        let reduce = ReduceConfig {
+            method: Method::Fast,
+            ratio: 12,
+            ..Default::default()
+        };
         let est = EstimatorConfig {
             cv_folds: 4,
             max_iter: 100,

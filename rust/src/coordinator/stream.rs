@@ -1,0 +1,380 @@
+//! Out-of-core streaming execution of the decoding pipeline (ADR-003).
+//!
+//! The in-memory pipeline ([`super::pipeline`]) holds the full `(p, n)`
+//! matrix through every stage — exactly the memory wall the paper's
+//! "data deluge" motivation is about. This stage bounds it:
+//!
+//! 1. **cluster** — the parcellation is learned on a bounded reservoir
+//!    of training samples gathered in one sequential pass
+//!    ([`crate::volume::FcdReader::sample_columns`]); with the
+//!    reservoir ≥ n this is bit-identical to the in-memory fit.
+//! 2. **reduce** — a producer pumps `(p, chunk)` column blocks into
+//!    the [`super::WorkerPool`]'s bounded queue (backpressure caps the
+//!    chunks in flight); workers run the per-chunk scatter
+//!    ([`crate::reduce::StreamingReducer`]) and the `(k, c)` blocks
+//!    land in a [`crate::reduce::ReduceAccumulator`]. Peak resident
+//!    matrix memory is `O(chunk · workers + k·n)` instead of `O(p·n)`.
+//! 3. **estimate** — the reduced `(k, n)` features (small by
+//!    construction) go through the *same* CV stage as the in-memory
+//!    path ([`super::pipeline::run_cv_folds`]), or through the
+//!    out-of-core [`crate::estimators::SgdLogisticRegression`]
+//!    partial-fit solver when `sgd_epochs > 0`.
+//!
+//! Fold splits, clustering seeds and reduction arithmetic are shared
+//! with the in-memory path, so with `reservoir = 0` and
+//! `sgd_epochs = 0` the streaming pipeline reproduces the in-memory
+//! fold accuracies exactly — the equivalence the integration tests and
+//! the `streaming` bench assert.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use super::pipeline::{make_clusterer, make_reducer, run_cv_folds};
+use super::worker::WorkerPool;
+use crate::config::{
+    EstimatorConfig, Method, ReduceConfig, StreamConfig,
+};
+use crate::error::{invalid, Result};
+use crate::estimators::cv::stratified_kfold;
+use crate::estimators::{LogisticRegression, SgdLogisticRegression};
+use crate::graph::LatticeGraph;
+use crate::reduce::{ReduceAccumulator, Reducer, StreamingReducer};
+use crate::volume::{FcdReader, FeatureMatrix};
+
+/// Result of one streaming decoding run, with the memory/throughput
+/// accounting the `streaming` bench reports.
+#[derive(Clone, Debug)]
+pub struct StreamingReport {
+    /// Method used.
+    pub method: Method,
+    /// Components after reduction.
+    pub k: usize,
+    /// Mean CV accuracy.
+    pub accuracy: f64,
+    /// Std of per-fold accuracies.
+    pub accuracy_std: f64,
+    /// Per-fold accuracies (comparable 1:1 with the in-memory
+    /// pipeline's [`super::DecodingReport::fold_accuracies`]).
+    pub fold_accuracies: Vec<f64>,
+    /// Wall seconds learning the compression (reservoir + fit).
+    pub cluster_secs: f64,
+    /// Wall seconds streaming + reducing the payload.
+    pub reduce_secs: f64,
+    /// Wall seconds in the estimator stage.
+    pub estimator_secs: f64,
+    /// Column chunks pumped through the pool.
+    pub chunks: usize,
+    /// Samples per chunk actually used.
+    pub chunk_samples: usize,
+    /// Training samples in the clustering reservoir.
+    pub reservoir_samples: usize,
+    /// Payload bytes streamed through the reduce stage.
+    pub bytes_streamed: u64,
+    /// Analytic peak of resident matrix bytes across stages
+    /// (`O(chunk + k·n)`; see ADR-003 §Memory accounting).
+    pub peak_matrix_bytes: usize,
+    /// What the dense path would have held resident: `p · n · 4`.
+    pub inmem_matrix_bytes: usize,
+}
+
+/// Chunks needed to cover `n` samples at `chunk` samples each.
+/// (Manual ceil-div: the crate's MSRV predates `usize::div_ceil`.)
+fn chunk_count(n: usize, chunk: usize) -> usize {
+    (n + chunk - 1) / chunk
+}
+
+/// Sequentially stream-reduce an open dataset: the reference
+/// single-thread path (also the exact spec the pooled path must
+/// match — both are bit-identical to the in-memory reduction).
+pub fn stream_reduce(
+    reader: &mut FcdReader,
+    reducer: &dyn Reducer,
+    chunk_samples: usize,
+) -> Result<FeatureMatrix> {
+    let n = reader.n();
+    let mut acc = reducer.begin(n);
+    for item in reader.chunks(chunk_samples) {
+        let chunk = item?;
+        reducer.reduce_chunk(&mut acc, chunk.col0, &chunk.x)?;
+    }
+    acc.finish()
+}
+
+/// Stream-reduce through the worker pool: a producer (this thread)
+/// reads column chunks and submits them against the pool's bounded
+/// queue (blocking when full — backpressure), workers reduce, and the
+/// `(k, c)` blocks are reassembled by chunk id.
+fn stream_reduce_pooled(
+    reader: &mut FcdReader,
+    reducer: &Arc<Box<dyn Reducer + Send + Sync>>,
+    chunk_samples: usize,
+    n_workers: usize,
+) -> Result<(FeatureMatrix, usize)> {
+    let (k, n) = (reducer.k(), reader.n());
+    let mut pool = WorkerPool::new(n_workers, n_workers * 2);
+    let mut chunks = 0usize;
+    for item in reader.chunks(chunk_samples) {
+        let chunk = item?;
+        let r = reducer.clone();
+        chunks += 1;
+        pool.submit(move || (chunk.col0, r.reduce(&chunk.x)));
+    }
+    let mut acc = ReduceAccumulator::new(k, n);
+    for (col0, block) in pool.finish::<(usize, FeatureMatrix)>() {
+        acc.insert(col0, &block)?;
+    }
+    Ok((acc.finish()?, chunks))
+}
+
+/// CV estimation through the out-of-core SGD solver: same stratified
+/// splits as [`run_cv_folds`], but each fold's model is fitted by
+/// `partial_fit` over sample blocks, `sgd_epochs` passes.
+fn run_cv_folds_sgd(
+    xs: &FeatureMatrix,
+    y: &[f32],
+    labels01: &[u8],
+    est_cfg: &EstimatorConfig,
+    stream_cfg: &StreamConfig,
+) -> Result<Vec<f64>> {
+    let folds = stratified_kfold(labels01, est_cfg.cv_folds, 0xF01D);
+    let sgd = SgdLogisticRegression {
+        lambda: est_cfg.lambda,
+        ..Default::default()
+    };
+    let chunk = stream_cfg.chunk_samples.max(1);
+    let epochs = stream_cfg.sgd_epochs.max(1);
+    let mut fold_accuracies = Vec::with_capacity(folds.len());
+    for fold in &folds {
+        let xtr = xs.select_rows(&fold.train);
+        let ytr: Vec<f32> = fold.train.iter().map(|&i| y[i]).collect();
+        let xte = xs.select_rows(&fold.test);
+        let yte: Vec<f32> = fold.test.iter().map(|&i| y[i]).collect();
+        let mut st = sgd.init(xs.cols);
+        for _ in 0..epochs {
+            let mut r0 = 0usize;
+            while r0 < xtr.rows {
+                let r1 = (r0 + chunk).min(xtr.rows);
+                let xc = xtr.row_block(r0, r1);
+                sgd.partial_fit(&mut st, &xc, &ytr[r0..r1])?;
+                r0 = r1;
+            }
+        }
+        let fit = sgd.to_fit(&st);
+        fold_accuracies
+            .push(LogisticRegression::accuracy(&fit, &xte, &yte));
+    }
+    Ok(fold_accuracies)
+}
+
+/// Run the full decoding experiment out-of-core against a saved
+/// `.fcd` dataset. Peak resident matrix memory is `O(chunk + k·n)`;
+/// the `(p, n)` payload is only ever touched in bounded pieces.
+pub fn run_streaming_decoding(
+    stem: &Path,
+    labels01: &[u8],
+    reduce_cfg: &ReduceConfig,
+    est_cfg: &EstimatorConfig,
+    stream_cfg: &StreamConfig,
+    n_workers: usize,
+) -> Result<StreamingReport> {
+    let mut reader = FcdReader::open(stem)?;
+    let (p, n) = (reader.p(), reader.n());
+    if n == 0 {
+        return Err(invalid("dataset has no samples"));
+    }
+    if labels01.len() != n {
+        return Err(invalid("labels must match sample count"));
+    }
+    let method = reduce_cfg.method;
+    if matches!(method, Method::None) {
+        return Err(invalid(
+            "streaming mode needs a compression method (raw holds \
+             the full matrix in core)",
+        ));
+    }
+    let k = reduce_cfg.resolve_k(p);
+    let chunk_samples = stream_cfg.chunk_samples.clamp(1, n);
+    let n_workers = n_workers.max(1);
+
+    // ---- stage 1: learn the compression on a bounded reservoir
+    let sw = super::Stopwatch::start();
+    let reservoir = if stream_cfg.reservoir == 0 {
+        n
+    } else {
+        stream_cfg.reservoir.min(n)
+    };
+    let mask = reader.mask_arc();
+    let graph = LatticeGraph::from_mask(&mask);
+    let clusterer = make_clusterer(method, reduce_cfg.shards);
+    // reducer-only methods (random projection) never read a training
+    // reservoir — don't report or charge one
+    let reservoir_used = if clusterer.is_some() { reservoir } else { 0 };
+    let labels = match clusterer {
+        None => None,
+        Some(c) => {
+            let (_, xr) = reader.sample_columns(reservoir, reduce_cfg.seed)?;
+            Some(c.fit(&xr, &graph, k, reduce_cfg.seed)?)
+        }
+    };
+    let reducer: Arc<Box<dyn Reducer + Send + Sync>> = Arc::new(
+        make_reducer(method, labels.as_ref(), p, k, reduce_cfg.seed)?
+            .ok_or_else(|| invalid("streaming mode needs a reducer"))?,
+    );
+    drop(labels);
+    let cluster_secs = sw.secs();
+
+    // ---- stage 2: pump column chunks through the bounded queue
+    let sw = super::Stopwatch::start();
+    let (xk, chunks) = if n_workers == 1 {
+        let xk = stream_reduce(&mut reader, &**reducer, chunk_samples)?;
+        (xk, chunk_count(n, chunk_samples))
+    } else {
+        stream_reduce_pooled(
+            &mut reader,
+            &reducer,
+            chunk_samples,
+            n_workers,
+        )?
+    };
+    let reduce_secs = sw.secs();
+
+    // ---- stage 3: estimate on the (small) reduced features
+    let sw = super::Stopwatch::start();
+    let xs = Arc::new(xk.transpose()); // (n, k)
+    let y: Vec<f32> = labels01.iter().map(|&l| l as f32).collect();
+    let fold_accuracies = if stream_cfg.sgd_epochs > 0 {
+        run_cv_folds_sgd(&xs, &y, labels01, est_cfg, stream_cfg)?
+    } else {
+        run_cv_folds(xs, &y, labels01, est_cfg, n_workers, None)?
+    };
+    let estimator_secs = sw.secs();
+
+    // ---- memory accounting (ADR-003): the analytic peak of resident
+    // matrix bytes per stage, the bound the streaming bench gates on.
+    let f = std::mem::size_of::<f32>();
+    let chunk_bytes = p * chunk_samples * f;
+    let inflight = if n_workers == 1 { 1 } else { 3 * n_workers };
+    let cluster_peak = p * reservoir_used * f;
+    let reduce_peak = inflight * chunk_bytes + k * n * f;
+    // estimate: xk + its transpose stay resident; each in-flight fold
+    // additionally holds its own train+test copies (~k·n together)
+    let inflight_folds = (3 * n_workers).min(est_cfg.cv_folds.max(1));
+    let est_peak = (2 + inflight_folds) * k * n * f;
+    let peak_matrix_bytes = cluster_peak.max(reduce_peak).max(est_peak);
+
+    let accuracy = crate::stats::mean(&fold_accuracies);
+    let accuracy_std = crate::stats::variance(&fold_accuracies).sqrt();
+    Ok(StreamingReport {
+        method,
+        k,
+        accuracy,
+        accuracy_std,
+        fold_accuracies,
+        cluster_secs,
+        reduce_secs,
+        estimator_secs,
+        chunks,
+        chunk_samples,
+        reservoir_samples: reservoir_used,
+        bytes_streamed: reader.payload_bytes(),
+        peak_matrix_bytes,
+        inmem_matrix_bytes: p * n * f,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::volume::{save_dataset, MorphometryGenerator};
+
+    fn saved_cohort(
+        tag: &str,
+    ) -> (std::path::PathBuf, Vec<u8>, usize, usize) {
+        let (ds, y) = MorphometryGenerator::new([9, 10, 8]).generate(30, 11);
+        let dir = std::env::temp_dir().join("fastclust_stream_pipe");
+        std::fs::create_dir_all(&dir).unwrap();
+        let stem = dir.join(tag);
+        save_dataset(&stem, &ds).unwrap();
+        (stem, y, ds.p(), ds.n())
+    }
+
+    #[test]
+    fn pooled_reduce_matches_sequential() {
+        let (stem, _, p, n) = saved_cohort("pooled");
+        let mut r1 = FcdReader::open(&stem).unwrap();
+        let (_, xr) = r1.sample_columns(n, 1).unwrap();
+        let graph = LatticeGraph::from_mask(&r1.mask_arc());
+        let c = make_clusterer(Method::Fast, 0).unwrap();
+        let labels = c.fit(&xr, &graph, (p / 10).max(2), 1).unwrap();
+        let red = make_reducer(Method::Fast, Some(&labels), p, labels.k, 1)
+            .unwrap()
+            .unwrap();
+        let seq = stream_reduce(&mut r1, &*red, 7).unwrap();
+        let shared: Arc<Box<dyn Reducer + Send + Sync>> = Arc::new(red);
+        let mut r2 = FcdReader::open(&stem).unwrap();
+        let (par, chunks) =
+            stream_reduce_pooled(&mut r2, &shared, 7, 3).unwrap();
+        assert_eq!(par.data, seq.data);
+        assert_eq!(chunks, chunk_count(n, 7));
+    }
+
+    #[test]
+    fn streaming_report_shapes_and_bounds() {
+        let (stem, y, p, n) = saved_cohort("report");
+        let reduce = ReduceConfig {
+            method: Method::Fast,
+            ratio: 10,
+            ..Default::default()
+        };
+        let est = EstimatorConfig {
+            cv_folds: 3,
+            max_iter: 100,
+            ..Default::default()
+        };
+        let stream = StreamConfig {
+            enabled: true,
+            chunk_samples: 8,
+            ..Default::default()
+        };
+        let rep = run_streaming_decoding(
+            &stem, &y, &reduce, &est, &stream, 2,
+        )
+        .unwrap();
+        assert_eq!(rep.fold_accuracies.len(), 3);
+        assert_eq!(rep.chunk_samples, 8);
+        assert_eq!(rep.chunks, chunk_count(n, 8));
+        assert_eq!(rep.inmem_matrix_bytes, p * n * 4);
+        assert!(rep.accuracy > 0.5, "accuracy {}", rep.accuracy);
+        assert_eq!(rep.bytes_streamed, (p * n * 4) as u64);
+    }
+
+    #[test]
+    fn raw_method_rejected_in_streaming_mode() {
+        let (stem, y, _, _) = saved_cohort("raw");
+        let reduce =
+            ReduceConfig { method: Method::None, ..Default::default() };
+        let est = EstimatorConfig { cv_folds: 3, ..Default::default() };
+        let stream = StreamConfig::default();
+        assert!(run_streaming_decoding(
+            &stem, &y, &reduce, &est, &stream, 1
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn label_mismatch_rejected() {
+        let (stem, _, _, _) = saved_cohort("labels");
+        let reduce = ReduceConfig::default();
+        let est = EstimatorConfig { cv_folds: 3, ..Default::default() };
+        let stream = StreamConfig::default();
+        assert!(run_streaming_decoding(
+            &stem,
+            &[0u8; 2],
+            &reduce,
+            &est,
+            &stream,
+            1
+        )
+        .is_err());
+    }
+}

@@ -52,9 +52,9 @@ impl WorkerPool {
 
     /// Drain all results, returning them ordered by job id. Consumes
     /// the pool (joins the workers).
-    pub fn finish<R: 'static>(self) -> Vec<R> {
+    pub fn finish<R: 'static>(mut self) -> Vec<R> {
         self.jobs.close();
-        for h in self.handles {
+        for h in std::mem::take(&mut self.handles) {
             h.join().expect("worker panicked");
         }
         self.results.close();
@@ -74,6 +74,20 @@ impl WorkerPool {
             self.submitted
         );
         tagged.into_iter().map(|(_, r)| r).collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    /// Dropping a pool without [`WorkerPool::finish`] (e.g. an error
+    /// return mid-submission) must not strand workers blocked on the
+    /// job queue forever: close the queue so they drain and exit,
+    /// then join them (results are discarded). After `finish()` the
+    /// handles are already taken and this is a no-op.
+    fn drop(&mut self) {
+        self.jobs.close();
+        for h in std::mem::take(&mut self.handles) {
+            let _ = h.join();
+        }
     }
 }
 
@@ -102,6 +116,17 @@ mod tests {
         }
         let results: Vec<usize> = pool.finish();
         assert_eq!(results, (100..110).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn dropping_pool_without_finish_releases_workers() {
+        let mut pool = WorkerPool::new(2, 4);
+        for i in 0..6usize {
+            pool.submit(move || i * 2);
+        }
+        // must close the queue, join the workers and return — a hang
+        // here is the thread-leak regression this guards against
+        drop(pool);
     }
 
     #[test]

@@ -50,7 +50,7 @@ impl From<std::io::Error> for Error {
     }
 }
 
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", fastclust_has_xla))]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

@@ -88,7 +88,10 @@ mod tests {
             all.sort_unstable();
             assert_eq!(all, (0..53).collect::<Vec<_>>());
         }
-        assert!(seen.iter().all(|&c| c == 1), "each sample in exactly one test fold");
+        assert!(
+            seen.iter().all(|&c| c == 1),
+            "each sample in exactly one test fold"
+        );
     }
 
     #[test]

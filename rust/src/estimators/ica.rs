@@ -166,7 +166,8 @@ mod tests {
         for a in 0..q {
             for c in 0..m {
                 let g = rng.normal32();
-                sources.set(a, c, if g.abs() > 1.5 { g * 3.0 } else { 0.1 * g });
+                let v = if g.abs() > 1.5 { g * 3.0 } else { 0.1 * g };
+                sources.set(a, c, v);
             }
         }
         // random mixing (t x q)

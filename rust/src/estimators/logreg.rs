@@ -364,6 +364,106 @@ fn grad_inf_norm(gw: &[f32], gb: f32) -> f64 {
         .fold(gb.abs() as f64, f64::max)
 }
 
+/// Out-of-core mini-batch SGD for the same ℓ2-logistic objective as
+/// [`LogisticRegression`] (ADR-003): the model is updated one sample
+/// block at a time via [`SgdLogisticRegression::partial_fit`], so the
+/// estimator never needs the full training matrix in core. Step sizes
+/// follow the classic inverse-scaling schedule
+/// `lr_t = lr0 / (1 + decay · t)`; with enough passes the iterates
+/// approach the batch optimum (tolerance-equal, not bit-equal — the
+/// equivalence tests assert accuracy agreement, not weight equality).
+#[derive(Clone, Debug)]
+pub struct SgdLogisticRegression {
+    /// L2 penalty on the weights (not the intercept).
+    pub lambda: f64,
+    /// Initial step size.
+    pub lr0: f64,
+    /// Inverse-scaling decay rate.
+    pub decay: f64,
+}
+
+impl Default for SgdLogisticRegression {
+    fn default() -> Self {
+        SgdLogisticRegression { lambda: 1e-3, lr0: 0.5, decay: 0.01 }
+    }
+}
+
+/// Mutable SGD state carried across [`SgdLogisticRegression`] chunks.
+#[derive(Clone, Debug)]
+pub struct SgdState {
+    /// Current feature weights (length k).
+    pub w: Vec<f32>,
+    /// Current intercept.
+    pub b: f32,
+    /// Mini-batch steps taken so far.
+    pub steps: u64,
+    /// Objective value on the most recent chunk.
+    pub last_loss: f64,
+    /// Gradient infinity norm on the most recent chunk.
+    pub last_grad_norm: f64,
+}
+
+impl SgdLogisticRegression {
+    /// Fresh state for `k` features.
+    pub fn init(&self, k: usize) -> SgdState {
+        SgdState {
+            w: vec![0.0; k],
+            b: 0.0,
+            steps: 0,
+            last_loss: f64::INFINITY,
+            last_grad_norm: f64::INFINITY,
+        }
+    }
+
+    /// One mini-batch gradient step on a `(c, k)` sample-major chunk
+    /// with labels in {0,1}. Chunks may arrive in any order; repeated
+    /// passes over the data refine the fit.
+    pub fn partial_fit(
+        &self,
+        st: &mut SgdState,
+        x: &FeatureMatrix,
+        y: &[f32],
+    ) -> Result<()> {
+        if x.rows != y.len() || x.rows == 0 {
+            return Err(invalid(format!(
+                "sgd partial_fit: {} samples but {} labels",
+                x.rows,
+                y.len()
+            )));
+        }
+        if x.cols != st.w.len() {
+            return Err(invalid(format!(
+                "sgd partial_fit: chunk has {} features, state has {}",
+                x.cols,
+                st.w.len()
+            )));
+        }
+        let (loss, gw, gb) = native_step(x, y, &st.w, st.b, self.lambda);
+        let lr = (self.lr0 / (1.0 + self.decay * st.steps as f64)) as f32;
+        for (wj, &gj) in st.w.iter_mut().zip(&gw) {
+            *wj -= lr * gj;
+        }
+        st.b -= lr * gb;
+        st.steps += 1;
+        st.last_loss = loss;
+        st.last_grad_norm = grad_inf_norm(&gw, gb);
+        Ok(())
+    }
+
+    /// Snapshot the state as a [`LogregFit`] so the shared
+    /// prediction/accuracy helpers apply.
+    pub fn to_fit(&self, st: &SgdState) -> LogregFit {
+        LogregFit {
+            w: st.w.clone(),
+            b: st.b,
+            loss: st.last_loss,
+            iters: st.steps as usize,
+            evals: st.steps as usize,
+            grad_norm: st.last_grad_norm,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -466,6 +566,46 @@ mod tests {
         let (x, _) = toy(10, 5);
         let lr = LogisticRegression::default();
         assert!(lr.fit(&x, &[0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn sgd_partial_fit_matches_batch_to_tolerance() {
+        let (x, y) = toy(80, 7);
+        let batch = LogisticRegression::default().fit(&x, &y).unwrap();
+        let batch_acc = LogisticRegression::accuracy(&batch, &x, &y);
+
+        let sgd = SgdLogisticRegression::default();
+        let mut st = sgd.init(2);
+        let chunk = 16usize;
+        for _epoch in 0..120 {
+            let mut r0 = 0;
+            while r0 < x.rows {
+                let r1 = (r0 + chunk).min(x.rows);
+                let xc = x.row_block(r0, r1);
+                sgd.partial_fit(&mut st, &xc, &y[r0..r1]).unwrap();
+                r0 = r1;
+            }
+        }
+        let fit = sgd.to_fit(&st);
+        let acc = LogisticRegression::accuracy(&fit, &x, &y);
+        assert!(
+            (acc - batch_acc).abs() <= 0.05,
+            "sgd acc {acc} vs batch {batch_acc}"
+        );
+        // the decision direction must agree with the batch solution
+        assert!(fit.w[0] > 0.0, "w0 sign flipped: {:?}", fit.w);
+        assert!(st.last_grad_norm.is_finite());
+    }
+
+    #[test]
+    fn sgd_rejects_mismatched_chunks() {
+        let sgd = SgdLogisticRegression::default();
+        let mut st = sgd.init(3);
+        let (x, y) = toy(10, 9);
+        // x has 2 features, state expects 3
+        assert!(sgd.partial_fit(&mut st, &x, &y).is_err());
+        let mut st2 = sgd.init(2);
+        assert!(sgd.partial_fit(&mut st2, &x, &y[..5]).is_err());
     }
 
     #[test]

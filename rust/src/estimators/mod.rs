@@ -4,6 +4,9 @@
 //! * [`LogisticRegression`] — ℓ2-logistic classifier (Fig 6's decoding
 //!   task), gradient steps evaluated either natively or through the
 //!   PJRT runtime artifacts;
+//! * [`SgdLogisticRegression`] — the same objective fitted one sample
+//!   block at a time (`partial_fit`), the out-of-core estimator of the
+//!   streaming pipeline (ADR-003);
 //! * [`FastIca`] — logcosh FastICA with symmetric decorrelation
 //!   (Fig 7), on top of [`whiten_samples`] PCA whitening;
 //! * [`RidgeRegression`] / [`LinearSvm`] — the "other rotationally
@@ -18,7 +21,10 @@ mod svm;
 mod whiten;
 
 pub use ica::{FastIca, IcaResult};
-pub use logreg::{LogisticRegression, LogregBackend, LogregFit};
+pub use logreg::{
+    LogisticRegression, LogregBackend, LogregFit, SgdLogisticRegression,
+    SgdState,
+};
 pub use ridge::RidgeRegression;
 pub use svm::LinearSvm;
 pub use whiten::{whiten_samples, Whitening};

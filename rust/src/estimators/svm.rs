@@ -152,7 +152,8 @@ mod tests {
         let mut y = vec![0.0f32; n];
         for i in 0..n {
             let cls = i % 2;
-            x.set(i, 0, if cls == 1 { 2.0 } else { -2.0 } + rng.normal32() * 0.4);
+            let cx = if cls == 1 { 2.0 } else { -2.0 };
+            x.set(i, 0, cx + rng.normal32() * 0.4);
             x.set(i, 1, rng.normal32());
             y[i] = cls as f32;
         }

@@ -300,7 +300,9 @@ impl<'a> Parser<'a> {
         self.eat(b'"')?;
         let mut s = String::new();
         loop {
-            let c = self.peek().ok_or_else(|| self.err("unterminated string"))?;
+            let c = self
+                .peek()
+                .ok_or_else(|| self.err("unterminated string"))?;
             self.i += 1;
             match c {
                 b'"' => return Ok(s),
@@ -337,8 +339,11 @@ impl<'a> Parser<'a> {
                                         &self.b[self.i..self.i + 4],
                                     )
                                     .map_err(|_| self.err("bad surrogate"))?;
-                                    let lo = u32::from_str_radix(hex2, 16)
-                                        .map_err(|_| self.err("bad surrogate"))?;
+                                    let lo =
+                                        u32::from_str_radix(hex2, 16)
+                                            .map_err(|_| {
+                                                self.err("bad surrogate")
+                                            })?;
                                     self.i += 4;
                                     let c = 0x10000
                                         + ((cp - 0xD800) << 10)
@@ -350,9 +355,9 @@ impl<'a> Parser<'a> {
                             } else {
                                 char::from_u32(cp)
                             };
-                            s.push(
-                                ch.ok_or_else(|| self.err("invalid codepoint"))?,
-                            );
+                            s.push(ch.ok_or_else(|| {
+                                self.err("invalid codepoint")
+                            })?);
                         }
                         _ => return Err(self.err("unknown escape")),
                     }
@@ -394,7 +399,10 @@ impl<'a> Parser<'a> {
         }
         while self
             .peek()
-            .map(|c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+            .map(|c| {
+                c.is_ascii_digit()
+                    || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-')
+            })
             .unwrap_or(false)
         {
             self.i += 1;

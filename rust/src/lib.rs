@@ -50,9 +50,27 @@
 //! assert_eq!(xk.cols, vol.n());
 //! ```
 //!
+//! ## Out-of-core streaming (ADR-003)
+//!
+//! The paper's motivating regime is cohorts that do not fit in memory
+//! (HCP: "20 Terabytes and growing"). The streaming mode bounds the
+//! working set to `O(chunk + k·n)`: [`volume::FcdReader`] serves
+//! column blocks of a saved `.fcd` dataset, [`reduce::StreamingReducer`]
+//! reduces them bit-identically to the in-memory path, and
+//! [`coordinator::run_streaming_decoding`] pumps the chunks through
+//! the worker pool (CLI: `repro decode --stream --chunk-samples N`).
+//!
 //! See `examples/` for full pipelines (decoding, ICA, percolation) and
 //! `rust/src/bench_harness/` for the figure-by-figure reproduction of
-//! the paper's evaluation (plus the sharded-engine scaling sweep).
+//! the paper's evaluation (plus the sharded-engine scaling sweep and
+//! the streaming/in-memory comparison).
+
+// Indexed `for i in 0..n` loops are kept throughout the numeric
+// kernels because they mirror the paper's summation notation and keep
+// the row/column scatter order — the thing several bit-exactness
+// contracts are stated in terms of — explicit. Silencing the style
+// lint beats rewriting the math as iterator chains.
+#![allow(clippy::needless_range_loop)]
 
 pub mod bench_harness;
 pub mod cluster;
@@ -78,8 +96,10 @@ pub mod prelude {
     pub use crate::error::{Error, Result};
     pub use crate::graph::LatticeGraph;
     pub use crate::linalg::Mat;
-    pub use crate::reduce::{ClusterReduce, Reducer, SparseRandomProjection};
+    pub use crate::reduce::{
+        ClusterReduce, Reducer, SparseRandomProjection, StreamingReducer,
+    };
     pub use crate::volume::{
-        FeatureMatrix, Mask, MaskedDataset, SyntheticCube,
+        FcdReader, FeatureMatrix, Mask, MaskedDataset, SyntheticCube,
     };
 }

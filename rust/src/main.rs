@@ -13,6 +13,16 @@
 //! repro all  [--scale S]            # every figure in sequence
 //! repro sharded [--scale S]         # sharded engine scaling + quality
 //! repro decode --config cfg.json    # run the decoding pipeline
+//!   [--stream] [--chunk-samples N]  #   ... out-of-core (ADR-003)
+//!   [--reservoir R] [--sgd-epochs E]
+//!   [--data STEM]                   #   ... stream an existing .fcd
+//!                                   #   (with <STEM>.labels.json)
+//! repro bench-streaming [--quick]   # streaming vs in-memory bench
+//!   [--json PATH]                   #   ... write BENCH_*.json report
+//! repro bench-sharded [--quick]     # sharded bench + JSON report
+//!   [--json PATH]
+//! repro bench-check --current A     # gate a bench report against a
+//!   --baseline B [--factor F]       #   committed baseline (CI)
 //! repro runtime-check               # PJRT artifact smoke test (pjrt)
 //! ```
 //!
@@ -25,15 +35,21 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 
 use fastclust::bench_harness::{
-    fig2, fig3, fig4, fig5, fig6, fig7, sharded, write_csv, Table,
+    fig2, fig3, fig4, fig5, fig6, fig7, load_bench_report,
+    regression_failures, sharded, streaming, write_bench_report,
+    write_csv, Table,
 };
 use fastclust::cluster::FastCluster;
 use fastclust::config::ExperimentConfig;
-use fastclust::coordinator::run_decoding_pipeline;
-use fastclust::error::Result;
+use fastclust::coordinator::{
+    run_decoding_pipeline, run_streaming_decoding,
+};
+use fastclust::error::{invalid, Result};
 use fastclust::graph::LatticeGraph;
 use fastclust::runtime::Runtime;
-use fastclust::volume::{MorphometryGenerator, SyntheticCube};
+use fastclust::volume::{
+    save_dataset, MorphometryGenerator, SyntheticCube,
+};
 
 /// Parsed command line: subcommand + flag map.
 struct Cli {
@@ -82,6 +98,10 @@ impl Cli {
         PathBuf::from(
             self.flags.get("out").cloned().unwrap_or_else(|| "results".into()),
         )
+    }
+
+    fn usize_flag(&self, name: &str) -> Option<usize> {
+        self.flags.get(name).and_then(|s| s.parse().ok())
     }
 }
 
@@ -187,19 +207,45 @@ fn run_sharded(cli: &Cli) -> Result<()> {
 }
 
 fn decode(cli: &Cli) -> Result<()> {
-    let cfg = match cli.flags.get("config") {
+    let mut cfg = match cli.flags.get("config") {
         Some(path) => ExperimentConfig::from_file(&PathBuf::from(path))?,
         None => ExperimentConfig::default(),
     };
+    // CLI overrides for the streaming mode (ADR-003)
+    if cli.flags.contains_key("stream") {
+        cfg.stream.enabled = true;
+    }
+    if let Some(c) = cli.usize_flag("chunk-samples") {
+        cfg.stream.chunk_samples = c.max(1);
+    }
+    if let Some(r) = cli.usize_flag("reservoir") {
+        cfg.stream.reservoir = r;
+    }
+    if let Some(e) = cli.usize_flag("sgd-epochs") {
+        cfg.stream.sgd_epochs = e;
+    }
+    cfg.validate()?;
+    // `--data STEM`: stream an existing `.fcd` cohort directly — no
+    // in-core generation, so datasets larger than RAM stay streamable
+    if let Some(stem) = cli.flags.get("data") {
+        if !cfg.stream.enabled {
+            return Err(invalid("--data requires --stream"));
+        }
+        return decode_data(&cfg, &PathBuf::from(stem));
+    }
     let (ds, labels) = MorphometryGenerator::new(cfg.data.dims)
         .generate(cfg.data.n_samples, cfg.data.seed);
     println!(
-        "cohort: p={} n={} method={} k={}",
+        "cohort: p={} n={} method={} k={}{}",
         ds.p(),
         ds.n(),
         cfg.reduce.method.name(),
-        cfg.reduce.resolve_k(ds.p())
+        cfg.reduce.resolve_k(ds.p()),
+        if cfg.stream.enabled { " [streaming]" } else { "" }
     );
+    if cfg.stream.enabled {
+        return decode_streaming(cli, &cfg, ds, &labels);
+    }
     let rep =
         run_decoding_pipeline(&ds, &labels, &cfg.reduce, &cfg.estimator)?;
     println!(
@@ -207,6 +253,185 @@ fn decode(cli: &Cli) -> Result<()> {
         rep.accuracy, rep.accuracy_std, rep.cluster_secs, rep.estimator_secs
     );
     Ok(())
+}
+
+/// Labels sidecar for `.fcd` cohorts (`<stem>.labels.json`): the
+/// payload format itself is label-free, so streamed decoding of an
+/// existing dataset reads its binary labels from here.
+fn save_labels(stem: &std::path::Path, labels: &[u8]) -> Result<()> {
+    let v = fastclust::json::Value::obj(vec![(
+        "labels",
+        fastclust::json::Value::nums(
+            labels.iter().map(|&l| l as f64),
+        ),
+    )]);
+    std::fs::write(stem.with_extension("labels.json"), v.to_string())?;
+    Ok(())
+}
+
+fn load_labels(stem: &std::path::Path) -> Result<Vec<u8>> {
+    let path = stem.with_extension("labels.json");
+    let text = std::fs::read_to_string(&path).map_err(|e| {
+        invalid(format!(
+            "cannot read labels sidecar {}: {e}",
+            path.display()
+        ))
+    })?;
+    let v = fastclust::json::parse(&text)?;
+    v.expect("labels")?
+        .as_arr()
+        .ok_or_else(|| invalid("'labels' must be an array"))?
+        .iter()
+        .map(|x| {
+            x.as_u64()
+                .filter(|&l| l <= 1)
+                .map(|l| l as u8)
+                .ok_or_else(|| invalid("labels must be 0/1"))
+        })
+        .collect()
+}
+
+/// Out-of-core decode: cache the cohort as `.fcd` (+ labels sidecar),
+/// then stream it. Takes the cohort by value and drops it before
+/// streaming, so the printed memory numbers describe what the process
+/// actually held.
+fn decode_streaming(
+    cli: &Cli,
+    cfg: &ExperimentConfig,
+    ds: fastclust::volume::MaskedDataset,
+    labels: &[u8],
+) -> Result<()> {
+    let out = cli.out_dir();
+    std::fs::create_dir_all(&out)?;
+    let stem = out.join("cohort_cache");
+    save_dataset(&stem, &ds)?;
+    save_labels(&stem, labels)?;
+    drop(ds);
+    run_stream_and_print(cfg, &stem, labels)
+}
+
+/// Out-of-core decode of a pre-existing `.fcd` cohort (`--data`):
+/// nothing dense is ever materialized in this process.
+fn decode_data(cfg: &ExperimentConfig, stem: &std::path::Path) -> Result<()> {
+    let labels = load_labels(stem)?;
+    let header = fastclust::volume::read_fcd_header(stem)?;
+    println!(
+        "cohort: p={} n={} method={} k={} [streaming, from {}]",
+        header.p,
+        header.n,
+        cfg.reduce.method.name(),
+        cfg.reduce.resolve_k(header.p),
+        stem.display()
+    );
+    run_stream_and_print(cfg, stem, &labels)
+}
+
+fn run_stream_and_print(
+    cfg: &ExperimentConfig,
+    stem: &std::path::Path,
+    labels: &[u8],
+) -> Result<()> {
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let rep = run_streaming_decoding(
+        stem,
+        labels,
+        &cfg.reduce,
+        &cfg.estimator,
+        &cfg.stream,
+        workers,
+    )?;
+    let mb = 1.0 / (1024.0 * 1024.0);
+    println!(
+        "accuracy = {:.3} ± {:.3}  (cluster {:.2}s, reduce {:.2}s, \
+         fit {:.2}s)",
+        rep.accuracy,
+        rep.accuracy_std,
+        rep.cluster_secs,
+        rep.reduce_secs,
+        rep.estimator_secs
+    );
+    println!(
+        "streamed {} chunks x {} samples ({:.1} MB); peak matrix \
+         memory {:.1} MB vs {:.1} MB dense",
+        rep.chunks,
+        rep.chunk_samples,
+        rep.bytes_streamed as f64 * mb,
+        rep.peak_matrix_bytes as f64 * mb,
+        rep.inmem_matrix_bytes as f64 * mb
+    );
+    Ok(())
+}
+
+fn bench_streaming_cmd(cli: &Cli) -> Result<()> {
+    let cfg = if cli.flags.contains_key("quick") {
+        streaming::StreamingBenchConfig::quick()
+    } else {
+        streaming::StreamingBenchConfig::default()
+    };
+    let r = streaming::run(&cfg)?;
+    streaming::table(&r).print();
+    streaming::check_gates(&r)?;
+    if let Some(path) = cli.flags.get("json") {
+        let rep = streaming::report_json(&r);
+        write_bench_report(&PathBuf::from(path), &rep)?;
+        println!("[json] {path}");
+    }
+    Ok(())
+}
+
+fn bench_sharded_cmd(cli: &Cli) -> Result<()> {
+    let mut cfg = sharded::ShardedConfig::default();
+    if cli.flags.contains_key("quick") {
+        cfg.dims = [12, 12, 10];
+        cfg.n_subjects = 8;
+        cfg.n_contrasts = 4;
+        cfg.reps = 1;
+    }
+    cfg.seed = cli.seed();
+    let rows = sharded::run(&cfg);
+    sharded::table(&rows).print();
+    sharded::check_gates(&rows)?;
+    if let Some(path) = cli.flags.get("json") {
+        let rep = sharded::report_json(&rows);
+        write_bench_report(&PathBuf::from(path), &rep)?;
+        println!("[json] {path}");
+    }
+    Ok(())
+}
+
+fn bench_check(cli: &Cli) -> Result<()> {
+    let current = cli
+        .flags
+        .get("current")
+        .ok_or_else(|| invalid("bench-check needs --current PATH"))?;
+    let baseline = cli
+        .flags
+        .get("baseline")
+        .ok_or_else(|| invalid("bench-check needs --baseline PATH"))?;
+    let factor = cli
+        .flags
+        .get("factor")
+        .and_then(|f| f.parse::<f64>().ok())
+        .unwrap_or(2.0);
+    let cur = load_bench_report(&PathBuf::from(current))?;
+    let base = load_bench_report(&PathBuf::from(baseline))?;
+    let fails = regression_failures(&cur, &base, factor);
+    if fails.is_empty() {
+        println!(
+            "bench-check OK: {current} within {factor}x of {baseline}"
+        );
+        Ok(())
+    } else {
+        for f in &fails {
+            eprintln!("REGRESSION: {f}");
+        }
+        Err(invalid(format!(
+            "{} bench regression(s) vs {baseline}",
+            fails.len()
+        )))
+    }
 }
 
 fn runtime_check() -> Result<()> {
@@ -244,24 +469,27 @@ fn dispatch(cli: &Cli) -> Result<()> {
         }
         "sharded" => run_sharded(cli),
         "decode" => decode(cli),
+        "bench-streaming" => bench_streaming_cmd(cli),
+        "bench-sharded" => bench_sharded_cmd(cli),
+        "bench-check" => bench_check(cli),
         "runtime-check" => runtime_check(),
         other => {
             eprintln!("unknown subcommand '{other}'");
-            eprintln!(
-                "usage: repro <fig1..fig7|all|sharded|decode|runtime-check> \
-                 [--scale S] [--seed N] [--out DIR] [--config FILE]"
-            );
+            eprintln!("{USAGE}");
             std::process::exit(2);
         }
     }
 }
 
+const USAGE: &str = "usage: repro <fig1..fig7|all|sharded|decode|\
+bench-streaming|bench-sharded|bench-check|runtime-check> [--scale S] \
+[--seed N] [--out DIR] [--config FILE] [--stream] [--chunk-samples N] \
+[--reservoir R] [--sgd-epochs E] [--data STEM] [--quick] \
+[--json PATH] [--current A --baseline B --factor F]";
+
 fn main() -> ExitCode {
     let Some(cli) = parse_args() else {
-        eprintln!(
-            "usage: repro <fig1..fig7|all|sharded|decode|runtime-check> \
-             [--scale S] [--seed N] [--out DIR] [--config FILE]"
-        );
+        eprintln!("{USAGE}");
         return ExitCode::from(2);
     };
     match dispatch(&cli) {

@@ -7,12 +7,18 @@
 //!   projections cannot do;
 //! * [`SparseRandomProjection`] — the Li, Hastie & Church (2006) very
 //!   sparse JL transform, the state-of-the-art baseline.
+//!
+//! Both compose with the out-of-core pipeline through
+//! [`StreamingReducer`] (ADR-003): column blocks of samples reduce
+//! independently and bit-identically to the in-memory path.
 
 mod cluster_reduce;
 mod random_projection;
+mod streaming;
 
 pub use cluster_reduce::ClusterReduce;
 pub use random_projection::SparseRandomProjection;
+pub use streaming::{ReduceAccumulator, StreamingReducer};
 
 use crate::volume::FeatureMatrix;
 

@@ -1,0 +1,261 @@
+//! Incremental (out-of-core) reduction over sample blocks (ADR-003).
+//!
+//! Every [`Reducer`] in this crate is linear and acts on samples
+//! (columns) independently, so reducing a `(p, c)` column block yields
+//! exactly columns `col0..col0+c` of the in-memory reduction — the
+//! same scatter order over voxel rows, hence **bit-identical** f32
+//! results. [`StreamingReducer`] packages that fact: chunks reduce
+//! independently (possibly on different workers) and land in a
+//! [`ReduceAccumulator`] whose peak memory is the `(k, n)` output —
+//! the `k·n` term of the streaming pipeline's `O(chunk + k·n)` bound.
+//!
+//! Accumulators over disjoint column ranges merge by element-wise
+//! addition ([`ReduceAccumulator::merge`]), so shards of the sample
+//! axis can be reduced independently and recombined.
+
+use super::Reducer;
+use crate::error::{invalid, Result};
+use crate::volume::FeatureMatrix;
+
+/// Grows a `(k, n)` reduced matrix from per-chunk `(k, c)` blocks,
+/// tracking per-column writes so the exactly-once contract is
+/// enforced, not assumed.
+#[derive(Clone, Debug)]
+pub struct ReduceAccumulator {
+    out: FeatureMatrix,
+    written: Vec<bool>,
+    cols_filled: usize,
+}
+
+impl ReduceAccumulator {
+    /// Empty accumulator for `k` components over `n` total samples.
+    pub fn new(k: usize, n: usize) -> Self {
+        ReduceAccumulator {
+            out: FeatureMatrix::zeros(k, n),
+            written: vec![false; n],
+            cols_filled: 0,
+        }
+    }
+
+    /// Scatter a reduced `(k, c)` block into columns
+    /// `col0 .. col0 + c`; writing any column twice is an error.
+    pub fn insert(
+        &mut self,
+        col0: usize,
+        block: &FeatureMatrix,
+    ) -> Result<()> {
+        if block.rows != self.out.rows {
+            return Err(invalid(format!(
+                "accumulator: block has {} rows, expected {}",
+                block.rows, self.out.rows
+            )));
+        }
+        if col0 + block.cols > self.out.cols {
+            return Err(invalid(format!(
+                "accumulator: columns [{col0}, {}) out of range (n={})",
+                col0 + block.cols,
+                self.out.cols
+            )));
+        }
+        for j in col0..col0 + block.cols {
+            if self.written[j] {
+                return Err(invalid(format!(
+                    "accumulator: column {j} written twice"
+                )));
+            }
+        }
+        for r in 0..block.rows {
+            let dst = &mut self.out.row_mut(r)[col0..col0 + block.cols];
+            dst.copy_from_slice(block.row(r));
+        }
+        for w in &mut self.written[col0..col0 + block.cols] {
+            *w = true;
+        }
+        self.cols_filled += block.cols;
+        Ok(())
+    }
+
+    /// Merge a sibling accumulator; the covered column sets must be
+    /// disjoint (unfilled columns are zero, so element-wise addition
+    /// is exact — overlap is rejected, not silently summed).
+    pub fn merge(&mut self, other: &ReduceAccumulator) -> Result<()> {
+        if other.out.rows != self.out.rows
+            || other.out.cols != self.out.cols
+        {
+            return Err(invalid("accumulator merge: shape mismatch"));
+        }
+        for (j, (&mine, &theirs)) in
+            self.written.iter().zip(&other.written).enumerate()
+        {
+            if mine && theirs {
+                return Err(invalid(format!(
+                    "accumulator merge: column {j} covered by both"
+                )));
+            }
+        }
+        for (a, &b) in self.out.data.iter_mut().zip(&other.out.data) {
+            *a += b;
+        }
+        for (w, &o) in self.written.iter_mut().zip(&other.written) {
+            *w |= o;
+        }
+        self.cols_filled += other.cols_filled;
+        Ok(())
+    }
+
+    /// Columns written so far.
+    pub fn cols_filled(&self) -> usize {
+        self.cols_filled
+    }
+
+    /// Resident size of the accumulator in bytes.
+    pub fn bytes(&self) -> usize {
+        self.out.data.len() * std::mem::size_of::<f32>()
+            + self.written.len()
+    }
+
+    /// Finish: every column must have been written exactly once.
+    pub fn finish(self) -> Result<FeatureMatrix> {
+        if self.cols_filled != self.out.cols {
+            return Err(invalid(format!(
+                "accumulator incomplete: {} of {} columns written",
+                self.cols_filled, self.out.cols
+            )));
+        }
+        Ok(self.out)
+    }
+}
+
+/// Column-blockwise streaming extension of [`Reducer`]. Provided for
+/// every reducer (blanket impl): sample columns are independent under
+/// a linear compression, so the per-chunk path reproduces the
+/// in-memory path bit-for-bit.
+pub trait StreamingReducer: Reducer {
+    /// Start an accumulation over `n` total samples.
+    fn begin(&self, n: usize) -> ReduceAccumulator {
+        ReduceAccumulator::new(self.k(), n)
+    }
+
+    /// Reduce one `(p, c)` column block (the per-chunk scatter into
+    /// cluster accumulators, for [`super::ClusterReduce`]) and store
+    /// it at `col0`.
+    fn reduce_chunk(
+        &self,
+        acc: &mut ReduceAccumulator,
+        col0: usize,
+        chunk: &FeatureMatrix,
+    ) -> Result<()> {
+        let red = self.reduce(chunk);
+        acc.insert(col0, &red)
+    }
+}
+
+impl<R: Reducer + ?Sized> StreamingReducer for R {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Labels;
+    use crate::reduce::{ClusterReduce, SparseRandomProjection};
+
+    fn cohort(p: usize, n: usize, seed: u64) -> FeatureMatrix {
+        let mut rng = crate::rng::Rng::new(seed);
+        let mut x = FeatureMatrix::zeros(p, n);
+        rng.fill_normal(&mut x.data);
+        x
+    }
+
+    #[test]
+    fn chunked_cluster_reduce_is_bit_identical() {
+        let x = cohort(30, 17, 1);
+        let labels = Labels::new(
+            (0..30u32).map(|i| i % 6).collect(),
+            6,
+        )
+        .unwrap();
+        let red = ClusterReduce::from_labels(&labels);
+        let full = red.reduce(&x);
+        for chunk in [1usize, 4, 5, 17, 40] {
+            let mut acc = red.begin(17);
+            let mut col0 = 0;
+            while col0 < 17 {
+                let c = chunk.min(17 - col0);
+                let block = x.select_cols(
+                    &(col0..col0 + c).collect::<Vec<_>>(),
+                );
+                red.reduce_chunk(&mut acc, col0, &block).unwrap();
+                col0 += c;
+            }
+            let got = acc.finish().unwrap();
+            assert_eq!(got.data, full.data, "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn chunked_random_projection_is_bit_identical() {
+        let x = cohort(40, 9, 2);
+        let rp = SparseRandomProjection::new(40, 8, 7);
+        let full = rp.reduce(&x);
+        let mut acc = rp.begin(9);
+        for col0 in 0..9 {
+            let block = x.select_cols(&[col0]);
+            rp.reduce_chunk(&mut acc, col0, &block).unwrap();
+        }
+        assert_eq!(acc.finish().unwrap().data, full.data);
+    }
+
+    #[test]
+    fn merge_of_disjoint_accumulators_is_exact() {
+        let x = cohort(20, 10, 3);
+        let labels =
+            Labels::new((0..20u32).map(|i| i % 4).collect(), 4).unwrap();
+        let red = ClusterReduce::from_labels(&labels);
+        let full = red.reduce(&x);
+        let mut left = red.begin(10);
+        let mut right = red.begin(10);
+        let lx = x.select_cols(&(0..6).collect::<Vec<_>>());
+        let rx = x.select_cols(&(6..10).collect::<Vec<_>>());
+        red.reduce_chunk(&mut left, 0, &lx).unwrap();
+        red.reduce_chunk(&mut right, 6, &rx).unwrap();
+        left.merge(&right).unwrap();
+        assert_eq!(left.cols_filled(), 10);
+        assert_eq!(left.finish().unwrap().data, full.data);
+    }
+
+    #[test]
+    fn incomplete_or_invalid_accumulation_rejected() {
+        let labels =
+            Labels::new((0..10u32).map(|i| i % 2).collect(), 2).unwrap();
+        let red = ClusterReduce::from_labels(&labels);
+        let x = cohort(10, 4, 4);
+        let mut acc = red.begin(8);
+        red.reduce_chunk(&mut acc, 0, &x).unwrap();
+        // 4 of 8 columns written
+        assert!(acc.clone().finish().is_err());
+        // out-of-range insert
+        assert!(red.reduce_chunk(&mut acc, 6, &x).is_err());
+        // overlapping insert (columns 2..6 re-cover 2..4)
+        assert!(red.reduce_chunk(&mut acc, 2, &x).is_err());
+        // wrong k
+        let mut acc2 = ReduceAccumulator::new(3, 8);
+        assert!(acc2.insert(0, &red.reduce(&x)).is_err());
+    }
+
+    #[test]
+    fn overlapping_merge_rejected() {
+        let labels =
+            Labels::new((0..10u32).map(|i| i % 2).collect(), 2).unwrap();
+        let red = ClusterReduce::from_labels(&labels);
+        let x = cohort(10, 4, 6);
+        let mut a = red.begin(8);
+        let mut b = red.begin(8);
+        red.reduce_chunk(&mut a, 0, &x).unwrap();
+        red.reduce_chunk(&mut b, 2, &x).unwrap(); // overlaps 2..4
+        assert!(a.merge(&b).is_err());
+        let mut c = red.begin(8);
+        red.reduce_chunk(&mut c, 4, &x).unwrap(); // disjoint
+        a.merge(&c).unwrap();
+        assert_eq!(a.cols_filled(), 8);
+        assert!(a.finish().is_ok());
+    }
+}

@@ -101,7 +101,10 @@ impl Executable {
     /// [`Runtime::upload_f32`]) — skips the per-call host->device
     /// literal copy for loop-invariant operands, the dominant cost of
     /// repeated executions with large inputs (§Perf).
-    pub fn run_buffers(&self, inputs: &[&DeviceBuffer]) -> Result<Vec<Tensor>> {
+    pub fn run_buffers(
+        &self,
+        inputs: &[&DeviceBuffer],
+    ) -> Result<Vec<Tensor>> {
         if inputs.len() != self.spec.inputs.len() {
             return Err(Error::Invalid(format!(
                 "{}: got {} buffers, signature has {}",
@@ -181,7 +184,10 @@ impl Runtime {
     }
 
     /// Get (compiling on first use) an executable by artifact name.
-    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+    pub fn executable(
+        &self,
+        name: &str,
+    ) -> Result<std::sync::Arc<Executable>> {
         if let Some(e) = self.cache.lock().unwrap().get(name) {
             return Ok(e.clone());
         }

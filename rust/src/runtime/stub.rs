@@ -1,6 +1,7 @@
-//! No-`pjrt` stand-in for the PJRT client, compiled when the `pjrt`
-//! cargo feature is off (the default in offline containers, which
-//! cannot vendor the `xla` crate).
+//! Stand-in for the PJRT client, compiled unless BOTH the `pjrt`
+//! cargo feature is on and the vendored `xla` crate is present
+//! (`--cfg fastclust_has_xla`, see the module docs) — i.e. always in
+//! offline containers, which cannot vendor the `xla` crate.
 //!
 //! The stub keeps the exact public surface of the real client so every
 //! caller — the pipeline builder, the logreg runtime backend, the CLI

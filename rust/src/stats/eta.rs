@@ -26,7 +26,10 @@ pub struct EtaSummary {
 /// Compute η for all pairs of columns (samples): `orig` is `(p, n)`,
 /// `compressed` is `(k, n)` — distances taken between columns.
 /// Pairs with near-zero original distance are skipped.
-pub fn eta_ratios(orig: &FeatureMatrix, compressed: &FeatureMatrix) -> Vec<f64> {
+pub fn eta_ratios(
+    orig: &FeatureMatrix,
+    compressed: &FeatureMatrix,
+) -> Vec<f64> {
     assert_eq!(orig.cols, compressed.cols, "eta: sample counts differ");
     let n = orig.cols;
     let mut etas = Vec::with_capacity(n * (n - 1) / 2);

@@ -102,7 +102,8 @@ mod tests {
             for j in 0..n {
                 if !used[j] {
                     used[j] = true;
-                    perm(score, n, used, row + 1, acc + score[row * n + j], best);
+                    let next = acc + score[row * n + j];
+                    perm(score, n, used, row + 1, next, best);
                     used[j] = false;
                 }
             }

@@ -44,7 +44,9 @@ impl Volume {
     /// Linear index of `(x, y, z)`.
     #[inline]
     pub fn idx(&self, x: usize, y: usize, z: usize) -> usize {
-        debug_assert!(x < self.dims[0] && y < self.dims[1] && z < self.dims[2]);
+        debug_assert!(
+            x < self.dims[0] && y < self.dims[1] && z < self.dims[2]
+        );
         x + self.dims[0] * (y + self.dims[1] * z)
     }
 

@@ -4,9 +4,16 @@
 //! `<name>.json` holds dims/mask/shape metadata, `<name>.f32raw` holds
 //! the `(p, n)` matrix row-major. Enough to hand datasets between the
 //! CLI stages and to cache expensive synthetic cohorts across runs.
+//!
+//! The header is parsed separately from the payload
+//! ([`read_fcd_header`]) so the out-of-core reader
+//! ([`super::FcdReader`], ADR-003) can learn shapes and the mask
+//! without touching the `(p, n)` bytes. Writing goes through a
+//! buffered writer one row at a time, so saving needs O(row) extra
+//! memory, never a second copy of the whole matrix.
 
 use std::fs;
-use std::io::{Read, Write};
+use std::io::{BufWriter, Read, Write};
 use std::path::Path;
 use std::sync::Arc;
 
@@ -14,28 +21,36 @@ use super::{FeatureMatrix, Mask, MaskedDataset};
 use crate::error::{invalid, Result};
 use crate::json::{self, Value};
 
-/// Write a dataset as `<stem>.json` + `<stem>.f32raw`.
-pub fn save_dataset(stem: &Path, ds: &MaskedDataset) -> Result<()> {
-    let header = Value::obj(vec![
-        ("format", Value::Str("fcd-v1".into())),
-        ("dims", Value::nums(ds.mask().dims.iter().map(|&d| d as f64))),
-        ("p", Value::Num(ds.p() as f64)),
-        ("n", Value::Num(ds.n() as f64)),
-        (
-            "voxels",
-            Value::nums(ds.mask().voxels.iter().map(|&v| v as f64)),
-        ),
-    ]);
-    fs::write(stem.with_extension("json"), header.to_string())?;
-    let mut f = fs::File::create(stem.with_extension("f32raw"))?;
-    let bytes: Vec<u8> =
-        ds.data().data.iter().flat_map(|v| v.to_le_bytes()).collect();
-    f.write_all(&bytes)?;
-    Ok(())
+/// Parsed `.fcd` header: shapes plus the mask geometry, no payload.
+#[derive(Clone, Debug)]
+pub struct FcdHeader {
+    /// Grid dimensions.
+    pub dims: [usize; 3],
+    /// Number of masked voxels (payload rows).
+    pub p: usize,
+    /// Number of samples (payload columns).
+    pub n: usize,
+    /// Full-grid linear indices of the masked voxels.
+    pub voxels: Vec<u32>,
 }
 
-/// Load a dataset previously written by [`save_dataset`].
-pub fn load_dataset(stem: &Path) -> Result<MaskedDataset> {
+impl FcdHeader {
+    /// Rebuild the [`Mask`] from the stored voxel indices.
+    pub fn build_mask(&self) -> Result<Mask> {
+        let total = self.dims[0] * self.dims[1] * self.dims[2];
+        let mut inverse = vec![-1i32; total];
+        for (i, &v) in self.voxels.iter().enumerate() {
+            if v as usize >= total {
+                return Err(invalid("voxel index out of grid"));
+            }
+            inverse[v as usize] = i as i32;
+        }
+        Ok(Mask { dims: self.dims, voxels: self.voxels.clone(), inverse })
+    }
+}
+
+/// Parse `<stem>.json` without opening the payload file.
+pub fn read_fcd_header(stem: &Path) -> Result<FcdHeader> {
     let text = fs::read_to_string(stem.with_extension("json"))?;
     let header = json::parse(&text)?;
     let format = header
@@ -78,6 +93,45 @@ pub fn load_dataset(stem: &Path) -> Result<MaskedDataset> {
     if voxels.len() != p {
         return Err(invalid("voxels length != p"));
     }
+    Ok(FcdHeader { dims, p, n, voxels })
+}
+
+/// Write a dataset as `<stem>.json` + `<stem>.f32raw`.
+///
+/// The payload goes row-by-row through a buffered writer: peak extra
+/// memory is one row (`n * 4` bytes), not a byte copy of the matrix —
+/// the write-side half of the out-of-core contract (ADR-003).
+pub fn save_dataset(stem: &Path, ds: &MaskedDataset) -> Result<()> {
+    let header = Value::obj(vec![
+        ("format", Value::Str("fcd-v1".into())),
+        ("dims", Value::nums(ds.mask().dims.iter().map(|&d| d as f64))),
+        ("p", Value::Num(ds.p() as f64)),
+        ("n", Value::Num(ds.n() as f64)),
+        (
+            "voxels",
+            Value::nums(ds.mask().voxels.iter().map(|&v| v as f64)),
+        ),
+    ]);
+    fs::write(stem.with_extension("json"), header.to_string())?;
+    let f = fs::File::create(stem.with_extension("f32raw"))?;
+    let mut w = BufWriter::with_capacity(1 << 16, f);
+    let x = ds.data();
+    let mut row_bytes: Vec<u8> = Vec::with_capacity(x.cols * 4);
+    for r in 0..x.rows {
+        row_bytes.clear();
+        for &v in x.row(r) {
+            row_bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(&row_bytes)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a dataset previously written by [`save_dataset`].
+pub fn load_dataset(stem: &Path) -> Result<MaskedDataset> {
+    let header = read_fcd_header(stem)?;
+    let (p, n) = (header.p, header.n);
 
     let mut raw = Vec::new();
     fs::File::open(stem.with_extension("f32raw"))?.read_to_end(&mut raw)?;
@@ -93,16 +147,7 @@ pub fn load_dataset(stem: &Path) -> Result<MaskedDataset> {
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
         .collect();
 
-    // rebuild the mask from stored voxel indices
-    let total = dims[0] * dims[1] * dims[2];
-    let mut inverse = vec![-1i32; total];
-    for (i, &v) in voxels.iter().enumerate() {
-        if v as usize >= total {
-            return Err(invalid("voxel index out of grid"));
-        }
-        inverse[v as usize] = i as i32;
-    }
-    let mask = Mask { dims, voxels, inverse };
+    let mask = header.build_mask()?;
     let x = FeatureMatrix::from_vec(p, n, data)?;
     MaskedDataset::new(Arc::new(mask), x)
 }
@@ -110,7 +155,7 @@ pub fn load_dataset(stem: &Path) -> Result<MaskedDataset> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::volume::SyntheticCube;
+    use crate::volume::{MorphometryGenerator, SyntheticCube};
 
     #[test]
     fn roundtrip_preserves_everything() {
@@ -127,6 +172,57 @@ mod tests {
         assert_eq!(back.data().data, ds.data().data);
     }
 
+    /// Property-style sweep: random shapes, seeds and both mask kinds
+    /// (full cube, irregular brain) must round-trip bit-exactly.
+    #[test]
+    fn roundtrip_property_sweep() {
+        let dir = std::env::temp_dir().join("fastclust_io_prop");
+        fs::create_dir_all(&dir).unwrap();
+        let cases: [([usize; 3], usize, u64); 4] = [
+            ([3, 4, 5], 1, 1),
+            ([7, 5, 6], 3, 2),
+            ([9, 8, 4], 7, 3),
+            ([5, 5, 5], 11, 4),
+        ];
+        for (i, &(dims, n, seed)) in cases.iter().enumerate() {
+            let cube = SyntheticCube::new(dims, 2.5, 0.7).generate(n, seed);
+            let stem = dir.join(format!("cube_{i}"));
+            save_dataset(&stem, &cube).unwrap();
+            let back = load_dataset(&stem).unwrap();
+            assert_eq!(back.data().data, cube.data().data, "case {i}");
+            assert_eq!(back.mask().voxels, cube.mask().voxels);
+            assert_eq!(back.mask().inverse, cube.mask().inverse);
+        }
+        // irregular mask: voxel indices are sparse in the grid
+        let (brain, _) = MorphometryGenerator::new([10, 11, 9]).generate(5, 9);
+        let stem = dir.join("brain");
+        save_dataset(&stem, &brain).unwrap();
+        let back = load_dataset(&stem).unwrap();
+        assert_eq!(back.data().data, brain.data().data);
+        assert_eq!(back.mask().voxels, brain.mask().voxels);
+        assert!(back.p() < 10 * 11 * 9, "brain mask should be partial");
+    }
+
+    #[test]
+    fn header_reads_without_payload() {
+        let ds = SyntheticCube::new([4, 4, 4], 2.0, 0.1).generate(6, 5);
+        let dir = std::env::temp_dir().join("fastclust_io_hdr");
+        fs::create_dir_all(&dir).unwrap();
+        let stem = dir.join("ds");
+        save_dataset(&stem, &ds).unwrap();
+        // remove the payload: the header must still parse
+        fs::remove_file(stem.with_extension("f32raw")).unwrap();
+        let h = read_fcd_header(&stem).unwrap();
+        assert_eq!(h.p, ds.p());
+        assert_eq!(h.n, ds.n());
+        assert_eq!(h.dims, ds.mask().dims);
+        let mask = h.build_mask().unwrap();
+        assert_eq!(mask.voxels, ds.mask().voxels);
+        assert_eq!(mask.inverse, ds.mask().inverse);
+        // ...but the full load must fail cleanly
+        assert!(load_dataset(&stem).is_err());
+    }
+
     #[test]
     fn load_missing_fails_cleanly() {
         let r = load_dataset(Path::new("/nonexistent/nope"));
@@ -141,6 +237,19 @@ mod tests {
         fs::write(stem.with_extension("json"), "{\"format\": \"other\"}")
             .unwrap();
         fs::write(stem.with_extension("f32raw"), b"").unwrap();
+        assert!(load_dataset(&stem).is_err());
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        let ds = SyntheticCube::new([4, 3, 3], 2.0, 0.2).generate(3, 8);
+        let dir = std::env::temp_dir().join("fastclust_io_trunc");
+        fs::create_dir_all(&dir).unwrap();
+        let stem = dir.join("ds");
+        save_dataset(&stem, &ds).unwrap();
+        let raw = fs::read(stem.with_extension("f32raw")).unwrap();
+        fs::write(stem.with_extension("f32raw"), &raw[..raw.len() - 4])
+            .unwrap();
         assert!(load_dataset(&stem).is_err());
     }
 }

@@ -14,12 +14,14 @@ mod grid;
 mod io;
 mod mask;
 mod smooth;
+mod stream;
 mod synth;
 
 pub use grid::Volume;
-pub use io::{load_dataset, save_dataset};
+pub use io::{load_dataset, read_fcd_header, save_dataset, FcdHeader};
 pub use mask::{synthetic_brain_mask, Mask};
 pub use smooth::{fwhm_to_sigma, smooth_volume};
+pub use stream::{ChunkIter, FcdReader, SampleChunk};
 pub use synth::{
     ContrastMapGenerator, MorphometryGenerator, RestingStateGenerator,
     SyntheticCube,
@@ -107,6 +109,17 @@ impl FeatureMatrix {
             }
         }
         out
+    }
+
+    /// Contiguous row block `[r0, r1)` as an owned matrix (one
+    /// memcpy; the unit the SGD partial-fit path consumes).
+    pub fn row_block(&self, r0: usize, r1: usize) -> FeatureMatrix {
+        debug_assert!(r0 < r1 && r1 <= self.rows);
+        FeatureMatrix {
+            rows: r1 - r0,
+            cols: self.cols,
+            data: self.data[r0 * self.cols..r1 * self.cols].to_vec(),
+        }
     }
 
     /// Keep a subset of rows (voxels / clusters) in the given order.

@@ -1,0 +1,310 @@
+//! Out-of-core access to `.fcd` datasets: column-block (sample-block)
+//! reads that never materialize the `(p, n)` payload (ADR-003).
+//!
+//! The paper's motivating regime is cohorts that do not fit in memory
+//! (HCP: "20 Terabytes and growing"), so the streaming pipeline reads
+//! the feature matrix in bounded pieces:
+//!
+//! * [`FcdReader`] — opens a dataset, parses the header/mask only, and
+//!   serves `(p, c)` **column blocks** of `c` samples via strided
+//!   reads of the row-major payload ([`FcdReader::read_columns`]);
+//! * [`FcdReader::chunks`] — iterator over consecutive column blocks,
+//!   the unit the streaming reduce stage pumps through the worker
+//!   pool;
+//! * [`FcdReader::sample_columns`] — a bounded, seeded reservoir of
+//!   training samples gathered in ONE sequential pass (O(p·m + n)
+//!   memory), used to learn the clustering without loading the cohort.
+//!
+//! Peak memory of a consumer holding one chunk is `p * chunk * 4`
+//! bytes — the `O(chunk)` term of the streaming pipeline's
+//! `O(chunk + k·n)` bound.
+
+use std::fs;
+use std::io::{BufReader, Read, Seek, SeekFrom};
+use std::path::Path;
+use std::sync::Arc;
+
+use super::io::read_fcd_header;
+use super::{FeatureMatrix, Mask};
+use crate::error::{invalid, Result};
+use crate::rng::Rng;
+
+/// One `(p, c)` column block: samples `col0 .. col0 + x.cols`.
+#[derive(Clone, Debug)]
+pub struct SampleChunk {
+    /// Index of the first sample (column) in this block.
+    pub col0: usize,
+    /// The `(p, c)` features of these samples.
+    pub x: FeatureMatrix,
+}
+
+/// Chunked reader over a `.fcd` dataset; holds the mask and shapes in
+/// memory, never the payload.
+pub struct FcdReader {
+    file: fs::File,
+    mask: Arc<Mask>,
+    n: usize,
+}
+
+/// One positioned read: `pread`-style on unix (a single syscall, no
+/// cursor update), seek+read elsewhere.
+#[cfg(unix)]
+fn read_block_at(
+    file: &fs::File,
+    off: u64,
+    buf: &mut [u8],
+) -> std::io::Result<()> {
+    use std::os::unix::fs::FileExt;
+    file.read_exact_at(buf, off)
+}
+
+#[cfg(not(unix))]
+fn read_block_at(
+    mut file: &fs::File,
+    off: u64,
+    buf: &mut [u8],
+) -> std::io::Result<()> {
+    file.seek(SeekFrom::Start(off))?;
+    file.read_exact(buf)
+}
+
+impl FcdReader {
+    /// Open `<stem>.json` + `<stem>.f32raw`, validating the payload
+    /// size against the header without reading it.
+    pub fn open(stem: &Path) -> Result<Self> {
+        let header = read_fcd_header(stem)?;
+        let mask = header.build_mask()?;
+        let n = header.n;
+        let file = fs::File::open(stem.with_extension("f32raw"))?;
+        let want = (header.p * n * 4) as u64;
+        let got = file.metadata()?.len();
+        if got != want {
+            return Err(invalid(format!(
+                "payload size {got} != expected {want}"
+            )));
+        }
+        Ok(FcdReader { file, mask: Arc::new(mask), n })
+    }
+
+    /// Number of masked voxels (payload rows).
+    pub fn p(&self) -> usize {
+        self.mask.p()
+    }
+
+    /// Number of samples (payload columns).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Shared handle to the geometry.
+    pub fn mask_arc(&self) -> Arc<Mask> {
+        self.mask.clone()
+    }
+
+    /// Total payload size in bytes (for throughput accounting).
+    pub fn payload_bytes(&self) -> u64 {
+        (self.p() * self.n * 4) as u64
+    }
+
+    /// Read the `(p, count)` column block starting at sample `col0`:
+    /// one positioned (`pread`-style) strided read per voxel row,
+    /// `count * 4` bytes each — `p` syscalls per chunk, an accepted
+    /// cost of reading column blocks from a row-major payload
+    /// (ADR-003 §Alternatives weighs this against row-major layouts).
+    /// Memory is the block itself plus one row buffer.
+    pub fn read_columns(
+        &mut self,
+        col0: usize,
+        count: usize,
+    ) -> Result<FeatureMatrix> {
+        let (p, n) = (self.p(), self.n);
+        if count == 0 || col0 + count > n {
+            return Err(invalid(format!(
+                "column block [{col0}, {}) out of range (n={n})",
+                col0 + count
+            )));
+        }
+        let mut out = FeatureMatrix::zeros(p, count);
+        let mut buf = vec![0u8; count * 4];
+        for i in 0..p {
+            let off = ((i * n + col0) * 4) as u64;
+            read_block_at(&self.file, off, &mut buf)?;
+            let dst = out.row_mut(i);
+            for (j, c) in buf.chunks_exact(4).enumerate() {
+                dst[j] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Iterate consecutive column blocks of `chunk_samples` samples
+    /// (the last block may be shorter).
+    pub fn chunks(&mut self, chunk_samples: usize) -> ChunkIter<'_> {
+        ChunkIter { reader: self, chunk: chunk_samples.max(1), next: 0 }
+    }
+
+    /// Gather a bounded training reservoir: `m` distinct sample
+    /// columns chosen by `seed`, read in ONE sequential pass over the
+    /// payload (O(p·m) output + O(n) row buffer). Returns the sorted
+    /// column indices and the `(p, m)` matrix. With `m >= n` this is
+    /// exactly the full matrix in column order, so clustering fits on
+    /// the reservoir reproduce the in-memory fit bit-for-bit.
+    pub fn sample_columns(
+        &mut self,
+        m: usize,
+        seed: u64,
+    ) -> Result<(Vec<usize>, FeatureMatrix)> {
+        let (p, n) = (self.p(), self.n);
+        if n == 0 {
+            return Err(invalid("dataset has no samples"));
+        }
+        let m = m.clamp(1, n);
+        let mut idx = Rng::new(seed).derive(0x5EED).sample_indices(n, m);
+        idx.sort_unstable();
+        self.file.seek(SeekFrom::Start(0))?;
+        let mut reader = BufReader::with_capacity(1 << 16, &mut self.file);
+        let mut row = vec![0u8; n * 4];
+        let mut out = FeatureMatrix::zeros(p, m);
+        for i in 0..p {
+            reader.read_exact(&mut row)?;
+            let dst = out.row_mut(i);
+            for (jj, &c) in idx.iter().enumerate() {
+                let b = &row[c * 4..c * 4 + 4];
+                dst[jj] = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+            }
+        }
+        Ok((idx, out))
+    }
+}
+
+/// Iterator over consecutive [`SampleChunk`]s (see
+/// [`FcdReader::chunks`]).
+pub struct ChunkIter<'a> {
+    reader: &'a mut FcdReader,
+    chunk: usize,
+    next: usize,
+}
+
+impl Iterator for ChunkIter<'_> {
+    type Item = Result<SampleChunk>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let n = self.reader.n();
+        if self.next >= n {
+            return None;
+        }
+        let c = self.chunk.min(n - self.next);
+        let col0 = self.next;
+        self.next += c;
+        Some(
+            self.reader
+                .read_columns(col0, c)
+                .map(|x| SampleChunk { col0, x }),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::volume::{load_dataset, save_dataset, SyntheticCube};
+
+    fn saved_cohort(
+        dims: [usize; 3],
+        n: usize,
+        seed: u64,
+        tag: &str,
+    ) -> std::path::PathBuf {
+        let ds = SyntheticCube::new(dims, 3.0, 0.5).generate(n, seed);
+        let dir = std::env::temp_dir().join("fastclust_stream_test");
+        fs::create_dir_all(&dir).unwrap();
+        let stem = dir.join(tag);
+        save_dataset(&stem, &ds).unwrap();
+        stem
+    }
+
+    #[test]
+    fn chunked_read_matches_full_load() {
+        let stem = saved_cohort([5, 6, 4], 13, 3, "chunked");
+        let full = load_dataset(&stem).unwrap();
+        for chunk in [1usize, 3, 5, 13, 99] {
+            let mut r = FcdReader::open(&stem).unwrap();
+            assert_eq!(r.p(), full.p());
+            assert_eq!(r.n(), 13);
+            let mut got = FeatureMatrix::zeros(r.p(), r.n());
+            let mut total = 0usize;
+            for item in r.chunks(chunk) {
+                let sc = item.unwrap();
+                assert!(sc.x.cols <= chunk);
+                for i in 0..sc.x.rows {
+                    let dst = &mut got.row_mut(i)
+                        [sc.col0..sc.col0 + sc.x.cols];
+                    dst.copy_from_slice(sc.x.row(i));
+                }
+                total += sc.x.cols;
+            }
+            assert_eq!(total, 13, "chunk={chunk}");
+            assert_eq!(got.data, full.data().data, "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn read_columns_is_exact_block() {
+        let stem = saved_cohort([4, 4, 3], 9, 5, "cols");
+        let full = load_dataset(&stem).unwrap();
+        let mut r = FcdReader::open(&stem).unwrap();
+        let block = r.read_columns(2, 4).unwrap();
+        assert_eq!(block.rows, full.p());
+        assert_eq!(block.cols, 4);
+        for i in 0..block.rows {
+            for j in 0..4 {
+                assert_eq!(block.get(i, j), full.data().get(i, 2 + j));
+            }
+        }
+        assert!(r.read_columns(7, 3).is_err(), "out of range");
+        assert!(r.read_columns(0, 0).is_err(), "empty block");
+    }
+
+    #[test]
+    fn full_reservoir_equals_full_matrix() {
+        let stem = saved_cohort([4, 5, 3], 7, 9, "reservoir_full");
+        let full = load_dataset(&stem).unwrap();
+        let mut r = FcdReader::open(&stem).unwrap();
+        let (idx, x) = r.sample_columns(7, 123).unwrap();
+        assert_eq!(idx, (0..7).collect::<Vec<_>>());
+        assert_eq!(x.data, full.data().data);
+        // over-asking clamps to n
+        let (idx2, x2) = r.sample_columns(1000, 5).unwrap();
+        assert_eq!(idx2.len(), 7);
+        assert_eq!(x2.data, full.data().data);
+    }
+
+    #[test]
+    fn partial_reservoir_is_column_subset() {
+        let stem = saved_cohort([4, 4, 4], 11, 2, "reservoir_part");
+        let full = load_dataset(&stem).unwrap();
+        let mut r = FcdReader::open(&stem).unwrap();
+        let (idx, x) = r.sample_columns(4, 77).unwrap();
+        assert_eq!(idx.len(), 4);
+        assert!(idx.windows(2).all(|w| w[0] < w[1]), "sorted distinct");
+        for (jj, &c) in idx.iter().enumerate() {
+            for i in 0..full.p() {
+                assert_eq!(x.get(i, jj), full.data().get(i, c));
+            }
+        }
+        // deterministic given the seed
+        let mut r2 = FcdReader::open(&stem).unwrap();
+        let (idx_b, x_b) = r2.sample_columns(4, 77).unwrap();
+        assert_eq!(idx, idx_b);
+        assert_eq!(x.data, x_b.data);
+    }
+
+    #[test]
+    fn size_mismatch_rejected_at_open() {
+        let stem = saved_cohort([3, 3, 3], 4, 1, "badsize");
+        let raw = fs::read(stem.with_extension("f32raw")).unwrap();
+        fs::write(stem.with_extension("f32raw"), &raw[..raw.len() - 8])
+            .unwrap();
+        assert!(FcdReader::open(&stem).is_err());
+    }
+}

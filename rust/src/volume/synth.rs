@@ -123,7 +123,8 @@ impl MorphometryGenerator {
         let p = mask.p();
         // shared anatomy + one sex-linked effect map, both smooth
         let mut ra = root.derive(1);
-        let anatomy = mask.apply(&smooth_random_field(self.dims, self.fwhm, &mut ra));
+        let anatomy = mask
+            .apply(&smooth_random_field(self.dims, self.fwhm, &mut ra));
         let mut re = root.derive(2);
         let effect_map =
             mask.apply(&smooth_random_field(self.dims, self.fwhm, &mut re));
@@ -137,8 +138,9 @@ impl MorphometryGenerator {
         for j in 0..n {
             // subject-specific smooth variability (low-freq, non-signal)
             let mut rsub = root.derive(100 + j as u64);
-            let subj =
-                mask.apply(&smooth_random_field(self.dims, self.fwhm, &mut rsub));
+            let subj = mask.apply(&smooth_random_field(
+                self.dims, self.fwhm, &mut rsub,
+            ));
             let sgn = if labels[j] == 1 { 0.5 } else { -0.5 };
             let mut rn = root.derive(0x2000_0000 + j as u64);
             for i in 0..p {
@@ -208,8 +210,9 @@ impl ContrastMapGenerator {
         let mut x = FeatureMatrix::zeros(p, n_subjects * n_contrasts);
         for s in 0..n_subjects {
             let mut rsub = root.derive(1000 + s as u64);
-            let subj =
-                mask.apply(&smooth_random_field(self.dims, self.fwhm, &mut rsub));
+            let subj = mask.apply(&smooth_random_field(
+                self.dims, self.fwhm, &mut rsub,
+            ));
             for c in 0..n_contrasts {
                 let col = s * n_contrasts + c;
                 let mut rn =
@@ -244,7 +247,12 @@ pub struct RestingStateGenerator {
 impl RestingStateGenerator {
     /// Defaults: 12 sources, FWHM 5, moderate noise.
     pub fn new(dims: [usize; 3]) -> Self {
-        RestingStateGenerator { dims, n_sources: 12, fwhm: 5.0, noise_sigma: 0.8 }
+        RestingStateGenerator {
+            dims,
+            n_sources: 12,
+            fwhm: 5.0,
+            noise_sigma: 0.8,
+        }
     }
 
     /// The ground-truth spatial sources `(q0, p)` for a given seed —
@@ -254,14 +262,19 @@ impl RestingStateGenerator {
         let mut s = FeatureMatrix::zeros(self.n_sources, mask.p());
         for q in 0..self.n_sources {
             let mut rq = root.derive(500 + q as u64);
-            let field =
-                mask.apply(&smooth_random_field(self.dims, self.fwhm, &mut rq));
+            let field = mask.apply(&smooth_random_field(
+                self.dims, self.fwhm, &mut rq,
+            ));
             // sparsify: keep the strong lobes => spatially localized,
             // super-Gaussian marginal (what ICA exploits)
             let row = s.row_mut(q);
             for i in 0..field.len() {
                 let v = field[i];
-                row[i] = if v.abs() > 1.0 { v * v * v.signum() } else { 0.1 * v };
+                row[i] = if v.abs() > 1.0 {
+                    v * v * v.signum()
+                } else {
+                    0.1 * v
+                };
             }
         }
         s

@@ -27,7 +27,8 @@ fn every_method_runs_end_to_end() {
         Method::RandomProjection,
         Method::None,
     ] {
-        let reduce = ReduceConfig { method, k: 0, ratio: 12, seed: 2, shards: 0 };
+        let reduce =
+            ReduceConfig { method, k: 0, ratio: 12, seed: 2, shards: 0 };
         let rep = run_decoding_pipeline(&ds, &y, &reduce, &est)
             .unwrap_or_else(|e| panic!("{} failed: {e}", method.name()));
         assert!(
@@ -43,8 +44,13 @@ fn every_method_runs_end_to_end() {
 #[test]
 fn pipeline_is_deterministic() {
     let (ds, y) = cohort();
-    let reduce =
-        ReduceConfig { method: Method::Fast, k: 0, ratio: 10, seed: 5, shards: 0 };
+    let reduce = ReduceConfig {
+        method: Method::Fast,
+        k: 0,
+        ratio: 10,
+        seed: 5,
+        shards: 0,
+    };
     let est = EstimatorConfig {
         cv_folds: 4,
         max_iter: 80,
@@ -59,8 +65,13 @@ fn pipeline_is_deterministic() {
 #[test]
 fn worker_parallelism_does_not_change_results() {
     let (ds, y) = cohort();
-    let reduce =
-        ReduceConfig { method: Method::Ward, k: 40, ratio: 0, seed: 1, shards: 0 };
+    let reduce = ReduceConfig {
+        method: Method::Ward,
+        k: 40,
+        ratio: 0,
+        seed: 1,
+        shards: 0,
+    };
     let est = EstimatorConfig {
         cv_folds: 4,
         max_iter: 60,
@@ -86,7 +97,8 @@ fn explicit_k_is_honored_across_methods() {
         ..Default::default()
     };
     for method in [Method::Fast, Method::Ward, Method::RandomProjection] {
-        let reduce = ReduceConfig { method, k: 33, ratio: 0, seed: 7, shards: 0 };
+        let reduce =
+            ReduceConfig { method, k: 33, ratio: 0, seed: 7, shards: 0 };
         let rep = run_decoding_pipeline(&ds, &y, &reduce, &est).unwrap();
         assert_eq!(rep.k, 33, "{}", method.name());
     }

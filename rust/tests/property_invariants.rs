@@ -2,6 +2,7 @@
 //! carries no proptest). Each property is checked over many seeded
 //! random instances; failures print the offending seed so the case can
 //! be replayed exactly.
+#![allow(clippy::needless_range_loop)] // indexed loops mirror the math
 
 use fastclust::cluster::{
     cluster_counts, AverageLinkage, Clusterer, CompleteLinkage, FastCluster,
@@ -202,7 +203,8 @@ fn prop_mst_weight_no_better_than_alternative_spanning_trees() {
             if cnt == tree.len() {
                 assert!(
                     total <= alt_total + 1e-6,
-                    "seed {seed}: MST {total} heavier than random tree {alt_total}"
+                    "seed {seed}: MST {total} heavier than random \
+                     tree {alt_total}"
                 );
             }
         }

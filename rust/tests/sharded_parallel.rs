@@ -4,6 +4,7 @@
 //! connected, non-percolating partitions — and the sharded partition's
 //! quality (the Fig-5 variance-ratio metric) must stay within 5% of
 //! single-thread.
+#![allow(clippy::needless_range_loop)] // indexed loops mirror the math
 
 use fastclust::cluster::{
     Clusterer, FastCluster, Labels, ShardedFastCluster,

@@ -1,0 +1,214 @@
+//! Integration: the out-of-core streaming pipeline (ADR-003) against
+//! the in-memory reference, end to end across the volume, reduce,
+//! estimator and coordinator layers:
+//!
+//! * chunked `.fcd` reads reassemble the exact payload;
+//! * streaming `ClusterReduce` is bit-identical to the in-memory
+//!   reduction for every chunk size;
+//! * the full streaming decode (full reservoir, batch solver)
+//!   reproduces the in-memory fold accuracies exactly, at any worker
+//!   count;
+//! * bounded reservoir and SGD partial-fit variants stay within
+//!   tolerance of the reference.
+
+use fastclust::cluster::{Clusterer, FastCluster};
+use fastclust::config::{
+    EstimatorConfig, Method, ReduceConfig, StreamConfig,
+};
+use fastclust::coordinator::{
+    run_decoding_pipeline, run_streaming_decoding, stream_reduce,
+};
+use fastclust::graph::LatticeGraph;
+use fastclust::reduce::{ClusterReduce, Reducer};
+use fastclust::volume::{
+    load_dataset, save_dataset, FcdReader, MaskedDataset,
+    MorphometryGenerator,
+};
+
+fn cohort() -> (MaskedDataset, Vec<u8>) {
+    MorphometryGenerator::new([10, 12, 9]).generate(40, 7)
+}
+
+fn save_cohort(tag: &str) -> (std::path::PathBuf, MaskedDataset, Vec<u8>)
+{
+    let (ds, y) = cohort();
+    let dir = std::env::temp_dir().join("fastclust_stream_equiv");
+    std::fs::create_dir_all(&dir).unwrap();
+    let stem = dir.join(tag);
+    save_dataset(&stem, &ds).unwrap();
+    (stem, ds, y)
+}
+
+fn reduce_cfg() -> ReduceConfig {
+    ReduceConfig {
+        method: Method::Fast,
+        k: 0,
+        ratio: 10,
+        seed: 1,
+        shards: 0,
+    }
+}
+
+fn est_cfg() -> EstimatorConfig {
+    EstimatorConfig { cv_folds: 4, max_iter: 200, ..Default::default() }
+}
+
+#[test]
+fn chunked_reader_reassembles_saved_payload() {
+    let (stem, ds, _) = save_cohort("reader");
+    let full = load_dataset(&stem).unwrap();
+    assert_eq!(full.data().data, ds.data().data);
+    let mut r = FcdReader::open(&stem).unwrap();
+    let mut seen = 0usize;
+    for item in r.chunks(6) {
+        let sc = item.unwrap();
+        for i in 0..sc.x.rows {
+            for j in 0..sc.x.cols {
+                assert_eq!(
+                    sc.x.get(i, j),
+                    ds.data().get(i, sc.col0 + j)
+                );
+            }
+        }
+        seen += sc.x.cols;
+    }
+    assert_eq!(seen, ds.n());
+}
+
+#[test]
+fn streaming_cluster_reduce_bit_identical_any_chunk() {
+    let (stem, ds, _) = save_cohort("reduce");
+    let graph = LatticeGraph::from_mask(ds.mask());
+    let k = (ds.p() / 10).max(2);
+    let labels = FastCluster::default()
+        .fit(ds.data(), &graph, k, 1)
+        .unwrap();
+    let red = ClusterReduce::from_labels(&labels);
+    let want = red.reduce(ds.data());
+    for chunk in [1usize, 5, 16, 40, 1000] {
+        let mut r = FcdReader::open(&stem).unwrap();
+        let got = stream_reduce(&mut r, &red, chunk).unwrap();
+        assert_eq!(got.data, want.data, "chunk={chunk}");
+    }
+}
+
+#[test]
+fn streaming_decode_equals_inmem_for_any_worker_count() {
+    let (stem, ds, y) = save_cohort("decode");
+    let reduce = reduce_cfg();
+    let est = est_cfg();
+    let inmem = run_decoding_pipeline(&ds, &y, &reduce, &est).unwrap();
+    let stream = StreamConfig {
+        enabled: true,
+        chunk_samples: 8,
+        reservoir: 0,
+        sgd_epochs: 0,
+    };
+    for workers in [1usize, 2, 4] {
+        let rep = run_streaming_decoding(
+            &stem, &y, &reduce, &est, &stream, workers,
+        )
+        .unwrap();
+        assert_eq!(
+            rep.fold_accuracies, inmem.fold_accuracies,
+            "workers={workers}"
+        );
+        assert_eq!(rep.accuracy, inmem.accuracy);
+        assert_eq!(rep.k, inmem.k);
+    }
+}
+
+#[test]
+fn chunk_size_does_not_change_streaming_results() {
+    let (stem, _, y) = save_cohort("chunksize");
+    let reduce = reduce_cfg();
+    let est = est_cfg();
+    let mut baseline: Option<Vec<f64>> = None;
+    for chunk in [1usize, 7, 40] {
+        let stream = StreamConfig {
+            enabled: true,
+            chunk_samples: chunk,
+            reservoir: 0,
+            sgd_epochs: 0,
+        };
+        let rep = run_streaming_decoding(
+            &stem, &y, &reduce, &est, &stream, 2,
+        )
+        .unwrap();
+        match &baseline {
+            None => baseline = Some(rep.fold_accuracies),
+            Some(b) => assert_eq!(
+                &rep.fold_accuracies, b,
+                "chunk={chunk} changed results"
+            ),
+        }
+    }
+}
+
+#[test]
+fn bounded_reservoir_stays_in_accuracy_band() {
+    let (stem, ds, y) = save_cohort("bounded");
+    let reduce = reduce_cfg();
+    let est = est_cfg();
+    let inmem = run_decoding_pipeline(&ds, &y, &reduce, &est).unwrap();
+    let stream = StreamConfig {
+        enabled: true,
+        chunk_samples: 8,
+        reservoir: 12, // < n = 40: genuinely subsampled
+        sgd_epochs: 0,
+    };
+    let rep =
+        run_streaming_decoding(&stem, &y, &reduce, &est, &stream, 1)
+            .unwrap();
+    assert_eq!(rep.reservoir_samples, 12);
+    // the reservoir bound shows up in the analytic accounting
+    assert!(rep.peak_matrix_bytes < rep.inmem_matrix_bytes);
+    assert!(
+        (rep.accuracy - inmem.accuracy).abs() <= 0.2,
+        "bounded accuracy {} vs in-memory {}",
+        rep.accuracy,
+        inmem.accuracy
+    );
+}
+
+#[test]
+fn sgd_estimator_stays_in_accuracy_band() {
+    let (stem, ds, y) = save_cohort("sgd");
+    let reduce = reduce_cfg();
+    let est = est_cfg();
+    let inmem = run_decoding_pipeline(&ds, &y, &reduce, &est).unwrap();
+    let stream = StreamConfig {
+        enabled: true,
+        chunk_samples: 8,
+        reservoir: 0,
+        sgd_epochs: 150,
+    };
+    let rep =
+        run_streaming_decoding(&stem, &y, &reduce, &est, &stream, 1)
+            .unwrap();
+    assert!(
+        (rep.accuracy - inmem.accuracy).abs() <= 0.2,
+        "sgd accuracy {} vs batch {}",
+        rep.accuracy,
+        inmem.accuracy
+    );
+}
+
+#[test]
+fn streaming_expansion_roundtrip_via_mask() {
+    // the reduced representation stays explicit in voxel space:
+    // expand() of the streamed reduction equals expand() of the
+    // in-memory reduction (piecewise-constant smoothing projection)
+    let (stem, ds, _) = save_cohort("expand");
+    let graph = LatticeGraph::from_mask(ds.mask());
+    let k = (ds.p() / 10).max(2);
+    let labels = FastCluster::default()
+        .fit(ds.data(), &graph, k, 3)
+        .unwrap();
+    let red = ClusterReduce::from_labels(&labels);
+    let mut r = FcdReader::open(&stem).unwrap();
+    let xk_stream = stream_reduce(&mut r, &red, 9).unwrap();
+    let back_stream = red.expand(&xk_stream);
+    let back_inmem = red.expand(&red.reduce(ds.data()));
+    assert_eq!(back_stream.data, back_inmem.data);
+}
