@@ -24,7 +24,7 @@ pub mod trajectory;
 pub use report::{write_csv, Table};
 pub use trajectory::{
     bench_report, load_bench_report, regression_failures,
-    write_bench_report,
+    with_provenance, write_bench_report,
 };
 
 use std::time::Instant;

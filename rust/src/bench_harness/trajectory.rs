@@ -40,6 +40,35 @@ pub fn bench_report(name: &str, metrics: Vec<(&str, f64)>) -> Value {
     ])
 }
 
+/// Stamp a report with a `provenance` object describing the machine
+/// and build that recorded it — the context the committed `BENCH_*`
+/// baselines carry so a regression gate can be judged against the
+/// environment it was measured in. Non-object reports pass through
+/// unchanged. (`provenance` is informational: the gate in
+/// [`regression_failures`] only reads `metrics`.)
+pub fn with_provenance(report: Value, note: &str) -> Value {
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let prov = Value::obj(vec![
+        ("os", Value::Str(std::env::consts::OS.into())),
+        ("arch", Value::Str(std::env::consts::ARCH.into())),
+        ("cores", Value::Num(cores as f64)),
+        (
+            "crate_version",
+            Value::Str(env!("CARGO_PKG_VERSION").into()),
+        ),
+        ("note", Value::Str(note.into())),
+    ]);
+    match report {
+        Value::Obj(mut m) => {
+            m.insert("provenance".into(), prov);
+            Value::Obj(m)
+        }
+        other => other,
+    }
+}
+
 /// Write a report as pretty JSON (creating parent directories).
 pub fn write_bench_report(path: &Path, report: &Value) -> Result<()> {
     if let Some(parent) = path.parent() {
@@ -127,6 +156,27 @@ mod tests {
         );
         let m = back.get("metrics").unwrap();
         assert_eq!(m.get("total_secs").unwrap().as_f64().unwrap(), 1.25);
+    }
+
+    #[test]
+    fn provenance_is_attached_and_ignored_by_the_gate() {
+        let rep = with_provenance(
+            bench_report("b", vec![("fit_secs", 1.0)]),
+            "unit test",
+        );
+        let prov = rep.get("provenance").unwrap();
+        assert_eq!(
+            prov.get("note").unwrap().as_str().unwrap(),
+            "unit test"
+        );
+        assert!(prov.get("cores").unwrap().as_usize().unwrap() >= 1);
+        assert_eq!(
+            prov.get("os").unwrap().as_str().unwrap(),
+            std::env::consts::OS
+        );
+        // the gate still compares metrics only
+        let base = bench_report("b", vec![("fit_secs", 1.0)]);
+        assert!(regression_failures(&rep, &base, 2.0).is_empty());
     }
 
     #[test]

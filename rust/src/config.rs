@@ -205,8 +205,34 @@ impl Default for StreamConfig {
     }
 }
 
+/// Decode-server settings (ADR-004): how `repro serve` binds and
+/// schedules. The model path itself is a CLI argument, not config —
+/// artifacts are addressed per invocation.
+#[derive(Clone, Debug)]
+pub struct ServeSettings {
+    /// TCP port on 127.0.0.1 (`0` = ephemeral).
+    pub port: u16,
+    /// Worker threads (`0` = available parallelism).
+    pub workers: usize,
+    /// Resident models in the LRU cache.
+    pub cache_capacity: usize,
+    /// Per-connection batch bound (requests per pool job).
+    pub max_batch: usize,
+}
+
+impl Default for ServeSettings {
+    fn default() -> Self {
+        ServeSettings {
+            port: 0,
+            workers: 0,
+            cache_capacity: 4,
+            max_batch: 64,
+        }
+    }
+}
+
 /// A full experiment = data + compression + estimation (+ optional
-/// streaming execution).
+/// streaming execution, + serving settings).
 #[derive(Clone, Debug, Default)]
 pub struct ExperimentConfig {
     /// Data generation.
@@ -217,6 +243,8 @@ pub struct ExperimentConfig {
     pub estimator: EstimatorConfig,
     /// Out-of-core execution mode.
     pub stream: StreamConfig,
+    /// Decode-server settings.
+    pub serve: ServeSettings,
 }
 
 fn get_usize(v: &Value, key: &str, default: usize) -> Result<usize> {
@@ -378,6 +406,37 @@ impl StreamConfig {
     }
 }
 
+impl ServeSettings {
+    /// Parse from a JSON object.
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let d = ServeSettings::default();
+        let port = get_usize(v, "port", d.port as usize)?;
+        if port > u16::MAX as usize {
+            return Err(invalid("'port' must fit in 16 bits"));
+        }
+        Ok(ServeSettings {
+            port: port as u16,
+            workers: get_usize(v, "workers", d.workers)?,
+            cache_capacity: get_usize(
+                v,
+                "cache_capacity",
+                d.cache_capacity,
+            )?,
+            max_batch: get_usize(v, "max_batch", d.max_batch)?,
+        })
+    }
+
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("port", Value::Num(self.port as f64)),
+            ("workers", Value::Num(self.workers as f64)),
+            ("cache_capacity", Value::Num(self.cache_capacity as f64)),
+            ("max_batch", Value::Num(self.max_batch as f64)),
+        ])
+    }
+}
+
 impl ExperimentConfig {
     /// Parse the full config (all sections optional).
     pub fn from_json(v: &Value) -> Result<Self> {
@@ -398,6 +457,10 @@ impl ExperimentConfig {
                 Some(s) => StreamConfig::from_json(s)?,
                 None => StreamConfig::default(),
             },
+            serve: match v.get("serve") {
+                Some(s) => ServeSettings::from_json(s)?,
+                None => ServeSettings::default(),
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -410,6 +473,7 @@ impl ExperimentConfig {
             ("reduce", self.reduce.to_json()),
             ("estimator", self.estimator.to_json()),
             ("stream", self.stream.to_json()),
+            ("serve", self.serve.to_json()),
         ])
     }
 
@@ -441,6 +505,12 @@ impl ExperimentConfig {
                 "streaming mode needs a compression method (raw \
                  holds the full matrix in core)",
             ));
+        }
+        if self.serve.cache_capacity == 0 {
+            return Err(invalid("serve cache_capacity must be >= 1"));
+        }
+        if self.serve.max_batch == 0 {
+            return Err(invalid("serve max_batch must be >= 1"));
         }
         Ok(())
     }
@@ -500,6 +570,41 @@ mod tests {
         assert!(ExperimentConfig::from_json(&v).is_err());
         let v = json::parse(r#"{"stream": {"chunk_samples": 0}}"#).unwrap();
         assert!(ExperimentConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn serve_settings_roundtrip_and_validate() {
+        let text = r#"{"serve": {"port": 7777, "workers": 3,
+                       "cache_capacity": 2, "max_batch": 16}}"#;
+        let cfg =
+            ExperimentConfig::from_json(&json::parse(text).unwrap())
+                .unwrap();
+        assert_eq!(cfg.serve.port, 7777);
+        assert_eq!(cfg.serve.workers, 3);
+        assert_eq!(cfg.serve.cache_capacity, 2);
+        assert_eq!(cfg.serve.max_batch, 16);
+        let back = ExperimentConfig::from_json(
+            &json::parse(&cfg.to_json().to_string()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.serve.port, 7777);
+        // defaults apply when the section is absent
+        let none = ExperimentConfig::from_json(
+            &json::parse("{}").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(none.serve.cache_capacity, 4);
+        for bad in [
+            r#"{"serve": {"cache_capacity": 0}}"#,
+            r#"{"serve": {"max_batch": 0}}"#,
+            r#"{"serve": {"port": 70000}}"#,
+        ] {
+            assert!(
+                ExperimentConfig::from_json(&json::parse(bad).unwrap())
+                    .is_err(),
+                "should reject {bad}"
+            );
+        }
     }
 
     #[test]

@@ -67,6 +67,19 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Non-blocking pop: `None` when nothing is immediately available
+    /// (empty or closed-and-drained alike — callers that must
+    /// distinguish should use [`BoundedQueue::pop`]).
+    pub fn try_pop(&self) -> Option<T> {
+        let (lock, not_full, _) = &*self.inner;
+        let mut g = lock.lock().unwrap();
+        let item = g.queue.pop_front();
+        if item.is_some() {
+            not_full.notify_one();
+        }
+        item
+    }
+
     /// Close the queue: producers fail fast, consumers drain then stop.
     pub fn close(&self) {
         let (lock, not_full, not_empty) = &*self.inner;
@@ -102,6 +115,17 @@ mod tests {
         assert_eq!(q.pop(), Some(1));
         assert_eq!(q.pop(), Some(2));
         assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn try_pop_never_blocks() {
+        let q = BoundedQueue::new(2);
+        assert_eq!(q.try_pop(), None);
+        q.push(5);
+        assert_eq!(q.try_pop(), Some(5));
+        assert_eq!(q.try_pop(), None);
+        q.close();
+        assert_eq!(q.try_pop(), None);
     }
 
     #[test]

@@ -14,6 +14,7 @@ pub struct WorkerPool {
     results: BoundedQueue<(usize, Box<dyn std::any::Any + Send>)>,
     handles: Vec<JoinHandle<()>>,
     submitted: usize,
+    discarded: usize,
 }
 
 impl WorkerPool {
@@ -35,7 +36,7 @@ impl WorkerPool {
                 })
             })
             .collect();
-        WorkerPool { jobs, results, handles, submitted: 0 }
+        WorkerPool { jobs, results, handles, submitted: 0, discarded: 0 }
     }
 
     /// Submit a job returning any `Send` value; blocks when the queue
@@ -48,6 +49,22 @@ impl WorkerPool {
         self.submitted += 1;
         self.jobs.push((id, Box::new(move || Box::new(job()) as _)));
         id
+    }
+
+    /// Discard whatever results completed jobs have already pushed,
+    /// without blocking. For long-lived callers (the decode server)
+    /// whose jobs deliver their real output out of band and return
+    /// `()`: dropping the bookkeeping entries here keeps the results
+    /// queue from growing for the lifetime of the pool. Returns how
+    /// many entries were discarded; [`WorkerPool::finish`] accounts
+    /// for them.
+    pub fn discard_ready_results(&mut self) -> usize {
+        let mut n = 0;
+        while self.results.try_pop().is_some() {
+            n += 1;
+        }
+        self.discarded += n;
+        n
     }
 
     /// Drain all results, returning them ordered by job id. Consumes
@@ -67,10 +84,11 @@ impl WorkerPool {
         }
         tagged.sort_by_key(|(id, _)| *id);
         assert_eq!(
-            tagged.len(),
+            tagged.len() + self.discarded,
             self.submitted,
-            "lost results: got {} of {}",
+            "lost results: got {} (+{} discarded) of {}",
             tagged.len(),
+            self.discarded,
             self.submitted
         );
         tagged.into_iter().map(|(_, r)| r).collect()
@@ -127,6 +145,26 @@ mod tests {
         // must close the queue, join the workers and return — a hang
         // here is the thread-leak regression this guards against
         drop(pool);
+    }
+
+    #[test]
+    fn discarded_results_are_accounted_for() {
+        let mut pool = WorkerPool::new(2, 4);
+        for i in 0..6usize {
+            pool.submit(move || i);
+        }
+        // let some jobs land, then drop their bookkeeping entries
+        let mut discarded = 0;
+        while discarded == 0 {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            discarded = pool.discard_ready_results();
+        }
+        for i in 0..4usize {
+            pool.submit(move || 100 + i);
+        }
+        // finish must not report the discarded entries as lost
+        let rest: Vec<usize> = pool.finish();
+        assert_eq!(rest.len(), 10 - discarded);
     }
 
     #[test]

@@ -28,3 +28,16 @@ pub use logreg::{
 pub use ridge::RidgeRegression;
 pub use svm::LinearSvm;
 pub use whiten::{whiten_samples, Whitening};
+
+/// One CV fold's fitted estimator, its held-out indices and test
+/// accuracy — the unit the fitted-model artifact (ADR-004) persists
+/// and the apply-only predict path re-scores without refitting.
+#[derive(Clone, Debug)]
+pub struct FoldModel {
+    /// Held-out sample indices this model is scored on.
+    pub test: Vec<usize>,
+    /// Test accuracy of [`FoldModel::fit`] on those samples.
+    pub accuracy: f64,
+    /// The fitted estimator.
+    pub fit: LogregFit,
+}

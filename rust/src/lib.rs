@@ -60,6 +60,17 @@
 //! [`coordinator::run_streaming_decoding`] pumps the chunks through
 //! the worker pool (CLI: `repro decode --stream --chunk-samples N`).
 //!
+//! ## Fitted-model artifacts + serving (ADR-004)
+//!
+//! The expensive stages (clustering, estimator fitting) run once:
+//! [`model::fit_model`] captures the fitted pipeline and
+//! [`model::save_model`] persists it as a checksummed binary `.fcm`
+//! artifact. [`model::FittedModel`] applies it to new data with no
+//! refitting, and [`serve::Server`] keeps loaded models resident
+//! behind a loopback TCP protocol so concurrent clients share one
+//! copy (CLI: `repro fit --save` / `repro predict --model` /
+//! `repro serve --model --port --workers`).
+//!
 //! See `examples/` for full pipelines (decoding, ICA, percolation) and
 //! `rust/src/bench_harness/` for the figure-by-figure reproduction of
 //! the paper's evaluation (plus the sharded-engine scaling sweep and
@@ -81,9 +92,11 @@ pub mod estimators;
 pub mod graph;
 pub mod json;
 pub mod linalg;
+pub mod model;
 pub mod reduce;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod stats;
 pub mod volume;
 
@@ -96,9 +109,13 @@ pub mod prelude {
     pub use crate::error::{Error, Result};
     pub use crate::graph::LatticeGraph;
     pub use crate::linalg::Mat;
+    pub use crate::model::{
+        fit_model, load_model, save_model, FitOptions, FittedModel,
+    };
     pub use crate::reduce::{
         ClusterReduce, Reducer, SparseRandomProjection, StreamingReducer,
     };
+    pub use crate::serve::{ServeClient, ServeOptions, Server};
     pub use crate::volume::{
         FcdReader, FeatureMatrix, Mask, MaskedDataset, SyntheticCube,
     };

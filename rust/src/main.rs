@@ -17,6 +17,15 @@
 //!   [--reservoir R] [--sgd-epochs E]
 //!   [--data STEM]                   #   ... stream an existing .fcd
 //!                                   #   (with <STEM>.labels.json)
+//! repro fit --save model.fcm        # fit once, persist the fitted
+//!   [--config cfg.json]             #   pipeline as a .fcm artifact
+//!   [--sgd-epochs E] [--note S]     #   (ADR-004)
+//! repro predict --model model.fcm   # apply-only re-score of the
+//!                                   #   persisted folds (no refit)
+//! repro serve --model model.fcm     # long-lived loopback decode
+//!   [--port P] [--workers W]        #   server: compress / predict /
+//!   [--cache N] [--max-batch B]     #   model-info over TCP
+//!   [--log PATH] [--config cfg.json]
 //! repro bench-streaming [--quick]   # streaming vs in-memory bench
 //!   [--json PATH]                   #   ... write BENCH_*.json report
 //! repro bench-sharded [--quick]     # sharded bench + JSON report
@@ -36,17 +45,19 @@ use std::process::ExitCode;
 
 use fastclust::bench_harness::{
     fig2, fig3, fig4, fig5, fig6, fig7, load_bench_report,
-    regression_failures, sharded, streaming, write_bench_report,
-    write_csv, Table,
+    regression_failures, sharded, streaming, with_provenance,
+    write_bench_report, write_csv, Table,
 };
 use fastclust::cluster::FastCluster;
-use fastclust::config::ExperimentConfig;
+use fastclust::config::{DataConfig, ExperimentConfig};
 use fastclust::coordinator::{
     run_decoding_pipeline, run_streaming_decoding,
 };
 use fastclust::error::{invalid, Result};
 use fastclust::graph::LatticeGraph;
+use fastclust::model::{fit_model, load_model, save_model, FitOptions};
 use fastclust::runtime::Runtime;
+use fastclust::serve::{ServeOptions, Server};
 use fastclust::volume::{
     save_dataset, MorphometryGenerator, SyntheticCube,
 };
@@ -100,9 +111,29 @@ impl Cli {
         )
     }
 
-    fn usize_flag(&self, name: &str) -> Option<usize> {
-        self.flags.get(name).and_then(|s| s.parse().ok())
+    /// A present-yet-unparseable numeric flag is an error, never a
+    /// silent fallback — a typo must not quietly change behavior.
+    fn usize_flag_strict(&self, name: &str) -> Result<Option<usize>> {
+        match self.flags.get(name) {
+            None => Ok(None),
+            Some(s) => s.parse().map(Some).map_err(|_| {
+                invalid(format!(
+                    "--{name} needs a non-negative integer, got '{s}'"
+                ))
+            }),
+        }
     }
+}
+
+/// Morphometry generator honoring the config's smoothness/noise
+/// knobs, so the values a `.fcm` artifact records as provenance are
+/// the values actually used (`effect` stays at the generator default
+/// — it is not part of `DataConfig`, so artifacts never claim it).
+fn morphometry(dc: &DataConfig) -> MorphometryGenerator {
+    let mut g = MorphometryGenerator::new(dc.dims);
+    g.fwhm = dc.fwhm;
+    g.noise_sigma = dc.noise_sigma;
+    g
 }
 
 fn scaled(dims: [usize; 3], s: usize) -> [usize; 3] {
@@ -206,22 +237,27 @@ fn run_sharded(cli: &Cli) -> Result<()> {
     emit(&sharded::table(&rows), &cli.out_dir(), "sharded_scaling")
 }
 
+/// `--config FILE` or defaults (shared by decode / fit / serve).
+fn load_config(cli: &Cli) -> Result<ExperimentConfig> {
+    match cli.flags.get("config") {
+        Some(path) => ExperimentConfig::from_file(&PathBuf::from(path)),
+        None => Ok(ExperimentConfig::default()),
+    }
+}
+
 fn decode(cli: &Cli) -> Result<()> {
-    let mut cfg = match cli.flags.get("config") {
-        Some(path) => ExperimentConfig::from_file(&PathBuf::from(path))?,
-        None => ExperimentConfig::default(),
-    };
+    let mut cfg = load_config(cli)?;
     // CLI overrides for the streaming mode (ADR-003)
     if cli.flags.contains_key("stream") {
         cfg.stream.enabled = true;
     }
-    if let Some(c) = cli.usize_flag("chunk-samples") {
+    if let Some(c) = cli.usize_flag_strict("chunk-samples")? {
         cfg.stream.chunk_samples = c.max(1);
     }
-    if let Some(r) = cli.usize_flag("reservoir") {
+    if let Some(r) = cli.usize_flag_strict("reservoir")? {
         cfg.stream.reservoir = r;
     }
-    if let Some(e) = cli.usize_flag("sgd-epochs") {
+    if let Some(e) = cli.usize_flag_strict("sgd-epochs")? {
         cfg.stream.sgd_epochs = e;
     }
     cfg.validate()?;
@@ -233,7 +269,7 @@ fn decode(cli: &Cli) -> Result<()> {
         }
         return decode_data(&cfg, &PathBuf::from(stem));
     }
-    let (ds, labels) = MorphometryGenerator::new(cfg.data.dims)
+    let (ds, labels) = morphometry(&cfg.data)
         .generate(cfg.data.n_samples, cfg.data.seed);
     println!(
         "cohort: p={} n={} method={} k={}{}",
@@ -364,8 +400,155 @@ fn run_stream_and_print(
     Ok(())
 }
 
+/// `repro fit --save model.fcm`: run the fit once, persist the whole
+/// fitted pipeline as a `.fcm` artifact (ADR-004).
+fn fit_cmd(cli: &Cli) -> Result<()> {
+    let cfg = load_config(cli)?;
+    cfg.validate()?;
+    let save = cli
+        .flags
+        .get("save")
+        .ok_or_else(|| invalid("fit needs --save PATH"))?;
+    let (ds, labels) = morphometry(&cfg.data)
+        .generate(cfg.data.n_samples, cfg.data.seed);
+    let opts = FitOptions {
+        sgd_epochs: cli
+            .usize_flag_strict("sgd-epochs")?
+            .unwrap_or(cfg.stream.sgd_epochs),
+        sgd_chunk: cfg.stream.chunk_samples,
+        note: cli.flags.get("note").cloned().unwrap_or_default(),
+    };
+    println!(
+        "fit: p={} n={} method={} k={}{}",
+        ds.p(),
+        ds.n(),
+        cfg.reduce.method.name(),
+        cfg.reduce.resolve_k(ds.p()),
+        if opts.sgd_epochs > 0 { " [sgd]" } else { "" }
+    );
+    let model = fit_model(
+        &ds,
+        &labels,
+        &cfg.reduce,
+        &cfg.estimator,
+        &cfg.data,
+        &opts,
+    )?;
+    let accs: Vec<f64> = model.folds.iter().map(|f| f.accuracy).collect();
+    let mean = fastclust::stats::mean(&accs);
+    let std = fastclust::stats::variance(&accs).sqrt();
+    println!("accuracy = {mean:.3} ± {std:.3}  ({} folds)", accs.len());
+    let path = PathBuf::from(save);
+    save_model(&path, &model)?;
+    println!(
+        "[fcm] {} (k={}, {} fold estimators, {} voxels)",
+        path.display(),
+        model.header.k,
+        model.folds.len(),
+        model.header.p
+    );
+    Ok(())
+}
+
+/// `repro predict --model model.fcm`: load the artifact, regenerate
+/// its training cohort from provenance, and re-score the persisted
+/// fold estimators — apply-only, nothing is refitted. Reproduces the
+/// in-memory `decode` fold accuracies exactly.
+fn predict_cmd(cli: &Cli) -> Result<()> {
+    let path = cli
+        .flags
+        .get("model")
+        .ok_or_else(|| invalid("predict needs --model PATH"))?;
+    let model = load_model(&PathBuf::from(path))?;
+    let h = &model.header;
+    println!(
+        "model: method={} p={} k={} ({} folds, {} backend)",
+        h.method.name(),
+        h.p,
+        h.k,
+        model.folds.len(),
+        if h.sgd_epochs > 0 { "sgd" } else { "batch" }
+    );
+    let dc = DataConfig {
+        dims: h.data_dims,
+        n_samples: h.data_n_samples,
+        fwhm: h.data_fwhm,
+        noise_sigma: h.data_noise_sigma,
+        seed: h.data_seed,
+    };
+    let (ds, labels) =
+        morphometry(&dc).generate(dc.n_samples, dc.seed);
+    if ds.mask().voxels != model.voxels {
+        return Err(invalid(
+            "regenerated cohort geometry differs from the model's \
+             stored mask (provenance drift)",
+        ));
+    }
+    let accs = model.predict_fold_accuracies(&ds, &labels)?;
+    let mean = fastclust::stats::mean(&accs);
+    let std = fastclust::stats::variance(&accs).sqrt();
+    println!("accuracy = {mean:.3} ± {std:.3}  (apply-only, no refit)");
+    let stored: Vec<f64> =
+        model.folds.iter().map(|f| f.accuracy).collect();
+    if accs == stored {
+        println!("fold accuracies match fit-time values exactly");
+        Ok(())
+    } else {
+        Err(invalid(
+            "re-scored fold accuracies differ from the fit-time \
+             values stored in the artifact",
+        ))
+    }
+}
+
+/// `repro serve --model model.fcm`: run the loopback decode server in
+/// the foreground until the process is signalled.
+fn serve_cmd(cli: &Cli) -> Result<()> {
+    let cfg = load_config(cli)?;
+    cfg.validate()?;
+    let model = cli
+        .flags
+        .get("model")
+        .ok_or_else(|| invalid("serve needs --model PATH"))?;
+    let mut opts = ServeOptions::new(model);
+    let port = cli
+        .usize_flag_strict("port")?
+        .unwrap_or(cfg.serve.port as usize);
+    if port > u16::MAX as usize {
+        return Err(invalid("--port must fit in 16 bits"));
+    }
+    opts.port = port as u16;
+    opts.workers = cli
+        .usize_flag_strict("workers")?
+        .unwrap_or(cfg.serve.workers);
+    opts.cache_capacity = cli
+        .usize_flag_strict("cache")?
+        .unwrap_or(cfg.serve.cache_capacity);
+    opts.max_batch = cli
+        .usize_flag_strict("max-batch")?
+        .unwrap_or(cfg.serve.max_batch);
+    // CLI overrides obey the same invariants as the config file
+    if opts.cache_capacity == 0 {
+        return Err(invalid("--cache must be >= 1"));
+    }
+    if opts.max_batch == 0 {
+        return Err(invalid("--max-batch must be >= 1"));
+    }
+    opts.log_path = cli.flags.get("log").map(PathBuf::from);
+    let handle = Server::start(opts)?;
+    println!("serving on {} (Ctrl-C to stop)", handle.addr());
+    let stats = handle.wait()?;
+    println!(
+        "served {} requests over {} connections ({} batches, \
+         {} errors)",
+        stats.requests, stats.connections, stats.batches, stats.errors
+    );
+    Ok(())
+}
+
 fn bench_streaming_cmd(cli: &Cli) -> Result<()> {
-    let cfg = if cli.flags.contains_key("quick") {
+    let quick = cli.flags.contains_key("quick");
+    let cfg = if quick {
         streaming::StreamingBenchConfig::quick()
     } else {
         streaming::StreamingBenchConfig::default()
@@ -374,7 +557,14 @@ fn bench_streaming_cmd(cli: &Cli) -> Result<()> {
     streaming::table(&r).print();
     streaming::check_gates(&r)?;
     if let Some(path) = cli.flags.get("json") {
-        let rep = streaming::report_json(&r);
+        let rep = with_provenance(
+            streaming::report_json(&r),
+            if quick {
+                "recorded by `repro bench-streaming --quick`"
+            } else {
+                "recorded by `repro bench-streaming`"
+            },
+        );
         write_bench_report(&PathBuf::from(path), &rep)?;
         println!("[json] {path}");
     }
@@ -382,8 +572,9 @@ fn bench_streaming_cmd(cli: &Cli) -> Result<()> {
 }
 
 fn bench_sharded_cmd(cli: &Cli) -> Result<()> {
+    let quick = cli.flags.contains_key("quick");
     let mut cfg = sharded::ShardedConfig::default();
-    if cli.flags.contains_key("quick") {
+    if quick {
         cfg.dims = [12, 12, 10];
         cfg.n_subjects = 8;
         cfg.n_contrasts = 4;
@@ -394,7 +585,14 @@ fn bench_sharded_cmd(cli: &Cli) -> Result<()> {
     sharded::table(&rows).print();
     sharded::check_gates(&rows)?;
     if let Some(path) = cli.flags.get("json") {
-        let rep = sharded::report_json(&rows);
+        let rep = with_provenance(
+            sharded::report_json(&rows),
+            if quick {
+                "recorded by `repro bench-sharded --quick`"
+            } else {
+                "recorded by `repro bench-sharded`"
+            },
+        );
         write_bench_report(&PathBuf::from(path), &rep)?;
         println!("[json] {path}");
     }
@@ -469,6 +667,9 @@ fn dispatch(cli: &Cli) -> Result<()> {
         }
         "sharded" => run_sharded(cli),
         "decode" => decode(cli),
+        "fit" => fit_cmd(cli),
+        "predict" => predict_cmd(cli),
+        "serve" => serve_cmd(cli),
         "bench-streaming" => bench_streaming_cmd(cli),
         "bench-sharded" => bench_sharded_cmd(cli),
         "bench-check" => bench_check(cli),
@@ -481,10 +682,12 @@ fn dispatch(cli: &Cli) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: repro <fig1..fig7|all|sharded|decode|\
-bench-streaming|bench-sharded|bench-check|runtime-check> [--scale S] \
-[--seed N] [--out DIR] [--config FILE] [--stream] [--chunk-samples N] \
-[--reservoir R] [--sgd-epochs E] [--data STEM] [--quick] \
+const USAGE: &str = "usage: repro <fig1..fig7|all|sharded|decode|fit|\
+predict|serve|bench-streaming|bench-sharded|bench-check|runtime-check> \
+[--scale S] [--seed N] [--out DIR] [--config FILE] [--stream] \
+[--chunk-samples N] [--reservoir R] [--sgd-epochs E] [--data STEM] \
+[--save MODEL.fcm] [--model MODEL.fcm] [--note S] [--port P] \
+[--workers W] [--cache N] [--max-batch B] [--log PATH] [--quick] \
 [--json PATH] [--current A --baseline B --factor F]";
 
 fn main() -> ExitCode {

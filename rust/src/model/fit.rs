@@ -1,0 +1,265 @@
+//! Fitting a persistable model (ADR-004): the same CV decoding
+//! workflow as [`crate::coordinator::run_decoding_pipeline`], but
+//! every fitted piece — labels, reduction operator, per-fold
+//! estimator — is captured into a [`FittedModel`] instead of being
+//! discarded after scoring.
+//!
+//! Equivalence contract: the fold split seed, the reduction
+//! arithmetic and the solver configuration are shared with the
+//! pipeline, so [`fit_model`]'s fold accuracies are bit-identical to
+//! [`crate::coordinator::DecodingReport::fold_accuracies`] for the
+//! batch backend, and to the streaming pipeline's SGD estimator for
+//! `sgd_epochs > 0`. The `model_roundtrip` integration suite pins
+//! both.
+
+use super::{FittedModel, ModelHeader, ReductionOp};
+use crate::config::{
+    DataConfig, EstimatorConfig, Method, ReduceConfig,
+};
+use crate::coordinator::{make_clusterer, make_reducer};
+use crate::error::{invalid, Result};
+use crate::estimators::cv::stratified_kfold;
+use crate::estimators::{
+    FoldModel, LogisticRegression, LogregBackend, SgdLogisticRegression,
+};
+use crate::graph::LatticeGraph;
+use crate::reduce::Reducer;
+use crate::volume::MaskedDataset;
+
+/// The CV split seed shared with `coordinator::pipeline::run_cv_folds`
+/// — the constant that makes fit/decode/predict folds identical.
+const FOLD_SEED: u64 = 0xF01D;
+
+/// Estimator-backend knobs of a model fit.
+#[derive(Clone, Debug)]
+pub struct FitOptions {
+    /// SGD passes per fold; `0` = the exact batch solver.
+    pub sgd_epochs: usize,
+    /// Sample-block size of the SGD partial-fit path.
+    pub sgd_chunk: usize,
+    /// Free-form provenance note stored in the artifact.
+    pub note: String,
+}
+
+impl Default for FitOptions {
+    fn default() -> Self {
+        FitOptions { sgd_epochs: 0, sgd_chunk: 32, note: String::new() }
+    }
+}
+
+/// Fit the full decoding pipeline on a cohort and capture it as a
+/// persistable [`FittedModel`]. `data_cfg` is recorded as provenance
+/// so `repro predict` can regenerate the cohort deterministically.
+pub fn fit_model(
+    ds: &MaskedDataset,
+    labels01: &[u8],
+    reduce_cfg: &ReduceConfig,
+    est_cfg: &EstimatorConfig,
+    data_cfg: &DataConfig,
+    opts: &FitOptions,
+) -> Result<FittedModel> {
+    if labels01.len() != ds.n() {
+        return Err(invalid("labels must match sample count"));
+    }
+    let method = reduce_cfg.method;
+    if matches!(method, Method::None) {
+        return Err(invalid(
+            "a fitted-model artifact needs a compression method \
+             (raw voxels have no reduction operator to persist)",
+        ));
+    }
+    let p = ds.p();
+    let k = reduce_cfg.resolve_k(p);
+
+    // ---- stage 1: learn the compression (label-free, as in Fig 6)
+    let graph = LatticeGraph::from_mask(ds.mask());
+    let labels = match make_clusterer(method, reduce_cfg.shards) {
+        None => None,
+        Some(c) => Some(c.fit(ds.data(), &graph, k, reduce_cfg.seed)?),
+    };
+    let reduction = match &labels {
+        Some(l) => {
+            ReductionOp::Cluster { k: l.k, labels: l.labels.clone() }
+        }
+        None => ReductionOp::RandomProjection {
+            p,
+            k,
+            seed: reduce_cfg.seed,
+        },
+    };
+    let reducer =
+        make_reducer(method, labels.as_ref(), p, k, reduce_cfg.seed)?
+            .ok_or_else(|| invalid("model fit needs a reducer"))?;
+    // the artifact's k is the operator's actual output arity (the
+    // clusterers can merge past the request by a few clusters)
+    let k = reducer.k();
+
+    // ---- stage 2: reduce once, sample-major for the estimator
+    let xs = reducer.reduce(ds.data()).transpose(); // (n, k)
+    let y: Vec<f32> = labels01.iter().map(|&l| l as f32).collect();
+
+    // ---- stage 3: per-fold estimators, fits kept
+    let folds = stratified_kfold(labels01, est_cfg.cv_folds, FOLD_SEED);
+    let mut fold_models = Vec::with_capacity(folds.len());
+    for fold in &folds {
+        let xtr = xs.select_rows(&fold.train);
+        let ytr: Vec<f32> = fold.train.iter().map(|&i| y[i]).collect();
+        let xte = xs.select_rows(&fold.test);
+        let yte: Vec<f32> = fold.test.iter().map(|&i| y[i]).collect();
+        let fit = if opts.sgd_epochs > 0 {
+            // mirror coordinator::stream::run_cv_folds_sgd exactly
+            let sgd = SgdLogisticRegression {
+                lambda: est_cfg.lambda,
+                ..Default::default()
+            };
+            let chunk = opts.sgd_chunk.max(1);
+            let mut st = sgd.init(xs.cols);
+            for _ in 0..opts.sgd_epochs.max(1) {
+                let mut r0 = 0usize;
+                while r0 < xtr.rows {
+                    let r1 = (r0 + chunk).min(xtr.rows);
+                    let xc = xtr.row_block(r0, r1);
+                    sgd.partial_fit(&mut st, &xc, &ytr[r0..r1])?;
+                    r0 = r1;
+                }
+            }
+            sgd.to_fit(&st)
+        } else {
+            let lr = LogisticRegression {
+                lambda: est_cfg.lambda,
+                tol: est_cfg.tol,
+                max_iter: est_cfg.max_iter,
+                backend: LogregBackend::Native,
+            };
+            lr.fit(&xtr, &ytr)?
+        };
+        let accuracy = LogisticRegression::accuracy(&fit, &xte, &yte);
+        fold_models.push(FoldModel {
+            test: fold.test.clone(),
+            accuracy,
+            fit,
+        });
+    }
+
+    let header = ModelHeader {
+        method,
+        k,
+        p,
+        n: ds.n(),
+        reduce_seed: reduce_cfg.seed,
+        shards: reduce_cfg.shards,
+        lambda: est_cfg.lambda,
+        tol: est_cfg.tol,
+        max_iter: est_cfg.max_iter,
+        cv_folds: est_cfg.cv_folds,
+        sgd_epochs: opts.sgd_epochs,
+        sgd_chunk: opts.sgd_chunk,
+        data_dims: data_cfg.dims,
+        data_n_samples: data_cfg.n_samples,
+        data_fwhm: data_cfg.fwhm,
+        data_noise_sigma: data_cfg.noise_sigma,
+        data_seed: data_cfg.seed,
+        note: opts.note.clone(),
+    };
+    let model = FittedModel {
+        header,
+        mask_dims: ds.mask().dims,
+        voxels: ds.mask().voxels.clone(),
+        reduction,
+        folds: fold_models,
+    };
+    model.validate()?;
+    Ok(model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::run_decoding_pipeline;
+    use crate::volume::MorphometryGenerator;
+
+    fn cohort() -> (MaskedDataset, Vec<u8>, DataConfig) {
+        let dc = DataConfig {
+            dims: [10, 11, 9],
+            n_samples: 36,
+            seed: 5,
+            ..Default::default()
+        };
+        let (ds, y) =
+            MorphometryGenerator::new(dc.dims).generate(dc.n_samples, dc.seed);
+        (ds, y, dc)
+    }
+
+    #[test]
+    fn fit_matches_pipeline_fold_accuracies() {
+        let (ds, y, dc) = cohort();
+        let reduce = ReduceConfig {
+            method: Method::Fast,
+            ratio: 10,
+            ..Default::default()
+        };
+        let est = EstimatorConfig {
+            cv_folds: 4,
+            max_iter: 120,
+            ..Default::default()
+        };
+        let model = fit_model(
+            &ds,
+            &y,
+            &reduce,
+            &est,
+            &dc,
+            &FitOptions::default(),
+        )
+        .unwrap();
+        let rep = run_decoding_pipeline(&ds, &y, &reduce, &est).unwrap();
+        let got: Vec<f64> =
+            model.folds.iter().map(|f| f.accuracy).collect();
+        assert_eq!(got, rep.fold_accuracies);
+        // the apply-only re-score is bit-identical too
+        let again = model.predict_fold_accuracies(&ds, &y).unwrap();
+        assert_eq!(again, rep.fold_accuracies);
+    }
+
+    #[test]
+    fn raw_method_rejected() {
+        let (ds, y, dc) = cohort();
+        let reduce =
+            ReduceConfig { method: Method::None, ..Default::default() };
+        let est = EstimatorConfig { cv_folds: 3, ..Default::default() };
+        assert!(fit_model(
+            &ds,
+            &y,
+            &reduce,
+            &est,
+            &dc,
+            &FitOptions::default()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn sgd_backend_records_provenance() {
+        let (ds, y, dc) = cohort();
+        let reduce = ReduceConfig {
+            method: Method::Fast,
+            ratio: 12,
+            ..Default::default()
+        };
+        let est = EstimatorConfig { cv_folds: 3, ..Default::default() };
+        let opts = FitOptions {
+            sgd_epochs: 5,
+            sgd_chunk: 8,
+            note: "sgd test".into(),
+        };
+        let model =
+            fit_model(&ds, &y, &reduce, &est, &dc, &opts).unwrap();
+        assert_eq!(model.header.sgd_epochs, 5);
+        assert_eq!(model.header.note, "sgd test");
+        // SGD accuracies re-score identically through the apply path
+        let again = model.predict_fold_accuracies(&ds, &y).unwrap();
+        let stored: Vec<f64> =
+            model.folds.iter().map(|f| f.accuracy).collect();
+        assert_eq!(again, stored);
+    }
+}

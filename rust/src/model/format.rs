@@ -1,0 +1,619 @@
+//! The versioned binary `.fcm` (fastclust model) artifact format —
+//! byte-level layout, checksums and (de)serialization (ADR-004).
+//!
+//! # Layout (all integers little-endian, no padding)
+//!
+//! ```text
+//! magic    8 bytes   b"FCMODEL1" (trailing byte = format version)
+//! sections, in fixed order: HEAD, MASK, REDU, FOLD, "END "
+//!   tag    4 bytes   ASCII section tag
+//!   len    u64       payload length in bytes
+//!   payload          len bytes (see per-section layout below)
+//!   crc    u32       CRC-32 (IEEE) of the payload bytes
+//! ```
+//!
+//! Unknown sections between FOLD and "END " are skipped on read (their
+//! checksum is still verified), so the format can grow without
+//! breaking old readers. Saving a loaded model reproduces the file
+//! byte-for-byte — the golden-fixture suite pins this.
+//!
+//! Per-section payloads (`str` = `u32` byte length + UTF-8 bytes):
+//!
+//! * `HEAD` — provenance: method `str`, `k` `u32`, `p` `u32`,
+//!   `n` `u32`, `reduce_seed` `u64`, `shards` `u32`, `lambda` `f64`,
+//!   `tol` `f64`, `max_iter` `u32`, `cv_folds` `u32`,
+//!   `sgd_epochs` `u32`, `sgd_chunk` `u32`, `data_dims` `3×u32`,
+//!   `data_n_samples` `u32`, `data_fwhm` `f64`,
+//!   `data_noise_sigma` `f64`, `data_seed` `u64`, note `str`.
+//! * `MASK` — geometry: `dims` `3×u32`, `p` `u32`, `voxels` `p×u32`
+//!   (full-grid linear indices, ascending).
+//! * `REDU` — the reduction operator: `kind` `u8`
+//!   (`0` = cluster labels, `1` = sparse random projection), then
+//!   kind 0: `k` `u32`, `p` `u32`, `labels` `p×u32`;
+//!   kind 1: `p` `u32`, `k` `u32`, `seed` `u64`.
+//! * `FOLD` — per-CV-fold estimators: `n_folds` `u32`, then per fold
+//!   `accuracy` `f64`, `loss` `f64`, `grad_norm` `f64`, `iters` `u64`,
+//!   `evals` `u64`, `b` `f32`, `k` `u32`, `w` `k×f32`,
+//!   `n_test` `u32`, `test` `n_test×u32`.
+//! * `"END "` — empty payload; marks a complete file.
+
+use std::fs;
+use std::io::{BufWriter, Read, Write};
+use std::path::Path;
+
+use super::{FittedModel, ModelHeader, ReductionOp};
+use crate::config::Method;
+use crate::error::{invalid, Result};
+use crate::estimators::{FoldModel, LogregFit};
+
+/// File magic; the trailing byte is the format version.
+pub const FCM_MAGIC: [u8; 8] = *b"FCMODEL1";
+
+/// Largest section payload a reader will accept (corruption guard).
+const MAX_SECTION_BYTES: u64 = 1 << 30;
+
+const TAG_HEAD: [u8; 4] = *b"HEAD";
+const TAG_MASK: [u8; 4] = *b"MASK";
+const TAG_REDU: [u8; 4] = *b"REDU";
+const TAG_FOLD: [u8; 4] = *b"FOLD";
+const TAG_END: [u8; 4] = *b"END ";
+
+/// CRC-32 (IEEE 802.3, polynomial `0xEDB88320`), bitwise — matches
+/// zlib's `crc32`, which is how the committed golden fixtures were
+/// produced.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc: u32 = 0xFFFF_FFFF;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = 0u32.wrapping_sub(crc & 1);
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+// ---------------------------------------------------------------- wire
+
+/// Append-only little-endian payload builder.
+struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    fn new() -> Self {
+        ByteWriter { buf: Vec::new() }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn usize32(&mut self, v: usize) -> Result<()> {
+        u32::try_from(v)
+            .map(|v| self.u32(v))
+            .map_err(|_| invalid("value exceeds u32 on-disk field"))
+    }
+}
+
+/// Cursor over a section payload with bounds-checked reads.
+struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(invalid("fcm section payload truncated"));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(f64::from_le_bytes(a))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let b = self.take(len)?;
+        String::from_utf8(b.to_vec())
+            .map_err(|_| invalid("fcm string field is not UTF-8"))
+    }
+
+    fn len32(&mut self) -> Result<usize> {
+        Ok(self.u32()? as usize)
+    }
+
+    /// Unconsumed payload bytes — the honest upper bound for
+    /// pre-allocations driven by on-disk count fields (a corrupt
+    /// count must surface as a truncation error, not a huge
+    /// `Vec::with_capacity` that aborts the process).
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(invalid(format!(
+                "fcm section has {} trailing bytes",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------- section codecs
+
+fn encode_head(h: &ModelHeader) -> Result<Vec<u8>> {
+    let mut w = ByteWriter::new();
+    w.str(h.method.name());
+    w.usize32(h.k)?;
+    w.usize32(h.p)?;
+    w.usize32(h.n)?;
+    w.u64(h.reduce_seed);
+    w.usize32(h.shards)?;
+    w.f64(h.lambda);
+    w.f64(h.tol);
+    w.usize32(h.max_iter)?;
+    w.usize32(h.cv_folds)?;
+    w.usize32(h.sgd_epochs)?;
+    w.usize32(h.sgd_chunk)?;
+    for &d in &h.data_dims {
+        w.usize32(d)?;
+    }
+    w.usize32(h.data_n_samples)?;
+    w.f64(h.data_fwhm);
+    w.f64(h.data_noise_sigma);
+    w.u64(h.data_seed);
+    w.str(&h.note);
+    Ok(w.buf)
+}
+
+fn decode_head(buf: &[u8]) -> Result<ModelHeader> {
+    let mut r = ByteReader::new(buf);
+    let method = Method::parse(&r.str()?)?;
+    let k = r.len32()?;
+    let p = r.len32()?;
+    let n = r.len32()?;
+    let reduce_seed = r.u64()?;
+    let shards = r.len32()?;
+    let lambda = r.f64()?;
+    let tol = r.f64()?;
+    let max_iter = r.len32()?;
+    let cv_folds = r.len32()?;
+    let sgd_epochs = r.len32()?;
+    let sgd_chunk = r.len32()?;
+    let mut data_dims = [0usize; 3];
+    for d in &mut data_dims {
+        *d = r.len32()?;
+    }
+    let data_n_samples = r.len32()?;
+    let data_fwhm = r.f64()?;
+    let data_noise_sigma = r.f64()?;
+    let data_seed = r.u64()?;
+    let note = r.str()?;
+    r.finish()?;
+    Ok(ModelHeader {
+        method,
+        k,
+        p,
+        n,
+        reduce_seed,
+        shards,
+        lambda,
+        tol,
+        max_iter,
+        cv_folds,
+        sgd_epochs,
+        sgd_chunk,
+        data_dims,
+        data_n_samples,
+        data_fwhm,
+        data_noise_sigma,
+        data_seed,
+        note,
+    })
+}
+
+fn encode_mask(dims: [usize; 3], voxels: &[u32]) -> Result<Vec<u8>> {
+    let mut w = ByteWriter::new();
+    for &d in &dims {
+        w.usize32(d)?;
+    }
+    w.usize32(voxels.len())?;
+    for &v in voxels {
+        w.u32(v);
+    }
+    Ok(w.buf)
+}
+
+fn decode_mask(buf: &[u8]) -> Result<([usize; 3], Vec<u32>)> {
+    let mut r = ByteReader::new(buf);
+    let mut dims = [0usize; 3];
+    for d in &mut dims {
+        *d = r.len32()?;
+    }
+    let p = r.len32()?;
+    let mut voxels = Vec::with_capacity(p.min(r.remaining() / 4));
+    for _ in 0..p {
+        voxels.push(r.u32()?);
+    }
+    r.finish()?;
+    Ok((dims, voxels))
+}
+
+fn encode_redu(op: &ReductionOp) -> Result<Vec<u8>> {
+    let mut w = ByteWriter::new();
+    match op {
+        ReductionOp::Cluster { k, labels } => {
+            w.u8(0);
+            w.usize32(*k)?;
+            w.usize32(labels.len())?;
+            for &l in labels {
+                w.u32(l);
+            }
+        }
+        ReductionOp::RandomProjection { p, k, seed } => {
+            w.u8(1);
+            w.usize32(*p)?;
+            w.usize32(*k)?;
+            w.u64(*seed);
+        }
+    }
+    Ok(w.buf)
+}
+
+fn decode_redu(buf: &[u8]) -> Result<ReductionOp> {
+    let mut r = ByteReader::new(buf);
+    let op = match r.u8()? {
+        0 => {
+            let k = r.len32()?;
+            let p = r.len32()?;
+            let mut labels =
+                Vec::with_capacity(p.min(r.remaining() / 4));
+            for _ in 0..p {
+                labels.push(r.u32()?);
+            }
+            ReductionOp::Cluster { k, labels }
+        }
+        1 => {
+            let p = r.len32()?;
+            let k = r.len32()?;
+            let seed = r.u64()?;
+            ReductionOp::RandomProjection { p, k, seed }
+        }
+        other => {
+            return Err(invalid(format!(
+                "unknown reduction kind {other} in fcm"
+            )))
+        }
+    };
+    r.finish()?;
+    Ok(op)
+}
+
+fn encode_folds(folds: &[FoldModel]) -> Result<Vec<u8>> {
+    let mut w = ByteWriter::new();
+    w.usize32(folds.len())?;
+    for f in folds {
+        w.f64(f.accuracy);
+        w.f64(f.fit.loss);
+        w.f64(f.fit.grad_norm);
+        w.u64(f.fit.iters as u64);
+        w.u64(f.fit.evals as u64);
+        w.f32(f.fit.b);
+        w.usize32(f.fit.w.len())?;
+        for &v in &f.fit.w {
+            w.f32(v);
+        }
+        w.usize32(f.test.len())?;
+        for &t in &f.test {
+            w.usize32(t)?;
+        }
+    }
+    Ok(w.buf)
+}
+
+fn decode_folds(buf: &[u8]) -> Result<Vec<FoldModel>> {
+    let mut r = ByteReader::new(buf);
+    let n_folds = r.len32()?;
+    // a fold encodes at least 52 fixed bytes (3×f64 + 2×u64 + f32 +
+    // two u32 counts), which bounds how many can really follow
+    let mut folds = Vec::with_capacity(n_folds.min(r.remaining() / 52));
+    for _ in 0..n_folds {
+        let accuracy = r.f64()?;
+        let loss = r.f64()?;
+        let grad_norm = r.f64()?;
+        let iters = r.u64()? as usize;
+        let evals = r.u64()? as usize;
+        let b = r.f32()?;
+        let k = r.len32()?;
+        let mut wv = Vec::with_capacity(k.min(r.remaining() / 4));
+        for _ in 0..k {
+            wv.push(r.f32()?);
+        }
+        let n_test = r.len32()?;
+        let mut test =
+            Vec::with_capacity(n_test.min(r.remaining() / 4));
+        for _ in 0..n_test {
+            test.push(r.len32()?);
+        }
+        folds.push(FoldModel {
+            test,
+            accuracy,
+            fit: LogregFit { w: wv, b, loss, iters, evals, grad_norm },
+        });
+    }
+    r.finish()?;
+    Ok(folds)
+}
+
+// ------------------------------------------------------------ file io
+
+fn write_section(
+    w: &mut impl Write,
+    tag: [u8; 4],
+    payload: &[u8],
+) -> Result<()> {
+    w.write_all(&tag)?;
+    w.write_all(&(payload.len() as u64).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.write_all(&crc32(payload).to_le_bytes())?;
+    Ok(())
+}
+
+/// Save a fitted model as a `.fcm` file. The writer is buffered and
+/// the output is canonical: saving a loaded model reproduces the
+/// original file byte-for-byte.
+pub fn save_model(path: &Path, model: &FittedModel) -> Result<()> {
+    model.validate()?;
+    let f = fs::File::create(path)?;
+    let mut w = BufWriter::with_capacity(1 << 16, f);
+    w.write_all(&FCM_MAGIC)?;
+    write_section(&mut w, TAG_HEAD, &encode_head(&model.header)?)?;
+    write_section(
+        &mut w,
+        TAG_MASK,
+        &encode_mask(model.mask_dims, &model.voxels)?,
+    )?;
+    write_section(&mut w, TAG_REDU, &encode_redu(&model.reduction)?)?;
+    write_section(&mut w, TAG_FOLD, &encode_folds(&model.folds)?)?;
+    write_section(&mut w, TAG_END, &[])?;
+    w.flush()?;
+    Ok(())
+}
+
+/// One section read: `(tag, payload)`, checksum verified.
+fn read_section(r: &mut impl Read) -> Result<([u8; 4], Vec<u8>)> {
+    let mut tag = [0u8; 4];
+    r.read_exact(&mut tag)?;
+    let mut len8 = [0u8; 8];
+    r.read_exact(&mut len8)?;
+    let len = u64::from_le_bytes(len8);
+    if len > MAX_SECTION_BYTES {
+        return Err(invalid(format!(
+            "fcm section '{}' claims {len} bytes (corrupt?)",
+            String::from_utf8_lossy(&tag)
+        )));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    let mut crc4 = [0u8; 4];
+    r.read_exact(&mut crc4)?;
+    let want = u32::from_le_bytes(crc4);
+    let got = crc32(&payload);
+    if got != want {
+        return Err(invalid(format!(
+            "fcm section '{}' checksum mismatch \
+             (stored {want:#010x}, computed {got:#010x})",
+            String::from_utf8_lossy(&tag)
+        )));
+    }
+    Ok((tag, payload))
+}
+
+fn read_magic(r: &mut impl Read) -> Result<()> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if magic != FCM_MAGIC {
+        return Err(invalid(format!(
+            "not an fcm file (magic {:?})",
+            String::from_utf8_lossy(&magic)
+        )));
+    }
+    Ok(())
+}
+
+/// Parse only the provenance header of a `.fcm` file: reads the magic
+/// and the HEAD section, never the (potentially large) payload
+/// sections — the `.fcm` analogue of
+/// [`crate::volume::read_fcd_header`].
+pub fn read_fcm_header(path: &Path) -> Result<ModelHeader> {
+    let f = fs::File::open(path)?;
+    let mut r = std::io::BufReader::with_capacity(1 << 14, f);
+    read_magic(&mut r)?;
+    let (tag, payload) = read_section(&mut r)?;
+    if tag != TAG_HEAD {
+        return Err(invalid("fcm file does not start with a HEAD section"));
+    }
+    decode_head(&payload)
+}
+
+/// Load a complete model previously written by [`save_model`],
+/// verifying every section checksum and the cross-section shape
+/// invariants.
+pub fn load_model(path: &Path) -> Result<FittedModel> {
+    let f = fs::File::open(path)?;
+    let mut r = std::io::BufReader::with_capacity(1 << 16, f);
+    read_magic(&mut r)?;
+    let (tag, payload) = read_section(&mut r)?;
+    if tag != TAG_HEAD {
+        return Err(invalid("fcm file does not start with a HEAD section"));
+    }
+    let header = decode_head(&payload)?;
+    let mut mask: Option<([usize; 3], Vec<u32>)> = None;
+    let mut reduction: Option<ReductionOp> = None;
+    let mut folds: Option<Vec<FoldModel>> = None;
+    loop {
+        let (tag, payload) = read_section(&mut r)?;
+        match tag {
+            TAG_END => break,
+            TAG_MASK => mask = Some(decode_mask(&payload)?),
+            TAG_REDU => reduction = Some(decode_redu(&payload)?),
+            TAG_FOLD => folds = Some(decode_folds(&payload)?),
+            // forward compatibility: checksum verified, content skipped
+            _ => {}
+        }
+    }
+    let (mask_dims, voxels) =
+        mask.ok_or_else(|| invalid("fcm file has no MASK section"))?;
+    let reduction =
+        reduction.ok_or_else(|| invalid("fcm file has no REDU section"))?;
+    let folds =
+        folds.ok_or_else(|| invalid("fcm file has no FOLD section"))?;
+    let model = FittedModel { header, mask_dims, voxels, reduction, folds };
+    model.validate()?;
+    Ok(model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // the canonical IEEE test vector
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn byte_reader_rejects_truncation_and_trailing() {
+        let mut r = ByteReader::new(&[1, 0, 0, 0]);
+        assert_eq!(r.u32().unwrap(), 1);
+        assert!(r.u32().is_err());
+        let mut r = ByteReader::new(&[1, 0, 0, 0, 9]);
+        r.u32().unwrap();
+        assert!(r.finish().is_err());
+    }
+
+    #[test]
+    fn corrupt_counts_error_instead_of_allocating() {
+        // MASK claiming u32::MAX voxels backed by 4 payload bytes
+        // must fail as truncation, not attempt a 16 GB allocation
+        let mut w = ByteWriter::new();
+        for _ in 0..3 {
+            w.u32(2);
+        }
+        w.u32(u32::MAX);
+        w.u32(7);
+        let err = decode_mask(&w.buf).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+        // FOLD claiming u32::MAX folds with an empty remainder
+        let mut w = ByteWriter::new();
+        w.u32(u32::MAX);
+        assert!(decode_folds(&w.buf).is_err());
+    }
+
+    #[test]
+    fn head_roundtrips() {
+        let h = ModelHeader {
+            method: Method::Ward,
+            k: 12,
+            p: 345,
+            n: 40,
+            reduce_seed: 7,
+            shards: 2,
+            lambda: 1e-3,
+            tol: 1e-5,
+            max_iter: 500,
+            cv_folds: 10,
+            sgd_epochs: 0,
+            sgd_chunk: 32,
+            data_dims: [10, 12, 9],
+            data_n_samples: 40,
+            data_fwhm: 6.0,
+            data_noise_sigma: 1.0,
+            data_seed: 42,
+            note: "unit test".into(),
+        };
+        let enc = encode_head(&h).unwrap();
+        let back = decode_head(&enc).unwrap();
+        assert_eq!(back.method, Method::Ward);
+        assert_eq!(back.k, 12);
+        assert_eq!(back.p, 345);
+        assert_eq!(back.note, "unit test");
+        assert_eq!(back.data_dims, [10, 12, 9]);
+        // canonical: re-encoding is byte-identical
+        assert_eq!(encode_head(&back).unwrap(), enc);
+    }
+
+    #[test]
+    fn redu_roundtrips_both_kinds() {
+        let c = ReductionOp::Cluster { k: 2, labels: vec![0, 1, 1, 0] };
+        let enc = encode_redu(&c).unwrap();
+        let back = decode_redu(&enc).unwrap();
+        assert_eq!(encode_redu(&back).unwrap(), enc);
+        let rp = ReductionOp::RandomProjection { p: 9, k: 3, seed: 5 };
+        let enc = encode_redu(&rp).unwrap();
+        match decode_redu(&enc).unwrap() {
+            ReductionOp::RandomProjection { p, k, seed } => {
+                assert_eq!((p, k, seed), (9, 3, 5));
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+}

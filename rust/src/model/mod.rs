@@ -1,0 +1,385 @@
+//! Fitted-model artifacts (ADR-004): persist a fitted decoding
+//! pipeline — cluster labels, reduction operator, per-fold estimator
+//! weights, mask geometry and provenance — as a versioned binary
+//! `.fcm` file, and apply it to new data without refitting anything.
+//!
+//! The paper's economics only pay off when the expensive part
+//! (clustering + estimator fitting) happens once and the cheap part
+//! (compress + predict) happens per request; ReNA and compressed
+//! online dictionary learning both treat the fitted compressor as a
+//! reusable artifact. This module is that artifact:
+//!
+//! * [`fit_model`] runs the same CV decoding workflow as
+//!   [`crate::coordinator::run_decoding_pipeline`] but keeps every
+//!   fitted piece ([`FittedModel`]);
+//! * [`save_model`] / [`load_model`] / [`read_fcm_header`] move it
+//!   through the checksummed `.fcm` format ([`format`]);
+//! * the apply-only paths ([`FittedModel::compress`],
+//!   [`FittedModel::predict_proba`],
+//!   [`FittedModel::predict_fold_accuracies`]) rebuild the reduction
+//!   operator from the stored labels via
+//!   [`ClusterReduce::from_raw`] and re-score the persisted weights —
+//!   bit-identical to the fit-time numbers, which the
+//!   `model_roundtrip` integration suite asserts across engines and
+//!   estimator backends.
+//!
+//! The long-lived decode server ([`crate::serve`]) is the main
+//! consumer: it keeps loaded models resident and answers
+//! compress/predict requests against them.
+
+pub mod fit;
+pub mod format;
+
+pub use fit::{fit_model, FitOptions};
+pub use format::{crc32, load_model, read_fcm_header, save_model};
+
+use crate::config::Method;
+use crate::error::{invalid, Result};
+use crate::estimators::{FoldModel, LogisticRegression};
+use crate::json::Value;
+use crate::reduce::{ClusterReduce, Reducer, SparseRandomProjection};
+use crate::volume::{FeatureMatrix, Mask, MaskedDataset};
+
+/// Provenance header of a `.fcm` artifact: everything needed to know
+/// where a model came from and to regenerate its training cohort
+/// deterministically (synthetic cohorts are seed-addressed).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelHeader {
+    /// Compression method the pipeline was fitted with.
+    pub method: Method,
+    /// Components after reduction.
+    pub k: usize,
+    /// Masked voxels (input dimensionality).
+    pub p: usize,
+    /// Training samples at fit time.
+    pub n: usize,
+    /// Seed of the clustering / projection fit.
+    pub reduce_seed: u64,
+    /// Shard count used by the sharded engine (0 = auto).
+    pub shards: usize,
+    /// Estimator L2 penalty.
+    pub lambda: f64,
+    /// Estimator gradient tolerance.
+    pub tol: f64,
+    /// Estimator iteration budget.
+    pub max_iter: usize,
+    /// CV folds the estimators were fitted over.
+    pub cv_folds: usize,
+    /// SGD passes per fold; `0` = the batch solver.
+    pub sgd_epochs: usize,
+    /// Sample-block size of the SGD partial-fit path.
+    pub sgd_chunk: usize,
+    /// Training-cohort grid dimensions.
+    pub data_dims: [usize; 3],
+    /// Training-cohort sample count.
+    pub data_n_samples: usize,
+    /// Training-cohort smoothness (FWHM, voxels).
+    pub data_fwhm: f64,
+    /// Training-cohort noise std.
+    pub data_noise_sigma: f64,
+    /// Training-cohort generator seed.
+    pub data_seed: u64,
+    /// Free-form provenance note.
+    pub note: String,
+}
+
+/// The persisted reduction operator — enough state to apply the
+/// fitted compression to new voxel-space data without refitting.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ReductionOp {
+    /// A fitted parcellation: compact cluster labels over the `p`
+    /// masked voxels (counts are recomputed on load).
+    Cluster {
+        /// Number of clusters.
+        k: usize,
+        /// `labels[i] in 0..k` per masked voxel.
+        labels: Vec<u32>,
+    },
+    /// A seed-addressed sparse random projection (regenerated
+    /// deterministically from `(p, k, seed)`).
+    RandomProjection {
+        /// Input dimensionality.
+        p: usize,
+        /// Output dimensionality.
+        k: usize,
+        /// Projection seed.
+        seed: u64,
+    },
+}
+
+/// A fitted decoding pipeline, ready to persist or to serve.
+#[derive(Clone, Debug)]
+pub struct FittedModel {
+    /// Provenance + hyper-parameters.
+    pub header: ModelHeader,
+    /// Mask grid dimensions.
+    pub mask_dims: [usize; 3],
+    /// Full-grid linear indices of the masked voxels.
+    pub voxels: Vec<u32>,
+    /// The fitted compression operator.
+    pub reduction: ReductionOp,
+    /// One fitted estimator per CV fold, with held-out indices and
+    /// fit-time test accuracy.
+    pub folds: Vec<FoldModel>,
+}
+
+impl FittedModel {
+    /// Check the cross-section shape invariants the format relies on.
+    pub fn validate(&self) -> Result<()> {
+        if self.voxels.len() != self.header.p {
+            return Err(invalid(format!(
+                "model mask has {} voxels but header says p={}",
+                self.voxels.len(),
+                self.header.p
+            )));
+        }
+        let (rp, rk) = match &self.reduction {
+            ReductionOp::Cluster { k, labels } => (labels.len(), *k),
+            ReductionOp::RandomProjection { p, k, .. } => (*p, *k),
+        };
+        if rp != self.header.p || rk != self.header.k {
+            return Err(invalid(format!(
+                "reduction operator is ({rp} -> {rk}) but header \
+                 says ({} -> {})",
+                self.header.p, self.header.k
+            )));
+        }
+        if self.folds.is_empty() {
+            return Err(invalid("model has no fitted folds"));
+        }
+        for (i, f) in self.folds.iter().enumerate() {
+            if f.fit.w.len() != self.header.k {
+                return Err(invalid(format!(
+                    "fold {i} has {} weights but k={}",
+                    f.fit.w.len(),
+                    self.header.k
+                )));
+            }
+            if f.test.iter().any(|&t| t >= self.header.n) {
+                return Err(invalid(format!(
+                    "fold {i} test index out of range (n={})",
+                    self.header.n
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Rebuild the mask geometry.
+    pub fn build_mask(&self) -> Result<Mask> {
+        Mask::from_voxels(self.mask_dims, self.voxels.clone())
+    }
+
+    /// Rebuild the reduction operator — apply-only, no refitting.
+    pub fn reducer(&self) -> Result<Box<dyn Reducer + Send + Sync>> {
+        Ok(match &self.reduction {
+            ReductionOp::Cluster { k, labels } => {
+                Box::new(ClusterReduce::from_raw(labels.clone(), *k)?)
+            }
+            ReductionOp::RandomProjection { p, k, seed } => {
+                Box::new(SparseRandomProjection::new(*p, *k, *seed))
+            }
+        })
+    }
+
+    /// Compress a `(c, p)` sample-major block of voxel-space samples
+    /// into `(c, k)` reduced features — the serve `compress` verb.
+    pub fn compress(&self, x: &FeatureMatrix) -> Result<FeatureMatrix> {
+        if x.cols != self.header.p {
+            return Err(invalid(format!(
+                "compress: samples have {} voxels, model expects {}",
+                x.cols, self.header.p
+            )));
+        }
+        let reducer = self.reducer()?;
+        // Reducer works voxel-major: (p, c) in, (k, c) out.
+        Ok(reducer.reduce(&x.transpose()).transpose())
+    }
+
+    /// Ensemble probability of class 1 for a `(c, p)` sample-major
+    /// block: mean of the per-fold estimators' probabilities — the
+    /// serve `predict` verb. Deterministic given the model bytes.
+    pub fn predict_proba(&self, x: &FeatureMatrix) -> Result<Vec<f32>> {
+        let xk = self.compress(x)?;
+        let mut acc = vec![0.0f64; xk.rows];
+        for f in &self.folds {
+            let proba = LogisticRegression::predict_proba(&f.fit, &xk);
+            for (a, &p) in acc.iter_mut().zip(&proba) {
+                *a += p as f64;
+            }
+        }
+        let nf = self.folds.len() as f64;
+        Ok(acc.into_iter().map(|a| (a / nf) as f32).collect())
+    }
+
+    /// Re-score every persisted fold on its held-out samples of a
+    /// cohort — the apply-only path behind `repro predict`. With the
+    /// cohort the model was fitted on, the returned accuracies are
+    /// bit-identical to the fit-time [`FoldModel::accuracy`] values.
+    pub fn predict_fold_accuracies(
+        &self,
+        ds: &MaskedDataset,
+        labels01: &[u8],
+    ) -> Result<Vec<f64>> {
+        if ds.p() != self.header.p {
+            return Err(invalid(format!(
+                "cohort has p={} but model was fitted on p={}",
+                ds.p(),
+                self.header.p
+            )));
+        }
+        if labels01.len() != ds.n() {
+            return Err(invalid("labels must match sample count"));
+        }
+        let reducer = self.reducer()?;
+        let xs = reducer.reduce(ds.data()).transpose(); // (n, k)
+        let y: Vec<f32> = labels01.iter().map(|&l| l as f32).collect();
+        let mut out = Vec::with_capacity(self.folds.len());
+        for f in &self.folds {
+            if f.test.iter().any(|&t| t >= xs.rows) {
+                return Err(invalid(
+                    "fold test index out of range for this cohort",
+                ));
+            }
+            let xte = xs.select_rows(&f.test);
+            let yte: Vec<f32> = f.test.iter().map(|&i| y[i]).collect();
+            out.push(LogisticRegression::accuracy(&f.fit, &xte, &yte));
+        }
+        Ok(out)
+    }
+
+    /// Mean of the persisted fold accuracies.
+    pub fn accuracy(&self) -> f64 {
+        crate::stats::mean(
+            &self.folds.iter().map(|f| f.accuracy).collect::<Vec<_>>(),
+        )
+    }
+
+    /// Machine-readable summary — the serve `model-info` response.
+    pub fn info_json(&self) -> Value {
+        let h = &self.header;
+        Value::obj(vec![
+            ("format", Value::Str("fcm-v1".into())),
+            ("method", Value::Str(h.method.name().into())),
+            ("k", Value::Num(h.k as f64)),
+            ("p", Value::Num(h.p as f64)),
+            ("n", Value::Num(h.n as f64)),
+            ("cv_folds", Value::Num(self.folds.len() as f64)),
+            ("accuracy", Value::Num(self.accuracy())),
+            (
+                "backend",
+                Value::Str(
+                    if h.sgd_epochs > 0 { "sgd" } else { "batch" }.into(),
+                ),
+            ),
+            ("note", Value::Str(h.note.clone())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimators::LogregFit;
+
+    fn tiny_model() -> FittedModel {
+        FittedModel {
+            header: ModelHeader {
+                method: Method::Fast,
+                k: 2,
+                p: 4,
+                n: 6,
+                reduce_seed: 1,
+                shards: 0,
+                lambda: 1e-3,
+                tol: 1e-5,
+                max_iter: 100,
+                cv_folds: 2,
+                sgd_epochs: 0,
+                sgd_chunk: 32,
+                data_dims: [2, 2, 1],
+                data_n_samples: 6,
+                data_fwhm: 6.0,
+                data_noise_sigma: 1.0,
+                data_seed: 42,
+                note: String::new(),
+            },
+            mask_dims: [2, 2, 1],
+            voxels: vec![0, 1, 2, 3],
+            reduction: ReductionOp::Cluster {
+                k: 2,
+                labels: vec![0, 0, 1, 1],
+            },
+            folds: vec![FoldModel {
+                test: vec![0, 1, 2],
+                accuracy: 1.0,
+                fit: LogregFit {
+                    w: vec![1.0, -1.0],
+                    b: 0.0,
+                    loss: 0.1,
+                    iters: 3,
+                    evals: 4,
+                    grad_norm: 1e-6,
+                },
+            }],
+        }
+    }
+
+    #[test]
+    fn validate_catches_shape_drift() {
+        let good = tiny_model();
+        good.validate().unwrap();
+        let mut bad = good.clone();
+        bad.voxels.pop();
+        assert!(bad.validate().is_err());
+        let mut bad = good.clone();
+        bad.folds[0].fit.w.push(0.0);
+        assert!(bad.validate().is_err());
+        let mut bad = good.clone();
+        bad.folds[0].test.push(99);
+        assert!(bad.validate().is_err());
+        let mut bad = good;
+        bad.reduction = ReductionOp::Cluster { k: 3, labels: vec![0; 4] };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn compress_reduces_sample_major_blocks() {
+        let m = tiny_model();
+        // 1 sample, p=4 voxels; clusters {0,1} and {2,3}
+        let x =
+            FeatureMatrix::from_vec(1, 4, vec![1.0, 3.0, 10.0, 30.0])
+                .unwrap();
+        let xk = m.compress(&x).unwrap();
+        assert_eq!(xk.rows, 1);
+        assert_eq!(xk.cols, 2);
+        assert_eq!(xk.row(0), &[2.0, 20.0]);
+        // wrong dimensionality is a protocol error, not a panic
+        let bad = FeatureMatrix::zeros(1, 3);
+        assert!(m.compress(&bad).is_err());
+    }
+
+    #[test]
+    fn predict_proba_is_in_unit_interval() {
+        let m = tiny_model();
+        let x = FeatureMatrix::from_vec(
+            2,
+            4,
+            vec![5.0, 5.0, 0.0, 0.0, 0.0, 0.0, 5.0, 5.0],
+        )
+        .unwrap();
+        let p = m.predict_proba(&x).unwrap();
+        assert_eq!(p.len(), 2);
+        assert!(p.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // w = [1, -1]: cluster-0 mass pushes toward class 1
+        assert!(p[0] > 0.5 && p[1] < 0.5);
+    }
+
+    #[test]
+    fn info_json_carries_summary() {
+        let v = tiny_model().info_json();
+        assert_eq!(v.get("method").unwrap().as_str().unwrap(), "fast");
+        assert_eq!(v.get("k").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(v.get("backend").unwrap().as_str().unwrap(), "batch");
+    }
+}

@@ -10,6 +10,7 @@
 
 use super::Reducer;
 use crate::cluster::{cluster_counts, Labels};
+use crate::error::Result;
 use crate::volume::FeatureMatrix;
 
 /// Cluster-mean compression operator built from a partition.
@@ -33,6 +34,16 @@ impl ClusterReduce {
             inv_counts,
             k: labels.k,
         }
+    }
+
+    /// Rebuild from a persisted raw label vector (the apply-only path
+    /// of the `.fcm` model artifact, ADR-004): validates compactness /
+    /// non-emptiness and recomputes the per-cluster counts, so a
+    /// loaded model reduces new data bit-identically to the operator
+    /// that was fitted — no re-clustering involved.
+    pub fn from_raw(labels: Vec<u32>, k: usize) -> Result<Self> {
+        let labels = Labels::new(labels, k)?;
+        Ok(ClusterReduce::from_labels(&labels))
     }
 
     /// The underlying label vector.

@@ -1,0 +1,192 @@
+//! An LRU cache of loaded `.fcm` models — the piece that lets one
+//! resident model answer every concurrent client instead of each
+//! connection deserializing its own copy (ADR-004 §Serving).
+//!
+//! Deserialization happens *outside* the cache lock, so a cold load
+//! of one model never stalls requests hitting already-resident
+//! models. The trade-off: concurrent cold misses on the *same* model
+//! may each deserialize it (first insert wins, later copies are
+//! dropped) — wasted work bounded by the number of simultaneous
+//! requesters, which beats freezing all traffic for the duration of
+//! a load.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::error::Result;
+use crate::model::{load_model, FittedModel};
+
+struct Entry {
+    model: Arc<FittedModel>,
+    last_used: u64,
+}
+
+struct CacheState {
+    map: HashMap<PathBuf, Entry>,
+    clock: u64,
+    loads: u64,
+}
+
+/// Bounded LRU cache of deserialized models, keyed by path.
+pub struct ModelCache {
+    capacity: usize,
+    state: Mutex<CacheState>,
+}
+
+impl ModelCache {
+    /// Create with room for `capacity` resident models (min 1).
+    pub fn new(capacity: usize) -> Self {
+        ModelCache {
+            capacity: capacity.max(1),
+            state: Mutex::new(CacheState {
+                map: HashMap::new(),
+                clock: 0,
+                loads: 0,
+            }),
+        }
+    }
+
+    /// Resident model count.
+    pub fn len(&self) -> usize {
+        self.state.lock().expect("cache poisoned").map.len()
+    }
+
+    /// Whether the cache holds nothing.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Disk deserializations performed so far (hit-rate accounting).
+    pub fn loads(&self) -> u64 {
+        self.state.lock().expect("cache poisoned").loads
+    }
+
+    /// Fetch a model, deserializing and inserting it on miss; the
+    /// least-recently-used entry is evicted when the cache is full.
+    /// The disk load runs without holding the cache lock (see the
+    /// module docs for the dogpile trade-off).
+    pub fn get_or_load(&self, path: &Path) -> Result<Arc<FittedModel>> {
+        {
+            let mut st = self.state.lock().expect("cache poisoned");
+            st.clock += 1;
+            let stamp = st.clock;
+            if let Some(e) = st.map.get_mut(path) {
+                e.last_used = stamp;
+                return Ok(e.model.clone());
+            }
+        }
+        // cold miss: deserialize with the lock released so requests
+        // against resident models keep flowing
+        let model = Arc::new(load_model(path)?);
+        let mut st = self.state.lock().expect("cache poisoned");
+        st.loads += 1;
+        st.clock += 1;
+        let stamp = st.clock;
+        if let Some(e) = st.map.get_mut(path) {
+            // a concurrent requester loaded it first: keep theirs so
+            // every caller shares one resident copy
+            e.last_used = stamp;
+            return Ok(e.model.clone());
+        }
+        if st.map.len() >= self.capacity {
+            if let Some(oldest) = st
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+            {
+                st.map.remove(&oldest);
+            }
+        }
+        st.map.insert(
+            path.to_path_buf(),
+            Entry { model: model.clone(), last_used: stamp },
+        );
+        Ok(model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{
+        DataConfig, EstimatorConfig, Method, ReduceConfig,
+    };
+    use crate::model::{fit_model, save_model, FitOptions};
+    use crate::volume::MorphometryGenerator;
+
+    /// Fit + save a tiny model under a unique stem; returns the path.
+    fn saved_model(tag: &str, seed: u64) -> PathBuf {
+        let dc = DataConfig {
+            dims: [8, 9, 7],
+            n_samples: 24,
+            seed,
+            ..Default::default()
+        };
+        let (ds, y) =
+            MorphometryGenerator::new(dc.dims).generate(dc.n_samples, seed);
+        let reduce = ReduceConfig {
+            method: Method::Fast,
+            ratio: 10,
+            ..Default::default()
+        };
+        let est = EstimatorConfig {
+            cv_folds: 3,
+            max_iter: 60,
+            ..Default::default()
+        };
+        let model = fit_model(
+            &ds,
+            &y,
+            &reduce,
+            &est,
+            &dc,
+            &FitOptions::default(),
+        )
+        .unwrap();
+        let dir = std::env::temp_dir().join("fastclust_cache_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("{tag}.fcm"));
+        save_model(&path, &model).unwrap();
+        path
+    }
+
+    #[test]
+    fn hit_shares_the_same_arc() {
+        let path = saved_model("hit", 1);
+        let cache = ModelCache::new(2);
+        let a = cache.get_or_load(&path).unwrap();
+        let b = cache.get_or_load(&path).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second get must be a cache hit");
+        assert_eq!(cache.loads(), 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let p1 = saved_model("lru1", 1);
+        let p2 = saved_model("lru2", 2);
+        let p3 = saved_model("lru3", 3);
+        let cache = ModelCache::new(2);
+        cache.get_or_load(&p1).unwrap();
+        cache.get_or_load(&p2).unwrap();
+        cache.get_or_load(&p1).unwrap(); // p1 now most recent
+        cache.get_or_load(&p3).unwrap(); // evicts p2
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.loads(), 3);
+        cache.get_or_load(&p1).unwrap(); // still resident
+        assert_eq!(cache.loads(), 3);
+        cache.get_or_load(&p2).unwrap(); // reload after eviction
+        assert_eq!(cache.loads(), 4);
+    }
+
+    #[test]
+    fn missing_file_is_an_error_not_a_panic() {
+        let cache = ModelCache::new(1);
+        assert!(cache
+            .get_or_load(Path::new("/nonexistent/m.fcm"))
+            .is_err());
+        assert!(cache.is_empty());
+    }
+}

@@ -1,0 +1,111 @@
+//! A small blocking client for the decode server — used by the CLI,
+//! the integration tests and as reference documentation for the wire
+//! protocol ([`super::protocol`]).
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use super::protocol::{
+    read_response, write_request, Request, Response,
+};
+use crate::error::{invalid, Result};
+use crate::json::{self, Value};
+use crate::volume::FeatureMatrix;
+
+/// One TCP connection to a running decode server.
+pub struct ServeClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl ServeClient {
+    /// Connect to a server started by [`super::Server::start`].
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let read_half = stream.try_clone()?;
+        Ok(ServeClient {
+            reader: BufReader::new(read_half),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    fn call(&mut self, rq: &Request) -> Result<Response> {
+        write_request(&mut self.writer, rq)?;
+        self.writer.flush()?;
+        match read_response(&mut self.reader)? {
+            Response::Error(msg) => {
+                Err(invalid(format!("server error: {msg}")))
+            }
+            rs => Ok(rs),
+        }
+    }
+
+    /// Summary of the server's default model, as parsed JSON.
+    pub fn model_info(&mut self) -> Result<Value> {
+        self.model_info_named("")
+    }
+
+    /// Summary of a named model in the server's model directory.
+    pub fn model_info_named(&mut self, model: &str) -> Result<Value> {
+        match self
+            .call(&Request::ModelInfo { model: model.to_string() })?
+        {
+            Response::Info(text) => json::parse(&text),
+            other => {
+                Err(invalid(format!("unexpected response {other:?}")))
+            }
+        }
+    }
+
+    /// Reduce a `(c, p)` sample-major block to `(c, k)` on the
+    /// server's default model.
+    pub fn compress(
+        &mut self,
+        x: &FeatureMatrix,
+    ) -> Result<FeatureMatrix> {
+        match self.call(&Request::Compress {
+            model: String::new(),
+            x: x.clone(),
+        })? {
+            Response::Compressed(xk) => Ok(xk),
+            other => {
+                Err(invalid(format!("unexpected response {other:?}")))
+            }
+        }
+    }
+
+    /// Ensemble class-1 probabilities for a `(c, p)` block on the
+    /// server's default model.
+    pub fn predict(&mut self, x: &FeatureMatrix) -> Result<Vec<f32>> {
+        match self.call(&Request::Predict {
+            model: String::new(),
+            x: x.clone(),
+        })? {
+            Response::Probabilities(p) => Ok(p),
+            other => {
+                Err(invalid(format!("unexpected response {other:?}")))
+            }
+        }
+    }
+
+    /// Write every request back-to-back, then read every response —
+    /// the pipelined pattern the server's per-connection batching is
+    /// built for. Responses come back in request order; request-level
+    /// failures appear as [`Response::Error`] entries rather than
+    /// failing the whole pipeline.
+    pub fn call_pipelined(
+        &mut self,
+        rqs: &[Request],
+    ) -> Result<Vec<Response>> {
+        for rq in rqs {
+            write_request(&mut self.writer, rq)?;
+        }
+        self.writer.flush()?;
+        let mut out = Vec::with_capacity(rqs.len());
+        for _ in rqs {
+            out.push(read_response(&mut self.reader)?);
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,39 @@
+//! The concurrent decode server (ADR-004): a long-lived loopback TCP
+//! service that keeps fitted `.fcm` models resident and answers
+//! compress / predict / model-info requests against them — the first
+//! step from "reproduction script" to "system that answers requests"
+//! on the ROADMAP's path to heavy-traffic serving.
+//!
+//! # Pieces
+//!
+//! * [`protocol`] — the length-prefixed binary wire format;
+//! * [`ModelCache`] — LRU of deserialized models shared across
+//!   connections via `Arc`;
+//! * [`Server`] / [`ServerHandle`] — accept loop, per-connection
+//!   request batching onto the shared
+//!   [`crate::coordinator::WorkerPool`], orderly shutdown;
+//! * [`ServeClient`] — a blocking client (CLI, tests, reference).
+//!
+//! # Guarantees
+//!
+//! * **Bit-equivalence**: a served `predict`/`compress` response is
+//!   byte-identical to the offline apply-only path on the same model
+//!   ([`crate::model::FittedModel::predict_proba`] /
+//!   [`crate::model::FittedModel::compress`]) — asserted by the
+//!   `serve_smoke` integration suite under ≥8 concurrent clients.
+//! * **Order**: responses on a connection arrive in request order,
+//!   so clients may pipeline.
+//! * **Clean teardown**: [`ServerHandle::shutdown`] joins every
+//!   thread (connections, accept, pool workers) before returning.
+
+mod cache;
+mod client;
+pub mod protocol;
+mod server;
+
+pub use cache::ModelCache;
+pub use client::ServeClient;
+pub use protocol::{Request, Response};
+pub use server::{
+    ServeLog, ServeOptions, ServeStats, Server, ServerHandle,
+};

@@ -1,0 +1,402 @@
+//! The wire protocol of the decode server (ADR-004 §Serving): a
+//! length-prefixed binary framing over TCP, little-endian throughout.
+//!
+//! # Request frame
+//!
+//! ```text
+//! opcode  u8    1 = model-info, 2 = compress, 3 = predict
+//! len     u32   body length in bytes
+//! body:
+//!   model str   u32 byte length + UTF-8 model name ("" = the
+//!               server's default model; otherwise resolved inside
+//!               the server's model directory via the LRU cache)
+//!   compress/predict only:
+//!     c  u32    samples in the block
+//!     p  u32    voxels per sample
+//!     x  c*p f32  sample-major payload (row = one sample)
+//! ```
+//!
+//! # Response frame
+//!
+//! ```text
+//! opcode  u8    echoes the request opcode; 0xFF = error
+//! len     u32   body length in bytes
+//! body:
+//!   model-info: UTF-8 JSON ([`crate::model::FittedModel::info_json`])
+//!   compress:   c u32, k u32, x c*k f32 (sample-major)
+//!   predict:    c u32, proba c*f32 (ensemble P(class 1) per sample)
+//!   error:      UTF-8 message
+//! ```
+//!
+//! Requests on one connection are answered in order, so clients may
+//! pipeline frames back-to-back — that is exactly what the server's
+//! per-connection batching exploits.
+
+use std::io::{ErrorKind, Read, Write};
+
+use crate::error::{invalid, Result};
+use crate::volume::FeatureMatrix;
+
+/// Request opcodes on the wire.
+pub const OP_MODEL_INFO: u8 = 1;
+/// Compress a sample block.
+pub const OP_COMPRESS: u8 = 2;
+/// Predict on a sample block.
+pub const OP_PREDICT: u8 = 3;
+/// Response opcode marking a server-side error.
+pub const OP_ERROR: u8 = 0xFF;
+
+/// Largest frame body accepted (corruption / abuse guard).
+const MAX_BODY_BYTES: usize = 1 << 28;
+
+/// One decoded client request.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Summarize a resident model.
+    ModelInfo {
+        /// Model name ("" = server default).
+        model: String,
+    },
+    /// Reduce a `(c, p)` sample-major block to `(c, k)`.
+    Compress {
+        /// Model name ("" = server default).
+        model: String,
+        /// The sample block.
+        x: FeatureMatrix,
+    },
+    /// Ensemble class-1 probability for a `(c, p)` block.
+    Predict {
+        /// Model name ("" = server default).
+        model: String,
+        /// The sample block.
+        x: FeatureMatrix,
+    },
+}
+
+/// One server response.
+#[derive(Clone, Debug)]
+pub enum Response {
+    /// JSON model summary.
+    Info(String),
+    /// `(c, k)` reduced features.
+    Compressed(FeatureMatrix),
+    /// Per-sample ensemble probabilities.
+    Probabilities(Vec<f32>),
+    /// Request-level failure (the connection stays usable unless the
+    /// frame itself was malformed).
+    Error(String),
+}
+
+// ------------------------------------------------------------- encode
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_matrix(buf: &mut Vec<u8>, x: &FeatureMatrix) {
+    buf.extend_from_slice(&(x.rows as u32).to_le_bytes());
+    buf.extend_from_slice(&(x.cols as u32).to_le_bytes());
+    for &v in &x.data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn write_frame(w: &mut impl Write, opcode: u8, body: &[u8]) -> Result<()> {
+    // symmetric with the read-side guard: an oversized body must be
+    // an immediate error, not a wrapped u32 length that desyncs the
+    // stream on the other end
+    if body.len() > MAX_BODY_BYTES {
+        return Err(invalid(format!(
+            "frame body of {} bytes exceeds the protocol limit",
+            body.len()
+        )));
+    }
+    w.write_all(&[opcode])?;
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(body)?;
+    Ok(())
+}
+
+/// Encode + write one request frame (no flush).
+pub fn write_request(w: &mut impl Write, rq: &Request) -> Result<()> {
+    let mut body = Vec::new();
+    let opcode = match rq {
+        Request::ModelInfo { model } => {
+            put_str(&mut body, model);
+            OP_MODEL_INFO
+        }
+        Request::Compress { model, x } => {
+            put_str(&mut body, model);
+            put_matrix(&mut body, x);
+            OP_COMPRESS
+        }
+        Request::Predict { model, x } => {
+            put_str(&mut body, model);
+            put_matrix(&mut body, x);
+            OP_PREDICT
+        }
+    };
+    write_frame(w, opcode, &body)
+}
+
+/// Encode + write one response frame (no flush).
+pub fn write_response(w: &mut impl Write, rs: &Response) -> Result<()> {
+    let mut body = Vec::new();
+    let opcode = match rs {
+        Response::Info(json) => {
+            body.extend_from_slice(json.as_bytes());
+            OP_MODEL_INFO
+        }
+        Response::Compressed(x) => {
+            put_matrix(&mut body, x);
+            OP_COMPRESS
+        }
+        Response::Probabilities(p) => {
+            body.extend_from_slice(&(p.len() as u32).to_le_bytes());
+            for &v in p {
+                body.extend_from_slice(&v.to_le_bytes());
+            }
+            OP_PREDICT
+        }
+        Response::Error(msg) => {
+            body.extend_from_slice(msg.as_bytes());
+            OP_ERROR
+        }
+    };
+    write_frame(w, opcode, &body)
+}
+
+// ------------------------------------------------------------- decode
+
+/// Cursor over a frame body.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(invalid("protocol frame truncated"));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        String::from_utf8(self.take(len)?.to_vec())
+            .map_err(|_| invalid("protocol string is not UTF-8"))
+    }
+
+    fn matrix(&mut self) -> Result<FeatureMatrix> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        let bytes = rows
+            .checked_mul(cols)
+            .and_then(|e| e.checked_mul(4))
+            .filter(|&b| b <= MAX_BODY_BYTES)
+            .ok_or_else(|| invalid("protocol matrix too large"))?;
+        let raw = self.take(bytes)?;
+        let data = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        FeatureMatrix::from_vec(rows, cols, data)
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(invalid("protocol frame has trailing bytes"));
+        }
+        Ok(())
+    }
+}
+
+/// Read one opcode byte. `Ok(None)` = clean EOF (client hung up
+/// between frames). Timeouts (`WouldBlock` / `TimedOut`) surface as
+/// `Err` so the server's idle loop can poll its shutdown flag.
+pub fn read_opcode(r: &mut impl Read) -> std::io::Result<Option<u8>> {
+    let mut op = [0u8; 1];
+    loop {
+        match r.read(&mut op) {
+            Ok(0) => return Ok(None),
+            Ok(_) => return Ok(Some(op[0])),
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+fn read_body(r: &mut impl Read) -> Result<Vec<u8>> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4)?;
+    let len = u32::from_le_bytes(len4) as usize;
+    if len > MAX_BODY_BYTES {
+        return Err(invalid(format!(
+            "protocol frame body of {len} bytes exceeds limit"
+        )));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(body)
+}
+
+/// Read + decode the remainder of a request whose opcode was already
+/// consumed (the server reads opcodes separately to keep its idle
+/// wait interruptible).
+pub fn read_request_body(r: &mut impl Read, opcode: u8) -> Result<Request> {
+    let body = read_body(r)?;
+    let mut c = Cursor { buf: &body, pos: 0 };
+    let rq = match opcode {
+        OP_MODEL_INFO => Request::ModelInfo { model: c.str()? },
+        OP_COMPRESS => {
+            Request::Compress { model: c.str()?, x: c.matrix()? }
+        }
+        OP_PREDICT => Request::Predict { model: c.str()?, x: c.matrix()? },
+        other => {
+            return Err(invalid(format!(
+                "unknown request opcode {other:#04x}"
+            )))
+        }
+    };
+    c.finish()?;
+    Ok(rq)
+}
+
+/// Read one full request frame; `Ok(None)` = clean EOF.
+pub fn read_request(r: &mut impl Read) -> Result<Option<Request>> {
+    match read_opcode(r)? {
+        None => Ok(None),
+        Some(op) => read_request_body(r, op).map(Some),
+    }
+}
+
+/// Read + decode one response frame.
+pub fn read_response(r: &mut impl Read) -> Result<Response> {
+    let mut op = [0u8; 1];
+    r.read_exact(&mut op)?;
+    let body = read_body(r)?;
+    let mut c = Cursor { buf: &body, pos: 0 };
+    let rs = match op[0] {
+        OP_MODEL_INFO => {
+            let json = String::from_utf8(body.clone())
+                .map_err(|_| invalid("info response is not UTF-8"))?;
+            return Ok(Response::Info(json));
+        }
+        OP_COMPRESS => Response::Compressed(c.matrix()?),
+        OP_PREDICT => Response::Probabilities(c.f32s()?),
+        OP_ERROR => {
+            let msg = String::from_utf8_lossy(&body).into_owned();
+            return Ok(Response::Error(msg));
+        }
+        other => {
+            return Err(invalid(format!(
+                "unknown response opcode {other:#04x}"
+            )))
+        }
+    };
+    c.finish()?;
+    Ok(rs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_request(rq: &Request) -> Request {
+        let mut buf = Vec::new();
+        write_request(&mut buf, rq).unwrap();
+        let mut r = &buf[..];
+        let back = read_request(&mut r).unwrap().unwrap();
+        assert!(r.is_empty(), "request frame fully consumed");
+        back
+    }
+
+    #[test]
+    fn request_frames_roundtrip() {
+        match roundtrip_request(&Request::ModelInfo { model: "m".into() })
+        {
+            Request::ModelInfo { model } => assert_eq!(model, "m"),
+            other => panic!("wrong request: {other:?}"),
+        }
+        let x = FeatureMatrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.])
+            .unwrap();
+        match roundtrip_request(&Request::Predict {
+            model: String::new(),
+            x: x.clone(),
+        }) {
+            Request::Predict { model, x: back } => {
+                assert!(model.is_empty());
+                assert_eq!(back.data, x.data);
+                assert_eq!((back.rows, back.cols), (2, 3));
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn response_frames_roundtrip() {
+        let mut buf = Vec::new();
+        write_response(&mut buf, &Response::Probabilities(vec![0.25, 1.0]))
+            .unwrap();
+        write_response(&mut buf, &Response::Error("boom".into())).unwrap();
+        let mut r = &buf[..];
+        match read_response(&mut r).unwrap() {
+            Response::Probabilities(p) => assert_eq!(p, vec![0.25, 1.0]),
+            other => panic!("wrong response: {other:?}"),
+        }
+        match read_response(&mut r).unwrap() {
+            Response::Error(msg) => assert_eq!(msg, "boom"),
+            other => panic!("wrong response: {other:?}"),
+        }
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn eof_between_frames_is_clean() {
+        let mut r: &[u8] = &[];
+        assert!(read_request(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_frames_rejected() {
+        // unknown opcode
+        let mut r: &[u8] = &[9, 0, 0, 0, 0];
+        assert!(read_request(&mut r).is_err());
+        // truncated body
+        let mut buf = Vec::new();
+        write_request(
+            &mut buf,
+            &Request::ModelInfo { model: "x".into() },
+        )
+        .unwrap();
+        buf.pop();
+        let mut r = &buf[..];
+        assert!(read_request(&mut r).is_err());
+        // trailing garbage inside the body
+        let mut body = Vec::new();
+        put_str(&mut body, "");
+        body.push(7);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, OP_MODEL_INFO, &body).unwrap();
+        let mut r = &buf[..];
+        assert!(read_request(&mut r).is_err());
+    }
+}

@@ -1,0 +1,592 @@
+//! The long-lived loopback decode server (ADR-004 §Serving).
+//!
+//! # Architecture
+//!
+//! One accept thread owns the `TcpListener`; each connection gets a
+//! lightweight reader thread that *parses* frames but never computes:
+//! it gathers every request already buffered on the socket into a
+//! batch (bounded by `max_batch`) and submits the batch as ONE job to
+//! the shared [`WorkerPool`] — the same bounded-queue substrate the
+//! offline pipeline runs on, so compute parallelism and backpressure
+//! are pool-wide properties rather than per-connection ones. The
+//! fitted models live in a [`ModelCache`] behind `Arc`s: concurrent
+//! clients share one resident model instead of deserializing one
+//! copy each.
+//!
+//! # Shutdown
+//!
+//! [`ServerHandle::shutdown`] flips the shutdown flag, wakes the
+//! accept loop with a loopback connect, joins the accept thread
+//! (which joins every connection thread first) and only then drains
+//! the worker pool via [`WorkerPool::finish`] — no stranded threads,
+//! which the `serve_smoke` integration suite asserts.
+
+use std::io::{BufReader, BufWriter, ErrorKind, Write};
+use std::net::{Ipv4Addr, SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::cache::ModelCache;
+use super::protocol::{
+    read_opcode, read_request_body, write_response, Request, Response,
+};
+use crate::coordinator::WorkerPool;
+use crate::error::{invalid, Result};
+use crate::model::FittedModel;
+
+/// Idle poll granularity: how often a blocked connection reader
+/// rechecks the shutdown flag.
+const IDLE_TICK: Duration = Duration::from_millis(200);
+
+/// Patience for the body of a frame whose opcode already arrived.
+const BODY_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Server construction knobs.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Path of the default `.fcm` model (loaded eagerly at start).
+    pub model: PathBuf,
+    /// TCP port on 127.0.0.1; `0` = ephemeral (see
+    /// [`ServerHandle::addr`] for the bound address).
+    pub port: u16,
+    /// Worker threads; `0` = available parallelism.
+    pub workers: usize,
+    /// Resident-model budget of the LRU cache.
+    pub cache_capacity: usize,
+    /// Per-connection batch bound (requests per pool job).
+    pub max_batch: usize,
+    /// Optional event-log file (the CI smoke job uploads this).
+    pub log_path: Option<PathBuf>,
+}
+
+impl ServeOptions {
+    /// Defaults around a model path: ephemeral port, auto workers,
+    /// 4-model cache, batches of up to 64 requests, no log.
+    pub fn new(model: impl Into<PathBuf>) -> Self {
+        ServeOptions {
+            model: model.into(),
+            port: 0,
+            workers: 0,
+            cache_capacity: 4,
+            max_batch: 64,
+            log_path: None,
+        }
+    }
+}
+
+/// Monotonic counters, snapshotted into [`ServeStats`].
+#[derive(Default)]
+struct Counters {
+    connections: AtomicU64,
+    requests: AtomicU64,
+    batches: AtomicU64,
+    errors: AtomicU64,
+}
+
+impl Counters {
+    fn snapshot(&self) -> ServeStats {
+        ServeStats {
+            connections: self.connections.load(Ordering::Relaxed),
+            requests: self.requests.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time view of the server's traffic counters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Client connections accepted.
+    pub connections: u64,
+    /// Requests answered (across all batches).
+    pub requests: u64,
+    /// Pool jobs executed (one per connection batch).
+    pub batches: u64,
+    /// Requests answered with a protocol-level error.
+    pub errors: u64,
+}
+
+/// Timestamped, mutex-serialized event log (no-op without a path).
+pub struct ServeLog {
+    t0: Instant,
+    file: Option<Mutex<BufWriter<std::fs::File>>>,
+}
+
+impl ServeLog {
+    fn new(path: Option<&Path>) -> Result<Self> {
+        let file = match path {
+            None => None,
+            Some(p) => {
+                if let Some(parent) = p.parent() {
+                    if !parent.as_os_str().is_empty() {
+                        std::fs::create_dir_all(parent)?;
+                    }
+                }
+                Some(Mutex::new(BufWriter::new(
+                    std::fs::File::create(p)?,
+                )))
+            }
+        };
+        Ok(ServeLog { t0: Instant::now(), file })
+    }
+
+    /// Append one line (flushed immediately so crash logs survive).
+    pub fn line(&self, msg: &str) {
+        if let Some(f) = &self.file {
+            let mut g = f.lock().expect("log poisoned");
+            let t = self.t0.elapsed().as_secs_f64();
+            let _ = writeln!(g, "[{t:9.3}s] {msg}");
+            let _ = g.flush();
+        }
+    }
+}
+
+/// Everything the accept / connection / worker threads share.
+struct ServerCtx {
+    cache: ModelCache,
+    default_model: PathBuf,
+    model_dir: PathBuf,
+    pool: Mutex<Option<WorkerPool>>,
+    shutdown: AtomicBool,
+    counters: Counters,
+    log: ServeLog,
+    max_batch: usize,
+}
+
+/// Entry point: [`Server::start`].
+pub struct Server;
+
+impl Server {
+    /// Bind 127.0.0.1, eagerly load the default model (failing fast
+    /// on a bad path), and spawn the accept loop. The returned handle
+    /// owns the server's lifetime.
+    pub fn start(opts: ServeOptions) -> Result<ServerHandle> {
+        let workers = if opts.workers == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            opts.workers
+        };
+        let listener =
+            TcpListener::bind((Ipv4Addr::LOCALHOST, opts.port))?;
+        let addr = listener.local_addr()?;
+        let model_dir = opts
+            .model
+            .parent()
+            .filter(|p| !p.as_os_str().is_empty())
+            .unwrap_or_else(|| Path::new("."))
+            .to_path_buf();
+        let ctx = Arc::new(ServerCtx {
+            cache: ModelCache::new(opts.cache_capacity),
+            default_model: opts.model.clone(),
+            model_dir,
+            pool: Mutex::new(Some(WorkerPool::new(
+                workers,
+                workers * 2,
+            ))),
+            shutdown: AtomicBool::new(false),
+            counters: Counters::default(),
+            log: ServeLog::new(opts.log_path.as_deref())?,
+            max_batch: opts.max_batch.max(1),
+        });
+        let model = ctx.cache.get_or_load(&opts.model)?;
+        ctx.log.line(&format!(
+            "listening on {addr}: model {} (method {}, p={}, k={}), \
+             {workers} workers",
+            opts.model.display(),
+            model.header.method.name(),
+            model.header.p,
+            model.header.k
+        ));
+        let actx = ctx.clone();
+        let accept = std::thread::Builder::new()
+            .name("serve-accept".into())
+            .spawn(move || accept_loop(listener, actx))?;
+        Ok(ServerHandle { addr, ctx, accept: Some(accept) })
+    }
+}
+
+/// Owner of a running server: address, stats, and orderly teardown.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    ctx: Arc<ServerCtx>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The bound loopback address (resolves `port = 0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Current traffic counters.
+    pub fn stats(&self) -> ServeStats {
+        self.ctx.counters.snapshot()
+    }
+
+    /// Stop accepting, drain connections and workers, return the
+    /// final counters. Joins every thread the server spawned.
+    pub fn shutdown(mut self) -> Result<ServeStats> {
+        self.stop_threads();
+        Ok(self.ctx.counters.snapshot())
+    }
+
+    /// Block until the accept loop exits (a CLI `repro serve`
+    /// foreground run — effectively forever unless the process is
+    /// signalled), then drain the pool.
+    pub fn wait(mut self) -> Result<ServeStats> {
+        if let Some(h) = self.accept.take() {
+            h.join()
+                .map_err(|_| invalid("serve accept thread panicked"))?;
+        }
+        self.finish_pool();
+        Ok(self.ctx.counters.snapshot())
+    }
+
+    fn stop_threads(&mut self) {
+        self.ctx.shutdown.store(true, Ordering::Relaxed);
+        // wake the blocking accept() so it observes the flag
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        self.finish_pool();
+        self.ctx.log.line("shutdown complete");
+    }
+
+    fn finish_pool(&self) {
+        let pool = self.ctx.pool.lock().expect("pool poisoned").take();
+        if let Some(pool) = pool {
+            let _: Vec<()> = pool.finish();
+            self.ctx.log.line("worker pool drained");
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    /// Dropping an un-shutdown handle still tears the server down —
+    /// tests that panic mid-flight must not leave threads behind.
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.stop_threads();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, ctx: Arc<ServerCtx>) {
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    let mut conn_id = 0u64;
+    for inc in listener.incoming() {
+        if ctx.shutdown.load(Ordering::Relaxed) {
+            break;
+        }
+        match inc {
+            Ok(stream) => {
+                // reap handles of connections that already finished
+                // so a long-lived server holds O(concurrent), not
+                // O(ever-accepted), join handles
+                conns.retain(|h| !h.is_finished());
+                conn_id += 1;
+                ctx.counters.connections.fetch_add(1, Ordering::Relaxed);
+                let cctx = ctx.clone();
+                let id = conn_id;
+                let spawned = std::thread::Builder::new()
+                    .name(format!("serve-conn-{id}"))
+                    .spawn(move || handle_conn(stream, cctx, id));
+                match spawned {
+                    Ok(h) => conns.push(h),
+                    Err(e) => {
+                        ctx.log.line(&format!(
+                            "conn {id}: spawn failed: {e}"
+                        ));
+                    }
+                }
+            }
+            Err(e) => {
+                ctx.log.line(&format!("accept error: {e}"));
+            }
+        }
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+    ctx.log.line("accept loop exited");
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+/// Resolve a request's model name against the cache. Empty = the
+/// default model; anything else must be a bare file name (no path
+/// separators, no leading dot) inside the server's model directory.
+fn resolve_model(
+    ctx: &ServerCtx,
+    name: &str,
+) -> Result<Arc<FittedModel>> {
+    if name.is_empty() {
+        return ctx.cache.get_or_load(&ctx.default_model);
+    }
+    let legal = !name.starts_with('.')
+        && name.chars().all(|c| {
+            c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-')
+        });
+    if !legal {
+        return Err(invalid(format!("illegal model name '{name}'")));
+    }
+    ctx.cache.get_or_load(&ctx.model_dir.join(name))
+}
+
+/// Execute one connection batch on a pool worker.
+fn serve_batch(ctx: &ServerCtx, batch: Vec<Request>) -> Vec<Response> {
+    batch
+        .into_iter()
+        .map(|rq| {
+            let out = match rq {
+                Request::ModelInfo { model } => resolve_model(ctx, &model)
+                    .map(|m| Response::Info(m.info_json().to_string())),
+                Request::Compress { model, x } => {
+                    resolve_model(ctx, &model).and_then(|m| {
+                        m.compress(&x).map(Response::Compressed)
+                    })
+                }
+                Request::Predict { model, x } => {
+                    resolve_model(ctx, &model).and_then(|m| {
+                        m.predict_proba(&x).map(Response::Probabilities)
+                    })
+                }
+            };
+            out.unwrap_or_else(|e| {
+                ctx.counters.errors.fetch_add(1, Ordering::Relaxed);
+                Response::Error(e.to_string())
+            })
+        })
+        .collect()
+}
+
+fn handle_conn(stream: TcpStream, ctx: Arc<ServerCtx>, id: u64) {
+    let _ = stream.set_nodelay(true);
+    if stream.set_read_timeout(Some(IDLE_TICK)).is_err() {
+        return;
+    }
+    let Ok(read_half) = stream.try_clone() else {
+        ctx.log.line(&format!("conn {id}: clone failed"));
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(stream);
+    ctx.log.line(&format!("conn {id}: open"));
+    loop {
+        if ctx.shutdown.load(Ordering::Relaxed) {
+            break;
+        }
+        // idle wait, interruptible every IDLE_TICK
+        let op = match read_opcode(&mut reader) {
+            Ok(None) => break, // clean EOF
+            Ok(Some(op)) => op,
+            Err(ref e) if is_timeout(e) => continue,
+            Err(e) => {
+                ctx.log.line(&format!("conn {id}: read error: {e}"));
+                break;
+            }
+        };
+        // a frame is in flight: allow its body generous time, and
+        // greedily batch every further request already buffered
+        let _ = reader.get_ref().set_read_timeout(Some(BODY_TIMEOUT));
+        let mut batch = Vec::new();
+        let mut framing_err: Option<String> = None;
+        match read_request_body(&mut reader, op) {
+            Ok(rq) => batch.push(rq),
+            Err(e) => {
+                ctx.counters.errors.fetch_add(1, Ordering::Relaxed);
+                ctx.log
+                    .line(&format!("conn {id}: malformed frame: {e}"));
+                let rs =
+                    Response::Error(format!("malformed request: {e}"));
+                let _ = write_response(&mut writer, &rs);
+                let _ = writer.flush();
+                break;
+            }
+        }
+        while batch.len() < ctx.max_batch && !reader.buffer().is_empty()
+        {
+            match read_opcode(&mut reader) {
+                Ok(Some(op)) => {
+                    match read_request_body(&mut reader, op) {
+                        Ok(rq) => batch.push(rq),
+                        Err(e) => {
+                            ctx.log.line(&format!(
+                                "conn {id}: malformed frame: {e}"
+                            ));
+                            framing_err = Some(format!(
+                                "malformed request: {e}"
+                            ));
+                            break;
+                        }
+                    }
+                }
+                _ => {
+                    framing_err =
+                        Some("request framing lost".to_string());
+                    break;
+                }
+            }
+        }
+        let _ = reader.get_ref().set_read_timeout(Some(IDLE_TICK));
+        let n_req = batch.len() as u64;
+        // One pool job per batch; responses come back over a channel
+        // so this thread writes them in request order. submit() can
+        // block on the pool's bounded job queue while the mutex is
+        // held — that serializes *submission* across connections
+        // under saturation, but the queue itself is the bottleneck
+        // in that regime either way, and compute keeps draining it.
+        let (tx, rx) = mpsc::channel();
+        {
+            let job_ctx = ctx.clone();
+            let mut guard = ctx.pool.lock().expect("pool poisoned");
+            let Some(pool) = guard.as_mut() else {
+                break; // shutting down
+            };
+            // drop bookkeeping entries of already-completed jobs so
+            // the results queue stays bounded over the server's life
+            pool.discard_ready_results();
+            pool.submit(move || {
+                let _ = tx.send(serve_batch(&job_ctx, batch));
+            });
+        }
+        let Ok(responses) = rx.recv() else {
+            break;
+        };
+        ctx.counters.batches.fetch_add(1, Ordering::Relaxed);
+        ctx.counters.requests.fetch_add(n_req, Ordering::Relaxed);
+        let mut broken = false;
+        for rs in &responses {
+            if write_response(&mut writer, rs).is_err() {
+                broken = true;
+                break;
+            }
+        }
+        if broken || writer.flush().is_err() {
+            ctx.log.line(&format!("conn {id}: write failed"));
+            break;
+        }
+        ctx.log
+            .line(&format!("conn {id}: served batch of {n_req}"));
+        if let Some(msg) = framing_err {
+            // the stream is desynced past this batch: tell the
+            // client why before closing, mirroring the first-frame
+            // malformed path
+            ctx.counters.errors.fetch_add(1, Ordering::Relaxed);
+            let _ = write_response(&mut writer, &Response::Error(msg));
+            let _ = writer.flush();
+            break;
+        }
+    }
+    ctx.log.line(&format!("conn {id}: closed"));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{
+        DataConfig, EstimatorConfig, Method, ReduceConfig,
+    };
+    use crate::model::{fit_model, save_model, FitOptions};
+    use crate::serve::ServeClient;
+    use crate::volume::MorphometryGenerator;
+
+    fn saved_model(tag: &str) -> (PathBuf, crate::model::FittedModel) {
+        let dc = DataConfig {
+            dims: [8, 9, 7],
+            n_samples: 24,
+            seed: 3,
+            ..Default::default()
+        };
+        let (ds, y) =
+            MorphometryGenerator::new(dc.dims).generate(dc.n_samples, 3);
+        let reduce = ReduceConfig {
+            method: Method::Fast,
+            ratio: 10,
+            ..Default::default()
+        };
+        let est = EstimatorConfig {
+            cv_folds: 3,
+            max_iter: 60,
+            ..Default::default()
+        };
+        let model = fit_model(
+            &ds,
+            &y,
+            &reduce,
+            &est,
+            &dc,
+            &FitOptions::default(),
+        )
+        .unwrap();
+        let dir = std::env::temp_dir().join("fastclust_serve_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("{tag}.fcm"));
+        save_model(&path, &model).unwrap();
+        (path, model)
+    }
+
+    #[test]
+    fn start_rejects_missing_model() {
+        let opts = ServeOptions::new("/nonexistent/m.fcm");
+        assert!(Server::start(opts).is_err());
+    }
+
+    #[test]
+    fn single_client_info_and_predict() {
+        let (path, model) = saved_model("single");
+        let mut opts = ServeOptions::new(&path);
+        opts.workers = 2;
+        let handle = Server::start(opts).unwrap();
+        let mut client = ServeClient::connect(handle.addr()).unwrap();
+        let info = client.model_info().unwrap();
+        assert_eq!(
+            info.get("k").unwrap().as_usize().unwrap(),
+            model.header.k
+        );
+        // one synthetic sample, compared against the offline path
+        let x = crate::volume::FeatureMatrix::from_vec(
+            1,
+            model.header.p,
+            (0..model.header.p).map(|i| (i % 7) as f32).collect(),
+        )
+        .unwrap();
+        let want = model.predict_proba(&x).unwrap();
+        let got = client.predict(&x).unwrap();
+        assert_eq!(got, want, "served == offline, bit-identical");
+        // dimension mismatch must come back as a protocol error
+        let bad = crate::volume::FeatureMatrix::zeros(1, 3);
+        assert!(client.predict(&bad).is_err());
+        drop(client);
+        let stats = handle.shutdown().unwrap();
+        assert_eq!(stats.connections, 1);
+        assert!(stats.requests >= 3);
+        assert_eq!(stats.errors, 1);
+    }
+
+    #[test]
+    fn illegal_model_names_rejected() {
+        let (path, _) = saved_model("names");
+        let mut opts = ServeOptions::new(&path);
+        opts.workers = 1;
+        let handle = Server::start(opts).unwrap();
+        let mut client = ServeClient::connect(handle.addr()).unwrap();
+        for bad in ["../evil.fcm", "a/b.fcm", ".hidden"] {
+            assert!(
+                client.model_info_named(bad).is_err(),
+                "name '{bad}' must be rejected"
+            );
+        }
+        drop(client);
+        handle.shutdown().unwrap();
+    }
+}

@@ -37,15 +37,7 @@ pub struct FcdHeader {
 impl FcdHeader {
     /// Rebuild the [`Mask`] from the stored voxel indices.
     pub fn build_mask(&self) -> Result<Mask> {
-        let total = self.dims[0] * self.dims[1] * self.dims[2];
-        let mut inverse = vec![-1i32; total];
-        for (i, &v) in self.voxels.iter().enumerate() {
-            if v as usize >= total {
-                return Err(invalid("voxel index out of grid"));
-            }
-            inverse[v as usize] = i as i32;
-        }
-        Ok(Mask { dims: self.dims, voxels: self.voxels.clone(), inverse })
+        Mask::from_voxels(self.dims, self.voxels.clone())
     }
 }
 

@@ -3,6 +3,7 @@
 //! compact `0..p` masked indexing used by feature matrices and graphs.
 
 use super::grid::Volume;
+use crate::error::{invalid, Result};
 use crate::rng::Rng;
 
 /// A boolean mask over a 3-D grid plus both index maps.
@@ -45,6 +46,24 @@ impl Mask {
     /// The full-grid mask (all voxels in).
     pub fn full(dims: [usize; 3]) -> Self {
         Mask::from_predicate(dims, |_, _, _| true)
+    }
+
+    /// Rebuild a mask from persisted voxel indices (the geometry the
+    /// `.fcd` and `.fcm` artifacts store). Indices must be in-grid;
+    /// duplicates are rejected.
+    pub fn from_voxels(dims: [usize; 3], voxels: Vec<u32>) -> Result<Self> {
+        let total = dims[0] * dims[1] * dims[2];
+        let mut inverse = vec![-1i32; total];
+        for (i, &v) in voxels.iter().enumerate() {
+            if v as usize >= total {
+                return Err(invalid("voxel index out of grid"));
+            }
+            if inverse[v as usize] >= 0 {
+                return Err(invalid("duplicate voxel index in mask"));
+            }
+            inverse[v as usize] = i as i32;
+        }
+        Ok(Mask { dims, voxels, inverse })
     }
 
     /// Number of masked voxels.

@@ -1,0 +1,131 @@
+#!/usr/bin/env python3
+"""Regenerate the committed golden fixtures.
+
+The fixtures pin the on-disk formats against drift:
+
+* ``tiny.json`` + ``tiny.f32raw`` — a minimal ``.fcd`` dataset,
+  byte-identical to what ``volume::save_dataset`` writes (compact JSON
+  with BTreeMap-sorted keys; little-endian f32 payload, row-major).
+* ``tiny.fcm`` — a minimal ``.fcm`` fitted-model artifact following
+  the ADR-004 layout (magic, checksummed HEAD/MASK/REDU/FOLD/"END "
+  sections, CRC-32/IEEE == ``zlib.crc32``).
+
+``rust/tests/golden_fixtures.rs`` asserts header-only parse, full
+load, and that re-saving reproduces these bytes exactly. Run this
+script only when the format version changes — and bump the magic /
+format tag when it does.
+"""
+
+import json
+import struct
+import zlib
+from pathlib import Path
+
+HERE = Path(__file__).resolve().parent
+
+# ----------------------------------------------------------- .fcd
+
+DIMS = [3, 2, 2]
+VOXELS = [0, 1, 3, 5, 6, 8, 11]  # p = 7 of 12 grid voxels
+P, N = len(VOXELS), 3
+
+
+def fcd() -> None:
+    # compact JSON, keys sorted (rust Value::Obj is a BTreeMap),
+    # integers printed without a fractional part
+    header = {
+        "dims": DIMS,
+        "format": "fcd-v1",
+        "n": N,
+        "p": P,
+        "voxels": VOXELS,
+    }
+    text = json.dumps(header, sort_keys=True, separators=(",", ":"))
+    (HERE / "tiny.json").write_text(text)
+    # row-major (p, n) payload; values exactly representable in f32
+    values = [(i - 10) * 0.25 for i in range(P * N)]
+    (HERE / "tiny.f32raw").write_bytes(
+        b"".join(struct.pack("<f", v) for v in values)
+    )
+
+
+# ----------------------------------------------------------- .fcm
+
+MAGIC = b"FCMODEL1"
+
+
+def s(text: str) -> bytes:
+    raw = text.encode()
+    return struct.pack("<I", len(raw)) + raw
+
+
+def section(tag: bytes, payload: bytes) -> bytes:
+    assert len(tag) == 4
+    return (
+        tag
+        + struct.pack("<Q", len(payload))
+        + payload
+        + struct.pack("<I", zlib.crc32(payload) & 0xFFFFFFFF)
+    )
+
+
+def fcm() -> None:
+    head = (
+        s("fast")
+        + struct.pack("<III", 2, P, 6)  # k, p, n
+        + struct.pack("<Q", 1)  # reduce_seed
+        + struct.pack("<I", 0)  # shards
+        + struct.pack("<dd", 0.001, 1e-05)  # lambda, tol
+        + struct.pack("<II", 100, 2)  # max_iter, cv_folds
+        + struct.pack("<II", 0, 32)  # sgd_epochs, sgd_chunk
+        + struct.pack("<III", *DIMS)  # data_dims
+        + struct.pack("<I", 6)  # data_n_samples
+        + struct.pack("<dd", 6.0, 1.0)  # data_fwhm, data_noise_sigma
+        + struct.pack("<Q", 42)  # data_seed
+        + s("golden fixture")
+    )
+    mask = (
+        struct.pack("<III", *DIMS)
+        + struct.pack("<I", P)
+        + struct.pack(f"<{P}I", *VOXELS)
+    )
+    labels = [0, 0, 1, 1, 0, 1, 1]
+    redu = (
+        struct.pack("<B", 0)  # kind: cluster labels
+        + struct.pack("<II", 2, P)
+        + struct.pack(f"<{P}I", *labels)
+    )
+
+    def fold(acc, loss, gnorm, iters, evals, b, w, test):
+        return (
+            struct.pack("<ddd", acc, loss, gnorm)
+            + struct.pack("<QQ", iters, evals)
+            + struct.pack("<f", b)
+            + struct.pack("<I", len(w))
+            + struct.pack(f"<{len(w)}f", *w)
+            + struct.pack("<I", len(test))
+            + struct.pack(f"<{len(test)}I", *test)
+        )
+
+    folds = (
+        struct.pack("<I", 2)
+        + fold(0.75, 0.5, 0.001, 10, 12, 0.125, [0.5, -0.25], [0, 2, 4])
+        + fold(1.0, 0.25, 0.0005, 8, 9, -0.5, [1.0, 0.75], [1, 3, 5])
+    )
+    blob = (
+        MAGIC
+        + section(b"HEAD", head)
+        + section(b"MASK", mask)
+        + section(b"REDU", redu)
+        + section(b"FOLD", folds)
+        + section(b"END ", b"")
+    )
+    (HERE / "tiny.fcm").write_bytes(blob)
+
+
+if __name__ == "__main__":
+    fcd()
+    fcm()
+    for name in ("tiny.json", "tiny.f32raw", "tiny.fcm"):
+        path = HERE / name
+        print(f"{name}: {path.stat().st_size} bytes")

@@ -1,0 +1,235 @@
+//! Property test for the fitted-model artifact (ADR-004):
+//! fit → save → load → predict is **bit-identical** to
+//! fit → predict in-memory, across the FastCluster, Ward and sharded
+//! clustering engines and both logistic-regression backends (batch
+//! and SGD). Also pins the artifact against the reference pipeline:
+//! for the batch backend, the persisted fold accuracies equal
+//! `run_decoding_pipeline`'s exactly.
+
+use std::path::PathBuf;
+
+use fastclust::config::{
+    DataConfig, EstimatorConfig, Method, ReduceConfig,
+};
+use fastclust::coordinator::run_decoding_pipeline;
+use fastclust::model::{
+    fit_model, load_model, read_fcm_header, save_model, FitOptions,
+    FittedModel,
+};
+use fastclust::volume::{MaskedDataset, MorphometryGenerator};
+
+fn cohort() -> (MaskedDataset, Vec<u8>, DataConfig) {
+    let dc = DataConfig {
+        dims: [10, 11, 9],
+        n_samples: 36,
+        seed: 17,
+        ..Default::default()
+    };
+    let (ds, y) =
+        MorphometryGenerator::new(dc.dims).generate(dc.n_samples, dc.seed);
+    (ds, y, dc)
+}
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("fastclust_model_prop");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{tag}.fcm"))
+}
+
+fn assert_bit_identical(a: &FittedModel, b: &FittedModel) {
+    assert_eq!(a.header, b.header);
+    assert_eq!(a.mask_dims, b.mask_dims);
+    assert_eq!(a.voxels, b.voxels);
+    assert_eq!(a.reduction, b.reduction);
+    assert_eq!(a.folds.len(), b.folds.len());
+    for (fa, fb) in a.folds.iter().zip(&b.folds) {
+        assert_eq!(fa.test, fb.test);
+        // f64/f32 compared through raw bits: NaN-proof and exact
+        assert_eq!(
+            fa.accuracy.to_bits(),
+            fb.accuracy.to_bits(),
+            "fold accuracy drifted through the artifact"
+        );
+        assert_eq!(fa.fit.b.to_bits(), fb.fit.b.to_bits());
+        assert_eq!(fa.fit.w.len(), fb.fit.w.len());
+        for (wa, wb) in fa.fit.w.iter().zip(&fb.fit.w) {
+            assert_eq!(wa.to_bits(), wb.to_bits());
+        }
+        assert_eq!(fa.fit.loss.to_bits(), fb.fit.loss.to_bits());
+        assert_eq!(fa.fit.iters, fb.fit.iters);
+        assert_eq!(fa.fit.evals, fb.fit.evals);
+        assert_eq!(
+            fa.fit.grad_norm.to_bits(),
+            fb.fit.grad_norm.to_bits()
+        );
+    }
+}
+
+/// The property, for one (engine, backend) cell: fitting, persisting,
+/// reloading and re-scoring must agree bit-for-bit with the purely
+/// in-memory path.
+fn roundtrip_case(tag: &str, method: Method, shards: usize, sgd: bool) {
+    let (ds, y, dc) = cohort();
+    let reduce = ReduceConfig {
+        method,
+        k: 0,
+        ratio: 10,
+        seed: 2,
+        shards,
+    };
+    let est = EstimatorConfig {
+        cv_folds: 4,
+        max_iter: 120,
+        ..Default::default()
+    };
+    let opts = FitOptions {
+        sgd_epochs: if sgd { 6 } else { 0 },
+        sgd_chunk: 8,
+        note: format!("prop test {tag}"),
+    };
+    let fitted =
+        fit_model(&ds, &y, &reduce, &est, &dc, &opts).unwrap();
+
+    // in-memory predict (no disk involved) — the reference
+    let inmem = fitted.predict_fold_accuracies(&ds, &y).unwrap();
+    let stored: Vec<f64> =
+        fitted.folds.iter().map(|f| f.accuracy).collect();
+    assert_eq!(
+        inmem, stored,
+        "{tag}: apply-only re-score != fit-time accuracies"
+    );
+
+    // save → load → predict
+    let path = scratch(tag);
+    save_model(&path, &fitted).unwrap();
+    let loaded = load_model(&path).unwrap();
+    assert_bit_identical(&fitted, &loaded);
+    let replayed = loaded.predict_fold_accuracies(&ds, &y).unwrap();
+    assert_eq!(
+        replayed, inmem,
+        "{tag}: loaded-model predict != in-memory predict"
+    );
+
+    // the header survives a header-only parse too
+    let h = read_fcm_header(&path).unwrap();
+    assert_eq!(h, loaded.header);
+
+    // saving the loaded model reproduces the file byte-for-byte
+    let path2 = scratch(&format!("{tag}_resave"));
+    save_model(&path2, &loaded).unwrap();
+    assert_eq!(
+        std::fs::read(&path).unwrap(),
+        std::fs::read(&path2).unwrap(),
+        "{tag}: resave is not canonical"
+    );
+}
+
+#[test]
+fn fastcluster_batch_roundtrips_bit_identically() {
+    roundtrip_case("fast_batch", Method::Fast, 0, false);
+}
+
+#[test]
+fn fastcluster_sgd_roundtrips_bit_identically() {
+    roundtrip_case("fast_sgd", Method::Fast, 0, true);
+}
+
+#[test]
+fn ward_batch_roundtrips_bit_identically() {
+    roundtrip_case("ward_batch", Method::Ward, 0, false);
+}
+
+#[test]
+fn ward_sgd_roundtrips_bit_identically() {
+    roundtrip_case("ward_sgd", Method::Ward, 0, true);
+}
+
+#[test]
+fn sharded_batch_roundtrips_bit_identically() {
+    // shards pinned: auto shard count varies across machines
+    roundtrip_case("sharded_batch", Method::FastSharded, 2, false);
+}
+
+#[test]
+fn sharded_sgd_roundtrips_bit_identically() {
+    roundtrip_case("sharded_sgd", Method::FastSharded, 2, true);
+}
+
+#[test]
+fn batch_artifact_matches_reference_pipeline_exactly() {
+    // the acceptance criterion: `repro fit --save` + `repro predict
+    // --model` reproduce the in-memory `decode` fold accuracies
+    let (ds, y, dc) = cohort();
+    for (tag, method, shards) in [
+        ("ref_fast", Method::Fast, 0),
+        ("ref_ward", Method::Ward, 0),
+        ("ref_sharded", Method::FastSharded, 2),
+    ] {
+        let reduce = ReduceConfig {
+            method,
+            k: 0,
+            ratio: 10,
+            seed: 2,
+            shards,
+        };
+        let est = EstimatorConfig {
+            cv_folds: 4,
+            max_iter: 120,
+            ..Default::default()
+        };
+        let rep =
+            run_decoding_pipeline(&ds, &y, &reduce, &est).unwrap();
+        let model = fit_model(
+            &ds,
+            &y,
+            &reduce,
+            &est,
+            &dc,
+            &FitOptions::default(),
+        )
+        .unwrap();
+        let path = scratch(tag);
+        save_model(&path, &model).unwrap();
+        let loaded = load_model(&path).unwrap();
+        let accs = loaded.predict_fold_accuracies(&ds, &y).unwrap();
+        assert_eq!(
+            accs, rep.fold_accuracies,
+            "{tag}: artifact predict != decode pipeline"
+        );
+    }
+}
+
+#[test]
+fn random_projection_model_roundtrips() {
+    // RP has no labels to persist — the operator is seed-addressed
+    let (ds, y, dc) = cohort();
+    let reduce = ReduceConfig {
+        method: Method::RandomProjection,
+        k: 48,
+        ratio: 0,
+        seed: 9,
+        shards: 0,
+    };
+    let est = EstimatorConfig {
+        cv_folds: 3,
+        max_iter: 80,
+        ..Default::default()
+    };
+    let model = fit_model(
+        &ds,
+        &y,
+        &reduce,
+        &est,
+        &dc,
+        &FitOptions::default(),
+    )
+    .unwrap();
+    let path = scratch("rp");
+    save_model(&path, &model).unwrap();
+    let loaded = load_model(&path).unwrap();
+    assert_bit_identical(&model, &loaded);
+    let accs = loaded.predict_fold_accuracies(&ds, &y).unwrap();
+    let stored: Vec<f64> =
+        model.folds.iter().map(|f| f.accuracy).collect();
+    assert_eq!(accs, stored);
+}

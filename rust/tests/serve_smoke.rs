@@ -1,0 +1,206 @@
+//! Concurrency smoke test for the decode server (ADR-004): ≥8 client
+//! threads hammer one loopback `serve` instance concurrently; every
+//! response must be bit-identical to the offline apply-only path on
+//! the same artifact, and shutdown must drain every thread the
+//! server spawned (accept loop, connection readers, WorkerPool).
+//!
+//! The server writes its event log to `$CARGO_TARGET_TMPDIR/
+//! serve_smoke.log`; CI uploads that file when this suite fails.
+
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use fastclust::config::{
+    DataConfig, EstimatorConfig, Method, ReduceConfig,
+};
+use fastclust::model::{
+    fit_model, load_model, save_model, FitOptions, FittedModel,
+};
+use fastclust::serve::{
+    Request, Response, ServeClient, ServeOptions, Server,
+};
+use fastclust::volume::{FeatureMatrix, MorphometryGenerator};
+
+const N_CLIENTS: usize = 8;
+const SAMPLES_PER_CLIENT: usize = 3;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_TARGET_TMPDIR"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Fit + persist a model and return (path, loaded model, cohort
+/// sample-major features) — the offline truth the served responses
+/// must reproduce bit-for-bit.
+fn fixture(
+    tag: &str,
+) -> (PathBuf, Arc<FittedModel>, Arc<FeatureMatrix>) {
+    let dc = DataConfig {
+        dims: [10, 11, 9],
+        n_samples: 40,
+        seed: 23,
+        ..Default::default()
+    };
+    let (ds, y) =
+        MorphometryGenerator::new(dc.dims).generate(dc.n_samples, dc.seed);
+    let reduce = ReduceConfig {
+        method: Method::Fast,
+        ratio: 10,
+        ..Default::default()
+    };
+    let est = EstimatorConfig {
+        cv_folds: 3,
+        max_iter: 80,
+        ..Default::default()
+    };
+    let model = fit_model(
+        &ds,
+        &y,
+        &reduce,
+        &est,
+        &dc,
+        &FitOptions::default(),
+    )
+    .unwrap();
+    let path = tmp(&format!("serve_smoke_{tag}.fcm"));
+    save_model(&path, &model).unwrap();
+    // serve and verify against the artifact actually on disk
+    let loaded = Arc::new(load_model(&path).unwrap());
+    let xs = Arc::new(ds.data().transpose()); // (n, p) sample-major
+    (path, loaded, xs)
+}
+
+/// The `(SAMPLES_PER_CLIENT, p)` block client `c` sends: a strided
+/// slice of the cohort, distinct per client.
+fn client_block(xs: &FeatureMatrix, c: usize) -> FeatureMatrix {
+    let rows: Vec<usize> = (0..SAMPLES_PER_CLIENT)
+        .map(|i| (c + i * N_CLIENTS) % xs.rows)
+        .collect();
+    xs.select_rows(&rows)
+}
+
+#[test]
+fn eight_concurrent_clients_get_bit_identical_answers() {
+    let (path, model, xs) = fixture("main");
+    let log_path = tmp("serve_smoke.log");
+    let mut opts = ServeOptions::new(&path);
+    opts.workers = 4;
+    opts.log_path = Some(log_path.clone());
+    let handle = Server::start(opts).unwrap();
+    let addr = handle.addr();
+
+    std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for c in 0..N_CLIENTS {
+            let model = model.clone();
+            let xs = xs.clone();
+            joins.push(scope.spawn(move || {
+                let block = client_block(&xs, c);
+                // offline truth, computed independently per thread
+                let want_p = model.predict_proba(&block).unwrap();
+                let want_x = model.compress(&block).unwrap();
+                let mut client = ServeClient::connect(addr).unwrap();
+                let info = client.model_info().unwrap();
+                assert_eq!(
+                    info.get("k").unwrap().as_usize().unwrap(),
+                    model.header.k,
+                    "client {c}: wrong model served"
+                );
+                // several sequential rounds to overlap with the
+                // other clients' traffic
+                for round in 0..3 {
+                    let got = client.predict(&block).unwrap();
+                    assert_eq!(
+                        got, want_p,
+                        "client {c} round {round}: served predict \
+                         != offline decode"
+                    );
+                    let xk = client.compress(&block).unwrap();
+                    assert_eq!(
+                        xk.data, want_x.data,
+                        "client {c} round {round}: served compress \
+                         != offline reduce"
+                    );
+                }
+                // pipelined batch: requests written back-to-back so
+                // the server's per-connection batching kicks in
+                let rqs: Vec<Request> = (0..4)
+                    .map(|_| Request::Predict {
+                        model: String::new(),
+                        x: block.clone(),
+                    })
+                    .collect();
+                let responses = client.call_pipelined(&rqs).unwrap();
+                assert_eq!(responses.len(), 4);
+                for rs in responses {
+                    match rs {
+                        Response::Probabilities(p) => {
+                            assert_eq!(p, want_p, "client {c}: \
+                                 pipelined predict drifted")
+                        }
+                        other => {
+                            panic!("client {c}: {other:?}")
+                        }
+                    }
+                }
+            }));
+        }
+        for j in joins {
+            j.join().expect("client thread panicked");
+        }
+    });
+
+    let stats = handle.shutdown().unwrap();
+    assert_eq!(stats.connections, N_CLIENTS as u64);
+    // per client: 1 info + 3×(predict+compress) + 4 pipelined = 11
+    assert_eq!(stats.requests, (N_CLIENTS * 11) as u64);
+    assert_eq!(stats.errors, 0, "no request may have errored");
+    assert!(stats.batches <= stats.requests);
+
+    // shutdown is real: the listener is gone...
+    assert!(
+        TcpStream::connect(addr).is_err(),
+        "server still accepting after shutdown"
+    );
+    // ...and the log recorded an orderly lifecycle
+    let log = std::fs::read_to_string(&log_path).unwrap();
+    assert!(log.contains("listening on"), "log:\n{log}");
+    assert!(log.contains("worker pool drained"), "log:\n{log}");
+    assert!(log.contains("accept loop exited"), "log:\n{log}");
+}
+
+#[test]
+fn shutdown_with_no_traffic_is_clean() {
+    let (path, _, _) = fixture("idle");
+    let mut opts = ServeOptions::new(&path);
+    opts.workers = 2;
+    opts.log_path = Some(tmp("serve_smoke_idle.log"));
+    let handle = Server::start(opts).unwrap();
+    let addr = handle.addr();
+    let stats = handle.shutdown().unwrap();
+    assert_eq!(stats.requests, 0);
+    assert!(TcpStream::connect(addr).is_err());
+}
+
+#[test]
+fn client_disconnect_mid_session_does_not_wedge_the_server() {
+    let (path, model, xs) = fixture("disc");
+    let mut opts = ServeOptions::new(&path);
+    opts.workers = 2;
+    opts.log_path = Some(tmp("serve_smoke_disc.log"));
+    let handle = Server::start(opts).unwrap();
+    let addr = handle.addr();
+    // a client that connects and hangs up without a single frame
+    drop(TcpStream::connect(addr).unwrap());
+    // a normal client still gets served afterwards
+    let block = client_block(&xs, 0);
+    let want = model.predict_proba(&block).unwrap();
+    let mut client = ServeClient::connect(addr).unwrap();
+    assert_eq!(client.predict(&block).unwrap(), want);
+    drop(client);
+    let stats = handle.shutdown().unwrap();
+    assert_eq!(stats.connections, 2);
+    assert_eq!(stats.errors, 0);
+}
