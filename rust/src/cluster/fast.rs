@@ -22,6 +22,7 @@ use crate::error::Result;
 use crate::graph::{
     connected_components_capped, nearest_neighbor_edges, Edge, LatticeGraph,
 };
+use crate::kernels;
 use crate::volume::FeatureMatrix;
 
 /// Configuration for fast clustering.
@@ -75,10 +76,17 @@ impl FastCluster {
             _ => (0..x.cols).collect(),
         };
 
-        // Current reduced data: one row per active cluster.
-        let mut data: Vec<Vec<f32>> = (0..p)
-            .map(|i| feat_cols.iter().map(|&c| x.get(i, c)).collect())
-            .collect();
+        // Current reduced data: one row per active cluster, stored as
+        // one contiguous row-major buffer with stride `m` (ADR-005 —
+        // the per-row Vec-of-Vecs this replaces cost p heap
+        // allocations per fit and defeated vectorized distances).
+        let m = feat_cols.len();
+        let mut data: Vec<f32> = Vec::with_capacity(p * m);
+        for i in 0..p {
+            for &c in &feat_cols {
+                data.push(x.get(i, c));
+            }
+        }
         // Current topology as a dedup'd edge list over cluster ids.
         let mut edges: Vec<(u32, u32)> =
             graph.edges.iter().map(|e| (e.u, e.v)).collect();
@@ -95,11 +103,13 @@ impl FastCluster {
         while q > k && rounds < self.max_rounds {
             rounds += 1;
             // 1. weight edges with squared distances between reps
+            // (vectorized kernel over the contiguous row buffer)
             let weighted: Vec<Edge> = edges
                 .iter()
                 .map(|&(u, v)| {
-                    let d = sqdist(&data[u as usize], &data[v as usize]);
-                    Edge::new(u, v, d)
+                    let ru = &data[u as usize * m..u as usize * m + m];
+                    let rv = &data[v as usize * m..v as usize * m + m];
+                    Edge::new(u, v, kernels::sqdist(ru, rv))
                 })
                 .collect();
             let g = LatticeGraph::from_edges(q, weighted);
@@ -111,25 +121,27 @@ impl FastCluster {
                 // cannot merge further along the topology
                 break;
             }
-            // 4a. reduce data to cluster means
-            let mut sums = vec![vec![0.0f64; feat_cols.len()]; q_new];
+            // 4a. reduce data to cluster means (f64 accumulation in
+            // ascending old-cluster order, flat stride-m buffers)
+            let mut sums = vec![0.0f64; q_new * m];
             let mut counts = vec![0usize; q_new];
-            for (old, row) in data.iter().enumerate() {
+            for old in 0..q {
                 let nc = lambda[old] as usize;
                 counts[nc] += 1;
-                for (j, &v) in row.iter().enumerate() {
-                    sums[nc][j] += v as f64;
+                let row = &data[old * m..old * m + m];
+                let dst = &mut sums[nc * m..nc * m + m];
+                for (s, &v) in dst.iter_mut().zip(row) {
+                    *s += v as f64;
                 }
             }
-            data = sums
-                .into_iter()
-                .zip(&counts)
-                .map(|(s, &c)| {
-                    s.into_iter()
-                        .map(|v| (v / c.max(1) as f64) as f32)
-                        .collect()
-                })
-                .collect();
+            let mut next = vec![0.0f32; q_new * m];
+            for c in 0..q_new {
+                let cf = counts[c].max(1) as f64;
+                for j in 0..m {
+                    next[c * m + j] = (sums[c * m + j] / cf) as f32;
+                }
+            }
+            data = next;
             // 4b. reduce topology: relabel edge endpoints, drop loops,
             // dedup
             let mut new_edges: Vec<(u32, u32)> = edges
@@ -158,16 +170,6 @@ impl FastCluster {
         let k_actual = q;
         Ok((Labels::new(labels, k_actual)?, trace))
     }
-}
-
-#[inline]
-fn sqdist(a: &[f32], b: &[f32]) -> f32 {
-    let mut s = 0.0f32;
-    for i in 0..a.len() {
-        let d = a[i] - b[i];
-        s += d * d;
-    }
-    s
 }
 
 impl Clusterer for FastCluster {

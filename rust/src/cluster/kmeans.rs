@@ -6,6 +6,7 @@
 use super::{check_fit_args, Clusterer, Labels};
 use crate::error::Result;
 use crate::graph::LatticeGraph;
+use crate::kernels::sqdist;
 use crate::rng::Rng;
 use crate::volume::FeatureMatrix;
 
@@ -64,16 +65,6 @@ impl KMeans {
         }
         centers
     }
-}
-
-#[inline]
-fn sqdist(a: &[f32], b: &[f32]) -> f32 {
-    let mut s = 0.0;
-    for i in 0..a.len() {
-        let d = a[i] - b[i];
-        s += d * d;
-    }
-    s
 }
 
 impl Clusterer for KMeans {

@@ -6,7 +6,9 @@
 //! compute time. Loss/gradient evaluations go through one of two
 //! backends:
 //!
-//! * [`LogregBackend::Native`] — a cache-friendly rust evaluation;
+//! * [`LogregBackend::Native`] — a cache-friendly rust evaluation
+//!   whose margin/gradient inner loops run on the kernel layer
+//!   (ADR-005): one fused dot + sigmoid + axpy pass per sample row;
 //! * [`LogregBackend::Runtime`] — the AOT-compiled `logreg_step_*` HLO
 //!   artifact executed via PJRT (padding to the artifact shape is exact
 //!   thanks to the sample-weight contract, see python/compile/model.py).
@@ -16,6 +18,7 @@
 use std::sync::Arc;
 
 use crate::error::{invalid, Result};
+use crate::kernels;
 use crate::runtime::Runtime;
 use crate::volume::FeatureMatrix;
 
@@ -78,12 +81,9 @@ pub struct LogregFit {
     pub grad_norm: f64,
 }
 
-#[inline]
-fn sigmoid(z: f32) -> f32 {
-    0.5 * ((0.5 * z).tanh() + 1.0)
-}
-
 /// One native loss+gradient evaluation. `x` is `(n, k)` sample-major.
+/// Each row takes one fused kernel pass (margin dot, sigmoid
+/// residual, gradient axpy); the loss bookkeeping stays in f64 here.
 fn native_step(
     x: &FeatureMatrix,
     y: &[f32],
@@ -97,11 +97,8 @@ fn native_step(
     let mut gw = vec![0.0f32; k];
     let mut gb = 0.0f32;
     for i in 0..n {
-        let row = x.row(i);
-        let mut z = b;
-        for j in 0..k {
-            z += row[j] * w[j];
-        }
+        let (z, r) =
+            kernels::logreg_row_grad(x.row(i), w, b, y[i], &mut gw);
         // stable NLL: log(1 + e^z) - y z
         let zl = z as f64;
         loss += if zl > 0.0 {
@@ -109,11 +106,7 @@ fn native_step(
         } else {
             (1.0 + zl.exp()).ln()
         } - (y[i] as f64) * zl;
-        let r = sigmoid(z) - y[i];
         gb += r;
-        for j in 0..k {
-            gw[j] += r * row[j];
-        }
     }
     let nf = n as f32;
     loss /= n as f64;
@@ -257,10 +250,7 @@ impl LogisticRegression {
                 b = out[2].as_f32()?[0];
                 let gw = out[3].as_f32()?;
                 let gb = out[4].as_f32()?[0];
-                gnorm = gw
-                    .iter()
-                    .map(|g| g.abs() as f64)
-                    .fold(gb.abs() as f64, f64::max);
+                gnorm = grad_inf_norm(gw, gb);
                 loss = new_loss;
                 iters += 64;
                 lr = (lr * 1.25).min(8.0);
@@ -332,18 +322,13 @@ impl LogisticRegression {
         Ok(LogregFit { w, b, loss, iters, evals, grad_norm: gnorm })
     }
 
-    /// Predicted probability of class 1 for each row of `x`.
+    /// Predicted probability of class 1 for each row of `x` — a
+    /// kernel GEMV over the batch followed by the sigmoid epilogue.
     pub fn predict_proba(fit: &LogregFit, x: &FeatureMatrix) -> Vec<f32> {
-        (0..x.rows)
-            .map(|i| {
-                let mut z = fit.b;
-                let row = x.row(i);
-                for j in 0..x.cols {
-                    z += row[j] * fit.w[j];
-                }
-                sigmoid(z)
-            })
-            .collect()
+        let mut z = vec![0.0f32; x.rows];
+        kernels::gemv_bias(&x.data, x.cols, &fit.w, fit.b, &mut z);
+        kernels::sigmoid_inplace(&mut z);
+        z
     }
 
     /// 0/1 accuracy on a labeled set.
@@ -359,9 +344,7 @@ impl LogisticRegression {
 }
 
 fn grad_inf_norm(gw: &[f32], gb: f32) -> f64 {
-    gw.iter()
-        .map(|g| g.abs() as f64)
-        .fold(gb.abs() as f64, f64::max)
+    (kernels::max_abs(gw) as f64).max(gb.abs() as f64)
 }
 
 /// Out-of-core mini-batch SGD for the same ℓ2-logistic objective as

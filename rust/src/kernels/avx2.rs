@@ -1,0 +1,206 @@
+//! AVX2 kernel implementations (`x86_64` only, runtime-detected).
+//!
+//! Each function mirrors its [`super::portable`] counterpart exactly:
+//! the same fixed [`LANES`]-lane assignment, separate `mul`/`add`
+//! instructions (no FMA — FMA skips the intermediate rounding and
+//! would break bit-identity with the portable path), identical scalar
+//! tail handling, and the shared [`super::hsum`] collapse tree.
+//!
+//! The `#[target_feature]` internals are private; the public wrappers
+//! are safe and assert [`is_available`] — production code reaches
+//! them through the dispatched functions in [`super`], which only
+//! select this module after detection.
+
+use std::arch::x86_64::{
+    _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps,
+    _mm256_setzero_ps, _mm256_storeu_ps, _mm256_sub_ps,
+};
+
+use super::{hsum, LANES};
+
+/// Whether the running CPU supports this module's instruction set.
+pub fn is_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn acc_add_impl(dst: &mut [f32], src: &[f32]) {
+    let blocks = dst.len() / LANES;
+    for i in 0..blocks {
+        let p = dst.as_mut_ptr().add(i * LANES);
+        let vd = _mm256_loadu_ps(p);
+        let vs = _mm256_loadu_ps(src.as_ptr().add(i * LANES));
+        _mm256_storeu_ps(p, _mm256_add_ps(vd, vs));
+    }
+    for j in blocks * LANES..dst.len() {
+        dst[j] += src[j];
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_impl(dst: &mut [f32], a: f32, src: &[f32]) {
+    let va = _mm256_set1_ps(a);
+    let blocks = dst.len() / LANES;
+    for i in 0..blocks {
+        let p = dst.as_mut_ptr().add(i * LANES);
+        let vd = _mm256_loadu_ps(p);
+        let vs = _mm256_loadu_ps(src.as_ptr().add(i * LANES));
+        _mm256_storeu_ps(p, _mm256_add_ps(vd, _mm256_mul_ps(va, vs)));
+    }
+    for j in blocks * LANES..dst.len() {
+        dst[j] += a * src[j];
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn scale_impl(dst: &mut [f32], s: f32) {
+    let vs = _mm256_set1_ps(s);
+    let blocks = dst.len() / LANES;
+    for i in 0..blocks {
+        let p = dst.as_mut_ptr().add(i * LANES);
+        let vd = _mm256_loadu_ps(p);
+        _mm256_storeu_ps(p, _mm256_mul_ps(vd, vs));
+    }
+    for j in blocks * LANES..dst.len() {
+        dst[j] *= s;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn scale_by_impl(dst: &mut [f32], scales: &[f32]) {
+    let blocks = dst.len() / LANES;
+    for i in 0..blocks {
+        let p = dst.as_mut_ptr().add(i * LANES);
+        let vd = _mm256_loadu_ps(p);
+        let vs = _mm256_loadu_ps(scales.as_ptr().add(i * LANES));
+        _mm256_storeu_ps(p, _mm256_mul_ps(vd, vs));
+    }
+    for j in blocks * LANES..dst.len() {
+        dst[j] *= scales[j];
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn scale_from_impl(dst: &mut [f32], src: &[f32], s: f32) {
+    let vs = _mm256_set1_ps(s);
+    let blocks = dst.len() / LANES;
+    for i in 0..blocks {
+        let vv = _mm256_loadu_ps(src.as_ptr().add(i * LANES));
+        _mm256_storeu_ps(
+            dst.as_mut_ptr().add(i * LANES),
+            _mm256_mul_ps(vs, vv),
+        );
+    }
+    for j in blocks * LANES..dst.len() {
+        dst[j] = s * src[j];
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn dot_impl(a: &[f32], b: &[f32]) -> f32 {
+    let blocks = a.len() / LANES;
+    let mut acc = _mm256_setzero_ps();
+    for i in 0..blocks {
+        let va = _mm256_loadu_ps(a.as_ptr().add(i * LANES));
+        let vb = _mm256_loadu_ps(b.as_ptr().add(i * LANES));
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+    }
+    let mut lanes = [0.0f32; LANES];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    let base = blocks * LANES;
+    for l in 0..a.len() - base {
+        lanes[l] += a[base + l] * b[base + l];
+    }
+    hsum(&lanes)
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn sqdist_impl(a: &[f32], b: &[f32]) -> f32 {
+    let blocks = a.len() / LANES;
+    let mut acc = _mm256_setzero_ps();
+    for i in 0..blocks {
+        let va = _mm256_loadu_ps(a.as_ptr().add(i * LANES));
+        let vb = _mm256_loadu_ps(b.as_ptr().add(i * LANES));
+        let vd = _mm256_sub_ps(va, vb);
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(vd, vd));
+    }
+    let mut lanes = [0.0f32; LANES];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    let base = blocks * LANES;
+    for l in 0..a.len() - base {
+        let d = a[base + l] - b[base + l];
+        lanes[l] += d * d;
+    }
+    hsum(&lanes)
+}
+
+/// `dst[i] += src[i]` (AVX2).
+pub fn acc_add(dst: &mut [f32], src: &[f32]) {
+    assert!(is_available(), "avx2 kernels on a non-avx2 CPU");
+    assert_eq!(dst.len(), src.len());
+    unsafe { acc_add_impl(dst, src) }
+}
+
+/// `dst[i] += a * src[i]` (AVX2).
+pub fn axpy(dst: &mut [f32], a: f32, src: &[f32]) {
+    assert!(is_available(), "avx2 kernels on a non-avx2 CPU");
+    assert_eq!(dst.len(), src.len());
+    unsafe { axpy_impl(dst, a, src) }
+}
+
+/// `dst[i] *= s` (AVX2).
+pub fn scale(dst: &mut [f32], s: f32) {
+    assert!(is_available(), "avx2 kernels on a non-avx2 CPU");
+    unsafe { scale_impl(dst, s) }
+}
+
+/// `dst[i] *= scales[i]` (AVX2).
+pub fn scale_by(dst: &mut [f32], scales: &[f32]) {
+    assert!(is_available(), "avx2 kernels on a non-avx2 CPU");
+    assert_eq!(dst.len(), scales.len());
+    unsafe { scale_by_impl(dst, scales) }
+}
+
+/// `dst[i] = s * src[i]` (AVX2).
+pub fn scale_from(dst: &mut [f32], src: &[f32], s: f32) {
+    assert!(is_available(), "avx2 kernels on a non-avx2 CPU");
+    assert_eq!(dst.len(), src.len());
+    unsafe { scale_from_impl(dst, src, s) }
+}
+
+/// Fixed-lane dot product (AVX2).
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert!(is_available(), "avx2 kernels on a non-avx2 CPU");
+    assert_eq!(a.len(), b.len());
+    unsafe { dot_impl(a, b) }
+}
+
+/// Fixed-lane squared distance (AVX2).
+pub fn sqdist(a: &[f32], b: &[f32]) -> f32 {
+    assert!(is_available(), "avx2 kernels on a non-avx2 CPU");
+    assert_eq!(a.len(), b.len());
+    unsafe { sqdist_impl(a, b) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::portable;
+
+    #[test]
+    fn avx2_matches_portable_on_a_simple_case() {
+        if !is_available() {
+            return;
+        }
+        let a: Vec<f32> = (0..19).map(|i| i as f32 * 0.25).collect();
+        let b: Vec<f32> = (0..19).map(|i| 19.0 - i as f32).collect();
+        assert_eq!(
+            dot(&a, &b).to_bits(),
+            portable::dot(&a, &b).to_bits()
+        );
+        assert_eq!(
+            sqdist(&a, &b).to_bits(),
+            portable::sqdist(&a, &b).to_bits()
+        );
+    }
+}

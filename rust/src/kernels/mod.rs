@@ -1,0 +1,454 @@
+//! SIMD/cache-blocked f32 compute kernels for the library hot paths
+//! (ADR-005).
+//!
+//! Every inner loop the profiler cares about — the scatter-accumulate
+//! cluster reduction, the logistic-regression GEMV/gradient step,
+//! squared distances, and the scaled expand — funnels through this
+//! module. Each kernel has two execution paths selected once per
+//! process by [`backend`]:
+//!
+//! * **portable** ([`portable`]) — a fixed [`LANES`]-wide accumulation
+//!   written so LLVM autovectorizes it on any target;
+//! * **AVX2** ([`avx2`], `x86_64` only) — explicit 256-bit intrinsics
+//!   behind `is_x86_feature_detected!`, used when the CPU has it.
+//!
+//! ## Determinism contract
+//!
+//! Both paths compute **bit-identical** results, by construction:
+//!
+//! * reductions (dot, squared distance) accumulate into the same
+//!   fixed [`LANES`] partial sums — lane `l` sums elements
+//!   `l, l+LANES, l+2·LANES, …` — and collapse them with the shared
+//!   [`hsum`] tree; the tail (`len % LANES` elements) is folded into
+//!   lanes `0..len % LANES` by identical scalar code;
+//! * element-wise kernels (`acc_add`, `axpy`, `scale*`) perform the
+//!   same independent mul/add per element — no re-association, and no
+//!   FMA (the AVX2 path issues separate `mul`/`add` so each operation
+//!   rounds exactly like the portable one);
+//! * transcendentals ([`sigmoid`]) and order-insensitive folds
+//!   ([`max_abs`]) have a single shared implementation.
+//!
+//! The contract is what lets runtime dispatch coexist with the crate's
+//! bit-exactness guarantees: `.fcm` fit/apply round-trips, streaming
+//! vs in-memory equality, and serve-vs-offline equality all hold
+//! regardless of which path the host CPU takes. It is enforced by
+//! `rust/tests/kernel_equivalence.rs` across every `len % LANES`
+//! remainder class.
+//!
+//! The pre-refactor scalar loops live on in [`reference`]; they are
+//! the baseline `repro bench-kernels` times each kernel against and
+//! the oracle the equivalence suite compares to.
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+pub mod portable;
+pub mod reference;
+
+use std::sync::OnceLock;
+
+/// Fixed accumulation width (f32 lanes of one AVX2 register). The
+/// portable path uses the same width so both backends reassociate
+/// reductions identically.
+pub const LANES: usize = 8;
+
+/// Target resident size of one output block of the cache-blocked
+/// scatter-accumulate reduce (bytes). 4 MB keeps the active `(k,
+/// block)` output slab inside a shared L3 while the `(p, block)`
+/// input streams past it once.
+pub const SCATTER_BLOCK_BYTES: usize = 4 << 20;
+
+/// Which execution path the dispatched kernels take.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Fixed-lane autovectorizable rust (any target).
+    Portable,
+    /// 256-bit AVX2 intrinsics (`x86_64` with runtime support).
+    Avx2,
+}
+
+impl Backend {
+    /// Stable display name (recorded by `bench-kernels` reports).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Portable => "portable",
+            Backend::Avx2 => "avx2",
+        }
+    }
+}
+
+static BACKEND: OnceLock<Backend> = OnceLock::new();
+
+fn detect() -> Backend {
+    // Operator escape hatch: FASTCLUST_KERNEL_BACKEND=portable forces
+    // the portable path (e.g. to bisect a suspected dispatch issue);
+    // "avx2" and "auto" request the normal detection. Anything else
+    // is loudly ignored rather than silently treated as auto — an
+    // operator who typo'd the override must not conclude "reproduces
+    // on portable too" while actually still running AVX2.
+    match std::env::var("FASTCLUST_KERNEL_BACKEND").as_deref() {
+        Ok("portable") => return Backend::Portable,
+        Ok("avx2") => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if avx2::is_available() {
+                    return Backend::Avx2;
+                }
+            }
+            // the mirror misdirection of the typo case below: the
+            // operator asked for avx2 and must not silently get
+            // portable while believing otherwise
+            eprintln!(
+                "warning: FASTCLUST_KERNEL_BACKEND=avx2 but AVX2 is \
+                 unavailable on this CPU; using portable"
+            );
+            return Backend::Portable;
+        }
+        Ok("auto") | Err(_) => {}
+        Ok(other) => {
+            eprintln!(
+                "warning: FASTCLUST_KERNEL_BACKEND='{other}' not \
+                 recognized (use portable|avx2|auto); auto-detecting"
+            );
+        }
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2::is_available() {
+            return Backend::Avx2;
+        }
+    }
+    Backend::Portable
+}
+
+/// The execution path selected for this process (detected once).
+pub fn backend() -> Backend {
+    *BACKEND.get_or_init(detect)
+}
+
+/// Collapse the fixed lane accumulators with a balanced tree. Shared
+/// by both backends so the final reassociation is identical — this
+/// exact tree is part of the determinism contract.
+#[inline]
+pub fn hsum(l: &[f32; LANES]) -> f32 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+/// `dst[i] += src[i]` — the scatter-accumulate inner row op.
+#[inline]
+pub fn acc_add(dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len(), "acc_add: length mismatch");
+    match backend() {
+        Backend::Portable => portable::acc_add(dst, src),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => avx2::acc_add(dst, src),
+        #[cfg(not(target_arch = "x86_64"))]
+        Backend::Avx2 => unreachable!(),
+    }
+}
+
+/// `dst[i] += a * src[i]` — the gradient-accumulation row op.
+#[inline]
+pub fn axpy(dst: &mut [f32], a: f32, src: &[f32]) {
+    assert_eq!(dst.len(), src.len(), "axpy: length mismatch");
+    match backend() {
+        Backend::Portable => portable::axpy(dst, a, src),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => avx2::axpy(dst, a, src),
+        #[cfg(not(target_arch = "x86_64"))]
+        Backend::Avx2 => unreachable!(),
+    }
+}
+
+/// `dst[i] *= s` — cluster-mean normalization.
+#[inline]
+pub fn scale(dst: &mut [f32], s: f32) {
+    match backend() {
+        Backend::Portable => portable::scale(dst, s),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => avx2::scale(dst, s),
+        #[cfg(not(target_arch = "x86_64"))]
+        Backend::Avx2 => unreachable!(),
+    }
+}
+
+/// `dst[i] *= scales[i]` — per-column normalization (the sample-major
+/// compress path divides each cluster column by its size).
+#[inline]
+pub fn scale_by(dst: &mut [f32], scales: &[f32]) {
+    assert_eq!(dst.len(), scales.len(), "scale_by: length mismatch");
+    match backend() {
+        Backend::Portable => portable::scale_by(dst, scales),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => avx2::scale_by(dst, scales),
+        #[cfg(not(target_arch = "x86_64"))]
+        Backend::Avx2 => unreachable!(),
+    }
+}
+
+/// `dst[i] = s * src[i]` — the scaled-expand row op.
+#[inline]
+pub fn scale_from(dst: &mut [f32], src: &[f32], s: f32) {
+    assert_eq!(dst.len(), src.len(), "scale_from: length mismatch");
+    match backend() {
+        Backend::Portable => portable::scale_from(dst, src, s),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => avx2::scale_from(dst, src, s),
+        #[cfg(not(target_arch = "x86_64"))]
+        Backend::Avx2 => unreachable!(),
+    }
+}
+
+/// Fixed-lane dot product `Σ a[i]·b[i]`.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "dot: length mismatch");
+    match backend() {
+        Backend::Portable => portable::dot(a, b),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => avx2::dot(a, b),
+        #[cfg(not(target_arch = "x86_64"))]
+        Backend::Avx2 => unreachable!(),
+    }
+}
+
+/// Fixed-lane squared Euclidean distance `Σ (a[i]−b[i])²`.
+#[inline]
+pub fn sqdist(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "sqdist: length mismatch");
+    match backend() {
+        Backend::Portable => portable::sqdist(a, b),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => avx2::sqdist(a, b),
+        #[cfg(not(target_arch = "x86_64"))]
+        Backend::Avx2 => unreachable!(),
+    }
+}
+
+/// Dense GEMV with bias: `out[r] = bias + data_row_r · w` over a
+/// row-major `(out.len(), cols)` matrix.
+pub fn gemv_bias(
+    data: &[f32],
+    cols: usize,
+    w: &[f32],
+    bias: f32,
+    out: &mut [f32],
+) {
+    assert_eq!(w.len(), cols, "gemv_bias: w length != cols");
+    assert_eq!(
+        data.len(),
+        out.len() * cols,
+        "gemv_bias: data shape mismatch"
+    );
+    match backend() {
+        Backend::Portable => {
+            for (r, o) in out.iter_mut().enumerate() {
+                *o = bias + portable::dot(&data[r * cols..][..cols], w);
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => {
+            for (r, o) in out.iter_mut().enumerate() {
+                *o = bias + avx2::dot(&data[r * cols..][..cols], w);
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        Backend::Avx2 => unreachable!(),
+    }
+}
+
+/// Cache-blocked scatter-accumulate reduce: for each row `i` of the
+/// row-major `(labels.len(), cols)` matrix `x`, add it element-wise
+/// into row `labels[i]` of the row-major `(k, cols)` output. Column
+/// blocks are sized by [`SCATTER_BLOCK_BYTES`] so the active output
+/// slab stays cache-resident while `x` streams through once.
+///
+/// Blocking reorders work across *columns* only; every output element
+/// still receives its adds in ascending row order, so the result is
+/// bit-identical to the unblocked scalar scatter.
+pub fn scatter_add_rows(
+    labels: &[u32],
+    x: &[f32],
+    cols: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(
+        x.len(),
+        labels.len() * cols,
+        "scatter_add_rows: x shape mismatch"
+    );
+    assert!(
+        cols == 0 || out.len() % cols == 0,
+        "scatter_add_rows: out shape mismatch"
+    );
+    if cols == 0 {
+        return;
+    }
+    let k = out.len() / cols;
+    let block = if cols <= 64 {
+        cols
+    } else {
+        (SCATTER_BLOCK_BYTES / 4 / k.max(1)).clamp(64, cols)
+    };
+    let mut c0 = 0;
+    while c0 < cols {
+        let c1 = (c0 + block).min(cols);
+        for (i, &l) in labels.iter().enumerate() {
+            let src = &x[i * cols + c0..i * cols + c1];
+            let dst =
+                &mut out[l as usize * cols + c0..l as usize * cols + c1];
+            acc_add(dst, src);
+        }
+        c0 = c1;
+    }
+}
+
+/// Transposed scatter for one sample-major row: `out[labels[j]] +=
+/// src[j]`. The per-element gather/scatter conflicts make SIMD
+/// unprofitable here (`k ≪ p`, the output row stays L1-resident), so
+/// both backends share this scalar loop — which also makes its
+/// accumulation order trivially identical to the voxel-major scatter.
+pub fn scatter_add_cols(labels: &[u32], src: &[f32], out: &mut [f32]) {
+    assert_eq!(
+        labels.len(),
+        src.len(),
+        "scatter_add_cols: length mismatch"
+    );
+    for (&l, &v) in labels.iter().zip(src) {
+        out[l as usize] += v;
+    }
+}
+
+/// Numerically stable logistic function (tanh form). Shared scalar
+/// implementation — transcendentals stay on the libm path in both
+/// backends so dispatch can never change their bits.
+#[inline]
+pub fn sigmoid(z: f32) -> f32 {
+    0.5 * ((0.5 * z).tanh() + 1.0)
+}
+
+/// `z[i] = sigmoid(z[i])` — the prediction epilogue.
+pub fn sigmoid_inplace(z: &mut [f32]) {
+    for v in z.iter_mut() {
+        *v = sigmoid(*v);
+    }
+}
+
+/// One fused logistic-regression gradient row: computes the margin
+/// `z = bias + row · w`, the sigmoid residual `r = σ(z) − y`, and
+/// accumulates `gw += r · row`; returns `(z, r)` for the caller's
+/// loss bookkeeping. The row is read by `dot` and re-read by `axpy`
+/// while still cache-hot — one streaming pass over the sample matrix
+/// per gradient evaluation.
+#[inline]
+pub fn logreg_row_grad(
+    row: &[f32],
+    w: &[f32],
+    bias: f32,
+    y: f32,
+    gw: &mut [f32],
+) -> (f32, f32) {
+    let z = bias + dot(row, w);
+    let r = sigmoid(z) - y;
+    axpy(gw, r, row);
+    (z, r)
+}
+
+/// `max_i |v[i]|` (0.0 for an empty slice). Max is order-insensitive,
+/// so a single shared implementation serves both backends; LLVM
+/// vectorizes the maxnum reduction freely.
+pub fn max_abs(v: &[f32]) -> f32 {
+    let mut m = 0.0f32;
+    for &x in v {
+        m = m.max(x.abs());
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_is_stable_and_named() {
+        let b = backend();
+        assert_eq!(b, backend());
+        assert!(matches!(b.name(), "portable" | "avx2"));
+    }
+
+    #[test]
+    fn dot_and_sqdist_tiny_values() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [4.0f32, 5.0, 6.0];
+        assert_eq!(dot(&a, &b), 32.0);
+        assert_eq!(sqdist(&a, &b), 27.0);
+        assert_eq!(dot(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn elementwise_ops_match_spec() {
+        let mut d = vec![1.0f32, 2.0, 3.0];
+        acc_add(&mut d, &[10.0, 20.0, 30.0]);
+        assert_eq!(d, vec![11.0, 22.0, 33.0]);
+        axpy(&mut d, 2.0, &[1.0, 1.0, 1.0]);
+        assert_eq!(d, vec![13.0, 24.0, 35.0]);
+        scale(&mut d, 0.5);
+        assert_eq!(d, vec![6.5, 12.0, 17.5]);
+        scale_by(&mut d, &[2.0, 1.0, 0.0]);
+        assert_eq!(d, vec![13.0, 12.0, 0.0]);
+        let mut o = vec![0.0f32; 3];
+        scale_from(&mut o, &d, 2.0);
+        assert_eq!(o, vec![26.0, 24.0, 0.0]);
+    }
+
+    #[test]
+    fn scatter_add_rows_matches_naive() {
+        let labels = [1u32, 0, 1];
+        let x = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut out = vec![0.0f32; 4];
+        scatter_add_rows(&labels, &x, 2, &mut out);
+        assert_eq!(out, vec![3.0, 4.0, 6.0, 8.0]);
+        // zero-column matrices are a no-op, not a panic
+        let mut empty: Vec<f32> = Vec::new();
+        scatter_add_rows(&[0, 1], &[], 0, &mut empty);
+    }
+
+    #[test]
+    fn scatter_add_cols_matches_naive() {
+        let labels = [1u32, 0, 1];
+        let mut out = vec![0.0f32; 2];
+        scatter_add_cols(&labels, &[1.0, 2.0, 3.0], &mut out);
+        assert_eq!(out, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn gemv_bias_matches_rows() {
+        let data = [1.0f32, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let mut out = vec![0.0f32; 3];
+        gemv_bias(&data, 2, &[3.0, 5.0], 1.0, &mut out);
+        assert_eq!(out, vec![4.0, 6.0, 9.0]);
+    }
+
+    #[test]
+    fn logreg_row_grad_is_dot_sigmoid_axpy() {
+        let row = [1.0f32, -2.0];
+        let w = [0.5f32, 0.25];
+        let mut gw = vec![0.0f32; 2];
+        let (z, r) = logreg_row_grad(&row, &w, 0.125, 1.0, &mut gw);
+        assert_eq!(z, 0.125);
+        assert_eq!(r, sigmoid(0.125) - 1.0);
+        assert_eq!(gw, vec![r, -2.0 * r]);
+    }
+
+    #[test]
+    fn max_abs_handles_sign_and_empty() {
+        assert_eq!(max_abs(&[]), 0.0);
+        assert_eq!(max_abs(&[-3.0, 2.0, 1.0]), 3.0);
+    }
+
+    #[test]
+    fn sigmoid_is_symmetric() {
+        assert_eq!(sigmoid(0.0), 0.5);
+        let s = sigmoid(2.0) + sigmoid(-2.0);
+        assert!((s - 1.0).abs() < 1e-6);
+    }
+}

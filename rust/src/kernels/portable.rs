@@ -1,0 +1,119 @@
+//! Portable fixed-lane kernel implementations.
+//!
+//! Every loop is written against a fixed [`LANES`]-wide accumulator
+//! (or as an independent element-wise operation) so that:
+//!
+//! 1. LLVM's autovectorizer maps it onto whatever SIMD the target
+//!    offers (SSE2 on baseline `x86-64`, NEON on aarch64, …) without
+//!    any floating-point reassociation being needed, and
+//! 2. the results are bit-identical to the [`super::avx2`] path,
+//!    which uses the same lane assignment, the same tail handling and
+//!    the shared [`super::hsum`] collapse tree.
+//!
+//! These functions are `pub` because the equivalence suite and the
+//! microbench address each backend explicitly; production code calls
+//! the dispatched wrappers in [`super`].
+
+use super::{hsum, LANES};
+
+/// `dst[i] += src[i]` (element-wise, no reassociation).
+pub fn acc_add(dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+/// `dst[i] += a * src[i]` (separate mul and add, matching AVX2).
+pub fn axpy(dst: &mut [f32], a: f32, src: &[f32]) {
+    assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += a * s;
+    }
+}
+
+/// `dst[i] *= s`.
+pub fn scale(dst: &mut [f32], s: f32) {
+    for d in dst.iter_mut() {
+        *d *= s;
+    }
+}
+
+/// `dst[i] *= scales[i]`.
+pub fn scale_by(dst: &mut [f32], scales: &[f32]) {
+    assert_eq!(dst.len(), scales.len());
+    for (d, &s) in dst.iter_mut().zip(scales) {
+        *d *= s;
+    }
+}
+
+/// `dst[i] = s * src[i]`.
+pub fn scale_from(dst: &mut [f32], src: &[f32], s: f32) {
+    assert_eq!(dst.len(), src.len());
+    for (d, &v) in dst.iter_mut().zip(src) {
+        *d = s * v;
+    }
+}
+
+/// Fixed-lane dot product: lane `l` accumulates elements
+/// `l, l+LANES, …`; the tail folds into lanes `0..len % LANES`; the
+/// lanes collapse through [`hsum`].
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; LANES];
+    let blocks = a.len() / LANES;
+    for i in 0..blocks {
+        let pa = &a[i * LANES..(i + 1) * LANES];
+        let pb = &b[i * LANES..(i + 1) * LANES];
+        for l in 0..LANES {
+            acc[l] += pa[l] * pb[l];
+        }
+    }
+    let base = blocks * LANES;
+    for l in 0..a.len() - base {
+        acc[l] += a[base + l] * b[base + l];
+    }
+    hsum(&acc)
+}
+
+/// Fixed-lane squared distance, same lane discipline as [`dot`].
+pub fn sqdist(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; LANES];
+    let blocks = a.len() / LANES;
+    for i in 0..blocks {
+        let pa = &a[i * LANES..(i + 1) * LANES];
+        let pb = &b[i * LANES..(i + 1) * LANES];
+        for l in 0..LANES {
+            let d = pa[l] - pb[l];
+            acc[l] += d * d;
+        }
+    }
+    let base = blocks * LANES;
+    for l in 0..a.len() - base {
+        let d = a[base + l] - b[base + l];
+        acc[l] += d * d;
+    }
+    hsum(&acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_covers_tail_lanes() {
+        // len 11: one full block + tail of 3 into lanes 0..3
+        let a: Vec<f32> = (1..=11).map(|i| i as f32).collect();
+        let b = vec![2.0f32; 11];
+        assert_eq!(dot(&a, &b), 2.0 * 66.0);
+    }
+
+    #[test]
+    fn sqdist_is_symmetric_and_zero_on_self() {
+        let a: Vec<f32> = (0..13).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..13).map(|i| 13.0 - i as f32).collect();
+        assert_eq!(sqdist(&a, &b), sqdist(&b, &a));
+        assert_eq!(sqdist(&a, &a), 0.0);
+    }
+}

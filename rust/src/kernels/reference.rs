@@ -1,0 +1,151 @@
+//! The pre-refactor scalar reference implementations.
+//!
+//! These are the exact inner loops the hot paths used before the
+//! kernel layer existed (sequential accumulation, one element at a
+//! time). They serve two purposes:
+//!
+//! * `repro bench-kernels` times every kernel against its reference,
+//!   so the committed `BENCH_kernels.json` speedups are measured
+//!   against the code the kernels replaced, not against a strawman;
+//! * the equivalence suite uses them as oracles — element-wise
+//!   kernels and the scatter-accumulate reduce must match them
+//!   **bit-for-bit** (their per-element operations are identical and
+//!   order-preserving), while the lane-accumulated reductions (dot,
+//!   squared distance, GEMV) must agree to floating-point tolerance
+//!   (the lane split reassociates the sum on purpose).
+//!
+//! Nothing in the production paths calls into this module.
+
+/// Sequential dot product (the pre-refactor logreg margin loop).
+pub fn dot_seq(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let mut s = 0.0f32;
+    for j in 0..a.len() {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// Sequential squared distance (the pre-refactor `sqdist`).
+pub fn sqdist_seq(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let mut s = 0.0f32;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+/// Sequential `dst[i] += src[i]` (the pre-refactor scatter row op).
+pub fn acc_add_seq(dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len());
+    for j in 0..dst.len() {
+        dst[j] += src[j];
+    }
+}
+
+/// Sequential `dst[i] += a * src[i]` (the pre-refactor gradient
+/// accumulation).
+pub fn axpy_seq(dst: &mut [f32], a: f32, src: &[f32]) {
+    assert_eq!(dst.len(), src.len());
+    for j in 0..dst.len() {
+        dst[j] += a * src[j];
+    }
+}
+
+/// Sequential `dst[i] = s * src[i]` (the pre-refactor scaled expand).
+pub fn scale_from_seq(dst: &mut [f32], src: &[f32], s: f32) {
+    assert_eq!(dst.len(), src.len());
+    for j in 0..dst.len() {
+        dst[j] = s * src[j];
+    }
+}
+
+/// The pre-refactor `ClusterReduce::reduce_sums` loop: scatter each
+/// row of the row-major `(labels.len(), cols)` matrix into row
+/// `labels[i]` of a zeroed `(k, cols)` output.
+pub fn scatter_add_rows_seq(
+    labels: &[u32],
+    x: &[f32],
+    cols: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), labels.len() * cols);
+    for (i, &l) in labels.iter().enumerate() {
+        let src = &x[i * cols..(i + 1) * cols];
+        let dst = &mut out[l as usize * cols..(l as usize + 1) * cols];
+        for j in 0..cols {
+            dst[j] += src[j];
+        }
+    }
+}
+
+/// The pre-refactor dense GEMV: `out[r] = bias + row_r · w` with a
+/// sequential inner accumulation.
+pub fn gemv_bias_seq(
+    data: &[f32],
+    cols: usize,
+    w: &[f32],
+    bias: f32,
+    out: &mut [f32],
+) {
+    assert_eq!(w.len(), cols);
+    assert_eq!(data.len(), out.len() * cols);
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = &data[r * cols..(r + 1) * cols];
+        let mut z = bias;
+        for j in 0..cols {
+            z += row[j] * w[j];
+        }
+        *o = z;
+    }
+}
+
+/// The pre-refactor fused logreg gradient row: sequential margin,
+/// sigmoid residual, sequential `gw += r · row`; returns `(z, r)`.
+pub fn logreg_row_grad_seq(
+    row: &[f32],
+    w: &[f32],
+    bias: f32,
+    y: f32,
+    gw: &mut [f32],
+) -> (f32, f32) {
+    let mut z = bias;
+    for j in 0..row.len() {
+        z += row[j] * w[j];
+    }
+    let r = super::sigmoid(z) - y;
+    for j in 0..row.len() {
+        gw[j] += r * row[j];
+    }
+    (z, r)
+}
+
+/// The pre-refactor gradient infinity norm fold.
+pub fn max_abs_seq(v: &[f32]) -> f32 {
+    let mut m = 0.0f32;
+    for &x in v {
+        m = m.max(x.abs());
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn references_agree_on_tiny_exact_cases() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [4.0f32, 5.0, 6.0];
+        assert_eq!(dot_seq(&a, &b), 32.0);
+        assert_eq!(sqdist_seq(&a, &b), 27.0);
+        let mut d = [1.0f32, 1.0, 1.0];
+        acc_add_seq(&mut d, &a);
+        assert_eq!(d, [2.0, 3.0, 4.0]);
+        axpy_seq(&mut d, 2.0, &b);
+        assert_eq!(d, [10.0, 13.0, 16.0]);
+        assert_eq!(max_abs_seq(&[-5.0, 4.0]), 5.0);
+    }
+}

@@ -71,6 +71,17 @@
 //! copy (CLI: `repro fit --save` / `repro predict --model` /
 //! `repro serve --model --port --workers`).
 //!
+//! ## Kernel layer (ADR-005)
+//!
+//! The compute hot paths — scatter-accumulate reduction, the logreg
+//! GEMV/gradient step, squared distances, scaled expansion — run on
+//! the [`kernels`] module: cache-blocked, fixed-lane f32 kernels with
+//! runtime dispatch between a portable autovectorized path and an
+//! AVX2 path. Both paths are bit-identical by construction, so
+//! dispatch never perturbs the crate's exactness contracts
+//! (`repro bench-kernels` measures them against the pre-refactor
+//! scalar loops).
+//!
 //! See `examples/` for full pipelines (decoding, ICA, percolation) and
 //! `rust/src/bench_harness/` for the figure-by-figure reproduction of
 //! the paper's evaluation (plus the sharded-engine scaling sweep and
@@ -91,6 +102,7 @@ pub mod error;
 pub mod estimators;
 pub mod graph;
 pub mod json;
+pub mod kernels;
 pub mod linalg;
 pub mod model;
 pub mod reduce;

@@ -30,8 +30,12 @@
 //!   [--json PATH]                   #   ... write BENCH_*.json report
 //! repro bench-sharded [--quick]     # sharded bench + JSON report
 //!   [--json PATH]
+//! repro bench-kernels [--quick]     # ADR-005 kernels vs their
+//!   [--json PATH]                   #   scalar references (+ gates)
 //! repro bench-check --current A     # gate a bench report against a
 //!   --baseline B [--factor F]       #   committed baseline (CI)
+//! repro bench-promote --current A   # stage a measured report as a
+//!   --out B [--note S]              #   committed-baseline candidate
 //! repro runtime-check               # PJRT artifact smoke test (pjrt)
 //! ```
 //!
@@ -44,9 +48,9 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 
 use fastclust::bench_harness::{
-    fig2, fig3, fig4, fig5, fig6, fig7, load_bench_report,
-    regression_failures, sharded, streaming, with_provenance,
-    write_bench_report, write_csv, Table,
+    fig2, fig3, fig4, fig5, fig6, fig7, kernels as kernel_bench,
+    load_bench_report, regression_failures, sharded, streaming,
+    with_provenance, write_bench_report, write_csv, Table,
 };
 use fastclust::cluster::FastCluster;
 use fastclust::config::{DataConfig, ExperimentConfig};
@@ -599,6 +603,86 @@ fn bench_sharded_cmd(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+fn bench_kernels_cmd(cli: &Cli) -> Result<()> {
+    let quick = cli.flags.contains_key("quick");
+    let cfg = if quick {
+        kernel_bench::KernelBenchConfig::quick()
+    } else {
+        kernel_bench::KernelBenchConfig::default()
+    };
+    let r = kernel_bench::run(&cfg)?;
+    kernel_bench::table(&r).print();
+    if let Some(path) = cli.flags.get("json") {
+        let rep = with_provenance(
+            kernel_bench::report_json(&r),
+            if quick {
+                "recorded by `repro bench-kernels --quick`"
+            } else {
+                "recorded by `repro bench-kernels`"
+            },
+        );
+        write_bench_report(&PathBuf::from(path), &rep)?;
+        println!("[json] {path}");
+    }
+    kernel_bench::check_gates(&r)
+}
+
+/// `repro bench-promote`: validate a measured bench report (it must
+/// carry the provenance block the `--json` benches stamp) and write
+/// it where a committed `BENCH_*.json` baseline lives — the promotion
+/// step that turns hand-seeded estimates into CI-measured numbers.
+/// CI's perf-smoke job stages candidates under `bench_out/promoted/`
+/// on every push; committing one of those artifacts IS the promotion.
+fn bench_promote(cli: &Cli) -> Result<()> {
+    let current = cli
+        .flags
+        .get("current")
+        .ok_or_else(|| invalid("bench-promote needs --current PATH"))?;
+    let out = cli
+        .flags
+        .get("out")
+        .ok_or_else(|| invalid("bench-promote needs --out PATH"))?;
+    let mut rep = load_bench_report(&PathBuf::from(current))?;
+    // require the run-time stamp: hand-seeded baselines carry a
+    // provenance block too, but only a live bench run (via
+    // with_provenance) writes `recorded_at_run`
+    let recorded = rep
+        .get("provenance")
+        .and_then(|p| p.get("recorded_at_run"))
+        .and_then(fastclust::json::Value::as_bool)
+        .unwrap_or(false);
+    if !recorded {
+        return Err(invalid(format!(
+            "{current}: provenance lacks the `recorded_at_run` stamp \
+             — promote only reports written by a bench run with \
+             --json, not hand-seeded or edited baselines"
+        )));
+    }
+    if let Some(note) = cli.flags.get("note") {
+        if let fastclust::json::Value::Obj(m) = &mut rep {
+            if let Some(fastclust::json::Value::Obj(p)) =
+                m.get_mut("provenance")
+            {
+                p.insert(
+                    "note".into(),
+                    fastclust::json::Value::Str(note.clone()),
+                );
+            }
+        }
+    }
+    let metrics = rep
+        .get("metrics")
+        .and_then(fastclust::json::Value::as_obj)
+        .map(|m| m.len())
+        .unwrap_or(0);
+    write_bench_report(&PathBuf::from(out), &rep)?;
+    println!(
+        "[promote] {current} -> {out} ({metrics} metrics, measured \
+         provenance preserved)"
+    );
+    Ok(())
+}
+
 fn bench_check(cli: &Cli) -> Result<()> {
     let current = cli
         .flags
@@ -672,7 +756,9 @@ fn dispatch(cli: &Cli) -> Result<()> {
         "serve" => serve_cmd(cli),
         "bench-streaming" => bench_streaming_cmd(cli),
         "bench-sharded" => bench_sharded_cmd(cli),
+        "bench-kernels" => bench_kernels_cmd(cli),
         "bench-check" => bench_check(cli),
+        "bench-promote" => bench_promote(cli),
         "runtime-check" => runtime_check(),
         other => {
             eprintln!("unknown subcommand '{other}'");
@@ -683,7 +769,8 @@ fn dispatch(cli: &Cli) -> Result<()> {
 }
 
 const USAGE: &str = "usage: repro <fig1..fig7|all|sharded|decode|fit|\
-predict|serve|bench-streaming|bench-sharded|bench-check|runtime-check> \
+predict|serve|bench-streaming|bench-sharded|bench-kernels|bench-check|\
+bench-promote|runtime-check> \
 [--scale S] [--seed N] [--out DIR] [--config FILE] [--stream] \
 [--chunk-samples N] [--reservoir R] [--sgd-epochs E] [--data STEM] \
 [--save MODEL.fcm] [--model MODEL.fcm] [--note S] [--port P] \

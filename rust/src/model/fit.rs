@@ -161,13 +161,13 @@ pub fn fit_model(
         data_seed: data_cfg.seed,
         note: opts.note.clone(),
     };
-    let model = FittedModel {
+    let model = FittedModel::from_parts(
         header,
-        mask_dims: ds.mask().dims,
-        voxels: ds.mask().voxels.clone(),
+        ds.mask().dims,
+        ds.mask().voxels.clone(),
         reduction,
-        folds: fold_models,
-    };
+        fold_models,
+    );
     model.validate()?;
     Ok(model)
 }

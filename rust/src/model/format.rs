@@ -524,7 +524,8 @@ pub fn load_model(path: &Path) -> Result<FittedModel> {
         reduction.ok_or_else(|| invalid("fcm file has no REDU section"))?;
     let folds =
         folds.ok_or_else(|| invalid("fcm file has no FOLD section"))?;
-    let model = FittedModel { header, mask_dims, voxels, reduction, folds };
+    let model =
+        FittedModel::from_parts(header, mask_dims, voxels, reduction, folds);
     model.validate()?;
     Ok(model)
 }

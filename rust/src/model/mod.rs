@@ -33,6 +33,8 @@ pub mod format;
 pub use fit::{fit_model, FitOptions};
 pub use format::{crc32, load_model, read_fcm_header, save_model};
 
+use std::sync::{Arc, OnceLock};
+
 use crate::config::Method;
 use crate::error::{invalid, Result};
 use crate::estimators::{FoldModel, LogisticRegression};
@@ -121,9 +123,67 @@ pub struct FittedModel {
     /// One fitted estimator per CV fold, with held-out indices and
     /// fit-time test accuracy.
     pub folds: Vec<FoldModel>,
+    /// Lazily rebuilt apply-only cluster operator, shared across
+    /// requests and threads (the serve hot path must not clone +
+    /// re-validate the p-length label vector per request). Never
+    /// serialized; clones share the cache. Fills on first apply, so
+    /// a model must not have its `reduction` swapped after serving
+    /// has begun (models are load-then-immutable everywhere in this
+    /// crate).
+    reduce_cache: Arc<OnceLock<ClusterReduce>>,
 }
 
 impl FittedModel {
+    /// Assemble a model from its parts (the reduce cache starts
+    /// empty and fills on first apply).
+    pub fn from_parts(
+        header: ModelHeader,
+        mask_dims: [usize; 3],
+        voxels: Vec<u32>,
+        reduction: ReductionOp,
+        folds: Vec<FoldModel>,
+    ) -> Self {
+        // Build the cluster operator eagerly so the cache can never
+        // observe a later mutation of `reduction`; invalid labels
+        // leave it empty and surface through validate()/compress.
+        let reduce_cache = Arc::new(OnceLock::new());
+        if let ReductionOp::Cluster { k, labels } = &reduction {
+            if let Ok(r) = ClusterReduce::from_raw(labels.clone(), *k) {
+                let _ = reduce_cache.set(r);
+            }
+        }
+        FittedModel {
+            header,
+            mask_dims,
+            voxels,
+            reduction,
+            folds,
+            reduce_cache,
+        }
+    }
+
+    /// The cached apply-only cluster operator (built on first use,
+    /// then shared by every subsequent request and clone). Errors on
+    /// non-cluster models.
+    fn cluster_reduce(&self) -> Result<&ClusterReduce> {
+        if let Some(r) = self.reduce_cache.get() {
+            return Ok(r);
+        }
+        let built = match &self.reduction {
+            ReductionOp::Cluster { k, labels } => {
+                ClusterReduce::from_raw(labels.clone(), *k)?
+            }
+            other => {
+                return Err(invalid(format!(
+                    "cluster_reduce on a non-cluster model: {other:?}"
+                )))
+            }
+        };
+        // racing initializers build identical operators; first wins
+        let _ = self.reduce_cache.set(built);
+        Ok(self.reduce_cache.get().expect("cache just initialized"))
+    }
+
     /// Check the cross-section shape invariants the format relies on.
     pub fn validate(&self) -> Result<()> {
         if self.voxels.len() != self.header.p {
@@ -184,12 +244,20 @@ impl FittedModel {
 
     /// Compress a `(c, p)` sample-major block of voxel-space samples
     /// into `(c, k)` reduced features — the serve `compress` verb.
+    ///
+    /// Cluster models take the fused sample-major scatter path
+    /// ([`ClusterReduce::reduce_sample_major`], ADR-005), which skips
+    /// both `(p, c)` transpose copies the generic path materializes
+    /// per request while producing bit-identical features.
     pub fn compress(&self, x: &FeatureMatrix) -> Result<FeatureMatrix> {
         if x.cols != self.header.p {
             return Err(invalid(format!(
                 "compress: samples have {} voxels, model expects {}",
                 x.cols, self.header.p
             )));
+        }
+        if let ReductionOp::Cluster { .. } = &self.reduction {
+            return Ok(self.cluster_reduce()?.reduce_sample_major(x));
         }
         let reducer = self.reducer()?;
         // Reducer works voxel-major: (p, c) in, (k, c) out.
@@ -231,8 +299,14 @@ impl FittedModel {
         if labels01.len() != ds.n() {
             return Err(invalid("labels must match sample count"));
         }
-        let reducer = self.reducer()?;
-        let xs = reducer.reduce(ds.data()).transpose(); // (n, k)
+        // cluster models reuse the cached operator (no label clone /
+        // re-validation); the generic path covers random projections
+        let xs = match &self.reduction {
+            ReductionOp::Cluster { .. } => {
+                self.cluster_reduce()?.reduce(ds.data()).transpose()
+            }
+            _ => self.reducer()?.reduce(ds.data()).transpose(),
+        }; // (n, k)
         let y: Vec<f32> = labels01.iter().map(|&l| l as f32).collect();
         let mut out = Vec::with_capacity(self.folds.len());
         for f in &self.folds {
@@ -283,34 +357,32 @@ mod tests {
     use crate::estimators::LogregFit;
 
     fn tiny_model() -> FittedModel {
-        FittedModel {
-            header: ModelHeader {
-                method: Method::Fast,
-                k: 2,
-                p: 4,
-                n: 6,
-                reduce_seed: 1,
-                shards: 0,
-                lambda: 1e-3,
-                tol: 1e-5,
-                max_iter: 100,
-                cv_folds: 2,
-                sgd_epochs: 0,
-                sgd_chunk: 32,
-                data_dims: [2, 2, 1],
-                data_n_samples: 6,
-                data_fwhm: 6.0,
-                data_noise_sigma: 1.0,
-                data_seed: 42,
-                note: String::new(),
-            },
-            mask_dims: [2, 2, 1],
-            voxels: vec![0, 1, 2, 3],
-            reduction: ReductionOp::Cluster {
-                k: 2,
-                labels: vec![0, 0, 1, 1],
-            },
-            folds: vec![FoldModel {
+        let header = ModelHeader {
+            method: Method::Fast,
+            k: 2,
+            p: 4,
+            n: 6,
+            reduce_seed: 1,
+            shards: 0,
+            lambda: 1e-3,
+            tol: 1e-5,
+            max_iter: 100,
+            cv_folds: 2,
+            sgd_epochs: 0,
+            sgd_chunk: 32,
+            data_dims: [2, 2, 1],
+            data_n_samples: 6,
+            data_fwhm: 6.0,
+            data_noise_sigma: 1.0,
+            data_seed: 42,
+            note: String::new(),
+        };
+        FittedModel::from_parts(
+            header,
+            [2, 2, 1],
+            vec![0, 1, 2, 3],
+            ReductionOp::Cluster { k: 2, labels: vec![0, 0, 1, 1] },
+            vec![FoldModel {
                 test: vec![0, 1, 2],
                 accuracy: 1.0,
                 fit: LogregFit {
@@ -322,7 +394,7 @@ mod tests {
                     grad_norm: 1e-6,
                 },
             }],
-        }
+        )
     }
 
     #[test]

@@ -4,13 +4,17 @@
 //!
 //! This is the production hot path of the whole library (every sample
 //! of every experiment flows through [`ClusterReduce::reduce`]), so the
-//! inner loops are written for streaming memory access: one pass over
-//! `X` row-major, scattering each voxel row into its cluster
-//! accumulator.
+//! inner loops run on the kernel layer (ADR-005): one cache-blocked
+//! pass over `X` row-major, scattering each voxel row into its
+//! cluster accumulator with [`crate::kernels::scatter_add_rows`], then
+//! a vectorized per-cluster normalization. Kernel dispatch is
+//! bit-stable, so the reduction keeps its exactness contracts
+//! (chunked == in-memory, fit == apply) on every CPU.
 
 use super::Reducer;
 use crate::cluster::{cluster_counts, Labels};
 use crate::error::Result;
+use crate::kernels;
 use crate::volume::FeatureMatrix;
 
 /// Cluster-mean compression operator built from a partition.
@@ -84,26 +88,64 @@ impl ClusterReduce {
         let mut out = self.reduce_sums(x);
         for c in 0..self.k {
             let s = (self.counts[c].max(1) as f32).sqrt().recip();
-            for v in out.row_mut(c) {
-                *v *= s;
-            }
+            kernels::scale(out.row_mut(c), s);
         }
         out
     }
 
-    /// Per-cluster sums `U^T X` (no normalization).
+    /// Scaled expansion `U X_k / sqrt(counts)` — the right inverse of
+    /// [`ClusterReduce::reduce_scaled`]: composing the two reproduces
+    /// [`ClusterReduce::project`] up to floating-point rounding while
+    /// staying an isometry on piecewise-constant signals.
+    pub fn expand_scaled(&self, xk: &FeatureMatrix) -> FeatureMatrix {
+        assert_eq!(xk.rows, self.k, "expand_scaled: rows != k");
+        let p = self.labels.len();
+        // k sqrt/recip pairs, not p: voxels share their cluster scale
+        let scales: Vec<f32> = self
+            .counts
+            .iter()
+            .map(|&c| (c.max(1) as f32).sqrt().recip())
+            .collect();
+        let mut out = FeatureMatrix::zeros(p, xk.cols);
+        for i in 0..p {
+            let c = self.labels[i] as usize;
+            kernels::scale_from(out.row_mut(i), xk.row(c), scales[c]);
+        }
+        out
+    }
+
+    /// Reduce a **sample-major** `(c, p)` block directly to `(c, k)`
+    /// cluster means — the serve-path batch compress. Equivalent to
+    /// `reduce(x.transpose()).transpose()` without materializing
+    /// either transpose: per sample, voxels scatter into the k-length
+    /// output row in ascending voxel order — the very same addition
+    /// sequence the voxel-major path performs per column — so the two
+    /// paths are bit-identical.
+    pub fn reduce_sample_major(&self, x: &FeatureMatrix) -> FeatureMatrix {
+        assert_eq!(
+            x.cols,
+            self.labels.len(),
+            "reduce_sample_major: cols != p"
+        );
+        let mut out = FeatureMatrix::zeros(x.rows, self.k);
+        for r in 0..x.rows {
+            kernels::scatter_add_cols(
+                &self.labels,
+                x.row(r),
+                out.row_mut(r),
+            );
+            kernels::scale_by(out.row_mut(r), &self.inv_counts);
+        }
+        out
+    }
+
+    /// Per-cluster sums `U^T X` (no normalization) — one cache-blocked
+    /// scatter pass over `X` (ADR-005).
     fn reduce_sums(&self, x: &FeatureMatrix) -> FeatureMatrix {
         assert_eq!(x.rows, self.labels.len(), "reduce: rows != p");
         let n = x.cols;
         let mut out = FeatureMatrix::zeros(self.k, n);
-        for i in 0..x.rows {
-            let c = self.labels[i] as usize;
-            let src = x.row(i);
-            let dst = out.row_mut(c);
-            for j in 0..n {
-                dst[j] += src[j];
-            }
-        }
+        kernels::scatter_add_rows(&self.labels, &x.data, n, &mut out.data);
         out
     }
 }
@@ -121,10 +163,7 @@ impl Reducer for ClusterReduce {
     fn reduce(&self, x: &FeatureMatrix) -> FeatureMatrix {
         let mut out = self.reduce_sums(x);
         for c in 0..self.k {
-            let s = self.inv_counts[c];
-            for v in out.row_mut(c) {
-                *v *= s;
-            }
+            kernels::scale(out.row_mut(c), self.inv_counts[c]);
         }
         out
     }
@@ -199,6 +238,30 @@ mod tests {
         let n_orig: f32 = x.data.iter().map(|v| v * v).sum();
         let n_red: f32 = xs.data.iter().map(|v| v * v).sum();
         assert!((n_orig - n_red).abs() < 1e-5);
+    }
+
+    #[test]
+    fn sample_major_reduce_is_bit_identical_to_transposed() {
+        let (x, r) = fixture();
+        // (n, p) sample-major view of the fixture
+        let xs = x.transpose();
+        let direct = r.reduce_sample_major(&xs);
+        let via_transpose = r.reduce(&x).transpose();
+        assert_eq!(direct.rows, 2);
+        assert_eq!(direct.cols, 3);
+        for (a, b) in direct.data.iter().zip(&via_transpose.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn expand_scaled_inverts_reduce_scaled() {
+        let (x, r) = fixture();
+        let back = r.expand_scaled(&r.reduce_scaled(&x));
+        let proj = r.project(&x);
+        for (a, b) in back.data.iter().zip(&proj.data) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
     }
 
     #[test]

@@ -93,9 +93,7 @@ impl ReduceAccumulator {
                 )));
             }
         }
-        for (a, &b) in self.out.data.iter_mut().zip(&other.out.data) {
-            *a += b;
-        }
+        crate::kernels::acc_add(&mut self.out.data, &other.out.data);
         for (w, &o) in self.written.iter_mut().zip(&other.written) {
             *w |= o;
         }

@@ -131,17 +131,11 @@ impl FeatureMatrix {
         out
     }
 
-    /// Squared Euclidean distance between two rows.
+    /// Squared Euclidean distance between two rows (kernel layer,
+    /// ADR-005).
     #[inline]
     pub fn row_sqdist(&self, a: usize, b: usize) -> f32 {
-        let ra = self.row(a);
-        let rb = self.row(b);
-        let mut s = 0.0f32;
-        for i in 0..self.cols {
-            let d = ra[i] - rb[i];
-            s += d * d;
-        }
-        s
+        crate::kernels::sqdist(self.row(a), self.row(b))
     }
 
     /// Frobenius norm.

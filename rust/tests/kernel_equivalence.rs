@@ -1,0 +1,339 @@
+//! ADR-005 determinism contract, enforced: the portable and AVX2
+//! kernel paths must be **bit-identical** to each other for every
+//! kernel, across sizes covering every remainder class
+//! `len % LANES ∈ 0..LANES`; element-wise kernels and the
+//! scatter-accumulate reduce must additionally be bit-identical to
+//! the pre-refactor scalar references (their per-element operations
+//! are unchanged and order-preserving); the lane-accumulated
+//! reductions (dot, sqdist, GEMV) must agree with an f64 oracle to
+//! tight tolerance (the lane split reassociates the f32 sum on
+//! purpose — that is the speedup).
+//!
+//! The `model_roundtrip` suite keeps asserting the `.fcm` fit/apply
+//! bit-for-bit guarantees end-to-end on top of these kernels; this
+//! file pins the layer underneath it.
+//!
+//! CI runs this suite twice: on the stock target and with
+//! `RUSTFLAGS="-C target-cpu=native"`, so autovectorization of the
+//! portable path can never drift it away from the AVX2 path.
+
+use fastclust::kernels::{self, portable, reference, LANES};
+use fastclust::rng::Rng;
+
+/// Sizes covering every `len % LANES` remainder class, plus block
+/// boundaries and a couple of long tails.
+fn test_lens() -> Vec<usize> {
+    let mut lens: Vec<usize> = (0..=2 * LANES + 1).collect();
+    lens.extend([63, 64, 65, 100, 127, 128, 129, 255, 256, 1000]);
+    lens
+}
+
+fn random_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; len];
+    rng.fill_normal(&mut v);
+    v
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: bit mismatch at {i}: {x} vs {y}"
+        );
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_on() -> bool {
+    fastclust::kernels::avx2::is_available()
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_on() -> bool {
+    false
+}
+
+// ---------------------------------------------------------- dot
+
+#[test]
+fn dot_portable_avx2_and_dispatch_bit_identical() {
+    let mut rng = Rng::new(1);
+    for len in test_lens() {
+        let a = random_vec(&mut rng, len);
+        let b = random_vec(&mut rng, len);
+        let pd = portable::dot(&a, &b);
+        let dd = kernels::dot(&a, &b);
+        assert_eq!(pd.to_bits(), dd.to_bits(), "dispatch, len={len}");
+        #[cfg(target_arch = "x86_64")]
+        if avx2_on() {
+            let ad = fastclust::kernels::avx2::dot(&a, &b);
+            assert_eq!(pd.to_bits(), ad.to_bits(), "avx2, len={len}");
+        }
+    }
+}
+
+#[test]
+fn dot_matches_f64_oracle_to_tolerance() {
+    let mut rng = Rng::new(2);
+    for len in test_lens() {
+        let a = random_vec(&mut rng, len);
+        let b = random_vec(&mut rng, len);
+        let oracle: f64 = a
+            .iter()
+            .zip(&b)
+            .map(|(&x, &y)| x as f64 * y as f64)
+            .sum();
+        let got = kernels::dot(&a, &b) as f64;
+        let seq = reference::dot_seq(&a, &b) as f64;
+        let tol = 1e-4 * (1.0 + oracle.abs() + len as f64 * 1e-3);
+        assert!(
+            (got - oracle).abs() < tol,
+            "len={len}: kernel {got} vs oracle {oracle}"
+        );
+        assert!(
+            (seq - oracle).abs() < tol,
+            "len={len}: reference {seq} vs oracle {oracle}"
+        );
+    }
+}
+
+// ------------------------------------------------------- sqdist
+
+#[test]
+fn sqdist_portable_avx2_and_dispatch_bit_identical() {
+    let mut rng = Rng::new(3);
+    for len in test_lens() {
+        let a = random_vec(&mut rng, len);
+        let b = random_vec(&mut rng, len);
+        let pd = portable::sqdist(&a, &b);
+        let dd = kernels::sqdist(&a, &b);
+        assert_eq!(pd.to_bits(), dd.to_bits(), "dispatch, len={len}");
+        #[cfg(target_arch = "x86_64")]
+        if avx2_on() {
+            let ad = fastclust::kernels::avx2::sqdist(&a, &b);
+            assert_eq!(pd.to_bits(), ad.to_bits(), "avx2, len={len}");
+        }
+        // the reference agrees to tolerance (it reassociates)
+        let seq = reference::sqdist_seq(&a, &b);
+        let tol = 1e-3 * (1.0 + seq.abs());
+        assert!((pd - seq).abs() < tol, "len={len}: {pd} vs {seq}");
+    }
+}
+
+// -------------------------------------------- element-wise kernels
+
+#[test]
+fn elementwise_kernels_bit_identical_to_references() {
+    let mut rng = Rng::new(4);
+    for len in test_lens() {
+        let src = random_vec(&mut rng, len);
+        let init = random_vec(&mut rng, len);
+        let a = 0.37f32;
+
+        let mut k1 = init.clone();
+        let mut r1 = init.clone();
+        kernels::acc_add(&mut k1, &src);
+        reference::acc_add_seq(&mut r1, &src);
+        assert_bits_eq(&k1, &r1, "acc_add");
+
+        let mut k2 = init.clone();
+        let mut r2 = init.clone();
+        kernels::axpy(&mut k2, a, &src);
+        reference::axpy_seq(&mut r2, a, &src);
+        assert_bits_eq(&k2, &r2, "axpy");
+
+        let mut k3 = vec![0.0f32; len];
+        let mut r3 = vec![0.0f32; len];
+        kernels::scale_from(&mut k3, &src, a);
+        reference::scale_from_seq(&mut r3, &src, a);
+        assert_bits_eq(&k3, &r3, "scale_from");
+
+        // scale and scale_by against their obvious scalar spec
+        let mut k4 = init.clone();
+        kernels::scale(&mut k4, a);
+        let spec4: Vec<f32> = init.iter().map(|v| v * a).collect();
+        assert_bits_eq(&k4, &spec4, "scale");
+
+        let mut k5 = init.clone();
+        kernels::scale_by(&mut k5, &src);
+        let spec5: Vec<f32> =
+            init.iter().zip(&src).map(|(v, s)| v * s).collect();
+        assert_bits_eq(&k5, &spec5, "scale_by");
+
+        assert_eq!(
+            kernels::max_abs(&src).to_bits(),
+            reference::max_abs_seq(&src).to_bits(),
+            "max_abs"
+        );
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[test]
+fn elementwise_kernels_portable_vs_avx2_bit_identical() {
+    if !avx2_on() {
+        return;
+    }
+    use fastclust::kernels::avx2;
+    let mut rng = Rng::new(5);
+    for len in test_lens() {
+        let src = random_vec(&mut rng, len);
+        let init = random_vec(&mut rng, len);
+        let a = -1.62f32;
+
+        let mut pp = init.clone();
+        let mut vv = init.clone();
+        portable::acc_add(&mut pp, &src);
+        avx2::acc_add(&mut vv, &src);
+        assert_bits_eq(&pp, &vv, "acc_add");
+
+        let mut pp = init.clone();
+        let mut vv = init.clone();
+        portable::axpy(&mut pp, a, &src);
+        avx2::axpy(&mut vv, a, &src);
+        assert_bits_eq(&pp, &vv, "axpy");
+
+        let mut pp = init.clone();
+        let mut vv = init.clone();
+        portable::scale(&mut pp, a);
+        avx2::scale(&mut vv, a);
+        assert_bits_eq(&pp, &vv, "scale");
+
+        let mut pp = init.clone();
+        let mut vv = init.clone();
+        portable::scale_by(&mut pp, &src);
+        avx2::scale_by(&mut vv, &src);
+        assert_bits_eq(&pp, &vv, "scale_by");
+
+        let mut pp = vec![0.0f32; len];
+        let mut vv = vec![0.0f32; len];
+        portable::scale_from(&mut pp, &src, a);
+        avx2::scale_from(&mut vv, &src, a);
+        assert_bits_eq(&pp, &vv, "scale_from");
+    }
+}
+
+// ------------------------------------------------ composite kernels
+
+#[test]
+fn gemv_bias_bit_stable_and_near_oracle() {
+    let mut rng = Rng::new(6);
+    for cols in [1usize, 3, 7, 8, 9, 16, 33, 100] {
+        let rows = 17;
+        let data = random_vec(&mut rng, rows * cols);
+        let w = random_vec(&mut rng, cols);
+        let mut out = vec![0.0f32; rows];
+        kernels::gemv_bias(&data, cols, &w, 0.5, &mut out);
+        // row r equals the dispatched dot kernel exactly
+        for r in 0..rows {
+            let want = 0.5 + kernels::dot(&data[r * cols..][..cols], &w);
+            assert_eq!(out[r].to_bits(), want.to_bits(), "row {r}");
+        }
+        // and the sequential reference to tolerance
+        let mut seq = vec![0.0f32; rows];
+        reference::gemv_bias_seq(&data, cols, &w, 0.5, &mut seq);
+        for r in 0..rows {
+            let tol = 1e-3 * (1.0 + seq[r].abs());
+            assert!((out[r] - seq[r]).abs() < tol, "row {r}");
+        }
+    }
+}
+
+#[test]
+fn scatter_add_rows_bit_identical_to_reference_across_shapes() {
+    let mut rng = Rng::new(7);
+    for &(p, k, cols) in
+        &[(13usize, 4usize, 1usize), (64, 8, 7), (100, 5, 65), (30, 1, 130)]
+    {
+        let labels: Vec<u32> =
+            (0..p).map(|_| rng.below(k) as u32).collect();
+        let x = random_vec(&mut rng, p * cols);
+        let mut got = vec![0.0f32; k * cols];
+        let mut want = vec![0.0f32; k * cols];
+        kernels::scatter_add_rows(&labels, &x, cols, &mut got);
+        reference::scatter_add_rows_seq(&labels, &x, cols, &mut want);
+        assert_bits_eq(&got, &want, "scatter_add_rows");
+
+        // the sample-major transpose scatter sums identically
+        let mut col_out = vec![0.0f32; k];
+        let ones = vec![1.0f32; p];
+        kernels::scatter_add_cols(&labels, &ones, &mut col_out);
+        let total: f32 = col_out.iter().sum();
+        assert_eq!(total, p as f32);
+    }
+}
+
+#[test]
+fn scatter_add_rows_multi_block_path_bit_identical() {
+    // Force the cache-blocked path to take MULTIPLE column blocks:
+    // block = clamp(SCATTER_BLOCK_BYTES/4/k, 64, cols), so k large
+    // enough drives block down to 64 while cols = 200 spans four
+    // blocks (64 + 64 + 64 + 8) — boundary arithmetic included.
+    let k = fastclust::kernels::SCATTER_BLOCK_BYTES / 4 / 64;
+    let (p, cols) = (50usize, 200usize);
+    let mut rng = Rng::new(11);
+    let labels: Vec<u32> = (0..p).map(|_| rng.below(k) as u32).collect();
+    let x = random_vec(&mut rng, p * cols);
+    let mut got = vec![0.0f32; k * cols];
+    let mut want = vec![0.0f32; k * cols];
+    kernels::scatter_add_rows(&labels, &x, cols, &mut got);
+    reference::scatter_add_rows_seq(&labels, &x, cols, &mut want);
+    // compare only touched rows (k·cols is ~13 MB of mostly zeros)
+    for &l in &labels {
+        let r = l as usize;
+        assert_bits_eq(
+            &got[r * cols..(r + 1) * cols],
+            &want[r * cols..(r + 1) * cols],
+            "multi-block row",
+        );
+    }
+    let gs: f64 = got.iter().map(|&v| v as f64).sum();
+    let ws: f64 = want.iter().map(|&v| v as f64).sum();
+    assert_eq!(gs.to_bits(), ws.to_bits(), "full-buffer checksum");
+}
+
+#[test]
+fn logreg_row_grad_fuses_exactly_its_parts() {
+    let mut rng = Rng::new(8);
+    for len in test_lens() {
+        let row = random_vec(&mut rng, len);
+        let w = random_vec(&mut rng, len);
+        let mut gw = vec![0.0f32; len];
+        let (z, r) =
+            kernels::logreg_row_grad(&row, &w, 0.25, 1.0, &mut gw);
+        let z_want = 0.25 + kernels::dot(&row, &w);
+        assert_eq!(z.to_bits(), z_want.to_bits(), "len={len}");
+        let r_want = kernels::sigmoid(z_want) - 1.0;
+        assert_eq!(r.to_bits(), r_want.to_bits(), "len={len}");
+        let mut gw_want = vec![0.0f32; len];
+        kernels::axpy(&mut gw_want, r_want, &row);
+        assert_bits_eq(&gw, &gw_want, "logreg gw");
+
+        // the sequential reference agrees to tolerance
+        let mut gw_seq = vec![0.0f32; len];
+        let (zs, _) = reference::logreg_row_grad_seq(
+            &row, &w, 0.25, 1.0, &mut gw_seq,
+        );
+        let tol = 1e-3 * (1.0 + zs.abs());
+        assert!((z - zs).abs() < tol, "len={len}: {z} vs {zs}");
+    }
+}
+
+// -------------------------------------------------- determinism
+
+#[test]
+fn kernels_are_deterministic_run_to_run() {
+    let mut rng = Rng::new(9);
+    let a = random_vec(&mut rng, 777);
+    let b = random_vec(&mut rng, 777);
+    assert_eq!(
+        kernels::dot(&a, &b).to_bits(),
+        kernels::dot(&a, &b).to_bits()
+    );
+    assert_eq!(
+        kernels::sqdist(&a, &b).to_bits(),
+        kernels::sqdist(&a, &b).to_bits()
+    );
+}
