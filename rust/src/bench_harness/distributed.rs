@@ -1,0 +1,343 @@
+//! Bench: the distributed fit vs the single-process fit (ADR-006
+//! acceptance numbers). Three runs on the Fig-6 synthetic cohort:
+//!
+//! * **local** — the reference [`fit_model`];
+//! * **distributed-clean** — N spawned workers, no faults: the saved
+//!   `.fcm` must be byte-identical to the local artifact;
+//! * **distributed-fault** — same fleet with worker 0 armed to die
+//!   mid-range (`kill:0`): the coordinator must recover *and* the
+//!   artifact must still be byte-identical.
+//!
+//! Both identity checks are hard gates — wall time is recorded for
+//! the trajectory (`BENCH_distributed.json`), but a fast wrong answer
+//! is a regression here, not a win.
+//!
+//! Caveat for callers: with `worker_bin = None` the workers are
+//! spawned from `current_exe()`, which is only correct when the
+//! calling process *is* the `repro` CLI. Tests must point
+//! `worker_bin` at `env!("CARGO_BIN_EXE_repro")`.
+
+use std::fs;
+use std::path::PathBuf;
+
+use crate::bench_harness::{trajectory, Table};
+use crate::config::{
+    DataConfig, EstimatorConfig, Method, ReduceConfig,
+};
+use crate::coordinator::{
+    run_distributed_fit, DistOptions, DistReport, FaultKind, FaultSpec,
+};
+use crate::error::{invalid, Result};
+use crate::json::Value;
+use crate::model::{fit_model, save_model, FitOptions};
+use crate::volume::MorphometryGenerator;
+
+/// Parameters of the distributed-vs-local comparison.
+#[derive(Clone, Debug)]
+pub struct DistBenchConfig {
+    /// Grid dims of the synthetic cohort.
+    pub dims: [usize; 3],
+    /// Subjects.
+    pub n_subjects: usize,
+    /// Compression ratio (`k = p / ratio`).
+    pub ratio: usize,
+    /// CV folds.
+    pub cv_folds: usize,
+    /// Worker processes to spawn.
+    pub workers: usize,
+    /// Root seed.
+    pub seed: u64,
+    /// Worker binary (`None` = `current_exe()`, CLI-only — see the
+    /// module caveat).
+    pub worker_bin: Option<PathBuf>,
+}
+
+impl Default for DistBenchConfig {
+    fn default() -> Self {
+        DistBenchConfig {
+            dims: [14, 16, 14],
+            n_subjects: 72,
+            ratio: 10,
+            cv_folds: 6,
+            workers: 3,
+            seed: 21,
+            worker_bin: None,
+        }
+    }
+}
+
+impl DistBenchConfig {
+    /// CI quick mode: small enough for a perf-smoke job, still
+    /// several jobs per worker so retries are exercised.
+    pub fn quick() -> Self {
+        DistBenchConfig {
+            dims: [9, 10, 8],
+            n_subjects: 24,
+            cv_folds: 3,
+            workers: 2,
+            ..Default::default()
+        }
+    }
+}
+
+/// Results of one comparison run.
+#[derive(Clone, Debug)]
+pub struct DistBenchResult {
+    /// Voxels in the cohort.
+    pub p: usize,
+    /// Samples in the cohort.
+    pub n: usize,
+    /// Mean CV accuracy (identical across all three runs by gate).
+    pub accuracy: f64,
+    /// Wall seconds, single-process fit.
+    pub local_secs: f64,
+    /// Wall seconds, distributed clean run.
+    pub dist_secs: f64,
+    /// Wall seconds, distributed run with the kill fault.
+    pub fault_secs: f64,
+    /// Clean-run scheduling report.
+    pub dist_report: DistReport,
+    /// Fault-run scheduling report.
+    pub fault_report: DistReport,
+    /// Clean `.fcm` bytes == local `.fcm` bytes.
+    pub identical_clean: bool,
+    /// Fault-run `.fcm` bytes == local `.fcm` bytes.
+    pub identical_fault: bool,
+}
+
+/// The ADR-006 acceptance gates: byte-identity with and without an
+/// injected failure. Shared by `repro bench-distributed` and the
+/// tests so the gates cannot drift.
+pub fn check_gates(r: &DistBenchResult) -> Result<()> {
+    if !r.identical_clean {
+        return Err(invalid(
+            "REGRESSION: distributed .fcm differs from the \
+             single-process artifact (clean run)",
+        ));
+    }
+    if !r.identical_fault {
+        return Err(invalid(
+            "REGRESSION: distributed .fcm differs from the \
+             single-process artifact after fault recovery",
+        ));
+    }
+    Ok(())
+}
+
+/// Run the comparison: fit locally, fit distributed (clean), fit
+/// distributed with worker 0 killed mid-range, byte-compare the
+/// three artifacts.
+pub fn run(cfg: &DistBenchConfig) -> Result<DistBenchResult> {
+    let dc = DataConfig {
+        dims: cfg.dims,
+        n_samples: cfg.n_subjects,
+        seed: cfg.seed,
+        ..Default::default()
+    };
+    let (ds, labels) =
+        MorphometryGenerator::new(dc.dims).generate(dc.n_samples, dc.seed);
+    let reduce = ReduceConfig {
+        method: Method::Fast,
+        k: 0,
+        ratio: cfg.ratio,
+        seed: cfg.seed,
+        shards: 0,
+    };
+    let est = EstimatorConfig {
+        cv_folds: cfg.cv_folds,
+        max_iter: 300,
+        ..Default::default()
+    };
+    let opts = FitOptions::default();
+    let dist = DistOptions {
+        workers: cfg.workers,
+        chunk_samples: (cfg.n_subjects / 6).max(4),
+        worker_bin: cfg.worker_bin.clone(),
+        ..Default::default()
+    };
+
+    let dir = std::env::temp_dir().join(format!(
+        "fastclust_dist_bench_{}",
+        std::process::id()
+    ));
+    fs::create_dir_all(&dir)?;
+
+    let t0 = std::time::Instant::now();
+    let local = fit_model(&ds, &labels, &reduce, &est, &dc, &opts)?;
+    let local_secs = t0.elapsed().as_secs_f64();
+    let local_path = dir.join("local.fcm");
+    save_model(&local_path, &local)?;
+    let local_bytes = fs::read(&local_path)?;
+
+    let t0 = std::time::Instant::now();
+    let (clean, dist_report) = run_distributed_fit(
+        &ds, &labels, &reduce, &est, &dc, &opts, &dist,
+    )?;
+    let dist_secs = t0.elapsed().as_secs_f64();
+    let clean_path = dir.join("clean.fcm");
+    save_model(&clean_path, &clean)?;
+    let identical_clean = fs::read(&clean_path)? == local_bytes;
+
+    let faulty = DistOptions {
+        inject: Some(FaultSpec { kind: FaultKind::Kill, worker: 0 }),
+        ..dist.clone()
+    };
+    let t0 = std::time::Instant::now();
+    let (fault, fault_report) = run_distributed_fit(
+        &ds, &labels, &reduce, &est, &dc, &opts, &faulty,
+    )?;
+    let fault_secs = t0.elapsed().as_secs_f64();
+    let fault_path = dir.join("fault.fcm");
+    save_model(&fault_path, &fault)?;
+    let identical_fault = fs::read(&fault_path)? == local_bytes;
+
+    let _ = fs::remove_dir_all(&dir);
+    let accs: Vec<f64> =
+        local.folds.iter().map(|f| f.accuracy).collect();
+    Ok(DistBenchResult {
+        p: ds.p(),
+        n: ds.n(),
+        accuracy: crate::stats::mean(&accs),
+        local_secs,
+        dist_secs,
+        fault_secs,
+        dist_report,
+        fault_report,
+        identical_clean,
+        identical_fault,
+    })
+}
+
+/// Render the comparison table.
+pub fn table(r: &DistBenchResult) -> Table {
+    let mut t = Table::new(
+        "Distributed fit vs single-process fit",
+        &["metric", "local", "distributed", "dist + kill fault"],
+    );
+    let yn = |b: bool| if b { "yes" } else { "NO" }.to_string();
+    t.row(vec![
+        "total secs".into(),
+        format!("{:.3}", r.local_secs),
+        format!("{:.3}", r.dist_secs),
+        format!("{:.3}", r.fault_secs),
+    ]);
+    t.row(vec![
+        "workers connected".into(),
+        "-".into(),
+        format!("{}", r.dist_report.workers_connected),
+        format!("{}", r.fault_report.workers_connected),
+    ]);
+    t.row(vec![
+        "retries".into(),
+        "-".into(),
+        format!("{}", r.dist_report.retries),
+        format!("{}", r.fault_report.retries),
+    ]);
+    t.row(vec![
+        "local fallbacks".into(),
+        "-".into(),
+        format!("{}", r.dist_report.local_jobs),
+        format!("{}", r.fault_report.local_jobs),
+    ]);
+    t.row(vec![
+        "workers lost".into(),
+        "-".into(),
+        format!("{}", r.dist_report.workers_lost),
+        format!("{}", r.fault_report.workers_lost),
+    ]);
+    t.row(vec![
+        ".fcm byte-identical".into(),
+        "(reference)".into(),
+        yn(r.identical_clean),
+        yn(r.identical_fault),
+    ]);
+    t.row(vec![
+        "accuracy".into(),
+        format!("{:.4}", r.accuracy),
+        format!("{:.4}", r.accuracy),
+        format!("{:.4}", r.accuracy),
+    ]);
+    t
+}
+
+/// Build the `BENCH_distributed.json` report for the CI trajectory.
+pub fn report_json(r: &DistBenchResult) -> Value {
+    let b = |v: bool| if v { 1.0 } else { 0.0 };
+    trajectory::bench_report(
+        "distributed",
+        vec![
+            ("local_fit_secs", r.local_secs),
+            ("dist_fit_secs", r.dist_secs),
+            ("fault_fit_secs", r.fault_secs),
+            (
+                "dist_overhead_factor",
+                r.dist_secs / r.local_secs.max(1e-9),
+            ),
+            (
+                "workers_connected",
+                r.dist_report.workers_connected as f64,
+            ),
+            ("fault_retries", r.fault_report.retries as f64),
+            (
+                "fault_local_jobs",
+                r.fault_report.local_jobs as f64,
+            ),
+            ("identical_clean", b(r.identical_clean)),
+            ("identical_fault", b(r.identical_fault)),
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_config_is_smaller() {
+        let q = DistBenchConfig::quick();
+        let d = DistBenchConfig::default();
+        assert!(q.n_subjects < d.n_subjects);
+        assert!(q.cv_folds < d.cv_folds);
+        assert!(q.workers < d.workers);
+    }
+
+    #[test]
+    fn gates_require_both_identities() {
+        let mk = |clean: bool, fault: bool| DistBenchResult {
+            p: 10,
+            n: 4,
+            accuracy: 0.5,
+            local_secs: 1.0,
+            dist_secs: 1.0,
+            fault_secs: 1.0,
+            dist_report: DistReport::default(),
+            fault_report: DistReport::default(),
+            identical_clean: clean,
+            identical_fault: fault,
+        };
+        assert!(check_gates(&mk(true, true)).is_ok());
+        assert!(check_gates(&mk(false, true)).is_err());
+        assert!(check_gates(&mk(true, false)).is_err());
+    }
+
+    #[test]
+    fn report_names_the_identity_gates() {
+        let r = DistBenchResult {
+            p: 10,
+            n: 4,
+            accuracy: 0.5,
+            local_secs: 2.0,
+            dist_secs: 1.0,
+            fault_secs: 1.5,
+            dist_report: DistReport::default(),
+            fault_report: DistReport::default(),
+            identical_clean: true,
+            identical_fault: true,
+        };
+        let v = report_json(&r);
+        let m = v.get("metrics").expect("metrics");
+        assert!(m.get("identical_clean").is_some());
+        assert!(m.get("identical_fault").is_some());
+        assert!(m.get("dist_overhead_factor").is_some());
+    }
+}

@@ -12,6 +12,7 @@
 //! under `rust/benches/` and the `repro fig*` CLI subcommands are thin
 //! wrappers over these functions; EXPERIMENTS.md records their output.
 
+pub mod distributed;
 pub mod fig2;
 pub mod fig3;
 pub mod fig4;

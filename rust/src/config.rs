@@ -231,8 +231,34 @@ impl Default for ServeSettings {
     }
 }
 
+/// Distributed-fit settings (ADR-006): how `repro fit-distributed`
+/// spreads the cohort across worker processes. Only scheduling knobs
+/// live here — none of them can change the fitted bits.
+#[derive(Clone, Debug)]
+pub struct DistSettings {
+    /// Worker processes to spawn locally.
+    pub workers: usize,
+    /// Target reduce-phase jobs per worker (finer = cheaper retries).
+    pub jobs_per_worker: usize,
+    /// Worker silence tolerated before a job is re-assigned (ms).
+    pub heartbeat_ms: u64,
+    /// Re-assignments per job before the local fallback takes it.
+    pub max_retries: usize,
+}
+
+impl Default for DistSettings {
+    fn default() -> Self {
+        DistSettings {
+            workers: 3,
+            jobs_per_worker: 2,
+            heartbeat_ms: 2000,
+            max_retries: 2,
+        }
+    }
+}
+
 /// A full experiment = data + compression + estimation (+ optional
-/// streaming execution, + serving settings).
+/// streaming execution, + serving and distributed-fit settings).
 #[derive(Clone, Debug, Default)]
 pub struct ExperimentConfig {
     /// Data generation.
@@ -245,6 +271,8 @@ pub struct ExperimentConfig {
     pub stream: StreamConfig,
     /// Decode-server settings.
     pub serve: ServeSettings,
+    /// Distributed-fit settings.
+    pub dist: DistSettings,
 }
 
 fn get_usize(v: &Value, key: &str, default: usize) -> Result<usize> {
@@ -437,6 +465,36 @@ impl ServeSettings {
     }
 }
 
+impl DistSettings {
+    /// Parse from a JSON object.
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let d = DistSettings::default();
+        Ok(DistSettings {
+            workers: get_usize(v, "workers", d.workers)?,
+            jobs_per_worker: get_usize(
+                v,
+                "jobs_per_worker",
+                d.jobs_per_worker,
+            )?,
+            heartbeat_ms: get_u64(v, "heartbeat_ms", d.heartbeat_ms)?,
+            max_retries: get_usize(v, "max_retries", d.max_retries)?,
+        })
+    }
+
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("workers", Value::Num(self.workers as f64)),
+            (
+                "jobs_per_worker",
+                Value::Num(self.jobs_per_worker as f64),
+            ),
+            ("heartbeat_ms", Value::Num(self.heartbeat_ms as f64)),
+            ("max_retries", Value::Num(self.max_retries as f64)),
+        ])
+    }
+}
+
 impl ExperimentConfig {
     /// Parse the full config (all sections optional).
     pub fn from_json(v: &Value) -> Result<Self> {
@@ -461,6 +519,10 @@ impl ExperimentConfig {
                 Some(s) => ServeSettings::from_json(s)?,
                 None => ServeSettings::default(),
             },
+            dist: match v.get("dist") {
+                Some(s) => DistSettings::from_json(s)?,
+                None => DistSettings::default(),
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -474,6 +536,7 @@ impl ExperimentConfig {
             ("estimator", self.estimator.to_json()),
             ("stream", self.stream.to_json()),
             ("serve", self.serve.to_json()),
+            ("dist", self.dist.to_json()),
         ])
     }
 
@@ -511,6 +574,12 @@ impl ExperimentConfig {
         }
         if self.serve.max_batch == 0 {
             return Err(invalid("serve max_batch must be >= 1"));
+        }
+        if self.dist.jobs_per_worker == 0 {
+            return Err(invalid("dist jobs_per_worker must be >= 1"));
+        }
+        if self.dist.heartbeat_ms == 0 {
+            return Err(invalid("dist heartbeat_ms must be >= 1"));
         }
         Ok(())
     }
@@ -598,6 +667,39 @@ mod tests {
             r#"{"serve": {"cache_capacity": 0}}"#,
             r#"{"serve": {"max_batch": 0}}"#,
             r#"{"serve": {"port": 70000}}"#,
+        ] {
+            assert!(
+                ExperimentConfig::from_json(&json::parse(bad).unwrap())
+                    .is_err(),
+                "should reject {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn dist_settings_roundtrip_and_validate() {
+        let text = r#"{"dist": {"workers": 5, "jobs_per_worker": 3,
+                       "heartbeat_ms": 750, "max_retries": 1}}"#;
+        let cfg =
+            ExperimentConfig::from_json(&json::parse(text).unwrap())
+                .unwrap();
+        assert_eq!(cfg.dist.workers, 5);
+        assert_eq!(cfg.dist.jobs_per_worker, 3);
+        assert_eq!(cfg.dist.heartbeat_ms, 750);
+        assert_eq!(cfg.dist.max_retries, 1);
+        let back = ExperimentConfig::from_json(
+            &json::parse(&cfg.to_json().to_string()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.dist.heartbeat_ms, 750);
+        // defaults apply when the section is absent
+        let none =
+            ExperimentConfig::from_json(&json::parse("{}").unwrap())
+                .unwrap();
+        assert_eq!(none.dist.workers, 3);
+        for bad in [
+            r#"{"dist": {"jobs_per_worker": 0}}"#,
+            r#"{"dist": {"heartbeat_ms": 0}}"#,
         ] {
             assert!(
                 ExperimentConfig::from_json(&json::parse(bad).unwrap())

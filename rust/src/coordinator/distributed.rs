@@ -1,0 +1,1695 @@
+//! Distributed model fit over mergeable accumulators (ADR-006).
+//!
+//! The coordinator partitions the cohort's sample range, ships range
+//! assignments to worker *processes* over the ADR-004 length-prefixed
+//! protocol (ASSIGN/PARTIAL/ACK/RETRY frames), streams back chunked
+//! partial reductions and per-fold estimator fits, and merges them
+//! into a [`FittedModel`] that is **bit-identical** to the
+//! single-process [`fit_model`](crate::model::fit_model) — the
+//! `distributed_faults` integration suite pins the saved `.fcm` bytes.
+//!
+//! # Why bit-identity holds
+//!
+//! * The `.fcd` payload round-trips `f32` bits exactly, so a worker
+//!   reading its column range sees the same bits as the in-memory
+//!   cohort.
+//! * Both reducers are column-independent maps, so reducing a range in
+//!   chunks and stitching the outputs equals reducing the full matrix
+//!   (`ReduceAccumulator::finish` proves exactly-once coverage).
+//! * Fold fits are pure functions of `(xtr, ytr, xte, yte, config)`
+//!   ([`fit_one_fold`]), and the fold split is pinned by
+//!   [`FOLD_SEED`](crate::model::FOLD_SEED) — so a fold computed on
+//!   any worker, retried after a failure, or re-run locally, yields
+//!   the same `LogregFit` bits.
+//! * Header and artifact assembly share one construction site with the
+//!   local path ([`build_header`], `FittedModel::from_parts`), and the
+//!   `.fcm` writer is byte-canonical.
+//!
+//! # Failure model
+//!
+//! Per-job heartbeat timeouts, CRC-verified payloads, bounded retry
+//! with range re-assignment, and graceful degradation: a job whose
+//! retries are exhausted — or a fit with zero live workers — falls
+//! back to in-process execution through the *same* job codec, so the
+//! result bits never depend on which path ran. Worker topology and
+//! the recovery event log are reported out-of-band
+//! ([`DistReport::to_json`], persisted as a `.dist.json` sidecar by
+//! the CLI) rather than inside the `.fcm`, precisely so the artifact
+//! stays byte-identical to the local fit.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufReader, ErrorKind, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::{EventLog, Stopwatch};
+use crate::config::{
+    DataConfig, EstimatorConfig, Method, ReduceConfig,
+};
+use crate::error::{invalid, Error, Result};
+use crate::estimators::cv::stratified_kfold;
+use crate::estimators::{FoldModel, LogregFit};
+use crate::json::Value;
+use crate::model::{
+    build_header, fit_one_fold, fit_reduction, FitOptions, FittedModel,
+    ReductionOp, FOLD_SEED,
+};
+use crate::reduce::{ReduceAccumulator, Reducer};
+use crate::serve::protocol::{
+    put_f32s, put_f64, put_matrix, put_str, put_u32, put_u64,
+    read_dist_frame, write_dist_frame, Cursor, DistFrame, ACK_DONE,
+    ACK_HEARTBEAT, ACK_HELLO,
+};
+use crate::volume::{
+    save_dataset, FcdReader, FeatureMatrix, MaskedDataset,
+};
+
+/// Sentinel job id meaning "no job" (hello frames, idle heartbeat slot).
+const IDLE: u64 = u64::MAX;
+/// Poll interval of the accept / dispatch idle loops.
+const POLL: Duration = Duration::from_millis(5);
+/// Exit code of a worker killed by `--fail-after-partials` (distinct
+/// from panics and clean exits so tests can assert the injection ran).
+pub const KILL_EXIT: i32 = 17;
+
+// ----------------------------------------------------------- options
+
+/// Fault injections a worker process can be armed with (test-only
+/// paths, but compiled in so the CI smoke uses the shipped binary).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Exit with [`KILL_EXIT`] before sending the 2nd partial.
+    Kill,
+    /// Silently skip sending the 2nd partial (still counted in the
+    /// DONE ack, so the coordinator sees the mismatch).
+    Drop,
+    /// Flip a byte in the 2nd partial frame (checksum failure).
+    Corrupt,
+    /// Stall 60 s before the 1st partial with heartbeats suppressed
+    /// (forces a coordinator-side timeout).
+    Delay,
+}
+
+/// One injected fault: which kind, on which spawned worker.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultSpec {
+    /// The fault to inject.
+    pub kind: FaultKind,
+    /// 0-based index among the workers this coordinator spawns.
+    pub worker: usize,
+}
+
+impl FaultSpec {
+    /// Parse `"kind:worker"` (e.g. `kill:0`, `corrupt:2`).
+    pub fn parse(s: &str) -> Result<FaultSpec> {
+        let (kind, worker) = s
+            .split_once(':')
+            .ok_or_else(|| invalid("inject spec must be kind:worker"))?;
+        let kind = match kind {
+            "kill" => FaultKind::Kill,
+            "drop" => FaultKind::Drop,
+            "corrupt" => FaultKind::Corrupt,
+            "delay" => FaultKind::Delay,
+            other => {
+                return Err(invalid(format!(
+                    "unknown fault kind '{other}' \
+                     (kill|drop|corrupt|delay)"
+                )))
+            }
+        };
+        let worker = worker.parse::<usize>().map_err(|_| {
+            invalid(format!("bad worker index '{worker}' in inject spec"))
+        })?;
+        Ok(FaultSpec { kind, worker })
+    }
+
+    /// The `repro worker` CLI flags that arm this fault.
+    pub fn worker_flags(&self) -> Vec<String> {
+        let s = |f: &str, v: &str| vec![f.to_string(), v.to_string()];
+        match self.kind {
+            FaultKind::Kill => s("--fail-after-partials", "1"),
+            FaultKind::Drop => s("--drop-partial", "2"),
+            FaultKind::Corrupt => s("--corrupt-partial", "2"),
+            FaultKind::Delay => s("--delay-partial-ms", "60000"),
+        }
+    }
+}
+
+/// Coordinator-side knobs of a distributed fit.
+#[derive(Clone, Debug)]
+pub struct DistOptions {
+    /// Worker processes to spawn locally (0 = none; with no external
+    /// workers either, every job runs through the local fallback).
+    pub workers: usize,
+    /// Target jobs per worker in the reduce phase (finer partitions
+    /// mean cheaper retries; fold jobs are one per CV fold).
+    pub jobs_per_worker: usize,
+    /// Sample columns per PARTIAL frame of a reduce job.
+    pub chunk_samples: usize,
+    /// Silence longer than this from a busy worker fails the job.
+    pub heartbeat_ms: u64,
+    /// Re-assignments per job before it is abandoned to the local
+    /// fallback.
+    pub max_retries: usize,
+    /// Coordinator listen address (`127.0.0.1:0` = ephemeral port).
+    pub bind: String,
+    /// Externally-launched workers to wait for on top of the spawned
+    /// ones (`repro worker --connect <addr>` on another machine).
+    pub expect_external: usize,
+    /// How long to wait for workers to connect before degrading to
+    /// however many showed up.
+    pub accept_ms: u64,
+    /// Worker binary (`None` = this executable).
+    pub worker_bin: Option<PathBuf>,
+    /// Optional fault injection (tests, CI smoke).
+    pub inject: Option<FaultSpec>,
+    /// Where to stage the shared `.fcd` (`None` = temp dir).
+    pub work_dir: Option<PathBuf>,
+    /// Echo events to stderr as they happen.
+    pub verbose: bool,
+}
+
+impl Default for DistOptions {
+    fn default() -> Self {
+        DistOptions {
+            workers: 3,
+            jobs_per_worker: 2,
+            chunk_samples: 32,
+            heartbeat_ms: 2000,
+            max_retries: 2,
+            bind: "127.0.0.1:0".into(),
+            expect_external: 0,
+            accept_ms: 10_000,
+            worker_bin: None,
+            inject: None,
+            work_dir: None,
+            verbose: false,
+        }
+    }
+}
+
+/// Per-worker tally of a run (topology provenance).
+#[derive(Clone, Debug)]
+pub struct WorkerStat {
+    /// 0-based connection order.
+    pub worker: usize,
+    /// Worker process id (from its HELLO ack).
+    pub pid: u64,
+    /// Jobs completed on this connection.
+    pub jobs_done: usize,
+    /// Whether the connection was dropped mid-run.
+    pub lost: bool,
+}
+
+/// What happened during a distributed fit — the sidecar provenance
+/// the CLI writes next to the `.fcm` (never *inside* it: the artifact
+/// must stay byte-identical to the single-process fit).
+#[derive(Clone, Debug, Default)]
+pub struct DistReport {
+    /// Workers the coordinator was configured for.
+    pub workers_requested: usize,
+    /// Workers that actually connected and greeted.
+    pub workers_connected: usize,
+    /// Connections dropped mid-run (timeouts, corruption, death).
+    pub workers_lost: usize,
+    /// Reduce-phase jobs.
+    pub reduce_jobs: usize,
+    /// Fold-phase jobs.
+    pub fold_jobs: usize,
+    /// Job re-assignments across both phases.
+    pub retries: usize,
+    /// Jobs that ran through the in-process fallback.
+    pub local_jobs: usize,
+    /// Wall seconds of the reduce phase.
+    pub reduce_secs: f64,
+    /// Wall seconds of the fold phase.
+    pub fold_secs: f64,
+    /// Wall seconds end-to-end.
+    pub total_secs: f64,
+    /// Per-worker tallies.
+    pub topology: Vec<WorkerStat>,
+    /// The coordinator event log snapshot.
+    pub events: Vec<(f64, String)>,
+}
+
+impl DistReport {
+    /// JSON form of the report (the `.dist.json` sidecar).
+    pub fn to_json(&self) -> Value {
+        let topology = Value::Arr(
+            self.topology
+                .iter()
+                .map(|w| {
+                    Value::obj(vec![
+                        ("worker", Value::Num(w.worker as f64)),
+                        ("pid", Value::Num(w.pid as f64)),
+                        ("jobs_done", Value::Num(w.jobs_done as f64)),
+                        ("lost", Value::Bool(w.lost)),
+                    ])
+                })
+                .collect(),
+        );
+        Value::obj(vec![
+            (
+                "workers_requested",
+                Value::Num(self.workers_requested as f64),
+            ),
+            (
+                "workers_connected",
+                Value::Num(self.workers_connected as f64),
+            ),
+            ("workers_lost", Value::Num(self.workers_lost as f64)),
+            ("reduce_jobs", Value::Num(self.reduce_jobs as f64)),
+            ("fold_jobs", Value::Num(self.fold_jobs as f64)),
+            ("retries", Value::Num(self.retries as f64)),
+            ("local_jobs", Value::Num(self.local_jobs as f64)),
+            ("reduce_secs", Value::Num(self.reduce_secs)),
+            ("fold_secs", Value::Num(self.fold_secs)),
+            ("total_secs", Value::Num(self.total_secs)),
+            ("topology", topology),
+            ("events", super::events::events_json(&self.events)),
+        ])
+    }
+}
+
+// --------------------------------------------------------- job codec
+
+/// One unit of distributable work. The codec below is the *only*
+/// serialization of jobs — the local fallback decodes and executes
+/// the same bytes a worker would, so both paths share arithmetic.
+#[derive(Clone, Debug)]
+enum JobPayload {
+    /// Reduce sample columns `[col0, col0+count)` of the shared
+    /// `.fcd` in `chunk`-column blocks through `op`.
+    Reduce {
+        stem: String,
+        col0: u32,
+        count: u32,
+        chunk: u32,
+        op: ReductionOp,
+    },
+    /// Fit one CV fold on the shipped (already reduced) matrices.
+    Fold {
+        fold_id: u32,
+        sgd_epochs: u32,
+        sgd_chunk: u32,
+        lambda: f64,
+        tol: f64,
+        max_iter: u32,
+        xtr: FeatureMatrix,
+        ytr: Vec<f32>,
+        xte: FeatureMatrix,
+        yte: Vec<f32>,
+    },
+}
+
+fn encode_job(job: &JobPayload) -> Vec<u8> {
+    let mut b = Vec::new();
+    match job {
+        JobPayload::Reduce { stem, col0, count, chunk, op } => {
+            b.push(0);
+            put_str(&mut b, stem);
+            put_u32(&mut b, *col0);
+            put_u32(&mut b, *count);
+            put_u32(&mut b, *chunk);
+            match op {
+                ReductionOp::Cluster { k, labels } => {
+                    b.push(0);
+                    put_u32(&mut b, *k as u32);
+                    put_u32(&mut b, labels.len() as u32);
+                    for &l in labels {
+                        put_u32(&mut b, l);
+                    }
+                }
+                ReductionOp::RandomProjection { p, k, seed } => {
+                    b.push(1);
+                    put_u64(&mut b, *p as u64);
+                    put_u32(&mut b, *k as u32);
+                    put_u64(&mut b, *seed);
+                }
+            }
+        }
+        JobPayload::Fold {
+            fold_id,
+            sgd_epochs,
+            sgd_chunk,
+            lambda,
+            tol,
+            max_iter,
+            xtr,
+            ytr,
+            xte,
+            yte,
+        } => {
+            b.push(1);
+            put_u32(&mut b, *fold_id);
+            put_u32(&mut b, *sgd_epochs);
+            put_u32(&mut b, *sgd_chunk);
+            put_f64(&mut b, *lambda);
+            put_f64(&mut b, *tol);
+            put_u32(&mut b, *max_iter);
+            put_matrix(&mut b, xtr);
+            put_f32s(&mut b, ytr);
+            put_matrix(&mut b, xte);
+            put_f32s(&mut b, yte);
+        }
+    }
+    b
+}
+
+fn decode_job(bytes: &[u8]) -> Result<JobPayload> {
+    let mut c = Cursor::new(bytes);
+    let job = match c.u8()? {
+        0 => {
+            let stem = c.str()?;
+            let col0 = c.u32()?;
+            let count = c.u32()?;
+            let chunk = c.u32()?;
+            let op = match c.u8()? {
+                0 => {
+                    let k = c.u32()? as usize;
+                    let len = c.u32()? as usize;
+                    // untrusted length: bound the alloc by what the
+                    // buffer actually holds (take validates)
+                    let bytes4 = len.checked_mul(4).ok_or_else(|| {
+                        invalid("label count overflows")
+                    })?;
+                    let raw = c.take(bytes4)?;
+                    let labels = raw
+                        .chunks_exact(4)
+                        .map(|q| {
+                            u32::from_le_bytes([q[0], q[1], q[2], q[3]])
+                        })
+                        .collect();
+                    ReductionOp::Cluster { k, labels }
+                }
+                1 => ReductionOp::RandomProjection {
+                    p: c.u64()? as usize,
+                    k: c.u32()? as usize,
+                    seed: c.u64()?,
+                },
+                other => {
+                    return Err(invalid(format!(
+                        "unknown reduction op tag {other}"
+                    )))
+                }
+            };
+            JobPayload::Reduce { stem, col0, count, chunk, op }
+        }
+        1 => JobPayload::Fold {
+            fold_id: c.u32()?,
+            sgd_epochs: c.u32()?,
+            sgd_chunk: c.u32()?,
+            lambda: c.f64()?,
+            tol: c.f64()?,
+            max_iter: c.u32()?,
+            xtr: c.matrix()?,
+            ytr: c.f32s()?,
+            xte: c.matrix()?,
+            yte: c.f32s()?,
+        },
+        other => {
+            return Err(invalid(format!("unknown job tag {other}")))
+        }
+    };
+    c.finish()?;
+    Ok(job)
+}
+
+fn encode_block_partial(col0: usize, x: &FeatureMatrix) -> Vec<u8> {
+    let mut b = Vec::new();
+    put_u32(&mut b, col0 as u32);
+    put_matrix(&mut b, x);
+    b
+}
+
+fn encode_fold_partial(
+    fold_id: u32,
+    accuracy: f64,
+    fit: &LogregFit,
+) -> Vec<u8> {
+    let mut b = Vec::new();
+    put_u32(&mut b, fold_id);
+    put_f64(&mut b, accuracy);
+    put_f64(&mut b, fit.loss);
+    put_f64(&mut b, fit.grad_norm);
+    put_u64(&mut b, fit.iters as u64);
+    put_u64(&mut b, fit.evals as u64);
+    put_u32(&mut b, fit.b.to_bits());
+    put_f32s(&mut b, &fit.w);
+    b
+}
+
+fn decode_fold_partial(bytes: &[u8]) -> Result<(u32, f64, LogregFit)> {
+    let mut c = Cursor::new(bytes);
+    let fold_id = c.u32()?;
+    let accuracy = c.f64()?;
+    let loss = c.f64()?;
+    let grad_norm = c.f64()?;
+    let iters = c.u64()? as usize;
+    let evals = c.u64()? as usize;
+    let b = f32::from_bits(c.u32()?);
+    let w = c.f32s()?;
+    c.finish()?;
+    Ok((
+        fold_id,
+        accuracy,
+        LogregFit { w, b, loss, iters, evals, grad_norm },
+    ))
+}
+
+// ----------------------------------------------------- job execution
+
+fn reducer_for(op: &ReductionOp) -> Result<Box<dyn Reducer>> {
+    Ok(match op {
+        ReductionOp::Cluster { k, labels } => Box::new(
+            crate::reduce::ClusterReduce::from_raw(labels.clone(), *k)?,
+        ),
+        ReductionOp::RandomProjection { p, k, seed } => Box::new(
+            crate::reduce::SparseRandomProjection::new(*p, *k, *seed),
+        ),
+    })
+}
+
+/// Execute one decoded job, emitting each partial-result payload
+/// through `sink`. Shared by the worker process and the coordinator's
+/// local fallback — the bit-identity hinge: *where* a job runs never
+/// changes the bytes it produces.
+fn execute_job(
+    job: &JobPayload,
+    sink: &mut dyn FnMut(Vec<u8>) -> Result<()>,
+) -> Result<()> {
+    match job {
+        JobPayload::Reduce { stem, col0, count, chunk, op } => {
+            let mut rd = FcdReader::open(Path::new(stem))?;
+            let reducer = reducer_for(op)?;
+            let (col0, count) = (*col0 as usize, *count as usize);
+            if count == 0 || col0 + count > rd.n() {
+                return Err(invalid(format!(
+                    "job range [{col0}, {}) out of bounds (n={})",
+                    col0 + count,
+                    rd.n()
+                )));
+            }
+            let chunk = (*chunk as usize).max(1);
+            let mut at = col0;
+            while at < col0 + count {
+                let c = chunk.min(col0 + count - at);
+                let x = rd.read_columns(at, c)?;
+                let xk = reducer.reduce(&x);
+                sink(encode_block_partial(at, &xk))?;
+                at += c;
+            }
+            Ok(())
+        }
+        JobPayload::Fold {
+            fold_id,
+            sgd_epochs,
+            sgd_chunk,
+            lambda,
+            tol,
+            max_iter,
+            xtr,
+            ytr,
+            xte,
+            yte,
+        } => {
+            let est = EstimatorConfig {
+                lambda: *lambda,
+                tol: *tol,
+                max_iter: *max_iter as usize,
+                ..Default::default()
+            };
+            let (fit, accuracy) = fit_one_fold(
+                xtr,
+                ytr,
+                xte,
+                yte,
+                &est,
+                *sgd_epochs as usize,
+                *sgd_chunk as usize,
+            )?;
+            sink(encode_fold_partial(*fold_id, accuracy, &fit))
+        }
+    }
+}
+
+// ------------------------------------------------------------ worker
+
+/// Knobs of a worker process, including the fault injections the
+/// `distributed_faults` suite and the CI smoke arm via CLI flags.
+#[derive(Clone, Debug)]
+pub struct WorkerOptions {
+    /// Liveness beacon interval while a job is running.
+    pub heartbeat_ms: u64,
+    /// Injection: `process::exit(KILL_EXIT)` instead of sending
+    /// partial number N+1 (1-based, connection-global ordinal).
+    pub fail_after_partials: Option<usize>,
+    /// Injection: count partial ordinal N as sent but never write it.
+    pub drop_partial: Option<usize>,
+    /// Injection: flip a payload byte of partial ordinal N on the wire.
+    pub corrupt_partial: Option<usize>,
+    /// Injection: sleep this long before partial ordinal 1, with
+    /// heartbeats suppressed (provokes a coordinator timeout).
+    pub delay_partial_ms: Option<u64>,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> Self {
+        WorkerOptions {
+            heartbeat_ms: 500,
+            fail_after_partials: None,
+            drop_partial: None,
+            corrupt_partial: None,
+            delay_partial_ms: None,
+        }
+    }
+}
+
+/// Run a worker process: connect to the coordinator, greet, then
+/// serve ASSIGN frames until the coordinator hangs up (clean EOF).
+pub fn run_worker(addr: &str, wopts: &WorkerOptions) -> Result<()> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    let writer = Arc::new(Mutex::new(stream.try_clone()?));
+    let mut reader = BufReader::new(stream);
+
+    // heartbeat thread: beats only while a job is running, so an
+    // idle worker's silence is legal and a wedged one's is not
+    let current = Arc::new(AtomicU64::new(IDLE));
+    let stop = Arc::new(AtomicBool::new(false));
+    let hb = {
+        let (writer, current, stop) =
+            (writer.clone(), current.clone(), stop.clone());
+        let every = Duration::from_millis(wopts.heartbeat_ms.max(10));
+        thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                thread::sleep(every);
+                let job = current.load(Ordering::Relaxed);
+                if job == IDLE {
+                    continue;
+                }
+                let beat = DistFrame::Ack {
+                    job,
+                    kind: ACK_HEARTBEAT,
+                    info: 0,
+                };
+                let mut w = writer.lock().unwrap();
+                if write_dist_frame(&mut *w, &beat)
+                    .and_then(|_| w.flush().map_err(Error::from))
+                    .is_err()
+                {
+                    break;
+                }
+            }
+        })
+    };
+
+    {
+        let hello = DistFrame::Ack {
+            job: IDLE,
+            kind: ACK_HELLO,
+            info: std::process::id() as u64,
+        };
+        let mut w = writer.lock().unwrap();
+        write_dist_frame(&mut *w, &hello)?;
+        w.flush()?;
+    }
+
+    let mut sent_total = 0usize; // connection-global partial ordinal
+    let res = loop {
+        match read_dist_frame(&mut reader) {
+            Ok(None) => break Ok(()), // coordinator hung up: done
+            Ok(Some(DistFrame::Assign { job, payload })) => {
+                current.store(job, Ordering::Relaxed);
+                let reply = match run_assignment(
+                    job,
+                    &payload,
+                    &writer,
+                    &current,
+                    wopts,
+                    &mut sent_total,
+                ) {
+                    Ok(sent) => DistFrame::Ack {
+                        job,
+                        kind: ACK_DONE,
+                        info: sent as u64,
+                    },
+                    Err(e) => {
+                        DistFrame::Retry { job, reason: e.to_string() }
+                    }
+                };
+                current.store(IDLE, Ordering::Relaxed);
+                let mut w = writer.lock().unwrap();
+                if write_dist_frame(&mut *w, &reply)
+                    .and_then(|_| w.flush().map_err(Error::from))
+                    .is_err()
+                {
+                    break Ok(()); // coordinator gone mid-reply
+                }
+            }
+            Ok(Some(_)) => {
+                break Err(invalid(
+                    "worker received an out-of-protocol frame",
+                ))
+            }
+            Err(e) => break Err(e),
+        }
+    };
+    stop.store(true, Ordering::Relaxed);
+    let _ = hb.join();
+    res
+}
+
+/// Execute one assignment, applying armed fault injections at the
+/// send boundary. Returns how many partials this worker *believes*
+/// it sent (dropped ones included — that lie is the point of the
+/// drop injection: the coordinator must catch it by count).
+fn run_assignment(
+    job: u64,
+    payload: &[u8],
+    writer: &Arc<Mutex<TcpStream>>,
+    current: &Arc<AtomicU64>,
+    wopts: &WorkerOptions,
+    sent_total: &mut usize,
+) -> Result<usize> {
+    let decoded = decode_job(payload)?;
+    let mut seq: u32 = 0;
+    let mut sent_this_job = 0usize;
+    execute_job(&decoded, &mut |bytes: Vec<u8>| {
+        *sent_total += 1;
+        let ordinal = *sent_total;
+        if let Some(limit) = wopts.fail_after_partials {
+            if ordinal > limit {
+                std::process::exit(KILL_EXIT);
+            }
+        }
+        if let Some(ms) = wopts.delay_partial_ms {
+            if ordinal == 1 {
+                // suppress heartbeats while stalling, else the
+                // beacon would keep the coordinator waiting forever
+                current.store(IDLE, Ordering::Relaxed);
+                thread::sleep(Duration::from_millis(ms));
+                current.store(job, Ordering::Relaxed);
+            }
+        }
+        let frame =
+            DistFrame::Partial { job, seq, payload: bytes.clone() };
+        seq += 1;
+        sent_this_job += 1;
+        if wopts.drop_partial == Some(ordinal) {
+            return Ok(()); // counted, never written
+        }
+        let mut w = writer.lock().unwrap();
+        if wopts.corrupt_partial == Some(ordinal) {
+            let mut raw = Vec::new();
+            write_dist_frame(&mut raw, &frame)?;
+            let last = raw.len() - 1; // a payload byte
+            raw[last] ^= 0xFF;
+            w.write_all(&raw)?;
+        } else {
+            write_dist_frame(&mut *w, &frame)?;
+        }
+        w.flush()?;
+        Ok(())
+    })?;
+    Ok(sent_this_job)
+}
+
+// ------------------------------------------------------- coordinator
+
+struct WorkerConn {
+    id: usize,
+    pid: u64,
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    jobs_done: usize,
+}
+
+#[derive(Clone, Debug)]
+enum Expect {
+    /// Reduce job: `(k, count)`-shaped blocks tiling
+    /// `[col0, col0+count)`.
+    Blocks { k: usize, col0: usize, count: usize },
+    /// Fold job: exactly one partial for this fold.
+    Fold { fold_id: u32 },
+}
+
+enum JobOut {
+    Blocks(Vec<(usize, FeatureMatrix)>),
+    Fold { fold_id: u32, accuracy: f64, fit: LogregFit },
+}
+
+struct Job {
+    id: u64,
+    attempts: usize,
+    payload: Arc<Vec<u8>>,
+    expect: Expect,
+    desc: String,
+}
+
+/// How a job attempt failed — and whether the connection survives it.
+enum Fail {
+    /// Connection is gone or untrustworthy: drop the worker.
+    Conn(String),
+    /// Worker is fine, this attempt was not: requeue the job.
+    Soft(String),
+}
+
+impl Fail {
+    fn msg(&self) -> &str {
+        match self {
+            Fail::Conn(m) | Fail::Soft(m) => m,
+        }
+    }
+}
+
+fn is_timeout(e: &Error) -> bool {
+    matches!(
+        e,
+        Error::Io(io) if matches!(
+            io.kind(),
+            ErrorKind::WouldBlock | ErrorKind::TimedOut
+        )
+    )
+}
+
+/// Run one job on one worker connection: assign, collect partials
+/// (tolerating heartbeats), verify the DONE count, decode.
+fn run_job(
+    conn: &mut WorkerConn,
+    job: &Job,
+    heartbeat: Duration,
+) -> std::result::Result<JobOut, Fail> {
+    let assign = DistFrame::Assign {
+        job: job.id,
+        payload: (*job.payload).clone(),
+    };
+    write_dist_frame(&mut conn.writer, &assign)
+        .and_then(|_| conn.writer.flush().map_err(Error::from))
+        .map_err(|e| Fail::Conn(format!("assign failed: {e}")))?;
+    conn.reader
+        .get_ref()
+        .set_read_timeout(Some(heartbeat))
+        .map_err(|e| Fail::Conn(format!("socket error: {e}")))?;
+
+    let mut partials: Vec<(u32, Vec<u8>)> = Vec::new();
+    loop {
+        match read_dist_frame(&mut conn.reader) {
+            Ok(None) => {
+                return Err(Fail::Conn("connection closed mid-job".into()))
+            }
+            Ok(Some(DistFrame::Partial { job: j, seq, payload }))
+                if j == job.id =>
+            {
+                partials.push((seq, payload));
+            }
+            Ok(Some(DistFrame::Ack {
+                kind: ACK_HEARTBEAT, ..
+            })) => continue,
+            Ok(Some(DistFrame::Ack { job: j, kind, info }))
+                if j == job.id && kind == ACK_DONE =>
+            {
+                if info as usize != partials.len() {
+                    return Err(Fail::Soft(format!(
+                        "worker sent {info} partials, {} arrived",
+                        partials.len()
+                    )));
+                }
+                return decode_out(&job.expect, partials)
+                    .map_err(|e| Fail::Soft(e.to_string()));
+            }
+            Ok(Some(DistFrame::Retry { reason, .. })) => {
+                return Err(Fail::Soft(format!(
+                    "worker declined: {reason}"
+                )))
+            }
+            Ok(Some(_)) => {
+                return Err(Fail::Conn("out-of-protocol frame".into()))
+            }
+            Err(e) if is_timeout(&e) => {
+                return Err(Fail::Conn(format!(
+                    "heartbeat timeout after {heartbeat:?}"
+                )))
+            }
+            Err(e) => {
+                return Err(Fail::Conn(format!("protocol error: {e}")))
+            }
+        }
+    }
+}
+
+fn decode_out(
+    expect: &Expect,
+    mut partials: Vec<(u32, Vec<u8>)>,
+) -> Result<JobOut> {
+    partials.sort_by_key(|&(seq, _)| seq);
+    match expect {
+        Expect::Blocks { k, col0, count } => {
+            let mut blocks = Vec::with_capacity(partials.len());
+            for (_, p) in &partials {
+                let mut c = Cursor::new(p);
+                let b0 = c.u32()? as usize;
+                let x = c.matrix()?;
+                c.finish()?;
+                if x.rows != *k {
+                    return Err(invalid(format!(
+                        "partial block has {} rows, expected k={k}",
+                        x.rows
+                    )));
+                }
+                blocks.push((b0, x));
+            }
+            // the blocks must tile the assigned range exactly —
+            // a weaker check would let a lost chunk slip through
+            let mut spans: Vec<(usize, usize)> =
+                blocks.iter().map(|(b0, x)| (*b0, x.cols)).collect();
+            spans.sort_unstable();
+            let mut at = *col0;
+            for (b0, c) in spans {
+                if b0 != at {
+                    return Err(invalid(format!(
+                        "partials skip columns at {at} (next block {b0})"
+                    )));
+                }
+                at += c;
+            }
+            if at != col0 + count {
+                return Err(invalid(format!(
+                    "partials cover up to {at}, job ends at {}",
+                    col0 + count
+                )));
+            }
+            Ok(JobOut::Blocks(blocks))
+        }
+        Expect::Fold { fold_id } => {
+            if partials.len() != 1 {
+                return Err(invalid(format!(
+                    "fold job produced {} partials, expected 1",
+                    partials.len()
+                )));
+            }
+            let (id, accuracy, fit) =
+                decode_fold_partial(&partials[0].1)?;
+            if id != *fold_id {
+                return Err(invalid(format!(
+                    "fold partial is for fold {id}, expected {fold_id}"
+                )));
+            }
+            Ok(JobOut::Fold { fold_id: id, accuracy, fit })
+        }
+    }
+}
+
+struct DispatchState {
+    pending: VecDeque<Job>,
+    inflight: usize,
+    done: HashMap<u64, JobOut>,
+    abandoned: Vec<Job>,
+    retries: usize,
+}
+
+/// Drive a batch of jobs over the live connections. Returns the final
+/// dispatch state plus the surviving connections; lost workers are
+/// recorded straight into `report.topology`.
+fn dispatch(
+    conns: Vec<WorkerConn>,
+    jobs: Vec<Job>,
+    dist: &DistOptions,
+    log: &EventLog,
+    report: &mut DistReport,
+) -> (DispatchState, Vec<WorkerConn>) {
+    let state = Mutex::new(DispatchState {
+        pending: jobs.into(),
+        inflight: 0,
+        done: HashMap::new(),
+        abandoned: Vec::new(),
+        retries: 0,
+    });
+    let heartbeat = Duration::from_millis(dist.heartbeat_ms.max(10));
+    let outcomes: Vec<(Option<WorkerConn>, WorkerStat)> =
+        thread::scope(|s| {
+            let handles: Vec<_> = conns
+                .into_iter()
+                .map(|conn| {
+                    let state = &state;
+                    s.spawn(move || {
+                        worker_loop(
+                            conn,
+                            state,
+                            heartbeat,
+                            dist.max_retries,
+                            log,
+                        )
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+    let mut survivors = Vec::new();
+    for (conn, stat) in outcomes {
+        if let Some(conn) = conn {
+            survivors.push(conn);
+        } else {
+            report.workers_lost += 1;
+            report.topology.push(stat);
+        }
+    }
+    let state = state.into_inner().unwrap();
+    report.retries += state.retries;
+    (state, survivors)
+}
+
+fn worker_loop(
+    mut conn: WorkerConn,
+    state: &Mutex<DispatchState>,
+    heartbeat: Duration,
+    max_retries: usize,
+    log: &EventLog,
+) -> (Option<WorkerConn>, WorkerStat) {
+    loop {
+        let job = {
+            let mut st = state.lock().unwrap();
+            if st.pending.is_empty() && st.inflight == 0 {
+                break;
+            }
+            match st.pending.pop_front() {
+                Some(j) => {
+                    st.inflight += 1;
+                    Some(j)
+                }
+                None => None,
+            }
+        };
+        let Some(mut job) = job else {
+            // other workers still have jobs in flight that may yet
+            // be requeued — stay available
+            thread::sleep(POLL);
+            continue;
+        };
+        log.emit(format!(
+            "assign job {} -> worker {} (attempt {}): {}",
+            job.id,
+            conn.id,
+            job.attempts + 1,
+            job.desc
+        ));
+        match run_job(&mut conn, &job, heartbeat) {
+            Ok(out) => {
+                conn.jobs_done += 1;
+                log.emit(format!(
+                    "job {} done on worker {}",
+                    job.id, conn.id
+                ));
+                let mut st = state.lock().unwrap();
+                st.done.insert(job.id, out);
+                st.inflight -= 1;
+            }
+            Err(fail) => {
+                log.emit(format!(
+                    "worker {} failed job {}: {}",
+                    conn.id,
+                    job.id,
+                    fail.msg()
+                ));
+                let conn_dead = matches!(fail, Fail::Conn(_));
+                {
+                    let mut st = state.lock().unwrap();
+                    st.inflight -= 1;
+                    job.attempts += 1;
+                    if job.attempts > max_retries {
+                        log.emit(format!(
+                            "job {} abandoned after {} attempts \
+                             (will fall back locally)",
+                            job.id, job.attempts
+                        ));
+                        st.abandoned.push(job);
+                    } else {
+                        st.retries += 1;
+                        log.emit(format!(
+                            "requeue job {} (attempt {})",
+                            job.id,
+                            job.attempts + 1
+                        ));
+                        st.pending.push_back(job);
+                    }
+                }
+                if conn_dead {
+                    log.emit(format!(
+                        "worker {} lost (connection dropped)",
+                        conn.id
+                    ));
+                    let stat = WorkerStat {
+                        worker: conn.id,
+                        pid: conn.pid,
+                        jobs_done: conn.jobs_done,
+                        lost: true,
+                    };
+                    return (None, stat);
+                }
+            }
+        }
+    }
+    let stat = WorkerStat {
+        worker: conn.id,
+        pid: conn.pid,
+        jobs_done: conn.jobs_done,
+        lost: false,
+    };
+    (Some(conn), stat)
+}
+
+/// Execute a job in-process through the same codec a worker uses.
+fn run_local(job: &Job) -> Result<JobOut> {
+    let decoded = decode_job(&job.payload)?;
+    let mut partials: Vec<(u32, Vec<u8>)> = Vec::new();
+    let mut seq: u32 = 0;
+    execute_job(&decoded, &mut |bytes| {
+        partials.push((seq, bytes));
+        seq += 1;
+        Ok(())
+    })?;
+    decode_out(&job.expect, partials)
+}
+
+/// Run a phase's jobs to completion: dispatch over the live workers,
+/// then execute whatever is left (abandoned, or everything when no
+/// workers are alive) through the local fallback. Every job ends in
+/// `done` or this returns an error — partial results never merge.
+fn run_phase(
+    conns: &mut Vec<WorkerConn>,
+    jobs: Vec<Job>,
+    dist: &DistOptions,
+    log: &EventLog,
+    report: &mut DistReport,
+) -> Result<HashMap<u64, JobOut>> {
+    let (mut done, leftovers) = if conns.is_empty() {
+        (HashMap::new(), jobs)
+    } else {
+        let taken = std::mem::take(conns);
+        let (state, survivors) =
+            dispatch(taken, jobs, dist, log, report);
+        *conns = survivors;
+        let mut left: Vec<Job> = state.abandoned;
+        left.extend(state.pending);
+        (state.done, left)
+    };
+    for job in &leftovers {
+        log.emit(format!(
+            "local fallback: job {} ({})",
+            job.id, job.desc
+        ));
+        report.local_jobs += 1;
+        done.insert(job.id, run_local(job)?);
+    }
+    Ok(done)
+}
+
+// ------------------------------------------- spawning and accepting
+
+fn spawn_workers(
+    dist: &DistOptions,
+    addr: &str,
+) -> Result<Vec<Child>> {
+    let bin = match &dist.worker_bin {
+        Some(p) => p.clone(),
+        None => std::env::current_exe()?,
+    };
+    let hb = (dist.heartbeat_ms / 4).max(10);
+    let mut children = Vec::with_capacity(dist.workers);
+    for w in 0..dist.workers {
+        let mut cmd = Command::new(&bin);
+        cmd.arg("worker")
+            .arg("--connect")
+            .arg(addr)
+            .arg("--heartbeat-ms")
+            .arg(hb.to_string());
+        if let Some(spec) = &dist.inject {
+            if spec.worker == w {
+                for f in spec.worker_flags() {
+                    cmd.arg(f);
+                }
+            }
+        }
+        cmd.stdin(Stdio::null()).stdout(Stdio::null());
+        if dist.verbose {
+            cmd.stderr(Stdio::inherit());
+        } else {
+            cmd.stderr(Stdio::null());
+        }
+        children.push(cmd.spawn()?);
+    }
+    Ok(children)
+}
+
+fn greet_worker(
+    stream: TcpStream,
+    id: usize,
+    accept_ms: u64,
+) -> Result<WorkerConn> {
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(Duration::from_millis(
+        accept_ms.max(10),
+    )))?;
+    let writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    match read_dist_frame(&mut reader)? {
+        Some(DistFrame::Ack { kind, info, .. })
+            if kind == ACK_HELLO =>
+        {
+            Ok(WorkerConn { id, pid: info, reader, writer, jobs_done: 0 })
+        }
+        _ => Err(invalid("worker connection did not greet with HELLO")),
+    }
+}
+
+fn accept_workers(
+    listener: &TcpListener,
+    expected: usize,
+    accept_ms: u64,
+    log: &EventLog,
+) -> Result<Vec<WorkerConn>> {
+    listener.set_nonblocking(true)?;
+    let deadline =
+        Instant::now() + Duration::from_millis(accept_ms.max(10));
+    let mut conns = Vec::with_capacity(expected);
+    while conns.len() < expected && Instant::now() < deadline {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                match greet_worker(stream, conns.len(), accept_ms) {
+                    Ok(conn) => {
+                        log.emit(format!(
+                            "worker {} connected from {peer} \
+                             (pid {})",
+                            conn.id, conn.pid
+                        ));
+                        conns.push(conn);
+                    }
+                    Err(e) => {
+                        log.emit(format!(
+                            "rejected connection from {peer}: {e}"
+                        ));
+                    }
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                thread::sleep(POLL);
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    if conns.len() < expected {
+        log.emit(format!(
+            "degrading: {} of {expected} workers connected \
+             within {accept_ms} ms",
+            conns.len()
+        ));
+    }
+    Ok(conns)
+}
+
+fn shutdown_children(children: &mut Vec<Child>) {
+    // connections are already dropped, so workers see EOF and exit;
+    // give them a moment, then insist
+    let deadline = Instant::now() + Duration::from_millis(1000);
+    while Instant::now() < deadline {
+        if children
+            .iter_mut()
+            .all(|c| matches!(c.try_wait(), Ok(Some(_))))
+        {
+            return;
+        }
+        thread::sleep(POLL);
+    }
+    for c in children.iter_mut() {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+}
+
+/// Split `[0, n)` into up to `parts` contiguous near-equal ranges
+/// (`(col0, count)`; never empty, at most `n` of them).
+fn partition_ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.clamp(1, n.max(1));
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut at = 0;
+    for i in 0..parts {
+        let count = base + usize::from(i < extra);
+        if count > 0 {
+            out.push((at, count));
+            at += count;
+        }
+    }
+    out
+}
+
+// --------------------------------------------------------- the fit
+
+/// Fit a model across worker processes — same signature and same
+/// result bits as [`fit_model`](crate::model::fit_model), plus the
+/// [`DistReport`] describing how the work was spread and recovered.
+pub fn run_distributed_fit(
+    ds: &MaskedDataset,
+    labels01: &[u8],
+    reduce_cfg: &ReduceConfig,
+    est_cfg: &EstimatorConfig,
+    data_cfg: &DataConfig,
+    opts: &FitOptions,
+    dist: &DistOptions,
+) -> Result<(FittedModel, DistReport)> {
+    if labels01.len() != ds.n() {
+        return Err(invalid("labels must match sample count"));
+    }
+    let total = Stopwatch::start();
+    let log = EventLog::new(dist.verbose);
+    let mut report = DistReport {
+        workers_requested: dist.workers + dist.expect_external,
+        ..Default::default()
+    };
+
+    // stage 1 runs on the coordinator: the parcellation needs the
+    // whole cohort (label-free, cheap relative to the fold fits)
+    let (reduction, reducer) = fit_reduction(ds, reduce_cfg)?;
+    let k = reducer.k();
+    drop(reducer); // workers rebuild it from the shipped ReductionOp
+
+    // stage the cohort where every local worker can stream it
+    let work_dir = match &dist.work_dir {
+        Some(d) => d.clone(),
+        None => std::env::temp_dir().join(format!(
+            "fastclust_dist_{}",
+            std::process::id()
+        )),
+    };
+    std::fs::create_dir_all(&work_dir)?;
+    let stem = work_dir.join("cohort");
+    save_dataset(&stem, ds)?;
+    let stem_str = stem.to_string_lossy().into_owned();
+    log.emit(format!("cohort staged at {stem_str} (n={})", ds.n()));
+
+    // bring up the fleet
+    let listener = TcpListener::bind(&dist.bind)?;
+    let addr = listener.local_addr()?.to_string();
+    log.emit(format!("coordinator listening on {addr}"));
+    let mut children = spawn_workers(dist, &addr)?;
+    let expected = children.len() + dist.expect_external;
+    let mut conns = if expected > 0 {
+        accept_workers(&listener, expected, dist.accept_ms, &log)?
+    } else {
+        Vec::new()
+    };
+    report.workers_connected = conns.len();
+
+    // ---- phase A: chunked reduction of the sample range
+    let sw = Stopwatch::start();
+    let lanes =
+        conns.len().max(1) * dist.jobs_per_worker.max(1);
+    let ranges = partition_ranges(ds.n(), lanes);
+    let jobs: Vec<Job> = ranges
+        .iter()
+        .enumerate()
+        .map(|(i, &(col0, count))| {
+            let payload = encode_job(&JobPayload::Reduce {
+                stem: stem_str.clone(),
+                col0: col0 as u32,
+                count: count as u32,
+                chunk: dist.chunk_samples.max(1) as u32,
+                op: reduction.clone(),
+            });
+            Job {
+                id: i as u64,
+                attempts: 0,
+                payload: Arc::new(payload),
+                expect: Expect::Blocks { k, col0, count },
+                desc: format!("reduce [{col0}, {})", col0 + count),
+            }
+        })
+        .collect();
+    report.reduce_jobs = jobs.len();
+    let reduce_job_ids: Vec<u64> =
+        jobs.iter().map(|j| j.id).collect();
+    let done = run_phase(&mut conns, jobs, dist, &log, &mut report)?;
+    let mut acc = ReduceAccumulator::new(k, ds.n());
+    for id in reduce_job_ids {
+        match done.get(&id) {
+            Some(JobOut::Blocks(blocks)) => {
+                for (col0, x) in blocks {
+                    acc.insert(*col0, x)?;
+                }
+            }
+            _ => {
+                return Err(invalid(format!(
+                    "reduce job {id} produced no block output"
+                )))
+            }
+        }
+    }
+    let xk = acc.finish()?; // exactly-once coverage proof
+    report.reduce_secs = sw.secs();
+    log.emit(format!(
+        "reduction merged: ({k}, {}) in {:.3}s",
+        ds.n(),
+        report.reduce_secs
+    ));
+
+    // ---- phase B: per-fold estimator fits
+    let sw = Stopwatch::start();
+    let xs = xk.transpose(); // (n, k), as in fit_model
+    let y: Vec<f32> = labels01.iter().map(|&l| l as f32).collect();
+    let folds = stratified_kfold(labels01, est_cfg.cv_folds, FOLD_SEED);
+    let fold_job0 = report.reduce_jobs as u64;
+    let jobs: Vec<Job> = folds
+        .iter()
+        .enumerate()
+        .map(|(fi, fold)| {
+            let xtr = xs.select_rows(&fold.train);
+            let ytr: Vec<f32> =
+                fold.train.iter().map(|&i| y[i]).collect();
+            let xte = xs.select_rows(&fold.test);
+            let yte: Vec<f32> =
+                fold.test.iter().map(|&i| y[i]).collect();
+            let payload = encode_job(&JobPayload::Fold {
+                fold_id: fi as u32,
+                sgd_epochs: opts.sgd_epochs as u32,
+                sgd_chunk: opts.sgd_chunk as u32,
+                lambda: est_cfg.lambda,
+                tol: est_cfg.tol,
+                max_iter: est_cfg.max_iter as u32,
+                xtr,
+                ytr,
+                xte,
+                yte,
+            });
+            Job {
+                id: fold_job0 + fi as u64,
+                attempts: 0,
+                payload: Arc::new(payload),
+                expect: Expect::Fold { fold_id: fi as u32 },
+                desc: format!("fold {fi}"),
+            }
+        })
+        .collect();
+    report.fold_jobs = jobs.len();
+    let done = run_phase(&mut conns, jobs, dist, &log, &mut report)?;
+    let mut fold_models = Vec::with_capacity(folds.len());
+    for (fi, fold) in folds.iter().enumerate() {
+        match done.get(&(fold_job0 + fi as u64)) {
+            Some(JobOut::Fold { fold_id, accuracy, fit })
+                if *fold_id == fi as u32 =>
+            {
+                fold_models.push(FoldModel {
+                    test: fold.test.clone(),
+                    accuracy: *accuracy,
+                    fit: fit.clone(),
+                });
+            }
+            _ => {
+                return Err(invalid(format!(
+                    "fold job {fi} produced no fold output"
+                )))
+            }
+        }
+    }
+    report.fold_secs = sw.secs();
+
+    // ---- teardown + assembly
+    for conn in conns {
+        report.topology.push(WorkerStat {
+            worker: conn.id,
+            pid: conn.pid,
+            jobs_done: conn.jobs_done,
+            lost: false,
+        });
+        // dropping the connection EOFs the worker's read loop
+    }
+    report.topology.sort_by_key(|w| w.worker);
+    shutdown_children(&mut children);
+    if dist.work_dir.is_none() {
+        let _ = std::fs::remove_dir_all(&work_dir);
+    }
+
+    let header = build_header(
+        k,
+        ds.p(),
+        ds.n(),
+        reduce_cfg,
+        est_cfg,
+        data_cfg,
+        opts,
+    );
+    let model = FittedModel::from_parts(
+        header,
+        ds.mask().dims,
+        ds.mask().voxels.clone(),
+        reduction,
+        fold_models,
+    );
+    model.validate()?;
+    report.total_secs = total.secs();
+    log.emit(format!(
+        "distributed fit complete in {:.3}s \
+         ({} retries, {} local fallbacks)",
+        report.total_secs, report.retries, report.local_jobs
+    ));
+    report.events = log.snapshot();
+    Ok((model, report))
+}
+
+/// Sanity guard shared by the CLI and tests: the distributed fit
+/// only makes sense for methods with a persistable reduction.
+pub fn check_method(reduce_cfg: &ReduceConfig) -> Result<()> {
+    if matches!(reduce_cfg.method, Method::None) {
+        return Err(invalid(
+            "fit-distributed needs a compression method",
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{fit_model, save_model};
+    use crate::volume::MorphometryGenerator;
+
+    #[test]
+    fn partition_tiles_the_range() {
+        for &(n, parts) in
+            &[(10usize, 3usize), (7, 7), (5, 9), (100, 4), (1, 1)]
+        {
+            let ranges = partition_ranges(n, parts);
+            assert!(ranges.len() <= parts.max(1));
+            let mut at = 0;
+            for &(col0, count) in &ranges {
+                assert_eq!(col0, at, "contiguous from 0");
+                assert!(count > 0, "no empty ranges");
+                at += count;
+            }
+            assert_eq!(at, n, "tiles [0, n) exactly");
+            let max = ranges.iter().map(|r| r.1).max().unwrap();
+            let min = ranges.iter().map(|r| r.1).min().unwrap();
+            assert!(max - min <= 1, "near-equal split");
+        }
+    }
+
+    #[test]
+    fn job_codec_roundtrips() {
+        let jobs = vec![
+            JobPayload::Reduce {
+                stem: "/tmp/x".into(),
+                col0: 3,
+                count: 9,
+                chunk: 4,
+                op: ReductionOp::Cluster {
+                    k: 2,
+                    labels: vec![0, 1, 1, 0, 1],
+                },
+            },
+            JobPayload::Reduce {
+                stem: String::new(),
+                col0: 0,
+                count: 1,
+                chunk: 1,
+                op: ReductionOp::RandomProjection {
+                    p: 100,
+                    k: 10,
+                    seed: 42,
+                },
+            },
+            JobPayload::Fold {
+                fold_id: 2,
+                sgd_epochs: 3,
+                sgd_chunk: 8,
+                lambda: 0.5,
+                tol: 1e-6,
+                max_iter: 200,
+                xtr: FeatureMatrix::from_vec(2, 2, vec![1., 2., 3., 4.])
+                    .unwrap(),
+                ytr: vec![0.0, 1.0],
+                xte: FeatureMatrix::from_vec(1, 2, vec![5., 6.])
+                    .unwrap(),
+                yte: vec![1.0],
+            },
+        ];
+        for job in &jobs {
+            let enc = encode_job(job);
+            let back = decode_job(&enc).unwrap();
+            assert_eq!(encode_job(&back), enc, "codec is stable");
+        }
+    }
+
+    #[test]
+    fn job_decode_rejects_garbage() {
+        assert!(decode_job(&[]).is_err());
+        assert!(decode_job(&[9]).is_err());
+        // a Cluster op claiming 2^30 labels in a 16-byte buffer must
+        // fail on bounds, not allocate gigabytes
+        let mut b = vec![0u8];
+        put_str(&mut b, "s");
+        put_u32(&mut b, 0);
+        put_u32(&mut b, 1);
+        put_u32(&mut b, 1);
+        b.push(0);
+        put_u32(&mut b, 5);
+        put_u32(&mut b, 1 << 30);
+        assert!(decode_job(&b).is_err());
+    }
+
+    #[test]
+    fn fold_partial_codec_is_bit_exact() {
+        let fit = LogregFit {
+            w: vec![0.25, -1.5e-7, f32::MIN_POSITIVE],
+            b: -0.125,
+            loss: 0.693_147,
+            iters: 11,
+            evals: 13,
+            grad_norm: 1e-9,
+        };
+        let enc = encode_fold_partial(4, 0.875, &fit);
+        let (id, acc, back) = decode_fold_partial(&enc).unwrap();
+        assert_eq!(id, 4);
+        assert_eq!(acc.to_bits(), 0.875f64.to_bits());
+        assert_eq!(back.b.to_bits(), fit.b.to_bits());
+        assert_eq!(back.loss.to_bits(), fit.loss.to_bits());
+        assert_eq!(back.grad_norm.to_bits(), fit.grad_norm.to_bits());
+        assert_eq!((back.iters, back.evals), (11, 13));
+        let bits: Vec<u32> =
+            back.w.iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u32> =
+            fit.w.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits, want);
+    }
+
+    #[test]
+    fn decode_out_requires_exact_tiling() {
+        let k = 2;
+        let block = |col0: usize, cols: usize| {
+            encode_block_partial(
+                col0,
+                &FeatureMatrix::zeros(k, cols),
+            )
+        };
+        let expect = Expect::Blocks { k, col0: 4, count: 6 };
+        // exact tiling (out of order) is fine
+        let ok = decode_out(
+            &expect,
+            vec![(1, block(7, 3)), (0, block(4, 3))],
+        );
+        assert!(ok.is_ok());
+        // a gap is not
+        let gap = decode_out(
+            &expect,
+            vec![(0, block(4, 2)), (1, block(7, 3))],
+        );
+        assert!(gap.is_err());
+        // short coverage is not
+        let short =
+            decode_out(&expect, vec![(0, block(4, 3))]);
+        assert!(short.is_err());
+        // wrong row count is not
+        let bad = decode_out(
+            &expect,
+            vec![(
+                0,
+                encode_block_partial(
+                    4,
+                    &FeatureMatrix::zeros(k + 1, 6),
+                ),
+            )],
+        );
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn fault_spec_parses() {
+        let s = FaultSpec::parse("kill:0").unwrap();
+        assert_eq!(s.kind, FaultKind::Kill);
+        assert_eq!(s.worker, 0);
+        assert_eq!(
+            FaultSpec::parse("delay:2").unwrap().kind,
+            FaultKind::Delay
+        );
+        assert!(FaultSpec::parse("boom:1").is_err());
+        assert!(FaultSpec::parse("kill").is_err());
+        assert!(FaultSpec::parse("kill:x").is_err());
+    }
+
+    /// Zero workers = every job through the local fallback, still
+    /// byte-identical to the plain fit (the degradation floor).
+    #[test]
+    fn zero_workers_degrades_to_local_and_matches_fit() {
+        let dc = DataConfig {
+            dims: [9, 10, 8],
+            n_samples: 24,
+            seed: 11,
+            ..Default::default()
+        };
+        let (ds, y) = MorphometryGenerator::new(dc.dims)
+            .generate(dc.n_samples, dc.seed);
+        let reduce = ReduceConfig {
+            method: Method::Fast,
+            ratio: 10,
+            ..Default::default()
+        };
+        let est = EstimatorConfig {
+            cv_folds: 3,
+            max_iter: 80,
+            ..Default::default()
+        };
+        let opts = FitOptions::default();
+        let dist = DistOptions {
+            workers: 0,
+            chunk_samples: 5, // multiple partials per job
+            accept_ms: 50,
+            ..Default::default()
+        };
+        let local =
+            fit_model(&ds, &y, &reduce, &est, &dc, &opts).unwrap();
+        let (got, report) = run_distributed_fit(
+            &ds, &y, &reduce, &est, &dc, &opts, &dist,
+        )
+        .unwrap();
+        assert_eq!(report.workers_connected, 0);
+        assert_eq!(
+            report.local_jobs,
+            report.reduce_jobs + report.fold_jobs
+        );
+        let tmp = std::env::temp_dir();
+        let pid = std::process::id();
+        let a = tmp.join(format!("fc_dist_local_{pid}.fcm"));
+        let b = tmp.join(format!("fc_dist_dist_{pid}.fcm"));
+        save_model(&a, &local).unwrap();
+        save_model(&b, &got).unwrap();
+        let ba = std::fs::read(&a).unwrap();
+        let bb = std::fs::read(&b).unwrap();
+        let _ = std::fs::remove_file(&a);
+        let _ = std::fs::remove_file(&b);
+        assert_eq!(ba, bb, "artifacts are byte-identical");
+    }
+}

@@ -39,6 +39,28 @@ impl EventLog {
     pub fn snapshot(&self) -> Vec<(f64, String)> {
         self.events.lock().unwrap().clone()
     }
+
+    /// The event stream as a JSON array of `{t, msg}` objects — the
+    /// structured form the distributed coordinator persists next to
+    /// its artifacts (and CI uploads on failure).
+    pub fn to_json(&self) -> Value {
+        events_json(&self.snapshot())
+    }
+}
+
+/// JSON form of an event snapshot (see [`EventLog::to_json`]).
+pub fn events_json(events: &[(f64, String)]) -> Value {
+    Value::Arr(
+        events
+            .iter()
+            .map(|(t, msg)| {
+                Value::obj(vec![
+                    ("t", Value::Num(*t)),
+                    ("msg", Value::Str(msg.clone())),
+                ])
+            })
+            .collect(),
+    )
 }
 
 /// Counters + timing accumulators, keyed by name.
@@ -142,6 +164,21 @@ mod tests {
         assert_eq!(evs.len(), 2);
         assert_eq!(evs[0].1, "a");
         assert!(evs[0].0 <= evs[1].0);
+    }
+
+    #[test]
+    fn events_serialize_to_json_array() {
+        let log = EventLog::new(false);
+        log.emit("assign job 1");
+        log.emit("requeue job 1");
+        let v = log.to_json();
+        let arr = v.as_arr().expect("array");
+        assert_eq!(arr.len(), 2);
+        assert_eq!(
+            arr[1].get("msg").and_then(Value::as_str),
+            Some("requeue job 1")
+        );
+        assert!(arr[0].get("t").and_then(Value::as_f64).is_some());
     }
 
     #[test]

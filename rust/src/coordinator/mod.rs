@@ -20,6 +20,12 @@
 //!   `O(chunk + k·n)` matrix bytes instead of `O(p·n)` and (with a
 //!   full reservoir and the batch solver) reproducing the in-memory
 //!   fold accuracies exactly.
+//! * [`distributed`] — the multi-process execution mode (ADR-006):
+//!   [`run_distributed_fit`] partitions the sample range across
+//!   worker processes over the ADR-004 wire protocol and merges the
+//!   streamed partial reductions / fold fits into a fitted model
+//!   byte-identical to the single-process fit, with heartbeat
+//!   timeouts, bounded retry and a local fallback.
 //! * [`WorkerPool`] — fixed thread pool over a [`BoundedQueue`]; job
 //!   results are reassembled by submission id, so parallelism never
 //!   changes results (see `worker_parallelism_does_not_change_results`
@@ -43,12 +49,17 @@
 //! (The offline build has no tokio; the runtime is a hand-rolled
 //! thread + bounded-channel pool — same semantics, zero dependencies.)
 
+pub mod distributed;
 mod events;
 pub mod pipeline;
 mod queue;
 pub mod stream;
 mod worker;
 
+pub use distributed::{
+    run_distributed_fit, run_worker, DistOptions, DistReport,
+    FaultKind, FaultSpec, WorkerOptions, WorkerStat,
+};
 pub use events::{EventLog, Metrics, Stopwatch};
 pub use pipeline::{
     fit_clustering, make_clusterer, make_reducer, run_cv_folds,

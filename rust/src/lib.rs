@@ -71,6 +71,19 @@
 //! copy (CLI: `repro fit --save` / `repro predict --model` /
 //! `repro serve --model --port --workers`).
 //!
+//! ## Distributed fit (ADR-006)
+//!
+//! The fit itself scales across processes:
+//! [`coordinator::run_distributed_fit`] partitions the sample axis,
+//! dispatches reduce and CV-fold jobs to spawned (or remote) worker
+//! processes over CRC-checked frames of the serving protocol, and
+//! merges the chunked partials through
+//! [`reduce::ReduceAccumulator`] into a [`model::FittedModel`] that
+//! is **byte-identical** to the single-process fit — including under
+//! injected worker death, dropped/corrupted partials and heartbeat
+//! timeouts, all the way down to zero live workers (CLI:
+//! `repro fit-distributed --workers N` / `repro worker --connect`).
+//!
 //! ## Kernel layer (ADR-005)
 //!
 //! The compute hot paths — scatter-accumulate reduction, the logreg

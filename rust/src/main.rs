@@ -20,6 +20,14 @@
 //! repro fit --save model.fcm        # fit once, persist the fitted
 //!   [--config cfg.json]             #   pipeline as a .fcm artifact
 //!   [--sgd-epochs E] [--note S]     #   (ADR-004)
+//! repro fit-distributed             # same fit, spread over worker
+//!   --save model.fcm [--workers N]  #   processes (ADR-006); .fcm is
+//!   [--heartbeat-ms MS] [--bind A]  #   byte-identical to `fit`;
+//!   [--expect N] [--inject K:W]     #   topology + recovery events
+//!   [--events PATH] [--verbose]     #   go to <save>.dist.json
+//! repro worker --connect ADDR       # one fit worker process (used
+//!   [--heartbeat-ms MS]             #   by fit-distributed; fault
+//!                                   #   flags exist for tests/CI)
 //! repro predict --model model.fcm   # apply-only re-score of the
 //!                                   #   persisted folds (no refit)
 //! repro serve --model model.fcm     # long-lived loopback decode
@@ -32,6 +40,8 @@
 //!   [--json PATH]
 //! repro bench-kernels [--quick]     # ADR-005 kernels vs their
 //!   [--json PATH]                   #   scalar references (+ gates)
+//! repro bench-distributed [--quick] # distributed vs local fit bench
+//!   [--json PATH]                   #   (+ byte-identity gates)
 //! repro bench-check --current A     # gate a bench report against a
 //!   --baseline B [--factor F]       #   committed baseline (CI)
 //! repro bench-promote --current A   # stage a measured report as a
@@ -48,14 +58,16 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 
 use fastclust::bench_harness::{
-    fig2, fig3, fig4, fig5, fig6, fig7, kernels as kernel_bench,
-    load_bench_report, regression_failures, sharded, streaming,
-    with_provenance, write_bench_report, write_csv, Table,
+    distributed as dist_bench, fig2, fig3, fig4, fig5, fig6, fig7,
+    kernels as kernel_bench, load_bench_report, regression_failures,
+    sharded, streaming, with_provenance, write_bench_report, write_csv,
+    Table,
 };
 use fastclust::cluster::FastCluster;
 use fastclust::config::{DataConfig, ExperimentConfig};
 use fastclust::coordinator::{
-    run_decoding_pipeline, run_streaming_decoding,
+    run_decoding_pipeline, run_distributed_fit, run_streaming_decoding,
+    run_worker, DistOptions, FaultSpec, WorkerOptions,
 };
 use fastclust::error::{invalid, Result};
 use fastclust::graph::LatticeGraph;
@@ -454,6 +466,125 @@ fn fit_cmd(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// `repro fit-distributed --save model.fcm`: the same fit spread
+/// over worker processes (ADR-006). The `.fcm` is byte-identical to
+/// `repro fit --save`; worker topology and the recovery event log go
+/// to a `<save>.dist.json` sidecar instead, so the artifact bytes
+/// never depend on how the work was scheduled.
+fn fit_distributed_cmd(cli: &Cli) -> Result<()> {
+    let cfg = load_config(cli)?;
+    cfg.validate()?;
+    let save = cli
+        .flags
+        .get("save")
+        .ok_or_else(|| invalid("fit-distributed needs --save PATH"))?;
+    let (ds, labels) = morphometry(&cfg.data)
+        .generate(cfg.data.n_samples, cfg.data.seed);
+    let opts = FitOptions {
+        sgd_epochs: cli
+            .usize_flag_strict("sgd-epochs")?
+            .unwrap_or(cfg.stream.sgd_epochs),
+        sgd_chunk: cfg.stream.chunk_samples,
+        note: cli.flags.get("note").cloned().unwrap_or_default(),
+    };
+    let mut dist = DistOptions {
+        workers: cli
+            .usize_flag_strict("workers")?
+            .unwrap_or(cfg.dist.workers),
+        jobs_per_worker: cfg.dist.jobs_per_worker,
+        chunk_samples: cfg.stream.chunk_samples,
+        heartbeat_ms: cli
+            .usize_flag_strict("heartbeat-ms")?
+            .map(|v| v as u64)
+            .unwrap_or(cfg.dist.heartbeat_ms),
+        max_retries: cfg.dist.max_retries,
+        verbose: cli.flags.contains_key("verbose"),
+        ..Default::default()
+    };
+    if let Some(b) = cli.flags.get("bind") {
+        dist.bind = b.clone();
+    }
+    if let Some(e) = cli.usize_flag_strict("expect")? {
+        dist.expect_external = e;
+    }
+    if let Some(spec) = cli.flags.get("inject") {
+        dist.inject = Some(FaultSpec::parse(spec)?);
+    }
+    println!(
+        "fit-distributed: p={} n={} method={} k={} workers={}{}",
+        ds.p(),
+        ds.n(),
+        cfg.reduce.method.name(),
+        cfg.reduce.resolve_k(ds.p()),
+        dist.workers + dist.expect_external,
+        match &dist.inject {
+            Some(s) => format!(" inject={:?}:{}", s.kind, s.worker),
+            None => String::new(),
+        }
+    );
+    let (model, report) = run_distributed_fit(
+        &ds,
+        &labels,
+        &cfg.reduce,
+        &cfg.estimator,
+        &cfg.data,
+        &opts,
+        &dist,
+    )?;
+    let accs: Vec<f64> = model.folds.iter().map(|f| f.accuracy).collect();
+    let mean = fastclust::stats::mean(&accs);
+    let std = fastclust::stats::variance(&accs).sqrt();
+    println!("accuracy = {mean:.3} ± {std:.3}  ({} folds)", accs.len());
+    println!(
+        "workers: {}/{} connected, {} lost; {} retries, {} local \
+         fallbacks",
+        report.workers_connected,
+        report.workers_requested,
+        report.workers_lost,
+        report.retries,
+        report.local_jobs
+    );
+    let path = PathBuf::from(save);
+    save_model(&path, &model)?;
+    println!(
+        "[fcm] {} (k={}, {} fold estimators, {} voxels)",
+        path.display(),
+        model.header.k,
+        model.folds.len(),
+        model.header.p
+    );
+    let sidecar_text = report.to_json().to_string_pretty();
+    let sidecar = PathBuf::from(format!("{save}.dist.json"));
+    std::fs::write(&sidecar, &sidecar_text)?;
+    println!("[dist] {}", sidecar.display());
+    if let Some(events) = cli.flags.get("events") {
+        std::fs::write(events, &sidecar_text)?;
+        println!("[events] {events}");
+    }
+    Ok(())
+}
+
+/// `repro worker --connect ADDR`: one distributed-fit worker. The
+/// fault-injection flags are for the test suites and the CI smoke —
+/// they make *this* worker misbehave on purpose.
+fn worker_cmd(cli: &Cli) -> Result<()> {
+    let addr = cli
+        .flags
+        .get("connect")
+        .ok_or_else(|| invalid("worker needs --connect ADDR"))?;
+    let mut w = WorkerOptions::default();
+    if let Some(h) = cli.usize_flag_strict("heartbeat-ms")? {
+        w.heartbeat_ms = h as u64;
+    }
+    w.fail_after_partials = cli.usize_flag_strict("fail-after-partials")?;
+    w.drop_partial = cli.usize_flag_strict("drop-partial")?;
+    w.corrupt_partial = cli.usize_flag_strict("corrupt-partial")?;
+    w.delay_partial_ms = cli
+        .usize_flag_strict("delay-partial-ms")?
+        .map(|v| v as u64);
+    run_worker(addr, &w)
+}
+
 /// `repro predict --model model.fcm`: load the artifact, regenerate
 /// its training cohort from provenance, and re-score the persisted
 /// fold estimators — apply-only, nothing is refitted. Reproduces the
@@ -627,6 +758,30 @@ fn bench_kernels_cmd(cli: &Cli) -> Result<()> {
     kernel_bench::check_gates(&r)
 }
 
+fn bench_distributed_cmd(cli: &Cli) -> Result<()> {
+    let quick = cli.flags.contains_key("quick");
+    let cfg = if quick {
+        dist_bench::DistBenchConfig::quick()
+    } else {
+        dist_bench::DistBenchConfig::default()
+    };
+    let r = dist_bench::run(&cfg)?;
+    dist_bench::table(&r).print();
+    if let Some(path) = cli.flags.get("json") {
+        let rep = with_provenance(
+            dist_bench::report_json(&r),
+            if quick {
+                "recorded by `repro bench-distributed --quick`"
+            } else {
+                "recorded by `repro bench-distributed`"
+            },
+        );
+        write_bench_report(&PathBuf::from(path), &rep)?;
+        println!("[json] {path}");
+    }
+    dist_bench::check_gates(&r)
+}
+
 /// `repro bench-promote`: validate a measured bench report (it must
 /// carry the provenance block the `--json` benches stamp) and write
 /// it where a committed `BENCH_*.json` baseline lives — the promotion
@@ -752,11 +907,14 @@ fn dispatch(cli: &Cli) -> Result<()> {
         "sharded" => run_sharded(cli),
         "decode" => decode(cli),
         "fit" => fit_cmd(cli),
+        "fit-distributed" => fit_distributed_cmd(cli),
+        "worker" => worker_cmd(cli),
         "predict" => predict_cmd(cli),
         "serve" => serve_cmd(cli),
         "bench-streaming" => bench_streaming_cmd(cli),
         "bench-sharded" => bench_sharded_cmd(cli),
         "bench-kernels" => bench_kernels_cmd(cli),
+        "bench-distributed" => bench_distributed_cmd(cli),
         "bench-check" => bench_check(cli),
         "bench-promote" => bench_promote(cli),
         "runtime-check" => runtime_check(),
@@ -769,13 +927,16 @@ fn dispatch(cli: &Cli) -> Result<()> {
 }
 
 const USAGE: &str = "usage: repro <fig1..fig7|all|sharded|decode|fit|\
-predict|serve|bench-streaming|bench-sharded|bench-kernels|bench-check|\
-bench-promote|runtime-check> \
+fit-distributed|worker|predict|serve|bench-streaming|bench-sharded|\
+bench-kernels|bench-distributed|bench-check|bench-promote|\
+runtime-check> \
 [--scale S] [--seed N] [--out DIR] [--config FILE] [--stream] \
 [--chunk-samples N] [--reservoir R] [--sgd-epochs E] [--data STEM] \
 [--save MODEL.fcm] [--model MODEL.fcm] [--note S] [--port P] \
 [--workers W] [--cache N] [--max-batch B] [--log PATH] [--quick] \
-[--json PATH] [--current A --baseline B --factor F]";
+[--json PATH] [--current A --baseline B --factor F] \
+[--heartbeat-ms MS] [--bind ADDR] [--expect N] [--inject KIND:W] \
+[--events PATH] [--connect ADDR] [--verbose]";
 
 fn main() -> ExitCode {
     let Some(cli) = parse_args() else {

@@ -20,15 +20,17 @@ use crate::coordinator::{make_clusterer, make_reducer};
 use crate::error::{invalid, Result};
 use crate::estimators::cv::stratified_kfold;
 use crate::estimators::{
-    FoldModel, LogisticRegression, LogregBackend, SgdLogisticRegression,
+    FoldModel, LogisticRegression, LogregBackend, LogregFit,
+    SgdLogisticRegression,
 };
 use crate::graph::LatticeGraph;
 use crate::reduce::Reducer;
-use crate::volume::MaskedDataset;
+use crate::volume::{FeatureMatrix, MaskedDataset};
 
 /// The CV split seed shared with `coordinator::pipeline::run_cv_folds`
-/// — the constant that makes fit/decode/predict folds identical.
-const FOLD_SEED: u64 = 0xF01D;
+/// — the constant that makes fit/decode/predict folds identical
+/// (and, via `coordinator::distributed`, identical across machines).
+pub const FOLD_SEED: u64 = 0xF01D;
 
 /// Estimator-backend knobs of a model fit.
 #[derive(Clone, Debug)]
@@ -47,20 +49,17 @@ impl Default for FitOptions {
     }
 }
 
-/// Fit the full decoding pipeline on a cohort and capture it as a
-/// persistable [`FittedModel`]. `data_cfg` is recorded as provenance
-/// so `repro predict` can regenerate the cohort deterministically.
-pub fn fit_model(
+/// Stage 1 of a model fit: learn the compression operator on the
+/// cohort, label-free (as in the paper's Fig-6 protocol). Returns the
+/// persistable [`ReductionOp`] and the live reducer built from it.
+///
+/// Shared verbatim between [`fit_model`] and the distributed
+/// coordinator — one construction site is what makes the two paths'
+/// reduction arithmetic (and hence their artifacts) bit-identical.
+pub fn fit_reduction(
     ds: &MaskedDataset,
-    labels01: &[u8],
     reduce_cfg: &ReduceConfig,
-    est_cfg: &EstimatorConfig,
-    data_cfg: &DataConfig,
-    opts: &FitOptions,
-) -> Result<FittedModel> {
-    if labels01.len() != ds.n() {
-        return Err(invalid("labels must match sample count"));
-    }
+) -> Result<(ReductionOp, Box<dyn Reducer + Send + Sync>)> {
     let method = reduce_cfg.method;
     if matches!(method, Method::None) {
         return Err(invalid(
@@ -70,8 +69,6 @@ pub fn fit_model(
     }
     let p = ds.p();
     let k = reduce_cfg.resolve_k(p);
-
-    // ---- stage 1: learn the compression (label-free, as in Fig 6)
     let graph = LatticeGraph::from_mask(ds.mask());
     let labels = match make_clusterer(method, reduce_cfg.shards) {
         None => None,
@@ -90,6 +87,106 @@ pub fn fit_model(
     let reducer =
         make_reducer(method, labels.as_ref(), p, k, reduce_cfg.seed)?
             .ok_or_else(|| invalid("model fit needs a reducer"))?;
+    Ok((reduction, reducer))
+}
+
+/// Stage 3 of a model fit, one fold: train the estimator on
+/// `(xtr, ytr)` and score it on `(xte, yte)`. A pure, deterministic
+/// function of its arguments — the property the distributed fit
+/// leans on: a fold computed by any worker (or retried after a
+/// failure) produces the same `LogregFit` bits as the local loop.
+pub fn fit_one_fold(
+    xtr: &FeatureMatrix,
+    ytr: &[f32],
+    xte: &FeatureMatrix,
+    yte: &[f32],
+    est_cfg: &EstimatorConfig,
+    sgd_epochs: usize,
+    sgd_chunk: usize,
+) -> Result<(LogregFit, f64)> {
+    let fit = if sgd_epochs > 0 {
+        // mirror coordinator::stream::run_cv_folds_sgd exactly
+        let sgd = SgdLogisticRegression {
+            lambda: est_cfg.lambda,
+            ..Default::default()
+        };
+        let chunk = sgd_chunk.max(1);
+        let mut st = sgd.init(xtr.cols);
+        for _ in 0..sgd_epochs.max(1) {
+            let mut r0 = 0usize;
+            while r0 < xtr.rows {
+                let r1 = (r0 + chunk).min(xtr.rows);
+                let xc = xtr.row_block(r0, r1);
+                sgd.partial_fit(&mut st, &xc, &ytr[r0..r1])?;
+                r0 = r1;
+            }
+        }
+        sgd.to_fit(&st)
+    } else {
+        let lr = LogisticRegression {
+            lambda: est_cfg.lambda,
+            tol: est_cfg.tol,
+            max_iter: est_cfg.max_iter,
+            backend: LogregBackend::Native,
+        };
+        lr.fit(xtr, ytr)?
+    };
+    let accuracy = LogisticRegression::accuracy(&fit, xte, yte);
+    Ok((fit, accuracy))
+}
+
+/// The provenance header of a fit. One construction site, shared by
+/// the single-process and distributed paths, so the serialized
+/// artifacts cannot drift apart field by field. `k` is the reducer's
+/// *actual* output arity; `p`/`n` come from the cohort.
+pub fn build_header(
+    k: usize,
+    p: usize,
+    n: usize,
+    reduce_cfg: &ReduceConfig,
+    est_cfg: &EstimatorConfig,
+    data_cfg: &DataConfig,
+    opts: &FitOptions,
+) -> ModelHeader {
+    ModelHeader {
+        method: reduce_cfg.method,
+        k,
+        p,
+        n,
+        reduce_seed: reduce_cfg.seed,
+        shards: reduce_cfg.shards,
+        lambda: est_cfg.lambda,
+        tol: est_cfg.tol,
+        max_iter: est_cfg.max_iter,
+        cv_folds: est_cfg.cv_folds,
+        sgd_epochs: opts.sgd_epochs,
+        sgd_chunk: opts.sgd_chunk,
+        data_dims: data_cfg.dims,
+        data_n_samples: data_cfg.n_samples,
+        data_fwhm: data_cfg.fwhm,
+        data_noise_sigma: data_cfg.noise_sigma,
+        data_seed: data_cfg.seed,
+        note: opts.note.clone(),
+    }
+}
+
+/// Fit the full decoding pipeline on a cohort and capture it as a
+/// persistable [`FittedModel`]. `data_cfg` is recorded as provenance
+/// so `repro predict` can regenerate the cohort deterministically.
+pub fn fit_model(
+    ds: &MaskedDataset,
+    labels01: &[u8],
+    reduce_cfg: &ReduceConfig,
+    est_cfg: &EstimatorConfig,
+    data_cfg: &DataConfig,
+    opts: &FitOptions,
+) -> Result<FittedModel> {
+    if labels01.len() != ds.n() {
+        return Err(invalid("labels must match sample count"));
+    }
+
+    // ---- stage 1: learn the compression (label-free, as in Fig 6)
+    let (reduction, reducer) = fit_reduction(ds, reduce_cfg)?;
     // the artifact's k is the operator's actual output arity (the
     // clusterers can merge past the request by a few clusters)
     let k = reducer.k();
@@ -106,34 +203,15 @@ pub fn fit_model(
         let ytr: Vec<f32> = fold.train.iter().map(|&i| y[i]).collect();
         let xte = xs.select_rows(&fold.test);
         let yte: Vec<f32> = fold.test.iter().map(|&i| y[i]).collect();
-        let fit = if opts.sgd_epochs > 0 {
-            // mirror coordinator::stream::run_cv_folds_sgd exactly
-            let sgd = SgdLogisticRegression {
-                lambda: est_cfg.lambda,
-                ..Default::default()
-            };
-            let chunk = opts.sgd_chunk.max(1);
-            let mut st = sgd.init(xs.cols);
-            for _ in 0..opts.sgd_epochs.max(1) {
-                let mut r0 = 0usize;
-                while r0 < xtr.rows {
-                    let r1 = (r0 + chunk).min(xtr.rows);
-                    let xc = xtr.row_block(r0, r1);
-                    sgd.partial_fit(&mut st, &xc, &ytr[r0..r1])?;
-                    r0 = r1;
-                }
-            }
-            sgd.to_fit(&st)
-        } else {
-            let lr = LogisticRegression {
-                lambda: est_cfg.lambda,
-                tol: est_cfg.tol,
-                max_iter: est_cfg.max_iter,
-                backend: LogregBackend::Native,
-            };
-            lr.fit(&xtr, &ytr)?
-        };
-        let accuracy = LogisticRegression::accuracy(&fit, &xte, &yte);
+        let (fit, accuracy) = fit_one_fold(
+            &xtr,
+            &ytr,
+            &xte,
+            &yte,
+            est_cfg,
+            opts.sgd_epochs,
+            opts.sgd_chunk,
+        )?;
         fold_models.push(FoldModel {
             test: fold.test.clone(),
             accuracy,
@@ -141,26 +219,15 @@ pub fn fit_model(
         });
     }
 
-    let header = ModelHeader {
-        method,
+    let header = build_header(
         k,
-        p,
-        n: ds.n(),
-        reduce_seed: reduce_cfg.seed,
-        shards: reduce_cfg.shards,
-        lambda: est_cfg.lambda,
-        tol: est_cfg.tol,
-        max_iter: est_cfg.max_iter,
-        cv_folds: est_cfg.cv_folds,
-        sgd_epochs: opts.sgd_epochs,
-        sgd_chunk: opts.sgd_chunk,
-        data_dims: data_cfg.dims,
-        data_n_samples: data_cfg.n_samples,
-        data_fwhm: data_cfg.fwhm,
-        data_noise_sigma: data_cfg.noise_sigma,
-        data_seed: data_cfg.seed,
-        note: opts.note.clone(),
-    };
+        ds.p(),
+        ds.n(),
+        reduce_cfg,
+        est_cfg,
+        data_cfg,
+        opts,
+    );
     let model = FittedModel::from_parts(
         header,
         ds.mask().dims,

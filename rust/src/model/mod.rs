@@ -30,7 +30,10 @@
 pub mod fit;
 pub mod format;
 
-pub use fit::{fit_model, FitOptions};
+pub use fit::{
+    build_header, fit_model, fit_one_fold, fit_reduction, FitOptions,
+    FOLD_SEED,
+};
 pub use format::{crc32, load_model, read_fcm_header, save_model};
 
 use std::sync::{Arc, OnceLock};

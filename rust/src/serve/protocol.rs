@@ -31,10 +31,31 @@
 //! Requests on one connection are answered in order, so clients may
 //! pipeline frames back-to-back — that is exactly what the server's
 //! per-connection batching exploits.
+//!
+//! # Distributed frames (ADR-006)
+//!
+//! The distributed fit reuses the same `opcode u8 + len u32 + body`
+//! framing for four coordinator/worker frames:
+//!
+//! ```text
+//! ASSIGN  (4)  coordinator → worker  job u64, crc u32, payload
+//! PARTIAL (5)  worker → coordinator  job u64, seq u32, crc u32, payload
+//! ACK     (6)  worker → coordinator  job u64, kind u8, info u64
+//! RETRY   (7)  worker → coordinator  job u64, reason str
+//! ```
+//!
+//! `crc` is the CRC-32 of the opaque payload (same polynomial as the
+//! `.fcm` section checksums), so a corrupted PARTIAL fails at decode
+//! and the coordinator requeues the range instead of merging bad
+//! bits. Payload semantics live in
+//! [`crate::coordinator::distributed`]; this module owns framing and
+//! integrity only, which keeps every decode path reachable from the
+//! `protocol_fuzz` suite.
 
 use std::io::{ErrorKind, Read, Write};
 
 use crate::error::{invalid, Result};
+use crate::model::format::crc32;
 use crate::volume::FeatureMatrix;
 
 /// Request opcodes on the wire.
@@ -45,6 +66,23 @@ pub const OP_COMPRESS: u8 = 2;
 pub const OP_PREDICT: u8 = 3;
 /// Response opcode marking a server-side error.
 pub const OP_ERROR: u8 = 0xFF;
+
+/// Coordinator → worker: one job assignment (ADR-006).
+pub const OP_ASSIGN: u8 = 4;
+/// Worker → coordinator: one partial result of the current job.
+pub const OP_PARTIAL: u8 = 5;
+/// Worker → coordinator: control frame (done / heartbeat / hello).
+pub const OP_ACK: u8 = 6;
+/// Worker → coordinator: recoverable failure, reassign the job.
+pub const OP_RETRY: u8 = 7;
+
+/// [`DistFrame::Ack`] kind: the job finished; `info` = partial
+/// frames the worker believes it sent (the coordinator cross-checks).
+pub const ACK_DONE: u8 = 0;
+/// [`DistFrame::Ack`] kind: liveness beacon while computing.
+pub const ACK_HEARTBEAT: u8 = 1;
+/// [`DistFrame::Ack`] kind: connection greeting; `info` = worker pid.
+pub const ACK_HELLO: u8 = 2;
 
 /// Largest frame body accepted (corruption / abuse guard).
 const MAX_BODY_BYTES: usize = 1 << 28;
@@ -87,14 +125,75 @@ pub enum Response {
     Error(String),
 }
 
+/// One coordinator/worker frame of the distributed fit (ADR-006).
+/// `payload` bytes are opaque at this layer — encoded and decoded by
+/// [`crate::coordinator::distributed`] — but checksummed here, so
+/// corruption is caught before any payload is interpreted.
+#[derive(Clone, Debug)]
+pub enum DistFrame {
+    /// Coordinator → worker: compute job `job` from `payload`.
+    Assign {
+        /// Coordinator-unique job id (echoed by every reply).
+        job: u64,
+        /// Encoded job description.
+        payload: Vec<u8>,
+    },
+    /// Worker → coordinator: one partial result of job `job`.
+    Partial {
+        /// Job this partial belongs to.
+        job: u64,
+        /// 0-based send sequence within the job.
+        seq: u32,
+        /// Encoded partial result.
+        payload: Vec<u8>,
+    },
+    /// Worker → coordinator: control frame ([`ACK_DONE`],
+    /// [`ACK_HEARTBEAT`] or [`ACK_HELLO`]).
+    Ack {
+        /// Job the ack refers to (hello/heartbeat: informational).
+        job: u64,
+        /// One of the `ACK_*` kinds.
+        kind: u8,
+        /// Kind-specific detail (done: partials sent; hello: pid).
+        info: u64,
+    },
+    /// Worker → coordinator: the job failed recoverably on this
+    /// worker (e.g. an unreadable `.fcd` path); reassign it.
+    Retry {
+        /// The declined job.
+        job: u64,
+        /// Human-readable cause, recorded in the event log.
+        reason: String,
+    },
+}
+
 // ------------------------------------------------------------- encode
 
-fn put_str(buf: &mut Vec<u8>, s: &str) {
+pub(crate) fn put_str(buf: &mut Vec<u8>, s: &str) {
     buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
     buf.extend_from_slice(s.as_bytes());
 }
 
-fn put_matrix(buf: &mut Vec<u8>, x: &FeatureMatrix) {
+pub(crate) fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    put_u32(buf, xs.len() as u32);
+    for &v in xs {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+pub(crate) fn put_matrix(buf: &mut Vec<u8>, x: &FeatureMatrix) {
     buf.extend_from_slice(&(x.rows as u32).to_le_bytes());
     buf.extend_from_slice(&(x.cols as u32).to_le_bytes());
     for &v in &x.data {
@@ -167,16 +266,55 @@ pub fn write_response(w: &mut impl Write, rs: &Response) -> Result<()> {
     write_frame(w, opcode, &body)
 }
 
+/// Encode + write one distributed frame (no flush). ASSIGN/PARTIAL
+/// payloads are stamped with their CRC-32 so the receiving side can
+/// reject corruption before interpreting a byte.
+pub fn write_dist_frame(w: &mut impl Write, f: &DistFrame) -> Result<()> {
+    let mut body = Vec::new();
+    let opcode = match f {
+        DistFrame::Assign { job, payload } => {
+            put_u64(&mut body, *job);
+            put_u32(&mut body, crc32(payload));
+            body.extend_from_slice(payload);
+            OP_ASSIGN
+        }
+        DistFrame::Partial { job, seq, payload } => {
+            put_u64(&mut body, *job);
+            put_u32(&mut body, *seq);
+            put_u32(&mut body, crc32(payload));
+            body.extend_from_slice(payload);
+            OP_PARTIAL
+        }
+        DistFrame::Ack { job, kind, info } => {
+            put_u64(&mut body, *job);
+            body.push(*kind);
+            put_u64(&mut body, *info);
+            OP_ACK
+        }
+        DistFrame::Retry { job, reason } => {
+            put_u64(&mut body, *job);
+            put_str(&mut body, reason);
+            OP_RETRY
+        }
+    };
+    write_frame(w, opcode, &body)
+}
+
 // ------------------------------------------------------------- decode
 
-/// Cursor over a frame body.
-struct Cursor<'a> {
+/// Cursor over a frame body (also reused by the distributed job /
+/// partial payload codecs in [`crate::coordinator::distributed`]).
+pub(crate) struct Cursor<'a> {
     buf: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Cursor<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         if self.pos + n > self.buf.len() {
             return Err(invalid("protocol frame truncated"));
         }
@@ -185,18 +323,40 @@ impl<'a> Cursor<'a> {
         Ok(out)
     }
 
-    fn u32(&mut self) -> Result<u32> {
+    pub(crate) fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub(crate) fn u32(&mut self) -> Result<u32> {
         let b = self.take(4)?;
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
-    fn str(&mut self) -> Result<String> {
+    pub(crate) fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        let mut raw = [0u8; 8];
+        raw.copy_from_slice(b);
+        Ok(u64::from_le_bytes(raw))
+    }
+
+    pub(crate) fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Everything not yet consumed (opaque trailing payload).
+    pub(crate) fn rest(&mut self) -> &'a [u8] {
+        let out = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        out
+    }
+
+    pub(crate) fn str(&mut self) -> Result<String> {
         let len = self.u32()? as usize;
         String::from_utf8(self.take(len)?.to_vec())
             .map_err(|_| invalid("protocol string is not UTF-8"))
     }
 
-    fn matrix(&mut self) -> Result<FeatureMatrix> {
+    pub(crate) fn matrix(&mut self) -> Result<FeatureMatrix> {
         let rows = self.u32()? as usize;
         let cols = self.u32()? as usize;
         let bytes = rows
@@ -212,7 +372,7 @@ impl<'a> Cursor<'a> {
         FeatureMatrix::from_vec(rows, cols, data)
     }
 
-    fn f32s(&mut self) -> Result<Vec<f32>> {
+    pub(crate) fn f32s(&mut self) -> Result<Vec<f32>> {
         let n = self.u32()? as usize;
         let raw = self.take(n * 4)?;
         Ok(raw
@@ -221,7 +381,7 @@ impl<'a> Cursor<'a> {
             .collect())
     }
 
-    fn finish(&self) -> Result<()> {
+    pub(crate) fn finish(&self) -> Result<()> {
         if self.pos != self.buf.len() {
             return Err(invalid("protocol frame has trailing bytes"));
         }
@@ -253,8 +413,16 @@ fn read_body(r: &mut impl Read) -> Result<Vec<u8>> {
             "protocol frame body of {len} bytes exceeds limit"
         )));
     }
-    let mut body = vec![0u8; len];
-    r.read_exact(&mut body)?;
+    // the claimed length is untrusted input: read through a capped
+    // `take` so a frame advertising a huge body fails after the bytes
+    // actually present, never after a quarter-gigabyte upfront alloc
+    let mut body = Vec::with_capacity(len.min(1 << 16));
+    let got = r.take(len as u64).read_to_end(&mut body)?;
+    if got != len {
+        return Err(invalid(format!(
+            "protocol frame truncated: body has {got} of {len} bytes"
+        )));
+    }
     Ok(body)
 }
 
@@ -314,6 +482,65 @@ pub fn read_response(r: &mut impl Read) -> Result<Response> {
     };
     c.finish()?;
     Ok(rs)
+}
+
+/// Read one distributed frame; `Ok(None)` = clean EOF (the peer hung
+/// up between frames). ASSIGN/PARTIAL payloads are checksum-verified
+/// here — a mismatch is an `Err`, and since the failed frame was
+/// still fully consumed, the *stream* stays in sync; whether to keep
+/// the connection is the caller's policy (the coordinator drops it:
+/// bits from a corrupting peer are not worth re-trusting).
+pub fn read_dist_frame(r: &mut impl Read) -> Result<Option<DistFrame>> {
+    let Some(op) = read_opcode(r)? else {
+        return Ok(None);
+    };
+    let body = read_body(r)?;
+    let mut c = Cursor::new(&body);
+    let f = match op {
+        OP_ASSIGN => {
+            let job = c.u64()?;
+            let crc = c.u32()?;
+            let payload = c.rest().to_vec();
+            if crc32(&payload) != crc {
+                return Err(invalid(format!(
+                    "ASSIGN payload for job {job} fails its checksum"
+                )));
+            }
+            DistFrame::Assign { job, payload }
+        }
+        OP_PARTIAL => {
+            let job = c.u64()?;
+            let seq = c.u32()?;
+            let crc = c.u32()?;
+            let payload = c.rest().to_vec();
+            if crc32(&payload) != crc {
+                return Err(invalid(format!(
+                    "PARTIAL {seq} of job {job} fails its checksum"
+                )));
+            }
+            DistFrame::Partial { job, seq, payload }
+        }
+        OP_ACK => {
+            let f = DistFrame::Ack {
+                job: c.u64()?,
+                kind: c.u8()?,
+                info: c.u64()?,
+            };
+            c.finish()?;
+            f
+        }
+        OP_RETRY => {
+            let f = DistFrame::Retry { job: c.u64()?, reason: c.str()? };
+            c.finish()?;
+            f
+        }
+        other => {
+            return Err(invalid(format!(
+                "unknown distributed opcode {other:#04x}"
+            )))
+        }
+    };
+    Ok(Some(f))
 }
 
 #[cfg(test)]
@@ -398,5 +625,107 @@ mod tests {
         write_frame(&mut buf, OP_MODEL_INFO, &body).unwrap();
         let mut r = &buf[..];
         assert!(read_request(&mut r).is_err());
+    }
+
+    fn roundtrip_dist(f: &DistFrame) -> DistFrame {
+        let mut buf = Vec::new();
+        write_dist_frame(&mut buf, f).unwrap();
+        let mut r = &buf[..];
+        let back = read_dist_frame(&mut r).unwrap().unwrap();
+        assert!(r.is_empty(), "dist frame fully consumed");
+        back
+    }
+
+    #[test]
+    fn dist_frames_roundtrip() {
+        match roundtrip_dist(&DistFrame::Assign {
+            job: 7,
+            payload: vec![1, 2, 3],
+        }) {
+            DistFrame::Assign { job, payload } => {
+                assert_eq!(job, 7);
+                assert_eq!(payload, vec![1, 2, 3]);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        match roundtrip_dist(&DistFrame::Partial {
+            job: 7,
+            seq: 2,
+            payload: vec![9; 100],
+        }) {
+            DistFrame::Partial { job, seq, payload } => {
+                assert_eq!((job, seq), (7, 2));
+                assert_eq!(payload, vec![9; 100]);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        match roundtrip_dist(&DistFrame::Ack {
+            job: u64::MAX,
+            kind: ACK_HELLO,
+            info: 4242,
+        }) {
+            DistFrame::Ack { job, kind, info } => {
+                assert_eq!(job, u64::MAX);
+                assert_eq!(kind, ACK_HELLO);
+                assert_eq!(info, 4242);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        match roundtrip_dist(&DistFrame::Retry {
+            job: 3,
+            reason: "no such file".into(),
+        }) {
+            DistFrame::Retry { job, reason } => {
+                assert_eq!(job, 3);
+                assert_eq!(reason, "no such file");
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        // empty payloads are legal (checksum of zero bytes)
+        match roundtrip_dist(&DistFrame::Assign {
+            job: 0,
+            payload: Vec::new(),
+        }) {
+            DistFrame::Assign { payload, .. } => assert!(payload.is_empty()),
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn corrupted_dist_payload_rejected() {
+        let mut buf = Vec::new();
+        write_dist_frame(
+            &mut buf,
+            &DistFrame::Partial { job: 1, seq: 0, payload: vec![5; 32] },
+        )
+        .unwrap();
+        let last = buf.len() - 1; // inside the payload
+        buf[last] ^= 0xFF;
+        let mut r = &buf[..];
+        let err = read_dist_frame(&mut r).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        // and the frame was still fully consumed (stream stays framed)
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn oversized_length_claim_fails_without_huge_alloc() {
+        // header claims a body of MAX_BODY_BYTES but provides 3 bytes;
+        // the capped incremental read must error out at EOF instead of
+        // zero-filling a quarter-gigabyte buffer first
+        let mut buf = vec![OP_ACK];
+        buf.extend_from_slice(&(MAX_BODY_BYTES as u32).to_le_bytes());
+        buf.extend_from_slice(&[1, 2, 3]);
+        let mut r = &buf[..];
+        let err = read_dist_frame(&mut r).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+        // one past the limit is rejected before reading anything
+        let mut buf = vec![OP_ACK];
+        buf.extend_from_slice(
+            &((MAX_BODY_BYTES + 1) as u32).to_le_bytes(),
+        );
+        let mut r = &buf[..];
+        let err = read_dist_frame(&mut r).unwrap_err();
+        assert!(err.to_string().contains("exceeds limit"), "{err}");
     }
 }

@@ -1,0 +1,292 @@
+//! Fault-injection suite for the distributed fit (ADR-006): every
+//! scenario — clean fleet, killed worker, dropped / corrupted /
+//! delayed PARTIAL — must converge to a `.fcm` byte-identical to the
+//! single-process [`fit_model`] artifact, with the recovery visible
+//! in the coordinator event log. Workers are real spawned processes
+//! of the `repro` binary (`CARGO_BIN_EXE_repro`), so the wire
+//! protocol, heartbeats and process death are exercised for real.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use fastclust::config::{
+    DataConfig, DistSettings, EstimatorConfig, ExperimentConfig, Method,
+    ReduceConfig,
+};
+use fastclust::coordinator::{
+    run_distributed_fit, DistOptions, DistReport, FaultKind, FaultSpec,
+};
+use fastclust::model::{fit_model, save_model, FitOptions};
+use fastclust::volume::{MaskedDataset, MorphometryGenerator};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_TARGET_TMPDIR"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+struct Fixture {
+    ds: MaskedDataset,
+    labels: Vec<u8>,
+    reduce: ReduceConfig,
+    est: EstimatorConfig,
+    dc: DataConfig,
+    opts: FitOptions,
+    local_bytes: Vec<u8>,
+}
+
+/// Small cohort + the single-process reference artifact bytes.
+fn fixture(tag: &str) -> Fixture {
+    let dc = DataConfig {
+        dims: [8, 9, 7],
+        n_samples: 18,
+        seed: 33,
+        ..Default::default()
+    };
+    let (ds, labels) =
+        MorphometryGenerator::new(dc.dims).generate(dc.n_samples, dc.seed);
+    let reduce = ReduceConfig {
+        method: Method::Fast,
+        ratio: 10,
+        ..Default::default()
+    };
+    let est = EstimatorConfig {
+        cv_folds: 3,
+        max_iter: 60,
+        ..Default::default()
+    };
+    let opts = FitOptions::default();
+    let model =
+        fit_model(&ds, &labels, &reduce, &est, &dc, &opts).unwrap();
+    let path = tmp(&format!("dist_faults_{tag}_local.fcm"));
+    save_model(&path, &model).unwrap();
+    let local_bytes = std::fs::read(&path).unwrap();
+    Fixture { ds, labels, reduce, est, dc, opts, local_bytes }
+}
+
+/// DistOptions for a test: real worker binary, per-test work dir
+/// (the pid-keyed default would collide across parallel tests),
+/// small chunks so every reduce job spans several PARTIAL frames
+/// (the injection ordinals must exist).
+fn dist_opts(tag: &str, workers: usize) -> DistOptions {
+    let work = tmp(&format!("dist_faults_{tag}_work"));
+    std::fs::create_dir_all(&work).unwrap();
+    DistOptions {
+        workers,
+        chunk_samples: 4,
+        worker_bin: Some(PathBuf::from(env!("CARGO_BIN_EXE_repro"))),
+        work_dir: Some(work),
+        ..Default::default()
+    }
+}
+
+/// Run distributed, save, byte-compare against the local reference.
+fn run_and_compare(
+    fx: &Fixture,
+    dist: &DistOptions,
+    tag: &str,
+) -> DistReport {
+    let (model, report) = run_distributed_fit(
+        &fx.ds, &fx.labels, &fx.reduce, &fx.est, &fx.dc, &fx.opts, dist,
+    )
+    .unwrap_or_else(|e| panic!("{tag}: distributed fit failed: {e}"));
+    let path = tmp(&format!("dist_faults_{tag}.fcm"));
+    save_model(&path, &model).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    assert_eq!(
+        bytes, fx.local_bytes,
+        "{tag}: distributed .fcm differs from single-process artifact \
+         (events: {:?})",
+        report.events
+    );
+    if let Some(w) = &dist.work_dir {
+        let _ = std::fs::remove_dir_all(w);
+    }
+    report
+}
+
+fn has_event(r: &DistReport, needle: &str) -> bool {
+    r.events.iter().any(|(_, m)| m.contains(needle))
+}
+
+#[test]
+fn clean_three_worker_fit_is_bit_identical() {
+    let fx = fixture("clean");
+    let dist = dist_opts("clean", 3);
+    let report = run_and_compare(&fx, &dist, "clean");
+    assert_eq!(report.workers_connected, 3);
+    assert_eq!(report.retries, 0, "clean run must not retry");
+    assert_eq!(report.local_jobs, 0, "clean run must not fall back");
+    assert_eq!(report.workers_lost, 0);
+    assert!(report.reduce_jobs > 0 && report.fold_jobs > 0);
+    assert_eq!(report.topology.len(), 3);
+}
+
+#[test]
+fn killed_sole_worker_falls_back_locally_and_matches() {
+    let fx = fixture("kill1");
+    let dist = DistOptions {
+        inject: Some(FaultSpec { kind: FaultKind::Kill, worker: 0 }),
+        ..dist_opts("kill1", 1)
+    };
+    let report = run_and_compare(&fx, &dist, "kill1");
+    assert!(report.workers_lost >= 1, "worker death not noticed");
+    assert!(
+        report.retries >= 1 || report.local_jobs >= 1,
+        "no recovery recorded: {report:?}"
+    );
+    assert!(report.local_jobs >= 1, "no local fallback with 0 \
+         surviving workers");
+    assert!(has_event(&report, "local fallback"), "{:?}", report.events);
+}
+
+#[test]
+fn killed_worker_among_three_is_absorbed_by_survivors() {
+    let fx = fixture("kill3");
+    let dist = DistOptions {
+        inject: Some(FaultSpec { kind: FaultKind::Kill, worker: 0 }),
+        ..dist_opts("kill3", 3)
+    };
+    let report = run_and_compare(&fx, &dist, "kill3");
+    assert_eq!(report.workers_connected, 3);
+    assert!(report.workers_lost >= 1, "worker death not noticed");
+    assert!(
+        has_event(&report, "requeue job")
+            || has_event(&report, "local fallback"),
+        "no re-assignment in the log: {:?}",
+        report.events
+    );
+}
+
+#[test]
+fn dropped_partial_is_soft_retried_on_the_live_worker() {
+    let fx = fixture("drop");
+    let dist = DistOptions {
+        inject: Some(FaultSpec { kind: FaultKind::Drop, worker: 0 }),
+        ..dist_opts("drop", 1)
+    };
+    let report = run_and_compare(&fx, &dist, "drop");
+    assert!(report.retries >= 1, "dropped PARTIAL not retried");
+    assert_eq!(
+        report.workers_lost, 0,
+        "a soft failure must keep the connection"
+    );
+    assert!(has_event(&report, "requeue job"), "{:?}", report.events);
+}
+
+#[test]
+fn corrupted_partial_is_rejected_by_checksum_and_recovered() {
+    let fx = fixture("corrupt");
+    let dist = DistOptions {
+        inject: Some(FaultSpec { kind: FaultKind::Corrupt, worker: 0 }),
+        ..dist_opts("corrupt", 1)
+    };
+    let report = run_and_compare(&fx, &dist, "corrupt");
+    assert!(
+        has_event(&report, "checksum"),
+        "corruption not caught by the frame checksum: {:?}",
+        report.events
+    );
+    assert!(report.retries >= 1 || report.local_jobs >= 1);
+}
+
+#[test]
+fn delayed_worker_hits_the_heartbeat_timeout() {
+    let fx = fixture("delay");
+    let dist = DistOptions {
+        inject: Some(FaultSpec { kind: FaultKind::Delay, worker: 0 }),
+        heartbeat_ms: 600,
+        ..dist_opts("delay", 1)
+    };
+    let report = run_and_compare(&fx, &dist, "delay");
+    assert!(
+        has_event(&report, "heartbeat timeout"),
+        "stall not detected: {:?}",
+        report.events
+    );
+    assert!(report.workers_lost >= 1);
+    assert!(report.local_jobs >= 1);
+}
+
+/// End-to-end through the CLI: `repro fit` vs
+/// `repro fit-distributed --workers 2`, clean and with an injected
+/// kill — all three `.fcm` artifacts must be byte-identical, and the
+/// distributed runs must leave a `.dist.json` topology sidecar.
+#[test]
+fn cli_fit_distributed_matches_cli_fit() {
+    let repro = env!("CARGO_BIN_EXE_repro");
+    let cfg = ExperimentConfig {
+        data: DataConfig {
+            dims: [8, 9, 7],
+            n_samples: 18,
+            seed: 47,
+            ..Default::default()
+        },
+        reduce: ReduceConfig {
+            method: Method::Fast,
+            ratio: 10,
+            ..Default::default()
+        },
+        estimator: EstimatorConfig {
+            cv_folds: 3,
+            max_iter: 60,
+            ..Default::default()
+        },
+        dist: DistSettings { workers: 2, ..Default::default() },
+        ..Default::default()
+    };
+    let cfg_path = tmp("dist_faults_cli.json");
+    std::fs::write(&cfg_path, cfg.to_json().to_string_pretty())
+        .unwrap();
+
+    let run = |args: &[&str]| {
+        let out = Command::new(repro).args(args).output().unwrap();
+        assert!(
+            out.status.success(),
+            "repro {args:?} failed:\n{}\n{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+    };
+
+    let local = tmp("dist_faults_cli_local.fcm");
+    let clean = tmp("dist_faults_cli_clean.fcm");
+    let fault = tmp("dist_faults_cli_fault.fcm");
+    let cfg_s = cfg_path.to_str().unwrap();
+    run(&["fit", "--config", cfg_s, "--save", local.to_str().unwrap()]);
+    run(&[
+        "fit-distributed",
+        "--config",
+        cfg_s,
+        "--save",
+        clean.to_str().unwrap(),
+    ]);
+    run(&[
+        "fit-distributed",
+        "--config",
+        cfg_s,
+        "--save",
+        fault.to_str().unwrap(),
+        "--inject",
+        "kill:0",
+    ]);
+
+    let want = std::fs::read(&local).unwrap();
+    assert_eq!(
+        std::fs::read(&clean).unwrap(),
+        want,
+        "CLI distributed artifact differs from CLI fit"
+    );
+    assert_eq!(
+        std::fs::read(&fault).unwrap(),
+        want,
+        "CLI distributed artifact differs after fault recovery"
+    );
+    for p in [&clean, &fault] {
+        let sidecar =
+            PathBuf::from(format!("{}.dist.json", p.display()));
+        let txt = std::fs::read_to_string(&sidecar)
+            .unwrap_or_else(|e| panic!("missing sidecar: {e}"));
+        assert!(txt.contains("topology"), "sidecar lacks topology");
+    }
+}

@@ -1,0 +1,301 @@
+//! Property tests for the algebra the distributed fit (ADR-006)
+//! rests on: [`ReduceAccumulator::merge`] must behave like a
+//! commutative, associative union of disjoint column ranges — so any
+//! partition of the sample axis, reduced anywhere and merged in any
+//! order, reproduces the in-memory reduction bit-for-bit — and the
+//! SGD fold fit must be a pure function of its inputs, so a retried
+//! or re-assigned fold job returns the same `LogregFit` bits.
+//!
+//! Hand-rolled sweep harness (the offline build carries no proptest):
+//! every property runs over many seeded random instances and failures
+//! print the seed for exact replay.
+
+use fastclust::cluster::Labels;
+use fastclust::config::EstimatorConfig;
+use fastclust::estimators::{SgdLogisticRegression, SgdState};
+use fastclust::model::fit_one_fold;
+use fastclust::reduce::{
+    ClusterReduce, ReduceAccumulator, Reducer, SparseRandomProjection,
+    StreamingReducer,
+};
+use fastclust::rng::Rng;
+use fastclust::volume::FeatureMatrix;
+
+/// Sweep driver: run `prop(seed)` for `n` seeds.
+fn for_seeds(n: u64, mut prop: impl FnMut(u64)) {
+    for seed in 0..n {
+        prop(seed);
+    }
+}
+
+fn cohort(p: usize, n: usize, seed: u64) -> FeatureMatrix {
+    let mut rng = Rng::new(seed ^ 0xC0C0);
+    let mut x = FeatureMatrix::zeros(p, n);
+    rng.fill_normal(&mut x.data);
+    x
+}
+
+/// Random contiguous partition of `0..n` into 1..=max_parts ranges.
+fn random_partition(
+    n: usize,
+    max_parts: usize,
+    rng: &mut Rng,
+) -> Vec<(usize, usize)> {
+    let parts = 1 + rng.below(max_parts.min(n));
+    let mut cuts: Vec<usize> =
+        (0..parts - 1).map(|_| 1 + rng.below(n - 1)).collect();
+    cuts.push(0);
+    cuts.push(n);
+    cuts.sort_unstable();
+    cuts.dedup();
+    cuts.windows(2).map(|w| (w[0], w[1] - w[0])).collect()
+}
+
+/// Reduce one `(col0, count)` range into its own accumulator.
+fn shard_acc(
+    red: &dyn Reducer,
+    x: &FeatureMatrix,
+    col0: usize,
+    count: usize,
+) -> ReduceAccumulator {
+    let cols: Vec<usize> = (col0..col0 + count).collect();
+    let mut acc = red.begin(x.cols);
+    red.reduce_chunk(&mut acc, col0, &x.select_cols(&cols)).unwrap();
+    acc
+}
+
+fn reducers(p: usize, seed: u64) -> Vec<Box<dyn Reducer>> {
+    let k = 3 + (seed as usize % 4);
+    let labels = Labels::new(
+        (0..p as u32).map(|i| i % k as u32).collect(),
+        k,
+    )
+    .unwrap();
+    vec![
+        Box::new(ClusterReduce::from_labels(&labels)),
+        Box::new(SparseRandomProjection::new(p, k, seed ^ 0x5EED)),
+    ]
+}
+
+/// Any random disjoint partition, merged in any (shuffled) order,
+/// equals the full in-memory reduction bitwise.
+#[test]
+fn prop_merge_of_random_partition_is_bit_identical() {
+    for_seeds(10, |seed| {
+        let mut rng = Rng::new(seed);
+        let p = 12 + rng.below(30);
+        let n = 6 + rng.below(20);
+        let x = cohort(p, n, seed);
+        for red in reducers(p, seed) {
+            let full = red.reduce(&x);
+            let ranges = random_partition(n, 6, &mut rng);
+            let mut shards: Vec<ReduceAccumulator> = ranges
+                .iter()
+                .map(|&(c0, cnt)| shard_acc(red.as_ref(), &x, c0, cnt))
+                .collect();
+            rng.shuffle(&mut shards);
+            let mut acc = red.begin(n);
+            for s in &shards {
+                acc.merge(s).unwrap();
+            }
+            assert_eq!(acc.cols_filled(), n, "seed {seed}");
+            assert_eq!(
+                acc.finish().unwrap().data,
+                full.data,
+                "seed {seed} k={}: merged partition != full reduce",
+                red.k()
+            );
+        }
+    });
+}
+
+/// merge is commutative: a⊕b and b⊕a yield identical matrices.
+#[test]
+fn prop_merge_commutes() {
+    for_seeds(8, |seed| {
+        let mut rng = Rng::new(seed ^ 0xAB);
+        let p = 10 + rng.below(20);
+        let n = 4 + rng.below(12);
+        let split = 1 + rng.below(n - 1);
+        let x = cohort(p, n, seed);
+        for red in reducers(p, seed) {
+            let a = shard_acc(red.as_ref(), &x, 0, split);
+            let b = shard_acc(red.as_ref(), &x, split, n - split);
+            let mut ab = a.clone();
+            ab.merge(&b).unwrap();
+            let mut ba = b.clone();
+            ba.merge(&a).unwrap();
+            assert_eq!(
+                ab.finish().unwrap().data,
+                ba.finish().unwrap().data,
+                "seed {seed} k={}: merge not commutative",
+                red.k()
+            );
+        }
+    });
+}
+
+/// merge is associative: (a⊕b)⊕c == a⊕(b⊕c), so linear fold-in and
+/// tree merges (as a multi-level coordinator would do) agree.
+#[test]
+fn prop_merge_associates() {
+    for_seeds(8, |seed| {
+        let mut rng = Rng::new(seed ^ 0xCD);
+        let p = 10 + rng.below(20);
+        let n = 6 + rng.below(12);
+        let c1 = 1 + rng.below(n - 2);
+        let c2 = c1 + 1 + rng.below(n - c1 - 1);
+        let x = cohort(p, n, seed);
+        for red in reducers(p, seed) {
+            let a = shard_acc(red.as_ref(), &x, 0, c1);
+            let b = shard_acc(red.as_ref(), &x, c1, c2 - c1);
+            let c = shard_acc(red.as_ref(), &x, c2, n - c2);
+            let mut left = a.clone();
+            left.merge(&b).unwrap();
+            left.merge(&c).unwrap();
+            let mut right_inner = b.clone();
+            right_inner.merge(&c).unwrap();
+            let mut right = a.clone();
+            right.merge(&right_inner).unwrap();
+            assert_eq!(
+                left.finish().unwrap().data,
+                right.finish().unwrap().data,
+                "seed {seed} k={}: merge not associative",
+                red.k()
+            );
+        }
+    });
+}
+
+/// Overlapping shards are rejected, never silently summed — the
+/// exactly-once guarantee a retrying coordinator depends on.
+#[test]
+fn prop_overlapping_merge_always_rejected() {
+    for_seeds(10, |seed| {
+        let mut rng = Rng::new(seed ^ 0xEF);
+        let p = 10 + rng.below(16);
+        let n = 5 + rng.below(10);
+        let x = cohort(p, n, seed);
+        let rs = reducers(p, seed);
+        let red = &rs[0];
+        // two ranges sharing at least the pivot column
+        let pivot = rng.below(n);
+        let a = shard_acc(red.as_ref(), &x, 0, pivot + 1);
+        let b = shard_acc(red.as_ref(), &x, pivot, n - pivot);
+        let mut acc = a.clone();
+        assert!(
+            acc.merge(&b).is_err(),
+            "seed {seed}: overlap at column {pivot} accepted"
+        );
+        // a duplicated shard (the retry-then-original-arrives race)
+        // is likewise rejected
+        let mut dup = a.clone();
+        assert!(dup.merge(&a).is_err(), "seed {seed}: self-merge ok'd");
+    });
+}
+
+fn toy_fold(
+    seed: u64,
+) -> (FeatureMatrix, Vec<f32>, FeatureMatrix, Vec<f32>) {
+    let mut rng = Rng::new(seed ^ 0xF01D);
+    let k = 3 + rng.below(5);
+    let ntr = 12 + rng.below(20);
+    let nte = 4 + rng.below(8);
+    let mk = |n: usize, rng: &mut Rng| {
+        let mut x = FeatureMatrix::zeros(n, k);
+        let mut y = vec![0.0f32; n];
+        for i in 0..n {
+            let cls = (i % 2) as f32;
+            for j in 0..k {
+                x.set(i, j, rng.normal32() + (cls - 0.5) * 2.0);
+            }
+            y[i] = cls;
+        }
+        (x, y)
+    };
+    let (xtr, ytr) = mk(ntr, &mut rng);
+    let (xte, yte) = mk(nte, &mut rng);
+    (xtr, ytr, xte, yte)
+}
+
+/// partial_fit is deterministic: replaying the same chunk sequence —
+/// straight through, or snapshot-cloned mid-stream and resumed —
+/// produces bit-equal weights, intercept and step count.
+#[test]
+fn prop_sgd_replay_is_bit_deterministic() {
+    for_seeds(8, |seed| {
+        let (xtr, ytr, _, _) = toy_fold(seed);
+        let sgd = SgdLogisticRegression::default();
+        let mut rng = Rng::new(seed ^ 0x51D);
+        let chunk = 1 + rng.below(6);
+        let run = |epochs: usize| -> SgdState {
+            let mut st = sgd.init(xtr.cols);
+            for _ in 0..epochs {
+                let mut r0 = 0;
+                while r0 < xtr.rows {
+                    let r1 = (r0 + chunk).min(xtr.rows);
+                    let xc = xtr.row_block(r0, r1);
+                    sgd.partial_fit(&mut st, &xc, &ytr[r0..r1]).unwrap();
+                    r0 = r1;
+                }
+            }
+            st
+        };
+        let a = run(2);
+        let b = run(2);
+        assert_eq!(a.w, b.w, "seed {seed}: replay drifted");
+        assert_eq!(a.b.to_bits(), b.b.to_bits(), "seed {seed}");
+        assert_eq!(a.steps, b.steps, "seed {seed}");
+        // snapshot/resume: clone after epoch 1, run epoch 2 on both
+        let mid = run(1);
+        let mut resumed = mid.clone();
+        let mut r0 = 0;
+        while r0 < xtr.rows {
+            let r1 = (r0 + chunk).min(xtr.rows);
+            let xc = xtr.row_block(r0, r1);
+            sgd.partial_fit(&mut resumed, &xc, &ytr[r0..r1]).unwrap();
+            r0 = r1;
+        }
+        assert_eq!(
+            resumed.w, a.w,
+            "seed {seed}: snapshot+resume != straight-through"
+        );
+        assert_eq!(resumed.b.to_bits(), a.b.to_bits(), "seed {seed}");
+    });
+}
+
+/// `fit_one_fold` is a pure function: re-running it (the coordinator's
+/// retry path and its local fallback both do exactly this) returns
+/// bit-equal weights and accuracy, for both the batch and SGD paths.
+#[test]
+fn prop_fold_fit_rerun_is_bit_identical() {
+    for_seeds(6, |seed| {
+        let (xtr, ytr, xte, yte) = toy_fold(seed);
+        let est = EstimatorConfig {
+            cv_folds: 2,
+            max_iter: 60,
+            ..Default::default()
+        };
+        for (epochs, chunk) in [(0usize, 0usize), (2, 5)] {
+            let (f1, a1) = fit_one_fold(
+                &xtr, &ytr, &xte, &yte, &est, epochs, chunk,
+            )
+            .unwrap();
+            let (f2, a2) = fit_one_fold(
+                &xtr, &ytr, &xte, &yte, &est, epochs, chunk,
+            )
+            .unwrap();
+            let bits = |w: &[f32]| -> Vec<u32> {
+                w.iter().map(|v| v.to_bits()).collect()
+            };
+            assert_eq!(
+                bits(&f1.w),
+                bits(&f2.w),
+                "seed {seed} epochs {epochs}: weights drifted on rerun"
+            );
+            assert_eq!(f1.b.to_bits(), f2.b.to_bits(), "seed {seed}");
+            assert_eq!(f1.iters, f2.iters, "seed {seed}");
+            assert_eq!(a1.to_bits(), a2.to_bits(), "seed {seed}");
+        }
+    });
+}

