@@ -2,7 +2,9 @@
 //! (Fig 2 – Fig 7), the [`sharded`] scaling sweep for the parallel
 //! engine, the [`streaming`] out-of-core comparison (ADR-003), the
 //! [`kernels`] microbench pitting each ADR-005 kernel against its
-//! pre-refactor scalar reference, plus a criterion-style timing core
+//! pre-refactor scalar reference, the [`serve`] front-end comparison
+//! (ADR-007: batched vs per-request vs HTTP under concurrent
+//! clients), plus a criterion-style timing core
 //! ([`timeit`]), table/CSV reporting and the [`trajectory`]
 //! bench-JSON format CI gates regressions with — all dependency-free
 //! (the offline build has no criterion).
@@ -21,6 +23,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod kernels;
 mod report;
+pub mod serve;
 pub mod sharded;
 pub mod streaming;
 pub mod trajectory;

@@ -1,0 +1,622 @@
+//! Bench: the serve front-end under concurrent load (ADR-007
+//! acceptance numbers). Three closed-loop runs against the same
+//! fitted model, same clients, same request blocks:
+//!
+//! * **unbatched** — binary protocol with `max_batch = 1`: every
+//!   request is its own pool job, the per-request GEMV baseline;
+//! * **batched** — binary protocol with cross-connection
+//!   micro-batching on: concurrent same-model predicts coalesce into
+//!   sample-major kernel passes;
+//! * **http** — the same batched server driven through the HTTP/JSON
+//!   gateway.
+//!
+//! Every response in every run is compared bit-for-bit against the
+//! offline [`FittedModel::predict_proba`] on the same block — a fast
+//! wrong answer is a regression, not a win. Wall times land in
+//! `BENCH_serve.json` for the CI trajectory; the speedup gate
+//! (batched vs unbatched at ≥8 connections) is the perf acceptance
+//! criterion of the PR that introduced the event loop.
+
+use std::fmt::Write as _;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::Barrier;
+use std::time::Instant;
+
+use crate::bench_harness::{trajectory, Table};
+use crate::config::{
+    DataConfig, EstimatorConfig, Method, ReduceConfig,
+};
+use crate::error::{invalid, Result};
+use crate::json::{self, Value};
+use crate::model::{
+    fit_model, save_model, FitOptions, FittedModel,
+};
+use crate::serve::{ServeClient, ServeOptions, Server};
+use crate::volume::{FeatureMatrix, MorphometryGenerator};
+
+/// Parameters of the serve front-end comparison.
+#[derive(Clone, Debug)]
+pub struct ServeBenchConfig {
+    /// Grid dims of the synthetic cohort the model is fitted on.
+    pub dims: [usize; 3],
+    /// Subjects in the fit.
+    pub n_subjects: usize,
+    /// Compression ratio (`k = p / ratio`).
+    pub ratio: usize,
+    /// CV folds.
+    pub cv_folds: usize,
+    /// Concurrent client connections (the acceptance gate wants ≥8).
+    pub clients: usize,
+    /// Sequential requests each client issues.
+    pub requests_per_client: usize,
+    /// Sample rows per request.
+    pub rows_per_request: usize,
+    /// Server worker threads (`0` = available parallelism).
+    pub workers: usize,
+    /// Batch size cap for the batched runs.
+    pub max_batch: usize,
+    /// Flush window for the batched runs, microseconds.
+    pub batch_window_us: u64,
+    /// Root seed.
+    pub seed: u64,
+    /// Gate: batched must reach this × unbatched throughput.
+    pub min_speedup: f64,
+}
+
+impl Default for ServeBenchConfig {
+    fn default() -> Self {
+        ServeBenchConfig {
+            dims: [10, 11, 9],
+            n_subjects: 24,
+            ratio: 10,
+            cv_folds: 3,
+            clients: 8,
+            requests_per_client: 150,
+            rows_per_request: 2,
+            workers: 0,
+            max_batch: 32,
+            batch_window_us: 200,
+            seed: 17,
+            min_speedup: 1.0,
+        }
+    }
+}
+
+impl ServeBenchConfig {
+    /// CI quick mode: same client count (the gate is about
+    /// concurrency, not volume), fewer requests, and a lenient
+    /// speedup floor — shared CI runners make tight perf ratios
+    /// flaky.
+    pub fn quick() -> Self {
+        ServeBenchConfig {
+            requests_per_client: 40,
+            min_speedup: 0.7,
+            ..Default::default()
+        }
+    }
+}
+
+/// Results of one three-way comparison.
+#[derive(Clone, Debug)]
+pub struct ServeBenchResult {
+    /// Concurrent connections driven.
+    pub clients: usize,
+    /// Requests per client.
+    pub requests_per_client: usize,
+    /// Wall seconds, binary protocol, `max_batch = 1`.
+    pub unbatched_secs: f64,
+    /// Wall seconds, binary protocol, batching on.
+    pub batched_secs: f64,
+    /// Wall seconds, HTTP gateway, batching on.
+    pub http_secs: f64,
+    /// Unbatched / batched wall-time ratio (higher = batching wins).
+    pub speedup: f64,
+    /// p99 request latency, unbatched run (µs).
+    pub unbatched_p99_us: u64,
+    /// p99 request latency, batched run (µs).
+    pub batched_p99_us: u64,
+    /// Mean requests per pool job in the batched run.
+    pub mean_batch_size: f64,
+    /// Every unbatched response matched the offline bits.
+    pub identical_unbatched: bool,
+    /// Every batched response matched the offline bits.
+    pub identical_batched: bool,
+    /// Every HTTP/JSON response matched the offline bits.
+    pub identical_http: bool,
+    /// The speedup floor this run is gated against.
+    pub min_speedup: f64,
+}
+
+/// The ADR-007 acceptance gates. Bit-identity across all three runs
+/// is always hard; the speedup floor comes from the config (1.0
+/// full, 0.7 quick).
+pub fn check_gates(r: &ServeBenchResult) -> Result<()> {
+    if !r.identical_unbatched {
+        return Err(invalid(
+            "REGRESSION: unbatched served responses differ from \
+             the offline predict bits",
+        ));
+    }
+    if !r.identical_batched {
+        return Err(invalid(
+            "REGRESSION: batched served responses differ from the \
+             offline predict bits",
+        ));
+    }
+    if !r.identical_http {
+        return Err(invalid(
+            "REGRESSION: HTTP/JSON served responses differ from \
+             the offline predict bits",
+        ));
+    }
+    if r.speedup < r.min_speedup {
+        return Err(invalid(format!(
+            "REGRESSION: batched speedup {:.3}x is below the \
+             {:.2}x floor at {} connections",
+            r.speedup, r.min_speedup, r.clients
+        )));
+    }
+    Ok(())
+}
+
+/// Fit a small model, then drive the three closed-loop runs.
+pub fn run(cfg: &ServeBenchConfig) -> Result<ServeBenchResult> {
+    let (path, model) = fitted_model(cfg)?;
+    let (blocks, expected) = workload(cfg, &model)?;
+
+    let mut opts = ServeOptions::new(&path);
+    opts.workers = cfg.workers;
+    opts.max_batch = 1;
+    opts.batch_window_us = 0;
+    let handle = Server::start(opts)?;
+    let (unbatched_secs, mut lat_u, ok_u) =
+        drive_binary(handle.addr(), &blocks, &expected)?;
+    handle.shutdown()?;
+
+    let mut opts = ServeOptions::new(&path);
+    opts.workers = cfg.workers;
+    opts.max_batch = cfg.max_batch;
+    opts.batch_window_us = cfg.batch_window_us;
+    let handle = Server::start(opts)?;
+    let (batched_secs, mut lat_b, ok_b) =
+        drive_binary(handle.addr(), &blocks, &expected)?;
+    let stats_b = handle.shutdown()?;
+
+    let mut opts = ServeOptions::new(&path);
+    opts.workers = cfg.workers;
+    opts.max_batch = cfg.max_batch;
+    opts.batch_window_us = cfg.batch_window_us;
+    opts.http_port = Some(0);
+    let handle = Server::start(opts)?;
+    let http_addr = handle
+        .http_addr()
+        .ok_or_else(|| invalid("http gateway did not bind"))?;
+    let (http_secs, _lat_h, ok_h) =
+        drive_http(http_addr, &blocks, &expected)?;
+    handle.shutdown()?;
+
+    let _ = std::fs::remove_file(&path);
+    Ok(ServeBenchResult {
+        clients: cfg.clients,
+        requests_per_client: cfg.requests_per_client,
+        unbatched_secs,
+        batched_secs,
+        http_secs,
+        speedup: unbatched_secs / batched_secs.max(1e-9),
+        unbatched_p99_us: p99_us(&mut lat_u),
+        batched_p99_us: p99_us(&mut lat_b),
+        mean_batch_size: stats_b.requests as f64
+            / (stats_b.batches as f64).max(1.0),
+        identical_unbatched: ok_u,
+        identical_batched: ok_b,
+        identical_http: ok_h,
+        min_speedup: cfg.min_speedup,
+    })
+}
+
+fn fitted_model(
+    cfg: &ServeBenchConfig,
+) -> Result<(PathBuf, FittedModel)> {
+    let dc = DataConfig {
+        dims: cfg.dims,
+        n_samples: cfg.n_subjects,
+        seed: cfg.seed,
+        ..Default::default()
+    };
+    let (ds, labels) = MorphometryGenerator::new(dc.dims)
+        .generate(dc.n_samples, dc.seed);
+    let reduce = ReduceConfig {
+        method: Method::Fast,
+        k: 0,
+        ratio: cfg.ratio,
+        seed: cfg.seed,
+        shards: 0,
+    };
+    let est = EstimatorConfig {
+        cv_folds: cfg.cv_folds,
+        max_iter: 120,
+        ..Default::default()
+    };
+    let model = fit_model(
+        &ds,
+        &labels,
+        &reduce,
+        &est,
+        &dc,
+        &FitOptions::default(),
+    )?;
+    let dir = std::env::temp_dir().join(format!(
+        "fastclust_serve_bench_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("bench.fcm");
+    save_model(&path, &model)?;
+    Ok((path, model))
+}
+
+/// Deterministic per-client request blocks plus the offline answer
+/// every served response must reproduce bit-for-bit.
+#[allow(clippy::type_complexity)]
+fn workload(
+    cfg: &ServeBenchConfig,
+    model: &FittedModel,
+) -> Result<(Vec<Vec<FeatureMatrix>>, Vec<Vec<Vec<f32>>>)> {
+    let p = model.header.p;
+    let mut blocks = Vec::with_capacity(cfg.clients);
+    let mut expected = Vec::with_capacity(cfg.clients);
+    for ci in 0..cfg.clients {
+        let mut xs = Vec::with_capacity(cfg.requests_per_client);
+        let mut want = Vec::with_capacity(cfg.requests_per_client);
+        for ri in 0..cfg.requests_per_client {
+            let rows = cfg.rows_per_request.max(1);
+            let data: Vec<f32> = (0..rows * p)
+                .map(|j| {
+                    let h = cfg
+                        .seed
+                        .wrapping_add(ci as u64 * 31)
+                        .wrapping_add(ri as u64 * 7)
+                        .wrapping_add(j as u64);
+                    (h % 13) as f32 * 0.25
+                })
+                .collect();
+            let x = FeatureMatrix::from_vec(rows, p, data)?;
+            want.push(model.predict_proba(&x)?);
+            xs.push(x);
+        }
+        blocks.push(xs);
+        expected.push(want);
+    }
+    Ok((blocks, expected))
+}
+
+/// Closed-loop run over the binary protocol: one thread per client,
+/// barrier start, per-request latency. Returns `(wall seconds, all
+/// latencies µs, every response bit-identical)`.
+fn drive_binary(
+    addr: SocketAddr,
+    blocks: &[Vec<FeatureMatrix>],
+    expected: &[Vec<Vec<f32>>],
+) -> Result<(f64, Vec<u64>, bool)> {
+    drive(blocks.len(), |ci, barrier| {
+        binary_client(addr, barrier, &blocks[ci], &expected[ci])
+    })
+}
+
+/// Same closed loop through the HTTP gateway.
+fn drive_http(
+    addr: SocketAddr,
+    blocks: &[Vec<FeatureMatrix>],
+    expected: &[Vec<Vec<f32>>],
+) -> Result<(f64, Vec<u64>, bool)> {
+    drive(blocks.len(), |ci, barrier| {
+        http_client(addr, barrier, &blocks[ci], &expected[ci])
+    })
+}
+
+fn drive(
+    n: usize,
+    client: impl Fn(usize, &Barrier) -> Result<(bool, Vec<u64>)>
+        + Sync,
+) -> Result<(f64, Vec<u64>, bool)> {
+    let barrier = Barrier::new(n + 1);
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(n);
+        for ci in 0..n {
+            let barrier = &barrier;
+            let client = &client;
+            handles.push(s.spawn(move || client(ci, barrier)));
+        }
+        barrier.wait();
+        let t0 = Instant::now();
+        let mut lats = Vec::new();
+        let mut ok = true;
+        for h in handles {
+            let (c_ok, c_lats) = h
+                .join()
+                .map_err(|_| invalid("bench client panicked"))??;
+            ok &= c_ok;
+            lats.extend(c_lats);
+        }
+        Ok((t0.elapsed().as_secs_f64(), lats, ok))
+    })
+}
+
+fn binary_client(
+    addr: SocketAddr,
+    barrier: &Barrier,
+    xs: &[FeatureMatrix],
+    want: &[Vec<f32>],
+) -> Result<(bool, Vec<u64>)> {
+    // wait first: nothing before this point may fail, or the main
+    // thread would deadlock on the barrier
+    barrier.wait();
+    let mut client = ServeClient::connect(addr)?;
+    let mut ok = true;
+    let mut lats = Vec::with_capacity(xs.len());
+    for (x, w) in xs.iter().zip(want) {
+        let t0 = Instant::now();
+        let got = client.predict(x)?;
+        lats.push(t0.elapsed().as_micros() as u64);
+        ok &= got == *w;
+    }
+    Ok((ok, lats))
+}
+
+fn http_client(
+    addr: SocketAddr,
+    barrier: &Barrier,
+    xs: &[FeatureMatrix],
+    want: &[Vec<f32>],
+) -> Result<(bool, Vec<u64>)> {
+    barrier.wait();
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut ok = true;
+    let mut lats = Vec::with_capacity(xs.len());
+    for (x, w) in xs.iter().zip(want) {
+        let body = predict_body(x);
+        let req = format!(
+            "POST /v1/predict HTTP/1.1\r\nContent-Length: {}\
+             \r\n\r\n{}",
+            body.len(),
+            body
+        );
+        let t0 = Instant::now();
+        writer.write_all(req.as_bytes())?;
+        let (status, resp) = read_http_response(&mut reader)?;
+        lats.push(t0.elapsed().as_micros() as u64);
+        if status != 200 {
+            return Err(invalid(format!(
+                "http predict failed with {status}: {resp}"
+            )));
+        }
+        let v = json::parse(&resp)?;
+        let got: Vec<f32> = v
+            .expect("proba")?
+            .as_arr()
+            .ok_or_else(|| invalid("'proba' is not an array"))?
+            .iter()
+            .map(|n| {
+                n.as_f64().map(|f| f as f32).ok_or_else(|| {
+                    invalid("'proba' holds a non-number")
+                })
+            })
+            .collect::<Result<_>>()?;
+        ok &= got == *w;
+    }
+    Ok((ok, lats))
+}
+
+/// `{"x": [[...], ...]}` with every f32 written through f64 display
+/// (shortest round-trip decimal, so the server recovers exact bits).
+fn predict_body(x: &FeatureMatrix) -> String {
+    let mut out = String::from("{\"x\":[");
+    for r in 0..x.rows {
+        if r > 0 {
+            out.push(',');
+        }
+        out.push('[');
+        for c in 0..x.cols {
+            if c > 0 {
+                out.push(',');
+            }
+            let _ =
+                write!(out, "{}", x.data[r * x.cols + c] as f64);
+        }
+        out.push(']');
+    }
+    out.push_str("]}");
+    out
+}
+
+fn read_http_response(
+    r: &mut impl BufRead,
+) -> Result<(u16, String)> {
+    let mut head = String::new();
+    loop {
+        let mut line = String::new();
+        if r.read_line(&mut line)? == 0 {
+            return Err(invalid("connection closed mid-response"));
+        }
+        if line == "\r\n" {
+            break;
+        }
+        head.push_str(&line);
+    }
+    let status: u16 = head
+        .lines()
+        .next()
+        .and_then(|l| l.split(' ').nth(1))
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| invalid("malformed HTTP status line"))?;
+    let clen: usize = head
+        .lines()
+        .find_map(|l| {
+            let (k, v) = l.split_once(':')?;
+            if k.eq_ignore_ascii_case("content-length") {
+                v.trim().parse().ok()
+            } else {
+                None
+            }
+        })
+        .ok_or_else(|| invalid("response without Content-Length"))?;
+    let mut body = vec![0u8; clen];
+    r.read_exact(&mut body)?;
+    let body = String::from_utf8(body)
+        .map_err(|_| invalid("response body is not UTF-8"))?;
+    Ok((status, body))
+}
+
+fn p99_us(lats: &mut [u64]) -> u64 {
+    if lats.is_empty() {
+        return 0;
+    }
+    lats.sort_unstable();
+    let idx = ((lats.len() as f64) * 0.99).ceil() as usize;
+    lats[idx.clamp(1, lats.len()) - 1]
+}
+
+/// Render the comparison table.
+pub fn table(r: &ServeBenchResult) -> Table {
+    let mut t = Table::new(
+        "Serve front-end: unbatched vs batched vs HTTP",
+        &["metric", "unbatched", "batched", "http"],
+    );
+    let yn = |b: bool| if b { "yes" } else { "NO" }.to_string();
+    t.row(vec![
+        "wall secs".into(),
+        format!("{:.3}", r.unbatched_secs),
+        format!("{:.3}", r.batched_secs),
+        format!("{:.3}", r.http_secs),
+    ]);
+    t.row(vec![
+        "p99 latency (µs)".into(),
+        format!("{}", r.unbatched_p99_us),
+        format!("{}", r.batched_p99_us),
+        "-".into(),
+    ]);
+    t.row(vec![
+        "mean batch size".into(),
+        "1.0".into(),
+        format!("{:.2}", r.mean_batch_size),
+        "-".into(),
+    ]);
+    t.row(vec![
+        "bits == offline".into(),
+        yn(r.identical_unbatched),
+        yn(r.identical_batched),
+        yn(r.identical_http),
+    ]);
+    t.row(vec![
+        format!("speedup @ {} conns", r.clients),
+        "(reference)".into(),
+        format!("{:.3}x", r.speedup),
+        "-".into(),
+    ]);
+    t
+}
+
+/// Build the `BENCH_serve.json` report for the CI trajectory.
+pub fn report_json(r: &ServeBenchResult) -> Value {
+    let b = |v: bool| if v { 1.0 } else { 0.0 };
+    trajectory::bench_report(
+        "serve",
+        vec![
+            ("serve_unbatched_secs", r.unbatched_secs),
+            ("serve_batched_secs", r.batched_secs),
+            ("serve_http_secs", r.http_secs),
+            ("batched_speedup", r.speedup),
+            ("mean_batch_size", r.mean_batch_size),
+            ("unbatched_p99_us", r.unbatched_p99_us as f64),
+            ("batched_p99_us", r.batched_p99_us as f64),
+            ("clients", r.clients as f64),
+            ("identical_unbatched", b(r.identical_unbatched)),
+            ("identical_batched", b(r.identical_batched)),
+            ("identical_http", b(r.identical_http)),
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(speedup: f64) -> ServeBenchResult {
+        ServeBenchResult {
+            clients: 8,
+            requests_per_client: 10,
+            unbatched_secs: 1.0,
+            batched_secs: 1.0 / speedup,
+            http_secs: 1.0,
+            speedup,
+            unbatched_p99_us: 500,
+            batched_p99_us: 400,
+            mean_batch_size: 3.5,
+            identical_unbatched: true,
+            identical_batched: true,
+            identical_http: true,
+            min_speedup: 1.0,
+        }
+    }
+
+    #[test]
+    fn gates_require_identity_and_speedup() {
+        assert!(check_gates(&result(1.4)).is_ok());
+        assert!(check_gates(&result(0.8)).is_err());
+        let mut r = result(1.4);
+        r.identical_batched = false;
+        assert!(check_gates(&r).is_err());
+        let mut r = result(1.4);
+        r.identical_http = false;
+        assert!(check_gates(&r).is_err());
+    }
+
+    #[test]
+    fn quick_config_is_lighter_and_more_lenient() {
+        let q = ServeBenchConfig::quick();
+        let d = ServeBenchConfig::default();
+        assert!(q.requests_per_client < d.requests_per_client);
+        assert!(q.min_speedup < d.min_speedup);
+        assert_eq!(q.clients, d.clients, "gate is about concurrency");
+    }
+
+    #[test]
+    fn report_names_the_gated_metrics() {
+        let v = report_json(&result(1.2));
+        let m = v.get("metrics").expect("metrics");
+        assert!(m.get("serve_unbatched_secs").is_some());
+        assert!(m.get("serve_batched_secs").is_some());
+        assert!(m.get("batched_speedup").is_some());
+        assert!(m.get("identical_http").is_some());
+    }
+
+    #[test]
+    fn p99_of_sorted_latencies() {
+        let mut l: Vec<u64> = (1..=100).collect();
+        assert_eq!(p99_us(&mut l), 99);
+        let mut empty: Vec<u64> = vec![];
+        assert_eq!(p99_us(&mut empty), 0);
+        let mut one = vec![7u64];
+        assert_eq!(p99_us(&mut one), 7);
+    }
+
+    #[test]
+    fn predict_body_is_valid_json() {
+        let x = FeatureMatrix::from_vec(
+            2,
+            3,
+            vec![0.5, 1.25, -2.0, 0.1, 3.0, 4.5],
+        )
+        .unwrap();
+        let body = predict_body(&x);
+        let (rows, cols, data) =
+            json::scan_f32_matrix(&body, &["x"]).unwrap().unwrap();
+        assert_eq!((rows, cols), (2, 3));
+        assert_eq!(data, x.data);
+    }
+}

@@ -205,28 +205,38 @@ impl Default for StreamConfig {
     }
 }
 
-/// Decode-server settings (ADR-004): how `repro serve` binds and
-/// schedules. The model path itself is a CLI argument, not config —
-/// artifacts are addressed per invocation.
+/// Decode-server settings (ADR-004, extended by ADR-007): how
+/// `repro serve` binds and schedules. The model path itself is a CLI
+/// argument, not config — artifacts are addressed per invocation.
 #[derive(Clone, Debug)]
 pub struct ServeSettings {
     /// TCP port on 127.0.0.1 (`0` = ephemeral).
     pub port: u16,
+    /// HTTP gateway port (`None` = gateway off, `Some(0)` =
+    /// ephemeral).
+    pub http_port: Option<u16>,
     /// Worker threads (`0` = available parallelism).
     pub workers: usize,
     /// Resident models in the LRU cache.
     pub cache_capacity: usize,
-    /// Per-connection batch bound (requests per pool job).
+    /// Cross-connection batch bound (requests per pool job).
     pub max_batch: usize,
+    /// Connection budget; accepts past it are explicitly shed.
+    pub max_connections: usize,
+    /// Micro-batch flush window in microseconds.
+    pub batch_window_us: u64,
 }
 
 impl Default for ServeSettings {
     fn default() -> Self {
         ServeSettings {
             port: 0,
+            http_port: None,
             workers: 0,
             cache_capacity: 4,
             max_batch: 64,
+            max_connections: 256,
+            batch_window_us: 200,
         }
     }
 }
@@ -442,8 +452,26 @@ impl ServeSettings {
         if port > u16::MAX as usize {
             return Err(invalid("'port' must fit in 16 bits"));
         }
+        let http_port = match v.get("http_port") {
+            None | Some(Value::Null) => None,
+            Some(x) => {
+                let p = x.as_usize().ok_or_else(|| {
+                    invalid(
+                        "'http_port' must be a non-negative integer \
+                         or null",
+                    )
+                })?;
+                if p > u16::MAX as usize {
+                    return Err(invalid(
+                        "'http_port' must fit in 16 bits",
+                    ));
+                }
+                Some(p as u16)
+            }
+        };
         Ok(ServeSettings {
             port: port as u16,
+            http_port,
             workers: get_usize(v, "workers", d.workers)?,
             cache_capacity: get_usize(
                 v,
@@ -451,6 +479,16 @@ impl ServeSettings {
                 d.cache_capacity,
             )?,
             max_batch: get_usize(v, "max_batch", d.max_batch)?,
+            max_connections: get_usize(
+                v,
+                "max_connections",
+                d.max_connections,
+            )?,
+            batch_window_us: get_u64(
+                v,
+                "batch_window_us",
+                d.batch_window_us,
+            )?,
         })
     }
 
@@ -458,9 +496,24 @@ impl ServeSettings {
     pub fn to_json(&self) -> Value {
         Value::obj(vec![
             ("port", Value::Num(self.port as f64)),
+            (
+                "http_port",
+                match self.http_port {
+                    None => Value::Null,
+                    Some(p) => Value::Num(p as f64),
+                },
+            ),
             ("workers", Value::Num(self.workers as f64)),
             ("cache_capacity", Value::Num(self.cache_capacity as f64)),
             ("max_batch", Value::Num(self.max_batch as f64)),
+            (
+                "max_connections",
+                Value::Num(self.max_connections as f64),
+            ),
+            (
+                "batch_window_us",
+                Value::Num(self.batch_window_us as f64),
+            ),
         ])
     }
 }
@@ -575,6 +628,9 @@ impl ExperimentConfig {
         if self.serve.max_batch == 0 {
             return Err(invalid("serve max_batch must be >= 1"));
         }
+        if self.serve.max_connections == 0 {
+            return Err(invalid("serve max_connections must be >= 1"));
+        }
         if self.dist.jobs_per_worker == 0 {
             return Err(invalid("dist jobs_per_worker must be >= 1"));
         }
@@ -644,7 +700,9 @@ mod tests {
     #[test]
     fn serve_settings_roundtrip_and_validate() {
         let text = r#"{"serve": {"port": 7777, "workers": 3,
-                       "cache_capacity": 2, "max_batch": 16}}"#;
+                       "cache_capacity": 2, "max_batch": 16,
+                       "http_port": 8080, "max_connections": 32,
+                       "batch_window_us": 500}}"#;
         let cfg =
             ExperimentConfig::from_json(&json::parse(text).unwrap())
                 .unwrap();
@@ -652,21 +710,43 @@ mod tests {
         assert_eq!(cfg.serve.workers, 3);
         assert_eq!(cfg.serve.cache_capacity, 2);
         assert_eq!(cfg.serve.max_batch, 16);
+        assert_eq!(cfg.serve.http_port, Some(8080));
+        assert_eq!(cfg.serve.max_connections, 32);
+        assert_eq!(cfg.serve.batch_window_us, 500);
         let back = ExperimentConfig::from_json(
             &json::parse(&cfg.to_json().to_string()).unwrap(),
         )
         .unwrap();
         assert_eq!(back.serve.port, 7777);
+        assert_eq!(back.serve.http_port, Some(8080));
+        assert_eq!(back.serve.max_connections, 32);
         // defaults apply when the section is absent
         let none = ExperimentConfig::from_json(
             &json::parse("{}").unwrap(),
         )
         .unwrap();
         assert_eq!(none.serve.cache_capacity, 4);
+        assert_eq!(none.serve.http_port, None);
+        assert_eq!(none.serve.max_connections, 256);
+        assert_eq!(none.serve.batch_window_us, 200);
+        // explicit null keeps the gateway off, and round-trips
+        let off = ExperimentConfig::from_json(
+            &json::parse(r#"{"serve": {"http_port": null}}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(off.serve.http_port, None);
+        let off_back = ExperimentConfig::from_json(
+            &json::parse(&off.to_json().to_string()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(off_back.serve.http_port, None);
         for bad in [
             r#"{"serve": {"cache_capacity": 0}}"#,
             r#"{"serve": {"max_batch": 0}}"#,
             r#"{"serve": {"port": 70000}}"#,
+            r#"{"serve": {"http_port": 70000}}"#,
+            r#"{"serve": {"max_connections": 0}}"#,
         ] {
             assert!(
                 ExperimentConfig::from_json(&json::parse(bad).unwrap())

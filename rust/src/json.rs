@@ -1,12 +1,27 @@
 //! Minimal JSON substrate (parser + writer).
 //!
 //! The offline build environment carries no `serde`/`serde_json`, and
-//! the library needs JSON in three seams: the artifact manifest written
-//! by `python/compile/aot.py`, experiment config files, and dataset /
-//! result headers. This module implements the subset of JSON those
-//! seams use — the full value model, UTF-8 strings with escapes,
-//! numbers as `f64` — with strict parsing (trailing garbage is an
-//! error) and deterministic output (object keys keep insertion order).
+//! the library needs JSON in four seams: the artifact manifest written
+//! by `python/compile/aot.py`, experiment config files, dataset /
+//! result headers, and the serve HTTP gateway's request bodies. This
+//! module implements the subset of JSON those seams use — the full
+//! value model, UTF-8 strings with escapes, numbers as `f64` — with
+//! strict parsing (trailing garbage is an error) and deterministic
+//! output (object keys keep insertion order).
+//!
+//! For the gateway hot path there is also a lazy mode: [`scan_path`]
+//! and its typed wrappers ([`scan_str`], [`scan_f64`],
+//! [`scan_f32_matrix`]) walk straight to one field of a document and
+//! decode only that, skipping sibling values without building a tree
+//! — the difference between one allocation per sample row and one
+//! `Value` per JSON token on a 64 MiB predict body. Both modes share
+//! the same tokenizer and the same nesting-depth cap, so a hostile
+//! deeply-nested body errors instead of overflowing the stack.
+//!
+//! One semantic difference, by design: on duplicate keys [`parse`]
+//! keeps the *last* occurrence (map insert), while the scanners stop
+//! at the *first*. Documents the gateway accepts don't duplicate
+//! keys; fuzz tests avoid them when comparing the two paths.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -233,7 +248,7 @@ fn write_str(out: &mut String, s: &str) {
 /// Parse a JSON document (strict: input must be exactly one value plus
 /// whitespace).
 pub fn parse(text: &str) -> Result<Value> {
-    let mut p = Parser { b: text.as_bytes(), i: 0 };
+    let mut p = Parser::new(text);
     p.ws();
     let v = p.value()?;
     p.ws();
@@ -243,12 +258,31 @@ pub fn parse(text: &str) -> Result<Value> {
     Ok(v)
 }
 
+/// Containers deeper than this fail with "nesting too deep". The
+/// parser recurses per nesting level, and the serve gateway feeds it
+/// network bodies — the cap turns a stack overflow into an error.
+const MAX_DEPTH: usize = 512;
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
+    fn new(text: &'a str) -> Parser<'a> {
+        Parser { b: text.as_bytes(), i: 0, depth: 0 }
+    }
+
+    fn descend(&mut self) -> Result<()> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            Err(self.err("nesting too deep"))
+        } else {
+            Ok(())
+        }
+    }
+
     fn err(&self, msg: &str) -> Error {
         invalid(format!("json parse error at byte {}: {msg}", self.i))
     }
@@ -393,6 +427,10 @@ impl<'a> Parser<'a> {
     }
 
     fn number(&mut self) -> Result<Value> {
+        self.number_f64().map(Value::Num)
+    }
+
+    fn number_f64(&mut self) -> Result<f64> {
         let start = self.i;
         if self.peek() == Some(b'-') {
             self.i += 1;
@@ -410,16 +448,17 @@ impl<'a> Parser<'a> {
         let text = std::str::from_utf8(&self.b[start..self.i])
             .map_err(|_| self.err("bad number bytes"))?;
         text.parse::<f64>()
-            .map(Value::Num)
             .map_err(|_| self.err("invalid number"))
     }
 
     fn array(&mut self) -> Result<Value> {
+        self.descend()?;
         self.eat(b'[')?;
         let mut out = Vec::new();
         self.ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Value::Arr(out));
         }
         loop {
@@ -432,6 +471,7 @@ impl<'a> Parser<'a> {
                 }
                 Some(b']') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Value::Arr(out));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -440,11 +480,13 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Value> {
+        self.descend()?;
         self.eat(b'{')?;
         let mut out = BTreeMap::new();
         self.ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Value::Obj(out));
         }
         loop {
@@ -462,12 +504,242 @@ impl<'a> Parser<'a> {
                 }
                 Some(b'}') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Value::Obj(out));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
             }
         }
     }
+
+    /// Advance past exactly one value without building anything.
+    fn skip_value(&mut self) -> Result<()> {
+        match self.peek() {
+            Some(b'n') => self.lit("null", Value::Null).map(drop),
+            Some(b't') => {
+                self.lit("true", Value::Bool(true)).map(drop)
+            }
+            Some(b'f') => {
+                self.lit("false", Value::Bool(false)).map(drop)
+            }
+            Some(b'"') => self.string().map(drop),
+            Some(b'[') => {
+                self.descend()?;
+                self.i += 1;
+                self.ws();
+                if self.peek() == Some(b']') {
+                    self.i += 1;
+                    self.depth -= 1;
+                    return Ok(());
+                }
+                loop {
+                    self.ws();
+                    self.skip_value()?;
+                    self.ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b']') => {
+                            self.i += 1;
+                            self.depth -= 1;
+                            return Ok(());
+                        }
+                        _ => {
+                            return Err(
+                                self.err("expected ',' or ']'")
+                            )
+                        }
+                    }
+                }
+            }
+            Some(b'{') => {
+                self.descend()?;
+                self.i += 1;
+                self.ws();
+                if self.peek() == Some(b'}') {
+                    self.i += 1;
+                    self.depth -= 1;
+                    return Ok(());
+                }
+                loop {
+                    self.ws();
+                    self.string()?;
+                    self.ws();
+                    self.eat(b':')?;
+                    self.ws();
+                    self.skip_value()?;
+                    self.ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b'}') => {
+                            self.i += 1;
+                            self.depth -= 1;
+                            return Ok(());
+                        }
+                        _ => {
+                            return Err(
+                                self.err("expected ',' or '}'")
+                            )
+                        }
+                    }
+                }
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => {
+                self.number_f64().map(drop)
+            }
+            _ => Err(self.err("unexpected character")),
+        }
+    }
+}
+
+/// Walk object keys along `path` and return the raw text slice of
+/// the value there, without building a tree. `Ok(None)` when a key
+/// along the path is absent; `Err` when the document prefix needed
+/// to reach it is malformed, a path step lands on a non-object, or
+/// nesting exceeds the depth cap. Stops at the *first* occurrence of
+/// each key (see the module docs for the duplicate-key contrast with
+/// [`parse`]).
+pub fn scan_path<'a>(
+    text: &'a str,
+    path: &[&str],
+) -> Result<Option<&'a str>> {
+    let mut p = Parser::new(text);
+    p.ws();
+    'keys: for key in path {
+        if p.peek() != Some(b'{') {
+            return Err(p.err("path step is not a JSON object"));
+        }
+        p.i += 1;
+        p.ws();
+        if p.peek() == Some(b'}') {
+            return Ok(None);
+        }
+        loop {
+            p.ws();
+            let k = p.string()?;
+            p.ws();
+            p.eat(b':')?;
+            p.ws();
+            if k == *key {
+                continue 'keys;
+            }
+            p.skip_value()?;
+            p.ws();
+            match p.peek() {
+                Some(b',') => p.i += 1,
+                Some(b'}') => return Ok(None),
+                _ => return Err(p.err("expected ',' or '}'")),
+            }
+        }
+    }
+    let start = p.i;
+    p.skip_value()?;
+    Ok(Some(&text[start..p.i]))
+}
+
+/// Lazily extract a string field: [`scan_path`] plus unescaping.
+/// `Err` if the value at `path` exists but is not a string.
+pub fn scan_str(
+    text: &str,
+    path: &[&str],
+) -> Result<Option<String>> {
+    let Some(raw) = scan_path(text, path)? else {
+        return Ok(None);
+    };
+    let mut p = Parser::new(raw);
+    if p.peek() != Some(b'"') {
+        return Err(p.err("expected a JSON string"));
+    }
+    Ok(Some(p.string()?))
+}
+
+/// Lazily extract a numeric field. `Err` if the value at `path`
+/// exists but is not a number.
+pub fn scan_f64(text: &str, path: &[&str]) -> Result<Option<f64>> {
+    let Some(raw) = scan_path(text, path)? else {
+        return Ok(None);
+    };
+    let mut p = Parser::new(raw);
+    let n = p.number_f64()?;
+    Ok(Some(n))
+}
+
+/// Lazily extract a rectangular `[[row], ...]` matrix field straight
+/// into a flat `f32` buffer: `(rows, cols, row-major data)`. Ragged
+/// rows and non-numeric cells are errors; `[]` is `(0, 0, [])`. This
+/// is the serve gateway's bulk path — one allocation for the data,
+/// no per-cell [`Value`]s.
+pub fn scan_f32_matrix(
+    text: &str,
+    path: &[&str],
+) -> Result<Option<(usize, usize, Vec<f32>)>> {
+    let Some(raw) = scan_path(text, path)? else {
+        return Ok(None);
+    };
+    let mut p = Parser::new(raw);
+    if p.peek() != Some(b'[') {
+        return Err(p.err("expected a matrix (array of rows)"));
+    }
+    p.i += 1;
+    let mut data: Vec<f32> = Vec::new();
+    let mut rows = 0usize;
+    let mut cols = 0usize;
+    p.ws();
+    if p.peek() == Some(b']') {
+        p.i += 1;
+    } else {
+        loop {
+            p.ws();
+            if p.peek() != Some(b'[') {
+                return Err(p.err("matrix row must be an array"));
+            }
+            p.i += 1;
+            let before = data.len();
+            p.ws();
+            if p.peek() == Some(b']') {
+                p.i += 1;
+            } else {
+                loop {
+                    p.ws();
+                    let v = p.number_f64()?;
+                    data.push(v as f32);
+                    p.ws();
+                    match p.peek() {
+                        Some(b',') => p.i += 1,
+                        Some(b']') => {
+                            p.i += 1;
+                            break;
+                        }
+                        _ => {
+                            return Err(
+                                p.err("expected ',' or ']'")
+                            )
+                        }
+                    }
+                }
+            }
+            let width = data.len() - before;
+            if rows == 0 {
+                cols = width;
+            } else if width != cols {
+                return Err(p.err("ragged matrix rows"));
+            }
+            rows += 1;
+            p.ws();
+            match p.peek() {
+                Some(b',') => p.i += 1,
+                Some(b']') => {
+                    p.i += 1;
+                    break;
+                }
+                _ => return Err(p.err("expected ',' or ']'")),
+            }
+        }
+    }
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(p.err("trailing characters after matrix"));
+    }
+    Ok(Some((rows, cols, data)))
 }
 
 #[cfg(test)]
@@ -575,5 +847,104 @@ mod tests {
         .map(|x| x.as_usize().unwrap())
         .collect();
         assert_eq!(shape, vec![2, 2]);
+    }
+
+    #[test]
+    fn scan_path_finds_nested_values_lazily() {
+        let doc = r#"{"skip": [1, {"deep": true}, "s"],
+                      "a": {"b": {"c": 42}}, "tail": null}"#;
+        assert_eq!(
+            scan_path(doc, &["a", "b", "c"]).unwrap(),
+            Some("42")
+        );
+        // raw slice of a container value, exactly as written
+        assert_eq!(
+            scan_path(doc, &["a", "b"]).unwrap(),
+            Some(r#"{"c": 42}"#)
+        );
+        // missing keys at any level are None, not errors
+        assert_eq!(scan_path(doc, &["nope"]).unwrap(), None);
+        assert_eq!(scan_path(doc, &["a", "nope"]).unwrap(), None);
+        assert_eq!(scan_path(doc, &[]).unwrap(), Some(doc.trim()));
+    }
+
+    #[test]
+    fn scan_path_rejects_bad_documents() {
+        // a path step through a non-object
+        assert!(scan_path(r#"{"a": [1, 2]}"#, &["a", "b"]).is_err());
+        // malformed prefix on the way to the key
+        assert!(scan_path(r#"{"skip": [1,, "a": 2}"#, &["a"])
+            .is_err());
+        assert!(scan_path("[1, 2]", &["a"]).is_err());
+    }
+
+    #[test]
+    fn scan_typed_wrappers() {
+        let doc = r#"{"model": "m\n1.fcm", "t": 2.5, "x": 1}"#;
+        assert_eq!(
+            scan_str(doc, &["model"]).unwrap().unwrap(),
+            "m\n1.fcm"
+        );
+        assert_eq!(scan_f64(doc, &["t"]).unwrap(), Some(2.5));
+        assert_eq!(scan_str(doc, &["gone"]).unwrap(), None);
+        // type mismatches are errors, not None
+        assert!(scan_str(doc, &["t"]).is_err());
+        assert!(scan_f64(doc, &["model"]).is_err());
+    }
+
+    #[test]
+    fn scan_matrix_parses_and_rejects_ragged() {
+        let doc = r#"{"model": "m", "x": [[1, 2.5], [3, -4e0]]}"#;
+        let (rows, cols, data) =
+            scan_f32_matrix(doc, &["x"]).unwrap().unwrap();
+        assert_eq!((rows, cols), (2, 2));
+        assert_eq!(data, vec![1.0, 2.5, 3.0, -4.0]);
+        assert_eq!(
+            scan_f32_matrix(doc, &["y"]).unwrap(),
+            None
+        );
+        let empty = scan_f32_matrix(r#"{"x": []}"#, &["x"])
+            .unwrap()
+            .unwrap();
+        assert_eq!(empty, (0, 0, vec![]));
+        for bad in [
+            r#"{"x": [[1, 2], [3]]}"#,
+            r#"{"x": [[1, "a"]]}"#,
+            r#"{"x": [1, 2]}"#,
+            r#"{"x": 3}"#,
+        ] {
+            assert!(
+                scan_f32_matrix(bad, &["x"]).is_err(),
+                "should reject {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn scanners_agree_with_the_tree_parser() {
+        let doc = r#"{"a": {"b": 7}, "s": "x\ty", "m": [[0.125]]}"#;
+        let tree = parse(doc).unwrap();
+        assert_eq!(
+            scan_f64(doc, &["a", "b"]).unwrap().unwrap(),
+            tree.get("a").unwrap().get("b").unwrap().as_f64().unwrap()
+        );
+        assert_eq!(
+            scan_str(doc, &["s"]).unwrap().unwrap(),
+            tree.get("s").unwrap().as_str().unwrap()
+        );
+    }
+
+    #[test]
+    fn deep_nesting_errors_instead_of_overflowing() {
+        let deep = "[".repeat(10_000);
+        assert!(parse(&deep).is_err());
+        let mut doc = String::from(r#"{"pad": "#);
+        doc.push_str(&"[".repeat(10_000));
+        assert!(scan_path(&doc, &["x"]).is_err());
+        // exactly at the cap still works
+        let mut ok = "[".repeat(500);
+        ok.push('1');
+        ok.push_str(&"]".repeat(500));
+        assert!(parse(&ok).is_ok());
     }
 }

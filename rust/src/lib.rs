@@ -71,6 +71,19 @@
 //! copy (CLI: `repro fit --save` / `repro predict --model` /
 //! `repro serve --model --port --workers`).
 //!
+//! ## Serve front-end (ADR-007)
+//!
+//! The server itself is a readiness-driven event loop
+//! ([`serve::event_loop`]): one thread multiplexes every connection
+//! (epoll via raw syscalls on Linux, `poll(2)` elsewhere), a bounded
+//! connection budget sheds overload explicitly, and concurrent
+//! requests against the same model are micro-batched into one
+//! sample-major kernel pass — bit-identical to unbatched dispatch
+//! because the ADR-005 kernels are row-independent. An HTTP/1.1 +
+//! JSON gateway ([`serve::http`], lazy body scanning via
+//! [`json::scan_path`]) and a `GET /metrics` endpoint ride the same
+//! loop (CLI: `repro serve --http-port` / `repro bench-serve`).
+//!
 //! ## Distributed fit (ADR-006)
 //!
 //! The fit itself scales across processes:

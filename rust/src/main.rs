@@ -32,8 +32,13 @@
 //!                                   #   persisted folds (no refit)
 //! repro serve --model model.fcm     # long-lived loopback decode
 //!   [--port P] [--workers W]        #   server: compress / predict /
-//!   [--cache N] [--max-batch B]     #   model-info over TCP
-//!   [--log PATH] [--config cfg.json]
+//!   [--cache N] [--max-batch B]     #   model-info over TCP, with
+//!   [--http-port P] [--max-conns N] #   cross-connection batching,
+//!   [--batch-window-us U]           #   load shedding and an
+//!   [--log PATH] [--config cfg.json]#   HTTP/JSON gateway (ADR-007)
+//! repro bench-serve [--quick]       # serve front-end bench: batched
+//!   [--json PATH]                   #   vs per-request vs HTTP
+//!                                   #   (+ bit-identity gates)
 //! repro bench-streaming [--quick]   # streaming vs in-memory bench
 //!   [--json PATH]                   #   ... write BENCH_*.json report
 //! repro bench-sharded [--quick]     # sharded bench + JSON report
@@ -60,8 +65,8 @@ use std::process::ExitCode;
 use fastclust::bench_harness::{
     distributed as dist_bench, fig2, fig3, fig4, fig5, fig6, fig7,
     kernels as kernel_bench, load_bench_report, regression_failures,
-    sharded, streaming, with_provenance, write_bench_report, write_csv,
-    Table,
+    serve as serve_bench, sharded, streaming, with_provenance,
+    write_bench_report, write_csv, Table,
 };
 use fastclust::cluster::FastCluster;
 use fastclust::config::{DataConfig, ExperimentConfig};
@@ -662,6 +667,24 @@ fn serve_cmd(cli: &Cli) -> Result<()> {
     opts.max_batch = cli
         .usize_flag_strict("max-batch")?
         .unwrap_or(cfg.serve.max_batch);
+    opts.http_port = match cli.usize_flag_strict("http-port")? {
+        None => cfg.serve.http_port,
+        Some(p) => {
+            if p > u16::MAX as usize {
+                return Err(invalid(
+                    "--http-port must fit in 16 bits",
+                ));
+            }
+            Some(p as u16)
+        }
+    };
+    opts.max_connections = cli
+        .usize_flag_strict("max-conns")?
+        .unwrap_or(cfg.serve.max_connections);
+    opts.batch_window_us = cli
+        .usize_flag_strict("batch-window-us")?
+        .map(|v| v as u64)
+        .unwrap_or(cfg.serve.batch_window_us);
     // CLI overrides obey the same invariants as the config file
     if opts.cache_capacity == 0 {
         return Err(invalid("--cache must be >= 1"));
@@ -669,9 +692,15 @@ fn serve_cmd(cli: &Cli) -> Result<()> {
     if opts.max_batch == 0 {
         return Err(invalid("--max-batch must be >= 1"));
     }
+    if opts.max_connections == 0 {
+        return Err(invalid("--max-conns must be >= 1"));
+    }
     opts.log_path = cli.flags.get("log").map(PathBuf::from);
     let handle = Server::start(opts)?;
     println!("serving on {} (Ctrl-C to stop)", handle.addr());
+    if let Some(ha) = handle.http_addr() {
+        println!("http gateway on {ha}");
+    }
     let stats = handle.wait()?;
     println!(
         "served {} requests over {} connections ({} batches, \
@@ -679,6 +708,30 @@ fn serve_cmd(cli: &Cli) -> Result<()> {
         stats.requests, stats.connections, stats.batches, stats.errors
     );
     Ok(())
+}
+
+fn bench_serve_cmd(cli: &Cli) -> Result<()> {
+    let quick = cli.flags.contains_key("quick");
+    let cfg = if quick {
+        serve_bench::ServeBenchConfig::quick()
+    } else {
+        serve_bench::ServeBenchConfig::default()
+    };
+    let r = serve_bench::run(&cfg)?;
+    serve_bench::table(&r).print();
+    if let Some(path) = cli.flags.get("json") {
+        let rep = with_provenance(
+            serve_bench::report_json(&r),
+            if quick {
+                "recorded by `repro bench-serve --quick`"
+            } else {
+                "recorded by `repro bench-serve`"
+            },
+        );
+        write_bench_report(&PathBuf::from(path), &rep)?;
+        println!("[json] {path}");
+    }
+    serve_bench::check_gates(&r)
 }
 
 fn bench_streaming_cmd(cli: &Cli) -> Result<()> {
@@ -911,6 +964,7 @@ fn dispatch(cli: &Cli) -> Result<()> {
         "worker" => worker_cmd(cli),
         "predict" => predict_cmd(cli),
         "serve" => serve_cmd(cli),
+        "bench-serve" => bench_serve_cmd(cli),
         "bench-streaming" => bench_streaming_cmd(cli),
         "bench-sharded" => bench_sharded_cmd(cli),
         "bench-kernels" => bench_kernels_cmd(cli),
@@ -927,13 +981,14 @@ fn dispatch(cli: &Cli) -> Result<()> {
 }
 
 const USAGE: &str = "usage: repro <fig1..fig7|all|sharded|decode|fit|\
-fit-distributed|worker|predict|serve|bench-streaming|bench-sharded|\
-bench-kernels|bench-distributed|bench-check|bench-promote|\
-runtime-check> \
+fit-distributed|worker|predict|serve|bench-serve|bench-streaming|\
+bench-sharded|bench-kernels|bench-distributed|bench-check|\
+bench-promote|runtime-check> \
 [--scale S] [--seed N] [--out DIR] [--config FILE] [--stream] \
 [--chunk-samples N] [--reservoir R] [--sgd-epochs E] [--data STEM] \
 [--save MODEL.fcm] [--model MODEL.fcm] [--note S] [--port P] \
-[--workers W] [--cache N] [--max-batch B] [--log PATH] [--quick] \
+[--workers W] [--cache N] [--max-batch B] [--http-port P] \
+[--max-conns N] [--batch-window-us U] [--log PATH] [--quick] \
 [--json PATH] [--current A --baseline B --factor F] \
 [--heartbeat-ms MS] [--bind ADDR] [--expect N] [--inject KIND:W] \
 [--events PATH] [--connect ADDR] [--verbose]";

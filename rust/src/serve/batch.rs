@@ -1,0 +1,274 @@
+//! Cross-connection micro-batching (ADR-007 §Batching): concurrent
+//! compress / predict requests against the same model are coalesced
+//! into one sample-major kernel pass instead of one GEMV each.
+//!
+//! The [`Batcher`] is pure bookkeeping — the event loop owns it and
+//! decides when to flush. Three triggers, checked in this order:
+//!
+//! 1. **size cap** — a group reaching `max_batch` flushes from
+//!    [`Batcher::push`] immediately;
+//! 2. **deadline** — a group older than the flush window is returned
+//!    by [`Batcher::due`];
+//! 3. **quiescence** — when the poller reports no further events,
+//!    the loop flushes everything via [`Batcher::drain`]: nothing
+//!    else is arriving, so waiting out the window would be pure
+//!    added latency.
+//!
+//! Groups key on `(model, verb, sample width)`. Keying on the width
+//! keeps concatenation well-formed and keeps error behavior
+//! bit-identical to the unbatched path: a wrong-width request fails
+//! with exactly the message it would have produced alone, because
+//! the model's dimension check sees the same width either way.
+//! [`Request::ModelInfo`] never batches — `push` returns it as an
+//! immediate singleton, so info stays a low-latency control call.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use super::event_loop::Token;
+use crate::volume::FeatureMatrix;
+
+/// What a batched request asks of the model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Verb {
+    /// Model summary (`info_json`); always a singleton batch.
+    Info,
+    /// `(c, p) -> (c, k)` reduction.
+    Compress,
+    /// Ensemble class-1 probabilities.
+    Predict,
+}
+
+/// Which front-end a request arrived on (decides response encoding).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Wire {
+    /// Length-prefixed binary protocol.
+    Binary,
+    /// HTTP gateway; the flag is the connection's keep-alive fate.
+    Http {
+        /// Close the connection after this response flushes.
+        keep_alive: bool,
+    },
+}
+
+/// One parsed request waiting for (or riding in) a kernel pass.
+#[derive(Clone, Debug)]
+pub struct PendingReq {
+    /// Event-loop token of the owning connection.
+    pub conn: Token,
+    /// Per-connection response slot (demux ordering).
+    pub slot: u64,
+    /// Front-end the response must be encoded for.
+    pub wire: Wire,
+    /// Requested model name ("" = server default).
+    pub model: String,
+    /// The operation.
+    pub verb: Verb,
+    /// Sample block (`None` for [`Verb::Info`]).
+    pub x: Option<FeatureMatrix>,
+    /// When the loop finished parsing the request (latency origin).
+    pub enqueued: Instant,
+}
+
+/// A flushed group headed for one worker-pool job.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// Model every member resolved to (by name).
+    pub model: String,
+    /// Operation shared by every member.
+    pub verb: Verb,
+    /// Members, in arrival order (split offsets follow row counts).
+    pub reqs: Vec<PendingReq>,
+}
+
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct GroupKey {
+    model: String,
+    verb: Verb,
+    cols: usize,
+}
+
+struct Group {
+    reqs: Vec<PendingReq>,
+    deadline: Instant,
+}
+
+/// Accumulates compatible requests until a flush trigger fires.
+pub struct Batcher {
+    window: Duration,
+    max_batch: usize,
+    groups: HashMap<GroupKey, Group>,
+}
+
+impl Batcher {
+    /// `window_us` = how long the head of a group may wait for
+    /// company under continuous load (0 = flush every poll burst);
+    /// `max_batch` = the size cap (min 1).
+    pub fn new(window_us: u64, max_batch: usize) -> Batcher {
+        Batcher {
+            window: Duration::from_micros(window_us),
+            max_batch: max_batch.max(1),
+            groups: HashMap::new(),
+        }
+    }
+
+    /// Whether any request is waiting.
+    pub fn is_empty(&self) -> bool {
+        self.groups.is_empty()
+    }
+
+    /// Queue a request. Returns a batch when the request must flush
+    /// now: info singletons, and groups that just hit the size cap.
+    pub fn push(&mut self, rq: PendingReq) -> Option<Batch> {
+        if rq.verb == Verb::Info {
+            return Some(Batch {
+                model: rq.model.clone(),
+                verb: Verb::Info,
+                reqs: vec![rq],
+            });
+        }
+        let key = GroupKey {
+            model: rq.model.clone(),
+            verb: rq.verb,
+            cols: rq.x.as_ref().map(|x| x.cols).unwrap_or(0),
+        };
+        let deadline = rq.enqueued + self.window;
+        let group =
+            self.groups.entry(key.clone()).or_insert_with(|| {
+                Group { reqs: Vec::new(), deadline }
+            });
+        group.reqs.push(rq);
+        if group.reqs.len() >= self.max_batch {
+            let g = self.groups.remove(&key).expect("group exists");
+            return Some(Batch {
+                model: key.model,
+                verb: key.verb,
+                reqs: g.reqs,
+            });
+        }
+        None
+    }
+
+    /// Flush every group whose deadline has passed.
+    pub fn due(&mut self, now: Instant) -> Vec<Batch> {
+        let expired: Vec<GroupKey> = self
+            .groups
+            .iter()
+            .filter(|(_, g)| g.deadline <= now)
+            .map(|(k, _)| k.clone())
+            .collect();
+        expired
+            .into_iter()
+            .map(|k| {
+                let g =
+                    self.groups.remove(&k).expect("group exists");
+                Batch { model: k.model, verb: k.verb, reqs: g.reqs }
+            })
+            .collect()
+    }
+
+    /// The nearest group deadline (the loop's wait bound).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.groups.values().map(|g| g.deadline).min()
+    }
+
+    /// Flush everything (quiescence, shutdown).
+    pub fn drain(&mut self) -> Vec<Batch> {
+        let groups = std::mem::take(&mut self.groups);
+        groups
+            .into_iter()
+            .map(|(k, g)| Batch {
+                model: k.model,
+                verb: k.verb,
+                reqs: g.reqs,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(
+        conn: Token,
+        slot: u64,
+        verb: Verb,
+        model: &str,
+        cols: usize,
+    ) -> PendingReq {
+        PendingReq {
+            conn,
+            slot,
+            wire: Wire::Binary,
+            model: model.to_string(),
+            verb,
+            x: (verb != Verb::Info).then(|| {
+                FeatureMatrix::from_vec(
+                    1,
+                    cols,
+                    vec![0.5; cols],
+                )
+                .unwrap()
+            }),
+            enqueued: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn info_is_an_immediate_singleton() {
+        let mut b = Batcher::new(1_000_000, 8);
+        let out = b.push(req(3, 0, Verb::Info, "", 0));
+        let batch = out.expect("info must flush immediately");
+        assert_eq!(batch.verb, Verb::Info);
+        assert_eq!(batch.reqs.len(), 1);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn size_cap_flushes_a_full_group() {
+        let mut b = Batcher::new(1_000_000, 3);
+        assert!(b.push(req(1, 0, Verb::Predict, "", 4)).is_none());
+        assert!(b.push(req(2, 0, Verb::Predict, "", 4)).is_none());
+        let batch = b
+            .push(req(3, 0, Verb::Predict, "", 4))
+            .expect("third member hits the cap");
+        assert_eq!(batch.reqs.len(), 3);
+        // arrival order preserved for the demux
+        let conns: Vec<Token> =
+            batch.reqs.iter().map(|r| r.conn).collect();
+        assert_eq!(conns, vec![1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn groups_split_by_model_verb_and_width() {
+        let mut b = Batcher::new(1_000_000, 8);
+        b.push(req(1, 0, Verb::Predict, "", 4));
+        b.push(req(2, 0, Verb::Predict, "other", 4));
+        b.push(req(3, 0, Verb::Compress, "", 4));
+        b.push(req(4, 0, Verb::Predict, "", 5));
+        let batches = b.drain();
+        assert_eq!(batches.len(), 4, "no cross-group mixing");
+        for batch in batches {
+            assert_eq!(batch.reqs.len(), 1);
+        }
+    }
+
+    #[test]
+    fn deadlines_expire_in_order() {
+        let mut b = Batcher::new(0, 8);
+        b.push(req(1, 0, Verb::Predict, "", 4));
+        assert!(b.next_deadline().is_some());
+        // window 0: due immediately
+        let due = b.due(Instant::now());
+        assert_eq!(due.len(), 1);
+        assert!(b.is_empty());
+        assert!(b.next_deadline().is_none());
+        // a long window keeps the group pending
+        let mut b = Batcher::new(60_000_000, 8);
+        b.push(req(1, 0, Verb::Predict, "", 4));
+        assert!(b.due(Instant::now()).is_empty());
+        assert_eq!(b.drain().len(), 1, "drain flushes regardless");
+    }
+}

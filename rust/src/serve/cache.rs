@@ -26,6 +26,7 @@ struct CacheState {
     map: HashMap<PathBuf, Entry>,
     clock: u64,
     loads: u64,
+    hits: u64,
 }
 
 /// Bounded LRU cache of deserialized models, keyed by path.
@@ -43,6 +44,7 @@ impl ModelCache {
                 map: HashMap::new(),
                 clock: 0,
                 loads: 0,
+                hits: 0,
             }),
         }
     }
@@ -62,6 +64,12 @@ impl ModelCache {
         self.state.lock().expect("cache poisoned").loads
     }
 
+    /// Lookups served from a resident model (the `GET /metrics`
+    /// `cache_hits` field).
+    pub fn hits(&self) -> u64 {
+        self.state.lock().expect("cache poisoned").hits
+    }
+
     /// Fetch a model, deserializing and inserting it on miss; the
     /// least-recently-used entry is evicted when the cache is full.
     /// The disk load runs without holding the cache lock (see the
@@ -73,7 +81,9 @@ impl ModelCache {
             let stamp = st.clock;
             if let Some(e) = st.map.get_mut(path) {
                 e.last_used = stamp;
-                return Ok(e.model.clone());
+                let model = e.model.clone();
+                st.hits += 1;
+                return Ok(model);
             }
         }
         // cold miss: deserialize with the lock released so requests
@@ -87,7 +97,9 @@ impl ModelCache {
             // a concurrent requester loaded it first: keep theirs so
             // every caller shares one resident copy
             e.last_used = stamp;
-            return Ok(e.model.clone());
+            let found = e.model.clone();
+            st.hits += 1;
+            return Ok(found);
         }
         if st.map.len() >= self.capacity {
             if let Some(oldest) = st

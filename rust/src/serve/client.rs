@@ -2,8 +2,9 @@
 //! the integration tests and as reference documentation for the wire
 //! protocol ([`super::protocol`]).
 
-use std::io::{BufReader, BufWriter, Write};
+use std::io::{BufReader, BufWriter, ErrorKind, Write};
 use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
 
 use super::protocol::{
     read_response, write_request, Request, Response,
@@ -11,6 +12,13 @@ use super::protocol::{
 use crate::error::{invalid, Result};
 use crate::json::{self, Value};
 use crate::volume::FeatureMatrix;
+
+/// Total connect retry budget on `ConnectionRefused` — covers the
+/// race where a client starts before the server's listener is up.
+const CONNECT_RETRY_BUDGET: Duration = Duration::from_secs(2);
+
+/// First retry backoff; doubles per attempt up to the budget.
+const CONNECT_BACKOFF_START: Duration = Duration::from_millis(10);
 
 /// One TCP connection to a running decode server.
 pub struct ServeClient {
@@ -20,8 +28,28 @@ pub struct ServeClient {
 
 impl ServeClient {
     /// Connect to a server started by [`super::Server::start`].
+    ///
+    /// `ConnectionRefused` is retried with doubling backoff for up
+    /// to ~2 s — enough to ride out a server that is still binding —
+    /// so callers racing a fresh server don't need their own retry
+    /// loops. Every other error is immediate.
     pub fn connect(addr: impl ToSocketAddrs) -> Result<Self> {
-        let stream = TcpStream::connect(addr)?;
+        let mut backoff = CONNECT_BACKOFF_START;
+        let mut spent = Duration::ZERO;
+        let stream = loop {
+            match TcpStream::connect(&addr) {
+                Ok(s) => break s,
+                Err(e)
+                    if e.kind() == ErrorKind::ConnectionRefused
+                        && spent < CONNECT_RETRY_BUDGET =>
+                {
+                    std::thread::sleep(backoff);
+                    spent += backoff;
+                    backoff *= 2;
+                }
+                Err(e) => return Err(e.into()),
+            }
+        };
         stream.set_nodelay(true)?;
         let read_half = stream.try_clone()?;
         Ok(ServeClient {
@@ -36,6 +64,9 @@ impl ServeClient {
         match read_response(&mut self.reader)? {
             Response::Error(msg) => {
                 Err(invalid(format!("server error: {msg}")))
+            }
+            Response::Shed(msg) => {
+                Err(invalid(format!("server shedding load: {msg}")))
             }
             rs => Ok(rs),
         }

@@ -1,0 +1,829 @@
+//! Readiness primitives for the event-driven server (ADR-007): a
+//! [`Poller`] that multiplexes many nonblocking sockets on one
+//! thread, and a [`WakePipe`] that lets worker threads interrupt a
+//! blocked wait.
+//!
+//! ADR-001 forbids external crates, so the backends are raw
+//! `extern "C"` declarations against the system libc that `std`
+//! already links:
+//!
+//! * **epoll** (Linux, level-triggered) — the default on Linux;
+//! * **poll(2)** (any unix) — the portable fallback, also selectable
+//!   on Linux via `FASTCLUST_SERVE_BACKEND=poll` (mirrors the
+//!   `FASTCLUST_KERNEL_BACKEND` escape hatch of ADR-005);
+//! * a **tick shim** (non-unix) — no readiness syscall at all: every
+//!   registered token reports ready on a short sleep tick, and the
+//!   nonblocking sockets turn spurious readiness into `WouldBlock`.
+//!   Functionally correct, never fast; unix hosts never use it.
+//!
+//! Level-triggered semantics everywhere: a fd with unread input (or
+//! writable space while write interest is registered) reports ready
+//! on every wait, so the loop may process as little or as much per
+//! event as it likes without losing wakeups.
+
+use crate::error::Result;
+
+/// Caller-chosen identifier attached to a registered fd and echoed
+/// in every [`Event`] for it. The server uses monotonically
+/// increasing tokens so a completion for a dead connection can never
+/// alias a live one.
+pub type Token = usize;
+
+/// Raw file descriptor (`c_int` on unix; a dummy on other hosts so
+/// the crate still compiles there).
+pub type Fd = i32;
+
+/// The raw fd of a socket, for [`Poller`] registration.
+#[cfg(unix)]
+pub fn sys_fd<T: std::os::unix::io::AsRawFd>(t: &T) -> Fd {
+    t.as_raw_fd()
+}
+
+/// Non-unix hosts have no raw fds; the tick-shim poller ignores them.
+#[cfg(not(unix))]
+pub fn sys_fd<T>(_t: &T) -> Fd {
+    -1
+}
+
+/// What a registered fd should report.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interest {
+    /// Report when the fd has readable input (or a pending accept).
+    pub read: bool,
+    /// Report when the fd can take more output.
+    pub write: bool,
+}
+
+impl Interest {
+    /// Read-only interest (the common idle-connection state).
+    pub const READ: Interest = Interest { read: true, write: false };
+    /// Read + write (a connection with buffered output).
+    pub const BOTH: Interest = Interest { read: true, write: true };
+    /// Neither: keep the registration (hangup still reports) but ask
+    /// for no data events — a connection draining in-flight work.
+    pub const NONE: Interest = Interest { read: false, write: false };
+}
+
+/// One readiness report.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// Token the fd was registered with.
+    pub token: Token,
+    /// Input (or a pending accept) is available.
+    pub readable: bool,
+    /// Output space is available.
+    pub writable: bool,
+    /// Peer hung up or the fd errored; the owner should read to EOF
+    /// and drop the connection.
+    pub hangup: bool,
+}
+
+/// Readiness multiplexer over one of the compiled backends.
+pub struct Poller {
+    backend: Backend,
+}
+
+enum Backend {
+    #[cfg(target_os = "linux")]
+    Epoll(epoll::Epoll),
+    #[cfg(unix)]
+    Poll(poll::Poll),
+    #[cfg(not(unix))]
+    Tick(tick::Tick),
+}
+
+impl Poller {
+    /// Open the platform's best backend. On Linux the
+    /// `FASTCLUST_SERVE_BACKEND=poll` environment variable forces
+    /// the portable poll(2) path (the escape hatch CI exercises).
+    pub fn new() -> Result<Poller> {
+        #[cfg(target_os = "linux")]
+        {
+            let forced = std::env::var("FASTCLUST_SERVE_BACKEND")
+                .map(|v| v.eq_ignore_ascii_case("poll"))
+                .unwrap_or(false);
+            if !forced {
+                return Ok(Poller {
+                    backend: Backend::Epoll(epoll::Epoll::new()?),
+                });
+            }
+        }
+        #[cfg(unix)]
+        {
+            Ok(Poller { backend: Backend::Poll(poll::Poll::new()) })
+        }
+        #[cfg(not(unix))]
+        {
+            Ok(Poller { backend: Backend::Tick(tick::Tick::new()) })
+        }
+    }
+
+    /// Name of the live backend (logged at server start).
+    pub fn backend_name(&self) -> &'static str {
+        match &self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(_) => "epoll",
+            #[cfg(unix)]
+            Backend::Poll(_) => "poll",
+            #[cfg(not(unix))]
+            Backend::Tick(_) => "tick",
+        }
+    }
+
+    /// Register `fd` under `token` with an initial interest.
+    pub fn add(
+        &mut self,
+        fd: Fd,
+        token: Token,
+        interest: Interest,
+    ) -> Result<()> {
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(e) => e.add(fd, token, interest),
+            #[cfg(unix)]
+            Backend::Poll(p) => {
+                p.add(fd, token, interest);
+                Ok(())
+            }
+            #[cfg(not(unix))]
+            Backend::Tick(t) => {
+                t.add(token, interest);
+                Ok(())
+            }
+        }
+    }
+
+    /// Change the interest of an already-registered fd.
+    pub fn modify(
+        &mut self,
+        fd: Fd,
+        token: Token,
+        interest: Interest,
+    ) -> Result<()> {
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(e) => e.modify(fd, token, interest),
+            #[cfg(unix)]
+            Backend::Poll(p) => {
+                p.modify(token, interest);
+                Ok(())
+            }
+            #[cfg(not(unix))]
+            Backend::Tick(t) => {
+                t.modify(token, interest);
+                Ok(())
+            }
+        }
+    }
+
+    /// Deregister an fd. Must run **before** the fd is closed, or a
+    /// recycled descriptor could inherit the stale registration.
+    pub fn remove(&mut self, fd: Fd, token: Token) -> Result<()> {
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(e) => e.remove(fd),
+            #[cfg(unix)]
+            Backend::Poll(p) => {
+                p.remove(token);
+                Ok(())
+            }
+            #[cfg(not(unix))]
+            Backend::Tick(t) => {
+                t.remove(token);
+                Ok(())
+            }
+        }
+    }
+
+    /// Block until readiness or `timeout_ms` (0 = just poll, never
+    /// sleep), filling `out` with the ready set (cleared first). A
+    /// timeout is an empty `out`, not an error — that emptiness is
+    /// the quiescence signal the server's batch flush keys on.
+    pub fn wait(
+        &mut self,
+        out: &mut Vec<Event>,
+        timeout_ms: i32,
+    ) -> Result<()> {
+        out.clear();
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(e) => e.wait(out, timeout_ms),
+            #[cfg(unix)]
+            Backend::Poll(p) => p.wait(out, timeout_ms),
+            #[cfg(not(unix))]
+            Backend::Tick(t) => {
+                t.wait(out, timeout_ms);
+                Ok(())
+            }
+        }
+    }
+}
+
+/// A self-pipe that wakes a blocked [`Poller::wait`] from another
+/// thread: register [`WakePipe::fd`] for read interest, hand
+/// [`Waker`] clones to the threads that need to interrupt the loop,
+/// and [`WakePipe::drain`] when the token reports readable.
+///
+/// The write end lives behind an `Arc` shared by every `Waker`, so
+/// it stays open (and its descriptor number stays unrecycled) until
+/// the last worker drops its handle — a wake can race shutdown but
+/// can never scribble on an unrelated fd.
+pub struct WakePipe {
+    #[cfg(unix)]
+    read_fd: Fd,
+    #[cfg(unix)]
+    write: std::sync::Arc<sys::OwnedFd>,
+}
+
+/// Cloneable wake handle ([`WakePipe::waker`]).
+#[derive(Clone)]
+pub struct Waker {
+    #[cfg(unix)]
+    write: std::sync::Arc<sys::OwnedFd>,
+}
+
+#[cfg(unix)]
+impl WakePipe {
+    /// Open the pipe pair; both ends are switched to nonblocking so
+    /// neither a wake burst nor a drain can stall a thread.
+    pub fn new() -> Result<WakePipe> {
+        let (r, w) = sys::pipe_nonblocking()?;
+        Ok(WakePipe {
+            read_fd: r,
+            write: std::sync::Arc::new(sys::OwnedFd(w)),
+        })
+    }
+
+    /// The read end, for poller registration.
+    pub fn fd(&self) -> Fd {
+        self.read_fd
+    }
+
+    /// A wake handle for another thread.
+    pub fn waker(&self) -> Waker {
+        Waker { write: self.write.clone() }
+    }
+
+    /// Consume every queued wake byte (nonblocking).
+    pub fn drain(&self) {
+        let mut buf = [0u8; 64];
+        while sys::read_fd(self.read_fd, &mut buf) > 0 {}
+    }
+}
+
+#[cfg(unix)]
+impl Drop for WakePipe {
+    fn drop(&mut self) {
+        sys::close_fd(self.read_fd);
+    }
+}
+
+#[cfg(unix)]
+impl Waker {
+    /// Queue one wake byte. Best-effort: a full pipe already wakes
+    /// the loop, and a closed read end (loop already gone) is fine.
+    pub fn wake(&self) {
+        let _ = sys::write_fd(self.write.0, &[1u8]);
+    }
+}
+
+#[cfg(not(unix))]
+impl WakePipe {
+    /// Non-unix shim: the tick poller wakes itself every few
+    /// milliseconds, so there is nothing to open.
+    pub fn new() -> Result<WakePipe> {
+        Ok(WakePipe {})
+    }
+
+    /// No fd to register on this host.
+    pub fn fd(&self) -> Fd {
+        -1
+    }
+
+    /// A no-op wake handle.
+    pub fn waker(&self) -> Waker {
+        Waker {}
+    }
+
+    /// Nothing queues on this host.
+    pub fn drain(&self) {}
+}
+
+#[cfg(not(unix))]
+impl Waker {
+    /// No-op: the tick poller's sleep bound is the wake latency.
+    pub fn wake(&self) {}
+}
+
+#[cfg(unix)]
+mod sys {
+    //! Raw libc declarations shared by the unix backends.
+
+    use super::Fd;
+    use crate::error::Result;
+    use std::os::raw::{c_int, c_void};
+
+    extern "C" {
+        fn pipe(fds: *mut c_int) -> c_int;
+        fn fcntl(fd: c_int, cmd: c_int, ...) -> c_int;
+        fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+        fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+        fn close(fd: c_int) -> c_int;
+    }
+
+    const F_GETFL: c_int = 3;
+    const F_SETFL: c_int = 4;
+    #[cfg(target_os = "linux")]
+    const O_NONBLOCK: c_int = 0o4000;
+    #[cfg(not(target_os = "linux"))]
+    const O_NONBLOCK: c_int = 0x0004;
+
+    /// An fd closed on drop (the wake pipe's shared write end).
+    pub(super) struct OwnedFd(pub(super) Fd);
+
+    impl Drop for OwnedFd {
+        fn drop(&mut self) {
+            close_fd(self.0);
+        }
+    }
+
+    // Safety: an fd is just an index into the kernel's table; the
+    // Arc around OwnedFd serializes nothing because write(2) on a
+    // pipe is atomic for these single-byte payloads.
+    unsafe impl Send for OwnedFd {}
+    unsafe impl Sync for OwnedFd {}
+
+    pub(super) fn pipe_nonblocking() -> Result<(Fd, Fd)> {
+        let mut fds = [0 as c_int; 2];
+        if unsafe { pipe(fds.as_mut_ptr()) } != 0 {
+            return Err(std::io::Error::last_os_error().into());
+        }
+        for fd in fds {
+            let flags = unsafe { fcntl(fd, F_GETFL, 0) };
+            if flags < 0
+                || unsafe { fcntl(fd, F_SETFL, flags | O_NONBLOCK) }
+                    < 0
+            {
+                let e = std::io::Error::last_os_error();
+                close_fd(fds[0]);
+                close_fd(fds[1]);
+                return Err(e.into());
+            }
+        }
+        Ok((fds[0], fds[1]))
+    }
+
+    pub(super) fn read_fd(fd: Fd, buf: &mut [u8]) -> isize {
+        unsafe {
+            read(fd, buf.as_mut_ptr() as *mut c_void, buf.len())
+        }
+    }
+
+    pub(super) fn write_fd(fd: Fd, buf: &[u8]) -> isize {
+        unsafe {
+            write(fd, buf.as_ptr() as *const c_void, buf.len())
+        }
+    }
+
+    pub(super) fn close_fd(fd: Fd) {
+        unsafe {
+            close(fd);
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+mod epoll {
+    //! The Linux epoll backend (level-triggered).
+
+    use super::{Event, Fd, Interest, Token};
+    use crate::error::Result;
+    use std::os::raw::c_int;
+
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLL_CTL_ADD: c_int = 1;
+    const EPOLL_CTL_DEL: c_int = 2;
+    const EPOLL_CTL_MOD: c_int = 3;
+    const EPOLL_CLOEXEC: c_int = 0o2000000;
+
+    // The kernel ABI packs this struct on x86_64 only.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: c_int) -> c_int;
+        fn epoll_ctl(
+            epfd: c_int,
+            op: c_int,
+            fd: c_int,
+            event: *mut EpollEvent,
+        ) -> c_int;
+        fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+    }
+
+    fn mask(interest: Interest) -> u32 {
+        let mut m = 0;
+        if interest.read {
+            m |= EPOLLIN;
+        }
+        if interest.write {
+            m |= EPOLLOUT;
+        }
+        m
+    }
+
+    pub(super) struct Epoll {
+        epfd: Fd,
+        buf: Vec<EpollEvent>,
+    }
+
+    impl Epoll {
+        pub(super) fn new() -> Result<Epoll> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(std::io::Error::last_os_error().into());
+            }
+            Ok(Epoll {
+                epfd,
+                buf: vec![EpollEvent { events: 0, data: 0 }; 128],
+            })
+        }
+
+        fn ctl(
+            &mut self,
+            op: c_int,
+            fd: Fd,
+            events: u32,
+            token: Token,
+        ) -> Result<()> {
+            let mut ev =
+                EpollEvent { events, data: token as u64 };
+            let rc =
+                unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
+            if rc != 0 {
+                return Err(std::io::Error::last_os_error().into());
+            }
+            Ok(())
+        }
+
+        pub(super) fn add(
+            &mut self,
+            fd: Fd,
+            token: Token,
+            interest: Interest,
+        ) -> Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, mask(interest), token)
+        }
+
+        pub(super) fn modify(
+            &mut self,
+            fd: Fd,
+            token: Token,
+            interest: Interest,
+        ) -> Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, mask(interest), token)
+        }
+
+        pub(super) fn remove(&mut self, fd: Fd) -> Result<()> {
+            self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+        }
+
+        pub(super) fn wait(
+            &mut self,
+            out: &mut Vec<Event>,
+            timeout_ms: i32,
+        ) -> Result<()> {
+            let n = unsafe {
+                epoll_wait(
+                    self.epfd,
+                    self.buf.as_mut_ptr(),
+                    self.buf.len() as c_int,
+                    timeout_ms,
+                )
+            };
+            if n < 0 {
+                let e = std::io::Error::last_os_error();
+                if e.kind() == std::io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e.into());
+            }
+            for ev in &self.buf[..n as usize] {
+                // copy out of the (possibly packed) struct before use
+                let bits = ev.events;
+                let data = ev.data;
+                out.push(Event {
+                    token: data as Token,
+                    readable: bits & EPOLLIN != 0,
+                    writable: bits & EPOLLOUT != 0,
+                    hangup: bits & (EPOLLERR | EPOLLHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Epoll {
+        fn drop(&mut self) {
+            super::sys::close_fd(self.epfd);
+        }
+    }
+}
+
+#[cfg(unix)]
+mod poll {
+    //! The portable poll(2) backend: the interest set lives in a
+    //! plain vector and the pollfd array is rebuilt per wait —
+    //! O(fds) per call, which is fine at the server's bounded
+    //! connection budget.
+
+    use super::{Event, Fd, Interest, Token};
+    use crate::error::Result;
+    use std::os::raw::{c_int, c_short};
+
+    const POLLIN: c_short = 0x001;
+    const POLLOUT: c_short = 0x004;
+    const POLLERR: c_short = 0x008;
+    const POLLHUP: c_short = 0x010;
+    const POLLNVAL: c_short = 0x020;
+
+    #[repr(C)]
+    struct PollFd {
+        fd: c_int,
+        events: c_short,
+        revents: c_short,
+    }
+
+    #[cfg(target_os = "linux")]
+    type NFds = u64;
+    #[cfg(not(target_os = "linux"))]
+    type NFds = u32;
+
+    extern "C" {
+        fn poll(
+            fds: *mut PollFd,
+            nfds: NFds,
+            timeout: c_int,
+        ) -> c_int;
+    }
+
+    pub(super) struct Poll {
+        regs: Vec<(Fd, Token, Interest)>,
+    }
+
+    impl Poll {
+        pub(super) fn new() -> Poll {
+            Poll { regs: Vec::new() }
+        }
+
+        pub(super) fn add(
+            &mut self,
+            fd: Fd,
+            token: Token,
+            interest: Interest,
+        ) {
+            self.regs.push((fd, token, interest));
+        }
+
+        pub(super) fn modify(
+            &mut self,
+            token: Token,
+            interest: Interest,
+        ) {
+            if let Some(r) =
+                self.regs.iter_mut().find(|(_, t, _)| *t == token)
+            {
+                r.2 = interest;
+            }
+        }
+
+        pub(super) fn remove(&mut self, token: Token) {
+            self.regs.retain(|(_, t, _)| *t != token);
+        }
+
+        pub(super) fn wait(
+            &mut self,
+            out: &mut Vec<Event>,
+            timeout_ms: i32,
+        ) -> Result<()> {
+            let mut fds: Vec<PollFd> = self
+                .regs
+                .iter()
+                .map(|&(fd, _, i)| {
+                    let mut events = 0;
+                    if i.read {
+                        events |= POLLIN;
+                    }
+                    if i.write {
+                        events |= POLLOUT;
+                    }
+                    PollFd { fd, events, revents: 0 }
+                })
+                .collect();
+            let n = unsafe {
+                poll(
+                    fds.as_mut_ptr(),
+                    fds.len() as NFds,
+                    timeout_ms,
+                )
+            };
+            if n < 0 {
+                let e = std::io::Error::last_os_error();
+                if e.kind() == std::io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e.into());
+            }
+            for (pfd, &(_, token, _)) in
+                fds.iter().zip(self.regs.iter())
+            {
+                let r = pfd.revents;
+                if r != 0 {
+                    out.push(Event {
+                        token,
+                        readable: r & POLLIN != 0,
+                        writable: r & POLLOUT != 0,
+                        hangup: r & (POLLERR | POLLHUP | POLLNVAL)
+                            != 0,
+                    });
+                }
+            }
+            Ok(())
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod tick {
+    //! Portability shim for hosts without a readiness syscall we can
+    //! reach dependency-free: sleep a short tick, then report every
+    //! registered token as ready and let the nonblocking sockets
+    //! answer `WouldBlock` for the idle ones.
+
+    use super::{Event, Interest, Token};
+    use std::time::Duration;
+
+    const TICK_MS: u64 = 5;
+
+    pub(super) struct Tick {
+        regs: Vec<(Token, Interest)>,
+    }
+
+    impl Tick {
+        pub(super) fn new() -> Tick {
+            Tick { regs: Vec::new() }
+        }
+
+        pub(super) fn add(
+            &mut self,
+            token: Token,
+            interest: Interest,
+        ) {
+            self.regs.push((token, interest));
+        }
+
+        pub(super) fn modify(
+            &mut self,
+            token: Token,
+            interest: Interest,
+        ) {
+            if let Some(r) =
+                self.regs.iter_mut().find(|(t, _)| *t == token)
+            {
+                r.1 = interest;
+            }
+        }
+
+        pub(super) fn remove(&mut self, token: Token) {
+            self.regs.retain(|(t, _)| *t != token);
+        }
+
+        pub(super) fn wait(
+            &mut self,
+            out: &mut Vec<Event>,
+            timeout_ms: i32,
+        ) {
+            if timeout_ms != 0 {
+                let ms = (timeout_ms.max(0) as u64).min(TICK_MS);
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+            for &(token, i) in &self.regs {
+                if i.read || i.write {
+                    out.push(Event {
+                        token,
+                        readable: i.read,
+                        writable: i.write,
+                        hangup: false,
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{Ipv4Addr, TcpListener, TcpStream};
+
+    #[test]
+    fn poller_sees_listener_and_stream_readiness() {
+        let mut p = Poller::new().unwrap();
+        let listener =
+            TcpListener::bind((Ipv4Addr::LOCALHOST, 0)).unwrap();
+        listener.set_nonblocking(true).unwrap();
+        p.add(sys_fd(&listener), 7, Interest::READ).unwrap();
+        let mut events = Vec::new();
+        // idle: a zero-timeout wait reports nothing (the non-unix
+        // tick shim is deliberately spurious, so unix-only)
+        p.wait(&mut events, 0).unwrap();
+        #[cfg(unix)]
+        assert!(events.iter().all(|e| e.token != 7));
+        // a pending connect flips the listener readable
+        let mut client =
+            TcpStream::connect(listener.local_addr().unwrap())
+                .unwrap();
+        p.wait(&mut events, 1000).unwrap();
+        assert!(
+            events.iter().any(|e| e.token == 7 && e.readable),
+            "listener never reported the pending accept"
+        );
+        let (mut srv, _) = listener.accept().unwrap();
+        srv.set_nonblocking(true).unwrap();
+        p.add(sys_fd(&srv), 8, Interest::READ).unwrap();
+        client.write_all(b"hi").unwrap();
+        p.wait(&mut events, 1000).unwrap();
+        assert!(
+            events.iter().any(|e| e.token == 8 && e.readable),
+            "stream never reported readable input"
+        );
+        let mut buf = [0u8; 8];
+        let n = srv.read(&mut buf).unwrap();
+        assert_eq!(&buf[..n], b"hi");
+        p.remove(sys_fd(&srv), 8).unwrap();
+        p.remove(sys_fd(&listener), 7).unwrap();
+    }
+
+    #[test]
+    fn write_interest_reports_on_an_open_stream() {
+        let mut p = Poller::new().unwrap();
+        let listener =
+            TcpListener::bind((Ipv4Addr::LOCALHOST, 0)).unwrap();
+        let client =
+            TcpStream::connect(listener.local_addr().unwrap())
+                .unwrap();
+        client.set_nonblocking(true).unwrap();
+        p.add(sys_fd(&client), 3, Interest::BOTH).unwrap();
+        let mut events = Vec::new();
+        p.wait(&mut events, 1000).unwrap();
+        assert!(
+            events.iter().any(|e| e.token == 3 && e.writable),
+            "fresh stream must be writable"
+        );
+        // interest NONE silences data events
+        p.modify(sys_fd(&client), 3, Interest::NONE).unwrap();
+        p.wait(&mut events, 0).unwrap();
+        assert!(events
+            .iter()
+            .all(|e| e.token != 3 || (!e.readable && !e.writable)));
+    }
+
+    #[test]
+    fn wake_pipe_interrupts_a_long_wait() {
+        let mut p = Poller::new().unwrap();
+        let wake = WakePipe::new().unwrap();
+        if wake.fd() >= 0 {
+            p.add(wake.fd(), 0, Interest::READ).unwrap();
+        }
+        let waker = wake.waker();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(
+                std::time::Duration::from_millis(30),
+            );
+            waker.wake();
+        });
+        let t0 = std::time::Instant::now();
+        let mut events = Vec::new();
+        p.wait(&mut events, 5_000).unwrap();
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(4),
+            "wake did not interrupt the wait"
+        );
+        wake.drain();
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,312 @@
+//! A deliberately small HTTP/1.1 front-end for the decode server
+//! (ADR-007 §HTTP gateway): request parsing out of a connection
+//! buffer and response encoding, nothing else. The supported subset:
+//!
+//! * `GET` and `POST` with `Content-Length` bodies (no chunked
+//!   transfer, no trailers, no 100-continue);
+//! * keep-alive (HTTP/1.1 default; `Connection: close` honored;
+//!   HTTP/1.0 closes unless `Connection: keep-alive`);
+//! * bounded everything: request line + headers ≤ 8 KiB, bodies
+//!   ≤ 64 MiB — hostile `Content-Length` claims fail before any
+//!   buffering, which `protocol_fuzz` exercises.
+//!
+//! Routing and JSON bodies live in the server; this module owns the
+//! wire syntax only, so every parse path is reachable from the fuzz
+//! suite with no server running.
+
+/// Request line + headers must fit in this many bytes.
+pub const MAX_HEAD_BYTES: usize = 8 * 1024;
+
+/// Largest accepted `Content-Length`.
+pub const MAX_HTTP_BODY_BYTES: usize = 1 << 26;
+
+/// One parsed request (body bytes are copied out so the caller can
+/// drain its read buffer by `consumed`).
+#[derive(Clone, Debug)]
+pub struct HttpRequest {
+    /// Request method, uppercased by the client (`GET` / `POST`).
+    pub method: String,
+    /// Request target as sent (no query parsing; the server routes
+    /// on exact paths).
+    pub path: String,
+    /// Whether the connection survives this exchange.
+    pub keep_alive: bool,
+    /// The `Content-Length` body (empty when the header is absent).
+    pub body: Vec<u8>,
+    /// Total bytes of the request (head + body) to drain.
+    pub consumed: usize,
+}
+
+/// Outcome of scanning a connection buffer for one request.
+#[derive(Debug)]
+pub enum Parse {
+    /// The buffer holds a prefix of a valid request; read more.
+    Incomplete,
+    /// A complete request.
+    Ok(HttpRequest),
+    /// Unrecoverable request error: answer with `status` and close.
+    Bad {
+        /// HTTP status to send (400 / 413 / 431 / 501).
+        status: u16,
+        /// Human-readable cause for the JSON error body.
+        msg: String,
+    },
+}
+
+fn bad(status: u16, msg: impl Into<String>) -> Parse {
+    Parse::Bad { status, msg: msg.into() }
+}
+
+/// Try to parse one request from the front of `buf`.
+pub fn parse_request(buf: &[u8]) -> Parse {
+    let head_end = match find_head_end(buf) {
+        Some(e) => e,
+        None if buf.len() > MAX_HEAD_BYTES => {
+            return bad(431, "request head exceeds 8 KiB");
+        }
+        None => return Parse::Incomplete,
+    };
+    if head_end > MAX_HEAD_BYTES {
+        return bad(431, "request head exceeds 8 KiB");
+    }
+    let head = match std::str::from_utf8(&buf[..head_end]) {
+        Ok(h) => h,
+        Err(_) => return bad(400, "request head is not UTF-8"),
+    };
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let (method, path, version) = match (
+        parts.next(),
+        parts.next(),
+        parts.next(),
+        parts.next(),
+    ) {
+        (Some(m), Some(p), Some(v), None)
+            if !m.is_empty() && p.starts_with('/') =>
+        {
+            (m, p, v)
+        }
+        _ => return bad(400, "malformed request line"),
+    };
+    let http11 = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        _ => return bad(400, "unsupported HTTP version"),
+    };
+    let mut content_length: Option<usize> = None;
+    let mut keep_alive = http11;
+    for line in lines {
+        if line.is_empty() {
+            continue; // the blank terminator line
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return bad(400, "malformed header line");
+        };
+        let name = name.trim();
+        let value = value.trim();
+        if name.eq_ignore_ascii_case("content-length") {
+            let Ok(n) = value.parse::<u64>() else {
+                return bad(400, "unparseable Content-Length");
+            };
+            if n > MAX_HTTP_BODY_BYTES as u64 {
+                return bad(
+                    413,
+                    format!(
+                        "Content-Length {n} exceeds the {} byte \
+                         limit",
+                        MAX_HTTP_BODY_BYTES
+                    ),
+                );
+            }
+            let n = n as usize;
+            if content_length.is_some_and(|prev| prev != n) {
+                return bad(400, "conflicting Content-Length");
+            }
+            content_length = Some(n);
+        } else if name.eq_ignore_ascii_case("transfer-encoding") {
+            return bad(501, "chunked bodies are not supported");
+        } else if name.eq_ignore_ascii_case("connection") {
+            if value.eq_ignore_ascii_case("close") {
+                keep_alive = false;
+            } else if value.eq_ignore_ascii_case("keep-alive") {
+                keep_alive = true;
+            }
+        }
+    }
+    let body_len = content_length.unwrap_or(0);
+    let total = head_end + body_len;
+    if buf.len() < total {
+        return Parse::Incomplete;
+    }
+    Parse::Ok(HttpRequest {
+        method: method.to_string(),
+        path: path.to_string(),
+        keep_alive,
+        body: buf[head_end..total].to_vec(),
+        consumed: total,
+    })
+}
+
+/// Byte offset just past the `\r\n\r\n` head terminator.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n").map(|i| i + 4)
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        501 => "Not Implemented",
+        _ => "Error",
+    }
+}
+
+/// Encode a JSON response (the gateway speaks nothing else).
+pub fn encode_response(
+    status: u16,
+    body: &str,
+    keep_alive: bool,
+) -> Vec<u8> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: {}\r\n\r\n",
+        status,
+        reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    let mut out = Vec::with_capacity(head.len() + body.len());
+    out.extend_from_slice(head.as_bytes());
+    out.extend_from_slice(body.as_bytes());
+    out
+}
+
+/// Encode the standard `{"error": msg}` JSON failure body.
+pub fn error_body(msg: &str) -> String {
+    crate::json::Value::obj(vec![(
+        "error",
+        crate::json::Value::Str(msg.to_string()),
+    )])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ok(buf: &[u8]) -> HttpRequest {
+        match parse_request(buf) {
+            Parse::Ok(r) => r,
+            other => panic!("expected Ok, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_get_and_post() {
+        let r = ok(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/metrics");
+        assert!(r.keep_alive);
+        assert!(r.body.is_empty());
+        let raw = b"POST /v1/predict HTTP/1.1\r\n\
+                    Content-Length: 9\r\n\r\n{\"x\":[[]]}";
+        // content-length 9 < body 10: only 9 bytes consumed
+        let r = ok(&raw[..]);
+        assert_eq!(r.body, b"{\"x\":[[]]".to_vec());
+        assert_eq!(r.consumed, raw.len() - 1);
+    }
+
+    #[test]
+    fn keep_alive_rules() {
+        assert!(!ok(b"GET / HTTP/1.0\r\n\r\n").keep_alive);
+        assert!(
+            ok(b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n")
+                .keep_alive
+        );
+        assert!(
+            !ok(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n")
+                .keep_alive
+        );
+    }
+
+    #[test]
+    fn incomplete_inputs_wait_for_more() {
+        for prefix in [
+            &b"GET /metrics HTTP/1.1\r\n"[..],
+            &b"POST /p HTTP/1.1\r\nContent-Length: 5\r\n\r\nab"[..],
+        ] {
+            assert!(matches!(
+                parse_request(prefix),
+                Parse::Incomplete
+            ));
+        }
+    }
+
+    #[test]
+    fn hostile_inputs_rejected_with_status() {
+        let cases: Vec<(Vec<u8>, u16)> = vec![
+            (b"garbage\r\n\r\n".to_vec(), 400),
+            (b"GET nopath HTTP/1.1\r\n\r\n".to_vec(), 400),
+            (b"GET / HTTP/9.9\r\n\r\n".to_vec(), 400),
+            (
+                b"POST / HTTP/1.1\r\nContent-Length: 999999999999\
+                  \r\n\r\n"
+                    .to_vec(),
+                413,
+            ),
+            (
+                b"POST / HTTP/1.1\r\nContent-Length: -4\r\n\r\n"
+                    .to_vec(),
+                400,
+            ),
+            (
+                b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\
+                  \r\n\r\n"
+                    .to_vec(),
+                501,
+            ),
+            (
+                b"POST / HTTP/1.1\r\nContent-Length: 4\r\n\
+                  Content-Length: 5\r\n\r\n"
+                    .to_vec(),
+                400,
+            ),
+        ];
+        let mut long_head = b"GET /".to_vec();
+        long_head.resize(MAX_HEAD_BYTES + 10, b'a');
+        let cases = cases
+            .into_iter()
+            .chain(std::iter::once((long_head, 431)));
+        for (buf, want) in cases {
+            match parse_request(&buf) {
+                Parse::Bad { status, .. } => {
+                    assert_eq!(status, want, "input {buf:?}")
+                }
+                other => panic!(
+                    "expected Bad({want}) for {buf:?}, got {other:?}"
+                ),
+            }
+        }
+    }
+
+    #[test]
+    fn response_encoding_is_framed() {
+        let out = encode_response(200, "{\"a\":1}", true);
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Content-Length: 7\r\n"));
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        assert!(text.ends_with("\r\n\r\n{\"a\":1}"));
+        let closed = encode_response(429, &error_body("shed"), false);
+        let text = String::from_utf8(closed).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests"));
+        assert!(text.contains("Connection: close"));
+        assert!(text.contains("{\"error\":\"shed\"}"));
+    }
+}

@@ -1,0 +1,271 @@
+//! Server-side observability counters (ADR-007 §Metrics): lock-free
+//! atomics for the hot-path counts, log-scale histograms for batch
+//! sizes and request latency, and a mutexed per-model request map —
+//! snapshotted into the JSON the `GET /metrics` endpoint serves.
+//!
+//! Histograms use power-of-two buckets (`bucket i` counts values in
+//! `(2^(i-1), 2^i]`), so recording is one atomic add and quantiles
+//! are a cumulative walk; the reported quantile is the bucket's
+//! upper bound — a ≤2x overestimate, which is the right bias for a
+//! p99 used in regression gates.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::json::Value;
+
+/// Buckets in each histogram: values up to `2^(N-1)`, plus an
+/// overflow bucket. 24 covers latencies to ~8.4 s in microseconds
+/// and any plausible batch size.
+const HIST_BUCKETS: usize = 24;
+
+/// A log2-bucketed counting histogram.
+struct LogHist {
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+impl LogHist {
+    fn new() -> LogHist {
+        LogHist {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    fn record(&self, v: u64) {
+        let idx = (64 - v.max(1).leading_zeros() as usize
+            - (v.max(1).is_power_of_two() as usize))
+        .min(HIST_BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn counts(&self) -> [u64; HIST_BUCKETS] {
+        std::array::from_fn(|i| {
+            self.buckets[i].load(Ordering::Relaxed)
+        })
+    }
+
+    /// Upper bound of the bucket holding quantile `q` (0 when the
+    /// histogram is empty).
+    fn quantile(&self, q: f64) -> u64 {
+        let counts = self.counts();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target =
+            ((total as f64) * q).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 1u64 << i;
+            }
+        }
+        1u64 << (HIST_BUCKETS - 1)
+    }
+}
+
+/// All counters the server exports (shared via `Arc` between the
+/// event loop, the worker jobs and `GET /metrics`).
+pub struct Metrics {
+    /// Sockets accepted (admitted + shed).
+    pub accepted: AtomicU64,
+    /// Sockets rejected by the connection budget (never silent: each
+    /// got an explicit shed frame / 429 before the close).
+    pub shed: AtomicU64,
+    /// Requests answered, across both front-ends.
+    pub requests: AtomicU64,
+    /// Requests that arrived over the HTTP gateway.
+    pub http_requests: AtomicU64,
+    /// Kernel-pass batches executed on the worker pool.
+    pub batches: AtomicU64,
+    /// Requests answered with an error response.
+    pub errors: AtomicU64,
+    batch_sizes: LogHist,
+    latency_us: LogHist,
+    per_model: Mutex<BTreeMap<String, u64>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
+}
+
+impl Metrics {
+    /// Fresh zeroed registry.
+    pub fn new() -> Metrics {
+        Metrics {
+            accepted: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            http_requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            batch_sizes: LogHist::new(),
+            latency_us: LogHist::new(),
+            per_model: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Record one executed batch of `size` requests.
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_sizes.record(size as u64);
+    }
+
+    /// Record one request's queue-to-encode latency.
+    pub fn record_latency_us(&self, us: u64) {
+        self.latency_us.record(us);
+    }
+
+    /// Attribute `n` requests to a model name ("" = the default).
+    pub fn record_model(&self, name: &str, n: u64) {
+        let key = if name.is_empty() { "<default>" } else { name };
+        let mut map =
+            self.per_model.lock().expect("metrics poisoned");
+        *map.entry(key.to_string()).or_insert(0) += n;
+    }
+
+    /// Latency quantile in microseconds (bucket upper bound).
+    pub fn latency_quantile_us(&self, q: f64) -> u64 {
+        self.latency_us.quantile(q)
+    }
+
+    /// Snapshot everything as the `GET /metrics` JSON body. Cache
+    /// numbers come from the caller ([`super::ModelCache`] owns
+    /// them).
+    pub fn to_json(
+        &self,
+        cache_loads: u64,
+        cache_hits: u64,
+    ) -> Value {
+        let load = |c: &AtomicU64| {
+            Value::Num(c.load(Ordering::Relaxed) as f64)
+        };
+        let hist = |h: &LogHist| {
+            let counts = h.counts();
+            let last = counts
+                .iter()
+                .rposition(|&c| c != 0)
+                .map(|i| i + 1)
+                .unwrap_or(0);
+            Value::Arr(
+                (0..last)
+                    .map(|i| {
+                        Value::obj(vec![
+                            ("le", Value::Num((1u64 << i) as f64)),
+                            ("count", Value::Num(counts[i] as f64)),
+                        ])
+                    })
+                    .collect(),
+            )
+        };
+        let models = {
+            let map =
+                self.per_model.lock().expect("metrics poisoned");
+            Value::Obj(
+                map.iter()
+                    .map(|(k, &v)| {
+                        (
+                            k.clone(),
+                            Value::obj(vec![(
+                                "requests",
+                                Value::Num(v as f64),
+                            )]),
+                        )
+                    })
+                    .collect(),
+            )
+        };
+        Value::obj(vec![
+            ("accepted", load(&self.accepted)),
+            ("shed", load(&self.shed)),
+            ("requests", load(&self.requests)),
+            ("http_requests", load(&self.http_requests)),
+            ("batches", load(&self.batches)),
+            ("errors", load(&self.errors)),
+            ("batch_size_hist", hist(&self.batch_sizes)),
+            ("latency_us_hist", hist(&self.latency_us)),
+            (
+                "latency_us_p50",
+                Value::Num(self.latency_us.quantile(0.50) as f64),
+            ),
+            (
+                "latency_us_p99",
+                Value::Num(self.latency_us.quantile(0.99) as f64),
+            ),
+            ("cache_loads", Value::Num(cache_loads as f64)),
+            ("cache_hits", Value::Num(cache_hits as f64)),
+            ("models", models),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = LogHist::new();
+        // bucket edges: 1→0, 2→1, 3..4→2, 5..8→3
+        for v in [1, 2, 3, 4, 5, 8] {
+            h.record(v);
+        }
+        let c = h.counts();
+        assert_eq!(c[0], 1);
+        assert_eq!(c[1], 1);
+        assert_eq!(c[2], 2);
+        assert_eq!(c[3], 2);
+        assert_eq!(h.quantile(0.5), 4);
+        assert_eq!(h.quantile(1.0), 8);
+        // empty histogram reports 0
+        assert_eq!(LogHist::new().quantile(0.99), 0);
+        // overflow clamps to the last bucket
+        let big = LogHist::new();
+        big.record(u64::MAX);
+        assert_eq!(
+            big.quantile(1.0),
+            1u64 << (HIST_BUCKETS - 1)
+        );
+    }
+
+    #[test]
+    fn metrics_json_shape() {
+        let m = Metrics::new();
+        m.accepted.fetch_add(3, Ordering::Relaxed);
+        m.shed.fetch_add(1, Ordering::Relaxed);
+        m.requests.fetch_add(10, Ordering::Relaxed);
+        m.record_batch(4);
+        m.record_latency_us(250);
+        m.record_model("", 6);
+        m.record_model("other.fcm", 4);
+        let v = m.to_json(2, 8);
+        assert_eq!(v.get("accepted").unwrap().as_u64().unwrap(), 3);
+        assert_eq!(v.get("shed").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(v.get("batches").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(
+            v.get("cache_hits").unwrap().as_u64().unwrap(),
+            8
+        );
+        assert!(
+            v.get("latency_us_p99").unwrap().as_u64().unwrap()
+                >= 250
+        );
+        let models = v.get("models").unwrap();
+        assert_eq!(
+            models
+                .get("<default>")
+                .unwrap()
+                .get("requests")
+                .unwrap()
+                .as_u64()
+                .unwrap(),
+            6
+        );
+        // the snapshot is valid, parseable JSON
+        assert!(crate::json::parse(&v.to_string()).is_ok());
+    }
+}

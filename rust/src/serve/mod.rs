@@ -1,38 +1,54 @@
-//! The concurrent decode server (ADR-004): a long-lived loopback TCP
-//! service that keeps fitted `.fcm` models resident and answers
-//! compress / predict / model-info requests against them — the first
-//! step from "reproduction script" to "system that answers requests"
-//! on the ROADMAP's path to heavy-traffic serving.
+//! The event-driven decode server (ADR-007, which supersedes the
+//! thread-per-connection design of ADR-004): a long-lived loopback
+//! TCP service that keeps fitted `.fcm` models resident and answers
+//! compress / predict / model-info requests against them — over a
+//! length-prefixed binary protocol and, optionally, an HTTP/JSON
+//! gateway — from a single readiness-driven event loop.
 //!
 //! # Pieces
 //!
+//! * [`event_loop`] — the readiness layer: epoll on Linux, poll(2)
+//!   on other unix, all through raw `extern "C"` declarations
+//!   (ADR-001: no external crates);
 //! * [`protocol`] — the length-prefixed binary wire format;
+//! * [`http`] — the bounded HTTP/1.1 subset the gateway speaks;
 //! * [`ModelCache`] — LRU of deserialized models shared across
 //!   connections via `Arc`;
-//! * [`Server`] / [`ServerHandle`] — accept loop, per-connection
-//!   request batching onto the shared
-//!   [`crate::coordinator::WorkerPool`], orderly shutdown;
-//! * [`ServeClient`] — a blocking client (CLI, tests, reference).
+//! * [`Server`] / [`ServerHandle`] — nonblocking accept with an
+//!   explicit connection budget (over-budget accepts are *shed* with
+//!   a binary shed frame / HTTP 429, never silently dropped),
+//!   cross-connection micro-batching of same-model requests onto the
+//!   shared [`crate::coordinator::WorkerPool`], `GET /metrics`
+//!   observability, orderly shutdown;
+//! * [`ServeClient`] — a blocking client (CLI, tests, reference)
+//!   with bounded connect retry.
 //!
 //! # Guarantees
 //!
 //! * **Bit-equivalence**: a served `predict`/`compress` response is
 //!   byte-identical to the offline apply-only path on the same model
 //!   ([`crate::model::FittedModel::predict_proba`] /
-//!   [`crate::model::FittedModel::compress`]) — asserted by the
-//!   `serve_smoke` integration suite under ≥8 concurrent clients.
-//! * **Order**: responses on a connection arrive in request order,
-//!   so clients may pipeline.
+//!   [`crate::model::FittedModel::compress`]) — batched or not,
+//!   binary or HTTP/JSON — asserted by the `serve_smoke` and
+//!   `serve_batching` integration suites under concurrent clients.
+//! * **Order**: responses on a connection arrive in request order
+//!   even when neighboring requests land in different batches, so
+//!   clients may pipeline.
 //! * **Clean teardown**: [`ServerHandle::shutdown`] joins every
-//!   thread (connections, accept, pool workers) before returning.
+//!   thread (the event loop and the pool workers) before returning.
 
+mod batch;
 mod cache;
 mod client;
+pub mod event_loop;
+pub mod http;
+mod metrics;
 pub mod protocol;
 mod server;
 
 pub use cache::ModelCache;
 pub use client::ServeClient;
+pub use metrics::Metrics;
 pub use protocol::{Request, Response};
 pub use server::{
     ServeLog, ServeOptions, ServeStats, Server, ServerHandle,

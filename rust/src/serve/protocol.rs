@@ -66,6 +66,10 @@ pub const OP_COMPRESS: u8 = 2;
 pub const OP_PREDICT: u8 = 3;
 /// Response opcode marking a server-side error.
 pub const OP_ERROR: u8 = 0xFF;
+/// Response opcode for load shedding (ADR-007): the server is at its
+/// connection budget and rejected the connection *explicitly* — the
+/// 429 of the binary protocol, never a silent drop.
+pub const OP_SHED: u8 = 0xFE;
 
 /// Coordinator → worker: one job assignment (ADR-006).
 pub const OP_ASSIGN: u8 = 4;
@@ -84,8 +88,10 @@ pub const ACK_HEARTBEAT: u8 = 1;
 /// [`DistFrame::Ack`] kind: connection greeting; `info` = worker pid.
 pub const ACK_HELLO: u8 = 2;
 
-/// Largest frame body accepted (corruption / abuse guard).
-const MAX_BODY_BYTES: usize = 1 << 28;
+/// Largest frame body accepted (corruption / abuse guard). Shared
+/// with the event loop's in-buffer frame parser, which enforces the
+/// same bound before a body is ever buffered.
+pub(crate) const MAX_BODY_BYTES: usize = 1 << 28;
 
 /// One decoded client request.
 #[derive(Clone, Debug)]
@@ -123,6 +129,10 @@ pub enum Response {
     /// Request-level failure (the connection stays usable unless the
     /// frame itself was malformed).
     Error(String),
+    /// Connection-level rejection: the server is at its connection
+    /// budget. Sent once on accept, then the connection is closed —
+    /// clients should back off and retry.
+    Shed(String),
 }
 
 /// One coordinator/worker frame of the distributed fit (ADR-006).
@@ -261,6 +271,10 @@ pub fn write_response(w: &mut impl Write, rs: &Response) -> Result<()> {
         Response::Error(msg) => {
             body.extend_from_slice(msg.as_bytes());
             OP_ERROR
+        }
+        Response::Shed(msg) => {
+            body.extend_from_slice(msg.as_bytes());
+            OP_SHED
         }
     };
     write_frame(w, opcode, &body)
@@ -431,7 +445,17 @@ fn read_body(r: &mut impl Read) -> Result<Vec<u8>> {
 /// wait interruptible).
 pub fn read_request_body(r: &mut impl Read, opcode: u8) -> Result<Request> {
     let body = read_body(r)?;
-    let mut c = Cursor { buf: &body, pos: 0 };
+    decode_request_body(opcode, &body)
+}
+
+/// Decode a request whose complete body is already in memory — the
+/// event-loop server parses frames out of its connection read buffer
+/// and never goes through a `Read` adapter.
+pub(crate) fn decode_request_body(
+    opcode: u8,
+    body: &[u8],
+) -> Result<Request> {
+    let mut c = Cursor { buf: body, pos: 0 };
     let rq = match opcode {
         OP_MODEL_INFO => Request::ModelInfo { model: c.str()? },
         OP_COMPRESS => {
@@ -446,6 +470,14 @@ pub fn read_request_body(r: &mut impl Read, opcode: u8) -> Result<Request> {
     };
     c.finish()?;
     Ok(rq)
+}
+
+/// Encode one response to bytes (what worker jobs hand back to the
+/// event loop for demuxing onto connections).
+pub fn encode_response(rs: &Response) -> Result<Vec<u8>> {
+    let mut buf = Vec::new();
+    write_response(&mut buf, rs)?;
+    Ok(buf)
 }
 
 /// Read one full request frame; `Ok(None)` = clean EOF.
@@ -473,6 +505,10 @@ pub fn read_response(r: &mut impl Read) -> Result<Response> {
         OP_ERROR => {
             let msg = String::from_utf8_lossy(&body).into_owned();
             return Ok(Response::Error(msg));
+        }
+        OP_SHED => {
+            let msg = String::from_utf8_lossy(&body).into_owned();
+            return Ok(Response::Shed(msg));
         }
         other => {
             return Err(invalid(format!(
@@ -591,6 +627,22 @@ mod tests {
         }
         match read_response(&mut r).unwrap() {
             Response::Error(msg) => assert_eq!(msg, "boom"),
+            other => panic!("wrong response: {other:?}"),
+        }
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn shed_frame_roundtrips() {
+        let mut buf = Vec::new();
+        write_response(
+            &mut buf,
+            &Response::Shed("at capacity".into()),
+        )
+        .unwrap();
+        let mut r = &buf[..];
+        match read_response(&mut r).unwrap() {
+            Response::Shed(msg) => assert_eq!(msg, "at capacity"),
             other => panic!("wrong response: {other:?}"),
         }
         assert!(r.is_empty());

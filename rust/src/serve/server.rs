@@ -1,27 +1,37 @@
-//! The long-lived loopback decode server (ADR-004 §Serving).
+//! The event-driven decode server (ADR-007, superseding the
+//! thread-per-connection design of ADR-004).
 //!
 //! # Architecture
 //!
-//! One accept thread owns the `TcpListener`; each connection gets a
-//! lightweight reader thread that *parses* frames but never computes:
-//! it gathers every request already buffered on the socket into a
-//! batch (bounded by `max_batch`) and submits the batch as ONE job to
-//! the shared [`WorkerPool`] — the same bounded-queue substrate the
-//! offline pipeline runs on, so compute parallelism and backpressure
-//! are pool-wide properties rather than per-connection ones. The
-//! fitted models live in a [`ModelCache`] behind `Arc`s: concurrent
-//! clients share one resident model instead of deserializing one
-//! copy each.
+//! One `serve-loop` thread owns every socket through a readiness
+//! [`Poller`] (epoll on Linux, poll(2) elsewhere): it accepts
+//! nonblocking connections from the binary listener and the optional
+//! HTTP gateway, runs a per-connection read/write state machine, and
+//! parses frames — but never computes. Parsed requests flow into a
+//! cross-connection [`Batcher`]: concurrent compress / predict
+//! requests against the same model coalesce into ONE sample-major
+//! kernel pass on the shared [`WorkerPool`], and the responses are
+//! demuxed back per connection in request order. Workers hand
+//! encoded bytes back over a channel and interrupt the loop's wait
+//! with a [`WakePipe`] wake.
+//!
+//! # Load shedding
+//!
+//! Admission is bounded by `max_connections`. A connection over
+//! budget is *explicitly* rejected — a [`Response::Shed`] frame on
+//! the binary port, HTTP 429 on the gateway — and then closed. Never
+//! a silent drop, so clients can distinguish overload from failure.
 //!
 //! # Shutdown
 //!
-//! [`ServerHandle::shutdown`] flips the shutdown flag, wakes the
-//! accept loop with a loopback connect, joins the accept thread
-//! (which joins every connection thread first) and only then drains
-//! the worker pool via [`WorkerPool::finish`] — no stranded threads,
-//! which the `serve_smoke` integration suite asserts.
+//! [`ServerHandle::shutdown`] flips the shutdown flag and wakes the
+//! loop; the loop flushes the batcher, drains in-flight jobs,
+//! best-effort writes buffered responses, then drains the worker
+//! pool via [`WorkerPool::finish`] — no stranded threads, which the
+//! `serve_smoke` integration suite asserts.
 
-use std::io::{BufReader, BufWriter, ErrorKind, Write};
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufWriter, ErrorKind, Read, Write};
 use std::net::{Ipv4Addr, SocketAddr, TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -29,20 +39,37 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use super::batch::{Batch, Batcher, PendingReq, Verb, Wire};
 use super::cache::ModelCache;
+use super::event_loop::{
+    sys_fd, Event, Fd, Interest, Poller, Token, WakePipe, Waker,
+};
+use super::http::{self, HttpRequest, Parse};
+use super::metrics::Metrics;
 use super::protocol::{
-    read_opcode, read_request_body, write_response, Request, Response,
+    self, decode_request_body, Request, Response, MAX_BODY_BYTES,
 };
 use crate::coordinator::WorkerPool;
 use crate::error::{invalid, Result};
+use crate::json::{self, Value};
 use crate::model::FittedModel;
+use crate::volume::FeatureMatrix;
 
-/// Idle poll granularity: how often a blocked connection reader
-/// rechecks the shutdown flag.
-const IDLE_TICK: Duration = Duration::from_millis(200);
+/// Idle wait bound: how long a quiet loop sleeps before rechecking
+/// the shutdown flag (wakes interrupt it sooner).
+const IDLE_TICK_MS: i32 = 200;
 
-/// Patience for the body of a frame whose opcode already arrived.
-const BODY_TIMEOUT: Duration = Duration::from_secs(10);
+/// Bytes per `read(2)` into a connection buffer.
+const READ_CHUNK: usize = 16 * 1024;
+
+/// Reads per readable event before yielding to other connections
+/// (level-triggered readiness re-reports leftover input).
+const MAX_READS_PER_EVENT: usize = 16;
+
+const TOK_BINARY: Token = 0;
+const TOK_HTTP: Token = 1;
+const TOK_WAKE: Token = 2;
+const FIRST_CONN_TOKEN: Token = 3;
 
 /// Server construction knobs.
 #[derive(Clone, Debug)]
@@ -52,26 +79,39 @@ pub struct ServeOptions {
     /// TCP port on 127.0.0.1; `0` = ephemeral (see
     /// [`ServerHandle::addr`] for the bound address).
     pub port: u16,
+    /// HTTP gateway port on 127.0.0.1: `None` = no gateway,
+    /// `Some(0)` = ephemeral ([`ServerHandle::http_addr`]).
+    pub http_port: Option<u16>,
     /// Worker threads; `0` = available parallelism.
     pub workers: usize,
     /// Resident-model budget of the LRU cache.
     pub cache_capacity: usize,
-    /// Per-connection batch bound (requests per pool job).
+    /// Batch size cap (requests per pool job).
     pub max_batch: usize,
+    /// Connection budget across both listeners; accepts past it are
+    /// explicitly shed.
+    pub max_connections: usize,
+    /// Micro-batching flush window in microseconds: how long the
+    /// head of a batch may wait for company under continuous load.
+    pub batch_window_us: u64,
     /// Optional event-log file (the CI smoke job uploads this).
     pub log_path: Option<PathBuf>,
 }
 
 impl ServeOptions {
-    /// Defaults around a model path: ephemeral port, auto workers,
-    /// 4-model cache, batches of up to 64 requests, no log.
+    /// Defaults around a model path: ephemeral binary port, no HTTP
+    /// gateway, auto workers, 4-model cache, batches of up to 64
+    /// requests, 256-connection budget, 200 µs flush window, no log.
     pub fn new(model: impl Into<PathBuf>) -> Self {
         ServeOptions {
             model: model.into(),
             port: 0,
+            http_port: None,
             workers: 0,
             cache_capacity: 4,
             max_batch: 64,
+            max_connections: 256,
+            batch_window_us: 200,
             log_path: None,
         }
     }
@@ -97,16 +137,18 @@ impl Counters {
     }
 }
 
-/// A point-in-time view of the server's traffic counters.
+/// A point-in-time view of the server's traffic counters. The richer
+/// per-model / histogram view lives in
+/// [`ServerHandle::metrics_json`] (the `GET /metrics` body).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ServeStats {
-    /// Client connections accepted.
+    /// Client connections accepted (admitted + shed, both wires).
     pub connections: u64,
-    /// Requests answered (across all batches).
+    /// Model requests answered (across all batches, both wires).
     pub requests: u64,
-    /// Pool jobs executed (one per connection batch).
+    /// Pool jobs executed (one per coalesced batch).
     pub batches: u64,
-    /// Requests answered with a protocol-level error.
+    /// Requests answered with an error response.
     pub errors: u64,
 }
 
@@ -145,16 +187,15 @@ impl ServeLog {
     }
 }
 
-/// Everything the accept / connection / worker threads share.
+/// Everything the loop and the worker jobs share.
 struct ServerCtx {
     cache: ModelCache,
     default_model: PathBuf,
     model_dir: PathBuf,
-    pool: Mutex<Option<WorkerPool>>,
     shutdown: AtomicBool,
     counters: Counters,
+    metrics: Metrics,
     log: ServeLog,
-    max_batch: usize,
 }
 
 /// Entry point: [`Server::start`].
@@ -162,7 +203,7 @@ pub struct Server;
 
 impl Server {
     /// Bind 127.0.0.1, eagerly load the default model (failing fast
-    /// on a bad path), and spawn the accept loop. The returned handle
+    /// on a bad path), and spawn the event loop. The returned handle
     /// owns the server's lifetime.
     pub fn start(opts: ServeOptions) -> Result<ServerHandle> {
         let workers = if opts.workers == 0 {
@@ -174,7 +215,21 @@ impl Server {
         };
         let listener =
             TcpListener::bind((Ipv4Addr::LOCALHOST, opts.port))?;
+        listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
+        let http_listener = match opts.http_port {
+            None => None,
+            Some(p) => {
+                let l =
+                    TcpListener::bind((Ipv4Addr::LOCALHOST, p))?;
+                l.set_nonblocking(true)?;
+                Some(l)
+            }
+        };
+        let http_addr = match &http_listener {
+            None => None,
+            Some(l) => Some(l.local_addr()?),
+        };
         let model_dir = opts
             .model
             .parent()
@@ -185,16 +240,21 @@ impl Server {
             cache: ModelCache::new(opts.cache_capacity),
             default_model: opts.model.clone(),
             model_dir,
-            pool: Mutex::new(Some(WorkerPool::new(
-                workers,
-                workers * 2,
-            ))),
             shutdown: AtomicBool::new(false),
             counters: Counters::default(),
+            metrics: Metrics::new(),
             log: ServeLog::new(opts.log_path.as_deref())?,
-            max_batch: opts.max_batch.max(1),
         });
         let model = ctx.cache.get_or_load(&opts.model)?;
+        let mut poller = Poller::new()?;
+        let wake = WakePipe::new()?;
+        poller.add(sys_fd(&listener), TOK_BINARY, Interest::READ)?;
+        if let Some(l) = &http_listener {
+            poller.add(sys_fd(l), TOK_HTTP, Interest::READ)?;
+        }
+        if wake.fd() >= 0 {
+            poller.add(wake.fd(), TOK_WAKE, Interest::READ)?;
+        }
         ctx.log.line(&format!(
             "listening on {addr}: model {} (method {}, p={}, k={}), \
              {workers} workers",
@@ -203,25 +263,71 @@ impl Server {
             model.header.p,
             model.header.k
         ));
-        let actx = ctx.clone();
-        let accept = std::thread::Builder::new()
-            .name("serve-accept".into())
-            .spawn(move || accept_loop(listener, actx))?;
-        Ok(ServerHandle { addr, ctx, accept: Some(accept) })
+        ctx.log.line(&format!(
+            "serve backend {}: {} connection budget, {} µs batch \
+             window, batches of up to {}",
+            poller.backend_name(),
+            opts.max_connections,
+            opts.batch_window_us,
+            opts.max_batch.max(1)
+        ));
+        if let Some(ha) = http_addr {
+            ctx.log.line(&format!("http gateway on {ha}"));
+        }
+        let waker = wake.waker();
+        let (tx, rx) = mpsc::channel();
+        let max_inflight = (workers * 2).max(2);
+        let el = EventLoop {
+            ctx: ctx.clone(),
+            poller,
+            binary: listener,
+            http_listener,
+            wake,
+            tx,
+            rx,
+            pool: WorkerPool::new(workers, workers * 2),
+            conns: HashMap::new(),
+            batcher: Batcher::new(
+                opts.batch_window_us,
+                opts.max_batch,
+            ),
+            next_token: FIRST_CONN_TOKEN,
+            inflight: 0,
+            max_inflight,
+            overflow: VecDeque::new(),
+            max_connections: opts.max_connections.max(1),
+        };
+        let thread = std::thread::Builder::new()
+            .name("serve-loop".into())
+            .spawn(move || el.run())?;
+        Ok(ServerHandle {
+            addr,
+            http_addr,
+            ctx,
+            waker,
+            thread: Some(thread),
+        })
     }
 }
 
-/// Owner of a running server: address, stats, and orderly teardown.
+/// Owner of a running server: addresses, stats, orderly teardown.
 pub struct ServerHandle {
     addr: SocketAddr,
+    http_addr: Option<SocketAddr>,
     ctx: Arc<ServerCtx>,
-    accept: Option<JoinHandle<()>>,
+    waker: Waker,
+    thread: Option<JoinHandle<()>>,
 }
 
 impl ServerHandle {
-    /// The bound loopback address (resolves `port = 0`).
+    /// The bound binary-protocol address (resolves `port = 0`).
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// The bound HTTP gateway address, when one was requested.
+    pub fn http_addr(&self) -> Option<SocketAddr> {
+        self.http_addr
     }
 
     /// Current traffic counters.
@@ -229,42 +335,39 @@ impl ServerHandle {
         self.ctx.counters.snapshot()
     }
 
-    /// Stop accepting, drain connections and workers, return the
-    /// final counters. Joins every thread the server spawned.
+    /// The full observability snapshot — exactly the JSON that
+    /// `GET /metrics` serves.
+    pub fn metrics_json(&self) -> Value {
+        self.ctx
+            .metrics
+            .to_json(self.ctx.cache.loads(), self.ctx.cache.hits())
+    }
+
+    /// Stop accepting, drain batches and workers, return the final
+    /// counters. Joins every thread the server spawned.
     pub fn shutdown(mut self) -> Result<ServeStats> {
         self.stop_threads();
         Ok(self.ctx.counters.snapshot())
     }
 
-    /// Block until the accept loop exits (a CLI `repro serve`
+    /// Block until the event loop exits (a CLI `repro serve`
     /// foreground run — effectively forever unless the process is
-    /// signalled), then drain the pool.
+    /// signalled).
     pub fn wait(mut self) -> Result<ServeStats> {
-        if let Some(h) = self.accept.take() {
+        if let Some(h) = self.thread.take() {
             h.join()
-                .map_err(|_| invalid("serve accept thread panicked"))?;
+                .map_err(|_| invalid("serve loop thread panicked"))?;
         }
-        self.finish_pool();
         Ok(self.ctx.counters.snapshot())
     }
 
     fn stop_threads(&mut self) {
         self.ctx.shutdown.store(true, Ordering::Relaxed);
-        // wake the blocking accept() so it observes the flag
-        let _ = TcpStream::connect(self.addr);
-        if let Some(h) = self.accept.take() {
+        self.waker.wake();
+        if let Some(h) = self.thread.take() {
             let _ = h.join();
         }
-        self.finish_pool();
         self.ctx.log.line("shutdown complete");
-    }
-
-    fn finish_pool(&self) {
-        let pool = self.ctx.pool.lock().expect("pool poisoned").take();
-        if let Some(pool) = pool {
-            let _: Vec<()> = pool.finish();
-            self.ctx.log.line("worker pool drained");
-        }
     }
 }
 
@@ -272,54 +375,10 @@ impl Drop for ServerHandle {
     /// Dropping an un-shutdown handle still tears the server down —
     /// tests that panic mid-flight must not leave threads behind.
     fn drop(&mut self) {
-        if self.accept.is_some() {
+        if self.thread.is_some() {
             self.stop_threads();
         }
     }
-}
-
-fn accept_loop(listener: TcpListener, ctx: Arc<ServerCtx>) {
-    let mut conns: Vec<JoinHandle<()>> = Vec::new();
-    let mut conn_id = 0u64;
-    for inc in listener.incoming() {
-        if ctx.shutdown.load(Ordering::Relaxed) {
-            break;
-        }
-        match inc {
-            Ok(stream) => {
-                // reap handles of connections that already finished
-                // so a long-lived server holds O(concurrent), not
-                // O(ever-accepted), join handles
-                conns.retain(|h| !h.is_finished());
-                conn_id += 1;
-                ctx.counters.connections.fetch_add(1, Ordering::Relaxed);
-                let cctx = ctx.clone();
-                let id = conn_id;
-                let spawned = std::thread::Builder::new()
-                    .name(format!("serve-conn-{id}"))
-                    .spawn(move || handle_conn(stream, cctx, id));
-                match spawned {
-                    Ok(h) => conns.push(h),
-                    Err(e) => {
-                        ctx.log.line(&format!(
-                            "conn {id}: spawn failed: {e}"
-                        ));
-                    }
-                }
-            }
-            Err(e) => {
-                ctx.log.line(&format!("accept error: {e}"));
-            }
-        }
-    }
-    for h in conns {
-        let _ = h.join();
-    }
-    ctx.log.line("accept loop exited");
-}
-
-fn is_timeout(e: &std::io::Error) -> bool {
-    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
 }
 
 /// Resolve a request's model name against the cache. Empty = the
@@ -342,152 +401,957 @@ fn resolve_model(
     ctx.cache.get_or_load(&ctx.model_dir.join(name))
 }
 
-/// Execute one connection batch on a pool worker.
-fn serve_batch(ctx: &ServerCtx, batch: Vec<Request>) -> Vec<Response> {
-    batch
-        .into_iter()
-        .map(|rq| {
-            let out = match rq {
-                Request::ModelInfo { model } => resolve_model(ctx, &model)
-                    .map(|m| Response::Info(m.info_json().to_string())),
-                Request::Compress { model, x } => {
-                    resolve_model(ctx, &model).and_then(|m| {
-                        m.compress(&x).map(Response::Compressed)
-                    })
+// --------------------------------------------------------- event loop
+
+/// One response slot of a connection. Slots are created in request
+/// order and flushed strictly in order — a later response waits in
+/// its slot until every earlier one is on the write buffer.
+struct Slot {
+    data: Option<Vec<u8>>,
+    close_after: bool,
+}
+
+/// Per-connection state machine.
+struct Conn {
+    stream: TcpStream,
+    fd: Fd,
+    http: bool,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    base_slot: u64,
+    next_slot: u64,
+    slots: VecDeque<Slot>,
+    read_shut: bool,
+    dead: bool,
+    interest: Interest,
+}
+
+impl Conn {
+    /// Pull readable bytes into `rbuf` (bounded per event;
+    /// level-triggered readiness re-reports the rest).
+    fn fill_rbuf(&mut self) {
+        let mut chunk = [0u8; READ_CHUNK];
+        let mut reads = 0;
+        while reads < MAX_READS_PER_EVENT {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    self.read_shut = true;
+                    return;
                 }
-                Request::Predict { model, x } => {
-                    resolve_model(ctx, &model).and_then(|m| {
-                        m.predict_proba(&x).map(Response::Probabilities)
-                    })
+                Ok(n) => {
+                    self.rbuf.extend_from_slice(&chunk[..n]);
+                    reads += 1;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    return
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.dead = true;
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Move completed head-of-line slots onto the write buffer.
+    fn pump(&mut self) {
+        while matches!(
+            self.slots.front(),
+            Some(s) if s.data.is_some()
+        ) {
+            let s = self.slots.pop_front().expect("front exists");
+            self.base_slot += 1;
+            self.wbuf
+                .extend_from_slice(&s.data.expect("front complete"));
+            if s.close_after {
+                self.read_shut = true;
+            }
+        }
+    }
+
+    /// Write as much buffered output as the socket takes.
+    fn write_pending(&mut self) {
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    return;
+                }
+                Ok(n) => self.wpos += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.dead = true;
+                    return;
+                }
+            }
+        }
+        if self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        }
+    }
+}
+
+/// Encoded responses of one executed batch: `(conn, slot, bytes)`.
+type Completion = Vec<(Token, u64, Vec<u8>)>;
+
+struct EventLoop {
+    ctx: Arc<ServerCtx>,
+    poller: Poller,
+    binary: TcpListener,
+    http_listener: Option<TcpListener>,
+    wake: WakePipe,
+    tx: mpsc::Sender<Completion>,
+    rx: mpsc::Receiver<Completion>,
+    pool: WorkerPool,
+    conns: HashMap<Token, Conn>,
+    batcher: Batcher,
+    next_token: Token,
+    inflight: usize,
+    max_inflight: usize,
+    overflow: VecDeque<Batch>,
+    max_connections: usize,
+}
+
+impl EventLoop {
+    fn run(mut self) {
+        let mut events: Vec<Event> = Vec::new();
+        loop {
+            if self.ctx.shutdown.load(Ordering::Relaxed) {
+                break;
+            }
+            // With requests waiting in the batcher, poll without
+            // sleeping: a wait that comes back empty means nothing
+            // else is arriving, so flush everything immediately
+            // (quiescence) instead of sitting out the window.
+            let timeout = if self.batcher.is_empty() {
+                IDLE_TICK_MS
+            } else {
+                0
+            };
+            if let Err(e) = self.poller.wait(&mut events, timeout) {
+                self.ctx.log.line(&format!("poller failed: {e}"));
+                break;
+            }
+            let quiet = events.is_empty();
+            for i in 0..events.len() {
+                let ev = events[i];
+                self.handle_event(ev);
+            }
+            self.drain_completions();
+            let due = self.batcher.due(Instant::now());
+            for b in due {
+                self.dispatch(b);
+            }
+            if quiet && !self.batcher.is_empty() {
+                let rest = self.batcher.drain();
+                for b in rest {
+                    self.dispatch(b);
+                }
+            }
+            self.flush_and_sweep();
+        }
+        self.drain_and_exit();
+    }
+
+    fn handle_event(&mut self, ev: Event) {
+        match ev.token {
+            TOK_BINARY => {
+                if ev.readable {
+                    self.accept_all(false);
+                }
+            }
+            TOK_HTTP => {
+                if ev.readable {
+                    self.accept_all(true);
+                }
+            }
+            TOK_WAKE => self.wake.drain(),
+            token => {
+                if ev.readable || ev.hangup {
+                    self.read_and_parse(token, ev.hangup);
+                }
+                if ev.writable {
+                    if let Some(c) = self.conns.get_mut(&token) {
+                        c.write_pending();
+                    }
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------ admission
+
+    fn accept_all(&mut self, http: bool) {
+        loop {
+            let res = if http {
+                match &self.http_listener {
+                    Some(l) => l.accept(),
+                    None => return,
+                }
+            } else {
+                self.binary.accept()
+            };
+            match res {
+                Ok((stream, _)) => self.admit(stream, http),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    return
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => {
+                    self.ctx
+                        .log
+                        .line(&format!("accept error: {e}"));
+                    return;
+                }
+            }
+        }
+    }
+
+    fn admit(&mut self, stream: TcpStream, http: bool) {
+        self.ctx
+            .counters
+            .connections
+            .fetch_add(1, Ordering::Relaxed);
+        self.ctx.metrics.accepted.fetch_add(1, Ordering::Relaxed);
+        if self.conns.len() >= self.max_connections {
+            self.shed(stream, http);
+            return;
+        }
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        let token = self.next_token;
+        self.next_token += 1;
+        let fd = sys_fd(&stream);
+        if let Err(e) = self.poller.add(fd, token, Interest::READ) {
+            self.ctx.log.line(&format!(
+                "conn {token}: register failed: {e}"
+            ));
+            return;
+        }
+        self.ctx.log.line(&format!(
+            "conn {token}: open ({})",
+            if http { "http" } else { "binary" }
+        ));
+        self.conns.insert(
+            token,
+            Conn {
+                stream,
+                fd,
+                http,
+                rbuf: Vec::new(),
+                wbuf: Vec::new(),
+                wpos: 0,
+                base_slot: 0,
+                next_slot: 0,
+                slots: VecDeque::new(),
+                read_shut: false,
+                dead: false,
+                interest: Interest::READ,
+            },
+        );
+    }
+
+    /// Over-budget connection: answer with an explicit rejection on
+    /// the still-blocking accepted socket, then drop it.
+    fn shed(&mut self, stream: TcpStream, http: bool) {
+        self.ctx.metrics.shed.fetch_add(1, Ordering::Relaxed);
+        self.ctx.log.line(&format!(
+            "shed connection: at the {} connection budget",
+            self.max_connections
+        ));
+        let msg = "server at connection capacity, retry later";
+        let bytes = if http {
+            http::encode_response(
+                429,
+                &http::error_body(msg),
+                false,
+            )
+        } else {
+            encode_binary(&Response::Shed(msg.to_string()))
+        };
+        let _ = stream
+            .set_write_timeout(Some(Duration::from_millis(250)));
+        let mut s = stream;
+        let _ = s.write_all(&bytes);
+    }
+
+    // -------------------------------------------------------- parsing
+
+    fn read_and_parse(&mut self, token: Token, hangup: bool) {
+        let http = {
+            let Some(c) = self.conns.get_mut(&token) else {
+                return;
+            };
+            c.fill_rbuf();
+            if hangup {
+                c.read_shut = true;
+            }
+            c.http
+        };
+        if http {
+            self.parse_http(token);
+        } else {
+            self.parse_binary(token);
+        }
+    }
+
+    fn parse_binary(&mut self, token: Token) {
+        enum Step {
+            Frame(u8, Vec<u8>),
+            Fatal(String),
+            Wait,
+        }
+        loop {
+            let step = {
+                let Some(c) = self.conns.get_mut(&token) else {
+                    return;
+                };
+                if c.rbuf.len() < 5 {
+                    Step::Wait
+                } else {
+                    let len = u32::from_le_bytes([
+                        c.rbuf[1], c.rbuf[2], c.rbuf[3], c.rbuf[4],
+                    ]) as usize;
+                    if len > MAX_BODY_BYTES {
+                        Step::Fatal(format!(
+                            "protocol frame body of {len} bytes \
+                             exceeds limit"
+                        ))
+                    } else if c.rbuf.len() < 5 + len {
+                        Step::Wait
+                    } else {
+                        let op = c.rbuf[0];
+                        let body = c.rbuf[5..5 + len].to_vec();
+                        c.rbuf.drain(..5 + len);
+                        Step::Frame(op, body)
+                    }
                 }
             };
-            out.unwrap_or_else(|e| {
-                ctx.counters.errors.fetch_add(1, Ordering::Relaxed);
-                Response::Error(e.to_string())
-            })
+            match step {
+                Step::Wait => return,
+                Step::Fatal(msg) => {
+                    self.binary_fail(token, msg);
+                    return;
+                }
+                Step::Frame(op, body) => {
+                    match decode_request_body(op, &body) {
+                        Ok(rq) => self.enqueue_binary(token, rq),
+                        Err(e) => {
+                            self.binary_fail(
+                                token,
+                                format!("malformed request: {e}"),
+                            );
+                            return;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Unrecoverable framing error: answer (in slot order), then
+    /// close — the stream is desynced past this point.
+    fn binary_fail(&mut self, token: Token, msg: String) {
+        self.ctx.counters.errors.fetch_add(1, Ordering::Relaxed);
+        self.ctx.metrics.errors.fetch_add(1, Ordering::Relaxed);
+        self.ctx.log.line(&format!("conn {token}: {msg}"));
+        let bytes = encode_binary(&Response::Error(msg));
+        self.local_response(token, bytes, true);
+    }
+
+    fn parse_http(&mut self, token: Token) {
+        enum Step {
+            Req(HttpRequest),
+            Bad(u16, String),
+            Wait,
+        }
+        loop {
+            let step = {
+                let Some(c) = self.conns.get_mut(&token) else {
+                    return;
+                };
+                if c.read_shut || c.rbuf.is_empty() {
+                    Step::Wait
+                } else {
+                    match http::parse_request(&c.rbuf) {
+                        Parse::Incomplete => Step::Wait,
+                        Parse::Bad { status, msg } => {
+                            c.read_shut = true;
+                            Step::Bad(status, msg)
+                        }
+                        Parse::Ok(r) => {
+                            c.rbuf.drain(..r.consumed);
+                            if !r.keep_alive {
+                                c.read_shut = true;
+                            }
+                            Step::Req(r)
+                        }
+                    }
+                }
+            };
+            match step {
+                Step::Wait => return,
+                Step::Bad(status, msg) => {
+                    self.http_error(token, status, &msg, false);
+                    return;
+                }
+                Step::Req(r) => self.route_http(token, r),
+            }
+        }
+    }
+
+    fn http_error(
+        &mut self,
+        token: Token,
+        status: u16,
+        msg: &str,
+        keep_alive: bool,
+    ) {
+        self.ctx.counters.errors.fetch_add(1, Ordering::Relaxed);
+        self.ctx.metrics.errors.fetch_add(1, Ordering::Relaxed);
+        let bytes = http::encode_response(
+            status,
+            &http::error_body(msg),
+            keep_alive,
+        );
+        self.local_response(token, bytes, !keep_alive);
+    }
+
+    fn route_http(&mut self, token: Token, r: HttpRequest) {
+        self.ctx
+            .metrics
+            .http_requests
+            .fetch_add(1, Ordering::Relaxed);
+        let keep = r.keep_alive;
+        match (r.method.as_str(), r.path.as_str()) {
+            ("GET", "/metrics") => {
+                self.ctx
+                    .counters
+                    .requests
+                    .fetch_add(1, Ordering::Relaxed);
+                self.ctx
+                    .metrics
+                    .requests
+                    .fetch_add(1, Ordering::Relaxed);
+                let body = self
+                    .ctx
+                    .metrics
+                    .to_json(
+                        self.ctx.cache.loads(),
+                        self.ctx.cache.hits(),
+                    )
+                    .to_string();
+                let bytes =
+                    http::encode_response(200, &body, keep);
+                self.local_response(token, bytes, !keep);
+            }
+            ("GET", "/v1/models") => self.enqueue(
+                token,
+                Wire::Http { keep_alive: keep },
+                String::new(),
+                Verb::Info,
+                None,
+            ),
+            ("GET", p) if p.starts_with("/v1/models/") => {
+                let name = p["/v1/models/".len()..].to_string();
+                self.enqueue(
+                    token,
+                    Wire::Http { keep_alive: keep },
+                    name,
+                    Verb::Info,
+                    None,
+                );
+            }
+            ("POST", "/v1/predict") => {
+                self.http_kernel(token, r, Verb::Predict)
+            }
+            ("POST", "/v1/compress") => {
+                self.http_kernel(token, r, Verb::Compress)
+            }
+            (
+                _,
+                "/metrics" | "/v1/models" | "/v1/predict"
+                | "/v1/compress",
+            ) => self.http_error(
+                token,
+                405,
+                "method not allowed for this path",
+                keep,
+            ),
+            _ => self.http_error(
+                token,
+                404,
+                &format!("no route for {}", r.path),
+                keep,
+            ),
+        }
+    }
+
+    fn http_kernel(
+        &mut self,
+        token: Token,
+        r: HttpRequest,
+        verb: Verb,
+    ) {
+        let keep = r.keep_alive;
+        match parse_kernel_body(&r.body) {
+            Ok((model, x)) => self.enqueue(
+                token,
+                Wire::Http { keep_alive: keep },
+                model,
+                verb,
+                Some(x),
+            ),
+            Err(e) => {
+                self.http_error(token, 400, &e.to_string(), keep)
+            }
+        }
+    }
+
+    // ----------------------------------------------------- dispatch
+
+    fn enqueue_binary(&mut self, token: Token, rq: Request) {
+        let (model, verb, x) = match rq {
+            Request::ModelInfo { model } => {
+                (model, Verb::Info, None)
+            }
+            Request::Compress { model, x } => {
+                (model, Verb::Compress, Some(x))
+            }
+            Request::Predict { model, x } => {
+                (model, Verb::Predict, Some(x))
+            }
+        };
+        self.enqueue(token, Wire::Binary, model, verb, x);
+    }
+
+    fn enqueue(
+        &mut self,
+        token: Token,
+        wire: Wire,
+        model: String,
+        verb: Verb,
+        x: Option<FeatureMatrix>,
+    ) {
+        let slot = {
+            let Some(c) = self.conns.get_mut(&token) else {
+                return;
+            };
+            let slot = c.next_slot;
+            c.next_slot += 1;
+            c.slots.push_back(Slot {
+                data: None,
+                close_after: matches!(
+                    wire,
+                    Wire::Http { keep_alive: false }
+                ),
+            });
+            slot
+        };
+        let pr = PendingReq {
+            conn: token,
+            slot,
+            wire,
+            model,
+            verb,
+            x,
+            enqueued: Instant::now(),
+        };
+        if let Some(batch) = self.batcher.push(pr) {
+            self.dispatch(batch);
+        }
+    }
+
+    /// A response produced on the loop thread itself (parse errors,
+    /// `GET /metrics`): fill its slot immediately, in order.
+    fn local_response(
+        &mut self,
+        token: Token,
+        bytes: Vec<u8>,
+        close_after: bool,
+    ) {
+        let Some(c) = self.conns.get_mut(&token) else {
+            return;
+        };
+        c.next_slot += 1;
+        c.slots.push_back(Slot { data: Some(bytes), close_after });
+        c.pump();
+    }
+
+    fn dispatch(&mut self, batch: Batch) {
+        if self.inflight >= self.max_inflight {
+            // the pool's bounded queue is full-ish: hold the batch
+            // locally so the loop thread never blocks in submit()
+            self.overflow.push_back(batch);
+        } else {
+            self.submit(batch);
+        }
+    }
+
+    fn submit(&mut self, batch: Batch) {
+        self.inflight += 1;
+        self.pool.discard_ready_results();
+        let ctx = self.ctx.clone();
+        let tx = self.tx.clone();
+        let waker = self.wake.waker();
+        self.pool.submit(move || {
+            let done = execute_batch(&ctx, batch);
+            let _ = tx.send(done);
+            waker.wake();
+        });
+    }
+
+    fn drain_completions(&mut self) {
+        while let Ok(done) = self.rx.try_recv() {
+            self.inflight = self.inflight.saturating_sub(1);
+            self.apply_completion(done);
+            while self.inflight < self.max_inflight {
+                match self.overflow.pop_front() {
+                    Some(b) => self.submit(b),
+                    None => break,
+                }
+            }
+        }
+    }
+
+    fn apply_completion(&mut self, done: Completion) {
+        for (token, slot, bytes) in done {
+            // monotonic tokens: a completion for a connection that
+            // died meanwhile finds nothing and is dropped here
+            if let Some(c) = self.conns.get_mut(&token) {
+                let idx = slot.wrapping_sub(c.base_slot) as usize;
+                if let Some(s) = c.slots.get_mut(idx) {
+                    s.data = Some(bytes);
+                }
+                c.pump();
+            }
+        }
+    }
+
+    // ------------------------------------------------- housekeeping
+
+    /// Push pending output, close finished connections, and keep
+    /// every registration's interest in sync with its state.
+    fn flush_and_sweep(&mut self) {
+        let tokens: Vec<Token> =
+            self.conns.keys().copied().collect();
+        for t in tokens {
+            let closable = match self.conns.get_mut(&t) {
+                None => continue,
+                Some(c) => {
+                    if c.wpos < c.wbuf.len() {
+                        c.write_pending();
+                    }
+                    c.dead
+                        || (c.read_shut
+                            && c.slots.is_empty()
+                            && c.wpos >= c.wbuf.len())
+                }
+            };
+            if closable {
+                self.close_conn(t);
+                continue;
+            }
+            if let Some(c) = self.conns.get_mut(&t) {
+                let want = Interest {
+                    read: !c.read_shut,
+                    write: c.wpos < c.wbuf.len(),
+                };
+                if want != c.interest
+                    && self.poller.modify(c.fd, t, want).is_ok()
+                {
+                    c.interest = want;
+                }
+            }
+        }
+    }
+
+    fn close_conn(&mut self, token: Token) {
+        if let Some(c) = self.conns.remove(&token) {
+            // deregister BEFORE the fd closes on drop, or a recycled
+            // descriptor could inherit the stale registration
+            let _ = self.poller.remove(c.fd, token);
+            self.ctx.log.line(&format!("conn {token}: closed"));
+        }
+    }
+
+    /// Shutdown path: flush the batcher, drain in-flight jobs,
+    /// best-effort write buffered responses, drain the pool.
+    fn drain_and_exit(mut self) {
+        let rest = self.batcher.drain();
+        for b in rest {
+            self.dispatch(b);
+        }
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while self.inflight > 0 && Instant::now() < deadline {
+            match self
+                .rx
+                .recv_timeout(Duration::from_millis(100))
+            {
+                Ok(done) => {
+                    self.inflight =
+                        self.inflight.saturating_sub(1);
+                    self.apply_completion(done);
+                    while self.inflight < self.max_inflight {
+                        match self.overflow.pop_front() {
+                            Some(b) => self.submit(b),
+                            None => break,
+                        }
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        for c in self.conns.values_mut() {
+            if c.wpos < c.wbuf.len() && !c.dead {
+                let _ = c.stream.set_nonblocking(false);
+                let _ = c.stream.set_write_timeout(Some(
+                    Duration::from_millis(250),
+                ));
+                let _ = c.stream.write_all(&c.wbuf[c.wpos..]);
+            }
+        }
+        self.conns.clear();
+        self.ctx.log.line("accept loop exited");
+        let _: Vec<()> = self.pool.finish();
+        self.ctx.log.line("worker pool drained");
+    }
+}
+
+// ------------------------------------------------------ batch workers
+
+/// Per-request outcome inside an executed batch.
+enum Out {
+    Info(String),
+    Proba(Vec<f32>),
+    Comp(FeatureMatrix),
+    Fail(String),
+}
+
+/// Execute one coalesced batch on a pool worker and encode every
+/// member's response for its wire.
+fn execute_batch(ctx: &ServerCtx, batch: Batch) -> Completion {
+    let n = batch.reqs.len();
+    let model = resolve_model(ctx, &batch.model);
+    let outs: Vec<Out> = match &model {
+        Err(e) => {
+            let msg = e.to_string();
+            batch
+                .reqs
+                .iter()
+                .map(|_| Out::Fail(msg.clone()))
+                .collect()
+        }
+        Ok(m) => match batch.verb {
+            Verb::Info => batch
+                .reqs
+                .iter()
+                .map(|_| Out::Info(m.info_json().to_string()))
+                .collect(),
+            Verb::Predict => run_predict(m, &batch.reqs),
+            Verb::Compress => run_compress(m, &batch.reqs),
+        },
+    };
+    let n_err = outs
+        .iter()
+        .filter(|o| matches!(o, Out::Fail(_)))
+        .count() as u64;
+    ctx.counters.batches.fetch_add(1, Ordering::Relaxed);
+    ctx.counters.requests.fetch_add(n as u64, Ordering::Relaxed);
+    ctx.metrics.requests.fetch_add(n as u64, Ordering::Relaxed);
+    if n_err > 0 {
+        ctx.counters.errors.fetch_add(n_err, Ordering::Relaxed);
+        ctx.metrics.errors.fetch_add(n_err, Ordering::Relaxed);
+    }
+    ctx.metrics.record_batch(n);
+    ctx.metrics.record_model(&batch.model, n as u64);
+    batch
+        .reqs
+        .iter()
+        .zip(outs)
+        .map(|(rq, out)| {
+            let bytes = encode_out(rq, out);
+            ctx.metrics.record_latency_us(
+                rq.enqueued.elapsed().as_micros() as u64,
+            );
+            (rq.conn, rq.slot, bytes)
         })
         .collect()
 }
 
-fn handle_conn(stream: TcpStream, ctx: Arc<ServerCtx>, id: u64) {
-    let _ = stream.set_nodelay(true);
-    if stream.set_read_timeout(Some(IDLE_TICK)).is_err() {
-        return;
+/// One sample-major predict pass over the whole batch, split back
+/// per request. Bit-identical to per-request execution because every
+/// kernel on the predict path is row-independent; a failure (the
+/// dimension check) depends only on the column count the group is
+/// keyed on, so error text matches the unbatched path too.
+fn run_predict(m: &FittedModel, reqs: &[PendingReq]) -> Vec<Out> {
+    if reqs.len() == 1 {
+        let x = reqs[0].x.as_ref().expect("kernel verb carries x");
+        return vec![match m.predict_proba(x) {
+            Ok(p) => Out::Proba(p),
+            Err(e) => Out::Fail(e.to_string()),
+        }];
     }
-    let Ok(read_half) = stream.try_clone() else {
-        ctx.log.line(&format!("conn {id}: clone failed"));
-        return;
+    let big = match concat_rows(reqs) {
+        Ok(b) => b,
+        Err(e) => return fail_all(reqs, &e.to_string()),
     };
-    let mut reader = BufReader::new(read_half);
-    let mut writer = BufWriter::new(stream);
-    ctx.log.line(&format!("conn {id}: open"));
-    loop {
-        if ctx.shutdown.load(Ordering::Relaxed) {
-            break;
-        }
-        // idle wait, interruptible every IDLE_TICK
-        let op = match read_opcode(&mut reader) {
-            Ok(None) => break, // clean EOF
-            Ok(Some(op)) => op,
-            Err(ref e) if is_timeout(e) => continue,
-            Err(e) => {
-                ctx.log.line(&format!("conn {id}: read error: {e}"));
-                break;
-            }
-        };
-        // a frame is in flight: allow its body generous time, and
-        // greedily batch every further request already buffered
-        let _ = reader.get_ref().set_read_timeout(Some(BODY_TIMEOUT));
-        let mut batch = Vec::new();
-        let mut framing_err: Option<String> = None;
-        match read_request_body(&mut reader, op) {
-            Ok(rq) => batch.push(rq),
-            Err(e) => {
-                ctx.counters.errors.fetch_add(1, Ordering::Relaxed);
-                ctx.log
-                    .line(&format!("conn {id}: malformed frame: {e}"));
-                let rs =
-                    Response::Error(format!("malformed request: {e}"));
-                let _ = write_response(&mut writer, &rs);
-                let _ = writer.flush();
-                break;
-            }
-        }
-        while batch.len() < ctx.max_batch && !reader.buffer().is_empty()
-        {
-            match read_opcode(&mut reader) {
-                Ok(Some(op)) => {
-                    match read_request_body(&mut reader, op) {
-                        Ok(rq) => batch.push(rq),
-                        Err(e) => {
-                            ctx.log.line(&format!(
-                                "conn {id}: malformed frame: {e}"
-                            ));
-                            framing_err = Some(format!(
-                                "malformed request: {e}"
-                            ));
-                            break;
-                        }
-                    }
-                }
-                _ => {
-                    framing_err =
-                        Some("request framing lost".to_string());
-                    break;
-                }
-            }
-        }
-        let _ = reader.get_ref().set_read_timeout(Some(IDLE_TICK));
-        let n_req = batch.len() as u64;
-        // One pool job per batch; responses come back over a channel
-        // so this thread writes them in request order. submit() can
-        // block on the pool's bounded job queue while the mutex is
-        // held — that serializes *submission* across connections
-        // under saturation, but the queue itself is the bottleneck
-        // in that regime either way, and compute keeps draining it.
-        let (tx, rx) = mpsc::channel();
-        {
-            let job_ctx = ctx.clone();
-            let mut guard = ctx.pool.lock().expect("pool poisoned");
-            let Some(pool) = guard.as_mut() else {
-                break; // shutting down
-            };
-            // drop bookkeeping entries of already-completed jobs so
-            // the results queue stays bounded over the server's life
-            pool.discard_ready_results();
-            pool.submit(move || {
-                let _ = tx.send(serve_batch(&job_ctx, batch));
-            });
-        }
-        let Ok(responses) = rx.recv() else {
-            break;
-        };
-        ctx.counters.batches.fetch_add(1, Ordering::Relaxed);
-        ctx.counters.requests.fetch_add(n_req, Ordering::Relaxed);
-        let mut broken = false;
-        for rs in &responses {
-            if write_response(&mut writer, rs).is_err() {
-                broken = true;
-                break;
-            }
-        }
-        if broken || writer.flush().is_err() {
-            ctx.log.line(&format!("conn {id}: write failed"));
-            break;
-        }
-        ctx.log
-            .line(&format!("conn {id}: served batch of {n_req}"));
-        if let Some(msg) = framing_err {
-            // the stream is desynced past this batch: tell the
-            // client why before closing, mirroring the first-frame
-            // malformed path
-            ctx.counters.errors.fetch_add(1, Ordering::Relaxed);
-            let _ = write_response(&mut writer, &Response::Error(msg));
-            let _ = writer.flush();
-            break;
+    match m.predict_proba(&big) {
+        Err(e) => fail_all(reqs, &e.to_string()),
+        Ok(p) => {
+            let mut off = 0;
+            reqs.iter()
+                .map(|r| {
+                    let rows =
+                        r.x.as_ref().expect("kernel x").rows;
+                    let part = p[off..off + rows].to_vec();
+                    off += rows;
+                    Out::Proba(part)
+                })
+                .collect()
         }
     }
-    ctx.log.line(&format!("conn {id}: closed"));
+}
+
+/// Same coalescing for compress; the `(c, k)` result splits by row.
+fn run_compress(m: &FittedModel, reqs: &[PendingReq]) -> Vec<Out> {
+    if reqs.len() == 1 {
+        let x = reqs[0].x.as_ref().expect("kernel verb carries x");
+        return vec![match m.compress(x) {
+            Ok(xk) => Out::Comp(xk),
+            Err(e) => Out::Fail(e.to_string()),
+        }];
+    }
+    let big = match concat_rows(reqs) {
+        Ok(b) => b,
+        Err(e) => return fail_all(reqs, &e.to_string()),
+    };
+    match m.compress(&big) {
+        Err(e) => fail_all(reqs, &e.to_string()),
+        Ok(xk) => {
+            let k = xk.cols;
+            let mut off = 0;
+            reqs.iter()
+                .map(|r| {
+                    let rows =
+                        r.x.as_ref().expect("kernel x").rows;
+                    let part =
+                        xk.data[off * k..(off + rows) * k].to_vec();
+                    off += rows;
+                    match FeatureMatrix::from_vec(rows, k, part) {
+                        Ok(mm) => Out::Comp(mm),
+                        Err(e) => Out::Fail(e.to_string()),
+                    }
+                })
+                .collect()
+        }
+    }
+}
+
+fn concat_rows(reqs: &[PendingReq]) -> Result<FeatureMatrix> {
+    let cols = reqs[0].x.as_ref().expect("kernel x").cols;
+    let total: usize = reqs
+        .iter()
+        .map(|r| r.x.as_ref().expect("kernel x").rows)
+        .sum();
+    let mut data = Vec::with_capacity(total * cols);
+    for r in reqs {
+        data.extend_from_slice(
+            &r.x.as_ref().expect("kernel x").data,
+        );
+    }
+    FeatureMatrix::from_vec(total, cols, data)
+}
+
+fn fail_all(reqs: &[PendingReq], msg: &str) -> Vec<Out> {
+    reqs.iter().map(|_| Out::Fail(msg.to_string())).collect()
+}
+
+fn encode_binary(rs: &Response) -> Vec<u8> {
+    protocol::encode_response(rs).unwrap_or_else(|e| {
+        let fallback =
+            Response::Error(format!("response encoding failed: {e}"));
+        protocol::encode_response(&fallback).unwrap_or_default()
+    })
+}
+
+fn encode_out(rq: &PendingReq, out: Out) -> Vec<u8> {
+    match rq.wire {
+        Wire::Binary => {
+            let rs = match out {
+                Out::Info(s) => Response::Info(s),
+                Out::Proba(p) => Response::Probabilities(p),
+                Out::Comp(x) => Response::Compressed(x),
+                Out::Fail(msg) => Response::Error(msg),
+            };
+            encode_binary(&rs)
+        }
+        Wire::Http { keep_alive } => {
+            let (status, body) = match out {
+                Out::Info(s) => (200, s),
+                Out::Proba(p) => (
+                    200,
+                    Value::obj(vec![(
+                        "proba",
+                        Value::nums(
+                            p.iter().map(|&v| v as f64),
+                        ),
+                    )])
+                    .to_string(),
+                ),
+                Out::Comp(x) => (200, matrix_json(&x)),
+                Out::Fail(msg) => {
+                    (400, http::error_body(&msg))
+                }
+            };
+            http::encode_response(status, &body, keep_alive)
+        }
+    }
+}
+
+/// JSON body of an HTTP compress response. `f32 -> f64 -> shortest
+/// decimal` round-trips exactly, so the JSON path preserves bits.
+fn matrix_json(x: &FeatureMatrix) -> String {
+    let rows: Vec<Value> = (0..x.rows)
+        .map(|r| {
+            Value::nums(
+                x.data[r * x.cols..(r + 1) * x.cols]
+                    .iter()
+                    .map(|&v| v as f64),
+            )
+        })
+        .collect();
+    Value::obj(vec![
+        ("rows", Value::Num(x.rows as f64)),
+        ("cols", Value::Num(x.cols as f64)),
+        ("x", Value::Arr(rows)),
+    ])
+    .to_string()
+}
+
+/// Lazily pull `model` (optional) and `x` (required) out of a
+/// predict/compress POST body without building a JSON tree.
+fn parse_kernel_body(body: &[u8]) -> Result<(String, FeatureMatrix)> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| invalid("request body is not UTF-8"))?;
+    let model =
+        json::scan_str(text, &["model"])?.unwrap_or_default();
+    let Some((rows, cols, data)) =
+        json::scan_f32_matrix(text, &["x"])?
+    else {
+        return Err(invalid(
+            "request body needs an \"x\" matrix",
+        ));
+    };
+    let x = FeatureMatrix::from_vec(rows, cols, data)?;
+    Ok((model, x))
 }
 
 #[cfg(test)]
@@ -587,6 +1451,117 @@ mod tests {
             );
         }
         drop(client);
+        handle.shutdown().unwrap();
+    }
+
+    /// Blocking mini HTTP client: one request, one full response.
+    fn http_call(
+        stream: &mut TcpStream,
+        req: &str,
+    ) -> (u16, String) {
+        stream.write_all(req.as_bytes()).unwrap();
+        let mut head = Vec::new();
+        let mut byte = [0u8; 1];
+        while !head.ends_with(b"\r\n\r\n") {
+            stream.read_exact(&mut byte).unwrap();
+            head.push(byte[0]);
+        }
+        let head = String::from_utf8(head).unwrap();
+        let status: u16 = head
+            .split(' ')
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .expect("status line");
+        let clen: usize = head
+            .lines()
+            .find_map(|l| {
+                let (k, v) = l.split_once(':')?;
+                k.eq_ignore_ascii_case("content-length")
+                    .then(|| v.trim().parse().ok())?
+            })
+            .expect("content-length header");
+        let mut body = vec![0u8; clen];
+        stream.read_exact(&mut body).unwrap();
+        (status, String::from_utf8(body).unwrap())
+    }
+
+    #[test]
+    fn http_gateway_serves_metrics_and_predict() {
+        let (path, model) = saved_model("http");
+        let mut opts = ServeOptions::new(&path);
+        opts.workers = 2;
+        opts.http_port = Some(0);
+        let handle = Server::start(opts).unwrap();
+        let http_addr = handle.http_addr().expect("gateway bound");
+        let mut s = TcpStream::connect(http_addr).unwrap();
+        let (code, body) = http_call(
+            &mut s,
+            "GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n",
+        );
+        assert_eq!(code, 200);
+        let v = crate::json::parse(&body).unwrap();
+        assert!(v.get("accepted").unwrap().as_u64().unwrap() >= 1);
+        // JSON predict must preserve f32 bits end to end
+        let p = model.header.p;
+        let x = FeatureMatrix::from_vec(
+            1,
+            p,
+            (0..p).map(|i| (i % 7) as f32).collect(),
+        )
+        .unwrap();
+        let want = model.predict_proba(&x).unwrap();
+        let row: Vec<String> = x
+            .data
+            .iter()
+            .map(|&v| format!("{}", v as f64))
+            .collect();
+        let body_json = format!("{{\"x\":[[{}]]}}", row.join(","));
+        let req = format!(
+            "POST /v1/predict HTTP/1.1\r\nContent-Length: {}\
+             \r\n\r\n{}",
+            body_json.len(),
+            body_json
+        );
+        let (code, body) = http_call(&mut s, &req);
+        assert_eq!(code, 200, "predict failed: {body}");
+        let v = crate::json::parse(&body).unwrap();
+        let got: Vec<f32> = v
+            .get("proba")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|n| n.as_f64().unwrap() as f32)
+            .collect();
+        assert_eq!(got, want, "HTTP JSON path preserves f32 bits");
+        // unknown route on the same keep-alive connection
+        let (code, _) =
+            http_call(&mut s, "GET /nope HTTP/1.1\r\n\r\n");
+        assert_eq!(code, 404);
+        drop(s);
+        handle.shutdown().unwrap();
+    }
+
+    #[test]
+    fn connection_budget_sheds_explicitly() {
+        let (path, _) = saved_model("shed");
+        let mut opts = ServeOptions::new(&path);
+        opts.workers = 1;
+        opts.max_connections = 1;
+        let handle = Server::start(opts).unwrap();
+        let mut first = ServeClient::connect(handle.addr()).unwrap();
+        first.model_info().unwrap(); // guarantees admission landed
+        let mut second =
+            ServeClient::connect(handle.addr()).unwrap();
+        let err = second.model_info().unwrap_err();
+        assert!(
+            err.to_string().contains("capacity"),
+            "expected an explicit shed, got: {err}"
+        );
+        let m = handle.metrics_json();
+        assert_eq!(m.get("shed").unwrap().as_u64().unwrap(), 1);
+        drop(first);
+        drop(second);
         handle.shutdown().unwrap();
     }
 }

@@ -1,13 +1,17 @@
 //! Fuzz smoke for the wire protocol (ADR-004 frames + the ADR-006
-//! ASSIGN/PARTIAL/ACK/RETRY extension): every decoder entry point
-//! must survive truncation, bit-flips, garbage and hostile length
-//! claims with a clean `Err` (or `Ok(None)` at EOF) — never a panic,
-//! hang or unbounded allocation. Hand-rolled sweeps over the crate's
-//! own seeded [`Rng`]; failures print the seed / offset for replay.
+//! ASSIGN/PARTIAL/ACK/RETRY extension + the ADR-007 HTTP head
+//! parser and lazy JSON scanners): every decoder entry point must
+//! survive truncation, bit-flips, garbage and hostile length claims
+//! with a clean `Err` (or `Ok(None)` / `Incomplete` / `Bad`) — never
+//! a panic, hang or unbounded allocation. Hand-rolled sweeps over
+//! the crate's own seeded [`Rng`]; failures print the seed / offset
+//! for replay.
 
 use std::io::Cursor;
 
+use fastclust::json::{self, Value};
 use fastclust::rng::Rng;
+use fastclust::serve::http::{self, Parse};
 use fastclust::serve::protocol::{
     read_dist_frame, read_request, read_response, write_dist_frame,
     write_request, write_response, DistFrame, Request, Response,
@@ -66,6 +70,7 @@ fn valid_serve_frames() -> Vec<Vec<u8>> {
         Response::Probabilities(vec![0.25, 0.5]),
         Response::Compressed(x),
         Response::Error("nope".into()),
+        Response::Shed("server at connection capacity".into()),
     ] {
         let mut buf = Vec::new();
         write_response(&mut buf, &rs).unwrap();
@@ -164,6 +169,280 @@ fn fuzz_oversized_length_claims() {
             );
         }
     }
+}
+
+// ------------------------------------------------ HTTP head parser
+
+/// Representative valid requests for the gateway's supported subset.
+fn valid_http_requests() -> Vec<Vec<u8>> {
+    let body = "{\"x\":[[1,2,3]]}";
+    vec![
+        b"GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n".to_vec(),
+        format!(
+            "POST /v1/predict HTTP/1.1\r\nContent-Length: {}\r\n\
+             \r\n{}",
+            body.len(),
+            body
+        )
+        .into_bytes(),
+        b"GET /v1/models HTTP/1.0\r\nConnection: keep-alive\r\n\r\n"
+            .to_vec(),
+        format!(
+            "POST /v1/compress HTTP/1.1\r\nConnection: close\r\n\
+             Content-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        )
+        .into_bytes(),
+    ]
+}
+
+/// Every strict prefix of a valid request is `Incomplete` (or at
+/// worst `Bad`), never `Ok` and never a panic; the full buffer
+/// parses `Ok` and reports `consumed == len`.
+#[test]
+fn http_fuzz_truncation_sweep() {
+    for (i, req) in valid_http_requests().into_iter().enumerate() {
+        for cut in 0..req.len() {
+            match http::parse_request(&req[..cut]) {
+                Parse::Ok(r) => panic!(
+                    "request {i} cut {cut}: accepted a strict \
+                     prefix as {r:?}"
+                ),
+                Parse::Incomplete | Parse::Bad { .. } => {}
+            }
+        }
+        match http::parse_request(&req) {
+            Parse::Ok(r) => {
+                assert_eq!(
+                    r.consumed,
+                    req.len(),
+                    "request {i}: wrong drain length"
+                );
+                assert!(r.path.starts_with('/'));
+            }
+            other => {
+                panic!("request {i}: valid request got {other:?}")
+            }
+        }
+    }
+}
+
+/// Two pipelined requests in one buffer: parse, drain `consumed`,
+/// parse again — both must come out whole and in order.
+#[test]
+fn http_fuzz_pipelined_requests() {
+    let reqs = valid_http_requests();
+    let mut buf = reqs[0].clone();
+    buf.extend_from_slice(&reqs[1]);
+    let first = match http::parse_request(&buf) {
+        Parse::Ok(r) => r,
+        other => panic!("first request: {other:?}"),
+    };
+    assert_eq!(first.path, "/metrics");
+    match http::parse_request(&buf[first.consumed..]) {
+        Parse::Ok(r) => {
+            assert_eq!(r.path, "/v1/predict");
+            assert_eq!(r.body, b"{\"x\":[[1,2,3]]}");
+        }
+        other => panic!("second request: {other:?}"),
+    }
+}
+
+/// Hostile heads must be rejected with the documented statuses —
+/// before any body buffering — and garbage must never panic.
+#[test]
+fn http_fuzz_hostile_heads() {
+    let expect_bad = |req: &str, want: u16| {
+        match http::parse_request(req.as_bytes()) {
+            Parse::Bad { status, .. } => assert_eq!(
+                status, want,
+                "wrong status for {req:?}"
+            ),
+            other => panic!("{req:?}: expected Bad, got {other:?}"),
+        }
+    };
+    // Content-Length over the 64 MiB cap → 413 with no buffering
+    expect_bad(
+        "POST /v1/predict HTTP/1.1\r\n\
+         Content-Length: 999999999999\r\n\r\n",
+        413,
+    );
+    expect_bad(
+        "POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n",
+        400,
+    );
+    expect_bad(
+        "POST / HTTP/1.1\r\nContent-Length: 4\r\n\
+         Content-Length: 5\r\n\r\nabcde",
+        400,
+    );
+    expect_bad(
+        "POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+        501,
+    );
+    expect_bad("GET / HTTP/2\r\n\r\n", 400);
+    expect_bad("GET\r\n\r\n", 400);
+    expect_bad("GET nothing HTTP/1.1\r\n\r\n", 400);
+    expect_bad("GET / HTTP/1.1\r\nno-colon-here\r\n\r\n", 400);
+    // oversized head without a terminator → 431
+    let huge = format!(
+        "GET / HTTP/1.1\r\nX-Pad: {}\r\n",
+        "a".repeat(http::MAX_HEAD_BYTES)
+    );
+    expect_bad(&huge, 431);
+    // non-UTF-8 head bytes → 400
+    let mut bad = b"GET /\xFF\xFE HTTP/1.1\r\n\r\n".to_vec();
+    match http::parse_request(&bad) {
+        Parse::Bad { status, .. } => assert_eq!(status, 400),
+        other => panic!("non-UTF-8 head: {other:?}"),
+    }
+    // seeded garbage of many lengths: any outcome but a panic
+    let mut rng = Rng::new(0xC0FFEE);
+    for _ in 0..60 {
+        bad.clear();
+        let len = rng.below(400);
+        bad.extend((0..len).map(|_| rng.below(256) as u8));
+        let _ = http::parse_request(&bad);
+        // and the same bytes behind a plausible request line
+        let mut framed = b"POST /v1/predict HTTP/1.1\r\n".to_vec();
+        framed.extend_from_slice(&bad);
+        let _ = http::parse_request(&framed);
+    }
+}
+
+// -------------------------------------------- lazy JSON scanners
+
+/// Deterministically grow a random JSON document and remember every
+/// leaf path; used to cross-check the lazy scanners below.
+fn gen_value(rng: &mut Rng, depth: usize) -> Value {
+    let pick =
+        if depth >= 3 { rng.below(4) } else { rng.below(6) };
+    match pick {
+        0 => Value::Null,
+        1 => Value::Bool(rng.below(2) == 1),
+        // quarters are exact in f64 and survive the shortest
+        // round-trip printer unchanged
+        2 => Value::Num(rng.below(4000) as f64 / 4.0 - 500.0),
+        3 => Value::Str(match rng.below(3) {
+            0 => format!("plain{}", rng.below(100)),
+            1 => "esc \"quote\" \\slash\\ \n tab\t".to_string(),
+            _ => "unicode: λ→∎ ünïcode".to_string(),
+        }),
+        4 => Value::Arr(
+            (0..rng.below(3))
+                .map(|_| gen_value(rng, depth + 1))
+                .collect(),
+        ),
+        _ => Value::Obj(
+            (0..1 + rng.below(3))
+                .map(|i| {
+                    (format!("k{i}"), gen_value(rng, depth + 1))
+                })
+                .collect(),
+        ),
+    }
+}
+
+/// Collect `(path, leaf)` pairs for every object-reachable node.
+fn walk<'a>(
+    v: &'a Value,
+    prefix: &mut Vec<&'a str>,
+    out: &mut Vec<(Vec<String>, &'a Value)>,
+) {
+    out.push((
+        prefix.iter().map(|s| s.to_string()).collect(),
+        v,
+    ));
+    if let Value::Obj(pairs) = v {
+        for (k, child) in pairs {
+            prefix.push(k);
+            walk(child, prefix, out);
+            prefix.pop();
+        }
+    }
+}
+
+/// Property sweep: on seeded random documents (compact and pretty),
+/// `scan_path` + the typed wrappers agree exactly with the tree
+/// parser at every object path.
+#[test]
+fn json_fuzz_scanners_agree_with_parser() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed ^ 0x1A2B);
+        let doc = Value::Obj(
+            (0..2 + rng.below(3))
+                .map(|i| {
+                    (format!("k{i}"), gen_value(&mut rng, 1))
+                })
+                .collect(),
+        );
+        let mut sites = Vec::new();
+        walk(&doc, &mut Vec::new(), &mut sites);
+        for text in [doc.to_string(), doc.to_string_pretty()] {
+            for (path, want) in &sites {
+                let steps: Vec<&str> =
+                    path.iter().map(|s| s.as_str()).collect();
+                let raw = json::scan_path(&text, &steps)
+                    .unwrap()
+                    .unwrap_or_else(|| {
+                        panic!("seed {seed}: lost path {path:?}")
+                    });
+                let got = json::parse(raw).unwrap();
+                assert_eq!(
+                    &got, *want,
+                    "seed {seed} path {path:?}: scanner slice \
+                     disagrees with the tree parser"
+                );
+                match want {
+                    Value::Str(s) => assert_eq!(
+                        json::scan_str(&text, &steps)
+                            .unwrap()
+                            .as_deref(),
+                        Some(s.as_str())
+                    ),
+                    Value::Num(n) => assert_eq!(
+                        json::scan_f64(&text, &steps).unwrap(),
+                        Some(*n)
+                    ),
+                    _ => {}
+                }
+            }
+            // absent keys are None, not an error
+            assert_eq!(
+                json::scan_path(&text, &["k0", "no_such_key_zz"])
+                    .ok()
+                    .flatten(),
+                None
+            );
+        }
+    }
+}
+
+/// The scanners never panic on garbage: truncations of a valid
+/// document and pure seeded noise both come back as `Err`/`None`.
+#[test]
+fn json_fuzz_scanners_survive_garbage() {
+    let doc = "{\"a\":{\"b\":[1,2,{\"c\":\"d\"}],\"e\":1.5}}";
+    for cut in 0..doc.len() {
+        let _ = json::scan_path(&doc[..cut], &["a", "b"]);
+        let _ = json::scan_str(&doc[..cut], &["a"]);
+        let _ = json::scan_f64(&doc[..cut], &["a", "e"]);
+        let _ = json::scan_f32_matrix(&doc[..cut], &["a"]);
+    }
+    let mut rng = Rng::new(0xDEAD);
+    for _ in 0..60 {
+        let len = rng.below(300);
+        let noise: Vec<u8> = (0..len)
+            .map(|_| (32 + rng.below(95)) as u8)
+            .collect();
+        let text = String::from_utf8(noise).unwrap();
+        let _ = json::scan_path(&text, &["x"]);
+        let _ = json::scan_f32_matrix(&text, &["x"]);
+    }
+    // deep nesting is a bounded error for scanners too
+    let deep = "{\"x\":".repeat(4_000) + "1";
+    assert!(json::scan_path(&deep, &["x", "x", "x"]).is_err());
 }
 
 /// Concatenated valid frames with garbage between them: the dist

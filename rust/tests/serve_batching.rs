@@ -1,0 +1,387 @@
+//! Integration suite for the ADR-007 serve front-end: concurrent
+//! clients over the binary protocol and the HTTP/JSON gateway must
+//! get responses bit-identical to the offline apply-only path while
+//! cross-connection micro-batching is coalescing their requests; the
+//! connection budget must shed explicitly on both wires; and
+//! `GET /metrics` must serve valid JSON that reflects the traffic.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use fastclust::config::{
+    DataConfig, EstimatorConfig, Method, ReduceConfig,
+};
+use fastclust::model::{
+    fit_model, load_model, save_model, FitOptions, FittedModel,
+};
+use fastclust::serve::{
+    Request, Response, ServeClient, ServeOptions, Server,
+};
+use fastclust::volume::{FeatureMatrix, MorphometryGenerator};
+
+const N_CLIENTS: usize = 8;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_TARGET_TMPDIR"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Fit + persist a small model; returns (path, loaded model, cohort
+/// sample-major features) — the offline truth every served response
+/// must reproduce bit-for-bit.
+fn fixture(
+    tag: &str,
+) -> (PathBuf, Arc<FittedModel>, Arc<FeatureMatrix>) {
+    let dc = DataConfig {
+        dims: [8, 9, 7],
+        n_samples: 24,
+        seed: 11,
+        ..Default::default()
+    };
+    let (ds, y) = MorphometryGenerator::new(dc.dims)
+        .generate(dc.n_samples, dc.seed);
+    let reduce = ReduceConfig {
+        method: Method::Fast,
+        ratio: 10,
+        ..Default::default()
+    };
+    let est = EstimatorConfig {
+        cv_folds: 3,
+        max_iter: 60,
+        ..Default::default()
+    };
+    let model =
+        fit_model(&ds, &y, &reduce, &est, &dc, &FitOptions::default())
+            .unwrap();
+    let path = tmp(&format!("serve_batching_{tag}.fcm"));
+    save_model(&path, &model).unwrap();
+    let loaded = Arc::new(load_model(&path).unwrap());
+    let xs = Arc::new(ds.data().transpose());
+    (path, loaded, xs)
+}
+
+/// A distinct `(2, p)` block per client, strided over the cohort.
+fn client_block(xs: &FeatureMatrix, c: usize) -> FeatureMatrix {
+    let rows: Vec<usize> =
+        (0..2).map(|i| (c + i * N_CLIENTS) % xs.rows).collect();
+    xs.select_rows(&rows)
+}
+
+#[test]
+fn batched_concurrent_clients_match_offline_bits() {
+    let (path, model, xs) = fixture("bin");
+    let mut opts = ServeOptions::new(&path);
+    opts.workers = 4;
+    opts.max_batch = 4; // force multi-batch splits under pipelining
+    opts.batch_window_us = 2_000;
+    opts.log_path = Some(tmp("serve_batching_bin.log"));
+    let handle = Server::start(opts).unwrap();
+    let addr = handle.addr();
+
+    std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for c in 0..N_CLIENTS {
+            let model = model.clone();
+            let xs = xs.clone();
+            joins.push(scope.spawn(move || {
+                let block = client_block(&xs, c);
+                let want_p = model.predict_proba(&block).unwrap();
+                let want_x = model.compress(&block).unwrap();
+                let mut client =
+                    ServeClient::connect(addr).unwrap();
+                // sequential rounds overlap with the other clients,
+                // so the batcher coalesces across connections
+                for round in 0..4 {
+                    assert_eq!(
+                        client.predict(&block).unwrap(),
+                        want_p,
+                        "client {c} round {round}: batched predict \
+                         != offline bits"
+                    );
+                    assert_eq!(
+                        client.compress(&block).unwrap().data,
+                        want_x.data,
+                        "client {c} round {round}: batched \
+                         compress != offline bits"
+                    );
+                }
+                // pipelined burst larger than max_batch: responses
+                // must come back in order across batch boundaries
+                let rqs: Vec<Request> = (0..9)
+                    .map(|_| Request::Predict {
+                        model: String::new(),
+                        x: block.clone(),
+                    })
+                    .collect();
+                for rs in client.call_pipelined(&rqs).unwrap() {
+                    match rs {
+                        Response::Probabilities(p) => {
+                            assert_eq!(
+                                p, want_p,
+                                "client {c}: pipelined response \
+                                 drifted across a batch boundary"
+                            )
+                        }
+                        other => panic!("client {c}: {other:?}"),
+                    }
+                }
+            }));
+        }
+        for j in joins {
+            j.join().expect("client thread panicked");
+        }
+    });
+
+    let stats = handle.shutdown().unwrap();
+    assert_eq!(stats.connections, N_CLIENTS as u64);
+    // per client: 4×(predict+compress) + 9 pipelined = 17
+    assert_eq!(stats.requests, (N_CLIENTS * 17) as u64);
+    assert_eq!(stats.errors, 0);
+    assert!(
+        stats.batches <= stats.requests,
+        "batches cannot exceed requests"
+    );
+}
+
+/// Blocking HTTP/1.1 exchange on a persistent connection.
+fn http_exchange(
+    writer: &mut TcpStream,
+    reader: &mut impl BufRead,
+    req: &str,
+) -> (u16, String) {
+    writer.write_all(req.as_bytes()).unwrap();
+    let mut head = String::new();
+    loop {
+        let mut line = String::new();
+        assert!(
+            reader.read_line(&mut line).unwrap() > 0,
+            "connection closed mid-response"
+        );
+        if line == "\r\n" {
+            break;
+        }
+        head.push_str(&line);
+    }
+    let status: u16 = head
+        .lines()
+        .next()
+        .and_then(|l| l.split(' ').nth(1))
+        .and_then(|s| s.parse().ok())
+        .expect("status line");
+    let clen: usize = head
+        .lines()
+        .find_map(|l| {
+            let (k, v) = l.split_once(':')?;
+            k.eq_ignore_ascii_case("content-length")
+                .then(|| v.trim().parse().ok())?
+        })
+        .expect("content-length");
+    let mut body = vec![0u8; clen];
+    reader.read_exact(&mut body).unwrap();
+    (status, String::from_utf8(body).unwrap())
+}
+
+fn predict_body(x: &FeatureMatrix) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::from("{\"x\":[");
+    for r in 0..x.rows {
+        if r > 0 {
+            out.push(',');
+        }
+        out.push('[');
+        for c in 0..x.cols {
+            if c > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "{}", x.data[r * x.cols + c] as f64);
+        }
+        out.push(']');
+    }
+    out.push_str("]}");
+    out
+}
+
+#[test]
+fn http_gateway_concurrent_clients_match_offline_bits() {
+    let (path, model, xs) = fixture("http");
+    let mut opts = ServeOptions::new(&path);
+    opts.workers = 4;
+    opts.http_port = Some(0);
+    opts.log_path = Some(tmp("serve_batching_http.log"));
+    let handle = Server::start(opts).unwrap();
+    let http_addr = handle.http_addr().expect("gateway bound");
+
+    std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for c in 0..N_CLIENTS {
+            let model = model.clone();
+            let xs = xs.clone();
+            joins.push(scope.spawn(move || {
+                let block = client_block(&xs, c);
+                let want = model.predict_proba(&block).unwrap();
+                let mut writer =
+                    TcpStream::connect(http_addr).unwrap();
+                writer.set_nodelay(true).unwrap();
+                let mut reader =
+                    BufReader::new(writer.try_clone().unwrap());
+                // model info route first
+                let (code, body) = http_exchange(
+                    &mut writer,
+                    &mut reader,
+                    "GET /v1/models HTTP/1.1\r\nHost: t\r\n\r\n",
+                );
+                assert_eq!(code, 200, "client {c}: info failed");
+                let info = fastclust::json::parse(&body).unwrap();
+                assert_eq!(
+                    info.get("k").unwrap().as_usize().unwrap(),
+                    model.header.k
+                );
+                // keep-alive predict rounds, bit-compared
+                let body_json = predict_body(&block);
+                let req = format!(
+                    "POST /v1/predict HTTP/1.1\r\n\
+                     Content-Length: {}\r\n\r\n{}",
+                    body_json.len(),
+                    body_json
+                );
+                for round in 0..4 {
+                    let (code, body) = http_exchange(
+                        &mut writer,
+                        &mut reader,
+                        &req,
+                    );
+                    assert_eq!(
+                        code, 200,
+                        "client {c} round {round}: {body}"
+                    );
+                    let v =
+                        fastclust::json::parse(&body).unwrap();
+                    let got: Vec<f32> = v
+                        .get("proba")
+                        .unwrap()
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|n| n.as_f64().unwrap() as f32)
+                        .collect();
+                    assert_eq!(
+                        got, want,
+                        "client {c} round {round}: HTTP JSON path \
+                         lost f32 bits"
+                    );
+                }
+            }));
+        }
+        for j in joins {
+            j.join().expect("http client thread panicked");
+        }
+    });
+
+    let stats = handle.shutdown().unwrap();
+    assert_eq!(stats.connections, N_CLIENTS as u64);
+    assert_eq!(stats.requests, (N_CLIENTS * 5) as u64);
+    assert_eq!(stats.errors, 0);
+}
+
+#[test]
+fn connection_budget_sheds_on_both_wires() {
+    let (path, _, _) = fixture("shed");
+    let mut opts = ServeOptions::new(&path);
+    opts.workers = 1;
+    opts.max_connections = 2;
+    opts.http_port = Some(0);
+    opts.log_path = Some(tmp("serve_batching_shed.log"));
+    let handle = Server::start(opts).unwrap();
+    let addr = handle.addr();
+    let http_addr = handle.http_addr().unwrap();
+
+    // fill the budget and prove both slots are live
+    let mut a = ServeClient::connect(addr).unwrap();
+    a.model_info().unwrap();
+    let mut b = ServeClient::connect(addr).unwrap();
+    b.model_info().unwrap();
+
+    // binary wire: explicit shed frame, surfaced as a client error
+    let mut c = ServeClient::connect(addr).unwrap();
+    let err = c.model_info().unwrap_err().to_string();
+    assert!(
+        err.contains("capacity"),
+        "expected an explicit shed, got: {err}"
+    );
+
+    // http wire: 429 with a JSON error body, then close
+    let mut s = TcpStream::connect(http_addr).unwrap();
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).unwrap();
+    let text = String::from_utf8(raw).unwrap();
+    assert!(
+        text.starts_with("HTTP/1.1 429 "),
+        "expected 429, got: {text}"
+    );
+    assert!(text.contains("capacity"), "429 body names the cause");
+
+    let m = handle.metrics_json();
+    assert_eq!(m.get("shed").unwrap().as_u64().unwrap(), 2);
+    assert_eq!(m.get("accepted").unwrap().as_u64().unwrap(), 4);
+
+    // shedding freed nothing that was admitted: both live clients
+    // still work
+    a.model_info().unwrap();
+    b.model_info().unwrap();
+    drop((a, b));
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn metrics_endpoint_reflects_traffic() {
+    let (path, model, xs) = fixture("metrics");
+    let mut opts = ServeOptions::new(&path);
+    opts.workers = 2;
+    opts.http_port = Some(0);
+    let handle = Server::start(opts).unwrap();
+    let addr = handle.addr();
+    let http_addr = handle.http_addr().unwrap();
+
+    let block = client_block(&xs, 0);
+    let want = model.predict_proba(&block).unwrap();
+    let mut client = ServeClient::connect(addr).unwrap();
+    for _ in 0..5 {
+        assert_eq!(client.predict(&block).unwrap(), want);
+    }
+    drop(client);
+
+    let mut writer = TcpStream::connect(http_addr).unwrap();
+    let mut reader =
+        BufReader::new(writer.try_clone().unwrap());
+    let (code, body) = http_exchange(
+        &mut writer,
+        &mut reader,
+        "GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n",
+    );
+    assert_eq!(code, 200);
+    let v = fastclust::json::parse(&body).unwrap();
+    assert!(v.get("accepted").unwrap().as_u64().unwrap() >= 2);
+    assert!(v.get("requests").unwrap().as_u64().unwrap() >= 5);
+    assert_eq!(v.get("errors").unwrap().as_u64().unwrap(), 0);
+    assert!(
+        v.get("latency_us_p99").unwrap().as_u64().is_some(),
+        "latency quantiles present"
+    );
+    // the default model shows up in the per-model attribution
+    assert!(
+        v.get("models").unwrap().get("<default>").is_some(),
+        "metrics body: {body}"
+    );
+    // unknown route still errors politely on the same connection
+    let (code, _) = http_exchange(
+        &mut writer,
+        &mut reader,
+        "GET /nope HTTP/1.1\r\nHost: t\r\n\r\n",
+    );
+    assert_eq!(code, 404);
+    drop((writer, reader));
+    handle.shutdown().unwrap();
+}
