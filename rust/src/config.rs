@@ -217,8 +217,10 @@ pub struct ServeSettings {
     pub http_port: Option<u16>,
     /// Worker threads (`0` = available parallelism).
     pub workers: usize,
-    /// Resident models in the LRU cache.
-    pub cache_capacity: usize,
+    /// Resident-byte budget of the model registry (ADR-008): LRU
+    /// models evict once their *measured* resident bytes (lazy
+    /// mapped models cost O(touched sections)) exceed it.
+    pub max_model_bytes: u64,
     /// Cross-connection batch bound (requests per pool job).
     pub max_batch: usize,
     /// Connection budget; accepts past it are explicitly shed.
@@ -233,7 +235,7 @@ impl Default for ServeSettings {
             port: 0,
             http_port: None,
             workers: 0,
-            cache_capacity: 4,
+            max_model_bytes: 1 << 30,
             max_batch: 64,
             max_connections: 256,
             batch_window_us: 200,
@@ -473,10 +475,10 @@ impl ServeSettings {
             port: port as u16,
             http_port,
             workers: get_usize(v, "workers", d.workers)?,
-            cache_capacity: get_usize(
+            max_model_bytes: get_u64(
                 v,
-                "cache_capacity",
-                d.cache_capacity,
+                "max_model_bytes",
+                d.max_model_bytes,
             )?,
             max_batch: get_usize(v, "max_batch", d.max_batch)?,
             max_connections: get_usize(
@@ -504,7 +506,10 @@ impl ServeSettings {
                 },
             ),
             ("workers", Value::Num(self.workers as f64)),
-            ("cache_capacity", Value::Num(self.cache_capacity as f64)),
+            (
+                "max_model_bytes",
+                Value::Num(self.max_model_bytes as f64),
+            ),
             ("max_batch", Value::Num(self.max_batch as f64)),
             (
                 "max_connections",
@@ -622,8 +627,8 @@ impl ExperimentConfig {
                  holds the full matrix in core)",
             ));
         }
-        if self.serve.cache_capacity == 0 {
-            return Err(invalid("serve cache_capacity must be >= 1"));
+        if self.serve.max_model_bytes == 0 {
+            return Err(invalid("serve max_model_bytes must be >= 1"));
         }
         if self.serve.max_batch == 0 {
             return Err(invalid("serve max_batch must be >= 1"));
@@ -700,7 +705,7 @@ mod tests {
     #[test]
     fn serve_settings_roundtrip_and_validate() {
         let text = r#"{"serve": {"port": 7777, "workers": 3,
-                       "cache_capacity": 2, "max_batch": 16,
+                       "max_model_bytes": 4194304, "max_batch": 16,
                        "http_port": 8080, "max_connections": 32,
                        "batch_window_us": 500}}"#;
         let cfg =
@@ -708,7 +713,7 @@ mod tests {
                 .unwrap();
         assert_eq!(cfg.serve.port, 7777);
         assert_eq!(cfg.serve.workers, 3);
-        assert_eq!(cfg.serve.cache_capacity, 2);
+        assert_eq!(cfg.serve.max_model_bytes, 4194304);
         assert_eq!(cfg.serve.max_batch, 16);
         assert_eq!(cfg.serve.http_port, Some(8080));
         assert_eq!(cfg.serve.max_connections, 32);
@@ -725,7 +730,7 @@ mod tests {
             &json::parse("{}").unwrap(),
         )
         .unwrap();
-        assert_eq!(none.serve.cache_capacity, 4);
+        assert_eq!(none.serve.max_model_bytes, 1 << 30);
         assert_eq!(none.serve.http_port, None);
         assert_eq!(none.serve.max_connections, 256);
         assert_eq!(none.serve.batch_window_us, 200);
@@ -742,7 +747,7 @@ mod tests {
         .unwrap();
         assert_eq!(off_back.serve.http_port, None);
         for bad in [
-            r#"{"serve": {"cache_capacity": 0}}"#,
+            r#"{"serve": {"max_model_bytes": 0}}"#,
             r#"{"serve": {"max_batch": 0}}"#,
             r#"{"serve": {"port": 70000}}"#,
             r#"{"serve": {"http_port": 70000}}"#,

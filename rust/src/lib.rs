@@ -71,6 +71,22 @@
 //! copy (CLI: `repro fit --save` / `repro predict --model` /
 //! `repro serve --model --port --workers`).
 //!
+//! ## Zero-copy model fleet (ADR-008)
+//!
+//! [`model::open_model`] maps a `.fcm` instead of decoding it: a raw
+//! `mmap(2)` [`model::mmap::SectionMap`] (owned-read fallback off
+//! unix)
+//! under a [`model::MappedModel`] whose sections are bounds-checked
+//! eagerly but CRC-validated and decoded only on first touch — cold
+//! opens and `repro model-info` are O(header) regardless of artifact
+//! size, and every apply path is bit-identical to [`model::load_model`]
+//! by shared-helper construction. The serve layer holds a fleet of
+//! these behind [`serve::ModelRegistry`]: resident-**byte** LRU
+//! eviction (`repro serve --max-model-bytes`), stat-stamp +
+//! section-fingerprint hot reload with atomic `Arc` swap under live
+//! traffic (deploys must rename-replace, never truncate), and
+//! per-model residency/hit/reload stats on `GET /metrics`.
+//!
 //! ## Serve front-end (ADR-007)
 //!
 //! The server itself is a readiness-driven event loop
@@ -148,7 +164,8 @@ pub mod prelude {
     pub use crate::graph::LatticeGraph;
     pub use crate::linalg::Mat;
     pub use crate::model::{
-        fit_model, load_model, save_model, FitOptions, FittedModel,
+        fit_model, load_model, open_model, save_model, FitOptions,
+        FittedModel, MappedModel,
     };
     pub use crate::reduce::{
         ClusterReduce, Reducer, SparseRandomProjection, StreamingReducer,

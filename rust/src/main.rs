@@ -30,11 +30,15 @@
 //!                                   #   flags exist for tests/CI)
 //! repro predict --model model.fcm   # apply-only re-score of the
 //!                                   #   persisted folds (no refit)
+//! repro model-info --model m.fcm    # O(header) artifact probe via
+//!   [--deep]                        #   the mapped loader (ADR-008);
+//!                                   #   --deep checksums everything
 //! repro serve --model model.fcm     # long-lived loopback decode
 //!   [--port P] [--workers W]        #   server: compress / predict /
-//!   [--cache N] [--max-batch B]     #   model-info over TCP, with
-//!   [--http-port P] [--max-conns N] #   cross-connection batching,
-//!   [--batch-window-us U]           #   load shedding and an
+//!   [--max-model-bytes N]           #   model-info over TCP, with
+//!   [--max-batch B]                 #   cross-connection batching,
+//!   [--http-port P] [--max-conns N] #   load shedding, a resident-
+//!   [--batch-window-us U]           #   byte model registry and an
 //!   [--log PATH] [--config cfg.json]#   HTTP/JSON gateway (ADR-007)
 //! repro bench-serve [--quick]       # serve front-end bench: batched
 //!   [--json PATH]                   #   vs per-request vs HTTP
@@ -76,7 +80,9 @@ use fastclust::coordinator::{
 };
 use fastclust::error::{invalid, Result};
 use fastclust::graph::LatticeGraph;
-use fastclust::model::{fit_model, load_model, save_model, FitOptions};
+use fastclust::model::{
+    fit_model, load_model, open_model, save_model, FitOptions,
+};
 use fastclust::runtime::Runtime;
 use fastclust::serve::{ServeOptions, Server};
 use fastclust::volume::{
@@ -135,6 +141,19 @@ impl Cli {
     /// A present-yet-unparseable numeric flag is an error, never a
     /// silent fallback — a typo must not quietly change behavior.
     fn usize_flag_strict(&self, name: &str) -> Result<Option<usize>> {
+        match self.flags.get(name) {
+            None => Ok(None),
+            Some(s) => s.parse().map(Some).map_err(|_| {
+                invalid(format!(
+                    "--{name} needs a non-negative integer, got '{s}'"
+                ))
+            }),
+        }
+    }
+
+    /// Same strictness for byte-count flags that can exceed usize on
+    /// 32-bit targets (e.g. `--max-model-bytes`).
+    fn u64_flag_strict(&self, name: &str) -> Result<Option<u64>> {
         match self.flags.get(name) {
             None => Ok(None),
             Some(s) => s.parse().map(Some).map_err(|_| {
@@ -641,6 +660,56 @@ fn predict_cmd(cli: &Cli) -> Result<()> {
     }
 }
 
+/// `repro model-info --model model.fcm`: probe a persisted artifact
+/// through the mapped loader (ADR-008). Decodes the HEAD section
+/// only — payload bytes of MASK/REDU/FOLD stay unvalidated on disk,
+/// so this is O(header) regardless of artifact size. `--deep` opts
+/// into a full checksum sweep of every section.
+fn model_info_cmd(cli: &Cli) -> Result<()> {
+    let path = cli
+        .flags
+        .get("model")
+        .ok_or_else(|| invalid("model-info needs --model PATH"))?;
+    let model = open_model(&PathBuf::from(path))?;
+    let h = model.header();
+    println!(
+        "model: method={} p={} k={} ({} folds, {} backend, {})",
+        h.method.name(),
+        h.p,
+        h.k,
+        h.cv_folds,
+        if h.sgd_epochs > 0 { "sgd" } else { "batch" },
+        if model.is_mapped() { "mmap" } else { "owned" },
+    );
+    println!(
+        "data: dims={:?} n={} fwhm={} noise={} seed={}",
+        h.data_dims,
+        h.data_n_samples,
+        h.data_fwhm,
+        h.data_noise_sigma,
+        h.data_seed
+    );
+    if !h.note.is_empty() {
+        println!("note: {}", h.note);
+    }
+    if cli.flags.contains_key("deep") {
+        model.validate_all_sections()?;
+    }
+    println!("sections:");
+    for (tag, len, validated) in model.sections() {
+        println!(
+            "  {tag:<4} {len:>12} bytes  {}",
+            if validated { "checked" } else { "unvalidated" }
+        );
+    }
+    println!(
+        "file {} bytes, {} payload bytes validated",
+        model.file_len(),
+        model.validated_payload_bytes()
+    );
+    Ok(())
+}
+
 /// `repro serve --model model.fcm`: run the loopback decode server in
 /// the foreground until the process is signalled.
 fn serve_cmd(cli: &Cli) -> Result<()> {
@@ -661,9 +730,9 @@ fn serve_cmd(cli: &Cli) -> Result<()> {
     opts.workers = cli
         .usize_flag_strict("workers")?
         .unwrap_or(cfg.serve.workers);
-    opts.cache_capacity = cli
-        .usize_flag_strict("cache")?
-        .unwrap_or(cfg.serve.cache_capacity);
+    opts.max_model_bytes = cli
+        .u64_flag_strict("max-model-bytes")?
+        .unwrap_or(cfg.serve.max_model_bytes);
     opts.max_batch = cli
         .usize_flag_strict("max-batch")?
         .unwrap_or(cfg.serve.max_batch);
@@ -686,8 +755,8 @@ fn serve_cmd(cli: &Cli) -> Result<()> {
         .map(|v| v as u64)
         .unwrap_or(cfg.serve.batch_window_us);
     // CLI overrides obey the same invariants as the config file
-    if opts.cache_capacity == 0 {
-        return Err(invalid("--cache must be >= 1"));
+    if opts.max_model_bytes == 0 {
+        return Err(invalid("--max-model-bytes must be >= 1"));
     }
     if opts.max_batch == 0 {
         return Err(invalid("--max-batch must be >= 1"));
@@ -963,6 +1032,7 @@ fn dispatch(cli: &Cli) -> Result<()> {
         "fit-distributed" => fit_distributed_cmd(cli),
         "worker" => worker_cmd(cli),
         "predict" => predict_cmd(cli),
+        "model-info" => model_info_cmd(cli),
         "serve" => serve_cmd(cli),
         "bench-serve" => bench_serve_cmd(cli),
         "bench-streaming" => bench_streaming_cmd(cli),
@@ -981,13 +1051,13 @@ fn dispatch(cli: &Cli) -> Result<()> {
 }
 
 const USAGE: &str = "usage: repro <fig1..fig7|all|sharded|decode|fit|\
-fit-distributed|worker|predict|serve|bench-serve|bench-streaming|\
-bench-sharded|bench-kernels|bench-distributed|bench-check|\
-bench-promote|runtime-check> \
+fit-distributed|worker|predict|model-info|serve|bench-serve|\
+bench-streaming|bench-sharded|bench-kernels|bench-distributed|\
+bench-check|bench-promote|runtime-check> \
 [--scale S] [--seed N] [--out DIR] [--config FILE] [--stream] \
 [--chunk-samples N] [--reservoir R] [--sgd-epochs E] [--data STEM] \
-[--save MODEL.fcm] [--model MODEL.fcm] [--note S] [--port P] \
-[--workers W] [--cache N] [--max-batch B] [--http-port P] \
+[--save MODEL.fcm] [--model MODEL.fcm] [--note S] [--deep] [--port P] \
+[--workers W] [--max-model-bytes N] [--max-batch B] [--http-port P] \
 [--max-conns N] [--batch-window-us U] [--log PATH] [--quick] \
 [--json PATH] [--current A --baseline B --factor F] \
 [--heartbeat-ms MS] [--bind ADDR] [--expect N] [--inject KIND:W] \

@@ -50,13 +50,13 @@ use crate::estimators::{FoldModel, LogregFit};
 pub const FCM_MAGIC: [u8; 8] = *b"FCMODEL1";
 
 /// Largest section payload a reader will accept (corruption guard).
-const MAX_SECTION_BYTES: u64 = 1 << 30;
+pub(crate) const MAX_SECTION_BYTES: u64 = 1 << 30;
 
-const TAG_HEAD: [u8; 4] = *b"HEAD";
-const TAG_MASK: [u8; 4] = *b"MASK";
-const TAG_REDU: [u8; 4] = *b"REDU";
-const TAG_FOLD: [u8; 4] = *b"FOLD";
-const TAG_END: [u8; 4] = *b"END ";
+pub(crate) const TAG_HEAD: [u8; 4] = *b"HEAD";
+pub(crate) const TAG_MASK: [u8; 4] = *b"MASK";
+pub(crate) const TAG_REDU: [u8; 4] = *b"REDU";
+pub(crate) const TAG_FOLD: [u8; 4] = *b"FOLD";
+pub(crate) const TAG_END: [u8; 4] = *b"END ";
 
 /// CRC-32 (IEEE 802.3, polynomial `0xEDB88320`), bitwise — matches
 /// zlib's `crc32`, which is how the committed golden fixtures were
@@ -117,18 +117,20 @@ impl ByteWriter {
     }
 }
 
-/// Cursor over a section payload with bounds-checked reads.
-struct ByteReader<'a> {
+/// Cursor over a section payload with bounds-checked reads. Shared
+/// with the mmap path ([`super::mapped`]), which decodes straight
+/// from the mapped section slice.
+pub(crate) struct ByteReader<'a> {
     buf: &'a [u8],
     pos: usize,
 }
 
 impl<'a> ByteReader<'a> {
-    fn new(buf: &'a [u8]) -> Self {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
         ByteReader { buf, pos: 0 }
     }
 
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         if self.pos + n > self.buf.len() {
             return Err(invalid("fcm section payload truncated"));
         }
@@ -137,42 +139,42 @@ impl<'a> ByteReader<'a> {
         Ok(out)
     }
 
-    fn u8(&mut self) -> Result<u8> {
+    pub(crate) fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
 
-    fn u32(&mut self) -> Result<u32> {
+    pub(crate) fn u32(&mut self) -> Result<u32> {
         let b = self.take(4)?;
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
-    fn u64(&mut self) -> Result<u64> {
+    pub(crate) fn u64(&mut self) -> Result<u64> {
         let b = self.take(8)?;
         let mut a = [0u8; 8];
         a.copy_from_slice(b);
         Ok(u64::from_le_bytes(a))
     }
 
-    fn f32(&mut self) -> Result<f32> {
+    pub(crate) fn f32(&mut self) -> Result<f32> {
         let b = self.take(4)?;
         Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
-    fn f64(&mut self) -> Result<f64> {
+    pub(crate) fn f64(&mut self) -> Result<f64> {
         let b = self.take(8)?;
         let mut a = [0u8; 8];
         a.copy_from_slice(b);
         Ok(f64::from_le_bytes(a))
     }
 
-    fn str(&mut self) -> Result<String> {
+    pub(crate) fn str(&mut self) -> Result<String> {
         let len = self.u32()? as usize;
         let b = self.take(len)?;
         String::from_utf8(b.to_vec())
             .map_err(|_| invalid("fcm string field is not UTF-8"))
     }
 
-    fn len32(&mut self) -> Result<usize> {
+    pub(crate) fn len32(&mut self) -> Result<usize> {
         Ok(self.u32()? as usize)
     }
 
@@ -180,11 +182,11 @@ impl<'a> ByteReader<'a> {
     /// pre-allocations driven by on-disk count fields (a corrupt
     /// count must surface as a truncation error, not a huge
     /// `Vec::with_capacity` that aborts the process).
-    fn remaining(&self) -> usize {
+    pub(crate) fn remaining(&self) -> usize {
         self.buf.len() - self.pos
     }
 
-    fn finish(&self) -> Result<()> {
+    pub(crate) fn finish(&self) -> Result<()> {
         if self.pos != self.buf.len() {
             return Err(invalid(format!(
                 "fcm section has {} trailing bytes",
@@ -222,7 +224,7 @@ fn encode_head(h: &ModelHeader) -> Result<Vec<u8>> {
     Ok(w.buf)
 }
 
-fn decode_head(buf: &[u8]) -> Result<ModelHeader> {
+pub(crate) fn decode_head(buf: &[u8]) -> Result<ModelHeader> {
     let mut r = ByteReader::new(buf);
     let method = Method::parse(&r.str()?)?;
     let k = r.len32()?;
@@ -280,7 +282,7 @@ fn encode_mask(dims: [usize; 3], voxels: &[u32]) -> Result<Vec<u8>> {
     Ok(w.buf)
 }
 
-fn decode_mask(buf: &[u8]) -> Result<([usize; 3], Vec<u32>)> {
+pub(crate) fn decode_mask(buf: &[u8]) -> Result<([usize; 3], Vec<u32>)> {
     let mut r = ByteReader::new(buf);
     let mut dims = [0usize; 3];
     for d in &mut dims {
@@ -367,7 +369,7 @@ fn encode_folds(folds: &[FoldModel]) -> Result<Vec<u8>> {
     Ok(w.buf)
 }
 
-fn decode_folds(buf: &[u8]) -> Result<Vec<FoldModel>> {
+pub(crate) fn decode_folds(buf: &[u8]) -> Result<Vec<FoldModel>> {
     let mut r = ByteReader::new(buf);
     let n_folds = r.len32()?;
     // a fold encodes at least 52 fixed bytes (3×f64 + 2×u64 + f32 +

@@ -1,0 +1,711 @@
+//! Zero-copy `.fcm` loading (ADR-008): parse the section *index*
+//! eagerly, map the payloads, and validate + decode each section
+//! only when something actually touches it.
+//!
+//! [`load_model`](super::load_model) decodes the whole artifact into
+//! owned buffers up front — the right call for a one-shot CLI
+//! `predict`, and exactly the wrong call for a server packing dozens
+//! of models into one process, where a `model-info` probe of an
+//! N-MB artifact should cost O(header) bytes, not N MB. This module
+//! is the serve-path alternative:
+//!
+//! * [`open_model`] memory-maps the file ([`SectionMap`]) and walks
+//!   the section headers — tag, length, stored CRC — touching one
+//!   page per section and decoding only HEAD (provenance, ~200 B);
+//! * each payload is CRC-validated **on first touch** and decoded
+//!   **once** straight out of the mapping (a corrupt section errors
+//!   on every touch, never panics, never reads out of bounds);
+//! * the apply paths reuse the exact construction sites of the
+//!   eager loader — [`ClusterReduce::from_le_bytes`] over the mapped
+//!   REDU payload, [`format::decode_folds`] over the mapped FOLD
+//!   payload — and the exact kernels of [`FittedModel`], so a served
+//!   prediction is **bit-identical** to `load_model` + apply (the
+//!   `model_registry` / `golden_fixtures` suites pin this).
+//!
+//! Payload offsets inside a `.fcm` are not 4-byte aligned (section
+//! lengths are string-dependent), so label/weight arrays cannot be
+//! safely reinterpreted in place; first touch therefore does a
+//! one-time copy-on-validate into owned buffers. What stays lazy is
+//! everything *untouched*: a model serving only `predict` never
+//! decodes MASK, a `model-info` probe never decodes MASK or REDU —
+//! asserted through [`MappedModel::validated_payload_bytes`].
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use super::format::{
+    self, crc32, ByteReader, FCM_MAGIC, MAX_SECTION_BYTES, TAG_END,
+    TAG_FOLD, TAG_HEAD, TAG_MASK, TAG_REDU,
+};
+use super::mmap::SectionMap;
+use super::{
+    ensemble_proba, model_info_json, FittedModel, ModelHeader,
+    ReductionOp,
+};
+use crate::error::{invalid, Error, Result};
+use crate::estimators::FoldModel;
+use crate::json::Value;
+use crate::reduce::{
+    ClusterReduce, Reducer, SparseRandomProjection,
+};
+use crate::volume::FeatureMatrix;
+
+/// Rough heap bytes of the index + struct itself, counted into
+/// [`MappedModel::resident_bytes`] so even an untouched model has an
+/// honest nonzero footprint.
+const BASE_OVERHEAD: u64 = 512;
+
+/// One entry of the section index: where a payload lives in the
+/// mapping and whether its checksum has been verified yet.
+struct Section {
+    tag: [u8; 4],
+    start: usize,
+    len: usize,
+    crc: u32,
+    /// First-touch validation result, cached so a corrupt section
+    /// fails identically on every access.
+    checked: OnceLock<std::result::Result<(), String>>,
+}
+
+/// The decoded reduction operator of a mapped model.
+enum MappedReduce {
+    Cluster(ClusterReduce),
+    RandomProjection { p: usize, k: usize, seed: u64 },
+}
+
+/// A `.fcm` artifact opened lazily over a memory mapping — see the
+/// module docs for the validation-on-first-touch contract.
+pub struct MappedModel {
+    map: SectionMap,
+    path: PathBuf,
+    header: ModelHeader,
+    index: Vec<Section>,
+    mask_idx: Option<usize>,
+    redu_idx: Option<usize>,
+    fold_idx: Option<usize>,
+    validated_payload: AtomicU64,
+    decoded_heap: AtomicU64,
+    mask: OnceLock<CacheResult<([usize; 3], Vec<u32>)>>,
+    reduce: OnceLock<CacheResult<MappedReduce>>,
+    folds: OnceLock<CacheResult<Vec<FoldModel>>>,
+}
+
+type CacheResult<T> = std::result::Result<T, String>;
+
+/// Strip the `Display` prefix of [`Error::Invalid`] before caching a
+/// message, so replaying it through [`Error::Invalid`] again does
+/// not stutter "invalid argument: invalid argument:".
+fn cache_msg(e: Error) -> String {
+    let s = e.to_string();
+    match s.strip_prefix("invalid argument: ") {
+        Some(rest) => rest.to_string(),
+        None => s,
+    }
+}
+
+fn replay<T>(r: &CacheResult<T>) -> Result<&T> {
+    match r {
+        Ok(v) => Ok(v),
+        Err(m) => Err(Error::Invalid(m.clone())),
+    }
+}
+
+/// Open a `.fcm` lazily: map the file, parse the section index and
+/// the HEAD payload, defer everything else. The mmap analogue of
+/// [`super::load_model`] — and of [`super::read_fcm_header`], which
+/// it matches in cost until a payload section is touched.
+pub fn open_model(path: &Path) -> Result<MappedModel> {
+    let map = SectionMap::open(path)?;
+    let bytes = map.bytes();
+    if bytes.len() < FCM_MAGIC.len() {
+        return Err(invalid("not an fcm file (truncated magic)"));
+    }
+    if bytes[..FCM_MAGIC.len()] != FCM_MAGIC {
+        return Err(invalid(format!(
+            "not an fcm file (magic {:?})",
+            String::from_utf8_lossy(&bytes[..FCM_MAGIC.len()])
+        )));
+    }
+    let index = build_index(bytes)?;
+    let head = &index[0];
+    if head.tag != TAG_HEAD {
+        return Err(invalid(
+            "fcm file does not start with a HEAD section",
+        ));
+    }
+    // HEAD validates + decodes eagerly — O(header) bytes, the same
+    // cost contract as `read_fcm_header`; everything else stays cold
+    let head_bytes = &bytes[head.start..head.start + head.len];
+    let got = crc32(head_bytes);
+    if got != head.crc {
+        return Err(invalid(format!(
+            "fcm section 'HEAD' checksum mismatch \
+             (stored {:#010x}, computed {got:#010x})",
+            head.crc
+        )));
+    }
+    let header = format::decode_head(head_bytes)?;
+    let head_len = head.len as u64;
+    let _ = head.checked.set(Ok(()));
+    // later duplicates win, matching the streaming loader
+    let mut mask_idx = None;
+    let mut redu_idx = None;
+    let mut fold_idx = None;
+    for (i, s) in index.iter().enumerate() {
+        match s.tag {
+            TAG_MASK => mask_idx = Some(i),
+            TAG_REDU => redu_idx = Some(i),
+            TAG_FOLD => fold_idx = Some(i),
+            _ => {}
+        }
+    }
+    let note_heap = header.note.len() as u64 + 64;
+    Ok(MappedModel {
+        map,
+        path: path.to_path_buf(),
+        header,
+        index,
+        mask_idx,
+        redu_idx,
+        fold_idx,
+        validated_payload: AtomicU64::new(head_len),
+        decoded_heap: AtomicU64::new(note_heap),
+        mask: OnceLock::new(),
+        reduce: OnceLock::new(),
+        folds: OnceLock::new(),
+    })
+}
+
+/// Walk the section headers: bounds-checked against the mapped
+/// length, payloads untouched. Mirrors the per-section limits of the
+/// streaming reader so hostile length fields error identically.
+fn build_index(bytes: &[u8]) -> Result<Vec<Section>> {
+    let mut pos = FCM_MAGIC.len();
+    let mut out = Vec::new();
+    loop {
+        if bytes.len() - pos < 12 {
+            return Err(invalid(
+                "fcm file truncated inside a section header",
+            ));
+        }
+        let tag = [
+            bytes[pos],
+            bytes[pos + 1],
+            bytes[pos + 2],
+            bytes[pos + 3],
+        ];
+        let mut len8 = [0u8; 8];
+        len8.copy_from_slice(&bytes[pos + 4..pos + 12]);
+        let len64 = u64::from_le_bytes(len8);
+        if len64 > MAX_SECTION_BYTES {
+            return Err(invalid(format!(
+                "fcm section '{}' claims {len64} bytes (corrupt?)",
+                String::from_utf8_lossy(&tag)
+            )));
+        }
+        let len = len64 as usize;
+        let start = pos + 12;
+        if bytes.len() - start < len + 4 {
+            return Err(invalid(format!(
+                "fcm section '{}' truncated",
+                String::from_utf8_lossy(&tag)
+            )));
+        }
+        let mut crc4 = [0u8; 4];
+        crc4.copy_from_slice(&bytes[start + len..start + len + 4]);
+        out.push(Section {
+            tag,
+            start,
+            len,
+            crc: u32::from_le_bytes(crc4),
+            checked: OnceLock::new(),
+        });
+        pos = start + len + 4;
+        if tag == TAG_END {
+            return Ok(out);
+        }
+    }
+}
+
+impl MappedModel {
+    /// The payload slice of section `idx`, CRC-validated exactly
+    /// once on first touch.
+    fn section_bytes(&self, idx: usize) -> Result<&[u8]> {
+        let s = &self.index[idx];
+        let bytes = &self.map.bytes()[s.start..s.start + s.len];
+        let outcome = s.checked.get_or_init(|| {
+            let got = crc32(bytes);
+            if got != s.crc {
+                return Err(format!(
+                    "fcm section '{}' checksum mismatch \
+                     (stored {:#010x}, computed {got:#010x})",
+                    String::from_utf8_lossy(&s.tag),
+                    s.crc
+                ));
+            }
+            self.validated_payload
+                .fetch_add(s.len as u64, Ordering::Relaxed);
+            Ok(())
+        });
+        match outcome {
+            Ok(()) => Ok(bytes),
+            Err(m) => Err(Error::Invalid(m.clone())),
+        }
+    }
+
+    fn required_section(
+        &self,
+        idx: Option<usize>,
+        name: &str,
+    ) -> Result<&[u8]> {
+        match idx {
+            Some(i) => self.section_bytes(i),
+            None => Err(invalid(format!(
+                "fcm file has no {name} section"
+            ))),
+        }
+    }
+
+    /// Provenance header (decoded at open, O(header) bytes).
+    pub fn header(&self) -> &ModelHeader {
+        &self.header
+    }
+
+    /// The path this model was opened from.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Whether the payloads live in a real memory mapping (false =
+    /// the owned-read fallback of non-unix hosts).
+    pub fn is_mapped(&self) -> bool {
+        self.map.is_mapped()
+    }
+
+    /// Total file length in bytes.
+    pub fn file_len(&self) -> u64 {
+        self.map.len() as u64
+    }
+
+    /// Payload bytes whose checksum has been verified so far — the
+    /// laziness observable: a header probe leaves this at the HEAD
+    /// payload length no matter how large the file is.
+    pub fn validated_payload_bytes(&self) -> u64 {
+        self.validated_payload.load(Ordering::Relaxed)
+    }
+
+    /// Bytes this model actually occupies: validated (hence
+    /// page-cache-resident) mapped payloads plus the owned buffers
+    /// decoded from them plus fixed index overhead. This is the
+    /// quantity the registry's byte-budget eviction sums — it grows
+    /// as sections are touched, and stays O(header) for a model that
+    /// only ever answered `model-info`.
+    pub fn resident_bytes(&self) -> u64 {
+        BASE_OVERHEAD
+            + 64 * self.index.len() as u64
+            + self.validated_payload.load(Ordering::Relaxed)
+            + self.decoded_heap.load(Ordering::Relaxed)
+    }
+
+    /// Per-section `(tag, payload_len, validated)` — test/debug
+    /// introspection for the laziness contract.
+    pub fn sections(&self) -> Vec<(String, u64, bool)> {
+        self.index
+            .iter()
+            .map(|s| {
+                (
+                    String::from_utf8_lossy(&s.tag).into_owned(),
+                    s.len as u64,
+                    matches!(s.checked.get(), Some(Ok(()))),
+                )
+            })
+            .collect()
+    }
+
+    /// `(payload_len, stored_crc)` per section, read from the index
+    /// without validating any payload — the registry's cheap
+    /// content-identity probe for hot-reload checks.
+    pub fn section_fingerprint(&self) -> Vec<(u64, u32)> {
+        self.index
+            .iter()
+            .map(|s| (s.len as u64, s.crc))
+            .collect()
+    }
+
+    // ------------------------------------------------ lazy decodes
+
+    fn mask_parts(&self) -> Result<&([usize; 3], Vec<u32>)> {
+        replay(self.mask.get_or_init(|| {
+            let buf = self
+                .required_section(self.mask_idx, "MASK")
+                .map_err(cache_msg)?;
+            let (dims, voxels) =
+                format::decode_mask(buf).map_err(cache_msg)?;
+            if voxels.len() != self.header.p {
+                return Err(format!(
+                    "model mask has {} voxels but header says p={}",
+                    voxels.len(),
+                    self.header.p
+                ));
+            }
+            self.decoded_heap.fetch_add(
+                4 * voxels.len() as u64 + 32,
+                Ordering::Relaxed,
+            );
+            Ok((dims, voxels))
+        }))
+    }
+
+    fn mapped_reduce(&self) -> Result<&MappedReduce> {
+        replay(self.reduce.get_or_init(|| {
+            self.build_reduce().map_err(cache_msg)
+        }))
+    }
+
+    /// Decode REDU straight from the mapped payload: labels go
+    /// through [`ClusterReduce::from_le_bytes`] — one pass from the
+    /// mapping into the fitted operator, no intermediate vector.
+    fn build_reduce(&self) -> Result<MappedReduce> {
+        let buf = self.required_section(self.redu_idx, "REDU")?;
+        let mut r = ByteReader::new(buf);
+        let (op, rp, rk) = match r.u8()? {
+            0 => {
+                let k = r.len32()?;
+                let p = r.len32()?;
+                let need = p.checked_mul(4).ok_or_else(|| {
+                    invalid("fcm section payload truncated")
+                })?;
+                if need > r.remaining() {
+                    return Err(invalid(
+                        "fcm section payload truncated",
+                    ));
+                }
+                let label_bytes = r.take(need)?;
+                r.finish()?;
+                let cr =
+                    ClusterReduce::from_le_bytes(label_bytes, k)?;
+                (MappedReduce::Cluster(cr), p, k)
+            }
+            1 => {
+                let p = r.len32()?;
+                let k = r.len32()?;
+                let seed = r.u64()?;
+                r.finish()?;
+                (MappedReduce::RandomProjection { p, k, seed }, p, k)
+            }
+            other => {
+                return Err(invalid(format!(
+                    "unknown reduction kind {other} in fcm"
+                )))
+            }
+        };
+        if rp != self.header.p || rk != self.header.k {
+            return Err(invalid(format!(
+                "reduction operator is ({rp} -> {rk}) but header \
+                 says ({} -> {})",
+                self.header.p, self.header.k
+            )));
+        }
+        self.decoded_heap.fetch_add(
+            match &op {
+                MappedReduce::Cluster(c) => {
+                    4 * (c.labels().len() + 2 * c.counts().len())
+                        as u64
+                        + 64
+                }
+                MappedReduce::RandomProjection { .. } => 24,
+            },
+            Ordering::Relaxed,
+        );
+        Ok(op)
+    }
+
+    fn fold_models(&self) -> Result<&Vec<FoldModel>> {
+        replay(self.folds.get_or_init(|| {
+            let buf = self
+                .required_section(self.fold_idx, "FOLD")
+                .map_err(cache_msg)?;
+            let folds =
+                format::decode_folds(buf).map_err(cache_msg)?;
+            if folds.is_empty() {
+                return Err("model has no fitted folds".into());
+            }
+            for (i, f) in folds.iter().enumerate() {
+                if f.fit.w.len() != self.header.k {
+                    return Err(format!(
+                        "fold {i} has {} weights but k={}",
+                        f.fit.w.len(),
+                        self.header.k
+                    ));
+                }
+                if f.test.iter().any(|&t| t >= self.header.n) {
+                    return Err(format!(
+                        "fold {i} test index out of range (n={})",
+                        self.header.n
+                    ));
+                }
+            }
+            let heap: u64 = folds
+                .iter()
+                .map(|f| {
+                    4 * f.fit.w.len() as u64
+                        + 8 * f.test.len() as u64
+                        + 64
+                })
+                .sum();
+            self.decoded_heap.fetch_add(heap, Ordering::Relaxed);
+            Ok(folds)
+        }))
+    }
+
+    // ------------------------------------------------- apply paths
+
+    /// Compress a `(c, p)` sample-major block to `(c, k)` — same
+    /// contract and same kernels as [`FittedModel::compress`], hence
+    /// bit-identical output, but touching only REDU.
+    pub fn compress(&self, x: &FeatureMatrix) -> Result<FeatureMatrix> {
+        if x.cols != self.header.p {
+            return Err(invalid(format!(
+                "compress: samples have {} voxels, model expects {}",
+                x.cols, self.header.p
+            )));
+        }
+        match self.mapped_reduce()? {
+            MappedReduce::Cluster(cr) => {
+                Ok(cr.reduce_sample_major(x))
+            }
+            MappedReduce::RandomProjection { p, k, seed } => {
+                let reducer =
+                    SparseRandomProjection::new(*p, *k, *seed);
+                Ok(reducer.reduce(&x.transpose()).transpose())
+            }
+        }
+    }
+
+    /// Ensemble class-1 probabilities for a `(c, p)` block — same
+    /// fold arithmetic as [`FittedModel::predict_proba`] (shared
+    /// helper), touching only REDU + FOLD.
+    pub fn predict_proba(&self, x: &FeatureMatrix) -> Result<Vec<f32>> {
+        let xk = self.compress(x)?;
+        Ok(ensemble_proba(self.fold_models()?, &xk))
+    }
+
+    /// Mean stored fold accuracy (decodes FOLD only).
+    pub fn accuracy(&self) -> Result<f64> {
+        let folds = self.fold_models()?;
+        Ok(crate::stats::mean(
+            &folds.iter().map(|f| f.accuracy).collect::<Vec<_>>(),
+        ))
+    }
+
+    /// The serve `model-info` body — identical JSON to
+    /// [`FittedModel::info_json`], produced from HEAD + FOLD alone
+    /// (MASK and REDU stay untouched, however large).
+    pub fn info_json(&self) -> Result<Value> {
+        Ok(model_info_json(&self.header, self.fold_models()?))
+    }
+
+    /// Verify every section checksum — including unknown sections
+    /// and the END marker — exactly as the eager loader does.
+    pub fn validate_all_sections(&self) -> Result<()> {
+        for i in 0..self.index.len() {
+            self.section_bytes(i)?;
+        }
+        Ok(())
+    }
+
+    /// Decode everything into an owned [`FittedModel`] — validates
+    /// every checksum and every cross-section invariant; the result
+    /// round-trips through [`super::save_model`] byte-identically to
+    /// the original file.
+    pub fn to_fitted(&self) -> Result<FittedModel> {
+        self.validate_all_sections()?;
+        let (dims, voxels) = self.mask_parts()?.clone();
+        let reduction = match self.mapped_reduce()? {
+            MappedReduce::Cluster(cr) => ReductionOp::Cluster {
+                k: cr.k(),
+                labels: cr.labels().to_vec(),
+            },
+            MappedReduce::RandomProjection { p, k, seed } => {
+                ReductionOp::RandomProjection {
+                    p: *p,
+                    k: *k,
+                    seed: *seed,
+                }
+            }
+        };
+        let model = FittedModel::from_parts(
+            self.header.clone(),
+            dims,
+            voxels,
+            reduction,
+            self.fold_models()?.clone(),
+        );
+        model.validate()?;
+        Ok(model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Method;
+    use crate::estimators::LogregFit;
+    use crate::model::save_model;
+
+    fn tiny_model() -> FittedModel {
+        let header = ModelHeader {
+            method: Method::Fast,
+            k: 2,
+            p: 4,
+            n: 6,
+            reduce_seed: 1,
+            shards: 0,
+            lambda: 1e-3,
+            tol: 1e-5,
+            max_iter: 100,
+            cv_folds: 2,
+            sgd_epochs: 0,
+            sgd_chunk: 32,
+            data_dims: [2, 2, 1],
+            data_n_samples: 6,
+            data_fwhm: 6.0,
+            data_noise_sigma: 1.0,
+            data_seed: 42,
+            note: "mapped unit test".into(),
+        };
+        FittedModel::from_parts(
+            header,
+            [2, 2, 1],
+            vec![0, 1, 2, 3],
+            ReductionOp::Cluster { k: 2, labels: vec![0, 0, 1, 1] },
+            vec![FoldModel {
+                test: vec![0, 1, 2],
+                accuracy: 1.0,
+                fit: LogregFit {
+                    w: vec![1.0, -1.0],
+                    b: 0.0,
+                    loss: 0.1,
+                    iters: 3,
+                    evals: 4,
+                    grad_norm: 1e-6,
+                },
+            }],
+        )
+    }
+
+    fn saved(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("fastclust_mapped_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("{tag}.fcm"));
+        save_model(&path, &tiny_model()).unwrap();
+        path
+    }
+
+    #[test]
+    fn open_is_header_only() {
+        let path = saved("lazy");
+        let m = open_model(&path).unwrap();
+        assert_eq!(m.header().k, 2);
+        assert_eq!(m.header().note, "mapped unit test");
+        // only HEAD validated so far
+        let head_len = m
+            .sections()
+            .iter()
+            .find(|(t, _, _)| t == "HEAD")
+            .map(|&(_, l, _)| l)
+            .unwrap();
+        assert_eq!(m.validated_payload_bytes(), head_len);
+        for (tag, _, validated) in m.sections() {
+            assert_eq!(
+                validated,
+                tag == "HEAD",
+                "section {tag} validation state"
+            );
+        }
+    }
+
+    #[test]
+    fn compress_touches_redu_only_and_matches_eager() {
+        let path = saved("compress");
+        let m = open_model(&path).unwrap();
+        let eager = crate::model::load_model(&path).unwrap();
+        let x = FeatureMatrix::from_vec(
+            1,
+            4,
+            vec![1.0, 3.0, 10.0, 30.0],
+        )
+        .unwrap();
+        let got = m.compress(&x).unwrap();
+        let want = eager.compress(&x).unwrap();
+        assert_eq!(got.data, want.data);
+        let touched: Vec<String> = m
+            .sections()
+            .into_iter()
+            .filter(|&(_, _, v)| v)
+            .map(|(t, _, _)| t)
+            .collect();
+        assert_eq!(touched, vec!["HEAD", "REDU"]);
+        // predict adds FOLD, never MASK
+        let gp = m.predict_proba(&x).unwrap();
+        let wp = eager.predict_proba(&x).unwrap();
+        assert_eq!(gp, wp);
+        assert!(m
+            .sections()
+            .iter()
+            .all(|(t, _, v)| *v == (t != "MASK" && t != "END ")));
+        assert!(m.resident_bytes() < m.file_len() + 4096);
+    }
+
+    #[test]
+    fn to_fitted_round_trips_bytes() {
+        let path = saved("roundtrip");
+        let m = open_model(&path).unwrap();
+        let fitted = m.to_fitted().unwrap();
+        let dir = std::env::temp_dir().join("fastclust_mapped_unit");
+        let out = dir.join("roundtrip_resaved.fcm");
+        save_model(&out, &fitted).unwrap();
+        assert_eq!(
+            std::fs::read(&path).unwrap(),
+            std::fs::read(&out).unwrap()
+        );
+    }
+
+    #[test]
+    fn corrupt_section_errors_on_every_touch() {
+        let path = saved("corrupt");
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        // 30 bytes from the end lands inside the FOLD payload/CRC
+        // (END is the trailing 16 bytes, FOLD's payload is larger
+        // than 14), so the flip corrupts a lazily-validated section
+        bytes[n - 30] ^= 0x10;
+        let dir = std::env::temp_dir().join("fastclust_mapped_unit");
+        let bad = dir.join("corrupt_flipped.fcm");
+        std::fs::write(&bad, &bytes).unwrap();
+        let m = open_model(&bad);
+        let Ok(m) = m else {
+            return; // flip hit HEAD / a header field: also fine
+        };
+        let e1 = m.validate_all_sections().unwrap_err().to_string();
+        let e2 = m.validate_all_sections().unwrap_err().to_string();
+        assert_eq!(e1, e2, "cached corruption must replay stably");
+        assert!(e1.contains("checksum"), "{e1}");
+    }
+
+    #[test]
+    fn truncation_and_magic_are_rejected() {
+        let path = saved("trunc");
+        let bytes = std::fs::read(&path).unwrap();
+        let dir = std::env::temp_dir().join("fastclust_mapped_unit");
+        for cut in [0, 3, 8, 11, 20, bytes.len() - 1] {
+            let p = dir.join(format!("trunc_{cut}.fcm"));
+            std::fs::write(&p, &bytes[..cut]).unwrap();
+            assert!(
+                open_model(&p).is_err(),
+                "prefix of {cut} bytes must not open"
+            );
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Read-only memory mapping for `.fcm` artifacts (ADR-008).
+//!
+//! ADR-001 forbids external crates, so the unix backend declares
+//! `mmap(2)` / `munmap(2)` directly against the system libc that
+//! `std` already links — the same idiom the serve event loop uses
+//! for epoll (ADR-007). Non-unix hosts (and any host where the map
+//! syscall fails) fall back to a plain owned read of the file, so
+//! every consumer sees one type with one contract: an immutable
+//! `&[u8]` of the whole file.
+//!
+//! # Lifetime / safety contract
+//!
+//! * The mapping is `PROT_READ` + `MAP_PRIVATE`: nothing in this
+//!   crate can write through it, and writes to the underlying file
+//!   by other processes are not required to be visible.
+//! * Truncating a mapped file can deliver `SIGBUS` on access — the
+//!   one hazard a checksum cannot catch. The registry's hot-reload
+//!   contract (ADR-008) therefore requires *rename-replacement*
+//!   deploys: the old inode stays alive until the last
+//!   [`SectionMap`] drops, so resident models never observe it.
+//! * `munmap` happens in `Drop`; the nightly AddressSanitizer CI job
+//!   machine-checks that no section slice outlives its map.
+
+use std::fs;
+use std::path::Path;
+
+use crate::error::Result;
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    /// `MAP_FAILED` is `(void *) -1` on every unix.
+    pub fn map_failed() -> *mut c_void {
+        usize::MAX as *mut c_void
+    }
+}
+
+enum Backing {
+    /// A live `mmap(2)` region (unix only).
+    #[cfg(unix)]
+    Mapped {
+        ptr: *mut u8,
+        len: usize,
+    },
+    /// Whole-file read fallback (non-unix, zero-length files, or a
+    /// failed map syscall).
+    Owned(Vec<u8>),
+}
+
+/// An immutable view of a whole file: memory-mapped where the
+/// platform allows, an owned buffer otherwise.
+pub struct SectionMap {
+    backing: Backing,
+}
+
+// SAFETY: the mapped region is never written through (PROT_READ) and
+// never aliased mutably; sharing `&[u8]` reads across threads is as
+// safe as sharing the owned-Vec fallback.
+unsafe impl Send for SectionMap {}
+unsafe impl Sync for SectionMap {}
+
+impl SectionMap {
+    /// Map `path` read-only. Falls back to an owned read when the
+    /// platform has no `mmap` or the syscall fails; errors only when
+    /// the file itself cannot be opened or read.
+    pub fn open(path: &Path) -> Result<SectionMap> {
+        let file = fs::File::open(path)?;
+        let len = file.metadata()?.len();
+        #[cfg(unix)]
+        {
+            if let Some(map) = Self::try_map(&file, len) {
+                return Ok(map);
+            }
+        }
+        drop(file);
+        Ok(SectionMap { backing: Backing::Owned(fs::read(path)?) })
+    }
+
+    #[cfg(unix)]
+    fn try_map(file: &fs::File, len: u64) -> Option<SectionMap> {
+        use std::os::unix::io::AsRawFd;
+        // a zero-length mmap is EINVAL; usize overflow on 32-bit
+        // hosts falls back to the owned read as well
+        let len = usize::try_from(len).ok().filter(|&l| l > 0)?;
+        // SAFETY: fd is a freshly opened readable file, PROT_READ +
+        // MAP_PRIVATE never writes back, and the pointer is only
+        // handed out as an immutable slice of exactly `len` bytes
+        // until `Drop` unmaps it.
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == sys::map_failed() || ptr.is_null() {
+            return None;
+        }
+        Some(SectionMap {
+            backing: Backing::Mapped { ptr: ptr as *mut u8, len },
+        })
+    }
+
+    /// The file contents.
+    pub fn bytes(&self) -> &[u8] {
+        match &self.backing {
+            #[cfg(unix)]
+            Backing::Mapped { ptr, len } => {
+                // SAFETY: the region is valid for `len` bytes until
+                // Drop, and nothing mutates it (PROT_READ).
+                unsafe { std::slice::from_raw_parts(*ptr, *len) }
+            }
+            Backing::Owned(v) => v,
+        }
+    }
+
+    /// File length in bytes.
+    pub fn len(&self) -> usize {
+        match &self.backing {
+            #[cfg(unix)]
+            Backing::Mapped { len, .. } => *len,
+            Backing::Owned(v) => v.len(),
+        }
+    }
+
+    /// Whether the file is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether this view is a real mapping (false = owned fallback).
+    pub fn is_mapped(&self) -> bool {
+        match &self.backing {
+            #[cfg(unix)]
+            Backing::Mapped { .. } => true,
+            Backing::Owned(_) => false,
+        }
+    }
+}
+
+impl Drop for SectionMap {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Backing::Mapped { ptr, len } = &self.backing {
+            // SAFETY: exactly the region mmap returned; after this
+            // the struct is gone, so no slice can dangle past it
+            // (the ASan CI job checks that claim).
+            unsafe {
+                sys::munmap(*ptr as *mut std::os::raw::c_void, *len);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_file_contents() {
+        let dir = std::env::temp_dir().join("fastclust_mmap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("data.bin");
+        let payload: Vec<u8> = (0..=255u8).cycle().take(5000).collect();
+        std::fs::write(&path, &payload).unwrap();
+        let map = SectionMap::open(&path).unwrap();
+        assert_eq!(map.len(), payload.len());
+        assert_eq!(map.bytes(), &payload[..]);
+        #[cfg(unix)]
+        assert!(map.is_mapped(), "unix should take the mmap path");
+    }
+
+    #[test]
+    fn empty_file_falls_back_to_owned() {
+        let dir = std::env::temp_dir().join("fastclust_mmap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("empty.bin");
+        std::fs::write(&path, b"").unwrap();
+        let map = SectionMap::open(&path).unwrap();
+        assert!(map.is_empty());
+        assert!(!map.is_mapped());
+        assert_eq!(map.bytes(), b"");
+    }
+
+    #[test]
+    fn missing_file_is_an_error() {
+        assert!(
+            SectionMap::open(Path::new("/nonexistent/x.bin")).is_err()
+        );
+    }
+
+    #[test]
+    fn map_outlives_shared_reads_across_threads() {
+        let dir = std::env::temp_dir().join("fastclust_mmap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("shared.bin");
+        std::fs::write(&path, vec![7u8; 4096]).unwrap();
+        let map = std::sync::Arc::new(SectionMap::open(&path).unwrap());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = map.clone();
+                std::thread::spawn(move || {
+                    m.bytes().iter().map(|&b| b as u64).sum::<u64>()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 7 * 4096);
+        }
+    }
+}

@@ -29,12 +29,15 @@
 
 pub mod fit;
 pub mod format;
+pub mod mapped;
+pub mod mmap;
 
 pub use fit::{
     build_header, fit_model, fit_one_fold, fit_reduction, FitOptions,
     FOLD_SEED,
 };
 pub use format::{crc32, load_model, read_fcm_header, save_model};
+pub use mapped::{open_model, MappedModel};
 
 use std::sync::{Arc, OnceLock};
 
@@ -272,15 +275,7 @@ impl FittedModel {
     /// serve `predict` verb. Deterministic given the model bytes.
     pub fn predict_proba(&self, x: &FeatureMatrix) -> Result<Vec<f32>> {
         let xk = self.compress(x)?;
-        let mut acc = vec![0.0f64; xk.rows];
-        for f in &self.folds {
-            let proba = LogisticRegression::predict_proba(&f.fit, &xk);
-            for (a, &p) in acc.iter_mut().zip(&proba) {
-                *a += p as f64;
-            }
-        }
-        let nf = self.folds.len() as f64;
-        Ok(acc.into_iter().map(|a| (a / nf) as f32).collect())
+        Ok(ensemble_proba(&self.folds, &xk))
     }
 
     /// Re-score every persisted fold on its held-out samples of a
@@ -334,24 +329,55 @@ impl FittedModel {
 
     /// Machine-readable summary — the serve `model-info` response.
     pub fn info_json(&self) -> Value {
-        let h = &self.header;
-        Value::obj(vec![
-            ("format", Value::Str("fcm-v1".into())),
-            ("method", Value::Str(h.method.name().into())),
-            ("k", Value::Num(h.k as f64)),
-            ("p", Value::Num(h.p as f64)),
-            ("n", Value::Num(h.n as f64)),
-            ("cv_folds", Value::Num(self.folds.len() as f64)),
-            ("accuracy", Value::Num(self.accuracy())),
-            (
-                "backend",
-                Value::Str(
-                    if h.sgd_epochs > 0 { "sgd" } else { "batch" }.into(),
-                ),
-            ),
-            ("note", Value::Str(h.note.clone())),
-        ])
+        model_info_json(&self.header, &self.folds)
     }
+}
+
+/// Ensemble class-1 probability over fitted folds: the mean of the
+/// per-fold estimator probabilities on pre-compressed `(c, k)`
+/// features. Single accumulation site shared by [`FittedModel`] and
+/// [`mapped::MappedModel`] — one addition order, so the two load
+/// paths are bit-identical by construction, not by test luck.
+pub(crate) fn ensemble_proba(
+    folds: &[FoldModel],
+    xk: &FeatureMatrix,
+) -> Vec<f32> {
+    let mut acc = vec![0.0f64; xk.rows];
+    for f in folds {
+        let proba = LogisticRegression::predict_proba(&f.fit, xk);
+        for (a, &p) in acc.iter_mut().zip(&proba) {
+            *a += p as f64;
+        }
+    }
+    let nf = folds.len() as f64;
+    acc.into_iter().map(|a| (a / nf) as f32).collect()
+}
+
+/// The serve `model-info` body, shared verbatim by the eager and
+/// mapped load paths.
+pub(crate) fn model_info_json(
+    h: &ModelHeader,
+    folds: &[FoldModel],
+) -> Value {
+    let accuracy = crate::stats::mean(
+        &folds.iter().map(|f| f.accuracy).collect::<Vec<_>>(),
+    );
+    Value::obj(vec![
+        ("format", Value::Str("fcm-v1".into())),
+        ("method", Value::Str(h.method.name().into())),
+        ("k", Value::Num(h.k as f64)),
+        ("p", Value::Num(h.p as f64)),
+        ("n", Value::Num(h.n as f64)),
+        ("cv_folds", Value::Num(folds.len() as f64)),
+        ("accuracy", Value::Num(accuracy)),
+        (
+            "backend",
+            Value::Str(
+                if h.sgd_epochs > 0 { "sgd" } else { "batch" }.into(),
+            ),
+        ),
+        ("note", Value::Str(h.note.clone())),
+    ])
 }
 
 #[cfg(test)]

@@ -13,7 +13,7 @@
 
 use super::Reducer;
 use crate::cluster::{cluster_counts, Labels};
-use crate::error::Result;
+use crate::error::{invalid, Result};
 use crate::kernels;
 use crate::volume::FeatureMatrix;
 
@@ -48,6 +48,26 @@ impl ClusterReduce {
     pub fn from_raw(labels: Vec<u32>, k: usize) -> Result<Self> {
         let labels = Labels::new(labels, k)?;
         Ok(ClusterReduce::from_labels(&labels))
+    }
+
+    /// Decode a little-endian `u32` label array straight out of a
+    /// mapped `.fcm` REDU payload (ADR-008): one pass from the
+    /// mapping into the fitted operator, with the same compactness
+    /// validation as [`ClusterReduce::from_raw`]. Mapped payloads
+    /// carry no alignment guarantee, so this is the copy-on-validate
+    /// seam — bytes are read, never reinterpreted in place.
+    pub fn from_le_bytes(bytes: &[u8], k: usize) -> Result<Self> {
+        if bytes.len() % 4 != 0 {
+            return Err(invalid(format!(
+                "label payload of {} bytes is not a u32 array",
+                bytes.len()
+            )));
+        }
+        let labels: Vec<u32> = bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        ClusterReduce::from_raw(labels, k)
     }
 
     /// The underlying label vector.
@@ -262,6 +282,22 @@ mod tests {
         for (a, b) in back.data.iter().zip(&proj.data) {
             assert!((a - b).abs() < 1e-5, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn from_le_bytes_matches_from_raw() {
+        let labels = vec![0u32, 0, 1, 2, 2];
+        let mut bytes = Vec::new();
+        for &l in &labels {
+            bytes.extend_from_slice(&l.to_le_bytes());
+        }
+        let a = ClusterReduce::from_le_bytes(&bytes, 3).unwrap();
+        let b = ClusterReduce::from_raw(labels, 3).unwrap();
+        assert_eq!(a.labels(), b.labels());
+        assert_eq!(a.counts(), b.counts());
+        // ragged byte counts and invalid labels both error
+        assert!(ClusterReduce::from_le_bytes(&bytes[..7], 3).is_err());
+        assert!(ClusterReduce::from_le_bytes(&bytes, 2).is_err());
     }
 
     #[test]

@@ -14,7 +14,12 @@
 //!    else is arriving, so waiting out the window would be pure
 //!    added latency.
 //!
-//! Groups key on `(model, verb, sample width)`. Keying on the width
+//! Groups key on `(model, verb, sample width)`, where `model` is the
+//! request's model *name* — resolution to a mapped `Arc` happens
+//! once per flushed batch in the server's `ModelRegistry` lookup
+//! (ADR-008), so a batch never straddles a hot reload: every request
+//! in it executes against the same resident mapping. Keying on the
+//! width
 //! keeps concatenation well-formed and keeps error behavior
 //! bit-identical to the unbatched path: a wrong-width request fails
 //! with exactly the message it would have produced alone, because

@@ -12,7 +12,9 @@
 //!
 //! Routing and JSON bodies live in the server; this module owns the
 //! wire syntax only, so every parse path is reachable from the fuzz
-//! suite with no server running.
+//! suite with no server running. (`GET /metrics` responses carry the
+//! ADR-008 registry breakdown — residency, hits, reloads — but that
+//! is assembled in the server; nothing here is model-aware.)
 
 /// Request line + headers must fit in this many bytes.
 pub const MAX_HEAD_BYTES: usize = 8 * 1024;

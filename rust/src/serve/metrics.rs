@@ -133,13 +133,17 @@ impl Metrics {
         self.latency_us.quantile(q)
     }
 
-    /// Snapshot everything as the `GET /metrics` JSON body. Cache
-    /// numbers come from the caller ([`super::ModelCache`] owns
-    /// them).
+    /// Snapshot everything as the `GET /metrics` JSON body. Registry
+    /// numbers come from the caller ([`super::ModelRegistry`] owns
+    /// them): `cache_loads`/`cache_hits` stay top-level for
+    /// dashboard compatibility with the PR 4 cache, and the full
+    /// per-model residency/hit/reload breakdown (ADR-008) lands
+    /// under the `registry` key.
     pub fn to_json(
         &self,
         cache_loads: u64,
         cache_hits: u64,
+        registry: Value,
     ) -> Value {
         let load = |c: &AtomicU64| {
             Value::Num(c.load(Ordering::Relaxed) as f64)
@@ -198,6 +202,7 @@ impl Metrics {
             ),
             ("cache_loads", Value::Num(cache_loads as f64)),
             ("cache_hits", Value::Num(cache_hits as f64)),
+            ("registry", registry),
             ("models", models),
         ])
     }
@@ -242,13 +247,26 @@ mod tests {
         m.record_latency_us(250);
         m.record_model("", 6);
         m.record_model("other.fcm", 4);
-        let v = m.to_json(2, 8);
+        let reg = Value::obj(vec![(
+            "resident_bytes",
+            Value::Num(1234.0),
+        )]);
+        let v = m.to_json(2, 8, reg);
         assert_eq!(v.get("accepted").unwrap().as_u64().unwrap(), 3);
         assert_eq!(v.get("shed").unwrap().as_u64().unwrap(), 1);
         assert_eq!(v.get("batches").unwrap().as_u64().unwrap(), 1);
         assert_eq!(
             v.get("cache_hits").unwrap().as_u64().unwrap(),
             8
+        );
+        assert_eq!(
+            v.get("registry")
+                .unwrap()
+                .get("resident_bytes")
+                .unwrap()
+                .as_u64()
+                .unwrap(),
+            1234
         );
         assert!(
             v.get("latency_us_p99").unwrap().as_u64().unwrap()

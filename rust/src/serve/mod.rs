@@ -12,8 +12,9 @@
 //!   (ADR-001: no external crates);
 //! * [`protocol`] — the length-prefixed binary wire format;
 //! * [`http`] — the bounded HTTP/1.1 subset the gateway speaks;
-//! * [`ModelCache`] — LRU of deserialized models shared across
-//!   connections via `Arc`;
+//! * [`ModelRegistry`] — the multi-model fleet (ADR-008): lazily
+//!   mapped `.fcm` models shared across connections via `Arc`,
+//!   evicted by resident bytes, hot-reloaded on file change;
 //! * [`Server`] / [`ServerHandle`] — nonblocking accept with an
 //!   explicit connection budget (over-budget accepts are *shed* with
 //!   a binary shed frame / HTTP 429, never silently dropped),
@@ -38,15 +39,15 @@
 //!   thread (the event loop and the pool workers) before returning.
 
 mod batch;
-mod cache;
 mod client;
 pub mod event_loop;
 pub mod http;
 mod metrics;
 pub mod protocol;
+mod registry;
 mod server;
 
-pub use cache::ModelCache;
+pub use registry::ModelRegistry;
 pub use client::ServeClient;
 pub use metrics::Metrics;
 pub use protocol::{Request, Response};

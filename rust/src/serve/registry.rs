@@ -1,0 +1,517 @@
+//! The multi-model registry (ADR-008): dozens of versioned `.fcm`
+//! models resident in one process, each behind the lazily-validated
+//! memory mapping of [`crate::model::MappedModel`], evicted by
+//! **resident bytes** rather than entry count, and hot-reloaded
+//! atomically when the file on disk changes.
+//!
+//! This replaces the count-capped LRU of the PR 4 `ModelCache`: a
+//! count cap is the wrong knob once models stop costing their full
+//! file size (a mapped model that only ever answered `model-info`
+//! holds O(header) bytes), and a fleet wants a *byte* budget the
+//! operator can size against the machine.
+//!
+//! # Semantics
+//!
+//! * **Get**: a resident entry is re-stamped (`len` + `mtime` from
+//!   one `stat(2)`) on every lookup. An unchanged stamp is a hit —
+//!   no payload I/O at all.
+//! * **Hot reload**: a changed stamp triggers a reopen *outside the
+//!   registry lock*. If the new mapping's section fingerprint
+//!   (per-section `(len, crc)` pairs, read from the index without
+//!   validating payloads) matches the resident one, the change was
+//!   cosmetic (`touch`, rewrite-with-same-bytes) and the old mapping
+//!   is kept. Otherwise the `Arc` is swapped atomically: requests
+//!   already holding the old `Arc` finish on the old bytes (the old
+//!   inode stays mapped until the last clone drops — which is why
+//!   deploys must *rename-replace*, never truncate in place; see
+//!   [`crate::model::mmap`]).
+//! * **Reload failure keeps serving**: if the changed file fails to
+//!   open or validate, the resident model stays and the failure is
+//!   counted (`reload_errors`) — a bad deploy must not take down the
+//!   models already in memory.
+//! * **Eviction**: after an insert or reload, least-recently-used
+//!   entries are dropped until the *measured* resident total (sum of
+//!   [`MappedModel::resident_bytes`], which grows as sections are
+//!   touched) fits the budget. The entry being returned is never
+//!   evicted, so a single over-budget model still serves.
+//!
+//! Cold loads and reloads both run without the lock held (the PR 4
+//! dogpile trade-off is kept: concurrent cold misses on one model
+//! may each open it; first insert wins).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::SystemTime;
+
+use crate::error::Result;
+use crate::json::Value;
+use crate::model::{open_model, MappedModel};
+
+/// `stat(2)` snapshot used for change detection.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+struct FileStamp {
+    len: u64,
+    mtime: Option<SystemTime>,
+}
+
+fn stamp(path: &Path) -> Result<FileStamp> {
+    let md = std::fs::metadata(path)?;
+    Ok(FileStamp { len: md.len(), mtime: md.modified().ok() })
+}
+
+struct Entry {
+    model: Arc<MappedModel>,
+    stamp: FileStamp,
+    last_used: u64,
+    hits: u64,
+    reloads: u64,
+    reload_errors: u64,
+}
+
+struct RegistryState {
+    map: HashMap<PathBuf, Entry>,
+    clock: u64,
+    loads: u64,
+    hits: u64,
+    reloads: u64,
+    reload_errors: u64,
+    evictions: u64,
+}
+
+/// Byte-budget LRU of lazily-mapped models, keyed by path.
+pub struct ModelRegistry {
+    max_bytes: u64,
+    state: Mutex<RegistryState>,
+}
+
+impl ModelRegistry {
+    /// Create with a resident-byte budget (min 1 — a zero budget
+    /// would still have to hold the entry it is returning).
+    pub fn new(max_bytes: u64) -> Self {
+        ModelRegistry {
+            max_bytes: max_bytes.max(1),
+            state: Mutex::new(RegistryState {
+                map: HashMap::new(),
+                clock: 0,
+                loads: 0,
+                hits: 0,
+                reloads: 0,
+                reload_errors: 0,
+                evictions: 0,
+            }),
+        }
+    }
+
+    /// The configured resident-byte budget.
+    pub fn max_bytes(&self) -> u64 {
+        self.max_bytes
+    }
+
+    /// Resident model count.
+    pub fn len(&self) -> usize {
+        self.state.lock().expect("registry poisoned").map.len()
+    }
+
+    /// Whether the registry holds nothing.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Files opened from disk so far (cold loads + reloads) — the
+    /// `GET /metrics` `cache_loads` field.
+    pub fn loads(&self) -> u64 {
+        let st = self.state.lock().expect("registry poisoned");
+        st.loads + st.reloads
+    }
+
+    /// Lookups served by a resident mapping — the `GET /metrics`
+    /// `cache_hits` field.
+    pub fn hits(&self) -> u64 {
+        self.state.lock().expect("registry poisoned").hits
+    }
+
+    /// Hot reloads that swapped in changed bytes.
+    pub fn reloads(&self) -> u64 {
+        self.state.lock().expect("registry poisoned").reloads
+    }
+
+    /// Measured resident bytes across every entry (grows as lazy
+    /// sections get touched).
+    pub fn resident_bytes(&self) -> u64 {
+        let st = self.state.lock().expect("registry poisoned");
+        st.map.values().map(|e| e.model.resident_bytes()).sum()
+    }
+
+    /// Fetch the model at `path`, opening it lazily on miss and
+    /// hot-reloading it if the file changed since it was mapped. See
+    /// the module docs for the full get/reload/evict contract.
+    pub fn get_or_load(&self, path: &Path) -> Result<Arc<MappedModel>> {
+        let now = stamp(path);
+        {
+            let mut st = self.state.lock().expect("registry poisoned");
+            st.clock += 1;
+            let tick = st.clock;
+            if let Some(e) = st.map.get_mut(path) {
+                e.last_used = tick;
+                match &now {
+                    Ok(s) if *s == e.stamp => {
+                        e.hits += 1;
+                        st.hits += 1;
+                        return Ok(e.model.clone());
+                    }
+                    Err(_) => {
+                        // stat raced a rename-replace: serve the
+                        // resident bytes, next get re-checks
+                        e.hits += 1;
+                        st.hits += 1;
+                        return Ok(e.model.clone());
+                    }
+                    Ok(_) => {} // stamp moved: fall through to reload
+                }
+            }
+        }
+        // cold miss or stale stamp: open with the lock released so
+        // requests against resident models keep flowing
+        let opened = open_model(path);
+        let mut st = self.state.lock().expect("registry poisoned");
+        st.clock += 1;
+        let tick = st.clock;
+        if let Some(e) = st.map.get_mut(path) {
+            e.last_used = tick;
+            let fresh = match opened {
+                Ok(m) => m,
+                Err(_) => {
+                    // bad deploy: keep serving the resident model
+                    e.reload_errors += 1;
+                    st.reload_errors += 1;
+                    return Ok(e.model.clone());
+                }
+            };
+            if fresh.section_fingerprint()
+                == e.model.section_fingerprint()
+            {
+                // same bytes (touch / idempotent rewrite): keep the
+                // warm mapping, just refresh the stamp
+                if let Ok(s) = stamp(path) {
+                    e.stamp = s;
+                }
+                e.hits += 1;
+                st.hits += 1;
+                return Ok(e.model.clone());
+            }
+            // atomic swap: in-flight requests finish on the old Arc
+            e.model = Arc::new(fresh);
+            if let Ok(s) = stamp(path) {
+                e.stamp = s;
+            }
+            e.reloads += 1;
+            st.reloads += 1;
+            let model = e.model.clone();
+            self.evict_over_budget(&mut st, path);
+            return Ok(model);
+        }
+        let model = Arc::new(opened?);
+        st.loads += 1;
+        let entry_stamp = now.or_else(|_| stamp(path))?;
+        st.map.insert(
+            path.to_path_buf(),
+            Entry {
+                model: model.clone(),
+                stamp: entry_stamp,
+                last_used: tick,
+                hits: 0,
+                reloads: 0,
+                reload_errors: 0,
+            },
+        );
+        self.evict_over_budget(&mut st, path);
+        Ok(model)
+    }
+
+    /// Drop LRU entries until the measured resident total fits the
+    /// budget, never evicting `keep`.
+    fn evict_over_budget(&self, st: &mut RegistryState, keep: &Path) {
+        loop {
+            let total: u64 = st
+                .map
+                .values()
+                .map(|e| e.model.resident_bytes())
+                .sum();
+            if total <= self.max_bytes || st.map.len() <= 1 {
+                return;
+            }
+            let victim = st
+                .map
+                .iter()
+                .filter(|(p, _)| p.as_path() != keep)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(p, _)| p.clone());
+            match victim {
+                Some(p) => {
+                    st.map.remove(&p);
+                    st.evictions += 1;
+                }
+                None => return,
+            }
+        }
+    }
+
+    /// Per-model + aggregate stats for `GET /metrics`: residency,
+    /// laziness (validated payload vs file bytes), hit/reload
+    /// counters. Keys are the model paths the clients used.
+    pub fn stats_json(&self) -> Value {
+        let st = self.state.lock().expect("registry poisoned");
+        let mut entries: Vec<(&PathBuf, &Entry)> =
+            st.map.iter().collect();
+        entries.sort_by(|a, b| a.0.cmp(b.0));
+        let per_model = Value::Obj(
+            entries
+                .into_iter()
+                .map(|(p, e)| {
+                    (
+                        p.display().to_string(),
+                        Value::obj(vec![
+                            (
+                                "resident_bytes",
+                                Value::Num(
+                                    e.model.resident_bytes() as f64,
+                                ),
+                            ),
+                            (
+                                "validated_payload_bytes",
+                                Value::Num(
+                                    e.model.validated_payload_bytes()
+                                        as f64,
+                                ),
+                            ),
+                            (
+                                "file_bytes",
+                                Value::Num(e.model.file_len() as f64),
+                            ),
+                            (
+                                "mapped",
+                                Value::Bool(e.model.is_mapped()),
+                            ),
+                            ("hits", Value::Num(e.hits as f64)),
+                            ("reloads", Value::Num(e.reloads as f64)),
+                            (
+                                "reload_errors",
+                                Value::Num(e.reload_errors as f64),
+                            ),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let resident: u64 =
+            st.map.values().map(|e| e.model.resident_bytes()).sum();
+        Value::obj(vec![
+            ("max_bytes", Value::Num(self.max_bytes as f64)),
+            ("resident_bytes", Value::Num(resident as f64)),
+            ("resident_models", Value::Num(st.map.len() as f64)),
+            ("loads", Value::Num(st.loads as f64)),
+            ("hits", Value::Num(st.hits as f64)),
+            ("reloads", Value::Num(st.reloads as f64)),
+            (
+                "reload_errors",
+                Value::Num(st.reload_errors as f64),
+            ),
+            ("evictions", Value::Num(st.evictions as f64)),
+            ("models", per_model),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{
+        DataConfig, EstimatorConfig, Method, ReduceConfig,
+    };
+    use crate::model::{fit_model, save_model, FitOptions};
+    use crate::volume::MorphometryGenerator;
+
+    /// Fit + save a tiny model under a unique stem; returns the path.
+    fn saved_model(tag: &str, seed: u64, note: &str) -> PathBuf {
+        let dc = DataConfig {
+            dims: [8, 9, 7],
+            n_samples: 24,
+            seed,
+            ..Default::default()
+        };
+        let (ds, y) = MorphometryGenerator::new(dc.dims)
+            .generate(dc.n_samples, seed);
+        let reduce = ReduceConfig {
+            method: Method::Fast,
+            ratio: 10,
+            ..Default::default()
+        };
+        let est = EstimatorConfig {
+            cv_folds: 3,
+            max_iter: 60,
+            ..Default::default()
+        };
+        let opts = FitOptions {
+            note: note.to_string(),
+            ..Default::default()
+        };
+        let model =
+            fit_model(&ds, &y, &reduce, &est, &dc, &opts).unwrap();
+        let dir = std::env::temp_dir().join("fastclust_registry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("{tag}.fcm"));
+        // rename-replacement, as the mmap safety contract requires
+        let tmp = dir.join(format!("{tag}.fcm.tmp"));
+        save_model(&tmp, &model).unwrap();
+        std::fs::rename(&tmp, &path).unwrap();
+        path
+    }
+
+    #[test]
+    fn hit_shares_the_same_arc() {
+        let path = saved_model("hit", 1, "a");
+        let reg = ModelRegistry::new(1 << 30);
+        let a = reg.get_or_load(&path).unwrap();
+        let b = reg.get_or_load(&path).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second get must be a hit");
+        assert_eq!(reg.loads(), 1);
+        assert_eq!(reg.hits(), 1);
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn byte_budget_evicts_least_recently_used() {
+        let p1 = saved_model("ev1", 1, "a");
+        let p2 = saved_model("ev2", 2, "a");
+        let p3 = saved_model("ev3", 3, "a");
+        let reg = ModelRegistry::new(1 << 30);
+        let m1 = reg.get_or_load(&p1).unwrap();
+        // force residency past O(header): decode everything
+        m1.to_fitted().unwrap();
+        let one = m1.resident_bytes();
+        drop(m1);
+        // room for ~2 fully-decoded models, not 3
+        let reg = ModelRegistry::new(one * 2 + one / 2);
+        reg.get_or_load(&p1).unwrap().to_fitted().unwrap();
+        reg.get_or_load(&p2).unwrap().to_fitted().unwrap();
+        reg.get_or_load(&p1).unwrap(); // p1 most recent
+        reg.get_or_load(&p3).unwrap().to_fitted().unwrap();
+        assert!(reg.len() <= 2, "resident: {}", reg.len());
+        assert_eq!(reg.loads(), 3);
+        reg.get_or_load(&p1).unwrap(); // survived (most recent)
+        assert_eq!(reg.loads(), 3);
+        reg.get_or_load(&p2).unwrap(); // was evicted: reloads
+        assert_eq!(reg.loads(), 4);
+    }
+
+    #[test]
+    fn lazy_entries_fit_where_decoded_ones_would_not() {
+        // the point of byte-based eviction: models that were only
+        // header-probed stay cheap, so many fit a small budget
+        let p1 = saved_model("lz1", 1, "a");
+        let p2 = saved_model("lz2", 2, "a");
+        let p3 = saved_model("lz3", 3, "a");
+        let probe = ModelRegistry::new(1 << 30);
+        let full = probe.get_or_load(&p1).unwrap();
+        full.to_fitted().unwrap();
+        let decoded = full.resident_bytes();
+        // budget below 2 decoded models but far above 3 lazy ones
+        let reg = ModelRegistry::new(decoded + decoded / 2);
+        for p in [&p1, &p2, &p3] {
+            reg.get_or_load(p).unwrap();
+        }
+        assert_eq!(reg.len(), 3, "header-only entries must all fit");
+        assert!(reg.resident_bytes() < decoded);
+    }
+
+    #[test]
+    fn hot_reload_swaps_changed_bytes() {
+        let path = saved_model("hot", 1, "v1");
+        let reg = ModelRegistry::new(1 << 30);
+        let before = reg.get_or_load(&path).unwrap();
+        assert_eq!(before.header().note, "v1");
+        // note length differs → len differs → stamp moves even if
+        // mtime granularity is coarse
+        saved_model("hot", 1, "v2-longer-note");
+        let after = reg.get_or_load(&path).unwrap();
+        assert_eq!(after.header().note, "v2-longer-note");
+        assert!(!Arc::ptr_eq(&before, &after));
+        assert_eq!(reg.reloads(), 1);
+        // the old Arc still serves its original bytes
+        assert_eq!(before.header().note, "v1");
+    }
+
+    #[test]
+    fn reload_failure_keeps_serving_resident_model() {
+        let path = saved_model("badreload", 1, "good");
+        let reg = ModelRegistry::new(1 << 30);
+        let good = reg.get_or_load(&path).unwrap();
+        // corrupt the file in place (different len → stamp moves)
+        std::fs::write(&path, b"FCMODEL1 garbage").unwrap();
+        let still = reg.get_or_load(&path).unwrap();
+        assert!(Arc::ptr_eq(&good, &still));
+        assert_eq!(still.header().note, "good");
+        assert_eq!(reg.reloads(), 0);
+        let stats = reg.stats_json();
+        assert_eq!(
+            stats
+                .get("reload_errors")
+                .unwrap()
+                .as_u64()
+                .unwrap(),
+            1
+        );
+    }
+
+    #[test]
+    fn identical_rewrite_is_not_a_reload() {
+        let path = saved_model("samebytes", 1, "same");
+        let reg = ModelRegistry::new(1 << 30);
+        let a = reg.get_or_load(&path).unwrap();
+        // rewrite identical bytes through a rename (mtime moves,
+        // fingerprint does not)
+        let bytes = std::fs::read(&path).unwrap();
+        let tmp = path.with_extension("fcm.tmp");
+        std::fs::write(&tmp, &bytes).unwrap();
+        std::fs::rename(&tmp, &path).unwrap();
+        let b = reg.get_or_load(&path).unwrap();
+        assert!(
+            Arc::ptr_eq(&a, &b),
+            "identical bytes must keep the warm mapping"
+        );
+        assert_eq!(reg.reloads(), 0);
+    }
+
+    #[test]
+    fn missing_file_is_an_error_not_a_panic() {
+        let reg = ModelRegistry::new(1 << 20);
+        assert!(reg
+            .get_or_load(Path::new("/nonexistent/m.fcm"))
+            .is_err());
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn stats_json_reports_per_model_residency() {
+        let path = saved_model("stats", 1, "s");
+        let reg = ModelRegistry::new(1 << 30);
+        let m = reg.get_or_load(&path).unwrap();
+        reg.get_or_load(&path).unwrap();
+        let v = reg.stats_json();
+        assert_eq!(
+            v.get("resident_models").unwrap().as_u64().unwrap(),
+            1
+        );
+        assert_eq!(v.get("loads").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(v.get("hits").unwrap().as_u64().unwrap(), 1);
+        let key = path.display().to_string();
+        let per = v.get("models").unwrap().get(&key).unwrap();
+        let resident =
+            per.get("resident_bytes").unwrap().as_u64().unwrap();
+        assert!(resident > 0);
+        assert!(resident < m.file_len());
+        assert!(per.get("mapped").unwrap().as_bool().is_some());
+        assert!(crate::json::parse(&v.to_string()).is_ok());
+    }
+}

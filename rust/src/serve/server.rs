@@ -40,7 +40,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::batch::{Batch, Batcher, PendingReq, Verb, Wire};
-use super::cache::ModelCache;
+use super::registry::ModelRegistry;
 use super::event_loop::{
     sys_fd, Event, Fd, Interest, Poller, Token, WakePipe, Waker,
 };
@@ -52,7 +52,7 @@ use super::protocol::{
 use crate::coordinator::WorkerPool;
 use crate::error::{invalid, Result};
 use crate::json::{self, Value};
-use crate::model::FittedModel;
+use crate::model::MappedModel;
 use crate::volume::FeatureMatrix;
 
 /// Idle wait bound: how long a quiet loop sleeps before rechecking
@@ -84,8 +84,11 @@ pub struct ServeOptions {
     pub http_port: Option<u16>,
     /// Worker threads; `0` = available parallelism.
     pub workers: usize,
-    /// Resident-model budget of the LRU cache.
-    pub cache_capacity: usize,
+    /// Resident-byte budget of the model registry (ADR-008): LRU
+    /// models are evicted once the *measured* resident total — lazy
+    /// mapped models cost O(touched sections), not file size —
+    /// exceeds it.
+    pub max_model_bytes: u64,
     /// Batch size cap (requests per pool job).
     pub max_batch: usize,
     /// Connection budget across both listeners; accepts past it are
@@ -100,15 +103,16 @@ pub struct ServeOptions {
 
 impl ServeOptions {
     /// Defaults around a model path: ephemeral binary port, no HTTP
-    /// gateway, auto workers, 4-model cache, batches of up to 64
-    /// requests, 256-connection budget, 200 µs flush window, no log.
+    /// gateway, auto workers, a 1 GiB registry byte budget, batches
+    /// of up to 64 requests, 256-connection budget, 200 µs flush
+    /// window, no log.
     pub fn new(model: impl Into<PathBuf>) -> Self {
         ServeOptions {
             model: model.into(),
             port: 0,
             http_port: None,
             workers: 0,
-            cache_capacity: 4,
+            max_model_bytes: 1 << 30,
             max_batch: 64,
             max_connections: 256,
             batch_window_us: 200,
@@ -189,7 +193,7 @@ impl ServeLog {
 
 /// Everything the loop and the worker jobs share.
 struct ServerCtx {
-    cache: ModelCache,
+    registry: ModelRegistry,
     default_model: PathBuf,
     model_dir: PathBuf,
     shutdown: AtomicBool,
@@ -237,7 +241,7 @@ impl Server {
             .unwrap_or_else(|| Path::new("."))
             .to_path_buf();
         let ctx = Arc::new(ServerCtx {
-            cache: ModelCache::new(opts.cache_capacity),
+            registry: ModelRegistry::new(opts.max_model_bytes),
             default_model: opts.model.clone(),
             model_dir,
             shutdown: AtomicBool::new(false),
@@ -245,7 +249,9 @@ impl Server {
             metrics: Metrics::new(),
             log: ServeLog::new(opts.log_path.as_deref())?,
         });
-        let model = ctx.cache.get_or_load(&opts.model)?;
+        // mapping the default model fails fast on a bad path while
+        // costing only O(header) bytes until traffic touches it
+        let model = ctx.registry.get_or_load(&opts.model)?;
         let mut poller = Poller::new()?;
         let wake = WakePipe::new()?;
         poller.add(sys_fd(&listener), TOK_BINARY, Interest::READ)?;
@@ -259,9 +265,9 @@ impl Server {
             "listening on {addr}: model {} (method {}, p={}, k={}), \
              {workers} workers",
             opts.model.display(),
-            model.header.method.name(),
-            model.header.p,
-            model.header.k
+            model.header().method.name(),
+            model.header().p,
+            model.header().k
         ));
         ctx.log.line(&format!(
             "serve backend {}: {} connection budget, {} µs batch \
@@ -338,9 +344,11 @@ impl ServerHandle {
     /// The full observability snapshot — exactly the JSON that
     /// `GET /metrics` serves.
     pub fn metrics_json(&self) -> Value {
-        self.ctx
-            .metrics
-            .to_json(self.ctx.cache.loads(), self.ctx.cache.hits())
+        self.ctx.metrics.to_json(
+            self.ctx.registry.loads(),
+            self.ctx.registry.hits(),
+            self.ctx.registry.stats_json(),
+        )
     }
 
     /// Stop accepting, drain batches and workers, return the final
@@ -381,15 +389,18 @@ impl Drop for ServerHandle {
     }
 }
 
-/// Resolve a request's model name against the cache. Empty = the
+/// Resolve a request's model name against the registry. Empty = the
 /// default model; anything else must be a bare file name (no path
 /// separators, no leading dot) inside the server's model directory.
+/// The registry re-stamps the file on every resolve, so a
+/// rename-replaced model hot-reloads here while in-flight batches
+/// finish on the `Arc` they already hold.
 fn resolve_model(
     ctx: &ServerCtx,
     name: &str,
-) -> Result<Arc<FittedModel>> {
+) -> Result<Arc<MappedModel>> {
     if name.is_empty() {
-        return ctx.cache.get_or_load(&ctx.default_model);
+        return ctx.registry.get_or_load(&ctx.default_model);
     }
     let legal = !name.starts_with('.')
         && name.chars().all(|c| {
@@ -398,7 +409,7 @@ fn resolve_model(
     if !legal {
         return Err(invalid(format!("illegal model name '{name}'")));
     }
-    ctx.cache.get_or_load(&ctx.model_dir.join(name))
+    ctx.registry.get_or_load(&ctx.model_dir.join(name))
 }
 
 // --------------------------------------------------------- event loop
@@ -843,8 +854,9 @@ impl EventLoop {
                     .ctx
                     .metrics
                     .to_json(
-                        self.ctx.cache.loads(),
-                        self.ctx.cache.hits(),
+                        self.ctx.registry.loads(),
+                        self.ctx.registry.hits(),
+                        self.ctx.registry.stats_json(),
                     )
                     .to_string();
                 let bytes =
@@ -1150,11 +1162,18 @@ fn execute_batch(ctx: &ServerCtx, batch: Batch) -> Completion {
                 .collect()
         }
         Ok(m) => match batch.verb {
-            Verb::Info => batch
-                .reqs
-                .iter()
-                .map(|_| Out::Info(m.info_json().to_string()))
-                .collect(),
+            Verb::Info => {
+                // lazy decode: HEAD + FOLD only, shared by the batch
+                let info = m.info_json().map(|v| v.to_string());
+                batch
+                    .reqs
+                    .iter()
+                    .map(|_| match &info {
+                        Ok(s) => Out::Info(s.clone()),
+                        Err(e) => Out::Fail(e.to_string()),
+                    })
+                    .collect()
+            }
             Verb::Predict => run_predict(m, &batch.reqs),
             Verb::Compress => run_compress(m, &batch.reqs),
         },
@@ -1191,7 +1210,7 @@ fn execute_batch(ctx: &ServerCtx, batch: Batch) -> Completion {
 /// kernel on the predict path is row-independent; a failure (the
 /// dimension check) depends only on the column count the group is
 /// keyed on, so error text matches the unbatched path too.
-fn run_predict(m: &FittedModel, reqs: &[PendingReq]) -> Vec<Out> {
+fn run_predict(m: &MappedModel, reqs: &[PendingReq]) -> Vec<Out> {
     if reqs.len() == 1 {
         let x = reqs[0].x.as_ref().expect("kernel verb carries x");
         return vec![match m.predict_proba(x) {
@@ -1221,7 +1240,7 @@ fn run_predict(m: &FittedModel, reqs: &[PendingReq]) -> Vec<Out> {
 }
 
 /// Same coalescing for compress; the `(c, k)` result splits by row.
-fn run_compress(m: &FittedModel, reqs: &[PendingReq]) -> Vec<Out> {
+fn run_compress(m: &MappedModel, reqs: &[PendingReq]) -> Vec<Out> {
     if reqs.len() == 1 {
         let x = reqs[0].x.as_ref().expect("kernel verb carries x");
         return vec![match m.compress(x) {

@@ -1,0 +1,490 @@
+//! Integration suite for the zero-copy model fleet (ADR-008): the
+//! mmap-backed `.fcm` loader and the byte-budget [`ModelRegistry`]
+//! behind `repro serve`.
+//!
+//! Pins the PR's acceptance criteria:
+//!
+//! * a cold open of a multi-MB artifact validates O(header) payload
+//!   bytes — observed through [`MappedModel`]'s residency stats, the
+//!   registry's `stats_json`, and the live `GET /metrics` endpoint;
+//! * every concurrently resident model serves predictions
+//!   bit-identical to the offline apply-only path on the same file;
+//! * rename-replacing a model under concurrent predict traffic is
+//!   atomic: every response matches one of the two versions exactly,
+//!   the new bytes win eventually, and nothing errors.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fastclust::config::{
+    DataConfig, EstimatorConfig, Method, ReduceConfig,
+};
+use fastclust::json;
+use fastclust::model::{
+    crc32, fit_model, load_model, open_model, save_model, FitOptions,
+    FittedModel,
+};
+use fastclust::serve::{
+    ModelRegistry, Request, Response, ServeClient, ServeOptions,
+    Server,
+};
+use fastclust::volume::{FeatureMatrix, MorphometryGenerator};
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_TARGET_TMPDIR"))
+        .join(format!("model_registry_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The shared cohort every model in this suite is fitted on (same
+/// mask ⇒ same request width, so versions are swappable in place).
+fn cohort() -> (
+    fastclust::volume::MaskedDataset,
+    Vec<u8>,
+    DataConfig,
+) {
+    let dc = DataConfig {
+        dims: [10, 11, 9],
+        n_samples: 36,
+        seed: 17,
+        ..Default::default()
+    };
+    let (ds, y) = MorphometryGenerator::new(dc.dims)
+        .generate(dc.n_samples, dc.seed);
+    (ds, y, dc)
+}
+
+/// Fit a variant of the shared cohort's model. `sgd_epochs` and
+/// `max_iter` steer the weights so variants disagree on purpose;
+/// different `note` lengths guarantee the files differ in length
+/// (stamp changes survive coarse mtime granularity).
+fn fit_variant(
+    sgd_epochs: usize,
+    max_iter: usize,
+    note: &str,
+) -> FittedModel {
+    let (ds, y, dc) = cohort();
+    let reduce = ReduceConfig {
+        method: Method::Fast,
+        ratio: 10,
+        ..Default::default()
+    };
+    let est = EstimatorConfig {
+        cv_folds: 3,
+        max_iter,
+        ..Default::default()
+    };
+    let opts = FitOptions {
+        sgd_epochs,
+        sgd_chunk: 8,
+        note: note.to_string(),
+    };
+    fit_model(&ds, &y, &reduce, &est, &dc, &opts).unwrap()
+}
+
+/// Write `bytes` at `path` through a same-directory rename — the
+/// deploy discipline the mmap safety contract requires.
+fn write_replace(path: &Path, bytes: &[u8]) {
+    let tmp = path.with_extension("fcm.tmp");
+    std::fs::write(&tmp, bytes).unwrap();
+    std::fs::rename(&tmp, path).unwrap();
+}
+
+/// Byte offset of the `END ` section inside a canonical `.fcm`.
+fn end_offset(bytes: &[u8]) -> usize {
+    let mut off = 8; // magic
+    loop {
+        let tag = &bytes[off..off + 4];
+        let len = u64::from_le_bytes(
+            bytes[off + 4..off + 12].try_into().unwrap(),
+        ) as usize;
+        if tag == b"END " {
+            return off;
+        }
+        off += 4 + 8 + len + 4;
+    }
+}
+
+/// Splice an unknown `PAD0` section of `mb` MiB before `END `,
+/// producing a well-formed multi-MB artifact whose bulk no decode
+/// path ever needs — the probe for O(header) cold opens.
+fn pad_artifact(path: &Path, mb: usize) {
+    let bytes = std::fs::read(path).unwrap();
+    let end = end_offset(&bytes);
+    let payload = vec![0xA5u8; mb << 20];
+    let mut out = Vec::with_capacity(bytes.len() + payload.len() + 16);
+    out.extend_from_slice(&bytes[..end]);
+    out.extend_from_slice(b"PAD0");
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out.extend_from_slice(&crc32(&payload).to_le_bytes());
+    out.extend_from_slice(&bytes[end..]);
+    write_replace(path, &out);
+}
+
+/// A `(rows, p)` request block drawn from the cohort.
+fn block(rows: usize) -> FeatureMatrix {
+    let (ds, _, _) = cohort();
+    let xs = ds.data().transpose();
+    xs.select_rows(&(0..rows.min(xs.rows)).collect::<Vec<_>>())
+}
+
+// ------------------------------------------------- lazy residency
+
+#[test]
+fn cold_open_of_multi_mb_artifact_is_o_header() {
+    let dir = scratch("lazy");
+    let path = dir.join("padded.fcm");
+    save_model(&path, &fit_variant(0, 60, "padded")).unwrap();
+    pad_artifact(&path, 4);
+
+    let m = open_model(&path).unwrap();
+    assert!(m.file_len() > 4 << 20, "file: {} bytes", m.file_len());
+    // the probe: only HEAD's payload has been CRC'd and decoded
+    assert!(
+        m.validated_payload_bytes() < 4096,
+        "cold open validated {} payload bytes",
+        m.validated_payload_bytes()
+    );
+    assert!(
+        m.resident_bytes() < 16 << 10,
+        "cold open resident: {} bytes",
+        m.resident_bytes()
+    );
+    assert_eq!(m.header().note, "padded");
+
+    // streaming loader agrees the padded artifact is valid, and is
+    // the offline truth the mapped apply path must reproduce
+    let offline = load_model(&path).unwrap();
+    let x = block(5);
+    assert_eq!(
+        m.predict_proba(&x).unwrap(),
+        offline.predict_proba(&x).unwrap(),
+        "mapped predict != streaming predict"
+    );
+    // predict touched REDU + FOLD, never the 4 MiB pad
+    assert!(
+        m.validated_payload_bytes() < 1 << 20,
+        "predict validated {} payload bytes",
+        m.validated_payload_bytes()
+    );
+    // a deep sweep does touch everything, pad included
+    m.validate_all_sections().unwrap();
+    assert!(m.validated_payload_bytes() > 4 << 20);
+
+    // the same laziness, observed through registry stats
+    let reg = ModelRegistry::new(1 << 30);
+    reg.get_or_load(&path).unwrap();
+    let stats = reg.stats_json();
+    let per = stats
+        .get("models")
+        .unwrap()
+        .get(&path.display().to_string())
+        .unwrap();
+    let validated = per
+        .get("validated_payload_bytes")
+        .unwrap()
+        .as_u64()
+        .unwrap();
+    let file = per.get("file_bytes").unwrap().as_u64().unwrap();
+    assert!(
+        validated < 4096 && file > 4 << 20,
+        "registry stats: validated {validated} of {file} bytes"
+    );
+}
+
+// ------------------------------------- concurrent resident models
+
+#[test]
+fn resident_models_serve_bit_identical_answers() {
+    let dir = scratch("fleet");
+    // batch vs 4-epoch SGD vs 8-epoch SGD: three sets of weights
+    // that cannot coincide
+    let specs: [(&str, usize, usize); 3] = [
+        ("a.fcm", 0, 60),
+        ("b.fcm", 4, 60),
+        ("c.fcm", 8, 60),
+    ];
+    let mut truths = Vec::new();
+    let x = block(6);
+    for (name, sgd, iters) in specs {
+        let path = dir.join(name);
+        save_model(&path, &fit_variant(sgd, iters, name)).unwrap();
+        let offline = load_model(&path).unwrap();
+        truths.push((
+            name.to_string(),
+            offline.predict_proba(&x).unwrap(),
+        ));
+    }
+    // the fleet must actually disagree, or identity proves nothing
+    assert_ne!(truths[0].1, truths[1].1);
+    assert_ne!(truths[0].1, truths[2].1);
+    assert_ne!(truths[1].1, truths[2].1);
+
+    let mut opts = ServeOptions::new(dir.join("a.fcm"));
+    opts.workers = 2;
+    let handle = Server::start(opts).unwrap();
+    let mut client = ServeClient::connect(handle.addr()).unwrap();
+    for round in 0..3 {
+        // one pipelined burst across all three models, so they are
+        // resident — and answering — concurrently
+        let rqs: Vec<Request> = truths
+            .iter()
+            .map(|(name, _)| Request::Predict {
+                // "" routes to the default model, which is a.fcm
+                model: if name == "a.fcm" {
+                    String::new()
+                } else {
+                    name.clone()
+                },
+                x: x.clone(),
+            })
+            .collect();
+        let responses = client.call_pipelined(&rqs).unwrap();
+        for ((name, want), got) in truths.iter().zip(responses) {
+            match got {
+                Response::Probabilities(p) => assert_eq!(
+                    &p, want,
+                    "round {round}: served {name} != offline"
+                ),
+                other => panic!("{name}: {other:?}"),
+            }
+        }
+    }
+    // model-info on a named model resolves the same registry entry
+    let info = client.model_info_named("b.fcm").unwrap();
+    assert_eq!(
+        info.get("note").unwrap().as_str().unwrap(),
+        "b.fcm"
+    );
+    drop(client);
+    let stats = handle.shutdown().unwrap();
+    assert_eq!(stats.errors, 0);
+}
+
+// --------------------------------------------- hot reload, raced
+
+#[test]
+fn hot_reload_under_concurrent_predict_traffic() {
+    let dir = scratch("reload");
+    let default = dir.join("default.fcm");
+    save_model(&default, &fit_variant(0, 60, "default")).unwrap();
+    let hot = dir.join("hot.fcm");
+
+    // two versions with different weights and different lengths
+    let v1 = fit_variant(0, 60, "v1");
+    let v2 = fit_variant(4, 60, "v2-with-a-longer-note");
+    let bytes = |m: &FittedModel| {
+        let p = dir.join("stage.fcm");
+        save_model(&p, m).unwrap();
+        std::fs::read(&p).unwrap()
+    };
+    let (b1, b2) = (bytes(&v1), bytes(&v2));
+    let x = block(4);
+    let want1 = v1.predict_proba(&x).unwrap();
+    let want2 = v2.predict_proba(&x).unwrap();
+    assert_ne!(want1, want2, "versions must disagree");
+
+    write_replace(&hot, &b1);
+    let mut opts = ServeOptions::new(&default);
+    opts.workers = 2;
+    let handle = Server::start(opts).unwrap();
+    let addr = handle.addr();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for c in 0..4 {
+            let stop = stop.clone();
+            let (x, want1, want2) = (&x, &want1, &want2);
+            joins.push(scope.spawn(move || {
+                let mut client = ServeClient::connect(addr).unwrap();
+                let mut seen = [false, false];
+                while !stop.load(Ordering::Relaxed) {
+                    let rs = client
+                        .call_pipelined(&[Request::Predict {
+                            model: "hot.fcm".into(),
+                            x: x.clone(),
+                        }])
+                        .unwrap();
+                    match &rs[0] {
+                        Response::Probabilities(p) if p == want1 => {
+                            seen[0] = true;
+                        }
+                        Response::Probabilities(p) if p == want2 => {
+                            seen[1] = true;
+                        }
+                        other => panic!(
+                            "client {c}: response matches neither \
+                             version: {other:?}"
+                        ),
+                    }
+                }
+                seen
+            }));
+        }
+        // rename-replace the artifact under the live traffic
+        for flip in 0..6 {
+            std::thread::sleep(Duration::from_millis(25));
+            write_replace(
+                &hot,
+                if flip % 2 == 0 { &b2 } else { &b1 },
+            );
+        }
+        write_replace(&hot, &b2);
+        std::thread::sleep(Duration::from_millis(25));
+        stop.store(true, Ordering::Relaxed);
+        let mut any_v1 = false;
+        for j in joins {
+            let seen = j.join().expect("predict thread panicked");
+            any_v1 |= seen[0];
+        }
+        assert!(any_v1, "no thread ever saw v1 — race never ran");
+    });
+
+    // the final bytes win: a fresh client converges on v2
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut client = ServeClient::connect(addr).unwrap();
+    loop {
+        let rs = client
+            .call_pipelined(&[Request::Predict {
+                model: "hot.fcm".into(),
+                x: x.clone(),
+            }])
+            .unwrap();
+        match &rs[0] {
+            Response::Probabilities(p) if *p == want2 => break,
+            Response::Probabilities(p) => assert_eq!(
+                p, &want1,
+                "post-swap response matches neither version"
+            ),
+            other => panic!("post-swap: {other:?}"),
+        }
+        assert!(
+            Instant::now() < deadline,
+            "server never converged on the replaced bytes"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    drop(client);
+    let stats = handle.shutdown().unwrap();
+    assert_eq!(stats.errors, 0, "reload race produced errors");
+}
+
+// ------------------------------------------------- GET /metrics
+
+/// Blocking HTTP/1.1 exchange on a persistent connection.
+fn http_exchange(
+    writer: &mut TcpStream,
+    reader: &mut impl BufRead,
+    req: &str,
+) -> (u16, String) {
+    writer.write_all(req.as_bytes()).unwrap();
+    let mut head = String::new();
+    loop {
+        let mut line = String::new();
+        assert!(
+            reader.read_line(&mut line).unwrap() > 0,
+            "connection closed mid-response"
+        );
+        if line == "\r\n" {
+            break;
+        }
+        head.push_str(&line);
+    }
+    let status: u16 = head
+        .lines()
+        .next()
+        .and_then(|l| l.split(' ').nth(1))
+        .and_then(|s| s.parse().ok())
+        .expect("status line");
+    let clen: usize = head
+        .lines()
+        .find_map(|l| {
+            let (k, v) = l.split_once(':')?;
+            k.eq_ignore_ascii_case("content-length")
+                .then(|| v.trim().parse().ok())?
+        })
+        .expect("content-length");
+    let mut body = vec![0u8; clen];
+    reader.read_exact(&mut body).unwrap();
+    (status, String::from_utf8(body).unwrap())
+}
+
+#[test]
+fn metrics_endpoint_reports_lazy_residency() {
+    let dir = scratch("metrics");
+    let path = dir.join("padded.fcm");
+    save_model(&path, &fit_variant(0, 60, "padded")).unwrap();
+    pad_artifact(&path, 4);
+
+    let mut opts = ServeOptions::new(&path);
+    opts.workers = 1;
+    opts.http_port = Some(0);
+    let handle = Server::start(opts).unwrap();
+    let http_addr = handle.http_addr().unwrap();
+
+    let mut writer = TcpStream::connect(http_addr).unwrap();
+    let mut reader =
+        BufReader::new(writer.try_clone().unwrap());
+    let (code, body) = http_exchange(
+        &mut writer,
+        &mut reader,
+        "GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n",
+    );
+    assert_eq!(code, 200);
+    let v = json::parse(&body).unwrap();
+    let per = v
+        .get("registry")
+        .unwrap()
+        .get("models")
+        .unwrap()
+        .get(&path.display().to_string())
+        .unwrap();
+    let validated = per
+        .get("validated_payload_bytes")
+        .unwrap()
+        .as_u64()
+        .unwrap();
+    let file = per.get("file_bytes").unwrap().as_u64().unwrap();
+    assert!(
+        validated < 4096,
+        "eager server start validated {validated} payload bytes"
+    );
+    assert!(file > 4 << 20, "metrics file_bytes: {file}");
+
+    // traffic touches REDU + FOLD but still never the pad
+    let offline = load_model(&path).unwrap();
+    let x = block(3);
+    let mut client = ServeClient::connect(handle.addr()).unwrap();
+    assert_eq!(
+        client.predict(&x).unwrap(),
+        offline.predict_proba(&x).unwrap()
+    );
+    drop(client);
+    let (code, body) = http_exchange(
+        &mut writer,
+        &mut reader,
+        "GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n",
+    );
+    assert_eq!(code, 200);
+    let v = json::parse(&body).unwrap();
+    let reg = v.get("registry").unwrap();
+    let resident =
+        reg.get("resident_bytes").unwrap().as_u64().unwrap();
+    assert!(
+        resident > 0 && resident < 1 << 20,
+        "post-traffic resident_bytes: {resident}"
+    );
+    assert!(
+        reg.get("hits").unwrap().as_u64().unwrap() > 0,
+        "predict traffic must hit the resident mapping"
+    );
+    drop(writer);
+    handle.shutdown().unwrap();
+}

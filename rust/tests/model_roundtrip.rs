@@ -13,8 +13,8 @@ use fastclust::config::{
 };
 use fastclust::coordinator::run_decoding_pipeline;
 use fastclust::model::{
-    fit_model, load_model, read_fcm_header, save_model, FitOptions,
-    FittedModel,
+    fit_model, load_model, open_model, read_fcm_header, save_model,
+    FitOptions, FittedModel,
 };
 use fastclust::volume::{MaskedDataset, MorphometryGenerator};
 
@@ -104,6 +104,16 @@ fn roundtrip_case(tag: &str, method: Method, shards: usize, sgd: bool) {
     save_model(&path, &fitted).unwrap();
     let loaded = load_model(&path).unwrap();
     assert_bit_identical(&fitted, &loaded);
+    // the zero-copy loader (ADR-008) agrees with the streaming one
+    // bit-for-bit, on both the decoded model and the apply path
+    let mapped = open_model(&path).unwrap();
+    let xs = ds.data().transpose();
+    assert_eq!(
+        mapped.predict_proba(&xs).unwrap(),
+        loaded.predict_proba(&xs).unwrap(),
+        "{tag}: mapped predict != streaming predict"
+    );
+    assert_bit_identical(&fitted, &mapped.to_fitted().unwrap());
     let replayed = loaded.predict_fold_accuracies(&ds, &y).unwrap();
     assert_eq!(
         replayed, inmem,

@@ -445,6 +445,117 @@ fn json_fuzz_scanners_survive_garbage() {
     assert!(json::scan_path(&deep, &["x", "x", "x"]).is_err());
 }
 
+// -------------------------------------- mapped .fcm loader (ADR-008)
+
+/// The committed golden model, as bytes to mutate.
+fn fcm_fixture_bytes() -> Vec<u8> {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/tiny.fcm");
+    std::fs::read(path).unwrap()
+}
+
+/// Write `bytes` under a unique name and run them through the full
+/// lazy path: `open_model` (header-eager) then `to_fitted` (which
+/// checksums and decodes every section). Returns the combined
+/// result; the caller asserts on it. mmap needs a real file, so the
+/// sweep goes through disk.
+fn open_fully(
+    dir: &std::path::Path,
+    name: &str,
+    bytes: &[u8],
+) -> Result<(), String> {
+    let path = dir.join(name);
+    std::fs::write(&path, bytes).unwrap();
+    fastclust::model::open_model(&path)
+        .and_then(|m| m.to_fitted())
+        .map(|_| ())
+        .map_err(|e| e.to_string())
+}
+
+fn fcm_scratch(tag: &str) -> std::path::PathBuf {
+    let dir = std::path::PathBuf::from(env!("CARGO_TARGET_TMPDIR"))
+        .join(format!("fcm_fuzz_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Every strict prefix of a valid `.fcm` must come back as a clean
+/// error from the mapped loader — never a panic, OOB read or
+/// partial model.
+#[test]
+fn fcm_mmap_truncation_sweep() {
+    let bytes = fcm_fixture_bytes();
+    let dir = fcm_scratch("trunc");
+    for cut in 0..bytes.len() {
+        assert!(
+            open_fully(&dir, "t.fcm", &bytes[..cut]).is_err(),
+            "cut {cut}: mapped loader accepted a truncated file"
+        );
+    }
+    // and the untruncated file decodes (the sweep is honest)
+    open_fully(&dir, "t.fcm", &bytes).unwrap();
+}
+
+/// Single-byte corruption anywhere in the artifact must surface as
+/// an error once every section is touched: magic and structure are
+/// checked by the index walk, payload bytes by the per-section
+/// CRCs on first touch.
+#[test]
+fn fcm_mmap_bitflip_sweep() {
+    let bytes = fcm_fixture_bytes();
+    let dir = fcm_scratch("flip");
+    for off in 0..bytes.len() {
+        for flip in [0x01u8, 0x80, 0xFF] {
+            let mut bad = bytes.clone();
+            bad[off] ^= flip;
+            assert!(
+                open_fully(&dir, "f.fcm", &bad).is_err(),
+                "offset {off} flip {flip:#04x}: corruption \
+                 survived the mapped load"
+            );
+        }
+    }
+}
+
+/// Hostile section length claims: a small file whose section header
+/// promises gigabytes must fail fast in the index walk — no
+/// allocation, no checksum pass over memory that does not exist.
+#[test]
+fn fcm_mmap_oversized_length_claims() {
+    let dir = fcm_scratch("claims");
+    for claim in [
+        (1u64 << 30) + 1, // just over MAX_SECTION_BYTES
+        1u64 << 40,
+        u64::MAX,
+        u64::MAX - 3, // start + len + 4 must not wrap
+    ] {
+        let mut bytes = b"FCMODEL1".to_vec();
+        bytes.extend_from_slice(b"HEAD");
+        bytes.extend_from_slice(&claim.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 64]); // far short of claim
+        let t0 = std::time::Instant::now();
+        let err =
+            open_fully(&dir, "c.fcm", &bytes).unwrap_err();
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(5),
+            "claim {claim}: mapped loader stalled"
+        );
+        assert!(
+            err.contains("corrupt") || err.contains("truncated"),
+            "claim {claim}: unexpected error: {err}"
+        );
+    }
+    // an in-bounds claim that overruns the actual file is a clean
+    // truncation error too
+    let mut bytes = b"FCMODEL1".to_vec();
+    bytes.extend_from_slice(b"HEAD");
+    bytes.extend_from_slice(&4096u64.to_le_bytes());
+    bytes.extend_from_slice(&[0u8; 32]);
+    assert!(open_fully(&dir, "c.fcm", &bytes)
+        .unwrap_err()
+        .contains("truncated"));
+}
+
 /// Concatenated valid frames with garbage between them: the dist
 /// reader must decode the first frame and fail (not panic) on the
 /// garbage that follows.
