@@ -6,9 +6,13 @@
 //!   `.fcm` must be byte-identical to the local artifact;
 //! * **distributed-fault** — same fleet with worker 0 armed to die
 //!   mid-range (`kill:0`): the coordinator must recover *and* the
-//!   artifact must still be byte-identical.
+//!   artifact must still be byte-identical;
+//! * **distributed-clustering** — the fast-sharded method with
+//!   stage 1 itself sharded over the workers (ADR-009,
+//!   `--distribute-clustering`): the `.fcm` must be byte-identical
+//!   to a single-process fast-sharded fit.
 //!
-//! Both identity checks are hard gates — wall time is recorded for
+//! All identity checks are hard gates — wall time is recorded for
 //! the trajectory (`BENCH_distributed.json`), but a fast wrong answer
 //! is a regression here, not a win.
 //!
@@ -99,10 +103,19 @@ pub struct DistBenchResult {
     pub dist_report: DistReport,
     /// Fault-run scheduling report.
     pub fault_report: DistReport,
+    /// Wall seconds, single-process fast-sharded fit.
+    pub shard_local_secs: f64,
+    /// Wall seconds, distributed-clustering run (ADR-009).
+    pub shard_dist_secs: f64,
+    /// Distributed-clustering scheduling report.
+    pub shard_report: DistReport,
     /// Clean `.fcm` bytes == local `.fcm` bytes.
     pub identical_clean: bool,
     /// Fault-run `.fcm` bytes == local `.fcm` bytes.
     pub identical_fault: bool,
+    /// Distributed-clustering `.fcm` bytes == local fast-sharded
+    /// `.fcm` bytes.
+    pub identical_sharded: bool,
 }
 
 /// The ADR-006 acceptance gates: byte-identity with and without an
@@ -119,6 +132,12 @@ pub fn check_gates(r: &DistBenchResult) -> Result<()> {
         return Err(invalid(
             "REGRESSION: distributed .fcm differs from the \
              single-process artifact after fault recovery",
+        ));
+    }
+    if !r.identical_sharded {
+        return Err(invalid(
+            "REGRESSION: distribute-clustering .fcm differs from \
+             the single-process fast-sharded artifact",
         ));
     }
     Ok(())
@@ -191,6 +210,37 @@ pub fn run(cfg: &DistBenchConfig) -> Result<DistBenchResult> {
     save_model(&fault_path, &fault)?;
     let identical_fault = fs::read(&fault_path)? == local_bytes;
 
+    // ADR-009 row: fast-sharded stage 1 distributed over the same
+    // fleet. Shards are pinned (not core-count resolved) so the
+    // reference fit and the distributed fit agree on the plan on any
+    // machine.
+    let sharded = ReduceConfig {
+        method: Method::FastSharded,
+        shards: 2,
+        ..reduce.clone()
+    };
+    let t0 = std::time::Instant::now();
+    let shard_local =
+        fit_model(&ds, &labels, &sharded, &est, &dc, &opts)?;
+    let shard_local_secs = t0.elapsed().as_secs_f64();
+    let shard_local_path = dir.join("shard_local.fcm");
+    save_model(&shard_local_path, &shard_local)?;
+    let shard_local_bytes = fs::read(&shard_local_path)?;
+
+    let distc = DistOptions {
+        distribute_clustering: true,
+        ..dist.clone()
+    };
+    let t0 = std::time::Instant::now();
+    let (shard_dist, shard_report) = run_distributed_fit(
+        &ds, &labels, &sharded, &est, &dc, &opts, &distc,
+    )?;
+    let shard_dist_secs = t0.elapsed().as_secs_f64();
+    let shard_dist_path = dir.join("shard_dist.fcm");
+    save_model(&shard_dist_path, &shard_dist)?;
+    let identical_sharded =
+        fs::read(&shard_dist_path)? == shard_local_bytes;
+
     let _ = fs::remove_dir_all(&dir);
     let accs: Vec<f64> =
         local.folds.iter().map(|f| f.accuracy).collect();
@@ -203,8 +253,12 @@ pub fn run(cfg: &DistBenchConfig) -> Result<DistBenchResult> {
         fault_secs,
         dist_report,
         fault_report,
+        shard_local_secs,
+        shard_dist_secs,
+        shard_report,
         identical_clean,
         identical_fault,
+        identical_sharded,
     })
 }
 
@@ -257,6 +311,24 @@ pub fn table(r: &DistBenchResult) -> Table {
         format!("{:.4}", r.accuracy),
         format!("{:.4}", r.accuracy),
     ]);
+    t.row(vec![
+        "dist-clustering secs".into(),
+        format!("{:.3} (sharded ref)", r.shard_local_secs),
+        format!("{:.3}", r.shard_dist_secs),
+        "-".into(),
+    ]);
+    t.row(vec![
+        "dist-clustering blocks".into(),
+        "-".into(),
+        format!("{}", r.shard_report.range_blocks),
+        "-".into(),
+    ]);
+    t.row(vec![
+        "dist-clustering identical".into(),
+        "(reference)".into(),
+        yn(r.identical_sharded),
+        "-".into(),
+    ]);
     t
 }
 
@@ -284,6 +356,13 @@ pub fn report_json(r: &DistBenchResult) -> Value {
             ),
             ("identical_clean", b(r.identical_clean)),
             ("identical_fault", b(r.identical_fault)),
+            ("shard_local_secs", r.shard_local_secs),
+            ("shard_dist_secs", r.shard_dist_secs),
+            (
+                "shard_range_blocks",
+                r.shard_report.range_blocks as f64,
+            ),
+            ("identical_sharded", b(r.identical_sharded)),
         ],
     )
 }
@@ -301,9 +380,8 @@ mod tests {
         assert!(q.workers < d.workers);
     }
 
-    #[test]
-    fn gates_require_both_identities() {
-        let mk = |clean: bool, fault: bool| DistBenchResult {
+    fn result(clean: bool, fault: bool, sharded: bool) -> DistBenchResult {
+        DistBenchResult {
             p: 10,
             n: 4,
             accuracy: 0.5,
@@ -312,32 +390,31 @@ mod tests {
             fault_secs: 1.0,
             dist_report: DistReport::default(),
             fault_report: DistReport::default(),
+            shard_local_secs: 1.0,
+            shard_dist_secs: 1.0,
+            shard_report: DistReport::default(),
             identical_clean: clean,
             identical_fault: fault,
-        };
-        assert!(check_gates(&mk(true, true)).is_ok());
-        assert!(check_gates(&mk(false, true)).is_err());
-        assert!(check_gates(&mk(true, false)).is_err());
+            identical_sharded: sharded,
+        }
+    }
+
+    #[test]
+    fn gates_require_all_three_identities() {
+        assert!(check_gates(&result(true, true, true)).is_ok());
+        assert!(check_gates(&result(false, true, true)).is_err());
+        assert!(check_gates(&result(true, false, true)).is_err());
+        assert!(check_gates(&result(true, true, false)).is_err());
     }
 
     #[test]
     fn report_names_the_identity_gates() {
-        let r = DistBenchResult {
-            p: 10,
-            n: 4,
-            accuracy: 0.5,
-            local_secs: 2.0,
-            dist_secs: 1.0,
-            fault_secs: 1.5,
-            dist_report: DistReport::default(),
-            fault_report: DistReport::default(),
-            identical_clean: true,
-            identical_fault: true,
-        };
-        let v = report_json(&r);
+        let v = report_json(&result(true, true, true));
         let m = v.get("metrics").expect("metrics");
         assert!(m.get("identical_clean").is_some());
         assert!(m.get("identical_fault").is_some());
+        assert!(m.get("identical_sharded").is_some());
+        assert!(m.get("shard_range_blocks").is_some());
         assert!(m.get("dist_overhead_factor").is_some());
     }
 }

@@ -22,7 +22,10 @@ pub use fast::{FastCluster, FastClusterTrace};
 pub use kmeans::KMeans;
 pub use linkage::{AverageLinkage, CompleteLinkage, SingleLinkage};
 pub use rand_single::RandSingle;
-pub use sharded::{ShardedFastCluster, ShardedTrace};
+pub use sharded::{
+    fit_shard, shard_seed, stitch_shards, ShardPlan, ShardedFastCluster,
+    ShardedTrace,
+};
 pub use ward::Ward;
 
 use crate::error::{invalid, Result};

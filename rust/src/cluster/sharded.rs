@@ -27,6 +27,15 @@
 //! `K ≤ (1 + oversegment) · k + n_shards`), cluster sizes stay even and
 //! the no-percolation guarantee of the 1-NN rounds carries over — see
 //! ADR-002 for the argument.
+//!
+//! The three phases are exposed as standalone pieces — [`ShardPlan`]
+//! (the deterministic decomposition), [`fit_shard`] (one shard's
+//! agglomeration as a pure function of shard-local inputs) and
+//! [`stitch_shards`] (the global capped merge) — so the distributed
+//! fit (docs/adr/009) can run the shard phase on worker processes and
+//! the stitch on the coordinator while staying bit-identical to
+//! [`ShardedFastCluster::fit_trace`], which is recomposed from the
+//! same three functions.
 
 use super::fast::{FastCluster, FastClusterTrace};
 use super::{check_fit_args, Clusterer, Labels};
@@ -100,12 +109,178 @@ impl ShardedTrace {
     }
 }
 
+/// The per-shard seed of the ADR-002 engine: a fixed affine stride
+/// off the root seed, so shard `s` agglomerates identically wherever
+/// (and whenever) it runs.
+pub fn shard_seed(seed: u64, s: usize) -> u64 {
+    seed.wrapping_add(0x5A4D * (s as u64 + 1))
+}
+
+/// The deterministic decomposition of one sharded fit: everything the
+/// per-shard agglomerations need, computed up front from the graph
+/// alone. A plan is a pure function of `(graph, n_shards, strategy,
+/// oversegment, k, seed)` — no feature data — which is what lets the
+/// distributed coordinator (docs/adr/009) compute it once and ship
+/// each shard's slice to a worker.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    /// Number of (non-empty) shards.
+    pub n_shards: usize,
+    /// Global vertex ids per shard, ascending within a shard — also
+    /// the row order of the shard's feature slice.
+    pub members: Vec<Vec<u32>>,
+    /// Per-shard edge lists with endpoints remapped to shard-local
+    /// ids `0..p_s`.
+    pub local_edges: Vec<Vec<Edge>>,
+    /// Per-shard cluster targets `k_s` (ceil-proportional,
+    /// over-segmented).
+    pub k_targets: Vec<usize>,
+    /// Per-shard seeds ([`shard_seed`] of the root seed).
+    pub seeds: Vec<u64>,
+    /// Edges of the input lattice crossing shard boundaries.
+    pub cut_edges: usize,
+}
+
+impl ShardPlan {
+    /// Vertices per shard.
+    pub fn sizes(&self) -> Vec<usize> {
+        self.members.iter().map(|m| m.len()).collect()
+    }
+}
+
+/// One shard's agglomeration as a pure function of shard-local
+/// inputs: the shard's feature slice (`p_s × n`, rows in
+/// [`ShardPlan::members`] order), its remapped edge list, the target
+/// `k_s` and the shard seed. Bit-identical wherever it runs — this is
+/// the function worker processes execute for distributed clustering
+/// jobs (docs/adr/009).
+pub fn fit_shard(
+    base: &FastCluster,
+    xs: &FeatureMatrix,
+    local_edges: &[Edge],
+    k_s: usize,
+    shard_seed: u64,
+) -> Result<(Labels, FastClusterTrace)> {
+    let g_s = LatticeGraph::from_edges(xs.rows, local_edges.to_vec());
+    base.fit_trace(xs, &g_s, k_s, shard_seed)
+}
+
+/// The stitch pass: assemble per-shard labelings into a global one,
+/// rebuild the weighted quotient graph over cluster means, and run
+/// the capped cheapest-merge down to exactly `k`. Pure in its inputs
+/// and independent of the order the shard labelings were *produced*
+/// (they are indexed by shard id here), so any scheduling of the
+/// shard phase — threads, processes, retries — stitches identically.
+/// Returns the final labels plus `K`, the cluster count before
+/// stitching.
+pub fn stitch_shards(
+    x: &FeatureMatrix,
+    edges: &[Edge],
+    k: usize,
+    members: &[Vec<u32>],
+    shard_labels: &[Labels],
+) -> Result<(Labels, usize)> {
+    let p = x.rows;
+    let n_shards = members.len();
+    if shard_labels.len() != n_shards {
+        return Err(invalid(format!(
+            "stitch: {} shard labelings for {} shards",
+            shard_labels.len(),
+            n_shards
+        )));
+    }
+    for s in 0..n_shards {
+        if shard_labels[s].labels.len() != members[s].len() {
+            return Err(invalid(format!(
+                "stitch: shard {s} labeling covers {} vertices, \
+                 shard has {}",
+                shard_labels[s].labels.len(),
+                members[s].len()
+            )));
+        }
+    }
+
+    // per-shard cluster-id offsets -> one global labeling
+    let mut offsets = vec![0u32; n_shards];
+    let mut k_total = 0usize;
+    for s in 0..n_shards {
+        offsets[s] = k_total as u32;
+        k_total += shard_labels[s].k;
+    }
+    let mut labels = vec![0u32; p];
+    for s in 0..n_shards {
+        let l = &shard_labels[s];
+        for (li, &v) in members[s].iter().enumerate() {
+            labels[v as usize] = offsets[s] + l.labels[li];
+        }
+    }
+
+    // cluster means over the full feature columns
+    let n_cols = x.cols;
+    let mut sums = vec![0.0f64; k_total * n_cols];
+    let mut counts = vec![0usize; k_total];
+    for i in 0..p {
+        let c = labels[i] as usize;
+        counts[c] += 1;
+        let row = x.row(i);
+        let acc = &mut sums[c * n_cols..(c + 1) * n_cols];
+        for (a, &v) in acc.iter_mut().zip(row) {
+            *a += v as f64;
+        }
+    }
+    let means: Vec<f32> = (0..k_total * n_cols)
+        .map(|i| (sums[i] / counts[i / n_cols].max(1) as f64) as f32)
+        .collect();
+
+    // the weighted quotient graph (intra-shard cluster adjacency AND
+    // cut edges — so the capped merge can heal boundaries but also
+    // fall back to in-shard merges when a shard over-segmented a
+    // region the cut cannot reach)
+    let mut qedges: Vec<(u32, u32)> = edges
+        .iter()
+        .filter_map(|e| {
+            let (a, b) = (labels[e.u as usize], labels[e.v as usize]);
+            match a.cmp(&b) {
+                std::cmp::Ordering::Less => Some((a, b)),
+                std::cmp::Ordering::Greater => Some((b, a)),
+                std::cmp::Ordering::Equal => None,
+            }
+        })
+        .collect();
+    qedges.sort_unstable();
+    qedges.dedup();
+    let weighted: Vec<Edge> = qedges
+        .into_iter()
+        .map(|(a, b)| {
+            let (ra, rb) = (
+                &means[a as usize * n_cols..(a as usize + 1) * n_cols],
+                &means[b as usize * n_cols..(b as usize + 1) * n_cols],
+            );
+            let mut d = 0.0f32;
+            for i in 0..n_cols {
+                let t = ra[i] - rb[i];
+                d += t * t;
+            }
+            Edge::new(a, b, d)
+        })
+        .collect();
+
+    // merge the cheapest quotient edges until exactly k clusters
+    // remain (Alg. 1's final-iteration rule)
+    let (lambda, k_final) =
+        connected_components_capped(k_total, &weighted, k);
+    for l in &mut labels {
+        *l = lambda[*l as usize];
+    }
+    Ok((Labels::new(labels, k_final)?, k_total))
+}
+
 impl ShardedFastCluster {
     /// Resolve the shard count for a problem of size `p` with target
     /// `k`: the configured count (or available parallelism when 0),
     /// never more than `k` (each shard must keep at least one cluster)
     /// nor `p`.
-    fn resolve_shards(&self, p: usize, k: usize) -> usize {
+    pub fn resolve_shards(&self, p: usize, k: usize) -> usize {
         let configured = if self.n_shards == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
@@ -114,42 +289,34 @@ impl ShardedFastCluster {
         configured.clamp(1, k.min(p).max(1))
     }
 
-    /// Run the sharded engine and return the per-shard + stitch trace.
-    pub fn fit_trace(
-        &self,
-        x: &FeatureMatrix,
-        graph: &LatticeGraph,
-        k: usize,
-        seed: u64,
-    ) -> Result<(Labels, ShardedTrace)> {
-        check_fit_args(x, graph, k)?;
+    /// Reject out-of-range configuration.
+    fn validate(&self) -> Result<()> {
         if !(0.0..=4.0).contains(&self.oversegment) {
             return Err(invalid(format!(
                 "oversegment {} out of range [0, 4]",
                 self.oversegment
             )));
         }
-        let p = x.rows;
-        let n_shards = self.resolve_shards(p, k);
-        if n_shards == 1 {
-            // degenerate case: exactly the single-thread algorithm
-            let (labels, trace) = self.base.fit_trace(x, graph, k, seed)?;
-            let trace = ShardedTrace {
-                n_shards: 1,
-                shard_sizes: vec![p],
-                shard_traces: vec![trace],
-                cut_edges: 0,
-                k_before_stitch: labels.k,
-                stitch_merges: 0,
-            };
-            return Ok((labels, trace));
-        }
+        Ok(())
+    }
 
-        // ---- 1. partition the lattice
+    /// Compute the shard decomposition for `graph` with target `k`
+    /// and root `seed` (see [`ShardPlan`]). The resolved shard count
+    /// may be 1 (degenerate plan); callers that care should check
+    /// [`ShardPlan::n_shards`] — [`Self::fit_trace`] short-circuits
+    /// that case to the plain single-thread algorithm.
+    pub fn plan(
+        &self,
+        graph: &LatticeGraph,
+        k: usize,
+        seed: u64,
+    ) -> Result<ShardPlan> {
+        self.validate()?;
+        let p = graph.n_vertices;
+        let n_shards = self.resolve_shards(p, k);
         let part = Partition::new(graph, n_shards, self.strategy);
         let n_shards = part.n_shards;
         let members = part.members();
-        let shard_sizes = part.sizes();
         let (intra, cut) = part.split_edges(&graph.edges);
 
         // global -> shard-local vertex ids
@@ -160,15 +327,13 @@ impl ShardedFastCluster {
             }
         }
 
-        // per-shard sub-problems: local feature rows + local edges.
         // ceil-proportional targets over-segment slightly even at
-        // oversegment = 0, guaranteeing sum(k_s) >= k.
-        let mut shard_inputs = Vec::with_capacity(n_shards);
+        // oversegment = 0, guaranteeing sum(k_s) >= k
+        let mut local_edges = Vec::with_capacity(n_shards);
+        let mut k_targets = Vec::with_capacity(n_shards);
+        let mut seeds = Vec::with_capacity(n_shards);
         for s in 0..n_shards {
-            let rows: Vec<usize> =
-                members[s].iter().map(|&v| v as usize).collect();
-            let xs = x.select_rows(&rows);
-            let p_s = rows.len();
+            let p_s = members[s].len();
             let share = k as f64 * p_s as f64 / p as f64;
             let k_s = ((share * (1.0 + self.oversegment)).ceil() as usize)
                 .clamp(1, p_s);
@@ -182,9 +347,57 @@ impl ShardedFastCluster {
                     )
                 })
                 .collect();
-            let g_s = LatticeGraph::from_edges(p_s, edges);
-            shard_inputs.push((xs, g_s, k_s));
+            local_edges.push(edges);
+            k_targets.push(k_s);
+            seeds.push(shard_seed(seed, s));
         }
+        Ok(ShardPlan {
+            n_shards,
+            members,
+            local_edges,
+            k_targets,
+            seeds,
+            cut_edges: cut.len(),
+        })
+    }
+
+    /// Run the sharded engine and return the per-shard + stitch trace.
+    pub fn fit_trace(
+        &self,
+        x: &FeatureMatrix,
+        graph: &LatticeGraph,
+        k: usize,
+        seed: u64,
+    ) -> Result<(Labels, ShardedTrace)> {
+        check_fit_args(x, graph, k)?;
+        self.validate()?;
+        let p = x.rows;
+        if self.resolve_shards(p, k) == 1 {
+            // degenerate case: exactly the single-thread algorithm
+            let (labels, trace) = self.base.fit_trace(x, graph, k, seed)?;
+            let trace = ShardedTrace {
+                n_shards: 1,
+                shard_sizes: vec![p],
+                shard_traces: vec![trace],
+                cut_edges: 0,
+                k_before_stitch: labels.k,
+                stitch_merges: 0,
+            };
+            return Ok((labels, trace));
+        }
+
+        // ---- 1. the deterministic decomposition
+        let plan = self.plan(graph, k, seed)?;
+        let n_shards = plan.n_shards;
+
+        // per-shard feature slices, rows in member order
+        let slices: Vec<FeatureMatrix> = (0..n_shards)
+            .map(|s| {
+                let rows: Vec<usize> =
+                    plan.members[s].iter().map(|&v| v as usize).collect();
+                x.select_rows(&rows)
+            })
+            .collect();
 
         // ---- 2. per-shard Alg. 1 on a scoped thread pool. Results are
         // collected by shard index, so the outcome is deterministic
@@ -192,14 +405,17 @@ impl ShardedFastCluster {
         let base = &self.base;
         let results: Vec<Result<(Labels, FastClusterTrace)>> =
             std::thread::scope(|scope| {
-                let handles: Vec<_> = shard_inputs
-                    .iter()
-                    .enumerate()
-                    .map(|(s, (xs, g_s, k_s))| {
-                        let shard_seed =
-                            seed.wrapping_add(0x5A4D * (s as u64 + 1));
+                let handles: Vec<_> = (0..n_shards)
+                    .map(|s| {
+                        let (xs, plan) = (&slices[s], &plan);
                         scope.spawn(move || {
-                            base.fit_trace(xs, g_s, *k_s, shard_seed)
+                            fit_shard(
+                                base,
+                                xs,
+                                &plan.local_edges[s],
+                                plan.k_targets[s],
+                                plan.seeds[s],
+                            )
                         })
                     })
                     .collect();
@@ -217,90 +433,18 @@ impl ShardedFastCluster {
             shard_labels.push(l);
         }
 
-        // ---- 3. stitch. Assemble the global labeling with per-shard
-        // cluster-id offsets ...
-        let mut offsets = vec![0u32; n_shards];
-        let mut k_total = 0usize;
-        for s in 0..n_shards {
-            offsets[s] = k_total as u32;
-            k_total += shard_labels[s].k;
-        }
-        let mut labels = vec![0u32; p];
-        for s in 0..n_shards {
-            let l = &shard_labels[s];
-            for (li, &v) in members[s].iter().enumerate() {
-                labels[v as usize] = offsets[s] + l.labels[li];
-            }
-        }
-
-        // ... compute cluster means over the full feature columns ...
-        let n_cols = x.cols;
-        let mut sums = vec![0.0f64; k_total * n_cols];
-        let mut counts = vec![0usize; k_total];
-        for i in 0..p {
-            let c = labels[i] as usize;
-            counts[c] += 1;
-            let row = x.row(i);
-            let acc = &mut sums[c * n_cols..(c + 1) * n_cols];
-            for (a, &v) in acc.iter_mut().zip(row) {
-                *a += v as f64;
-            }
-        }
-        let means: Vec<f32> = (0..k_total * n_cols)
-            .map(|i| (sums[i] / counts[i / n_cols].max(1) as f64) as f32)
-            .collect();
-
-        // ... build the weighted quotient graph (intra-shard cluster
-        // adjacency AND cut edges — so the capped merge can heal
-        // boundaries but also fall back to in-shard merges when a
-        // shard over-segmented a region the cut cannot reach) ...
-        let mut qedges: Vec<(u32, u32)> = graph
-            .edges
-            .iter()
-            .filter_map(|e| {
-                let (a, b) = (labels[e.u as usize], labels[e.v as usize]);
-                match a.cmp(&b) {
-                    std::cmp::Ordering::Less => Some((a, b)),
-                    std::cmp::Ordering::Greater => Some((b, a)),
-                    std::cmp::Ordering::Equal => None,
-                }
-            })
-            .collect();
-        qedges.sort_unstable();
-        qedges.dedup();
-        let weighted: Vec<Edge> = qedges
-            .into_iter()
-            .map(|(a, b)| {
-                let (ra, rb) = (
-                    &means[a as usize * n_cols..(a as usize + 1) * n_cols],
-                    &means[b as usize * n_cols..(b as usize + 1) * n_cols],
-                );
-                let mut d = 0.0f32;
-                for i in 0..n_cols {
-                    let t = ra[i] - rb[i];
-                    d += t * t;
-                }
-                Edge::new(a, b, d)
-            })
-            .collect();
-
-        // ... and merge the cheapest quotient edges until exactly k
-        // clusters remain (Alg. 1's final-iteration rule).
-        let (lambda, k_final) =
-            connected_components_capped(k_total, &weighted, k);
-        for l in &mut labels {
-            *l = lambda[*l as usize];
-        }
-
+        // ---- 3. stitch down to exactly k
+        let (labels, k_total) =
+            stitch_shards(x, &graph.edges, k, &plan.members, &shard_labels)?;
         let trace = ShardedTrace {
             n_shards,
-            shard_sizes,
+            shard_sizes: plan.sizes(),
             shard_traces,
-            cut_edges: cut.len(),
+            cut_edges: plan.cut_edges,
             k_before_stitch: k_total,
-            stitch_merges: k_total - k_final,
+            stitch_merges: k_total - labels.k,
         };
-        Ok((Labels::new(labels, k_final)?, trace))
+        Ok((labels, trace))
     }
 }
 

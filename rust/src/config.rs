@@ -256,6 +256,10 @@ pub struct DistSettings {
     pub heartbeat_ms: u64,
     /// Re-assignments per job before the local fallback takes it.
     pub max_retries: usize,
+    /// Run stage 1 (the parcellation) as distributed shard jobs with
+    /// FETCH/DATA range serving (ADR-009). Scheduling-only like the
+    /// rest: the fitted bits are identical either way.
+    pub distribute_clustering: bool,
 }
 
 impl Default for DistSettings {
@@ -265,6 +269,7 @@ impl Default for DistSettings {
             jobs_per_worker: 2,
             heartbeat_ms: 2000,
             max_retries: 2,
+            distribute_clustering: false,
         }
     }
 }
@@ -536,6 +541,13 @@ impl DistSettings {
             )?,
             heartbeat_ms: get_u64(v, "heartbeat_ms", d.heartbeat_ms)?,
             max_retries: get_usize(v, "max_retries", d.max_retries)?,
+            distribute_clustering: match v.get("distribute_clustering")
+            {
+                None => d.distribute_clustering,
+                Some(x) => x.as_bool().ok_or_else(|| {
+                    invalid("'distribute_clustering' must be bool")
+                })?,
+            },
         })
     }
 
@@ -549,6 +561,10 @@ impl DistSettings {
             ),
             ("heartbeat_ms", Value::Num(self.heartbeat_ms as f64)),
             ("max_retries", Value::Num(self.max_retries as f64)),
+            (
+                "distribute_clustering",
+                Value::Bool(self.distribute_clustering),
+            ),
         ])
     }
 }
@@ -764,7 +780,8 @@ mod tests {
     #[test]
     fn dist_settings_roundtrip_and_validate() {
         let text = r#"{"dist": {"workers": 5, "jobs_per_worker": 3,
-                       "heartbeat_ms": 750, "max_retries": 1}}"#;
+                       "heartbeat_ms": 750, "max_retries": 1,
+                       "distribute_clustering": true}}"#;
         let cfg =
             ExperimentConfig::from_json(&json::parse(text).unwrap())
                 .unwrap();
@@ -772,16 +789,24 @@ mod tests {
         assert_eq!(cfg.dist.jobs_per_worker, 3);
         assert_eq!(cfg.dist.heartbeat_ms, 750);
         assert_eq!(cfg.dist.max_retries, 1);
+        assert!(cfg.dist.distribute_clustering);
         let back = ExperimentConfig::from_json(
             &json::parse(&cfg.to_json().to_string()).unwrap(),
         )
         .unwrap();
         assert_eq!(back.dist.heartbeat_ms, 750);
+        assert!(back.dist.distribute_clustering);
         // defaults apply when the section is absent
         let none =
             ExperimentConfig::from_json(&json::parse("{}").unwrap())
                 .unwrap();
         assert_eq!(none.dist.workers, 3);
+        assert!(!none.dist.distribute_clustering);
+        assert!(ExperimentConfig::from_json(
+            &json::parse(r#"{"dist": {"distribute_clustering": 3}}"#)
+                .unwrap()
+        )
+        .is_err());
         for bad in [
             r#"{"dist": {"jobs_per_worker": 0}}"#,
             r#"{"dist": {"heartbeat_ms": 0}}"#,

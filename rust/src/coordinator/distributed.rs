@@ -25,6 +25,24 @@
 //!   local path ([`build_header`], `FittedModel::from_parts`), and the
 //!   `.fcm` writer is byte-canonical.
 //!
+//! # Distributed stage 1 (ADR-009)
+//!
+//! With [`DistOptions::distribute_clustering`] the parcellation
+//! itself is sharded across workers instead of running on the
+//! coordinator: the coordinator computes the deterministic
+//! [`ShardPlan`](crate::cluster::ShardPlan), ships one
+//! `ClusterShard` job per shard, and runs the capped cheapest-merge
+//! [`stitch_shards`](crate::cluster::stitch_shards) over the label
+//! partials — the same three functions
+//! [`ShardedFastCluster`](crate::cluster::ShardedFastCluster) is
+//! composed of, so the parcellation is byte-identical to the
+//! single-process engine for any worker count, arrival order or
+//! injected fault. In this mode no job carries the staged `.fcd`
+//! path; workers fetch exactly the `(rows, columns)` ranges they
+//! need through FETCH/DATA *range serving* frames answered by the
+//! coordinator from one [`DataHub`], which the local fallback reads
+//! through as well.
+//!
 //! # Failure model
 //!
 //! Per-job heartbeat timeouts, CRC-verified payloads, bounded retry
@@ -42,22 +60,27 @@ use std::io::{BufReader, ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{
+    AtomicBool, AtomicU64, AtomicUsize, Ordering,
+};
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
+use super::pipeline::make_sharded;
 use super::{EventLog, Stopwatch};
+use crate::cluster::{fit_shard, stitch_shards, FastCluster, Labels};
 use crate::config::{
     DataConfig, EstimatorConfig, Method, ReduceConfig,
 };
 use crate::error::{invalid, Error, Result};
 use crate::estimators::cv::stratified_kfold;
 use crate::estimators::{FoldModel, LogregFit};
+use crate::graph::{Edge, LatticeGraph};
 use crate::json::Value;
 use crate::model::{
-    build_header, fit_one_fold, fit_reduction, FitOptions, FittedModel,
-    ReductionOp, FOLD_SEED,
+    build_header, fit_one_fold, fit_reduction, reduction_from_labels,
+    FitOptions, FittedModel, ReductionOp, FOLD_SEED,
 };
 use crate::reduce::{ReduceAccumulator, Reducer};
 use crate::serve::protocol::{
@@ -149,8 +172,13 @@ pub struct DistOptions {
     /// Target jobs per worker in the reduce phase (finer partitions
     /// mean cheaper retries; fold jobs are one per CV fold).
     pub jobs_per_worker: usize,
-    /// Sample columns per PARTIAL frame of a reduce job.
+    /// Sample columns per PARTIAL frame of a reduce job (and per
+    /// FETCH request of a shard-clustering job).
     pub chunk_samples: usize,
+    /// Run stage 1 (the parcellation) as distributed shard jobs
+    /// (ADR-009). Implies wire mode: no job carries the staged
+    /// `.fcd` path; workers fetch ranges through FETCH/DATA.
+    pub distribute_clustering: bool,
     /// Silence longer than this from a busy worker fails the job.
     pub heartbeat_ms: u64,
     /// Re-assignments per job before it is abandoned to the local
@@ -180,6 +208,7 @@ impl Default for DistOptions {
             workers: 3,
             jobs_per_worker: 2,
             chunk_samples: 32,
+            distribute_clustering: false,
             heartbeat_ms: 2000,
             max_retries: 2,
             bind: "127.0.0.1:0".into(),
@@ -217,14 +246,22 @@ pub struct DistReport {
     pub workers_connected: usize,
     /// Connections dropped mid-run (timeouts, corruption, death).
     pub workers_lost: usize,
+    /// Shard-clustering jobs (0 unless `--distribute-clustering`
+    /// shipped stage 1 to workers).
+    pub cluster_jobs: usize,
     /// Reduce-phase jobs.
     pub reduce_jobs: usize,
     /// Fold-phase jobs.
     pub fold_jobs: usize,
-    /// Job re-assignments across both phases.
+    /// Job re-assignments across all phases.
     pub retries: usize,
     /// Jobs that ran through the in-process fallback.
     pub local_jobs: usize,
+    /// DATA range blocks the coordinator served to workers — the
+    /// proof hook that workers ran path-free in wire mode.
+    pub range_blocks: usize,
+    /// Wall seconds of the clustering phase (stage 1, either path).
+    pub cluster_secs: f64,
     /// Wall seconds of the reduce phase.
     pub reduce_secs: f64,
     /// Wall seconds of the fold phase.
@@ -263,10 +300,13 @@ impl DistReport {
                 Value::Num(self.workers_connected as f64),
             ),
             ("workers_lost", Value::Num(self.workers_lost as f64)),
+            ("cluster_jobs", Value::Num(self.cluster_jobs as f64)),
             ("reduce_jobs", Value::Num(self.reduce_jobs as f64)),
             ("fold_jobs", Value::Num(self.fold_jobs as f64)),
             ("retries", Value::Num(self.retries as f64)),
             ("local_jobs", Value::Num(self.local_jobs as f64)),
+            ("range_blocks", Value::Num(self.range_blocks as f64)),
+            ("cluster_secs", Value::Num(self.cluster_secs)),
             ("reduce_secs", Value::Num(self.reduce_secs)),
             ("fold_secs", Value::Num(self.fold_secs)),
             ("total_secs", Value::Num(self.total_secs)),
@@ -284,13 +324,32 @@ impl DistReport {
 #[derive(Clone, Debug)]
 enum JobPayload {
     /// Reduce sample columns `[col0, col0+count)` of the shared
-    /// `.fcd` in `chunk`-column blocks through `op`.
+    /// `.fcd` in `chunk`-column blocks through `op`. An empty `stem`
+    /// means wire mode (ADR-009): the blocks are fetched from the
+    /// coordinator's range server instead of a file.
     Reduce {
         stem: String,
         col0: u32,
         count: u32,
         chunk: u32,
         op: ReductionOp,
+    },
+    /// Agglomerate one spatial shard (ADR-009): fetch the shard's
+    /// `(n_rows, n_cols)` feature slice in `chunk`-column ranges
+    /// (the row set lives only in the coordinator's job table),
+    /// rebuild the shard subgraph from the remapped `edges`, and run
+    /// Alg. 1 down to `k_s` with the pinned `shard_seed`.
+    ClusterShard {
+        shard: u32,
+        n_rows: u32,
+        n_cols: u32,
+        chunk: u32,
+        k_s: u32,
+        shard_seed: u64,
+        max_rounds: u32,
+        /// `0` = all feature columns (`FastCluster::feature_subsample`).
+        feature_subsample: u64,
+        edges: Vec<Edge>,
     },
     /// Fit one CV fold on the shipped (already reduced) matrices.
     Fold {
@@ -331,6 +390,33 @@ fn encode_job(job: &JobPayload) -> Vec<u8> {
                     put_u32(&mut b, *k as u32);
                     put_u64(&mut b, *seed);
                 }
+            }
+        }
+        JobPayload::ClusterShard {
+            shard,
+            n_rows,
+            n_cols,
+            chunk,
+            k_s,
+            shard_seed,
+            max_rounds,
+            feature_subsample,
+            edges,
+        } => {
+            b.push(2);
+            put_u32(&mut b, *shard);
+            put_u32(&mut b, *n_rows);
+            put_u32(&mut b, *n_cols);
+            put_u32(&mut b, *chunk);
+            put_u32(&mut b, *k_s);
+            put_u64(&mut b, *shard_seed);
+            put_u32(&mut b, *max_rounds);
+            put_u64(&mut b, *feature_subsample);
+            put_u32(&mut b, edges.len() as u32);
+            for e in edges {
+                put_u32(&mut b, e.u);
+                put_u32(&mut b, e.v);
+                put_u32(&mut b, e.w.to_bits());
             }
         }
         JobPayload::Fold {
@@ -400,6 +486,44 @@ fn decode_job(bytes: &[u8]) -> Result<JobPayload> {
             };
             JobPayload::Reduce { stem, col0, count, chunk, op }
         }
+        2 => {
+            let shard = c.u32()?;
+            let n_rows = c.u32()?;
+            let n_cols = c.u32()?;
+            let chunk = c.u32()?;
+            let k_s = c.u32()?;
+            let shard_seed = c.u64()?;
+            let max_rounds = c.u32()?;
+            let feature_subsample = c.u64()?;
+            let len = c.u32()? as usize;
+            // untrusted length: bound the alloc by what the buffer
+            // actually holds (take validates)
+            let bytes12 = len.checked_mul(12).ok_or_else(|| {
+                invalid("edge count overflows")
+            })?;
+            let raw = c.take(bytes12)?;
+            let edges = raw
+                .chunks_exact(12)
+                .map(|q| Edge {
+                    u: u32::from_le_bytes([q[0], q[1], q[2], q[3]]),
+                    v: u32::from_le_bytes([q[4], q[5], q[6], q[7]]),
+                    w: f32::from_bits(u32::from_le_bytes([
+                        q[8], q[9], q[10], q[11],
+                    ])),
+                })
+                .collect();
+            JobPayload::ClusterShard {
+                shard,
+                n_rows,
+                n_cols,
+                chunk,
+                k_s,
+                shard_seed,
+                max_rounds,
+                feature_subsample,
+                edges,
+            }
+        }
         1 => JobPayload::Fold {
             fold_id: c.u32()?,
             sgd_epochs: c.u32()?,
@@ -425,6 +549,36 @@ fn encode_block_partial(col0: usize, x: &FeatureMatrix) -> Vec<u8> {
     put_u32(&mut b, col0 as u32);
     put_matrix(&mut b, x);
     b
+}
+
+fn encode_shard_partial(shard: u32, labels: &Labels) -> Vec<u8> {
+    let mut b = Vec::new();
+    put_u32(&mut b, shard);
+    put_u32(&mut b, labels.k as u32);
+    put_u32(&mut b, labels.labels.len() as u32);
+    for &l in &labels.labels {
+        put_u32(&mut b, l);
+    }
+    b
+}
+
+fn decode_shard_partial(bytes: &[u8]) -> Result<(u32, Labels)> {
+    let mut c = Cursor::new(bytes);
+    let shard = c.u32()?;
+    let k = c.u32()? as usize;
+    let len = c.u32()? as usize;
+    let bytes4 = len
+        .checked_mul(4)
+        .ok_or_else(|| invalid("label count overflows"))?;
+    let raw = c.take(bytes4)?;
+    let labels = raw
+        .chunks_exact(4)
+        .map(|q| u32::from_le_bytes([q[0], q[1], q[2], q[3]]))
+        .collect();
+    c.finish()?;
+    // Labels::new re-validates compactness, so a mangled partial
+    // cannot smuggle an inconsistent labeling into the stitch
+    Ok((shard, Labels::new(labels, k)?))
 }
 
 fn encode_fold_partial(
@@ -462,6 +616,133 @@ fn decode_fold_partial(bytes: &[u8]) -> Result<(u32, f64, LogregFit)> {
     ))
 }
 
+// ----------------------------------------------------- range serving
+
+/// Where a job's feature blocks come from when its payload names no
+/// file (ADR-009): workers fetch over FETCH/DATA, the coordinator's
+/// local fallback reads the staged cohort through the same [`DataHub`]
+/// that answers workers. Both return identical bytes for identical
+/// requests — the `.fcd` round-trips `f32` bits exactly — which is
+/// what keeps wire mode inside the bit-identity contract.
+trait RangeSource {
+    /// Fetch columns `[col0, col0+count)` of `job`'s row set.
+    fn fetch(
+        &mut self,
+        job: u64,
+        col0: usize,
+        count: usize,
+    ) -> Result<FeatureMatrix>;
+}
+
+/// Coordinator-side range server: the staged `.fcd` plus the per-job
+/// voxel row sets. Keeping the row sets here (instead of in the job
+/// payload) keeps FETCH requests fixed-size and means workers never
+/// learn anything about the cohort beyond their own slices.
+struct DataHub {
+    reader: Mutex<FcdReader>,
+    /// Job id -> voxel rows of its slice (absent = all rows).
+    rows: HashMap<u64, Vec<u32>>,
+    /// DATA blocks served to workers (report / test hook).
+    served: AtomicUsize,
+}
+
+impl DataHub {
+    fn open(stem: &Path) -> Result<DataHub> {
+        Ok(DataHub {
+            reader: Mutex::new(FcdReader::open(stem)?),
+            rows: HashMap::new(),
+            served: AtomicUsize::new(0),
+        })
+    }
+
+    fn read(
+        &self,
+        job: u64,
+        col0: usize,
+        count: usize,
+    ) -> Result<FeatureMatrix> {
+        let mut rd = self.reader.lock().unwrap();
+        if count == 0 || col0 + count > rd.n() {
+            return Err(invalid(format!(
+                "range [{col0}, {}) out of bounds (n={})",
+                col0 + count,
+                rd.n()
+            )));
+        }
+        match self.rows.get(&job) {
+            Some(rows) => rd.read_rows_columns(rows, col0, count),
+            None => rd.read_columns(col0, count),
+        }
+    }
+}
+
+/// The local fallback's source: straight through the hub.
+struct HubSource<'a>(&'a DataHub);
+
+impl RangeSource for HubSource<'_> {
+    fn fetch(
+        &mut self,
+        job: u64,
+        col0: usize,
+        count: usize,
+    ) -> Result<FeatureMatrix> {
+        self.0.read(job, col0, count)
+    }
+}
+
+/// The worker's source: FETCH over the connection, block on the DATA
+/// reply. The reply is validated against the request (job id and col0
+/// echo, and the caller checks block dims) on top of the frame CRC —
+/// that closes the loop a corrupted *request* would otherwise open:
+/// the coordinator would serve the wrong range with a perfectly valid
+/// checksum.
+struct WireSource<'a> {
+    writer: &'a Arc<Mutex<TcpStream>>,
+    reader: &'a mut BufReader<TcpStream>,
+}
+
+impl RangeSource for WireSource<'_> {
+    fn fetch(
+        &mut self,
+        job: u64,
+        col0: usize,
+        count: usize,
+    ) -> Result<FeatureMatrix> {
+        let req = DistFrame::Fetch {
+            job,
+            col0: col0 as u32,
+            count: count as u32,
+        };
+        {
+            let mut w = self.writer.lock().unwrap();
+            write_dist_frame(&mut *w, &req)?;
+            w.flush()?;
+        }
+        match read_dist_frame(self.reader)? {
+            Some(DistFrame::Data { job: j, col0: b0, payload })
+                if j == job =>
+            {
+                if b0 as usize != col0 {
+                    return Err(invalid(format!(
+                        "DATA block starts at col {b0}, \
+                         requested {col0}"
+                    )));
+                }
+                let mut c = Cursor::new(&payload);
+                let x = c.matrix()?;
+                c.finish()?;
+                Ok(x)
+            }
+            Some(_) => Err(invalid(
+                "out-of-protocol frame while awaiting DATA",
+            )),
+            None => {
+                Err(invalid("connection closed while awaiting DATA"))
+            }
+        }
+    }
+}
+
 // ----------------------------------------------------- job execution
 
 fn reducer_for(op: &ReductionOp) -> Result<Box<dyn Reducer>> {
@@ -476,35 +757,117 @@ fn reducer_for(op: &ReductionOp) -> Result<Box<dyn Reducer>> {
 }
 
 /// Execute one decoded job, emitting each partial-result payload
-/// through `sink`. Shared by the worker process and the coordinator's
-/// local fallback — the bit-identity hinge: *where* a job runs never
+/// through `sink`; `src` serves feature blocks for jobs that name no
+/// file. Shared by the worker process and the coordinator's local
+/// fallback — the bit-identity hinge: *where* a job runs never
 /// changes the bytes it produces.
 fn execute_job(
+    job_id: u64,
     job: &JobPayload,
+    src: &mut dyn RangeSource,
     sink: &mut dyn FnMut(Vec<u8>) -> Result<()>,
 ) -> Result<()> {
     match job {
         JobPayload::Reduce { stem, col0, count, chunk, op } => {
-            let mut rd = FcdReader::open(Path::new(stem))?;
+            let mut rd = if stem.is_empty() {
+                None // wire mode: blocks come from `src`
+            } else {
+                Some(FcdReader::open(Path::new(stem))?)
+            };
             let reducer = reducer_for(op)?;
+            // both ops are row-shape-rigid, so a mis-served block is
+            // caught here rather than silently mis-reduced
+            let p_op = match op {
+                ReductionOp::Cluster { labels, .. } => labels.len(),
+                ReductionOp::RandomProjection { p, .. } => *p,
+            };
             let (col0, count) = (*col0 as usize, *count as usize);
-            if count == 0 || col0 + count > rd.n() {
-                return Err(invalid(format!(
-                    "job range [{col0}, {}) out of bounds (n={})",
-                    col0 + count,
-                    rd.n()
-                )));
+            if count == 0 {
+                return Err(invalid("empty job range"));
+            }
+            if let Some(rd) = &rd {
+                if col0 + count > rd.n() {
+                    return Err(invalid(format!(
+                        "job range [{col0}, {}) out of bounds (n={})",
+                        col0 + count,
+                        rd.n()
+                    )));
+                }
             }
             let chunk = (*chunk as usize).max(1);
             let mut at = col0;
             while at < col0 + count {
                 let c = chunk.min(col0 + count - at);
-                let x = rd.read_columns(at, c)?;
+                let x = match &mut rd {
+                    Some(rd) => rd.read_columns(at, c)?,
+                    None => src.fetch(job_id, at, c)?,
+                };
+                if x.rows != p_op || x.cols != c {
+                    return Err(invalid(format!(
+                        "feature block is ({}, {}), expected \
+                         ({p_op}, {c})",
+                        x.rows, x.cols
+                    )));
+                }
                 let xk = reducer.reduce(&x);
                 sink(encode_block_partial(at, &xk))?;
                 at += c;
             }
             Ok(())
+        }
+        JobPayload::ClusterShard {
+            shard,
+            n_rows,
+            n_cols,
+            chunk,
+            k_s,
+            shard_seed,
+            max_rounds,
+            feature_subsample,
+            edges,
+        } => {
+            let p_s = *n_rows as usize;
+            let n = *n_cols as usize;
+            if p_s == 0 || n == 0 {
+                return Err(invalid("empty shard slice"));
+            }
+            // assemble the shard's (p_s, n) feature slice from
+            // column-range fetches; the row set is implicit in the
+            // job id (the coordinator's hub resolves it)
+            let chunk = (*chunk as usize).max(1);
+            let mut xs = FeatureMatrix::zeros(p_s, n);
+            let mut at = 0usize;
+            while at < n {
+                let c = chunk.min(n - at);
+                let x = src.fetch(job_id, at, c)?;
+                if x.rows != p_s || x.cols != c {
+                    return Err(invalid(format!(
+                        "range block is ({}, {}), expected \
+                         ({p_s}, {c})",
+                        x.rows, x.cols
+                    )));
+                }
+                for r in 0..p_s {
+                    xs.row_mut(r)[at..at + c]
+                        .copy_from_slice(x.row(r));
+                }
+                at += c;
+            }
+            let base = FastCluster {
+                max_rounds: *max_rounds as usize,
+                feature_subsample: match *feature_subsample {
+                    0 => None,
+                    f => Some(f as usize),
+                },
+            };
+            let (labels, _trace) = fit_shard(
+                &base,
+                &xs,
+                edges,
+                *k_s as usize,
+                *shard_seed,
+            )?;
+            sink(encode_shard_partial(*shard, &labels))
         }
         JobPayload::Fold {
             fold_id,
@@ -630,6 +993,7 @@ pub fn run_worker(addr: &str, wopts: &WorkerOptions) -> Result<()> {
                     job,
                     &payload,
                     &writer,
+                    &mut reader,
                     &current,
                     wopts,
                     &mut sent_total,
@@ -673,6 +1037,7 @@ fn run_assignment(
     job: u64,
     payload: &[u8],
     writer: &Arc<Mutex<TcpStream>>,
+    reader: &mut BufReader<TcpStream>,
     current: &Arc<AtomicU64>,
     wopts: &WorkerOptions,
     sent_total: &mut usize,
@@ -680,7 +1045,11 @@ fn run_assignment(
     let decoded = decode_job(payload)?;
     let mut seq: u32 = 0;
     let mut sent_this_job = 0usize;
-    execute_job(&decoded, &mut |bytes: Vec<u8>| {
+    // the connection doubles as the data plane mid-assignment: the
+    // main read loop is parked in this call, so FETCH/DATA exchanges
+    // cannot race an incoming frame
+    let mut src = WireSource { writer, reader };
+    execute_job(job, &decoded, &mut src, &mut |bytes: Vec<u8>| {
         *sent_total += 1;
         let ordinal = *sent_total;
         if let Some(limit) = wopts.fail_after_partials {
@@ -735,12 +1104,16 @@ enum Expect {
     /// Reduce job: `(k, count)`-shaped blocks tiling
     /// `[col0, col0+count)`.
     Blocks { k: usize, col0: usize, count: usize },
+    /// Shard-clustering job: exactly one labels partial for `shard`,
+    /// covering its `n_rows` vertices.
+    Shard { shard: u32, n_rows: usize },
     /// Fold job: exactly one partial for this fold.
     Fold { fold_id: u32 },
 }
 
 enum JobOut {
     Blocks(Vec<(usize, FeatureMatrix)>),
+    Shard { labels: Labels },
     Fold { fold_id: u32, accuracy: f64, fit: LogregFit },
 }
 
@@ -779,11 +1152,13 @@ fn is_timeout(e: &Error) -> bool {
 }
 
 /// Run one job on one worker connection: assign, collect partials
-/// (tolerating heartbeats), verify the DONE count, decode.
+/// (tolerating heartbeats, answering FETCH range requests from the
+/// hub), verify the DONE count, decode.
 fn run_job(
     conn: &mut WorkerConn,
     job: &Job,
     heartbeat: Duration,
+    hub: &DataHub,
 ) -> std::result::Result<JobOut, Fail> {
     let assign = DistFrame::Assign {
         job: job.id,
@@ -811,6 +1186,32 @@ fn run_job(
             Ok(Some(DistFrame::Ack {
                 kind: ACK_HEARTBEAT, ..
             })) => continue,
+            Ok(Some(DistFrame::Fetch { job: j, col0, count }))
+                if j == job.id =>
+            {
+                // a worker that asked for an unservable range (or
+                // that we fail to answer) is left blocked awaiting
+                // DATA — it cannot take another assignment, so the
+                // connection is the casualty either way
+                let block = hub
+                    .read(j, col0 as usize, count as usize)
+                    .map_err(|e| {
+                        Fail::Conn(format!(
+                            "unservable range request: {e}"
+                        ))
+                    })?;
+                let mut payload = Vec::new();
+                put_matrix(&mut payload, &block);
+                let reply = DistFrame::Data { job: j, col0, payload };
+                write_dist_frame(&mut conn.writer, &reply)
+                    .and_then(|_| {
+                        conn.writer.flush().map_err(Error::from)
+                    })
+                    .map_err(|e| {
+                        Fail::Conn(format!("data send failed: {e}"))
+                    })?;
+                hub.served.fetch_add(1, Ordering::Relaxed);
+            }
             Ok(Some(DistFrame::Ack { job: j, kind, info }))
                 if j == job.id && kind == ACK_DONE =>
             {
@@ -886,6 +1287,29 @@ fn decode_out(
             }
             Ok(JobOut::Blocks(blocks))
         }
+        Expect::Shard { shard, n_rows } => {
+            if partials.len() != 1 {
+                return Err(invalid(format!(
+                    "shard job produced {} partials, expected 1",
+                    partials.len()
+                )));
+            }
+            let (id, labels) = decode_shard_partial(&partials[0].1)?;
+            if id != *shard {
+                return Err(invalid(format!(
+                    "shard partial is for shard {id}, \
+                     expected {shard}"
+                )));
+            }
+            if labels.labels.len() != *n_rows {
+                return Err(invalid(format!(
+                    "shard labeling covers {} vertices, \
+                     shard has {n_rows}",
+                    labels.labels.len()
+                )));
+            }
+            Ok(JobOut::Shard { labels })
+        }
         Expect::Fold { fold_id } => {
             if partials.len() != 1 {
                 return Err(invalid(format!(
@@ -920,6 +1344,7 @@ fn dispatch(
     conns: Vec<WorkerConn>,
     jobs: Vec<Job>,
     dist: &DistOptions,
+    hub: &DataHub,
     log: &EventLog,
     report: &mut DistReport,
 ) -> (DispatchState, Vec<WorkerConn>) {
@@ -943,6 +1368,7 @@ fn dispatch(
                             state,
                             heartbeat,
                             dist.max_retries,
+                            hub,
                             log,
                         )
                     })
@@ -969,6 +1395,7 @@ fn worker_loop(
     state: &Mutex<DispatchState>,
     heartbeat: Duration,
     max_retries: usize,
+    hub: &DataHub,
     log: &EventLog,
 ) -> (Option<WorkerConn>, WorkerStat) {
     loop {
@@ -998,7 +1425,7 @@ fn worker_loop(
             job.attempts + 1,
             job.desc
         ));
-        match run_job(&mut conn, &job, heartbeat) {
+        match run_job(&mut conn, &job, heartbeat, hub) {
             Ok(out) => {
                 conn.jobs_done += 1;
                 log.emit(format!(
@@ -1063,12 +1490,15 @@ fn worker_loop(
     (Some(conn), stat)
 }
 
-/// Execute a job in-process through the same codec a worker uses.
-fn run_local(job: &Job) -> Result<JobOut> {
+/// Execute a job in-process through the same codec a worker uses;
+/// wire-mode jobs read their ranges through the same hub that would
+/// have served a worker.
+fn run_local(job: &Job, hub: &DataHub) -> Result<JobOut> {
     let decoded = decode_job(&job.payload)?;
     let mut partials: Vec<(u32, Vec<u8>)> = Vec::new();
     let mut seq: u32 = 0;
-    execute_job(&decoded, &mut |bytes| {
+    let mut src = HubSource(hub);
+    execute_job(job.id, &decoded, &mut src, &mut |bytes| {
         partials.push((seq, bytes));
         seq += 1;
         Ok(())
@@ -1084,6 +1514,7 @@ fn run_phase(
     conns: &mut Vec<WorkerConn>,
     jobs: Vec<Job>,
     dist: &DistOptions,
+    hub: &DataHub,
     log: &EventLog,
     report: &mut DistReport,
 ) -> Result<HashMap<u64, JobOut>> {
@@ -1092,7 +1523,7 @@ fn run_phase(
     } else {
         let taken = std::mem::take(conns);
         let (state, survivors) =
-            dispatch(taken, jobs, dist, log, report);
+            dispatch(taken, jobs, dist, hub, log, report);
         *conns = survivors;
         let mut left: Vec<Job> = state.abandoned;
         left.extend(state.pending);
@@ -1104,7 +1535,7 @@ fn run_phase(
             job.id, job.desc
         ));
         report.local_jobs += 1;
-        done.insert(job.id, run_local(job)?);
+        done.insert(job.id, run_local(job, hub)?);
     }
     Ok(done)
 }
@@ -1251,6 +1682,115 @@ fn partition_ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
 
 // --------------------------------------------------------- the fit
 
+/// Stage 1 as shard jobs (ADR-009): compute the deterministic
+/// [`ShardPlan`](crate::cluster::ShardPlan) on the coordinator, ship
+/// one `ClusterShard` job per shard (registering each shard's row set
+/// with the hub first, so FETCHes resolve), collect the label
+/// partials by shard index, and stitch. Methods without a shard phase
+/// — and the degenerate single-shard plan — run [`fit_reduction`] on
+/// the coordinator instead; either way the operator construction is
+/// shared with the local path ([`reduction_from_labels`]), which is
+/// what keeps the artifact bits independent of the route taken.
+#[allow(clippy::too_many_arguments)]
+fn distribute_clustering(
+    ds: &MaskedDataset,
+    reduce_cfg: &ReduceConfig,
+    dist: &DistOptions,
+    hub: &mut DataHub,
+    conns: &mut Vec<WorkerConn>,
+    log: &EventLog,
+    report: &mut DistReport,
+) -> Result<(ReductionOp, Box<dyn Reducer + Send + Sync>)> {
+    if !matches!(reduce_cfg.method, Method::FastSharded) {
+        log.emit(format!(
+            "distribute-clustering: method '{}' has no shard \
+             phase, stage 1 runs on the coordinator",
+            reduce_cfg.method.name()
+        ));
+        return fit_reduction(ds, reduce_cfg);
+    }
+    // the exact engine make_clusterer would build — one construction
+    // site, or the plans could drift apart
+    let sc = make_sharded(reduce_cfg.shards);
+    let p = ds.p();
+    let k = reduce_cfg.resolve_k(p);
+    let graph = LatticeGraph::from_mask(ds.mask());
+    let plan = sc.plan(&graph, k, reduce_cfg.seed)?;
+    if plan.n_shards == 1 {
+        // ShardedFastCluster::fit_trace short-circuits this case to
+        // the plain single-thread algorithm; mirror it exactly
+        log.emit(
+            "distribute-clustering: plan resolves to one shard, \
+             stage 1 runs on the coordinator"
+                .into(),
+        );
+        return fit_reduction(ds, reduce_cfg);
+    }
+    log.emit(format!(
+        "distribute-clustering: {} shards over {p} voxels \
+         (k={k}, {} cut edges)",
+        plan.n_shards, plan.cut_edges
+    ));
+    let jobs: Vec<Job> = (0..plan.n_shards)
+        .map(|s| {
+            let p_s = plan.members[s].len();
+            let payload = encode_job(&JobPayload::ClusterShard {
+                shard: s as u32,
+                n_rows: p_s as u32,
+                n_cols: ds.n() as u32,
+                chunk: dist.chunk_samples.max(1) as u32,
+                k_s: plan.k_targets[s] as u32,
+                shard_seed: plan.seeds[s],
+                max_rounds: sc.base.max_rounds as u32,
+                feature_subsample: sc
+                    .base
+                    .feature_subsample
+                    .unwrap_or(0)
+                    as u64,
+                edges: plan.local_edges[s].clone(),
+            });
+            hub.rows.insert(s as u64, plan.members[s].clone());
+            Job {
+                id: s as u64,
+                attempts: 0,
+                payload: Arc::new(payload),
+                expect: Expect::Shard {
+                    shard: s as u32,
+                    n_rows: p_s,
+                },
+                desc: format!("cluster shard {s} ({p_s} voxels)"),
+            }
+        })
+        .collect();
+    report.cluster_jobs = jobs.len();
+    let done = run_phase(conns, jobs, dist, hub, log, report)?;
+    let mut shard_labels = Vec::with_capacity(plan.n_shards);
+    for s in 0..plan.n_shards {
+        match done.get(&(s as u64)) {
+            Some(JobOut::Shard { labels }) => {
+                shard_labels.push(labels.clone())
+            }
+            _ => {
+                return Err(invalid(format!(
+                    "shard job {s} produced no labels"
+                )))
+            }
+        }
+    }
+    let (labels, k_total) = stitch_shards(
+        ds.data(),
+        &graph.edges,
+        k,
+        &plan.members,
+        &shard_labels,
+    )?;
+    log.emit(format!(
+        "stitched {} shards: {k_total} -> {} clusters",
+        plan.n_shards, labels.k
+    ));
+    reduction_from_labels(Some(&labels), p, k, reduce_cfg)
+}
+
 /// Fit a model across worker processes — same signature and same
 /// result bits as [`fit_model`](crate::model::fit_model), plus the
 /// [`DistReport`] describing how the work was spread and recovered.
@@ -1273,13 +1813,8 @@ pub fn run_distributed_fit(
         ..Default::default()
     };
 
-    // stage 1 runs on the coordinator: the parcellation needs the
-    // whole cohort (label-free, cheap relative to the fold fits)
-    let (reduction, reducer) = fit_reduction(ds, reduce_cfg)?;
-    let k = reducer.k();
-    drop(reducer); // workers rebuild it from the shipped ReductionOp
-
-    // stage the cohort where every local worker can stream it
+    // stage the cohort up front: in wire mode even stage 1 streams
+    // it back out of the coordinator's range server
     let work_dir = match &dist.work_dir {
         Some(d) => d.clone(),
         None => std::env::temp_dir().join(format!(
@@ -1292,6 +1827,7 @@ pub fn run_distributed_fit(
     save_dataset(&stem, ds)?;
     let stem_str = stem.to_string_lossy().into_owned();
     log.emit(format!("cohort staged at {stem_str} (n={})", ds.n()));
+    let mut hub = DataHub::open(&stem)?;
 
     // bring up the fleet
     let listener = TcpListener::bind(&dist.bind)?;
@@ -1306,24 +1842,54 @@ pub fn run_distributed_fit(
     };
     report.workers_connected = conns.len();
 
+    // ---- phase 0: stage-1 parcellation — shipped to workers as
+    // shard jobs (ADR-009) when asked to, on the coordinator
+    // otherwise; same bits either way
+    let sw = Stopwatch::start();
+    let (reduction, reducer) = if dist.distribute_clustering {
+        distribute_clustering(
+            ds,
+            reduce_cfg,
+            dist,
+            &mut hub,
+            &mut conns,
+            &log,
+            &mut report,
+        )?
+    } else {
+        fit_reduction(ds, reduce_cfg)?
+    };
+    let k = reducer.k();
+    drop(reducer); // workers rebuild it from the shipped ReductionOp
+    report.cluster_secs = sw.secs();
+
+    // wire mode withholds the staged path from every job: workers
+    // must come back through the range server for their bytes
+    let job_stem = if dist.distribute_clustering {
+        String::new()
+    } else {
+        stem_str.clone()
+    };
+
     // ---- phase A: chunked reduction of the sample range
     let sw = Stopwatch::start();
     let lanes =
         conns.len().max(1) * dist.jobs_per_worker.max(1);
     let ranges = partition_ranges(ds.n(), lanes);
+    let reduce_job0 = report.cluster_jobs as u64;
     let jobs: Vec<Job> = ranges
         .iter()
         .enumerate()
         .map(|(i, &(col0, count))| {
             let payload = encode_job(&JobPayload::Reduce {
-                stem: stem_str.clone(),
+                stem: job_stem.clone(),
                 col0: col0 as u32,
                 count: count as u32,
                 chunk: dist.chunk_samples.max(1) as u32,
                 op: reduction.clone(),
             });
             Job {
-                id: i as u64,
+                id: reduce_job0 + i as u64,
                 attempts: 0,
                 payload: Arc::new(payload),
                 expect: Expect::Blocks { k, col0, count },
@@ -1334,7 +1900,8 @@ pub fn run_distributed_fit(
     report.reduce_jobs = jobs.len();
     let reduce_job_ids: Vec<u64> =
         jobs.iter().map(|j| j.id).collect();
-    let done = run_phase(&mut conns, jobs, dist, &log, &mut report)?;
+    let done =
+        run_phase(&mut conns, jobs, dist, &hub, &log, &mut report)?;
     let mut acc = ReduceAccumulator::new(k, ds.n());
     for id in reduce_job_ids {
         match done.get(&id) {
@@ -1363,7 +1930,7 @@ pub fn run_distributed_fit(
     let xs = xk.transpose(); // (n, k), as in fit_model
     let y: Vec<f32> = labels01.iter().map(|&l| l as f32).collect();
     let folds = stratified_kfold(labels01, est_cfg.cv_folds, FOLD_SEED);
-    let fold_job0 = report.reduce_jobs as u64;
+    let fold_job0 = reduce_job0 + report.reduce_jobs as u64;
     let jobs: Vec<Job> = folds
         .iter()
         .enumerate()
@@ -1396,7 +1963,8 @@ pub fn run_distributed_fit(
         })
         .collect();
     report.fold_jobs = jobs.len();
-    let done = run_phase(&mut conns, jobs, dist, &log, &mut report)?;
+    let done =
+        run_phase(&mut conns, jobs, dist, &hub, &log, &mut report)?;
     let mut fold_models = Vec::with_capacity(folds.len());
     for (fi, fold) in folds.iter().enumerate() {
         match done.get(&(fold_job0 + fi as u64)) {
@@ -1429,6 +1997,7 @@ pub fn run_distributed_fit(
         // dropping the connection EOFs the worker's read loop
     }
     report.topology.sort_by_key(|w| w.worker);
+    report.range_blocks = hub.served.load(Ordering::Relaxed);
     shutdown_children(&mut children);
     if dist.work_dir.is_none() {
         let _ = std::fs::remove_dir_all(&work_dir);
@@ -1522,6 +2091,21 @@ mod tests {
                     seed: 42,
                 },
             },
+            JobPayload::ClusterShard {
+                shard: 1,
+                n_rows: 4,
+                n_cols: 6,
+                chunk: 2,
+                k_s: 2,
+                shard_seed: 0x5A4D,
+                max_rounds: 64,
+                feature_subsample: 0,
+                edges: vec![
+                    Edge::new(0, 1, 0.5),
+                    Edge::new(1, 2, 1.25),
+                    Edge::new(2, 3, f32::MIN_POSITIVE),
+                ],
+            },
             JobPayload::Fold {
                 fold_id: 2,
                 sgd_epochs: 3,
@@ -1559,6 +2143,34 @@ mod tests {
         put_u32(&mut b, 5);
         put_u32(&mut b, 1 << 30);
         assert!(decode_job(&b).is_err());
+        // same for a shard job claiming 2^29 edges
+        let mut b = vec![2u8];
+        for _ in 0..5 {
+            put_u32(&mut b, 1);
+        }
+        put_u64(&mut b, 7);
+        put_u32(&mut b, 64);
+        put_u64(&mut b, 0);
+        put_u32(&mut b, 1 << 29);
+        assert!(decode_job(&b).is_err());
+    }
+
+    #[test]
+    fn shard_partial_codec_roundtrips_and_validates() {
+        let labels = Labels::new(vec![0, 2, 1, 2, 0], 3).unwrap();
+        let enc = encode_shard_partial(4, &labels);
+        let (shard, back) = decode_shard_partial(&enc).unwrap();
+        assert_eq!(shard, 4);
+        assert_eq!(back, labels);
+        // truncation and non-compact labelings are rejected
+        assert!(decode_shard_partial(&enc[..enc.len() - 1]).is_err());
+        let mut bad = Vec::new();
+        put_u32(&mut bad, 0);
+        put_u32(&mut bad, 3); // claims k=3 ...
+        put_u32(&mut bad, 2);
+        put_u32(&mut bad, 0);
+        put_u32(&mut bad, 0); // ... but only cluster 0 appears
+        assert!(decode_shard_partial(&bad).is_err());
     }
 
     #[test]
@@ -1684,6 +2296,65 @@ mod tests {
         let pid = std::process::id();
         let a = tmp.join(format!("fc_dist_local_{pid}.fcm"));
         let b = tmp.join(format!("fc_dist_dist_{pid}.fcm"));
+        save_model(&a, &local).unwrap();
+        save_model(&b, &got).unwrap();
+        let ba = std::fs::read(&a).unwrap();
+        let bb = std::fs::read(&b).unwrap();
+        let _ = std::fs::remove_file(&a);
+        let _ = std::fs::remove_file(&b);
+        assert_eq!(ba, bb, "artifacts are byte-identical");
+    }
+
+    /// Wire mode with zero workers: shard, reduce and fold jobs all
+    /// run through the local fallback — decoding the same job bytes
+    /// and reading through the same hub a worker would — and the
+    /// artifact still byte-matches the single-process fast-sharded
+    /// fit. This pins the ADR-009 arithmetic without any sockets.
+    #[test]
+    fn distributed_clustering_zero_workers_matches_fit() {
+        let dc = DataConfig {
+            dims: [9, 10, 8],
+            n_samples: 24,
+            seed: 11,
+            ..Default::default()
+        };
+        let (ds, y) = MorphometryGenerator::new(dc.dims)
+            .generate(dc.n_samples, dc.seed);
+        let reduce = ReduceConfig {
+            method: Method::FastSharded,
+            ratio: 10,
+            shards: 3, // pinned: shards=0 resolves from core count
+            ..Default::default()
+        };
+        let est = EstimatorConfig {
+            cv_folds: 3,
+            max_iter: 80,
+            ..Default::default()
+        };
+        let opts = FitOptions::default();
+        let dist = DistOptions {
+            workers: 0,
+            chunk_samples: 5,
+            distribute_clustering: true,
+            accept_ms: 50,
+            ..Default::default()
+        };
+        let local =
+            fit_model(&ds, &y, &reduce, &est, &dc, &opts).unwrap();
+        let (got, report) = run_distributed_fit(
+            &ds, &y, &reduce, &est, &dc, &opts, &dist,
+        )
+        .unwrap();
+        assert_eq!(report.cluster_jobs, 3, "one job per shard");
+        assert_eq!(
+            report.local_jobs,
+            report.cluster_jobs + report.reduce_jobs
+                + report.fold_jobs
+        );
+        let tmp = std::env::temp_dir();
+        let pid = std::process::id();
+        let a = tmp.join(format!("fc_distc_local_{pid}.fcm"));
+        let b = tmp.join(format!("fc_distc_dist_{pid}.fcm"));
         save_model(&a, &local).unwrap();
         save_model(&b, &got).unwrap();
         let ba = std::fs::read(&a).unwrap();

@@ -25,7 +25,11 @@
 //!   worker processes over the ADR-004 wire protocol and merges the
 //!   streamed partial reductions / fold fits into a fitted model
 //!   byte-identical to the single-process fit, with heartbeat
-//!   timeouts, bounded retry and a local fallback.
+//!   timeouts, bounded retry and a local fallback. With
+//!   [`DistOptions::distribute_clustering`] (ADR-009) stage 1
+//!   itself is sharded across the workers, which fetch their voxel
+//!   slices through coordinator-side FETCH/DATA range serving
+//!   instead of touching the staged `.fcd` path.
 //! * [`WorkerPool`] — fixed thread pool over a [`BoundedQueue`]; job
 //!   results are reassembled by submission id, so parallelism never
 //!   changes results (see `worker_parallelism_does_not_change_results`
@@ -62,8 +66,9 @@ pub use distributed::{
 };
 pub use events::{EventLog, Metrics, Stopwatch};
 pub use pipeline::{
-    fit_clustering, make_clusterer, make_reducer, run_cv_folds,
-    run_decoding_pipeline, DecodingReport, PipelineBuilder, StageReport,
+    fit_clustering, make_clusterer, make_reducer, make_sharded,
+    run_cv_folds, run_decoding_pipeline, DecodingReport,
+    PipelineBuilder, StageReport,
 };
 pub use queue::BoundedQueue;
 pub use stream::{run_streaming_decoding, stream_reduce, StreamingReport};

@@ -33,10 +33,7 @@ pub fn make_clusterer(
         Method::Fast => {
             Box::new(FastCluster { max_rounds: 64, feature_subsample: None })
         }
-        Method::FastSharded => Box::new(ShardedFastCluster {
-            n_shards: shards,
-            ..Default::default()
-        }),
+        Method::FastSharded => Box::new(make_sharded(shards)),
         Method::RandSingle => Box::new(RandSingle),
         Method::Single => Box::new(SingleLinkage),
         Method::Average => Box::new(AverageLinkage),
@@ -45,6 +42,14 @@ pub fn make_clusterer(
         Method::Kmeans => Box::new(KMeans { max_iter: 25, tol: 1e-4 }),
         Method::RandomProjection | Method::None => return None,
     })
+}
+
+/// The ADR-002 sharded engine exactly as [`make_clusterer`]
+/// configures it — exposed concretely so the distributed coordinator
+/// (docs/adr/009) computes the same [`crate::cluster::ShardPlan`]
+/// the local path would.
+pub fn make_sharded(shards: usize) -> ShardedFastCluster {
+    ShardedFastCluster { n_shards: shards, ..Default::default() }
 }
 
 /// Fit the configured clustering method; `None` for raw / RP methods.

@@ -1,6 +1,12 @@
 //! A fixed-size worker pool executing boxed jobs from a bounded queue —
 //! the execution substrate of the pipeline. Results come back over a
 //! second queue tagged with the job id so callers can reassemble order.
+//!
+//! This is the *in-process* thread pool; the multi-process analogue
+//! (spawned `repro worker` processes fed over the ADR-004 wire
+//! protocol, including the ADR-009 shard-clustering jobs) lives in
+//! [`super::distributed`]. Both share the same contract: results are
+//! keyed by job id, so scheduling order never changes outputs.
 
 use std::thread::JoinHandle;
 

@@ -112,6 +112,13 @@
 //! injected worker death, dropped/corrupted partials and heartbeat
 //! timeouts, all the way down to zero live workers (CLI:
 //! `repro fit-distributed --workers N` / `repro worker --connect`).
+//! With `--distribute-clustering` (ADR-009) stage 1 distributes too:
+//! the coordinator ships ADR-002 spatial shards as clustering jobs
+//! and stitches the returned label partials, while workers fetch
+//! their voxel/sample blocks through coordinator-side FETCH/DATA
+//! range serving instead of reading the staged `.fcd` path — same
+//! byte-identity contract, proven by a randomized fault soak
+//! (`tests/distributed_soak.rs`).
 //!
 //! ## Kernel layer (ADR-005)
 //!

@@ -25,6 +25,8 @@
 //!   [--heartbeat-ms MS] [--bind A]  #   byte-identical to `fit`;
 //!   [--expect N] [--inject K:W]     #   topology + recovery events
 //!   [--events PATH] [--verbose]     #   go to <save>.dist.json
+//!   [--distribute-clustering]       #   shard stage 1 over workers
+//!                                   #   w/ range serving (ADR-009)
 //! repro worker --connect ADDR       # one fit worker process (used
 //!   [--heartbeat-ms MS]             #   by fit-distributed; fault
 //!                                   #   flags exist for tests/CI)
@@ -494,7 +496,10 @@ fn fit_cmd(cli: &Cli) -> Result<()> {
 /// over worker processes (ADR-006). The `.fcm` is byte-identical to
 /// `repro fit --save`; worker topology and the recovery event log go
 /// to a `<save>.dist.json` sidecar instead, so the artifact bytes
-/// never depend on how the work was scheduled.
+/// never depend on how the work was scheduled. With
+/// `--distribute-clustering` (ADR-009) stage 1 itself is sharded
+/// across the workers, which fetch their voxel slices through
+/// coordinator-side range serving instead of the staged file path.
 fn fit_distributed_cmd(cli: &Cli) -> Result<()> {
     let cfg = load_config(cli)?;
     cfg.validate()?;
@@ -522,6 +527,10 @@ fn fit_distributed_cmd(cli: &Cli) -> Result<()> {
             .map(|v| v as u64)
             .unwrap_or(cfg.dist.heartbeat_ms),
         max_retries: cfg.dist.max_retries,
+        distribute_clustering: cli
+            .flags
+            .contains_key("distribute-clustering")
+            || cfg.dist.distribute_clustering,
         verbose: cli.flags.contains_key("verbose"),
         ..Default::default()
     };
@@ -535,12 +544,17 @@ fn fit_distributed_cmd(cli: &Cli) -> Result<()> {
         dist.inject = Some(FaultSpec::parse(spec)?);
     }
     println!(
-        "fit-distributed: p={} n={} method={} k={} workers={}{}",
+        "fit-distributed: p={} n={} method={} k={} workers={}{}{}",
         ds.p(),
         ds.n(),
         cfg.reduce.method.name(),
         cfg.reduce.resolve_k(ds.p()),
         dist.workers + dist.expect_external,
+        if dist.distribute_clustering {
+            " dist-clustering"
+        } else {
+            ""
+        },
         match &dist.inject {
             Some(s) => format!(" inject={:?}:{}", s.kind, s.worker),
             None => String::new(),
@@ -561,12 +575,13 @@ fn fit_distributed_cmd(cli: &Cli) -> Result<()> {
     println!("accuracy = {mean:.3} ± {std:.3}  ({} folds)", accs.len());
     println!(
         "workers: {}/{} connected, {} lost; {} retries, {} local \
-         fallbacks",
+         fallbacks, {} range blocks served",
         report.workers_connected,
         report.workers_requested,
         report.workers_lost,
         report.retries,
-        report.local_jobs
+        report.local_jobs,
+        report.range_blocks
     );
     let path = PathBuf::from(save);
     save_model(&path, &model)?;
@@ -1061,7 +1076,8 @@ bench-check|bench-promote|runtime-check> \
 [--max-conns N] [--batch-window-us U] [--log PATH] [--quick] \
 [--json PATH] [--current A --baseline B --factor F] \
 [--heartbeat-ms MS] [--bind ADDR] [--expect N] [--inject KIND:W] \
-[--events PATH] [--connect ADDR] [--verbose]";
+[--events PATH] [--connect ADDR] [--distribute-clustering] \
+[--verbose]";
 
 fn main() -> ExitCode {
     let Some(cli) = parse_args() else {

@@ -13,6 +13,7 @@
 //! both.
 
 use super::{FittedModel, ModelHeader, ReductionOp};
+use crate::cluster::Labels;
 use crate::config::{
     DataConfig, EstimatorConfig, Method, ReduceConfig,
 };
@@ -74,7 +75,22 @@ pub fn fit_reduction(
         None => None,
         Some(c) => Some(c.fit(ds.data(), &graph, k, reduce_cfg.seed)?),
     };
-    let reduction = match &labels {
+    reduction_from_labels(labels.as_ref(), p, k, reduce_cfg)
+}
+
+/// Package fitted labels (or their absence, for projection methods)
+/// into the persistable operator plus the live reducer — the shared
+/// tail of [`fit_reduction`], called directly by the distributed
+/// coordinator when the labels were agglomerated on workers
+/// (docs/adr/009). One construction site, so the two routes cannot
+/// drift apart field by field.
+pub fn reduction_from_labels(
+    labels: Option<&Labels>,
+    p: usize,
+    k: usize,
+    reduce_cfg: &ReduceConfig,
+) -> Result<(ReductionOp, Box<dyn Reducer + Send + Sync>)> {
+    let reduction = match labels {
         Some(l) => {
             ReductionOp::Cluster { k: l.k, labels: l.labels.clone() }
         }
@@ -84,9 +100,14 @@ pub fn fit_reduction(
             seed: reduce_cfg.seed,
         },
     };
-    let reducer =
-        make_reducer(method, labels.as_ref(), p, k, reduce_cfg.seed)?
-            .ok_or_else(|| invalid("model fit needs a reducer"))?;
+    let reducer = make_reducer(
+        reduce_cfg.method,
+        labels,
+        p,
+        k,
+        reduce_cfg.seed,
+    )?
+    .ok_or_else(|| invalid("model fit needs a reducer"))?;
     Ok((reduction, reducer))
 }
 

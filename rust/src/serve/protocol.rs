@@ -32,22 +32,32 @@
 //! pipeline frames back-to-back — that is exactly what the server's
 //! per-connection batching exploits.
 //!
-//! # Distributed frames (ADR-006)
+//! # Distributed frames (ADR-006, ADR-009)
 //!
 //! The distributed fit reuses the same `opcode u8 + len u32 + body`
-//! framing for four coordinator/worker frames:
+//! framing for six coordinator/worker frames:
 //!
 //! ```text
 //! ASSIGN  (4)  coordinator → worker  job u64, crc u32, payload
 //! PARTIAL (5)  worker → coordinator  job u64, seq u32, crc u32, payload
 //! ACK     (6)  worker → coordinator  job u64, kind u8, info u64
 //! RETRY   (7)  worker → coordinator  job u64, reason str
+//! FETCH   (8)  worker → coordinator  job u64, col0 u32, count u32
+//! DATA    (9)  coordinator → worker  job u64, col0 u32, crc u32, payload
 //! ```
 //!
 //! `crc` is the CRC-32 of the opaque payload (same polynomial as the
 //! `.fcm` section checksums), so a corrupted PARTIAL fails at decode
 //! and the coordinator requeues the range instead of merging bad
-//! bits. Payload semantics live in
+//! bits. FETCH/DATA are the `.fcd` range-serving pair (ADR-009):
+//! a worker without shared storage asks for a column range of its
+//! job's data slice and the coordinator streams the block back —
+//! the row set is implicit in the job, so requests stay fixed-size.
+//! A FETCH itself carries no checksum; the worker instead verifies
+//! the DATA echo (`col0`) and the served block's dimensions against
+//! what it asked for, and the DATA payload is CRC-stamped, so a
+//! corrupted request or reply is always caught before any byte of it
+//! feeds a computation. Payload semantics live in
 //! [`crate::coordinator::distributed`]; this module owns framing and
 //! integrity only, which keeps every decode path reachable from the
 //! `protocol_fuzz` suite.
@@ -79,6 +89,11 @@ pub const OP_PARTIAL: u8 = 5;
 pub const OP_ACK: u8 = 6;
 /// Worker → coordinator: recoverable failure, reassign the job.
 pub const OP_RETRY: u8 = 7;
+/// Worker → coordinator: request a column range of the current job's
+/// data slice (ADR-009 range serving).
+pub const OP_FETCH: u8 = 8;
+/// Coordinator → worker: one served data block answering a FETCH.
+pub const OP_DATA: u8 = 9;
 
 /// [`DistFrame::Ack`] kind: the job finished; `info` = partial
 /// frames the worker believes it sent (the coordinator cross-checks).
@@ -174,6 +189,29 @@ pub enum DistFrame {
         job: u64,
         /// Human-readable cause, recorded in the event log.
         reason: String,
+    },
+    /// Worker → coordinator: serve `count` sample columns starting at
+    /// `col0` of job `job`'s data slice (the row set is implicit in
+    /// the job — ADR-009 range serving).
+    Fetch {
+        /// Job whose data slice is being read.
+        job: u64,
+        /// First sample column requested.
+        col0: u32,
+        /// Number of sample columns requested.
+        count: u32,
+    },
+    /// Coordinator → worker: one data block answering a
+    /// [`DistFrame::Fetch`]. The worker cross-checks `col0` and the
+    /// decoded block's dimensions against its request, so a mangled
+    /// FETCH cannot silently feed it the wrong slice.
+    Data {
+        /// Job the block belongs to.
+        job: u64,
+        /// Echo of the request's first column.
+        col0: u32,
+        /// Encoded data block (checksummed like a PARTIAL payload).
+        payload: Vec<u8>,
     },
 }
 
@@ -309,6 +347,19 @@ pub fn write_dist_frame(w: &mut impl Write, f: &DistFrame) -> Result<()> {
             put_u64(&mut body, *job);
             put_str(&mut body, reason);
             OP_RETRY
+        }
+        DistFrame::Fetch { job, col0, count } => {
+            put_u64(&mut body, *job);
+            put_u32(&mut body, *col0);
+            put_u32(&mut body, *count);
+            OP_FETCH
+        }
+        DistFrame::Data { job, col0, payload } => {
+            put_u64(&mut body, *job);
+            put_u32(&mut body, *col0);
+            put_u32(&mut body, crc32(payload));
+            body.extend_from_slice(payload);
+            OP_DATA
         }
     };
     write_frame(w, opcode, &body)
@@ -570,6 +621,28 @@ pub fn read_dist_frame(r: &mut impl Read) -> Result<Option<DistFrame>> {
             c.finish()?;
             f
         }
+        OP_FETCH => {
+            let f = DistFrame::Fetch {
+                job: c.u64()?,
+                col0: c.u32()?,
+                count: c.u32()?,
+            };
+            c.finish()?;
+            f
+        }
+        OP_DATA => {
+            let job = c.u64()?;
+            let col0 = c.u32()?;
+            let crc = c.u32()?;
+            let payload = c.rest().to_vec();
+            if crc32(&payload) != crc {
+                return Err(invalid(format!(
+                    "DATA block at col {col0} of job {job} fails its \
+                     checksum"
+                )));
+            }
+            DistFrame::Data { job, col0, payload }
+        }
         other => {
             return Err(invalid(format!(
                 "unknown distributed opcode {other:#04x}"
@@ -741,6 +814,48 @@ mod tests {
             DistFrame::Assign { payload, .. } => assert!(payload.is_empty()),
             other => panic!("wrong frame: {other:?}"),
         }
+    }
+
+    #[test]
+    fn range_serving_frames_roundtrip() {
+        match roundtrip_dist(&DistFrame::Fetch {
+            job: 11,
+            col0: 32,
+            count: 8,
+        }) {
+            DistFrame::Fetch { job, col0, count } => {
+                assert_eq!((job, col0, count), (11, 32, 8));
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        match roundtrip_dist(&DistFrame::Data {
+            job: 11,
+            col0: 32,
+            payload: vec![0xAB; 64],
+        }) {
+            DistFrame::Data { job, col0, payload } => {
+                assert_eq!((job, col0), (11, 32));
+                assert_eq!(payload, vec![0xAB; 64]);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn corrupted_data_block_rejected() {
+        let mut buf = Vec::new();
+        write_dist_frame(
+            &mut buf,
+            &DistFrame::Data { job: 4, col0: 0, payload: vec![7; 48] },
+        )
+        .unwrap();
+        let last = buf.len() - 1; // inside the payload
+        buf[last] ^= 0x01;
+        let mut r = &buf[..];
+        let err = read_dist_frame(&mut r).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        // the frame was still fully consumed (stream stays framed)
+        assert!(r.is_empty());
     }
 
     #[test]

@@ -137,6 +137,46 @@ impl FcdReader {
         Ok(out)
     }
 
+    /// Read the `(rows.len(), count)` block of sample columns
+    /// `col0 .. col0 + count` restricted to the given voxel `rows`
+    /// (ascending or not — output rows follow `rows` order). This is
+    /// the coordinator's range-serving read (ADR-009): a distributed
+    /// shard-clustering job only ever needs its shard's voxel rows,
+    /// so the coordinator serves exactly that slice of the staged
+    /// `.fcd` instead of handing workers the file path. Same strided
+    /// `pread` pattern as [`Self::read_columns`], one positioned read
+    /// per requested row.
+    pub fn read_rows_columns(
+        &mut self,
+        rows: &[u32],
+        col0: usize,
+        count: usize,
+    ) -> Result<FeatureMatrix> {
+        let (p, n) = (self.p(), self.n);
+        if count == 0 || col0 + count > n {
+            return Err(invalid(format!(
+                "column block [{col0}, {}) out of range (n={n})",
+                col0 + count
+            )));
+        }
+        if let Some(&bad) = rows.iter().find(|&&r| r as usize >= p) {
+            return Err(invalid(format!(
+                "row {bad} out of range (p={p})"
+            )));
+        }
+        let mut out = FeatureMatrix::zeros(rows.len(), count);
+        let mut buf = vec![0u8; count * 4];
+        for (oi, &r) in rows.iter().enumerate() {
+            let off = ((r as usize * n + col0) * 4) as u64;
+            read_block_at(&self.file, off, &mut buf)?;
+            let dst = out.row_mut(oi);
+            for (j, c) in buf.chunks_exact(4).enumerate() {
+                dst[j] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+        }
+        Ok(out)
+    }
+
     /// Iterate consecutive column blocks of `chunk_samples` samples
     /// (the last block may be shorter).
     pub fn chunks(&mut self, chunk_samples: usize) -> ChunkIter<'_> {
@@ -263,6 +303,34 @@ mod tests {
         }
         assert!(r.read_columns(7, 3).is_err(), "out of range");
         assert!(r.read_columns(0, 0).is_err(), "empty block");
+    }
+
+    #[test]
+    fn read_rows_columns_is_exact_subblock() {
+        let stem = saved_cohort([4, 3, 3], 8, 6, "rowscols");
+        let full = load_dataset(&stem).unwrap();
+        let mut r = FcdReader::open(&stem).unwrap();
+        // a scattered, unordered row set must come back in given order
+        let rows: Vec<u32> = vec![7, 0, 3, 2];
+        let block = r.read_rows_columns(&rows, 1, 5).unwrap();
+        assert_eq!((block.rows, block.cols), (4, 5));
+        for (oi, &row) in rows.iter().enumerate() {
+            for j in 0..5 {
+                assert_eq!(
+                    block.get(oi, j),
+                    full.data().get(row as usize, 1 + j)
+                );
+            }
+        }
+        // full row set in order == read_columns
+        let all: Vec<u32> = (0..full.p() as u32).collect();
+        let via_rows = r.read_rows_columns(&all, 2, 3).unwrap();
+        let via_cols = r.read_columns(2, 3).unwrap();
+        assert_eq!(via_rows.data, via_cols.data);
+        // bounds are enforced
+        assert!(r.read_rows_columns(&rows, 5, 4).is_err());
+        assert!(r.read_rows_columns(&[9999], 0, 1).is_err());
+        assert!(r.read_rows_columns(&rows, 0, 0).is_err());
     }
 
     #[test]

@@ -67,7 +67,11 @@ fn fixture(tag: &str) -> Fixture {
 /// DistOptions for a test: real worker binary, per-test work dir
 /// (the pid-keyed default would collide across parallel tests),
 /// small chunks so every reduce job spans several PARTIAL frames
-/// (the injection ordinals must exist).
+/// (the injection ordinals must exist). The bind address is left at
+/// the `127.0.0.1:0` default on purpose: the coordinator discovers
+/// the kernel-assigned ephemeral port via `local_addr()` and hands
+/// it to the spawned workers, so parallel tests (and parallel CI
+/// jobs) can never collide on a fixed port.
 fn dist_opts(tag: &str, workers: usize) -> DistOptions {
     let work = tmp(&format!("dist_faults_{tag}_work"));
     std::fs::create_dir_all(&work).unwrap();

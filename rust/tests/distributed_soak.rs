@@ -1,0 +1,219 @@
+//! Fault soak for the distributed stage-1 parcellation (ADR-009):
+//! many rounds of `run_distributed_fit` with `distribute_clustering`
+//! on, an 8-worker fleet and a *randomized* fault drawn from a seeded
+//! RNG each round (none / kill / drop / corrupt / delay, against a
+//! random worker). Every round the saved `.fcm` must be byte-identical
+//! to the single-process fast-sharded [`fit_model`] artifact — the
+//! fleet size, the arrival order and the injected fault are all
+//! scheduling noise by contract.
+//!
+//! The jobs run in wire mode (`stem = ""`), so workers never see the
+//! staged `.fcd` path: every voxel/sample block crosses the socket via
+//! FETCH/DATA range serving, which the clean round asserts directly
+//! (`range_blocks > 0`, `local_jobs == 0`).
+//!
+//! Each round appends its event log to
+//! `$CARGO_TARGET_TMPDIR/dist_soak_events.log` before asserting, so a
+//! CI failure ships the full soak history as an artifact.
+//!
+//! `soak_quick` runs in the distributed-smoke CI job; the longer
+//! `soak_long` variant is `#[ignore]`d for nightly/manual runs:
+//! `cargo test --test distributed_soak -- --ignored`.
+
+use std::io::Write;
+use std::path::PathBuf;
+
+use fastclust::config::{
+    DataConfig, EstimatorConfig, Method, ReduceConfig,
+};
+use fastclust::coordinator::{
+    run_distributed_fit, DistOptions, DistReport, FaultKind, FaultSpec,
+};
+use fastclust::model::{fit_model, save_model, FitOptions};
+use fastclust::rng::Rng;
+use fastclust::volume::{MaskedDataset, MorphometryGenerator};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_TARGET_TMPDIR"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+struct Fixture {
+    ds: MaskedDataset,
+    labels: Vec<u8>,
+    reduce: ReduceConfig,
+    est: EstimatorConfig,
+    dc: DataConfig,
+    opts: FitOptions,
+    local_bytes: Vec<u8>,
+}
+
+/// Small cohort, fast-sharded stage 1 with a *pinned* shard count
+/// (shards = 0 would resolve from the core count and the plan must be
+/// machine-independent here), plus the single-process reference bytes.
+fn fixture(tag: &str) -> Fixture {
+    let dc = DataConfig {
+        dims: [8, 9, 7],
+        n_samples: 18,
+        seed: 33,
+        ..Default::default()
+    };
+    let (ds, labels) =
+        MorphometryGenerator::new(dc.dims).generate(dc.n_samples, dc.seed);
+    let reduce = ReduceConfig {
+        method: Method::FastSharded,
+        ratio: 10,
+        shards: 3,
+        ..Default::default()
+    };
+    let est = EstimatorConfig {
+        cv_folds: 3,
+        max_iter: 60,
+        ..Default::default()
+    };
+    let opts = FitOptions::default();
+    let model =
+        fit_model(&ds, &labels, &reduce, &est, &dc, &opts).unwrap();
+    let path = tmp(&format!("dist_soak_{tag}_local.fcm"));
+    save_model(&path, &model).unwrap();
+    let local_bytes = std::fs::read(&path).unwrap();
+    Fixture { ds, labels, reduce, est, dc, opts, local_bytes }
+}
+
+/// Draw this round's fault from the soak RNG: roughly one round in
+/// five is clean, the rest spread over the four fault kinds, each
+/// aimed at a uniformly random member of the fleet.
+fn draw_fault(rng: &mut Rng, workers: usize) -> Option<FaultSpec> {
+    let kind = match rng.below(5) {
+        0 => return None,
+        1 => FaultKind::Kill,
+        2 => FaultKind::Drop,
+        3 => FaultKind::Corrupt,
+        _ => FaultKind::Delay,
+    };
+    Some(FaultSpec { kind, worker: rng.below(workers) })
+}
+
+fn fault_name(f: &Option<FaultSpec>) -> String {
+    match f {
+        None => "clean".into(),
+        Some(s) => format!("{:?}:{}", s.kind, s.worker),
+    }
+}
+
+/// One soak round: distributed fit with the drawn fault, event log
+/// appended to the soak artifact, `.fcm` byte-compared against the
+/// reference.
+fn soak_round(
+    fx: &Fixture,
+    tag: &str,
+    round: usize,
+    workers: usize,
+    inject: Option<FaultSpec>,
+) -> DistReport {
+    let work = tmp(&format!("dist_soak_{tag}_work"));
+    std::fs::create_dir_all(&work).unwrap();
+    let dist = DistOptions {
+        workers,
+        chunk_samples: 4,
+        heartbeat_ms: 600,
+        worker_bin: Some(PathBuf::from(env!("CARGO_BIN_EXE_repro"))),
+        work_dir: Some(work.clone()),
+        distribute_clustering: true,
+        inject: inject.clone(),
+        ..Default::default()
+    };
+    let label = format!("{tag} round {round} [{}]", fault_name(&inject));
+    let (model, report) = run_distributed_fit(
+        &fx.ds, &fx.labels, &fx.reduce, &fx.est, &fx.dc, &fx.opts, &dist,
+    )
+    .unwrap_or_else(|e| panic!("{label}: distributed fit failed: {e}"));
+
+    // Event-log artifact first, assertions second: a failed round must
+    // still leave its history on disk for the CI upload.
+    let mut log = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(tmp("dist_soak_events.log"))
+        .unwrap();
+    writeln!(
+        log,
+        "=== {label}: cluster_jobs={} range_blocks={} retries={} \
+         local_jobs={} workers_lost={}",
+        report.cluster_jobs,
+        report.range_blocks,
+        report.retries,
+        report.local_jobs,
+        report.workers_lost
+    )
+    .unwrap();
+    for e in &report.events {
+        writeln!(log, "{e:?}").unwrap();
+    }
+
+    let path = tmp(&format!("dist_soak_{tag}_round{round}.fcm"));
+    save_model(&path, &model).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    assert_eq!(
+        bytes, fx.local_bytes,
+        "{label}: distributed .fcm differs from the single-process \
+         fast-sharded artifact (events: {:?})",
+        report.events
+    );
+    assert_eq!(
+        report.cluster_jobs, 3,
+        "{label}: stage 1 was not sharded into the pinned shard count"
+    );
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_dir_all(&work);
+    report
+}
+
+fn soak(tag: &str, rounds: usize, workers: usize, seed: u64) {
+    let fx = fixture(tag);
+    let mut rng = Rng::new(seed);
+    let mut faulted = 0usize;
+    for round in 0..rounds {
+        // Round 0 is forced clean so the range-serving path is
+        // asserted unconditionally at least once per soak; the last
+        // round is forced faulty if the RNG never injected anything
+        // (a soak that only ran clean rounds proves nothing).
+        let inject = if round == 0 {
+            None
+        } else if round + 1 == rounds && faulted == 0 {
+            Some(FaultSpec { kind: FaultKind::Kill, worker: 0 })
+        } else {
+            draw_fault(&mut rng, workers)
+        };
+        let clean = inject.is_none();
+        faulted += usize::from(!clean);
+        let report = soak_round(&fx, tag, round, workers, inject);
+        if clean {
+            assert_eq!(
+                report.local_jobs, 0,
+                "{tag} round {round}: clean round fell back locally"
+            );
+            assert!(
+                report.range_blocks > 0,
+                "{tag} round {round}: no data crossed the wire — \
+                 workers read the staged path?"
+            );
+        }
+    }
+    assert!(faulted > 0, "forced-fault backstop failed");
+}
+
+/// CI variant: 8 workers, 6 rounds (round 0 clean, then randomized).
+#[test]
+fn soak_quick() {
+    soak("quick", 6, 8, 0x50AB_0001);
+}
+
+/// Nightly variant: more rounds, same fleet. Run with
+/// `cargo test --test distributed_soak -- --ignored`.
+#[test]
+#[ignore = "long soak; run explicitly (nightly)"]
+fn soak_long() {
+    soak("long", 24, 8, 0x50AB_0002);
+}

@@ -1,6 +1,7 @@
 //! Fuzz smoke for the wire protocol (ADR-004 frames + the ADR-006
-//! ASSIGN/PARTIAL/ACK/RETRY extension + the ADR-007 HTTP head
-//! parser and lazy JSON scanners): every decoder entry point must
+//! ASSIGN/PARTIAL/ACK/RETRY extension + the ADR-009 FETCH/DATA
+//! range-serving frames + the ADR-007 HTTP head parser and lazy
+//! JSON scanners): every decoder entry point must
 //! survive truncation, bit-flips, garbage and hostile length claims
 //! with a clean `Err` (or `Ok(None)` / `Incomplete` / `Bad`) — never
 //! a panic, hang or unbounded allocation. Hand-rolled sweeps over
@@ -42,6 +43,17 @@ fn valid_dist_frames() -> Vec<Vec<u8>> {
         DistFrame::Ack { job: 7, kind: ACK_DONE, info: 3 },
         DistFrame::Ack { job: 0, kind: ACK_HEARTBEAT, info: 0 },
         DistFrame::Retry { job: 9, reason: "busy".into() },
+        // ADR-009 range serving: a shard-data request and its block
+        DistFrame::Fetch { job: 3, col0: 8, count: 4 },
+        DistFrame::Data {
+            job: 3,
+            col0: 8,
+            payload: matrix(5, 4, 13)
+                .data
+                .iter()
+                .flat_map(|f| f.to_le_bytes())
+                .collect(),
+        },
     ];
     frames
         .iter()
@@ -152,7 +164,7 @@ fn fuzz_garbage_streams() {
 /// is capped by what the stream actually holds).
 #[test]
 fn fuzz_oversized_length_claims() {
-    for opcode in [1u8, 2, 3, 4, 5, 6, 7, 0xAA, 0xFF] {
+    for opcode in [1u8, 2, 3, 4, 5, 6, 7, 8, 9, 0xAA, 0xFF] {
         for claim in [
             (1u32 << 28) - 1, // just under MAX_BODY_BYTES
             1 << 28,

@@ -1,0 +1,169 @@
+//! Property tests for the ADR-009 decomposition of the sharded
+//! clustering engine: the distributed coordinator re-assembles a
+//! parcellation from per-shard label partials computed *anywhere*, so
+//! [`fit_shard`] must be a pure function of shard-local inputs and
+//! [`stitch_shards`] must be invariant to how shards were assigned to
+//! workers and in what order their partials arrived — and the whole
+//! assembly must be bit-identical to the single-process
+//! [`ShardedFastCluster::fit_trace`].
+//!
+//! Hand-rolled sweep harness (the offline build carries no proptest):
+//! every property runs over many seeded random instances and failures
+//! print the seed for exact replay.
+
+use fastclust::cluster::{
+    fit_shard, stitch_shards, Labels, ShardPlan, ShardedFastCluster,
+};
+use fastclust::graph::LatticeGraph;
+use fastclust::rng::Rng;
+use fastclust::volume::{MaskedDataset, MorphometryGenerator};
+
+/// Sweep driver: run `prop(seed)` for `n` seeds.
+fn for_seeds(n: u64, mut prop: impl FnMut(u64)) {
+    for seed in 0..n {
+        prop(seed);
+    }
+}
+
+struct Instance {
+    ds: MaskedDataset,
+    graph: LatticeGraph,
+    sc: ShardedFastCluster,
+    k: usize,
+    seed: u64,
+}
+
+/// Random small cohort + a pinned-shard engine. `k` is kept well above
+/// the shard count so `resolve_shards` never collapses the plan to the
+/// single-shard short-circuit.
+fn instance(seed: u64) -> Instance {
+    let mut rng = Rng::new(seed ^ 0x511C);
+    let dims = [
+        5 + rng.below(3),
+        6 + rng.below(3),
+        4 + rng.below(3),
+    ];
+    let n = 8 + rng.below(8);
+    let (ds, _labels) =
+        MorphometryGenerator::new(dims).generate(n, seed ^ 0xD5);
+    let graph = LatticeGraph::from_mask(ds.mask());
+    let k = (ds.p() / 8).max(4);
+    let sc = ShardedFastCluster {
+        n_shards: 2 + rng.below(3),
+        ..Default::default()
+    };
+    Instance { ds, graph, sc, k, seed }
+}
+
+/// The coordinator's assembly: run the shard jobs in `order` (any
+/// permutation — the arrival/assignment schedule), slot each partial
+/// by shard id, stitch.
+fn assemble(inst: &Instance, plan: &ShardPlan, order: &[usize]) -> Labels {
+    let x = inst.ds.data();
+    let mut slots: Vec<Option<Labels>> = vec![None; plan.n_shards];
+    for &s in order {
+        let rows: Vec<usize> =
+            plan.members[s].iter().map(|&v| v as usize).collect();
+        let xs = x.select_rows(&rows);
+        let (ls, _trace) = fit_shard(
+            &inst.sc.base,
+            &xs,
+            &plan.local_edges[s],
+            plan.k_targets[s],
+            plan.seeds[s],
+        )
+        .unwrap();
+        slots[s] = Some(ls);
+    }
+    let shard_labels: Vec<Labels> =
+        slots.into_iter().map(Option::unwrap).collect();
+    let (labels, _k_total) = stitch_shards(
+        x,
+        &inst.graph.edges,
+        inst.k,
+        &plan.members,
+        &shard_labels,
+    )
+    .unwrap();
+    labels
+}
+
+/// Partials computed and stitched shard-by-shard equal the
+/// single-process sharded fit bitwise — the ADR-009 identity contract.
+#[test]
+fn prop_assembled_stitch_matches_single_process_fit() {
+    for_seeds(8, |seed| {
+        let inst = instance(seed);
+        let plan =
+            inst.sc.plan(&inst.graph, inst.k, inst.seed).unwrap();
+        let order: Vec<usize> = (0..plan.n_shards).collect();
+        let assembled = assemble(&inst, &plan, &order);
+        let (reference, _trace) = inst
+            .sc
+            .fit_trace(inst.ds.data(), &inst.graph, inst.k, inst.seed)
+            .unwrap();
+        assert_eq!(assembled.k, reference.k, "seed {seed}");
+        assert_eq!(
+            assembled.labels, reference.labels,
+            "seed {seed}: assembled stitch != single-process fit"
+        );
+    });
+}
+
+/// Any arrival order / shard-to-worker schedule stitches identically:
+/// shuffled execution orders all reproduce the natural-order bits.
+#[test]
+fn prop_stitch_is_arrival_order_invariant() {
+    for_seeds(6, |seed| {
+        let inst = instance(seed);
+        let plan =
+            inst.sc.plan(&inst.graph, inst.k, inst.seed).unwrap();
+        let natural: Vec<usize> = (0..plan.n_shards).collect();
+        let want = assemble(&inst, &plan, &natural);
+        let mut rng = Rng::new(seed ^ 0x0DE2);
+        for _ in 0..3 {
+            let mut order = natural.clone();
+            rng.shuffle(&mut order);
+            let got = assemble(&inst, &plan, &order);
+            assert_eq!(
+                got.labels, want.labels,
+                "seed {seed}: stitch depends on arrival order {order:?}"
+            );
+        }
+    });
+}
+
+/// `fit_shard` is pure: a retried or re-assigned shard job (the
+/// coordinator's recovery path) returns bit-equal labels.
+#[test]
+fn prop_fit_shard_rerun_is_bit_identical() {
+    for_seeds(6, |seed| {
+        let inst = instance(seed);
+        let plan =
+            inst.sc.plan(&inst.graph, inst.k, inst.seed).unwrap();
+        let x = inst.ds.data();
+        for s in 0..plan.n_shards {
+            let rows: Vec<usize> =
+                plan.members[s].iter().map(|&v| v as usize).collect();
+            let xs = x.select_rows(&rows);
+            let run = || {
+                fit_shard(
+                    &inst.sc.base,
+                    &xs,
+                    &plan.local_edges[s],
+                    plan.k_targets[s],
+                    plan.seeds[s],
+                )
+                .unwrap()
+                .0
+            };
+            let a = run();
+            let b = run();
+            assert_eq!(
+                a.labels, b.labels,
+                "seed {seed} shard {s}: fit_shard drifted on rerun"
+            );
+            assert_eq!(a.k, b.k, "seed {seed} shard {s}");
+        }
+    });
+}
