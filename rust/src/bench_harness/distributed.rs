@@ -10,7 +10,12 @@
 //! * **distributed-clustering** — the fast-sharded method with
 //!   stage 1 itself sharded over the workers (ADR-009,
 //!   `--distribute-clustering`): the `.fcm` must be byte-identical
-//!   to a single-process fast-sharded fit.
+//!   to a single-process fast-sharded fit;
+//! * **kill + resume** — the same fit run through the CLI as a child
+//!   process, SIGKILLed once its `.fcj` journal covers roughly half
+//!   of the reference run's, then completed with `--resume`
+//!   (ADR-010): the resumed artifact must be byte-identical to the
+//!   uninterrupted child's.
 //!
 //! All identity checks are hard gates — wall time is recorded for
 //! the trajectory (`BENCH_distributed.json`), but a fast wrong answer
@@ -22,11 +27,13 @@
 //! `worker_bin` at `env!("CARGO_BIN_EXE_repro")`.
 
 use std::fs;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
 
 use crate::bench_harness::{trajectory, Table};
 use crate::config::{
-    DataConfig, EstimatorConfig, Method, ReduceConfig,
+    DataConfig, DistSettings, EstimatorConfig, ExperimentConfig,
+    Method, ReduceConfig, StreamConfig,
 };
 use crate::coordinator::{
     run_distributed_fit, DistOptions, DistReport, FaultKind, FaultSpec,
@@ -109,6 +116,13 @@ pub struct DistBenchResult {
     pub shard_dist_secs: f64,
     /// Distributed-clustering scheduling report.
     pub shard_report: DistReport,
+    /// Wall seconds, uninterrupted child CLI run (the kill+resume
+    /// reference, ADR-010).
+    pub resume_clean_secs: f64,
+    /// Wall seconds, the `--resume` completion after the SIGKILL.
+    pub resume_secs: f64,
+    /// Jobs the resume run answered straight from the journal.
+    pub resume_replayed: usize,
     /// Clean `.fcm` bytes == local `.fcm` bytes.
     pub identical_clean: bool,
     /// Fault-run `.fcm` bytes == local `.fcm` bytes.
@@ -116,6 +130,8 @@ pub struct DistBenchResult {
     /// Distributed-clustering `.fcm` bytes == local fast-sharded
     /// `.fcm` bytes.
     pub identical_sharded: bool,
+    /// Resumed `.fcm` bytes == uninterrupted child run's bytes.
+    pub identical_resume: bool,
 }
 
 /// The ADR-006 acceptance gates: byte-identity with and without an
@@ -140,7 +156,120 @@ pub fn check_gates(r: &DistBenchResult) -> Result<()> {
              the single-process fast-sharded artifact",
         ));
     }
+    if !r.identical_resume {
+        return Err(invalid(
+            "REGRESSION: the resumed .fcm differs from the \
+             uninterrupted run's artifact (ADR-010 replay identity)",
+        ));
+    }
     Ok(())
+}
+
+/// Spawn one `repro fit-distributed` child against a config file.
+/// stderr is inherited so a failing child leaves diagnostics in the
+/// bench output; stdout (tables, paths) is discarded.
+fn spawn_fit(
+    repro: &Path,
+    cfg_path: &Path,
+    save: &Path,
+    journal: &Path,
+    resume: bool,
+) -> Result<std::process::Child> {
+    let mut c = Command::new(repro);
+    c.arg("fit-distributed")
+        .arg("--config")
+        .arg(cfg_path)
+        .arg("--save")
+        .arg(save)
+        .arg("--journal")
+        .arg(journal)
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit());
+    if resume {
+        c.arg("--resume").arg(journal);
+    }
+    c.spawn().map_err(|e| {
+        invalid(format!("cannot spawn {}: {e}", repro.display()))
+    })
+}
+
+/// The ADR-010 row. Runs through the CLI in child processes because
+/// the SIGKILL must hit a *real* coordinator process — an in-process
+/// simulation could leak destructor-order cleanup the crash path
+/// never gets. Returns `(clean_secs, resume_secs, identical,
+/// replayed_jobs)`.
+fn kill_and_resume(
+    cfg: &DistBenchConfig,
+    xc: &ExperimentConfig,
+    dir: &Path,
+) -> Result<(f64, f64, bool, usize)> {
+    let repro = match &cfg.worker_bin {
+        Some(p) => p.clone(),
+        None => std::env::current_exe()?,
+    };
+    let cfg_path = dir.join("resume_cfg.json");
+    fs::write(&cfg_path, xc.to_json().to_string_pretty())?;
+
+    // reference: the same CLI invocation, never interrupted
+    let ref_save = dir.join("resume_ref.fcm");
+    let ref_journal = dir.join("resume_ref.fcj");
+    let t0 = std::time::Instant::now();
+    let st = spawn_fit(&repro, &cfg_path, &ref_save, &ref_journal, false)?
+        .wait()?;
+    let clean_secs = t0.elapsed().as_secs_f64();
+    if !st.success() {
+        return Err(invalid(
+            "reference fit-distributed child failed",
+        ));
+    }
+    let ref_bytes = fs::read(&ref_save)?;
+    let ref_len = fs::metadata(&ref_journal)?.len();
+
+    // victim: SIGKILL once the journal reaches ~half the reference
+    // length. A fast machine may finish first — then the resume run
+    // simply replays everything, which is still a valid identity
+    // check, just a weaker one.
+    let save = dir.join("resume_kill.fcm");
+    let journal = dir.join("resume_kill.fcj");
+    let mut child =
+        spawn_fit(&repro, &cfg_path, &save, &journal, false)?;
+    let deadline = std::time::Instant::now()
+        + std::time::Duration::from_secs(600);
+    loop {
+        if child.try_wait()?.is_some() {
+            break;
+        }
+        let done =
+            fs::metadata(&journal).map(|m| m.len()).unwrap_or(0);
+        if done >= ref_len / 2
+            || std::time::Instant::now() > deadline
+        {
+            // SIGKILL: no destructors run, a torn tail is allowed
+            let _ = child.kill();
+            let _ = child.wait();
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+
+    // resume: requeue only what the journal is missing
+    let t0 = std::time::Instant::now();
+    let st = spawn_fit(&repro, &cfg_path, &save, &journal, true)?
+        .wait()?;
+    let resume_secs = t0.elapsed().as_secs_f64();
+    if !st.success() {
+        return Err(invalid("resumed fit-distributed child failed"));
+    }
+    let identical = fs::read(&save)? == ref_bytes;
+    let replayed =
+        fs::read_to_string(format!("{}.dist.json", save.display()))
+            .ok()
+            .and_then(|t| crate::json::parse(&t).ok())
+            .and_then(|v| {
+                v.get("replayed_jobs").and_then(|x| x.as_usize())
+            })
+            .unwrap_or(0);
+    Ok((clean_secs, resume_secs, identical, replayed))
 }
 
 /// Run the comparison: fit locally, fit distributed (clean), fit
@@ -241,6 +370,28 @@ pub fn run(cfg: &DistBenchConfig) -> Result<DistBenchResult> {
     let identical_sharded =
         fs::read(&shard_dist_path)? == shard_local_bytes;
 
+    // ADR-010 row: kill the coordinator mid-fit and resume from the
+    // journal. The fit settings travel to the child CLI processes
+    // via a config file; `stream.chunk_samples` doubles as both the
+    // job chunking and the sgd chunk on the CLI path, so the two
+    // children agree on the whole plan.
+    let xc = ExperimentConfig {
+        data: dc.clone(),
+        reduce: reduce.clone(),
+        estimator: est.clone(),
+        stream: StreamConfig {
+            chunk_samples: dist.chunk_samples,
+            ..Default::default()
+        },
+        dist: DistSettings {
+            workers: cfg.workers,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let (resume_clean_secs, resume_secs, identical_resume, resume_replayed) =
+        kill_and_resume(cfg, &xc, &dir)?;
+
     let _ = fs::remove_dir_all(&dir);
     let accs: Vec<f64> =
         local.folds.iter().map(|f| f.accuracy).collect();
@@ -256,9 +407,13 @@ pub fn run(cfg: &DistBenchConfig) -> Result<DistBenchResult> {
         shard_local_secs,
         shard_dist_secs,
         shard_report,
+        resume_clean_secs,
+        resume_secs,
+        resume_replayed,
         identical_clean,
         identical_fault,
         identical_sharded,
+        identical_resume,
     })
 }
 
@@ -329,6 +484,24 @@ pub fn table(r: &DistBenchResult) -> Table {
         yn(r.identical_sharded),
         "-".into(),
     ]);
+    t.row(vec![
+        "kill+resume secs".into(),
+        format!("{:.3} (clean child)", r.resume_clean_secs),
+        format!("{:.3} (resume)", r.resume_secs),
+        "-".into(),
+    ]);
+    t.row(vec![
+        "kill+resume replayed".into(),
+        "-".into(),
+        format!("{}", r.resume_replayed),
+        "-".into(),
+    ]);
+    t.row(vec![
+        "kill+resume identical".into(),
+        "(reference)".into(),
+        yn(r.identical_resume),
+        "-".into(),
+    ]);
     t
 }
 
@@ -363,6 +536,13 @@ pub fn report_json(r: &DistBenchResult) -> Value {
                 r.shard_report.range_blocks as f64,
             ),
             ("identical_sharded", b(r.identical_sharded)),
+            ("resume_clean_secs", r.resume_clean_secs),
+            ("resume_fit_secs", r.resume_secs),
+            (
+                "resume_replayed_jobs",
+                r.resume_replayed as f64,
+            ),
+            ("identical_resume", b(r.identical_resume)),
         ],
     )
 }
@@ -380,7 +560,12 @@ mod tests {
         assert!(q.workers < d.workers);
     }
 
-    fn result(clean: bool, fault: bool, sharded: bool) -> DistBenchResult {
+    fn result(
+        clean: bool,
+        fault: bool,
+        sharded: bool,
+        resume: bool,
+    ) -> DistBenchResult {
         DistBenchResult {
             p: 10,
             n: 4,
@@ -393,27 +578,34 @@ mod tests {
             shard_local_secs: 1.0,
             shard_dist_secs: 1.0,
             shard_report: DistReport::default(),
+            resume_clean_secs: 1.0,
+            resume_secs: 1.0,
+            resume_replayed: 0,
             identical_clean: clean,
             identical_fault: fault,
             identical_sharded: sharded,
+            identical_resume: resume,
         }
     }
 
     #[test]
-    fn gates_require_all_three_identities() {
-        assert!(check_gates(&result(true, true, true)).is_ok());
-        assert!(check_gates(&result(false, true, true)).is_err());
-        assert!(check_gates(&result(true, false, true)).is_err());
-        assert!(check_gates(&result(true, true, false)).is_err());
+    fn gates_require_all_four_identities() {
+        assert!(check_gates(&result(true, true, true, true)).is_ok());
+        assert!(check_gates(&result(false, true, true, true)).is_err());
+        assert!(check_gates(&result(true, false, true, true)).is_err());
+        assert!(check_gates(&result(true, true, false, true)).is_err());
+        assert!(check_gates(&result(true, true, true, false)).is_err());
     }
 
     #[test]
     fn report_names_the_identity_gates() {
-        let v = report_json(&result(true, true, true));
+        let v = report_json(&result(true, true, true, true));
         let m = v.get("metrics").expect("metrics");
         assert!(m.get("identical_clean").is_some());
         assert!(m.get("identical_fault").is_some());
         assert!(m.get("identical_sharded").is_some());
+        assert!(m.get("identical_resume").is_some());
+        assert!(m.get("resume_fit_secs").is_some());
         assert!(m.get("shard_range_blocks").is_some());
         assert!(m.get("dist_overhead_factor").is_some());
     }

@@ -227,6 +227,11 @@ pub struct ServeSettings {
     pub max_connections: usize,
     /// Micro-batch flush window in microseconds.
     pub batch_window_us: u64,
+    /// Per-connection idle deadline in milliseconds (ADR-010);
+    /// `0` disables the reaper. Connections with no progress and no
+    /// in-flight work for this long are closed, so a slow-loris peer
+    /// cannot pin the connection budget.
+    pub idle_timeout_ms: u64,
 }
 
 impl Default for ServeSettings {
@@ -239,6 +244,7 @@ impl Default for ServeSettings {
             max_batch: 64,
             max_connections: 256,
             batch_window_us: 200,
+            idle_timeout_ms: 0,
         }
     }
 }
@@ -496,6 +502,11 @@ impl ServeSettings {
                 "batch_window_us",
                 d.batch_window_us,
             )?,
+            idle_timeout_ms: get_u64(
+                v,
+                "idle_timeout_ms",
+                d.idle_timeout_ms,
+            )?,
         })
     }
 
@@ -523,6 +534,10 @@ impl ServeSettings {
             (
                 "batch_window_us",
                 Value::Num(self.batch_window_us as f64),
+            ),
+            (
+                "idle_timeout_ms",
+                Value::Num(self.idle_timeout_ms as f64),
             ),
         ])
     }
@@ -723,7 +738,8 @@ mod tests {
         let text = r#"{"serve": {"port": 7777, "workers": 3,
                        "max_model_bytes": 4194304, "max_batch": 16,
                        "http_port": 8080, "max_connections": 32,
-                       "batch_window_us": 500}}"#;
+                       "batch_window_us": 500,
+                       "idle_timeout_ms": 30000}}"#;
         let cfg =
             ExperimentConfig::from_json(&json::parse(text).unwrap())
                 .unwrap();
@@ -734,6 +750,7 @@ mod tests {
         assert_eq!(cfg.serve.http_port, Some(8080));
         assert_eq!(cfg.serve.max_connections, 32);
         assert_eq!(cfg.serve.batch_window_us, 500);
+        assert_eq!(cfg.serve.idle_timeout_ms, 30000);
         let back = ExperimentConfig::from_json(
             &json::parse(&cfg.to_json().to_string()).unwrap(),
         )
@@ -741,6 +758,7 @@ mod tests {
         assert_eq!(back.serve.port, 7777);
         assert_eq!(back.serve.http_port, Some(8080));
         assert_eq!(back.serve.max_connections, 32);
+        assert_eq!(back.serve.idle_timeout_ms, 30000);
         // defaults apply when the section is absent
         let none = ExperimentConfig::from_json(
             &json::parse("{}").unwrap(),
@@ -750,6 +768,7 @@ mod tests {
         assert_eq!(none.serve.http_port, None);
         assert_eq!(none.serve.max_connections, 256);
         assert_eq!(none.serve.batch_window_us, 200);
+        assert_eq!(none.serve.idle_timeout_ms, 0);
         // explicit null keeps the gateway off, and round-trips
         let off = ExperimentConfig::from_json(
             &json::parse(r#"{"serve": {"http_port": null}}"#)

@@ -67,6 +67,10 @@ use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
+use super::journal::{
+    decode_journal, staged_fingerprint, JournalHeader, JournalRecord,
+    JournalWriter,
+};
 use super::pipeline::make_sharded;
 use super::{EventLog, Stopwatch};
 use crate::cluster::{fit_shard, stitch_shards, FastCluster, Labels};
@@ -79,8 +83,9 @@ use crate::estimators::{FoldModel, LogregFit};
 use crate::graph::{Edge, LatticeGraph};
 use crate::json::Value;
 use crate::model::{
-    build_header, fit_one_fold, fit_reduction, reduction_from_labels,
-    FitOptions, FittedModel, ReductionOp, FOLD_SEED,
+    build_header, crc32, fit_fingerprint, fit_one_fold, fit_reduction,
+    reduction_from_labels, FitOptions, FittedModel, ReductionOp,
+    FOLD_SEED,
 };
 use crate::reduce::{ReduceAccumulator, Reducer};
 use crate::serve::protocol::{
@@ -198,6 +203,17 @@ pub struct DistOptions {
     pub inject: Option<FaultSpec>,
     /// Where to stage the shared `.fcd` (`None` = temp dir).
     pub work_dir: Option<PathBuf>,
+    /// Append every completed job result to a `.fcj` write-ahead
+    /// journal at this path (ADR-010). Advisory state: journaling
+    /// failures degrade to an event, never fail the fit, and the
+    /// journal never contributes bytes to the `.fcm`.
+    pub journal: Option<PathBuf>,
+    /// Resume from a `.fcj` journal written by an interrupted run:
+    /// validate its header against the staged cohort + config,
+    /// replay the completed records, requeue only the missing jobs,
+    /// and keep appending to the same file. The resulting `.fcm` is
+    /// byte-identical to an uninterrupted run.
+    pub resume: Option<PathBuf>,
     /// Echo events to stderr as they happen.
     pub verbose: bool,
 }
@@ -217,6 +233,8 @@ impl Default for DistOptions {
             worker_bin: None,
             inject: None,
             work_dir: None,
+            journal: None,
+            resume: None,
             verbose: false,
         }
     }
@@ -257,6 +275,11 @@ pub struct DistReport {
     pub retries: usize,
     /// Jobs that ran through the in-process fallback.
     pub local_jobs: usize,
+    /// Jobs answered straight from the resume journal (ADR-010).
+    pub replayed_jobs: usize,
+    /// Jobs a resumed run had to execute again (missing from the
+    /// journal, or their record failed validation).
+    pub requeued_jobs: usize,
     /// DATA range blocks the coordinator served to workers — the
     /// proof hook that workers ran path-free in wire mode.
     pub range_blocks: usize,
@@ -305,6 +328,8 @@ impl DistReport {
             ("fold_jobs", Value::Num(self.fold_jobs as f64)),
             ("retries", Value::Num(self.retries as f64)),
             ("local_jobs", Value::Num(self.local_jobs as f64)),
+            ("replayed_jobs", Value::Num(self.replayed_jobs as f64)),
+            ("requeued_jobs", Value::Num(self.requeued_jobs as f64)),
             ("range_blocks", Value::Num(self.range_blocks as f64)),
             ("cluster_secs", Value::Num(self.cluster_secs)),
             ("reduce_secs", Value::Num(self.reduce_secs)),
@@ -909,6 +934,10 @@ fn execute_job(
 pub struct WorkerOptions {
     /// Liveness beacon interval while a job is running.
     pub heartbeat_ms: u64,
+    /// Keep retrying the initial connect for this long (`0` = one
+    /// attempt). Lets externally-launched workers start before the
+    /// coordinator binds — e.g. behind a chaos proxy in the soak.
+    pub connect_retry_ms: u64,
     /// Injection: `process::exit(KILL_EXIT)` instead of sending
     /// partial number N+1 (1-based, connection-global ordinal).
     pub fail_after_partials: Option<usize>,
@@ -925,6 +954,7 @@ impl Default for WorkerOptions {
     fn default() -> Self {
         WorkerOptions {
             heartbeat_ms: 500,
+            connect_retry_ms: 0,
             fail_after_partials: None,
             drop_partial: None,
             corrupt_partial: None,
@@ -936,7 +966,20 @@ impl Default for WorkerOptions {
 /// Run a worker process: connect to the coordinator, greet, then
 /// serve ASSIGN frames until the coordinator hangs up (clean EOF).
 pub fn run_worker(addr: &str, wopts: &WorkerOptions) -> Result<()> {
-    let stream = TcpStream::connect(addr)?;
+    let stream = {
+        let deadline = Instant::now()
+            + Duration::from_millis(wopts.connect_retry_ms);
+        loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) if Instant::now() < deadline => {
+                    let _ = e; // refused/unreachable: retry til deadline
+                    thread::sleep(Duration::from_millis(50));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    };
     stream.set_nodelay(true)?;
     let writer = Arc::new(Mutex::new(stream.try_clone()?));
     let mut reader = BufReader::new(stream);
@@ -1153,13 +1196,15 @@ fn is_timeout(e: &Error) -> bool {
 
 /// Run one job on one worker connection: assign, collect partials
 /// (tolerating heartbeats, answering FETCH range requests from the
-/// hub), verify the DONE count, decode.
+/// hub), verify the DONE count, decode. The raw partial payloads ride
+/// along with the decoded output so the caller can journal exactly
+/// the bytes that were validated (ADR-010).
 fn run_job(
     conn: &mut WorkerConn,
     job: &Job,
     heartbeat: Duration,
     hub: &DataHub,
-) -> std::result::Result<JobOut, Fail> {
+) -> std::result::Result<(JobOut, Vec<(u32, Vec<u8>)>), Fail> {
     let assign = DistFrame::Assign {
         job: job.id,
         payload: (*job.payload).clone(),
@@ -1221,7 +1266,8 @@ fn run_job(
                         partials.len()
                     )));
                 }
-                return decode_out(&job.expect, partials)
+                return decode_out(&job.expect, &mut partials)
+                    .map(|out| (out, partials))
                     .map_err(|e| Fail::Soft(e.to_string()));
             }
             Ok(Some(DistFrame::Retry { reason, .. })) => {
@@ -1246,13 +1292,13 @@ fn run_job(
 
 fn decode_out(
     expect: &Expect,
-    mut partials: Vec<(u32, Vec<u8>)>,
+    partials: &mut Vec<(u32, Vec<u8>)>,
 ) -> Result<JobOut> {
     partials.sort_by_key(|&(seq, _)| seq);
     match expect {
         Expect::Blocks { k, col0, count } => {
             let mut blocks = Vec::with_capacity(partials.len());
-            for (_, p) in &partials {
+            for (_, p) in partials.iter() {
                 let mut c = Cursor::new(p);
                 let b0 = c.u32()? as usize;
                 let x = c.matrix()?;
@@ -1337,6 +1383,52 @@ struct DispatchState {
     retries: usize,
 }
 
+/// The journal side of a run (ADR-010): the shared append sink plus
+/// the records loaded from a `--resume` journal, keyed by job id.
+/// Journaling is strictly advisory — an append failure disables the
+/// sink with an event rather than failing the fit, and nothing here
+/// ever touches the `.fcm` bytes.
+struct JournalCtx {
+    sink: Mutex<Option<JournalWriter>>,
+    replay: Mutex<HashMap<u64, JournalRecord>>,
+    resuming: bool,
+}
+
+impl JournalCtx {
+    fn disabled() -> JournalCtx {
+        JournalCtx {
+            sink: Mutex::new(None),
+            replay: Mutex::new(HashMap::new()),
+            resuming: false,
+        }
+    }
+
+    /// Durably record one completed job (no-op when journaling is
+    /// off; self-disabling on I/O failure).
+    fn record(
+        &self,
+        log: &EventLog,
+        job: &Job,
+        partials: &[(u32, Vec<u8>)],
+    ) {
+        let mut guard = self.sink.lock().unwrap();
+        let Some(w) = guard.as_mut() else { return };
+        let rec = JournalRecord {
+            job_id: job.id,
+            payload_crc: crc32(job.payload.as_slice()),
+            partials: partials.to_vec(),
+        };
+        if let Err(e) = w.append(&rec) {
+            log.emit(format!(
+                "journal append failed for job {} ({e}); \
+                 journaling disabled for the rest of the run",
+                job.id
+            ));
+            *guard = None;
+        }
+    }
+}
+
 /// Drive a batch of jobs over the live connections. Returns the final
 /// dispatch state plus the surviving connections; lost workers are
 /// recorded straight into `report.topology`.
@@ -1347,6 +1439,7 @@ fn dispatch(
     hub: &DataHub,
     log: &EventLog,
     report: &mut DistReport,
+    jr: &JournalCtx,
 ) -> (DispatchState, Vec<WorkerConn>) {
     let state = Mutex::new(DispatchState {
         pending: jobs.into(),
@@ -1370,6 +1463,7 @@ fn dispatch(
                             dist.max_retries,
                             hub,
                             log,
+                            jr,
                         )
                     })
                 })
@@ -1390,6 +1484,7 @@ fn dispatch(
     (state, survivors)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     mut conn: WorkerConn,
     state: &Mutex<DispatchState>,
@@ -1397,6 +1492,7 @@ fn worker_loop(
     max_retries: usize,
     hub: &DataHub,
     log: &EventLog,
+    jr: &JournalCtx,
 ) -> (Option<WorkerConn>, WorkerStat) {
     loop {
         let job = {
@@ -1426,8 +1522,11 @@ fn worker_loop(
             job.desc
         ));
         match run_job(&mut conn, &job, heartbeat, hub) {
-            Ok(out) => {
+            Ok((out, partials)) => {
                 conn.jobs_done += 1;
+                // journal before marking done: a result the
+                // coordinator acts on is on disk first (WAL order)
+                jr.record(log, &job, &partials);
                 log.emit(format!(
                     "job {} done on worker {}",
                     job.id, conn.id
@@ -1493,7 +1592,10 @@ fn worker_loop(
 /// Execute a job in-process through the same codec a worker uses;
 /// wire-mode jobs read their ranges through the same hub that would
 /// have served a worker.
-fn run_local(job: &Job, hub: &DataHub) -> Result<JobOut> {
+fn run_local(
+    job: &Job,
+    hub: &DataHub,
+) -> Result<(JobOut, Vec<(u32, Vec<u8>)>)> {
     let decoded = decode_job(&job.payload)?;
     let mut partials: Vec<(u32, Vec<u8>)> = Vec::new();
     let mut seq: u32 = 0;
@@ -1503,10 +1605,12 @@ fn run_local(job: &Job, hub: &DataHub) -> Result<JobOut> {
         seq += 1;
         Ok(())
     })?;
-    decode_out(&job.expect, partials)
+    let out = decode_out(&job.expect, &mut partials)?;
+    Ok((out, partials))
 }
 
-/// Run a phase's jobs to completion: dispatch over the live workers,
+/// Run a phase's jobs to completion: replay whatever the resume
+/// journal covers (ADR-010), dispatch the rest over the live workers,
 /// then execute whatever is left (abandoned, or everything when no
 /// workers are alive) through the local fallback. Every job ends in
 /// `done` or this returns an error — partial results never merge.
@@ -1517,17 +1621,59 @@ fn run_phase(
     hub: &DataHub,
     log: &EventLog,
     report: &mut DistReport,
+    jr: &JournalCtx,
 ) -> Result<HashMap<u64, JobOut>> {
+    // ---- replay: a journaled record stands in for execution iff it
+    // names this exact job (id + payload crc) and its partials decode
+    // through the same validation a live worker's reply would face.
+    // Anything else falls through to the queue — replay can only skip
+    // work, never change what a job produces.
+    let mut replayed: HashMap<u64, JobOut> = HashMap::new();
+    let mut todo = Vec::with_capacity(jobs.len());
+    {
+        let mut replay = jr.replay.lock().unwrap();
+        for job in jobs {
+            let Some(rec) = replay.remove(&job.id) else {
+                if jr.resuming {
+                    report.requeued_jobs += 1;
+                }
+                todo.push(job);
+                continue;
+            };
+            let mut partials = rec.partials;
+            if rec.payload_crc == crc32(job.payload.as_slice()) {
+                if let Ok(out) = decode_out(&job.expect, &mut partials)
+                {
+                    log.emit(format!(
+                        "replayed job {} from journal ({})",
+                        job.id, job.desc
+                    ));
+                    report.replayed_jobs += 1;
+                    replayed.insert(job.id, out);
+                    continue;
+                }
+            }
+            log.emit(format!(
+                "journal record for job {} failed validation; \
+                 requeueing",
+                job.id
+            ));
+            report.requeued_jobs += 1;
+            todo.push(job);
+        }
+    }
     let (mut done, leftovers) = if conns.is_empty() {
-        (HashMap::new(), jobs)
+        (replayed, todo)
     } else {
         let taken = std::mem::take(conns);
         let (state, survivors) =
-            dispatch(taken, jobs, dist, hub, log, report);
+            dispatch(taken, todo, dist, hub, log, report, jr);
         *conns = survivors;
         let mut left: Vec<Job> = state.abandoned;
         left.extend(state.pending);
-        (state.done, left)
+        let mut done = replayed;
+        done.extend(state.done);
+        (done, left)
     };
     for job in &leftovers {
         log.emit(format!(
@@ -1535,7 +1681,9 @@ fn run_phase(
             job.id, job.desc
         ));
         report.local_jobs += 1;
-        done.insert(job.id, run_local(job, hub)?);
+        let (out, partials) = run_local(job, hub)?;
+        jr.record(log, job, &partials);
+        done.insert(job.id, out);
     }
     Ok(done)
 }
@@ -1700,6 +1848,7 @@ fn distribute_clustering(
     conns: &mut Vec<WorkerConn>,
     log: &EventLog,
     report: &mut DistReport,
+    jr: &JournalCtx,
 ) -> Result<(ReductionOp, Box<dyn Reducer + Send + Sync>)> {
     if !matches!(reduce_cfg.method, Method::FastSharded) {
         log.emit(format!(
@@ -1763,7 +1912,7 @@ fn distribute_clustering(
         })
         .collect();
     report.cluster_jobs = jobs.len();
-    let done = run_phase(conns, jobs, dist, hub, log, report)?;
+    let done = run_phase(conns, jobs, dist, hub, log, report, jr)?;
     let mut shard_labels = Vec::with_capacity(plan.n_shards);
     for s in 0..plan.n_shards {
         match done.get(&(s as u64)) {
@@ -1842,6 +1991,125 @@ pub fn run_distributed_fit(
     };
     report.workers_connected = conns.len();
 
+    // ---- journal: bind, resume, pin the lane count (ADR-010).
+    // `lanes` decides the reduce-phase partition and hence every job
+    // id and range; a resumed run must reuse the original value, not
+    // derive one from however many workers showed up *this* time.
+    let own_lanes =
+        conns.len().max(1) * dist.jobs_per_worker.max(1);
+    let mut lanes = own_lanes;
+    let mut jr = JournalCtx::disabled();
+    let journal_path =
+        dist.journal.clone().or_else(|| dist.resume.clone());
+    if journal_path.is_some() {
+        let (data_crc, data_len, meta_crc) =
+            staged_fingerprint(&stem)?;
+        let config_crc = {
+            let mut b = Vec::with_capacity(17);
+            b.extend_from_slice(
+                &fit_fingerprint(reduce_cfg, est_cfg, data_cfg, opts)
+                    .to_le_bytes(),
+            );
+            b.extend_from_slice(
+                &(dist.chunk_samples as u64).to_le_bytes(),
+            );
+            b.push(dist.distribute_clustering as u8);
+            crc32(&b)
+        };
+        let mut resumed = false;
+        if let Some(rpath) = &dist.resume {
+            match std::fs::read(rpath) {
+                Err(e) if e.kind() == ErrorKind::NotFound => {
+                    log.emit(format!(
+                        "resume journal {} not found; starting fresh",
+                        rpath.display()
+                    ));
+                }
+                Err(e) => return Err(e.into()),
+                Ok(bytes) => {
+                    let (h, recs, valid, torn) =
+                        decode_journal(&bytes)?;
+                    if (h.data_crc, h.data_len, h.meta_crc)
+                        != (data_crc, data_len, meta_crc)
+                        || h.n != ds.n() as u64
+                    {
+                        return Err(invalid(format!(
+                            "{}: journal was written against a \
+                             different staged cohort — refusing to \
+                             replay foreign partials",
+                            rpath.display()
+                        )));
+                    }
+                    if h.config_crc != config_crc {
+                        return Err(invalid(format!(
+                            "{}: journal was written under a \
+                             different fit configuration",
+                            rpath.display()
+                        )));
+                    }
+                    if torn {
+                        log.emit(
+                            "journal tail is torn (crash \
+                             mid-append); truncating to the valid \
+                             prefix"
+                                .into(),
+                        );
+                    }
+                    lanes = (h.lanes as usize).max(1);
+                    log.emit(format!(
+                        "resuming from {}: {} completed job \
+                         records (lanes={lanes})",
+                        rpath.display(),
+                        recs.len()
+                    ));
+                    {
+                        let mut replay = jr.replay.lock().unwrap();
+                        for rec in recs {
+                            // duplicate ids: keep the latest record
+                            // (a chained resume re-appends nothing,
+                            // but a crashed *resume* may have)
+                            replay.insert(rec.job_id, rec);
+                        }
+                    }
+                    jr.resuming = true;
+                    *jr.sink.lock().unwrap() = Some(
+                        JournalWriter::reopen(rpath, valid as u64)?,
+                    );
+                    resumed = true;
+                }
+            }
+        }
+        if !resumed {
+            let path = journal_path.as_ref().unwrap();
+            let header = JournalHeader {
+                data_crc,
+                data_len,
+                meta_crc,
+                config_crc,
+                lanes: lanes as u32,
+                n: ds.n() as u64,
+            };
+            match JournalWriter::create(path, &header) {
+                Ok(w) => {
+                    log.emit(format!(
+                        "journaling completed jobs to {}",
+                        path.display()
+                    ));
+                    *jr.sink.lock().unwrap() = Some(w);
+                }
+                Err(e) => {
+                    // advisory: a fit without a journal is still a
+                    // correct fit, just not a resumable one
+                    log.emit(format!(
+                        "cannot create journal {} ({e}); \
+                         continuing without one",
+                        path.display()
+                    ));
+                }
+            }
+        }
+    }
+
     // ---- phase 0: stage-1 parcellation — shipped to workers as
     // shard jobs (ADR-009) when asked to, on the coordinator
     // otherwise; same bits either way
@@ -1855,6 +2123,7 @@ pub fn run_distributed_fit(
             &mut conns,
             &log,
             &mut report,
+            &jr,
         )?
     } else {
         fit_reduction(ds, reduce_cfg)?
@@ -1871,10 +2140,9 @@ pub fn run_distributed_fit(
         stem_str.clone()
     };
 
-    // ---- phase A: chunked reduction of the sample range
+    // ---- phase A: chunked reduction of the sample range (`lanes`
+    // was pinned above — from the resume journal when there is one)
     let sw = Stopwatch::start();
-    let lanes =
-        conns.len().max(1) * dist.jobs_per_worker.max(1);
     let ranges = partition_ranges(ds.n(), lanes);
     let reduce_job0 = report.cluster_jobs as u64;
     let jobs: Vec<Job> = ranges
@@ -1900,8 +2168,9 @@ pub fn run_distributed_fit(
     report.reduce_jobs = jobs.len();
     let reduce_job_ids: Vec<u64> =
         jobs.iter().map(|j| j.id).collect();
-    let done =
-        run_phase(&mut conns, jobs, dist, &hub, &log, &mut report)?;
+    let done = run_phase(
+        &mut conns, jobs, dist, &hub, &log, &mut report, &jr,
+    )?;
     let mut acc = ReduceAccumulator::new(k, ds.n());
     for id in reduce_job_ids {
         match done.get(&id) {
@@ -1963,8 +2232,9 @@ pub fn run_distributed_fit(
         })
         .collect();
     report.fold_jobs = jobs.len();
-    let done =
-        run_phase(&mut conns, jobs, dist, &hub, &log, &mut report)?;
+    let done = run_phase(
+        &mut conns, jobs, dist, &hub, &log, &mut report, &jr,
+    )?;
     let mut fold_models = Vec::with_capacity(folds.len());
     for (fi, fold) in folds.iter().enumerate() {
         match done.get(&(fold_job0 + fi as u64)) {
@@ -2021,6 +2291,13 @@ pub fn run_distributed_fit(
     );
     model.validate()?;
     report.total_secs = total.secs();
+    if jr.resuming {
+        log.emit(format!(
+            "resume summary: {} jobs replayed from the journal, \
+             {} requeued and re-executed",
+            report.replayed_jobs, report.requeued_jobs
+        ));
+    }
     log.emit(format!(
         "distributed fit complete in {:.3}s \
          ({} retries, {} local fallbacks)",
@@ -2211,23 +2488,23 @@ mod tests {
         // exact tiling (out of order) is fine
         let ok = decode_out(
             &expect,
-            vec![(1, block(7, 3)), (0, block(4, 3))],
+            &mut vec![(1, block(7, 3)), (0, block(4, 3))],
         );
         assert!(ok.is_ok());
         // a gap is not
         let gap = decode_out(
             &expect,
-            vec![(0, block(4, 2)), (1, block(7, 3))],
+            &mut vec![(0, block(4, 2)), (1, block(7, 3))],
         );
         assert!(gap.is_err());
         // short coverage is not
         let short =
-            decode_out(&expect, vec![(0, block(4, 3))]);
+            decode_out(&expect, &mut vec![(0, block(4, 3))]);
         assert!(short.is_err());
         // wrong row count is not
         let bad = decode_out(
             &expect,
-            vec![(
+            &mut vec![(
                 0,
                 encode_block_partial(
                     4,

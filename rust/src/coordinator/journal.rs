@@ -1,0 +1,448 @@
+//! The durable job journal of a distributed fit (ADR-010).
+//!
+//! The coordinator appends one CRC-stamped, length-prefixed record
+//! per *completed* job — the exact partial-result bytes that flowed
+//! back over the wire (or out of the local fallback) — to a `.fcj`
+//! file next to the `.dist.json` sidecar. After a coordinator crash,
+//! `repro fit-distributed --resume <journal>` validates the header
+//! against the re-staged cohort and the fit configuration, replays
+//! every salvageable record through the same
+//! [`decode_out`](super::distributed) path a live worker's reply
+//! takes, and requeues only the jobs the journal does not cover.
+//!
+//! # Why replay preserves bit-identity
+//!
+//! The journal stores partial-result *payloads*, not merged state.
+//! Replay feeds them to the same decoders and the same merge algebra
+//! ([`crate::reduce::ReduceAccumulator`], the ADR-009 stitch) that an
+//! uninterrupted run uses, and both are order-invariant: reductions
+//! are column-independent with exactly-once coverage enforced by
+//! `finish()`, fold fits are pure functions of their job bytes, and
+//! the stitch is invariant to shard arrival order. A resumed fit
+//! therefore produces a `.fcm` byte-identical to an uninterrupted
+//! one — the journal is *advisory* state and never contributes bytes
+//! to the artifact.
+//!
+//! # Layout
+//!
+//! ```text
+//! magic  "FCJOURN1"                                       8 bytes
+//! header u32 len | body | u32 crc32(body)
+//!   body: u32 data_crc   — crc32 of the staged <stem>.f32raw
+//!         u64 data_len   — its byte length
+//!         u32 meta_crc   — crc32 of the staged <stem>.json
+//!         u32 config_crc — fit_fingerprint + dist knobs digest
+//!         u32 lanes      — reduce-phase lane count (pinned so a
+//!                          resumed run re-derives identical job ids
+//!                          whatever the current fleet size)
+//!         u64 n          — cohort sample count
+//! record u32 len | body | u32 crc32(body)        (repeated, ≥ 0)
+//!   body: u64 job_id
+//!         u32 payload_crc — crc32 of the encoded job payload, so a
+//!                           record can never replay into a job whose
+//!                           bytes differ from the run that wrote it
+//!         u32 n_partials
+//!         n × (u32 seq | u32 len | bytes)
+//! ```
+//!
+//! A crash can tear the final record (partial append). Salvage stops
+//! at the first record whose length prefix, CRC or internal structure
+//! is invalid and truncates the file back to the valid prefix before
+//! appending resumes — a torn tail is skipped cleanly, never parsed.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::Path;
+
+use crate::error::{invalid, Result};
+use crate::model::crc32;
+
+/// Magic prefix of a `.fcj` journal file.
+pub const JOURNAL_MAGIC: &[u8; 8] = b"FCJOURN1";
+
+/// Upper bound on a single record body (matches the wire protocol's
+/// frame bound): an oversized length claim is rejected before any
+/// allocation happens.
+pub const MAX_RECORD_BYTES: usize = 1 << 28;
+
+/// What a journal binds itself to: the staged cohort bytes, the fit
+/// configuration, and the job-id layout of the run that wrote it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct JournalHeader {
+    /// crc32 of the staged `<stem>.f32raw` payload.
+    pub data_crc: u32,
+    /// Byte length of the staged `<stem>.f32raw`.
+    pub data_len: u64,
+    /// crc32 of the staged `<stem>.json` header text.
+    pub meta_crc: u32,
+    /// Digest of the fit + dist configuration
+    /// ([`crate::model::fit_fingerprint`] plus the scheduling knobs
+    /// that shape job payloads).
+    pub config_crc: u32,
+    /// Reduce-phase lane count of the original run. A resumed run
+    /// partitions with *this* value, not its own fleet size — the
+    /// hinge that keeps job ids and ranges identical across runs.
+    pub lanes: u32,
+    /// Cohort sample count.
+    pub n: u64,
+}
+
+/// One journaled job completion: the job's identity plus the exact
+/// partial payloads its executor produced.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct JournalRecord {
+    /// The job id (stable across runs by construction).
+    pub job_id: u64,
+    /// crc32 of the encoded job payload this result answers.
+    pub payload_crc: u32,
+    /// `(seq, payload)` partials, as received.
+    pub partials: Vec<(u32, Vec<u8>)>,
+}
+
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounds-checked little-endian reader over a byte slice (the journal
+/// is parsed from untrusted disk bytes; every length is validated
+/// against what the buffer actually holds before any allocation).
+struct Take<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Take<'a> {
+    fn new(buf: &'a [u8]) -> Take<'a> {
+        Take { buf, at: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .at
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| invalid("journal truncated"))?;
+        let s = &self.buf[self.at..end];
+        self.at = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.bytes(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn done(&self) -> bool {
+        self.at == self.buf.len()
+    }
+}
+
+fn encode_header_body(h: &JournalHeader) -> Vec<u8> {
+    let mut b = Vec::with_capacity(28);
+    put_u32(&mut b, h.data_crc);
+    put_u64(&mut b, h.data_len);
+    put_u32(&mut b, h.meta_crc);
+    put_u32(&mut b, h.config_crc);
+    put_u32(&mut b, h.lanes);
+    put_u64(&mut b, h.n);
+    b
+}
+
+fn decode_header_body(body: &[u8]) -> Result<JournalHeader> {
+    let mut t = Take::new(body);
+    let h = JournalHeader {
+        data_crc: t.u32()?,
+        data_len: t.u64()?,
+        meta_crc: t.u32()?,
+        config_crc: t.u32()?,
+        lanes: t.u32()?,
+        n: t.u64()?,
+    };
+    if !t.done() {
+        return Err(invalid("journal header has trailing bytes"));
+    }
+    Ok(h)
+}
+
+fn encode_record_body(r: &JournalRecord) -> Vec<u8> {
+    let mut b = Vec::new();
+    put_u64(&mut b, r.job_id);
+    put_u32(&mut b, r.payload_crc);
+    put_u32(&mut b, r.partials.len() as u32);
+    for (seq, p) in &r.partials {
+        put_u32(&mut b, *seq);
+        put_u32(&mut b, p.len() as u32);
+        b.extend_from_slice(p);
+    }
+    b
+}
+
+fn decode_record_body(body: &[u8]) -> Result<JournalRecord> {
+    let mut t = Take::new(body);
+    let job_id = t.u64()?;
+    let payload_crc = t.u32()?;
+    let count = t.u32()? as usize;
+    let mut partials = Vec::new();
+    for _ in 0..count {
+        let seq = t.u32()?;
+        let len = t.u32()? as usize;
+        // `bytes` bounds the alloc by what the body actually holds
+        partials.push((seq, t.bytes(len)?.to_vec()));
+    }
+    if !t.done() {
+        return Err(invalid("journal record has trailing bytes"));
+    }
+    Ok(JournalRecord { job_id, payload_crc, partials })
+}
+
+/// One `len | body | crc` envelope. Returns the decoded body slice
+/// and how many bytes the envelope consumed.
+fn take_envelope<'a>(
+    buf: &'a [u8],
+    what: &str,
+) -> Result<(&'a [u8], usize)> {
+    let mut t = Take::new(buf);
+    let len = t.u32()? as usize;
+    if len > MAX_RECORD_BYTES {
+        return Err(invalid(format!(
+            "journal {what} claims {len} bytes (max {MAX_RECORD_BYTES})"
+        )));
+    }
+    let body = t.bytes(len)?;
+    let stamp = t.u32()?;
+    if crc32(body) != stamp {
+        return Err(invalid(format!("journal {what} checksum mismatch")));
+    }
+    Ok((body, 8 + len))
+}
+
+/// Decode a journal image: the header, every intact record, and the
+/// byte offset of the valid prefix. Trailing bytes past the last
+/// intact record — a record torn by a crash mid-append — are *not* an
+/// error: they are reported via `torn` and excluded from the prefix.
+/// A journal whose magic or header is damaged, by contrast, is
+/// unusable and errors out. Never panics on any input (fuzzed by
+/// `protocol_fuzz`).
+pub fn decode_journal(
+    bytes: &[u8],
+) -> Result<(JournalHeader, Vec<JournalRecord>, usize, bool)> {
+    if bytes.len() < JOURNAL_MAGIC.len()
+        || bytes[..JOURNAL_MAGIC.len()] != JOURNAL_MAGIC[..]
+    {
+        return Err(invalid("not a .fcj journal (bad magic)"));
+    }
+    let mut at = JOURNAL_MAGIC.len();
+    let (hbody, used) = take_envelope(&bytes[at..], "header")?;
+    let header = decode_header_body(hbody)?;
+    at += used;
+    let mut records = Vec::new();
+    let mut torn = false;
+    while at < bytes.len() {
+        match take_envelope(&bytes[at..], "record")
+            .and_then(|(body, used)| {
+                decode_record_body(body).map(|r| (r, used))
+            }) {
+            Ok((rec, used)) => {
+                records.push(rec);
+                at += used;
+            }
+            Err(_) => {
+                // torn or corrupt tail: salvage stops here; the
+                // uncovered jobs are simply requeued on resume
+                torn = true;
+                break;
+            }
+        }
+    }
+    Ok((header, records, at, torn))
+}
+
+/// Strict single-record decode (fuzz hook): `len | body | crc` at the
+/// start of `bytes`, errors on any damage instead of salvaging.
+pub fn decode_record(bytes: &[u8]) -> Result<(JournalRecord, usize)> {
+    let (body, used) = take_envelope(bytes, "record")?;
+    Ok((decode_record_body(body)?, used))
+}
+
+/// Append-only writer. Every record is flushed and fsync'd before
+/// `append` returns — a record the coordinator acted on is on disk,
+/// which is what makes the journal a write-ahead log rather than a
+/// best-effort trace.
+pub struct JournalWriter {
+    file: File,
+}
+
+impl JournalWriter {
+    /// Create (truncate) a journal at `path` and write its header.
+    pub fn create(path: &Path, header: &JournalHeader) -> Result<JournalWriter> {
+        let mut file = File::create(path)?;
+        let body = encode_header_body(header);
+        let mut buf = Vec::with_capacity(8 + 8 + body.len() + 4);
+        buf.extend_from_slice(JOURNAL_MAGIC);
+        put_u32(&mut buf, body.len() as u32);
+        buf.extend_from_slice(&body);
+        put_u32(&mut buf, crc32(&body));
+        file.write_all(&buf)?;
+        file.sync_data()?;
+        Ok(JournalWriter { file })
+    }
+
+    /// Reopen an existing journal for appending, truncated back to
+    /// `valid_len` (the salvage boundary from [`decode_journal`]) so
+    /// a torn tail can never corrupt records appended after resume.
+    pub fn reopen(path: &Path, valid_len: u64) -> Result<JournalWriter> {
+        let file = OpenOptions::new().read(true).write(true).open(path)?;
+        file.set_len(valid_len)?;
+        let mut w = JournalWriter { file };
+        use std::io::Seek;
+        w.file.seek(std::io::SeekFrom::End(0))?;
+        Ok(w)
+    }
+
+    /// Durably append one completed-job record.
+    pub fn append(&mut self, rec: &JournalRecord) -> Result<()> {
+        let body = encode_record_body(rec);
+        if body.len() > MAX_RECORD_BYTES {
+            return Err(invalid("journal record exceeds the size bound"));
+        }
+        let mut buf = Vec::with_capacity(8 + body.len());
+        put_u32(&mut buf, body.len() as u32);
+        buf.extend_from_slice(&body);
+        put_u32(&mut buf, crc32(&body));
+        self.file.write_all(&buf)?;
+        self.file.sync_data()?;
+        Ok(())
+    }
+}
+
+/// Fingerprint the staged `.fcd` pair for the journal header: crc32 +
+/// length of the `.f32raw` payload and crc32 of the `.json` header
+/// text. Binding both files means a resume against a cohort that
+/// regenerated differently (changed config, changed generator) is
+/// refused instead of silently merging foreign partials.
+pub fn staged_fingerprint(stem: &Path) -> Result<(u32, u64, u32)> {
+    let raw = std::fs::read(stem.with_extension("f32raw"))?;
+    let meta = std::fs::read(stem.with_extension("json"))?;
+    Ok((crc32(&raw), raw.len() as u64, crc32(&meta)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn header() -> JournalHeader {
+        JournalHeader {
+            data_crc: 0xDEAD_BEEF,
+            data_len: 1234,
+            meta_crc: 0x0BAD_F00D,
+            config_crc: 42,
+            lanes: 6,
+            n: 24,
+        }
+    }
+
+    fn record(id: u64) -> JournalRecord {
+        JournalRecord {
+            job_id: id,
+            payload_crc: 7,
+            partials: vec![(0, vec![1, 2, 3]), (1, vec![4])],
+        }
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir()
+            .join(format!("fcj_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_and_salvage() {
+        let path = tmp("rt.fcj");
+        let mut w = JournalWriter::create(&path, &header()).unwrap();
+        w.append(&record(0)).unwrap();
+        w.append(&record(5)).unwrap();
+        drop(w);
+        let bytes = std::fs::read(&path).unwrap();
+        let (h, recs, valid, torn) = decode_journal(&bytes).unwrap();
+        assert_eq!(h, header());
+        assert_eq!(recs, vec![record(0), record(5)]);
+        assert_eq!(valid, bytes.len());
+        assert!(!torn);
+
+        // tear the final record at every byte boundary: the first
+        // record must always survive, the torn tail never parses
+        let one_rec_len = {
+            let mut w1 =
+                JournalWriter::create(&tmp("one.fcj"), &header()).unwrap();
+            w1.append(&record(0)).unwrap();
+            std::fs::metadata(tmp("one.fcj")).unwrap().len() as usize
+        };
+        for cut in one_rec_len..bytes.len() {
+            let (_, recs, valid, torn) =
+                decode_journal(&bytes[..cut]).unwrap();
+            assert_eq!(recs, vec![record(0)], "cut at {cut}");
+            assert_eq!(valid, one_rec_len);
+            // at exactly the record boundary nothing is torn; any
+            // byte past it is a torn tail
+            assert_eq!(torn, cut > one_rec_len);
+        }
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(tmp("one.fcj"));
+    }
+
+    #[test]
+    fn reopen_truncates_torn_tail() {
+        let path = tmp("torn.fcj");
+        let mut w = JournalWriter::create(&path, &header()).unwrap();
+        w.append(&record(1)).unwrap();
+        drop(w);
+        // simulate a crash mid-append
+        let mut bytes = std::fs::read(&path).unwrap();
+        let full = bytes.len() as u64;
+        bytes.extend_from_slice(&[9, 9, 9]);
+        std::fs::write(&path, &bytes).unwrap();
+        let (_, recs, valid, torn) =
+            decode_journal(&std::fs::read(&path).unwrap()).unwrap();
+        assert!(torn);
+        assert_eq!(valid as u64, full);
+        let mut w = JournalWriter::reopen(&path, valid as u64).unwrap();
+        w.append(&record(2)).unwrap();
+        drop(w);
+        let (_, recs2, _, torn2) =
+            decode_journal(&std::fs::read(&path).unwrap()).unwrap();
+        assert!(!torn2);
+        assert_eq!(recs2, vec![recs[0].clone(), record(2)]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_oversized_claims() {
+        assert!(decode_journal(b"").is_err());
+        assert!(decode_journal(b"FCJOURN0\0\0\0\0").is_err());
+        // header claiming 2^30 bytes in a tiny buffer: bounded reject
+        let mut b = JOURNAL_MAGIC.to_vec();
+        b.extend_from_slice(&(1u32 << 30).to_le_bytes());
+        b.extend_from_slice(&[0; 16]);
+        assert!(decode_journal(&b).is_err());
+        // strict record decode errors on a corrupt stamp
+        let mut body = Vec::new();
+        super::put_u64(&mut body, 3);
+        super::put_u32(&mut body, 0);
+        super::put_u32(&mut body, 0);
+        let mut rec = Vec::new();
+        super::put_u32(&mut rec, body.len() as u32);
+        rec.extend_from_slice(&body);
+        super::put_u32(&mut rec, crc32(&body) ^ 1);
+        assert!(decode_record(&rec).is_err());
+    }
+}

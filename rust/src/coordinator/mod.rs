@@ -30,6 +30,11 @@
 //!   itself is sharded across the workers, which fetch their voxel
 //!   slices through coordinator-side FETCH/DATA range serving
 //!   instead of touching the staged `.fcd` path.
+//! * [`journal`] — the crash-safety layer (ADR-010): the coordinator
+//!   journals every completed job result to a CRC-stamped `.fcj`
+//!   write-ahead log, and [`DistOptions::resume`] replays it so an
+//!   interrupted fit finishes with a `.fcm` byte-identical to an
+//!   uninterrupted one.
 //! * [`WorkerPool`] — fixed thread pool over a [`BoundedQueue`]; job
 //!   results are reassembled by submission id, so parallelism never
 //!   changes results (see `worker_parallelism_does_not_change_results`
@@ -55,6 +60,7 @@
 
 pub mod distributed;
 mod events;
+pub mod journal;
 pub mod pipeline;
 mod queue;
 pub mod stream;
@@ -63,6 +69,10 @@ mod worker;
 pub use distributed::{
     run_distributed_fit, run_worker, DistOptions, DistReport,
     FaultKind, FaultSpec, WorkerOptions, WorkerStat,
+};
+pub use journal::{
+    decode_journal, decode_record, staged_fingerprint, JournalHeader,
+    JournalRecord, JournalWriter,
 };
 pub use events::{EventLog, Metrics, Stopwatch};
 pub use pipeline::{

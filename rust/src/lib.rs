@@ -131,6 +131,20 @@
 //! (`repro bench-kernels` measures them against the pre-refactor
 //! scalar loops).
 //!
+//! ## Crash safety + chaos testing (ADR-010)
+//!
+//! The distributed fit is crash-safe: the coordinator journals every
+//! completed job result to a CRC-stamped `.fcj` write-ahead log
+//! ([`coordinator::journal`]), and `repro fit-distributed --resume`
+//! replays it — validating the staged-cohort fingerprint and fit
+//! configuration first — so an interrupted fit finishes with a `.fcm`
+//! **byte-identical** to an uninterrupted run (the merge algebra is
+//! order-free, so replayed and re-executed jobs compose exactly).
+//! Every wire in the crate is testable under seeded network faults
+//! via [`testkit::ChaosProxy`] — latency, arbitrary re-chunking,
+//! mid-stream RST, half-close, blackhole-then-recover — which the
+//! soak suites interpose on the worker and serve protocols.
+//!
 //! See `examples/` for full pipelines (decoding, ICA, percolation) and
 //! `rust/src/bench_harness/` for the figure-by-figure reproduction of
 //! the paper's evaluation (plus the sharded-engine scaling sweep and
@@ -159,6 +173,7 @@ pub mod rng;
 pub mod runtime;
 pub mod serve;
 pub mod stats;
+pub mod testkit;
 pub mod volume;
 
 /// Convenience re-exports covering the common workflow.

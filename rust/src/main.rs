@@ -27,9 +27,15 @@
 //!   [--events PATH] [--verbose]     #   go to <save>.dist.json
 //!   [--distribute-clustering]       #   shard stage 1 over workers
 //!                                   #   w/ range serving (ADR-009)
+//!   [--journal PATH]                #   journal completed jobs to a
+//!   [--resume PATH]                 #   .fcj WAL (default <save>.fcj)
+//!                                   #   and resume a killed run from
+//!                                   #   one, byte-identically(ADR-010)
 //! repro worker --connect ADDR       # one fit worker process (used
 //!   [--heartbeat-ms MS]             #   by fit-distributed; fault
-//!                                   #   flags exist for tests/CI)
+//!   [--connect-retry-ms MS]         #   flags exist for tests/CI;
+//!                                   #   retry lets a worker outlive
+//!                                   #   a restarting coordinator)
 //! repro predict --model model.fcm   # apply-only re-score of the
 //!                                   #   persisted folds (no refit)
 //! repro model-info --model m.fcm    # O(header) artifact probe via
@@ -41,7 +47,9 @@
 //!   [--max-batch B]                 #   cross-connection batching,
 //!   [--http-port P] [--max-conns N] #   load shedding, a resident-
 //!   [--batch-window-us U]           #   byte model registry and an
-//!   [--log PATH] [--config cfg.json]#   HTTP/JSON gateway (ADR-007)
+//!   [--log PATH] [--config cfg.json]#   HTTP/JSON gateway (ADR-007);
+//!   [--idle-timeout-ms MS]          #   idle deadline + SIGTERM
+//!                                   #   drain (ADR-010)
 //! repro bench-serve [--quick]       # serve front-end bench: batched
 //!   [--json PATH]                   #   vs per-request vs HTTP
 //!                                   #   (+ bit-identity gates)
@@ -543,6 +551,16 @@ fn fit_distributed_cmd(cli: &Cli) -> Result<()> {
     if let Some(spec) = cli.flags.get("inject") {
         dist.inject = Some(FaultSpec::parse(spec)?);
     }
+    // ADR-010: journal completed jobs next to the sidecar by default;
+    // `--resume` replays a prior journal and requeues only the gap.
+    // The journal is advisory — it never touches the `.fcm` bytes.
+    dist.journal = Some(PathBuf::from(
+        cli.flags
+            .get("journal")
+            .cloned()
+            .unwrap_or_else(|| format!("{save}.fcj")),
+    ));
+    dist.resume = cli.flags.get("resume").map(PathBuf::from);
     println!(
         "fit-distributed: p={} n={} method={} k={} workers={}{}{}",
         ds.p(),
@@ -583,6 +601,13 @@ fn fit_distributed_cmd(cli: &Cli) -> Result<()> {
         report.local_jobs,
         report.range_blocks
     );
+    if dist.resume.is_some() {
+        println!(
+            "resume: {} jobs replayed from the journal, {} \
+             re-executed",
+            report.replayed_jobs, report.requeued_jobs
+        );
+    }
     let path = PathBuf::from(save);
     save_model(&path, &model)?;
     println!(
@@ -614,6 +639,9 @@ fn worker_cmd(cli: &Cli) -> Result<()> {
     let mut w = WorkerOptions::default();
     if let Some(h) = cli.usize_flag_strict("heartbeat-ms")? {
         w.heartbeat_ms = h as u64;
+    }
+    if let Some(r) = cli.usize_flag_strict("connect-retry-ms")? {
+        w.connect_retry_ms = r as u64;
     }
     w.fail_after_partials = cli.usize_flag_strict("fail-after-partials")?;
     w.drop_partial = cli.usize_flag_strict("drop-partial")?;
@@ -769,6 +797,10 @@ fn serve_cmd(cli: &Cli) -> Result<()> {
         .usize_flag_strict("batch-window-us")?
         .map(|v| v as u64)
         .unwrap_or(cfg.serve.batch_window_us);
+    opts.idle_timeout_ms = cli
+        .usize_flag_strict("idle-timeout-ms")?
+        .map(|v| v as u64)
+        .unwrap_or(cfg.serve.idle_timeout_ms);
     // CLI overrides obey the same invariants as the config file
     if opts.max_model_bytes == 0 {
         return Err(invalid("--max-model-bytes must be >= 1"));
@@ -781,7 +813,13 @@ fn serve_cmd(cli: &Cli) -> Result<()> {
     }
     opts.log_path = cli.flags.get("log").map(PathBuf::from);
     let handle = Server::start(opts)?;
-    println!("serving on {} (Ctrl-C to stop)", handle.addr());
+    // SIGTERM drains in-flight work and exits 0 (ADR-010), so
+    // orchestrators can rotate the process without dropped requests.
+    handle.install_sigterm();
+    println!(
+        "serving on {} (Ctrl-C or SIGTERM to stop)",
+        handle.addr()
+    );
     if let Some(ha) = handle.http_addr() {
         println!("http gateway on {ha}");
     }
@@ -1077,7 +1115,8 @@ bench-check|bench-promote|runtime-check> \
 [--json PATH] [--current A --baseline B --factor F] \
 [--heartbeat-ms MS] [--bind ADDR] [--expect N] [--inject KIND:W] \
 [--events PATH] [--connect ADDR] [--distribute-clustering] \
-[--verbose]";
+[--journal PATH] [--resume PATH] [--connect-retry-ms MS] \
+[--idle-timeout-ms MS] [--verbose]";
 
 fn main() -> ExitCode {
     let Some(cli) = parse_args() else {

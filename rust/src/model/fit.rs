@@ -191,6 +191,44 @@ pub fn build_header(
     }
 }
 
+/// Digest of everything that determines a fit's job payloads and
+/// artifact bytes: the reduction, estimator and data configuration
+/// plus the estimator-backend knobs. The distributed journal
+/// (ADR-010) stores this in its header so `--resume` refuses to
+/// replay records into a run configured differently from the one
+/// that wrote them. Canonical little-endian field encoding — any
+/// config field that can change the fit must be folded in here.
+pub fn fit_fingerprint(
+    reduce_cfg: &ReduceConfig,
+    est_cfg: &EstimatorConfig,
+    data_cfg: &DataConfig,
+    opts: &FitOptions,
+) -> u32 {
+    let mut b = Vec::with_capacity(128);
+    let u = |b: &mut Vec<u8>, v: u64| b.extend_from_slice(&v.to_le_bytes());
+    let f = |b: &mut Vec<u8>, v: f64| b.extend_from_slice(&v.to_bits().to_le_bytes());
+    b.extend_from_slice(reduce_cfg.method.name().as_bytes());
+    b.push(0);
+    u(&mut b, reduce_cfg.k as u64);
+    u(&mut b, reduce_cfg.ratio as u64);
+    u(&mut b, reduce_cfg.seed);
+    u(&mut b, reduce_cfg.shards as u64);
+    f(&mut b, est_cfg.lambda);
+    f(&mut b, est_cfg.tol);
+    u(&mut b, est_cfg.max_iter as u64);
+    u(&mut b, est_cfg.cv_folds as u64);
+    for &d in &data_cfg.dims {
+        u(&mut b, d as u64);
+    }
+    u(&mut b, data_cfg.n_samples as u64);
+    f(&mut b, data_cfg.fwhm);
+    f(&mut b, data_cfg.noise_sigma);
+    u(&mut b, data_cfg.seed);
+    u(&mut b, opts.sgd_epochs as u64);
+    u(&mut b, opts.sgd_chunk as u64);
+    crate::model::crc32(&b)
+}
+
 /// Fit the full decoding pipeline on a cohort and capture it as a
 /// persistable [`FittedModel`]. `data_cfg` is recorded as provenance
 /// so `repro predict` can regenerate the cohort deterministically.

@@ -33,8 +33,8 @@ pub mod mapped;
 pub mod mmap;
 
 pub use fit::{
-    build_header, fit_model, fit_one_fold, fit_reduction,
-    reduction_from_labels, FitOptions, FOLD_SEED,
+    build_header, fit_fingerprint, fit_model, fit_one_fold,
+    fit_reduction, reduction_from_labels, FitOptions, FOLD_SEED,
 };
 pub use format::{crc32, load_model, read_fcm_header, save_model};
 pub use mapped::{open_model, MappedModel};

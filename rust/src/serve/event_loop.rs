@@ -285,6 +285,14 @@ impl Waker {
     pub fn wake(&self) {
         let _ = sys::write_fd(self.write.0, &[1u8]);
     }
+
+    /// Raw write-end descriptor, for contexts that must wake the
+    /// loop with nothing but async-signal-safe calls (the SIGTERM
+    /// handler: one `write(2)`, no allocation, no locks). The fd
+    /// stays valid while any `Waker` clone is alive.
+    pub fn raw_fd(&self) -> Fd {
+        self.write.0
+    }
 }
 
 #[cfg(not(unix))]
@@ -313,6 +321,11 @@ impl WakePipe {
 impl Waker {
     /// No-op: the tick poller's sleep bound is the wake latency.
     pub fn wake(&self) {}
+
+    /// No raw fd on this host.
+    pub fn raw_fd(&self) -> Fd {
+        -1
+    }
 }
 
 #[cfg(unix)]

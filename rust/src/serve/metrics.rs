@@ -82,6 +82,10 @@ pub struct Metrics {
     pub batches: AtomicU64,
     /// Requests answered with an error response.
     pub errors: AtomicU64,
+    /// Connections reaped by the idle deadline (ADR-010): a peer
+    /// that went quiet mid-request or sat idle past
+    /// `--idle-timeout-ms` was closed to free its budget slot.
+    pub idle_closed: AtomicU64,
     batch_sizes: LogHist,
     latency_us: LogHist,
     per_model: Mutex<BTreeMap<String, u64>>,
@@ -103,6 +107,7 @@ impl Metrics {
             http_requests: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            idle_closed: AtomicU64::new(0),
             batch_sizes: LogHist::new(),
             latency_us: LogHist::new(),
             per_model: Mutex::new(BTreeMap::new()),
@@ -190,6 +195,7 @@ impl Metrics {
             ("http_requests", load(&self.http_requests)),
             ("batches", load(&self.batches)),
             ("errors", load(&self.errors)),
+            ("idle_closed", load(&self.idle_closed)),
             ("batch_size_hist", hist(&self.batch_sizes)),
             ("latency_us_hist", hist(&self.latency_us)),
             (

@@ -37,6 +37,17 @@
 //!   clients may pipeline.
 //! * **Clean teardown**: [`ServerHandle::shutdown`] joins every
 //!   thread (the event loop and the pool workers) before returning.
+//!
+//! # Operational hardening (ADR-010)
+//!
+//! The gateway answers `GET /healthz` (liveness) and `GET /readyz`
+//! (readiness: 503 while draining or when the default model stops
+//! resolving); [`ServerHandle::install_sigterm`] routes SIGTERM to a
+//! graceful drain-and-exit; and `--idle-timeout-ms` arms a
+//! per-connection idle deadline so a slow-loris peer cannot pin the
+//! connection budget. All of it is exercised under seeded network
+//! faults by the `serve_chaos` integration suite via
+//! [`crate::testkit::ChaosProxy`].
 
 mod batch;
 mod client;
@@ -52,5 +63,6 @@ pub use client::ServeClient;
 pub use metrics::Metrics;
 pub use protocol::{Request, Response};
 pub use server::{
-    ServeLog, ServeOptions, ServeStats, Server, ServerHandle,
+    sigterm_requested, ServeLog, ServeOptions, ServeStats, Server,
+    ServerHandle,
 };

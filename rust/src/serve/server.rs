@@ -97,6 +97,12 @@ pub struct ServeOptions {
     /// Micro-batching flush window in microseconds: how long the
     /// head of a batch may wait for company under continuous load.
     pub batch_window_us: u64,
+    /// Per-connection idle deadline in milliseconds (ADR-010);
+    /// `0` disables it. A connection with no read/write progress and
+    /// no in-flight work for this long is closed — so a slow-loris
+    /// peer (bytes trickled slower than the deadline, request never
+    /// completed) cannot pin a slot of the connection budget.
+    pub idle_timeout_ms: u64,
     /// Optional event-log file (the CI smoke job uploads this).
     pub log_path: Option<PathBuf>,
 }
@@ -116,6 +122,7 @@ impl ServeOptions {
             max_batch: 64,
             max_connections: 256,
             batch_window_us: 200,
+            idle_timeout_ms: 0,
             log_path: None,
         }
     }
@@ -280,6 +287,12 @@ impl Server {
         if let Some(ha) = http_addr {
             ctx.log.line(&format!("http gateway on {ha}"));
         }
+        if opts.idle_timeout_ms > 0 {
+            ctx.log.line(&format!(
+                "idle deadline: {} ms per connection",
+                opts.idle_timeout_ms
+            ));
+        }
         let waker = wake.waker();
         let (tx, rx) = mpsc::channel();
         let max_inflight = (workers * 2).max(2);
@@ -302,6 +315,8 @@ impl Server {
             max_inflight,
             overflow: VecDeque::new(),
             max_connections: opts.max_connections.max(1),
+            idle_timeout: (opts.idle_timeout_ms > 0)
+                .then(|| Duration::from_millis(opts.idle_timeout_ms)),
         };
         let thread = std::thread::Builder::new()
             .name("serve-loop".into())
@@ -369,6 +384,32 @@ impl ServerHandle {
         Ok(self.ctx.counters.snapshot())
     }
 
+    /// Route SIGTERM to a graceful drain (ADR-010): the handler
+    /// flips [`sigterm_requested`] and pokes the loop's wake pipe;
+    /// the loop stops accepting, drains in-flight work under the
+    /// usual 5 s deadline, and exits — so a foreground
+    /// `repro serve` terminates with status 0 on SIGTERM instead of
+    /// dying mid-write. No-op off unix.
+    #[cfg(unix)]
+    pub fn install_sigterm(&self) {
+        const SIGTERM: i32 = 15;
+        extern "C" {
+            fn signal(
+                signum: i32,
+                handler: extern "C" fn(i32),
+            ) -> usize;
+        }
+        SIGTERM_WAKE_FD
+            .store(self.waker.raw_fd(), Ordering::Relaxed);
+        unsafe {
+            let _ = signal(SIGTERM, on_sigterm);
+        }
+    }
+
+    /// No signals to install on this host.
+    #[cfg(not(unix))]
+    pub fn install_sigterm(&self) {}
+
     fn stop_threads(&mut self) {
         self.ctx.shutdown.store(true, Ordering::Relaxed);
         self.waker.wake();
@@ -385,6 +426,48 @@ impl Drop for ServerHandle {
     fn drop(&mut self) {
         if self.thread.is_some() {
             self.stop_threads();
+        }
+    }
+}
+
+// ---------------------------------------------------- SIGTERM drain
+
+/// Set by the SIGTERM handler; the event loop polls it every tick
+/// and `/readyz` reports 503 once it flips.
+static SIGTERM_FLAG: AtomicBool = AtomicBool::new(false);
+
+/// Wake-pipe write fd the handler pokes so a blocked poller wait
+/// notices the flag immediately (−1 until a handler is installed).
+#[cfg(unix)]
+static SIGTERM_WAKE_FD: std::sync::atomic::AtomicI32 =
+    std::sync::atomic::AtomicI32::new(-1);
+
+/// Whether a SIGTERM drain has been requested in this process.
+pub fn sigterm_requested() -> bool {
+    SIGTERM_FLAG.load(Ordering::Relaxed)
+}
+
+/// The handler body is async-signal-safe by construction: one atomic
+/// store and one `write(2)` — no allocation, no locks, no stdio.
+#[cfg(unix)]
+extern "C" fn on_sigterm(_sig: i32) {
+    SIGTERM_FLAG.store(true, Ordering::Relaxed);
+    let fd = SIGTERM_WAKE_FD.load(Ordering::Relaxed);
+    if fd >= 0 {
+        extern "C" {
+            fn write(
+                fd: i32,
+                buf: *const std::os::raw::c_void,
+                count: usize,
+            ) -> isize;
+        }
+        let byte = [1u8];
+        unsafe {
+            let _ = write(
+                fd,
+                byte.as_ptr() as *const std::os::raw::c_void,
+                1,
+            );
         }
     }
 }
@@ -436,6 +519,9 @@ struct Conn {
     read_shut: bool,
     dead: bool,
     interest: Interest,
+    /// Last moment this connection made read or write progress;
+    /// the idle reaper (ADR-010) measures against it.
+    last_activity: Instant,
 }
 
 impl Conn {
@@ -452,6 +538,7 @@ impl Conn {
                 }
                 Ok(n) => {
                     self.rbuf.extend_from_slice(&chunk[..n]);
+                    self.last_activity = Instant::now();
                     reads += 1;
                 }
                 Err(e) if e.kind() == ErrorKind::WouldBlock => {
@@ -490,7 +577,10 @@ impl Conn {
                     self.dead = true;
                     return;
                 }
-                Ok(n) => self.wpos += n,
+                Ok(n) => {
+                    self.wpos += n;
+                    self.last_activity = Instant::now();
+                }
                 Err(e) if e.kind() == ErrorKind::WouldBlock => break,
                 Err(e) if e.kind() == ErrorKind::Interrupted => {}
                 Err(_) => {
@@ -525,12 +615,22 @@ struct EventLoop {
     max_inflight: usize,
     overflow: VecDeque<Batch>,
     max_connections: usize,
+    idle_timeout: Option<Duration>,
 }
 
 impl EventLoop {
     fn run(mut self) {
         let mut events: Vec<Event> = Vec::new();
         loop {
+            if sigterm_requested()
+                && !self.ctx.shutdown.load(Ordering::Relaxed)
+            {
+                self.ctx.log.line(
+                    "SIGTERM: stop accepting, draining in-flight \
+                     work",
+                );
+                self.ctx.shutdown.store(true, Ordering::Relaxed);
+            }
             if self.ctx.shutdown.load(Ordering::Relaxed) {
                 break;
             }
@@ -664,6 +764,7 @@ impl EventLoop {
                 read_shut: false,
                 dead: false,
                 interest: Interest::READ,
+                last_activity: Instant::now(),
             },
         );
     }
@@ -841,6 +942,41 @@ impl EventLoop {
             .fetch_add(1, Ordering::Relaxed);
         let keep = r.keep_alive;
         match (r.method.as_str(), r.path.as_str()) {
+            // Liveness: the loop thread answered, so the process is
+            // up. Never touches the registry — a wedged model load
+            // must not fail liveness.
+            ("GET", "/healthz") => {
+                let body = Value::obj(vec![(
+                    "status",
+                    Value::Str("ok".into()),
+                )])
+                .to_string();
+                let bytes = http::encode_response(200, &body, keep);
+                self.local_response(token, bytes, !keep);
+            }
+            // Readiness: 200 only while the default model resolves
+            // and no drain is in progress; load balancers should
+            // route on this, not on /healthz.
+            ("GET", "/readyz") => {
+                let draining =
+                    self.ctx.shutdown.load(Ordering::Relaxed)
+                        || sigterm_requested();
+                let (status, state) = if draining {
+                    (503, "draining")
+                } else if resolve_model(&self.ctx, "").is_err() {
+                    (503, "default model unavailable")
+                } else {
+                    (200, "ready")
+                };
+                let body = Value::obj(vec![(
+                    "status",
+                    Value::Str(state.into()),
+                )])
+                .to_string();
+                let bytes =
+                    http::encode_response(status, &body, keep);
+                self.local_response(token, bytes, !keep);
+            }
             ("GET", "/metrics") => {
                 self.ctx
                     .counters
@@ -888,8 +1024,8 @@ impl EventLoop {
             }
             (
                 _,
-                "/metrics" | "/v1/models" | "/v1/predict"
-                | "/v1/compress",
+                "/healthz" | "/readyz" | "/metrics" | "/v1/models"
+                | "/v1/predict" | "/v1/compress",
             ) => self.http_error(
                 token,
                 405,
@@ -1048,27 +1184,60 @@ impl EventLoop {
 
     // ------------------------------------------------- housekeeping
 
-    /// Push pending output, close finished connections, and keep
-    /// every registration's interest in sync with its state.
+    /// Push pending output, close finished connections, reap idle
+    /// ones past the deadline (ADR-010), and keep every
+    /// registration's interest in sync with its state.
     fn flush_and_sweep(&mut self) {
+        enum Sweep {
+            Keep,
+            Close,
+            IdleClose,
+        }
         let tokens: Vec<Token> =
             self.conns.keys().copied().collect();
         for t in tokens {
-            let closable = match self.conns.get_mut(&t) {
+            let verdict = match self.conns.get_mut(&t) {
                 None => continue,
                 Some(c) => {
                     if c.wpos < c.wbuf.len() {
                         c.write_pending();
                     }
-                    c.dead
+                    if c.dead
                         || (c.read_shut
                             && c.slots.is_empty()
                             && c.wpos >= c.wbuf.len())
+                    {
+                        Sweep::Close
+                    } else if self.idle_timeout.is_some_and(|d| {
+                        // in-flight work (open slots) exempts a
+                        // connection: the response itself will make
+                        // progress and reset the clock
+                        c.slots.is_empty()
+                            && c.last_activity.elapsed() >= d
+                    }) {
+                        Sweep::IdleClose
+                    } else {
+                        Sweep::Keep
+                    }
                 }
             };
-            if closable {
-                self.close_conn(t);
-                continue;
+            match verdict {
+                Sweep::Keep => {}
+                Sweep::Close => {
+                    self.close_conn(t);
+                    continue;
+                }
+                Sweep::IdleClose => {
+                    self.ctx
+                        .metrics
+                        .idle_closed
+                        .fetch_add(1, Ordering::Relaxed);
+                    self.ctx.log.line(&format!(
+                        "conn {t}: closed by the idle deadline"
+                    ));
+                    self.close_conn(t);
+                    continue;
+                }
             }
             if let Some(c) = self.conns.get_mut(&t) {
                 let want = Interest {
@@ -1557,7 +1726,65 @@ mod tests {
         let (code, _) =
             http_call(&mut s, "GET /nope HTTP/1.1\r\n\r\n");
         assert_eq!(code, 404);
+        // liveness + readiness probes (ADR-010)
+        let (code, body) = http_call(
+            &mut s,
+            "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n",
+        );
+        assert_eq!(code, 200);
+        assert!(body.contains("ok"), "healthz body: {body}");
+        let (code, body) = http_call(
+            &mut s,
+            "GET /readyz HTTP/1.1\r\nHost: t\r\n\r\n",
+        );
+        assert_eq!(code, 200);
+        assert!(body.contains("ready"), "readyz body: {body}");
+        // a known path with the wrong method is 405, not 404
+        let (code, _) = http_call(
+            &mut s,
+            "POST /healthz HTTP/1.1\r\nContent-Length: 0\r\n\r\n",
+        );
+        assert_eq!(code, 405);
         drop(s);
+        handle.shutdown().unwrap();
+    }
+
+    #[test]
+    fn idle_deadline_reaps_quiet_connections() {
+        let (path, _) = saved_model("idle");
+        let mut opts = ServeOptions::new(&path);
+        opts.workers = 1;
+        opts.max_connections = 1;
+        opts.idle_timeout_ms = 300;
+        let handle = Server::start(opts).unwrap();
+        // a slow-loris peer: connects, sends half a frame, goes quiet
+        let mut loris = TcpStream::connect(handle.addr()).unwrap();
+        loris.write_all(&[1u8, 0, 0]).unwrap();
+        loris
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        let mut buf = [0u8; 16];
+        // the server must close it (EOF or reset) within the
+        // deadline — well before the client-side read timeout, which
+        // would also surface as Err
+        let t0 = Instant::now();
+        let reaped = matches!(loris.read(&mut buf), Ok(0) | Err(_));
+        assert!(reaped, "idle connection was never reaped");
+        assert!(
+            t0.elapsed() < Duration::from_secs(4),
+            "close came from the client timeout, not the reaper"
+        );
+        // the budget slot it held is free again: a fresh client gets
+        // admitted and served on a budget of 1
+        let mut client =
+            ServeClient::connect(handle.addr()).unwrap();
+        client.model_info().unwrap();
+        drop(client);
+        let m = handle.metrics_json();
+        assert!(
+            m.get("idle_closed").unwrap().as_u64().unwrap() >= 1,
+            "idle_closed counter never moved"
+        );
         handle.shutdown().unwrap();
     }
 

@@ -1,0 +1,527 @@
+//! testkit — deterministic socket-level chaos for integration tests
+//! (ADR-010).
+//!
+//! [`ChaosProxy`] is a seeded in-process TCP proxy that can be
+//! interposed on any of the crate's wires — coordinator ↔ worker
+//! (ADR-006), client ↔ serve on both the binary and HTTP front-ends
+//! (ADR-007) — without touching the code under test: point the client
+//! at [`ChaosProxy::addr`] instead of the real endpoint and every
+//! byte flows through a fault schedule drawn from a seeded
+//! [`crate::rng::Rng`].
+//!
+//! # Fault vocabulary
+//!
+//! * [`Fault::None`] — transparent relay (the control arm).
+//! * [`Fault::Latency`] — fixed delay plus seeded jitter before each
+//!   forwarded burst. Non-lossy.
+//! * [`Fault::Split`] — re-chunks the stream at seeded byte
+//!   boundaries (1..=`max_chunk` bytes per write, optional inter-chunk
+//!   delay), so framing code sees every possible partial-read shape.
+//!   Non-lossy.
+//! * [`Fault::Rst`] — forwards `after_bytes`, then aborts the
+//!   connection with an RST (`SO_LINGER {1, 0}` close on Linux).
+//!   Lossy.
+//! * [`Fault::HalfClose`] — forwards `after_bytes`, then shuts down
+//!   the write side (FIN) while leaving the reverse direction open.
+//!   Lossy.
+//! * [`Fault::Blackhole`] — forwards `after_bytes`, stalls the
+//!   direction for `hold_ms`, then recovers and delivers everything.
+//!   Non-lossy, but long enough holds trip heartbeat/idle deadlines —
+//!   that is the point.
+//!
+//! # Determinism
+//!
+//! Each accepted connection `i` (1-based, in accept order) draws its
+//! two per-direction faults from the menu via
+//! `Rng::new(seed).derive(i)` — see [`schedule`], which tests use to
+//! pin the exact fault assignment a soak ran under. Given the same
+//! seed, menu and connection order, the proxy injects the same
+//! schedule every run.
+//!
+//! Zero external crates: the only platform-specific code is a raw
+//! `setsockopt(2)` call for the RST close, mirroring the crate's
+//! existing `extern "C"` idiom (ADR-001).
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use crate::rng::Rng;
+
+/// One fault to inject on one direction of one proxied connection.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fault {
+    /// Transparent relay.
+    None,
+    /// Delay each forwarded burst by `ms` plus up to `jitter_ms` of
+    /// seeded jitter.
+    Latency { ms: u64, jitter_ms: u64 },
+    /// Re-chunk the stream: each write carries 1..=`max_chunk` bytes
+    /// (seeded), with `delay_us` between chunks.
+    Split { max_chunk: usize, delay_us: u64 },
+    /// Forward `after_bytes`, then abort the connection with an RST.
+    Rst { after_bytes: usize },
+    /// Forward `after_bytes`, then FIN the write side of this
+    /// direction (the reverse direction stays open).
+    HalfClose { after_bytes: usize },
+    /// Forward `after_bytes`, go dark for `hold_ms`, then recover and
+    /// deliver the rest.
+    Blackhole { after_bytes: usize, hold_ms: u64 },
+}
+
+impl Fault {
+    /// Whether this fault can truncate the stream (so the far side is
+    /// allowed to observe an error rather than the full payload).
+    pub fn lossy(&self) -> bool {
+        matches!(self, Fault::Rst { .. } | Fault::HalfClose { .. })
+    }
+}
+
+/// The (client→upstream, upstream→client) menu indices drawn for
+/// connection `conn_id` under `seed`. This is exactly the draw the
+/// proxy's accept loop makes, exposed so tests can log and replay the
+/// schedule a soak ran under.
+pub fn schedule(seed: u64, conn_id: u64, menu_len: usize) -> (usize, usize) {
+    let mut r = Rng::new(seed).derive(conn_id);
+    let n = menu_len.max(1);
+    (r.below(n), r.below(n))
+}
+
+/// Seeded deterministic TCP chaos proxy (see the module docs).
+pub struct ChaosProxy {
+    local: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    pumps: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    conns: Arc<AtomicU64>,
+}
+
+impl ChaosProxy {
+    /// Bind a loopback listener and start relaying every accepted
+    /// connection to `upstream` under faults drawn from `menu`
+    /// (empty menu ⇒ transparent relay).
+    pub fn start(
+        upstream: SocketAddr,
+        seed: u64,
+        menu: Vec<Fault>,
+    ) -> std::io::Result<ChaosProxy> {
+        let listener = TcpListener::bind(("127.0.0.1", 0))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let menu = if menu.is_empty() { vec![Fault::None] } else { menu };
+        let stop = Arc::new(AtomicBool::new(false));
+        let pumps: Arc<Mutex<Vec<JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let conns = Arc::new(AtomicU64::new(0));
+        let accept = {
+            let (stop, pumps, conns) =
+                (stop.clone(), pumps.clone(), conns.clone());
+            thread::spawn(move || {
+                accept_loop(listener, upstream, seed, menu, stop, pumps, conns)
+            })
+        };
+        Ok(ChaosProxy { local, stop, accept: Some(accept), pumps, conns })
+    }
+
+    /// The address clients should connect to instead of the upstream.
+    pub fn addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Connections accepted so far.
+    pub fn connections(&self) -> u64 {
+        self.conns.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting, tear down every relay and join all threads.
+    /// Idempotent; also runs on drop.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handles = {
+            let mut g = self.pumps.lock().unwrap();
+            std::mem::take(&mut *g)
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ChaosProxy {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn accept_loop(
+    listener: TcpListener,
+    upstream: SocketAddr,
+    seed: u64,
+    menu: Vec<Fault>,
+    stop: Arc<AtomicBool>,
+    pumps: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    conns: Arc<AtomicU64>,
+) {
+    let mut conn_id: u64 = 0;
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        match listener.accept() {
+            Ok((client, _)) => {
+                conn_id += 1;
+                conns.fetch_add(1, Ordering::Relaxed);
+                let up = match TcpStream::connect(upstream) {
+                    Ok(s) => s,
+                    Err(_) => {
+                        let _ = client.shutdown(Shutdown::Both);
+                        continue;
+                    }
+                };
+                let (i_up, i_down) = schedule(seed, conn_id, menu.len());
+                let (f_up, f_down) = (menu[i_up], menu[i_down]);
+                let conn_rng = Rng::new(seed).derive(conn_id);
+                let (Ok(client2), Ok(up2)) = (client.try_clone(), up.try_clone())
+                else {
+                    continue;
+                };
+                let h_up = thread::spawn({
+                    let stop = stop.clone();
+                    let rng = conn_rng.derive(1);
+                    move || pump(client, up2, f_up, rng, stop)
+                });
+                let h_down = thread::spawn({
+                    let stop = stop.clone();
+                    let rng = conn_rng.derive(2);
+                    move || pump(up, client2, f_down, rng, stop)
+                });
+                let mut g = pumps.lock().unwrap();
+                g.push(h_up);
+                g.push(h_down);
+            }
+            Err(ref e) if e.kind() == ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+/// Relay one direction, applying `fault`, until EOF, error, a lossy
+/// fault fires, or the proxy is stopped.
+fn pump(
+    mut from: TcpStream,
+    mut to: TcpStream,
+    fault: Fault,
+    rng: Rng,
+    stop: Arc<AtomicBool>,
+) {
+    let _ = from.set_read_timeout(Some(Duration::from_millis(50)));
+    let _ = to.set_write_timeout(Some(Duration::from_millis(200)));
+    let mut st = Pump { fault, rng, forwarded: 0, tripped: false };
+    let mut buf = [0u8; 16 * 1024];
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        match from.read(&mut buf) {
+            Ok(0) => {
+                // Clean EOF: propagate the half-close downstream so
+                // framing layers see the same shape they would on the
+                // direct wire.
+                let _ = to.shutdown(Shutdown::Write);
+                return;
+            }
+            Ok(n) => {
+                if !st.forward(&mut to, &buf[..n], &stop) {
+                    let _ = from.shutdown(Shutdown::Both);
+                    return;
+                }
+            }
+            Err(ref e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut
+                    || e.kind() == ErrorKind::Interrupted =>
+            {
+                continue;
+            }
+            Err(_) => {
+                let _ = to.shutdown(Shutdown::Write);
+                return;
+            }
+        }
+    }
+}
+
+struct Pump {
+    fault: Fault,
+    rng: Rng,
+    forwarded: usize,
+    tripped: bool,
+}
+
+impl Pump {
+    /// Forward one read burst under the fault. Returns `false` when
+    /// the relay must stop (fault fired or the peer is gone).
+    fn forward(
+        &mut self,
+        to: &mut TcpStream,
+        data: &[u8],
+        stop: &AtomicBool,
+    ) -> bool {
+        match self.fault {
+            Fault::None => write_retry(to, data, stop),
+            Fault::Latency { ms, jitter_ms } => {
+                let jitter = if jitter_ms > 0 {
+                    self.rng.next_u64() % (jitter_ms + 1)
+                } else {
+                    0
+                };
+                nap(ms + jitter, stop);
+                write_retry(to, data, stop)
+            }
+            Fault::Split { max_chunk, delay_us } => {
+                let cap = max_chunk.max(1);
+                let mut rest = data;
+                while !rest.is_empty() {
+                    if stop.load(Ordering::Relaxed) {
+                        return false;
+                    }
+                    let take = (1 + self.rng.below(cap)).min(rest.len());
+                    if !write_retry(to, &rest[..take], stop) {
+                        return false;
+                    }
+                    let _ = to.flush();
+                    if delay_us > 0 {
+                        thread::sleep(Duration::from_micros(delay_us));
+                    }
+                    rest = &rest[take..];
+                }
+                true
+            }
+            Fault::Rst { after_bytes } => {
+                let room = after_bytes.saturating_sub(self.forwarded);
+                let head = room.min(data.len());
+                if head > 0 && !write_retry(to, &data[..head], stop) {
+                    return false;
+                }
+                self.forwarded += head;
+                if head < data.len() {
+                    abort_close(to);
+                    let _ = to.shutdown(Shutdown::Both);
+                    return false;
+                }
+                true
+            }
+            Fault::HalfClose { after_bytes } => {
+                let room = after_bytes.saturating_sub(self.forwarded);
+                let head = room.min(data.len());
+                if head > 0 && !write_retry(to, &data[..head], stop) {
+                    return false;
+                }
+                self.forwarded += head;
+                if head < data.len() {
+                    let _ = to.shutdown(Shutdown::Write);
+                    return false;
+                }
+                true
+            }
+            Fault::Blackhole { after_bytes, hold_ms } => {
+                if !self.tripped && self.forwarded + data.len() > after_bytes {
+                    self.tripped = true;
+                    nap(hold_ms, stop);
+                }
+                self.forwarded += data.len();
+                write_retry(to, data, stop)
+            }
+        }
+    }
+}
+
+/// `write_all` that honors the write timeout and the stop flag.
+fn write_retry(to: &mut TcpStream, mut buf: &[u8], stop: &AtomicBool) -> bool {
+    while !buf.is_empty() {
+        if stop.load(Ordering::Relaxed) {
+            return false;
+        }
+        match to.write(buf) {
+            Ok(0) => return false,
+            Ok(n) => buf = &buf[n..],
+            Err(ref e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut
+                    || e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => return false,
+        }
+    }
+    true
+}
+
+/// Sleep `ms`, waking early if the proxy is being stopped.
+fn nap(ms: u64, stop: &AtomicBool) {
+    let end = Instant::now() + Duration::from_millis(ms);
+    while Instant::now() < end {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Arrange for the next `close(2)`/`shutdown(2)` on this socket to
+/// send an RST instead of a graceful FIN: `SO_LINGER { on, 0s }`.
+#[cfg(target_os = "linux")]
+fn abort_close(s: &TcpStream) {
+    use std::os::unix::io::AsRawFd;
+    #[repr(C)]
+    struct Linger {
+        l_onoff: i32,
+        l_linger: i32,
+    }
+    extern "C" {
+        fn setsockopt(
+            fd: i32,
+            level: i32,
+            name: i32,
+            value: *const std::os::raw::c_void,
+            len: u32,
+        ) -> i32;
+    }
+    const SOL_SOCKET: i32 = 1;
+    const SO_LINGER: i32 = 13;
+    let lg = Linger { l_onoff: 1, l_linger: 0 };
+    unsafe {
+        let _ = setsockopt(
+            s.as_raw_fd(),
+            SOL_SOCKET,
+            SO_LINGER,
+            &lg as *const Linger as *const std::os::raw::c_void,
+            std::mem::size_of::<Linger>() as u32,
+        );
+    }
+}
+
+/// Off Linux a hard close stands in for the RST; the observable
+/// effect (mid-stream connection failure) is the same for the tests.
+#[cfg(not(target_os = "linux"))]
+fn abort_close(s: &TcpStream) {
+    let _ = s.shutdown(Shutdown::Both);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Echo server that handles exactly `n` connections sequentially:
+    /// read to EOF, write everything back, close.
+    fn echo_upstream(n: usize) -> (SocketAddr, JoinHandle<()>) {
+        let l = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = l.local_addr().unwrap();
+        let h = thread::spawn(move || {
+            for _ in 0..n {
+                let (mut s, _) = l.accept().unwrap();
+                let mut body = Vec::new();
+                if s.read_to_end(&mut body).is_ok() {
+                    let _ = s.write_all(&body);
+                }
+            }
+        });
+        (addr, h)
+    }
+
+    fn payload(len: usize) -> Vec<u8> {
+        (0..len).map(|i| (i * 31 % 251) as u8).collect()
+    }
+
+    #[test]
+    fn non_lossy_schedules_are_lossless() {
+        let faults = [
+            Fault::None,
+            Fault::Latency { ms: 1, jitter_ms: 3 },
+            Fault::Split { max_chunk: 7, delay_us: 50 },
+            Fault::Blackhole { after_bytes: 40, hold_ms: 30 },
+        ];
+        for (i, f) in faults.iter().enumerate() {
+            let (up, server) = echo_upstream(1);
+            let mut proxy =
+                ChaosProxy::start(up, 1000 + i as u64, vec![*f]).unwrap();
+            let want = payload(997);
+            let mut c = TcpStream::connect(proxy.addr()).unwrap();
+            c.write_all(&want).unwrap();
+            c.shutdown(Shutdown::Write).unwrap();
+            let mut got = Vec::new();
+            c.read_to_end(&mut got).unwrap();
+            assert_eq!(got, want, "fault {f:?} corrupted the stream");
+            assert_eq!(proxy.connections(), 1);
+            proxy.stop();
+            server.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn lossy_schedules_truncate_or_reset() {
+        // Sink upstream: count received bytes, report via join handle.
+        let sink = || {
+            let l = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+            let addr = l.local_addr().unwrap();
+            let h = thread::spawn(move || {
+                let (mut s, _) = l.accept().unwrap();
+                let mut total = 0usize;
+                let mut buf = [0u8; 1024];
+                loop {
+                    match s.read(&mut buf) {
+                        Ok(0) | Err(_) => return total,
+                        Ok(n) => total += n,
+                    }
+                }
+            });
+            (addr, h)
+        };
+
+        let (up, server) = sink();
+        let mut proxy = ChaosProxy::start(
+            up,
+            7,
+            vec![Fault::HalfClose { after_bytes: 64 }],
+        )
+        .unwrap();
+        let mut c = TcpStream::connect(proxy.addr()).unwrap();
+        let _ = c.write_all(&payload(4096));
+        let _ = c.shutdown(Shutdown::Write);
+        assert_eq!(server.join().unwrap(), 64);
+        proxy.stop();
+
+        let (up, server) = sink();
+        let mut proxy =
+            ChaosProxy::start(up, 8, vec![Fault::Rst { after_bytes: 64 }])
+                .unwrap();
+        let mut c = TcpStream::connect(proxy.addr()).unwrap();
+        let _ = c.write_all(&payload(4096));
+        let _ = c.shutdown(Shutdown::Write);
+        // The RST may race the already-forwarded head; the sink must
+        // never see more than the budget.
+        assert!(server.join().unwrap() <= 64);
+        proxy.stop();
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_covers_menu() {
+        let menu_len = 5;
+        let mut seen = [false; 5];
+        for conn in 1..=200u64 {
+            let (a, b) = schedule(42, conn, menu_len);
+            assert_eq!((a, b), schedule(42, conn, menu_len));
+            assert!(a < menu_len && b < menu_len);
+            seen[a] = true;
+            seen[b] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "draws never hit part of the menu");
+    }
+}

@@ -16,21 +16,39 @@
 //! `$CARGO_TARGET_TMPDIR/dist_soak_events.log` before asserting, so a
 //! CI failure ships the full soak history as an artifact.
 //!
-//! `soak_quick` runs in the distributed-smoke CI job; the longer
-//! `soak_long` variant is `#[ignore]`d for nightly/manual runs:
+//! Two further soak families ride the same fixture (ADR-010):
+//!
+//! * **chaos rounds** — the fleet runs as *external* worker processes
+//!   whose connections cross a seeded [`ChaosProxy`] (latency, frame
+//!   splits, blackholes, RSTs, half-closes on the coordinator wire).
+//!   Whatever the schedule does to the sockets, the `.fcm` must stay
+//!   byte-identical to the single-process artifact.
+//! * **kill/resume rounds** — `repro fit-distributed` runs as a child
+//!   process, is SIGKILLed at a seeded point of its `.fcj` journal,
+//!   and is completed with `--resume`: the resumed artifact must be
+//!   byte-identical to an uninterrupted child run's.
+//!
+//! `soak_quick` / `chaos_quick` / `kill_resume_quick` run in the
+//! distributed-smoke CI job; the longer `*_long` variants are
+//! `#[ignore]`d for the nightly chaos-soak job:
 //! `cargo test --test distributed_soak -- --ignored`.
 
 use std::io::Write;
-use std::path::PathBuf;
+use std::net::{SocketAddr, TcpListener};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
 
 use fastclust::config::{
-    DataConfig, EstimatorConfig, Method, ReduceConfig,
+    DataConfig, DistSettings, EstimatorConfig, ExperimentConfig,
+    Method, ReduceConfig, StreamConfig,
 };
 use fastclust::coordinator::{
     run_distributed_fit, DistOptions, DistReport, FaultKind, FaultSpec,
 };
 use fastclust::model::{fit_model, save_model, FitOptions};
 use fastclust::rng::Rng;
+use fastclust::testkit::{ChaosProxy, Fault};
 use fastclust::volume::{MaskedDataset, MorphometryGenerator};
 
 fn tmp(name: &str) -> PathBuf {
@@ -216,4 +234,320 @@ fn soak_quick() {
 #[ignore = "long soak; run explicitly (nightly)"]
 fn soak_long() {
     soak("long", 24, 8, 0x50AB_0002);
+}
+
+// ------------------------------------------------ chaos-proxy rounds
+
+/// Every fault the proxy knows how to inject, in one menu — each
+/// connection (and each direction of it) draws independently, so a
+/// round mixes healthy, slow, fragmented and dying links.
+fn chaos_menu() -> Vec<Fault> {
+    vec![
+        Fault::None,
+        Fault::Latency { ms: 10, jitter_ms: 20 },
+        Fault::Split { max_chunk: 7, delay_us: 200 },
+        Fault::Blackhole { after_bytes: 2048, hold_ms: 400 },
+        Fault::Rst { after_bytes: 4096 },
+        Fault::HalfClose { after_bytes: 4096 },
+    ]
+}
+
+/// Reserve an ephemeral port by bind-then-drop so the proxy can be
+/// told the coordinator's address before the coordinator binds it.
+/// (Loopback, test-lifetime — the rebind race is acceptable here.)
+fn pick_port() -> u16 {
+    TcpListener::bind("127.0.0.1:0")
+        .unwrap()
+        .local_addr()
+        .unwrap()
+        .port()
+}
+
+/// One chaos round: the whole fleet connects through a seeded
+/// [`ChaosProxy`]; whatever the schedule breaks, the saved `.fcm`
+/// must match the single-process reference byte for byte.
+fn chaos_round(
+    fx: &Fixture,
+    tag: &str,
+    round: usize,
+    workers: usize,
+    seed: u64,
+) {
+    let work = tmp(&format!("dist_chaos_{tag}_work"));
+    std::fs::create_dir_all(&work).unwrap();
+    let port = pick_port();
+    let upstream: SocketAddr =
+        format!("127.0.0.1:{port}").parse().unwrap();
+    let mut proxy =
+        ChaosProxy::start(upstream, seed, chaos_menu()).unwrap();
+    let paddr = proxy.addr().to_string();
+    // external workers aimed at the proxy, with a connect-retry
+    // window: the coordinator has not bound its port yet
+    let mut kids: Vec<Child> = (0..workers)
+        .map(|_| {
+            Command::new(env!("CARGO_BIN_EXE_repro"))
+                .args([
+                    "worker",
+                    "--connect",
+                    &paddr,
+                    "--heartbeat-ms",
+                    "800",
+                    "--connect-retry-ms",
+                    "5000",
+                ])
+                .stdout(Stdio::null())
+                .stderr(Stdio::null())
+                .spawn()
+                .unwrap()
+        })
+        .collect();
+    let dist = DistOptions {
+        workers: 0,
+        expect_external: workers,
+        bind: format!("127.0.0.1:{port}"),
+        accept_ms: 4000,
+        chunk_samples: 4,
+        heartbeat_ms: 800,
+        work_dir: Some(work.clone()),
+        distribute_clustering: true,
+        ..Default::default()
+    };
+    let label = format!("{tag} chaos round {round} [seed {seed:#x}]");
+    let (model, report) = run_distributed_fit(
+        &fx.ds, &fx.labels, &fx.reduce, &fx.est, &fx.dc, &fx.opts, &dist,
+    )
+    .unwrap_or_else(|e| panic!("{label}: distributed fit failed: {e}"));
+    proxy.stop();
+    for k in &mut kids {
+        let _ = k.kill();
+        let _ = k.wait();
+    }
+
+    // event-log artifact first, assertions second (CI upload)
+    let mut log = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(tmp("dist_soak_events.log"))
+        .unwrap();
+    writeln!(
+        log,
+        "=== {label}: proxied_conns={} connected={} lost={} \
+         retries={} local_jobs={} range_blocks={}",
+        proxy.connections(),
+        report.workers_connected,
+        report.workers_lost,
+        report.retries,
+        report.local_jobs,
+        report.range_blocks
+    )
+    .unwrap();
+    for e in &report.events {
+        writeln!(log, "{e:?}").unwrap();
+    }
+
+    assert!(
+        proxy.connections() > 0,
+        "{label}: no worker ever reached the proxy"
+    );
+    let path = tmp(&format!("dist_chaos_{tag}_round{round}.fcm"));
+    save_model(&path, &model).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    assert_eq!(
+        bytes, fx.local_bytes,
+        "{label}: chaos-proxied .fcm differs from the single-process \
+         artifact (events: {:?})",
+        report.events
+    );
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_dir_all(&work);
+}
+
+fn chaos(tag: &str, rounds: usize, workers: usize, seed: u64) {
+    let fx = fixture(&format!("chaos_{tag}"));
+    for round in 0..rounds {
+        chaos_round(&fx, tag, round, workers, seed + round as u64);
+    }
+}
+
+/// CI variant: four seeded schedules over a 4-worker proxied fleet.
+#[test]
+fn chaos_quick() {
+    chaos("quick", 4, 4, 0xC4A0_0001);
+}
+
+/// Nightly variant: more schedules, bigger fleet.
+#[test]
+#[ignore = "long chaos soak; run explicitly (nightly)"]
+fn chaos_long() {
+    chaos("long", 12, 6, 0xC4A0_1001);
+}
+
+// ----------------------------------------- coordinator kill + resume
+
+/// The fixture's fit as a CLI config file, so child `repro
+/// fit-distributed` processes run the *same* plan (ADR-010 identity
+/// is then child-vs-child: resumed run vs uninterrupted run).
+fn resume_config() -> ExperimentConfig {
+    ExperimentConfig {
+        data: DataConfig {
+            dims: [8, 9, 7],
+            n_samples: 18,
+            seed: 33,
+            ..Default::default()
+        },
+        reduce: ReduceConfig {
+            method: Method::FastSharded,
+            ratio: 10,
+            shards: 3,
+            ..Default::default()
+        },
+        estimator: EstimatorConfig {
+            cv_folds: 3,
+            max_iter: 60,
+            ..Default::default()
+        },
+        stream: StreamConfig { chunk_samples: 4, ..Default::default() },
+        dist: DistSettings {
+            workers: 3,
+            distribute_clustering: true,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn spawn_fit_child(
+    cfg_path: &Path,
+    save: &Path,
+    journal: &Path,
+    resume: bool,
+) -> Child {
+    let mut c = Command::new(env!("CARGO_BIN_EXE_repro"));
+    c.arg("fit-distributed")
+        .arg("--config")
+        .arg(cfg_path)
+        .arg("--save")
+        .arg(save)
+        .arg("--journal")
+        .arg(journal)
+        .stdout(Stdio::null())
+        .stderr(Stdio::null());
+    if resume {
+        c.arg("--resume").arg(journal);
+    }
+    c.spawn().unwrap()
+}
+
+/// SIGKILL `repro fit-distributed` once its journal reaches a seeded
+/// fraction of the reference run's length, then `--resume` and
+/// byte-compare against the uninterrupted run.
+fn kill_resume(tag: &str, rounds: usize, seed: u64) {
+    let dir = tmp(&format!("dist_resume_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("cfg.json");
+    std::fs::write(
+        &cfg_path,
+        resume_config().to_json().to_string_pretty(),
+    )
+    .unwrap();
+
+    // uninterrupted reference run (also sizes the journal)
+    let ref_save = dir.join("ref.fcm");
+    let ref_journal = dir.join("ref.fcj");
+    let st = spawn_fit_child(&cfg_path, &ref_save, &ref_journal, false)
+        .wait()
+        .unwrap();
+    assert!(st.success(), "{tag}: reference child run failed");
+    let ref_bytes = std::fs::read(&ref_save).unwrap();
+    let ref_len = std::fs::metadata(&ref_journal).unwrap().len();
+    assert!(ref_len > 0, "{tag}: reference run wrote no journal");
+
+    let mut rng = Rng::new(seed);
+    for round in 0..rounds {
+        let save = dir.join(format!("kill{round}.fcm"));
+        let journal = dir.join(format!("kill{round}.fcj"));
+        // kill somewhere between 20% and 80% of the journal bytes —
+        // early kills exercise requeue-almost-everything, late kills
+        // exercise replay-almost-everything
+        let frac = 20 + rng.below(61) as u64;
+        let threshold = (ref_len * frac / 100).max(1);
+        let mut child =
+            spawn_fit_child(&cfg_path, &save, &journal, false);
+        let deadline = Instant::now() + Duration::from_secs(120);
+        let mut killed = false;
+        loop {
+            if child.try_wait().unwrap().is_some() {
+                break; // won the race: resume will replay everything
+            }
+            let done = std::fs::metadata(&journal)
+                .map(|m| m.len())
+                .unwrap_or(0);
+            if done >= threshold || Instant::now() > deadline {
+                let _ = child.kill(); // SIGKILL: no destructors run
+                let _ = child.wait();
+                killed = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+
+        let st = spawn_fit_child(&cfg_path, &save, &journal, true)
+            .wait()
+            .unwrap();
+        assert!(
+            st.success(),
+            "{tag} round {round}: resumed child run failed"
+        );
+        let bytes = std::fs::read(&save).unwrap();
+
+        // event-log artifact: the resume accounting from the sidecar
+        let sidecar = std::fs::read_to_string(format!(
+            "{}.dist.json",
+            save.display()
+        ))
+        .unwrap();
+        let v = fastclust::json::parse(&sidecar).unwrap();
+        let replayed = v
+            .get("replayed_jobs")
+            .and_then(|x| x.as_usize())
+            .unwrap_or(0);
+        let requeued = v
+            .get("requeued_jobs")
+            .and_then(|x| x.as_usize())
+            .unwrap_or(0);
+        let mut log = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(tmp("dist_soak_events.log"))
+            .unwrap();
+        writeln!(
+            log,
+            "=== {tag} kill/resume round {round}: killed={killed} \
+             frac={frac}% replayed={replayed} requeued={requeued}"
+        )
+        .unwrap();
+
+        assert_eq!(
+            bytes, ref_bytes,
+            "{tag} round {round}: resumed .fcm differs from the \
+             uninterrupted run (killed={killed}, frac={frac}%, \
+             replayed={replayed}, requeued={requeued})"
+        );
+        let _ = std::fs::remove_file(&save);
+        let _ = std::fs::remove_file(&journal);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// CI variant: two seeded kill points.
+#[test]
+fn kill_resume_quick() {
+    kill_resume("quick", 2, 0x4B11_0001);
+}
+
+/// Nightly variant: six seeded kill points.
+#[test]
+#[ignore = "long kill/resume soak; run explicitly (nightly)"]
+fn kill_resume_long() {
+    kill_resume("long", 6, 0x4B11_1001);
 }

@@ -568,6 +568,187 @@ fn fcm_mmap_oversized_length_claims() {
         .contains("truncated"));
 }
 
+// ---------------------------------------- .fcj job journal (ADR-010)
+
+use fastclust::coordinator::journal::{JOURNAL_MAGIC, MAX_RECORD_BYTES};
+use fastclust::coordinator::{
+    decode_journal, decode_record, JournalHeader, JournalRecord,
+    JournalWriter,
+};
+
+fn fcj_header() -> JournalHeader {
+    JournalHeader {
+        data_crc: 0x1234_5678,
+        data_len: 4096,
+        meta_crc: 0x9ABC_DEF0,
+        config_crc: 77,
+        lanes: 6,
+        n: 24,
+    }
+}
+
+fn fcj_records() -> Vec<JournalRecord> {
+    vec![
+        JournalRecord {
+            job_id: 0,
+            payload_crc: 11,
+            partials: vec![(0, vec![1, 2, 3, 4]), (1, vec![5])],
+        },
+        JournalRecord {
+            job_id: 3,
+            payload_crc: 22,
+            partials: vec![(0, b"partial-bytes".to_vec())],
+        },
+        JournalRecord { job_id: 9, payload_crc: 33, partials: vec![] },
+    ]
+}
+
+/// A valid journal image: header plus [`fcj_records`], via the real
+/// writer so the sweep covers the exact on-disk envelope.
+fn fcj_fixture_bytes(tag: &str) -> Vec<u8> {
+    let dir = std::path::PathBuf::from(env!("CARGO_TARGET_TMPDIR"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("fcj_fuzz_{tag}.fcj"));
+    let mut w = JournalWriter::create(&path, &fcj_header()).unwrap();
+    for r in fcj_records() {
+        w.append(&r).unwrap();
+    }
+    drop(w);
+    std::fs::read(&path).unwrap()
+}
+
+/// Truncation at every byte boundary. Before the header envelope
+/// ends the journal is unusable (`Err`); from there on, salvage
+/// must return exactly a prefix of the true records, flag any torn
+/// tail, and never panic — a crash mid-append is the designed case.
+#[test]
+fn fcj_fuzz_truncation_sweep() {
+    let bytes = fcj_fixture_bytes("trunc");
+    let want = fcj_records();
+    // locate the end of the header envelope: magic + len|body|crc
+    let hlen = u32::from_le_bytes(
+        bytes[8..12].try_into().unwrap(),
+    ) as usize;
+    let header_end = 8 + 4 + hlen + 4;
+    for cut in 0..bytes.len() {
+        match decode_journal(&bytes[..cut]) {
+            Err(_) => assert!(
+                cut < header_end,
+                "cut {cut}: intact header rejected"
+            ),
+            Ok((h, recs, valid, torn)) => {
+                assert!(
+                    cut >= header_end,
+                    "cut {cut}: accepted a torn header"
+                );
+                assert_eq!(h, fcj_header());
+                assert_eq!(
+                    recs,
+                    want[..recs.len()],
+                    "cut {cut}: salvage is not a prefix"
+                );
+                assert!(valid <= cut, "cut {cut}: prefix overruns");
+                // anything between the last intact record and the
+                // cut is a torn tail and must be reported as such
+                assert_eq!(torn, valid < cut, "cut {cut}");
+            }
+        }
+    }
+    let (_, recs, valid, torn) = decode_journal(&bytes).unwrap();
+    assert_eq!(recs, want);
+    assert_eq!(valid, bytes.len());
+    assert!(!torn);
+}
+
+/// Single-byte corruption anywhere in the image: decoding must never
+/// panic, and whatever survives salvage must still be a prefix of
+/// the true records — a flipped byte can tear the journal but never
+/// alter a record past its checksum.
+#[test]
+fn fcj_fuzz_bitflip_sweep() {
+    let bytes = fcj_fixture_bytes("flip");
+    let want = fcj_records();
+    for off in 0..bytes.len() {
+        for flip in [0x01u8, 0x80, 0xFF] {
+            let mut bad = bytes.clone();
+            bad[off] ^= flip;
+            if let Ok((_, recs, _, _)) = decode_journal(&bad) {
+                assert_eq!(
+                    recs,
+                    want[..recs.len()],
+                    "offset {off} flip {flip:#04x}: corruption \
+                     replayed as a record"
+                );
+            }
+        }
+    }
+}
+
+/// Garbage: pure noise must be a clean error, noise appended after a
+/// valid journal must salvage every real record and flag the tail,
+/// and the strict record decoder must reject noise outright.
+#[test]
+fn fcj_fuzz_garbage_records() {
+    let mut rng = Rng::new(0xFC10);
+    for _ in 0..40 {
+        let len = rng.below(400);
+        let noise: Vec<u8> =
+            (0..len).map(|_| rng.below(256) as u8).collect();
+        assert!(
+            decode_journal(&noise).is_err()
+                || noise[..8.min(noise.len())] == JOURNAL_MAGIC[..],
+            "garbage accepted as a journal"
+        );
+        let _ = decode_record(&noise);
+    }
+    let bytes = fcj_fixture_bytes("tail");
+    for junk_len in [1usize, 3, 8, 64] {
+        let mut bad = bytes.clone();
+        bad.extend((0..junk_len).map(|_| rng.below(256) as u8));
+        let (_, recs, valid, torn) = decode_journal(&bad).unwrap();
+        assert_eq!(recs, fcj_records());
+        assert!(torn, "junk of {junk_len} bytes not flagged");
+        assert_eq!(valid, bytes.len());
+    }
+}
+
+/// Hostile length claims: headers or records promising up to 4 GiB
+/// in a tiny buffer must fail fast — no allocation sized by the
+/// claim, no stall. A huge claim *after* valid records only tears
+/// the tail.
+#[test]
+fn fcj_fuzz_oversized_length_claims() {
+    for claim in [
+        MAX_RECORD_BYTES as u32,
+        (MAX_RECORD_BYTES as u32) + 1,
+        u32::MAX,
+    ] {
+        // as the header envelope
+        let mut b = JOURNAL_MAGIC.to_vec();
+        b.extend_from_slice(&claim.to_le_bytes());
+        b.extend_from_slice(&[0u8; 64]);
+        let t0 = std::time::Instant::now();
+        assert!(decode_journal(&b).is_err());
+        // as a bare record envelope
+        let mut r = claim.to_le_bytes().to_vec();
+        r.extend_from_slice(&[0u8; 64]);
+        assert!(decode_record(&r).is_err());
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(5),
+            "claim {claim}: journal decoder stalled"
+        );
+        // appended after real records: salvage keeps them all
+        let mut tail = fcj_fixture_bytes("claims");
+        let full = tail.len();
+        tail.extend_from_slice(&claim.to_le_bytes());
+        tail.extend_from_slice(&[0u8; 16]);
+        let (_, recs, valid, torn) = decode_journal(&tail).unwrap();
+        assert_eq!(recs, fcj_records());
+        assert_eq!(valid, full);
+        assert!(torn);
+    }
+}
+
 /// Concatenated valid frames with garbage between them: the dist
 /// reader must decode the first frame and fail (not panic) on the
 /// garbage that follows.

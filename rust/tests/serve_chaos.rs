@@ -1,0 +1,438 @@
+//! Chaos suite for the serve front-end (ADR-010): every fault the
+//! [`ChaosProxy`] knows how to inject, replayed as a deterministic
+//! schedule against both wires — the length-prefixed binary protocol
+//! and the HTTP/JSON gateway. The contract under fire:
+//!
+//! * a **non-lossy** schedule (latency, frame splits at arbitrary
+//!   byte boundaries, blackhole-then-recover) must still produce
+//!   responses bit-identical to the offline apply-only path;
+//! * a **lossy** schedule (mid-stream RST, half-close) may fail the
+//!   request, but only as a clean typed error — never a panic, never
+//!   a hang, never silently wrong bits;
+//! * after any storm the server must still serve direct clients, and
+//!   a slow-loris peer must not pin the connection budget: the idle
+//!   deadline (`--idle-timeout-ms`) reaps quiet connections so the
+//!   budget recovers without the client ever hanging up.
+//!
+//! The SIGTERM integration test rides along: `repro serve` must stop
+//! accepting, drain, and exit 0 when signalled.
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fastclust::config::{
+    DataConfig, EstimatorConfig, Method, ReduceConfig,
+};
+use fastclust::error::invalid;
+use fastclust::model::{
+    fit_model, load_model, save_model, FitOptions, FittedModel,
+};
+use fastclust::serve::protocol::{read_response, write_request};
+use fastclust::serve::{
+    Request, Response, ServeClient, ServeOptions, Server,
+};
+use fastclust::testkit::{ChaosProxy, Fault};
+use fastclust::volume::{FeatureMatrix, MorphometryGenerator};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_TARGET_TMPDIR"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Fit + persist a small model; returns (path, loaded model, cohort
+/// sample-major features) — the offline truth every surviving
+/// response must reproduce bit-for-bit.
+fn fixture(
+    tag: &str,
+) -> (PathBuf, Arc<FittedModel>, Arc<FeatureMatrix>) {
+    let dc = DataConfig {
+        dims: [8, 9, 7],
+        n_samples: 24,
+        seed: 17,
+        ..Default::default()
+    };
+    let (ds, y) = MorphometryGenerator::new(dc.dims)
+        .generate(dc.n_samples, dc.seed);
+    let reduce = ReduceConfig {
+        method: Method::Fast,
+        ratio: 10,
+        ..Default::default()
+    };
+    let est = EstimatorConfig {
+        cv_folds: 3,
+        max_iter: 60,
+        ..Default::default()
+    };
+    let model =
+        fit_model(&ds, &y, &reduce, &est, &dc, &FitOptions::default())
+            .unwrap();
+    let path = tmp(&format!("serve_chaos_{tag}.fcm"));
+    save_model(&path, &model).unwrap();
+    let loaded = Arc::new(load_model(&path).unwrap());
+    let xs = Arc::new(ds.data().transpose());
+    (path, loaded, xs)
+}
+
+fn block(xs: &FeatureMatrix) -> FeatureMatrix {
+    xs.select_rows(&[0, 5])
+}
+
+/// One named single-fault schedule per proxy: with a one-entry menu
+/// every connection (both directions) draws that fault, so each
+/// schedule is exercised deterministically rather than hoped for.
+fn schedules() -> Vec<(&'static str, Fault)> {
+    vec![
+        ("none", Fault::None),
+        ("latency", Fault::Latency { ms: 10, jitter_ms: 20 }),
+        ("split", Fault::Split { max_chunk: 7, delay_us: 200 }),
+        (
+            "blackhole",
+            Fault::Blackhole { after_bytes: 1024, hold_ms: 300 },
+        ),
+        ("rst", Fault::Rst { after_bytes: 1500 }),
+        ("halfclose", Fault::HalfClose { after_bytes: 1500 }),
+    ]
+}
+
+/// One raw binary-protocol predict with read/write deadlines, so a
+/// lossy schedule surfaces as an error instead of a hung test.
+fn binary_predict(
+    addr: SocketAddr,
+    x: &FeatureMatrix,
+    timeout: Duration,
+) -> fastclust::error::Result<Vec<f32>> {
+    let s = TcpStream::connect(addr)?;
+    s.set_nodelay(true)?;
+    s.set_read_timeout(Some(timeout))?;
+    s.set_write_timeout(Some(timeout))?;
+    let mut reader = BufReader::new(s.try_clone()?);
+    let mut writer = BufWriter::new(s);
+    write_request(
+        &mut writer,
+        &Request::Predict { model: String::new(), x: x.clone() },
+    )?;
+    writer.flush()?;
+    match read_response(&mut reader)? {
+        Response::Probabilities(p) => Ok(p),
+        other => Err(invalid(format!("unexpected response {other:?}"))),
+    }
+}
+
+/// One raw HTTP/1.1 exchange with deadlines; returns the status code
+/// and body, or an I/O error when the schedule killed the exchange.
+fn http_exchange(
+    addr: SocketAddr,
+    req: &str,
+    timeout: Duration,
+) -> std::io::Result<(u16, String)> {
+    use std::io::{Error, ErrorKind};
+    let mut s = TcpStream::connect(addr)?;
+    s.set_nodelay(true)?;
+    s.set_read_timeout(Some(timeout))?;
+    s.set_write_timeout(Some(timeout))?;
+    s.write_all(req.as_bytes())?;
+    let mut reader = BufReader::new(s);
+    let mut head = String::new();
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            return Err(Error::new(
+                ErrorKind::UnexpectedEof,
+                "closed mid-response",
+            ));
+        }
+        if line == "\r\n" {
+            break;
+        }
+        head.push_str(&line);
+    }
+    let status: u16 = head
+        .lines()
+        .next()
+        .and_then(|l| l.split(' ').nth(1))
+        .and_then(|v| v.parse().ok())
+        .ok_or_else(|| {
+            Error::new(ErrorKind::InvalidData, "bad status line")
+        })?;
+    let clen: usize = head
+        .lines()
+        .find_map(|l| {
+            let (k, v) = l.split_once(':')?;
+            k.eq_ignore_ascii_case("content-length")
+                .then(|| v.trim().parse().ok())?
+        })
+        .ok_or_else(|| {
+            Error::new(ErrorKind::InvalidData, "no content-length")
+        })?;
+    let mut body = vec![0u8; clen];
+    reader.read_exact(&mut body)?;
+    Ok((status, String::from_utf8_lossy(&body).into_owned()))
+}
+
+fn predict_body(x: &FeatureMatrix) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::from("{\"x\":[");
+    for r in 0..x.rows {
+        if r > 0 {
+            out.push(',');
+        }
+        out.push('[');
+        for c in 0..x.cols {
+            if c > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "{}", x.data[r * x.cols + c] as f64);
+        }
+        out.push(']');
+    }
+    out.push_str("]}");
+    out
+}
+
+const ATTEMPT_TIMEOUT: Duration = Duration::from_secs(5);
+
+#[test]
+fn every_schedule_on_the_binary_wire() {
+    let (path, model, xs) = fixture("bin");
+    let mut opts = ServeOptions::new(&path);
+    opts.workers = 2;
+    opts.idle_timeout_ms = 1000;
+    opts.log_path = Some(tmp("serve_chaos_bin.log"));
+    let handle = Server::start(opts).unwrap();
+    let addr = handle.addr();
+    let x = block(&xs);
+    let want = model.predict_proba(&x).unwrap();
+
+    for (i, (name, fault)) in schedules().into_iter().enumerate() {
+        let mut proxy =
+            ChaosProxy::start(addr, 0xCA05_0000 + i as u64, vec![fault])
+                .unwrap();
+        for attempt in 0..2 {
+            match binary_predict(proxy.addr(), &x, ATTEMPT_TIMEOUT) {
+                Ok(p) => assert_eq!(
+                    p, want,
+                    "schedule {name} attempt {attempt}: served bits \
+                     drifted under chaos"
+                ),
+                Err(e) => assert!(
+                    fault.lossy(),
+                    "schedule {name} attempt {attempt}: non-lossy \
+                     schedule failed the request: {e}"
+                ),
+            }
+        }
+        proxy.stop();
+        // the storm never takes the server down for direct clients
+        let mut direct = ServeClient::connect(addr).unwrap();
+        assert_eq!(
+            direct.predict(&x).unwrap(),
+            want,
+            "schedule {name}: direct client broken after the storm"
+        );
+    }
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn every_schedule_on_the_http_wire() {
+    let (path, model, xs) = fixture("http");
+    let mut opts = ServeOptions::new(&path);
+    opts.workers = 2;
+    opts.http_port = Some(0);
+    opts.idle_timeout_ms = 1000;
+    opts.log_path = Some(tmp("serve_chaos_http.log"));
+    let handle = Server::start(opts).unwrap();
+    let http_addr = handle.http_addr().expect("gateway bound");
+    let x = block(&xs);
+    let want = model.predict_proba(&x).unwrap();
+    let body = predict_body(&x);
+    let req = format!(
+        "POST /v1/predict HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    );
+
+    for (i, (name, fault)) in schedules().into_iter().enumerate() {
+        let mut proxy = ChaosProxy::start(
+            http_addr,
+            0xCA05_1000 + i as u64,
+            vec![fault],
+        )
+        .unwrap();
+        for attempt in 0..2 {
+            match http_exchange(proxy.addr(), &req, ATTEMPT_TIMEOUT) {
+                Ok((200, text)) => {
+                    let v = fastclust::json::parse(&text).unwrap();
+                    let got: Vec<f32> = v
+                        .get("proba")
+                        .unwrap()
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|n| n.as_f64().unwrap() as f32)
+                        .collect();
+                    assert_eq!(
+                        got, want,
+                        "schedule {name} attempt {attempt}: HTTP \
+                         bits drifted under chaos"
+                    );
+                }
+                Ok((code, text)) => panic!(
+                    "schedule {name} attempt {attempt}: unexpected \
+                     HTTP {code}: {text}"
+                ),
+                Err(e) => assert!(
+                    fault.lossy(),
+                    "schedule {name} attempt {attempt}: non-lossy \
+                     schedule failed the exchange: {e}"
+                ),
+            }
+        }
+        // liveness probe rides the same proxied wire
+        match http_exchange(
+            proxy.addr(),
+            "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n",
+            ATTEMPT_TIMEOUT,
+        ) {
+            Ok((code, _)) => assert_eq!(
+                code, 200,
+                "schedule {name}: healthz must answer 200"
+            ),
+            Err(e) => assert!(
+                fault.lossy(),
+                "schedule {name}: healthz failed on a non-lossy \
+                 schedule: {e}"
+            ),
+        }
+        proxy.stop();
+        // the gateway still answers direct clients after the storm
+        let (code, _) = http_exchange(
+            http_addr,
+            "GET /readyz HTTP/1.1\r\nHost: t\r\n\r\n",
+            ATTEMPT_TIMEOUT,
+        )
+        .unwrap();
+        assert_eq!(
+            code, 200,
+            "schedule {name}: readyz broken after the storm"
+        );
+    }
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn slow_loris_cannot_pin_the_connection_budget() {
+    let (path, model, xs) = fixture("loris");
+    let mut opts = ServeOptions::new(&path);
+    opts.workers = 2;
+    opts.max_connections = 4;
+    opts.idle_timeout_ms = 400;
+    opts.log_path = Some(tmp("serve_chaos_loris.log"));
+    let handle = Server::start(opts).unwrap();
+    let addr = handle.addr();
+    let x = block(&xs);
+    let want = model.predict_proba(&x).unwrap();
+
+    // fill the whole budget with slow-loris peers: each dribbles a
+    // few bytes of a frame through a (fault-free) chaos proxy, then
+    // goes quiet while KEEPING its socket open
+    let mut proxy =
+        ChaosProxy::start(addr, 0xCA05_2000, vec![Fault::None])
+            .unwrap();
+    let mut lorises = Vec::new();
+    for _ in 0..4 {
+        let mut s = TcpStream::connect(proxy.addr()).unwrap();
+        s.set_nodelay(true).unwrap();
+        s.write_all(&[1, 0, 0]).unwrap();
+        lorises.push(s);
+    }
+
+    // the budget recovers without any loris hanging up: the idle
+    // deadline reaps them, so a full fleet of direct clients must
+    // get served within a few reap ticks
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let ok = (0..4).all(|_| {
+            binary_predict(addr, &x, Duration::from_secs(2))
+                .map(|p| p == want)
+                .unwrap_or(false)
+        });
+        if ok {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "budget never recovered from the slow-loris storm"
+        );
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    let m = handle.metrics_json();
+    assert!(
+        m.get("idle_closed").unwrap().as_u64().unwrap() >= 4,
+        "the reaper, not client hangups, must have freed the \
+         budget: {m:?}"
+    );
+    drop(lorises);
+    proxy.stop();
+    handle.shutdown().unwrap();
+}
+
+/// SIGTERM on `repro serve`: stop accepting, drain in-flight work
+/// within the existing shutdown deadline, exit 0.
+#[cfg(unix)]
+#[test]
+fn sigterm_drains_and_exits_zero() {
+    use std::process::{Command, Stdio};
+
+    let (path, _, _) = fixture("sigterm");
+    let mut child = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .arg("serve")
+        .arg("--model")
+        .arg(&path)
+        .args(["--port", "0", "--workers", "2"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    // the CLI installs the handler before it prints this line
+    let stdout = child.stdout.take().unwrap();
+    let mut serving = false;
+    for line in BufReader::new(stdout).lines() {
+        if line.unwrap().contains("serving on") {
+            serving = true;
+            break;
+        }
+    }
+    assert!(serving, "server never reported serving");
+
+    extern "C" {
+        fn kill(pid: i32, sig: i32) -> i32;
+    }
+    const SIGTERM: i32 = 15;
+    assert_eq!(
+        unsafe { kill(child.id() as i32, SIGTERM) },
+        0,
+        "kill(2) failed"
+    );
+
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let status = loop {
+        if let Some(st) = child.try_wait().unwrap() {
+            break st;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "serve did not exit within 10s of SIGTERM"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    assert_eq!(
+        status.code(),
+        Some(0),
+        "SIGTERM drain must exit 0, got {status:?}"
+    );
+}
